@@ -1,0 +1,57 @@
+//! LLM SpMM scenario: the sparseGPT-style workloads of Table III
+//! (mm8–mm10: dense activations x 50%-pruned weights) searched across all
+//! three platforms — the "adapting to new sparse workloads" story of the
+//! paper's introduction.
+//!
+//! ```bash
+//! cargo run --release --example llm_spmm -- [budget]
+//! ```
+
+use sparsemap::arch::Platform;
+use sparsemap::baselines::run_method;
+use sparsemap::search::{Backend, EvalContext};
+use sparsemap::util::table::{sci, Table};
+use sparsemap::workload::table3;
+
+fn main() -> anyhow::Result<()> {
+    let budget: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4_000);
+    let workloads = ["mm8", "mm9", "mm10"];
+
+    let mut table = Table::new(&["workload", "platform", "sparsemap EDP", "sage-like EDP", "gain"]);
+    for wl in &workloads {
+        let w = table3::by_id(wl).unwrap();
+        println!(
+            "{wl}: {}x{} (dense) x {}x{} @ {:.0}% weight density",
+            w.dims[0].size,
+            w.dims[1].size,
+            w.dims[1].size,
+            w.dims[2].size,
+            100.0 * w.tensors[1].density
+        );
+        for plat in Platform::all() {
+            let ours = run_method(
+                "sparsemap",
+                EvalContext::new(Backend::native(w.clone(), plat.clone()), budget),
+                7,
+            )?;
+            let sage = run_method(
+                "sage-like",
+                EvalContext::new(Backend::native(w.clone(), plat.clone()), budget),
+                7,
+            )?;
+            let gain = sage.best_edp / ours.best_edp;
+            table.row(vec![
+                wl.to_string(),
+                plat.name.clone(),
+                sci(ours.best_edp),
+                if sage.found_valid() { sci(sage.best_edp) } else { "-".into() },
+                if gain.is_finite() { format!("{gain:.2}x") } else { "inf".into() },
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "joint mapping+strategy search vs fixed-mapping format search, budget {budget}/arm"
+    );
+    Ok(())
+}

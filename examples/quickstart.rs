@@ -1,0 +1,46 @@
+//! Quickstart: search one workload on one platform and print the winning
+//! accelerator design.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sparsemap::arch::Platform;
+use sparsemap::es::{run_sparsemap, EsConfig};
+use sparsemap::genome::{decode, describe, GenomeSpec};
+use sparsemap::search::{Backend, EvalContext};
+use sparsemap::workload::table3;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a workload (DeepBench bibd-class SpMM) and a platform.
+    let workload = table3::by_id("mm3").expect("table III workload");
+    let platform = Platform::cloud();
+    println!(
+        "searching {} ({}) on {} ...",
+        workload.id,
+        workload.kind.as_str(),
+        platform.name
+    );
+
+    // 2. Run the SparseMap evolution strategy with a 10k-sample budget.
+    let ctx = EvalContext::new(Backend::native(workload.clone(), platform), 10_000);
+    let outcome = run_sparsemap(ctx, EsConfig::default(), 42);
+
+    // 3. Report.
+    println!(
+        "best EDP: {:.4e} pJ*cycles  ({} evals, {:.1}% of explored points valid)",
+        outcome.best_edp,
+        outcome.evals,
+        100.0 * outcome.valid_ratio()
+    );
+    let genome = outcome.best_genome.expect("no valid design found");
+    let spec = GenomeSpec::for_workload(&workload);
+    let design = decode(&spec, &workload, &genome);
+    println!("--- winning design ---\n{}", describe(&design, &workload));
+
+    println!("convergence (evals -> best EDP):");
+    for (e, v) in outcome.curve.iter().take(12) {
+        println!("  {:>6} -> {:.4e}", e, v);
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Fig. 17a-style sweep: SparseMap vs the classical optimizers on the
+//! pruned-VGG16 conv layers (cloud platform), reduced budget.
+//!
+//! ```bash
+//! cargo run --release --example vgg16_cloud_sweep -- [budget]
+//! ```
+
+use sparsemap::arch::Platform;
+use sparsemap::report::{fig17, ExpConfig};
+use sparsemap::util::table::{sci, Table};
+
+fn main() -> anyhow::Result<()> {
+    let budget: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2_000);
+    let cfg = ExpConfig { budget, threads: 8, ..Default::default() };
+
+    let layers = ["conv1", "conv4", "conv7", "conv11", "conv13"];
+    println!(
+        "VGG16 sweep on cloud: {} methods x {} layers, budget {budget} each",
+        fig17::FIG17_METHODS.len(),
+        layers.len()
+    );
+    let outcomes = fig17::run_matrix(&cfg, &Platform::cloud(), &layers);
+
+    let mut table = Table::new(&["layer", "method", "best EDP", "valid %"]);
+    for layer in &layers {
+        for method in fig17::FIG17_METHODS {
+            let o = outcomes
+                .iter()
+                .find(|o| &o.workload == layer && &o.method == method)
+                .unwrap();
+            table.row(vec![
+                layer.to_string(),
+                method.to_string(),
+                if o.found_valid() { sci(o.best_edp) } else { "-".into() },
+                format!("{:.1}", 100.0 * o.valid_ratio()),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+
+    // Count wins.
+    let mut wins = 0;
+    for layer in &layers {
+        let best = outcomes
+            .iter()
+            .filter(|o| &o.workload == layer)
+            .min_by(|a, b| a.best_edp.partial_cmp(&b.best_edp).unwrap())
+            .unwrap();
+        if best.method == "sparsemap" {
+            wins += 1;
+        }
+        println!("{layer}: winner = {}", best.method);
+    }
+    println!("sparsemap wins {wins}/{} layers", layers.len());
+    Ok(())
+}

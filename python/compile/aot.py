@@ -1,0 +1,84 @@
+"""AOT pipeline: lower the L2 evaluator + demo kernel to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts relative to python/):
+  cost_model.hlo.txt  — evaluate_batch, f32[256,48] × f32[16] → (f32[256,4],)
+  spmm_demo.hlo.txt   — spmm_demo, 4× f32[64,64] → (f32[64,64], f32[1])
+  meta.json           — schema version, shapes; asserted by the Rust runtime.
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cost_model() -> str:
+    lowered = jax.jit(model.evaluate_batch).lower(*model.example_args())
+    return to_hlo_text(lowered)
+
+
+def lower_spmm_demo() -> str:
+    lowered = jax.jit(model.spmm_demo).lower(*model.demo_args())
+    return to_hlo_text(lowered)
+
+
+def metadata() -> dict:
+    from .kernels import ref
+
+    return {
+        "schema_version": model.SCHEMA_VERSION,
+        "batch": model.AOT_BATCH,
+        "num_features": ref.NUM_FEATURES,
+        "num_platform_features": ref.NUM_PLATFORM_FEATURES,
+        "outputs": ["energy_pj", "cycles", "edp", "valid"],
+        "demo_shape": [model.DEMO_M, model.DEMO_K, model.DEMO_N],
+        "artifacts": {
+            "cost_model": "cost_model.hlo.txt",
+            "spmm_demo": "spmm_demo.hlo.txt",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cost_hlo = lower_cost_model()
+    with open(os.path.join(args.out_dir, "cost_model.hlo.txt"), "w") as f:
+        f.write(cost_hlo)
+    print(f"cost_model.hlo.txt: {len(cost_hlo)} chars")
+
+    demo_hlo = lower_spmm_demo()
+    with open(os.path.join(args.out_dir, "spmm_demo.hlo.txt"), "w") as f:
+        f.write(demo_hlo)
+    print(f"spmm_demo.hlo.txt: {len(demo_hlo)} chars")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(metadata(), f, indent=2, sort_keys=True)
+    print("meta.json written")
+
+
+if __name__ == "__main__":
+    main()

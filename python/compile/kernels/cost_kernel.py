@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: fused batched cost evaluation.
+
+The search hot-spot is evaluating EDP/validity for a whole population per
+generation. This kernel fuses the entire FEATURE_SCHEMA_V1 cost formula —
+traffic scaling, energy accumulation, bandwidth-bound latency max, capacity
+validity — into one pass over the feature matrix: one HBM read of
+f32[B, 48], one HBM write of f32[B, 4], everything else in VMEM.
+
+TPU mapping notes (see DESIGN.md §Hardware-Adaptation):
+* the batch dimension B is tiled into BLOCK_B-row blocks via the
+  `BlockSpec` grid — each block's working set (BLOCK_B×48 + 16 + BLOCK_B×4
+  f32 ≈ 53 KB at BLOCK_B=256) sits comfortably in a TPU core's ~16 MB VMEM,
+  leaving headroom for double buffering;
+* the feature axis (48) and output axis (4) are lane-dimension friendly
+  (padded to 128 lanes by Mosaic); all ops are VPU elementwise/reduce, no
+  MXU work — the kernel is bandwidth-bound by design, which is exactly why
+  fusing it to a single pass matters;
+* `interpret=True` everywhere in this repo: the CPU PJRT plugin cannot run
+  Mosaic custom-calls; interpret mode lowers to plain HLO (and is also the
+  numerics oracle path for the AOT artifact).
+
+Correctness: must match `ref.cost_eval_ref` bit-for-bit-ish (same op
+order); pytest sweeps shapes and value magnitudes via hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_B = 128  # batch rows per grid step
+
+
+def _cost_kernel(feat_ref, plat_ref, out_ref):
+    """One grid step: evaluate BLOCK_B designs entirely in VMEM."""
+    f = feat_ref[...]          # [BLOCK_B, NUM_FEATURES]
+    plat = plat_ref[...]       # [NUM_PLATFORM_FEATURES]
+    # The arithmetic is shared with the pure-jnp oracle — the kernel's job
+    # is the fusion/tiling structure, not a different formula. Keeping one
+    # definition guarantees the Rust <-> JAX contract has a single source
+    # of truth on the Python side.
+    out_ref[...] = ref.cost_eval_ref(f, plat)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cost_eval_pallas(feats, plat, *, interpret=True):
+    """Fused batched cost evaluation.
+
+    Args:
+      feats: f32[B, NUM_FEATURES]; B must be a multiple of BLOCK_B.
+      plat: f32[NUM_PLATFORM_FEATURES].
+      interpret: lower via the Pallas interpreter (required for CPU PJRT).
+
+    Returns:
+      f32[B, 4] — (energy_pj, cycles, edp, valid) per design.
+    """
+    b, nf = feats.shape
+    assert nf == ref.NUM_FEATURES, f"feature width {nf} != {ref.NUM_FEATURES}"
+    assert b % BLOCK_B == 0, f"batch {b} not a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, nf), lambda i: (i, 0)),
+            pl.BlockSpec((ref.NUM_PLATFORM_FEATURES,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 4), jnp.float32),
+        interpret=interpret,
+    )(feats, plat)
+
+
+def vmem_footprint_bytes(block_b=BLOCK_B):
+    """Static VMEM footprint estimate of one grid step (for DESIGN.md
+    §Perf): input block + platform vector + output block, f32."""
+    return 4 * (block_b * ref.NUM_FEATURES + ref.NUM_PLATFORM_FEATURES + block_b * 4)

@@ -1,0 +1,147 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: `cost_eval_ref` mirrors the Rust
+native formula in `rust/src/model/cost.rs` (FEATURE_SCHEMA_V1) and the
+Pallas kernel in `cost_kernel.py` must match it exactly; `spmm_gated_ref`
+is the dense oracle for the gated-SpMM demo kernel.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# FEATURE_SCHEMA_V1 column indices — keep in sync with
+# rust/src/model/features.rs.
+# ---------------------------------------------------------------------------
+NUM_FEATURES = 48
+NUM_PLATFORM_FEATURES = 16
+
+F_P_WORDS_B0 = 0
+F_Q_WORDS_B0 = 1
+F_Z_WORDS_B0 = 2
+F_P_GLB_READS_B1 = 3
+F_Q_GLB_READS_B1 = 4
+F_Z_GLB_WORDS_B1 = 5
+F_P_NOC_WORDS_B1 = 6
+F_Q_NOC_WORDS_B1 = 7
+F_Z_NOC_WORDS_B1 = 8
+F_P_WORDS_B2 = 9
+F_Q_WORDS_B2 = 10
+F_Z_WORDS_B2 = 11
+F_CR_P_B0 = 12
+F_CR_Q_B0 = 13
+F_CR_Z_B0 = 14
+F_CR_P_B1 = 15
+F_CR_Q_B1 = 16
+F_CR_Z_B1 = 17
+F_META_P_B0 = 18
+F_META_Q_B0 = 19
+F_META_Z_B0 = 20
+F_META_P_B1 = 21
+F_META_Q_B1 = 22
+F_META_Z_B1 = 23
+F_SG_P_ENERGY_B1 = 24
+F_SG_Q_ENERGY_B1 = 25
+F_SG_CYCLES_B1 = 26
+F_SG_P_ENERGY_B2 = 27
+F_SG_Q_ENERGY_B2 = 28
+F_SG_CYCLES_B2 = 29
+F_MAC_ENERGY_FRAC = 30
+F_COMPUTE_CYCLE_FRAC = 31
+F_TOTAL_OPS = 32
+F_ACTIVE_MACS = 33
+F_GLB_TILE_WORDS = 34
+F_PE_TILE_WORDS = 35
+F_STRUCT_VALID = 36
+F_CTRL_B1 = 37
+F_CTRL_B2 = 38
+F_CTRL_C = 39
+F_ACTIVE_PES = 40
+F_DENSITY_P = 41
+F_DENSITY_Q = 42
+F_DENSITY_Z = 43
+
+
+def cost_eval_ref(feats, plat):
+    """Evaluate the cost formula for a feature batch.
+
+    Args:
+      feats: f32[B, NUM_FEATURES] — FEATURE_SCHEMA_V1 rows.
+      plat:  f32[NUM_PLATFORM_FEATURES] — platform vector.
+
+    Returns:
+      f32[B, 4]: columns (energy_pj, cycles, edp, valid).
+    """
+    f = feats
+    e_dram, e_glb, e_pebuf, e_reg = plat[0], plat[1], plat[2], plat[3]
+    e_mac, e_noc, e_meta = plat[4], plat[5], plat[6]
+    bw_dram, bw_glb, bw_pe = plat[7], plat[8], plat[9]
+    glb_cap, pe_cap = plat[10], plat[11]
+
+    # ---- boundary 0: DRAM <-> GLB (compressed words) ----------------------
+    w0 = (f[:, F_P_WORDS_B0] * f[:, F_CR_P_B0]
+          + f[:, F_Q_WORDS_B0] * f[:, F_CR_Q_B0]
+          + f[:, F_Z_WORDS_B0] * f[:, F_CR_Z_B0])
+    meta0 = (f[:, F_P_WORDS_B0] * f[:, F_META_P_B0]
+             + f[:, F_Q_WORDS_B0] * f[:, F_META_Q_B0]
+             + f[:, F_Z_WORDS_B0] * f[:, F_META_Z_B0])
+    energy_b0 = w0 * (e_dram + e_glb) + meta0 * e_meta
+
+    # ---- boundary 1: GLB -> PE over the NoC --------------------------------
+    glb_reads = (f[:, F_P_GLB_READS_B1] * f[:, F_CR_P_B1] * f[:, F_SG_P_ENERGY_B1]
+                 + f[:, F_Q_GLB_READS_B1] * f[:, F_CR_Q_B1] * f[:, F_SG_Q_ENERGY_B1]
+                 + f[:, F_Z_GLB_WORDS_B1] * f[:, F_CR_Z_B1])
+    noc_words = (f[:, F_P_NOC_WORDS_B1] * f[:, F_CR_P_B1] * f[:, F_SG_P_ENERGY_B1]
+                 + f[:, F_Q_NOC_WORDS_B1] * f[:, F_CR_Q_B1] * f[:, F_SG_Q_ENERGY_B1]
+                 + f[:, F_Z_NOC_WORDS_B1] * f[:, F_CR_Z_B1])
+    meta1 = (f[:, F_P_NOC_WORDS_B1] * f[:, F_META_P_B1]
+             + f[:, F_Q_NOC_WORDS_B1] * f[:, F_META_Q_B1]
+             + f[:, F_Z_NOC_WORDS_B1] * f[:, F_META_Z_B1])
+    energy_b1 = (glb_reads * e_glb + noc_words * (e_noc + e_pebuf)
+                 + meta1 * e_meta + noc_words * f[:, F_CTRL_B1])
+
+    # ---- boundary 2: PE buffer -> MAC operands -----------------------------
+    w2 = (f[:, F_P_WORDS_B2] * f[:, F_SG_P_ENERGY_B2]
+          + f[:, F_Q_WORDS_B2] * f[:, F_SG_Q_ENERGY_B2]
+          + f[:, F_Z_WORDS_B2])
+    energy_b2 = w2 * (e_pebuf + e_reg) + w2 * f[:, F_CTRL_B2]
+
+    # ---- compute ------------------------------------------------------------
+    energy_mac = (f[:, F_TOTAL_OPS] * f[:, F_MAC_ENERGY_FRAC] * e_mac
+                  + f[:, F_TOTAL_OPS] * f[:, F_CTRL_C])
+
+    energy = energy_b0 + energy_b1 + energy_b2 + energy_mac
+
+    # ---- latency: bottleneck pipeline stage --------------------------------
+    cycles_compute = (f[:, F_TOTAL_OPS] / jnp.maximum(f[:, F_ACTIVE_MACS], 1.0)
+                      * f[:, F_COMPUTE_CYCLE_FRAC])
+    cycles_dram = w0 / jnp.maximum(bw_dram, 1e-12)
+    cycles_glb = glb_reads * f[:, F_SG_CYCLES_B1] / jnp.maximum(bw_glb, 1e-12)
+    cycles_pe = (w2 * f[:, F_SG_CYCLES_B2]
+                 / (jnp.maximum(bw_pe, 1e-12) * jnp.maximum(f[:, F_ACTIVE_PES], 1.0)))
+    cycles = jnp.maximum(
+        jnp.maximum(jnp.maximum(cycles_compute, cycles_dram),
+                    jnp.maximum(cycles_glb, cycles_pe)),
+        1.0,
+    )
+
+    # ---- validity -----------------------------------------------------------
+    glb_util = f[:, F_GLB_TILE_WORDS] / jnp.maximum(glb_cap, 1.0)
+    pe_util = f[:, F_PE_TILE_WORDS] / jnp.maximum(pe_cap, 1.0)
+    fits = jnp.where((glb_util <= 1.0) & (pe_util <= 1.0), 1.0, 0.0)
+    valid = f[:, F_STRUCT_VALID] * fits
+
+    edp = energy * cycles
+    return jnp.stack([energy, cycles, edp, valid], axis=-1)
+
+
+def spmm_gated_ref(p, q, pmask, qmask):
+    """Oracle for the gated-SpMM demo: zero out gated operands, multiply.
+
+    Returns (z, effectual_macs) where effectual_macs counts MAC operations
+    whose both operands are nonzero (Gate P<->Q semantics, Fig. 14).
+    """
+    pz = p * pmask
+    qz = q * qmask
+    z = pz @ qz
+    effectual = jnp.sum(pmask @ qmask)
+    return z, effectual

@@ -1,0 +1,57 @@
+"""L2 JAX model: the batched fitness evaluator the Rust coordinator calls.
+
+`evaluate_batch` is the function that gets AOT-lowered (see `aot.py`) into
+`artifacts/cost_model.hlo.txt` and executed by `rust/src/runtime/` through
+the PJRT CPU client on every generation of every search. Its arithmetic is
+the FEATURE_SCHEMA_V1 contract shared with `rust/src/model/cost.rs`; its
+hot-spot is the fused Pallas kernel in `kernels/cost_kernel.py`.
+
+Python runs at build time only — the Rust binary executes the lowered HLO.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cost_kernel, ref, spmm_gated
+
+# Static batch size of the AOT executable. Rust pads partial batches.
+AOT_BATCH = 256
+# Static tile of the gated-SpMM demo artifact.
+DEMO_M, DEMO_K, DEMO_N = 64, 64, 64
+
+SCHEMA_VERSION = 1
+
+
+def evaluate_batch(feats, plat):
+    """Evaluate a population: f32[B,48] × f32[16] → f32[B,4].
+
+    Output columns: (energy_pj, cycles, edp, valid).
+    """
+    return (cost_kernel.cost_eval_pallas(feats, plat),)
+
+
+def evaluate_batch_ref(feats, plat):
+    """Pure-jnp reference path (no Pallas) — pytest oracle."""
+    return (ref.cost_eval_ref(feats, plat),)
+
+
+def spmm_demo(p, q, pmask, qmask):
+    """The instantiated-design demo computation (Fig. 14)."""
+    z, eff = spmm_gated.spmm_gated_pallas(p, q, pmask, qmask)
+    return z, jnp.reshape(eff, (1,))
+
+
+def example_args():
+    """Example (shape-defining) arguments for AOT lowering."""
+    import jax
+
+    feats = jax.ShapeDtypeStruct((AOT_BATCH, ref.NUM_FEATURES), jnp.float32)
+    plat = jax.ShapeDtypeStruct((ref.NUM_PLATFORM_FEATURES,), jnp.float32)
+    return feats, plat
+
+
+def demo_args():
+    import jax
+
+    p = jax.ShapeDtypeStruct((DEMO_M, DEMO_K), jnp.float32)
+    q = jax.ShapeDtypeStruct((DEMO_K, DEMO_N), jnp.float32)
+    return p, q, p, q

@@ -1,0 +1,47 @@
+"""AOT pipeline tests: lowering produces loadable HLO text with the
+expected entry signature, and the Pallas path agrees with the ref path at
+the lowered-function level (pre-artifact numerics gate).
+"""
+
+import json
+
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_cost_model_hlo_text_shape_signature():
+    hlo = aot.lower_cost_model()
+    assert "HloModule" in hlo
+    # The entry computation must consume the batch and platform operands
+    # and produce a (f32[256,4]) tuple.
+    assert f"f32[{model.AOT_BATCH},{ref.NUM_FEATURES}]" in hlo
+    assert f"f32[{ref.NUM_PLATFORM_FEATURES}]" in hlo
+    assert f"f32[{model.AOT_BATCH},4]" in hlo
+
+
+def test_spmm_demo_hlo_text_shape_signature():
+    hlo = aot.lower_spmm_demo()
+    assert "HloModule" in hlo
+    assert f"f32[{model.DEMO_M},{model.DEMO_N}]" in hlo
+
+
+def test_metadata_contract():
+    meta = aot.metadata()
+    assert meta["schema_version"] == 1
+    assert meta["batch"] == model.AOT_BATCH
+    assert meta["num_features"] == ref.NUM_FEATURES
+    assert meta["outputs"] == ["energy_pj", "cycles", "edp", "valid"]
+    # Must serialize (this is what the Rust runtime parses).
+    json.dumps(meta)
+
+
+def test_pallas_and_ref_paths_agree():
+    rng = np.random.default_rng(4)
+    feats = rng.uniform(0.1, 100.0,
+                        size=(model.AOT_BATCH, ref.NUM_FEATURES)).astype(np.float32)
+    plat = rng.uniform(0.1, 10.0, size=(ref.NUM_PLATFORM_FEATURES,)).astype(np.float32)
+    (a,) = model.evaluate_batch(feats, plat)
+    (b,) = model.evaluate_batch_ref(feats, plat)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

@@ -1,0 +1,122 @@
+"""Pallas cost kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps feature magnitudes (traffic counts span ~15 orders of
+magnitude across Table III workloads) and batch shapes; assert_allclose
+against ref.cost_eval_ref.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cost_kernel, ref
+
+
+def make_platform(rng):
+    """A plausible random platform vector (positive constants)."""
+    p = np.zeros(ref.NUM_PLATFORM_FEATURES, dtype=np.float32)
+    p[0] = rng.uniform(50, 400)       # e_dram
+    p[1] = rng.uniform(2, 40)         # e_glb
+    p[2] = rng.uniform(0.5, 3)        # e_pebuf
+    p[3] = rng.uniform(0.02, 0.2)     # e_reg
+    p[4] = rng.uniform(0.2, 2)        # e_mac
+    p[5] = rng.uniform(0.1, 1)        # e_noc
+    p[6] = rng.uniform(0.05, 0.3)     # e_meta
+    p[7] = rng.uniform(0.001, 64)     # bw_dram
+    p[8] = rng.uniform(8, 512)        # bw_glb
+    p[9] = rng.uniform(1, 64)         # bw_pe
+    p[10] = rng.uniform(2**14, 2**25)  # glb cap words
+    p[11] = rng.uniform(2**8, 2**16)   # pe cap words
+    p[12] = rng.choice([256, 1024])
+    p[13] = rng.choice([1, 64])
+    p[14] = 1e9
+    return p
+
+
+def make_features(rng, b, scale):
+    f = np.zeros((b, ref.NUM_FEATURES), dtype=np.float32)
+    # Traffic features: log-uniform magnitudes.
+    for col in range(0, 12):
+        f[:, col] = 10 ** rng.uniform(0, scale, size=b)
+    # Compression ratios in (0, 2].
+    for col in range(12, 18):
+        f[:, col] = rng.uniform(0.05, 2.0, size=b)
+    # Metadata fractions in [0, 0.5].
+    for col in range(18, 24):
+        f[:, col] = rng.uniform(0.0, 0.5, size=b)
+    # S/G multipliers in (0, 1].
+    for col in range(24, 32):
+        f[:, col] = rng.uniform(0.05, 1.0, size=b)
+    f[:, ref.F_TOTAL_OPS] = 10 ** rng.uniform(3, scale + 3, size=b)
+    f[:, ref.F_ACTIVE_MACS] = rng.choice([1, 16, 256, 4096], size=b)
+    f[:, ref.F_GLB_TILE_WORDS] = 10 ** rng.uniform(2, 7, size=b)
+    f[:, ref.F_PE_TILE_WORDS] = 10 ** rng.uniform(0, 5, size=b)
+    f[:, ref.F_STRUCT_VALID] = rng.choice([0.0, 1.0], size=b)
+    for col in (ref.F_CTRL_B1, ref.F_CTRL_B2, ref.F_CTRL_C):
+        f[:, col] = rng.uniform(0.0, 0.25, size=b)
+    f[:, ref.F_ACTIVE_PES] = rng.choice([1, 16, 256], size=b)
+    for col in (ref.F_DENSITY_P, ref.F_DENSITY_Q, ref.F_DENSITY_Z):
+        f[:, col] = rng.uniform(0.01, 1.0, size=b)
+    return f
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 4),
+    scale=st.floats(1.0, 9.0),
+)
+def test_kernel_matches_ref(seed, blocks, scale):
+    rng = np.random.default_rng(seed)
+    b = blocks * cost_kernel.BLOCK_B
+    feats = make_features(rng, b, scale)
+    plat = make_platform(rng)
+    got = np.asarray(cost_kernel.cost_eval_pallas(feats, plat))
+    want = np.asarray(ref.cost_eval_ref(feats, plat))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=0)
+
+
+def test_outputs_shape_and_columns():
+    rng = np.random.default_rng(0)
+    b = cost_kernel.BLOCK_B
+    feats = make_features(rng, b, 5.0)
+    plat = make_platform(rng)
+    out = np.asarray(cost_kernel.cost_eval_pallas(feats, plat))
+    assert out.shape == (b, 4)
+    energy, cycles, edp, valid = out.T
+    assert (energy > 0).all()
+    assert (cycles >= 1.0).all()
+    np.testing.assert_allclose(edp, energy * cycles, rtol=1e-6)
+    assert set(np.unique(valid)).issubset({0.0, 1.0})
+
+
+def test_validity_logic():
+    rng = np.random.default_rng(1)
+    b = cost_kernel.BLOCK_B
+    feats = make_features(rng, b, 4.0)
+    plat = make_platform(rng)
+    # Force capacity overflow in the first half, fit in the second.
+    feats[: b // 2, ref.F_GLB_TILE_WORDS] = plat[10] * 10
+    feats[b // 2:, ref.F_GLB_TILE_WORDS] = plat[10] * 0.1
+    feats[b // 2:, ref.F_PE_TILE_WORDS] = plat[11] * 0.1
+    feats[:, ref.F_STRUCT_VALID] = 1.0
+    out = np.asarray(cost_kernel.cost_eval_pallas(feats, plat))
+    assert (out[: b // 2, 3] == 0.0).all()
+    assert (out[b // 2:, 3] == 1.0).all()
+    # Structural invalidity always wins.
+    feats[:, ref.F_STRUCT_VALID] = 0.0
+    out = np.asarray(cost_kernel.cost_eval_pallas(feats, plat))
+    assert (out[:, 3] == 0.0).all()
+
+
+def test_batch_must_be_block_multiple():
+    rng = np.random.default_rng(2)
+    feats = make_features(rng, cost_kernel.BLOCK_B, 3.0)[:7]
+    plat = make_platform(rng)
+    with pytest.raises(AssertionError):
+        cost_kernel.cost_eval_pallas(feats, plat)
+
+
+def test_vmem_footprint_small():
+    # One grid step must fit VMEM with generous headroom (<1 MB).
+    assert cost_kernel.vmem_footprint_bytes() < 1 << 20

@@ -1,0 +1,62 @@
+"""Gated-SpMM Pallas kernel vs dense oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, spmm_gated
+
+
+def random_case(rng, m, k, n, dp, dq):
+    p = rng.standard_normal((m, k)).astype(np.float32)
+    q = rng.standard_normal((k, n)).astype(np.float32)
+    pm = (rng.uniform(size=(m, k)) < dp).astype(np.float32)
+    qm = (rng.uniform(size=(k, n)) < dq).astype(np.float32)
+    return p, q, pm, qm
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mb=st.integers(1, 3),
+    k=st.sampled_from([16, 64, 96]),
+    n=st.sampled_from([16, 64]),
+    dp=st.floats(0.05, 1.0),
+    dq=st.floats(0.05, 1.0),
+)
+def test_matches_ref(seed, mb, k, n, dp, dq):
+    rng = np.random.default_rng(seed)
+    m = mb * spmm_gated.BLOCK_M
+    p, q, pm, qm = random_case(rng, m, k, n, dp, dq)
+    z, eff = spmm_gated.spmm_gated_pallas(p, q, pm, qm)
+    z_ref, eff_ref = ref.spmm_gated_ref(p, q, pm, qm)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(eff), float(eff_ref), rtol=1e-6)
+
+
+def test_dense_case_is_plain_matmul():
+    rng = np.random.default_rng(7)
+    p, q, _, _ = random_case(rng, 32, 16, 16, 1.0, 1.0)
+    ones_p = np.ones_like(p)
+    ones_q = np.ones_like(q)
+    z, eff = spmm_gated.spmm_gated_pallas(p, q, ones_p, ones_q)
+    np.testing.assert_allclose(np.asarray(z), p @ q, rtol=1e-5, atol=1e-5)
+    assert float(eff) == 32 * 16 * 16
+
+
+def test_all_zero_mask_kills_everything():
+    rng = np.random.default_rng(8)
+    p, q, _, qm = random_case(rng, 32, 16, 16, 0.5, 0.5)
+    zm = np.zeros_like(p)
+    z, eff = spmm_gated.spmm_gated_pallas(p, q, zm, qm)
+    assert float(eff) == 0.0
+    np.testing.assert_allclose(np.asarray(z), 0.0)
+
+
+def test_effectual_count_matches_density_expectation():
+    rng = np.random.default_rng(9)
+    m, k, n = 64, 96, 64
+    p, q, pm, qm = random_case(rng, m, k, n, 0.5, 0.25)
+    _, eff = spmm_gated.spmm_gated_pallas(p, q, pm, qm)
+    total = m * k * n
+    # E[effectual] = dp*dq*total; loose 3-sigma-ish band.
+    assert 0.08 * total < float(eff) < 0.18 * total

@@ -1,0 +1,190 @@
+//! Benchmark harness (in-tree; the offline vendor set has no criterion).
+//!
+//! One benchmark per paper table/figure plus microbenchmarks of the two
+//! evaluator hot paths. Each benchmark reports median wall time over
+//! repeated runs; experiment benches run scaled-down budgets (the full
+//! 20k-budget runs are recorded in EXPERIMENTS.md).
+//!
+//! Run: `cargo bench` (optionally `cargo bench -- <filter> [--quick]`).
+
+use sparsemap::arch::Platform;
+use sparsemap::baselines::run_method;
+use sparsemap::model::NativeEvaluator;
+use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, table4, ExpConfig};
+use sparsemap::search::{Backend, EvalContext};
+use sparsemap::util::rng::Pcg64;
+use sparsemap::workload::table3;
+use std::time::Instant;
+
+struct Bench {
+    name: &'static str,
+    runs: usize,
+    f: Box<dyn Fn()>,
+    /// Work items per run for throughput reporting (0 = none).
+    items: usize,
+}
+
+fn time_one(f: &dyn Fn()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let filter: Vec<&String> =
+        args.iter().filter(|a| !a.starts_with("--")).collect();
+
+    let tmp = std::env::temp_dir().join("sm_bench");
+    let cfg = |budget: usize| ExpConfig {
+        budget,
+        seed: 42,
+        out_dir: tmp.clone(),
+        threads: 8,
+        ..Default::default()
+    };
+
+    let mut benches: Vec<Bench> = Vec::new();
+
+    // --- microbenchmarks: the two evaluator hot paths ---------------------
+    benches.push(Bench {
+        name: "native_eval_throughput_mm3_cloud",
+        runs: 5,
+        items: 20_000,
+        f: Box::new(|| {
+            let ev = NativeEvaluator::new(table3::by_id("mm3").unwrap(), Platform::cloud());
+            let mut rng = Pcg64::seeded(1);
+            let mut acc = 0.0f64;
+            for _ in 0..20_000 {
+                let g = ev.spec.random(&mut rng);
+                acc += ev.eval_genome(&g).energy_pj;
+            }
+            std::hint::black_box(acc);
+        }),
+    });
+    // Compile the artifact once; the bench measures steady-state
+    // batched evaluation (what a search actually pays per generation).
+    let pjrt_ev = std::rc::Rc::new(
+        sparsemap::runtime::Runtime::from_default_dir()
+            .and_then(|rt| {
+                sparsemap::runtime::BatchEvaluator::new(
+                    &rt,
+                    table3::by_id("mm3").unwrap(),
+                    Platform::cloud(),
+                )
+            })
+            .expect("run `make artifacts` first"),
+    );
+    let pjrt_genomes: std::rc::Rc<Vec<Vec<u32>>> = {
+        let mut rng = Pcg64::seeded(1);
+        std::rc::Rc::new((0..8 * 256).map(|_| pjrt_ev.spec.random(&mut rng)).collect())
+    };
+    {
+        let ev = pjrt_ev.clone();
+        let genomes = pjrt_genomes.clone();
+        benches.push(Bench {
+            name: "pjrt_eval_throughput_mm3_cloud",
+            runs: 3,
+            items: 8 * 256,
+            f: Box::new(move || {
+                std::hint::black_box(ev.eval_genomes(&genomes).unwrap());
+            }),
+        });
+    }
+    benches.push(Bench {
+        name: "sparsemap_search_5k_mm3_cloud",
+        runs: 3,
+        items: 5_000,
+        f: Box::new(|| {
+            let ctx = EvalContext::new(
+                Backend::native(table3::by_id("mm3").unwrap(), Platform::cloud()),
+                5_000,
+            );
+            std::hint::black_box(run_method("sparsemap", ctx, 42).unwrap());
+        }),
+    });
+
+    // --- one bench per table/figure ---------------------------------------
+    let c2 = cfg(0);
+    benches.push(Bench {
+        name: "fig2_interplay_sweep",
+        runs: 3,
+        items: 0,
+        f: Box::new(move || {
+            std::hint::black_box(fig2::run(&c2).unwrap());
+        }),
+    });
+    let c7 = cfg(0);
+    benches.push(Bench {
+        name: "fig7_design_space_scatter_1000",
+        runs: 3,
+        items: 1000,
+        f: Box::new(move || {
+            std::hint::black_box(fig7::run(&c7).unwrap());
+        }),
+    });
+    let c10 = cfg(2_000);
+    benches.push(Bench {
+        name: "fig10_encoding_arms_2k",
+        runs: 2,
+        items: 4_000,
+        f: Box::new(move || {
+            std::hint::black_box(fig10::run_arms(&c10));
+        }),
+    });
+    let c17 = cfg(800);
+    benches.push(Bench {
+        name: "fig17a_method_matrix_conv11_800",
+        runs: 2,
+        items: 800 * fig17::FIG17_METHODS.len(),
+        f: Box::new(move || {
+            std::hint::black_box(fig17::run_matrix(&c17, &Platform::cloud(), &["conv11"]));
+        }),
+    });
+    let c17b = cfg(500);
+    benches.push(Bench {
+        name: "fig17b_valid_ratio_matrix_500",
+        runs: 1,
+        items: 0,
+        f: Box::new(move || {
+            std::hint::black_box(fig17::run_b(&c17b).unwrap());
+        }),
+    });
+    let c18 = cfg(1_500);
+    benches.push(Bench {
+        name: "fig18_ablation_arms_1500",
+        runs: 2,
+        items: 0,
+        f: Box::new(move || {
+            std::hint::black_box(fig18::run_arms(&c18));
+        }),
+    });
+    let c4 = cfg(1_000);
+    benches.push(Bench {
+        name: "table4_subset_matrix_1000",
+        runs: 1,
+        items: 0,
+        f: Box::new(move || {
+            let wls = vec!["mm1".to_string(), "mm3".to_string(), "conv11".to_string()];
+            std::hint::black_box(table4::run_matrix(&c4, &wls));
+        }),
+    });
+
+    println!("{:<40} {:>10} {:>12} {:>14}", "benchmark", "runs", "median", "throughput");
+    for b in &benches {
+        if !filter.is_empty() && !filter.iter().any(|f| b.name.contains(f.as_str())) {
+            continue;
+        }
+        let runs = if quick { 1 } else { b.runs };
+        let mut times: Vec<f64> = (0..runs).map(|_| time_one(&b.f)).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let thr = if b.items > 0 {
+            format!("{:>10.0}/s", b.items as f64 / median)
+        } else {
+            "-".to_string()
+        };
+        println!("{:<40} {:>10} {:>10.3}s {:>14}", b.name, runs, median, thr);
+    }
+}

@@ -1,0 +1,87 @@
+//! Accelerator architecture templates: memory hierarchy, platform
+//! resource constraints (Table II) and 12 nm energy constants.
+//!
+//! The architecture is the paper's 3-level template (Fig. 3): off-chip
+//! DRAM → on-chip Global Buffer (GLB) → PE array (each PE with a local
+//! buffer and a MAC array).
+
+pub mod energy;
+pub mod platform;
+
+pub use energy::EnergyTable;
+pub use platform::{Platform, WORD_BITS, WORD_BYTES};
+
+/// Storage levels of the 3-level template, outer to inner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StorageLevel {
+    Dram,
+    Glb,
+    PeBuf,
+}
+
+impl StorageLevel {
+    pub const ALL: [StorageLevel; 3] = [StorageLevel::Dram, StorageLevel::Glb, StorageLevel::PeBuf];
+
+    pub fn index(self) -> usize {
+        match self {
+            StorageLevel::Dram => 0,
+            StorageLevel::Glb => 1,
+            StorageLevel::PeBuf => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StorageLevel::Dram => "DRAM",
+            StorageLevel::Glb => "GLB",
+            StorageLevel::PeBuf => "PEBuf",
+        }
+    }
+}
+
+/// Data-transfer boundaries between adjacent storage levels (plus the
+/// operand feed into the MACs). S/G mechanisms attach to these (Fig. 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Boundary {
+    /// DRAM ⇄ GLB.
+    DramGlb,
+    /// GLB ⇄ PE buffers (via NoC).
+    GlbPe,
+    /// PE buffer ⇄ MAC operand registers.
+    PeMac,
+}
+
+impl Boundary {
+    pub const ALL: [Boundary; 3] = [Boundary::DramGlb, Boundary::GlbPe, Boundary::PeMac];
+
+    pub fn index(self) -> usize {
+        match self {
+            Boundary::DramGlb => 0,
+            Boundary::GlbPe => 1,
+            Boundary::PeMac => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Boundary::DramGlb => "DRAM-GLB",
+            Boundary::GlbPe => "GLB-PE",
+            Boundary::PeMac => "PE-MAC",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_stable() {
+        for (i, s) in StorageLevel::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+        for (i, b) in Boundary::ALL.iter().enumerate() {
+            assert_eq!(b.index(), i);
+        }
+    }
+}

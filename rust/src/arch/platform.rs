@@ -1,0 +1,204 @@
+//! Hardware platforms (Table II): edge, mobile, cloud.
+
+use super::energy::EnergyTable;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Platform resource constraints + derived constants.
+///
+/// Word width is 16 bits throughout (activation/weight precision of the
+/// DSTC-class accelerators the paper anchors on).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Platform {
+    pub name: String,
+    /// PE array extent (total PEs = `pe_rows * pe_cols`).
+    pub pe_rows: u64,
+    pub pe_cols: u64,
+    /// MAC units per PE.
+    pub macs_per_pe: u64,
+    /// PE-local buffer bytes.
+    pub pe_buf_bytes: u64,
+    /// Global buffer bytes.
+    pub glb_bytes: u64,
+    /// DRAM bandwidth, bytes/second.
+    pub dram_bw_bytes_per_s: f64,
+    /// Clock, Hz.
+    pub clock_hz: f64,
+    /// On-chip GLB↔PE aggregate bandwidth, words/cycle.
+    pub glb_bw_words_per_cycle: f64,
+    /// PE-buffer→MAC aggregate bandwidth per PE, words/cycle.
+    pub pe_bw_words_per_cycle: f64,
+    pub energy: EnergyTable,
+}
+
+/// Bytes per data word (16-bit).
+pub const WORD_BYTES: u64 = 2;
+/// Bits per data word.
+pub const WORD_BITS: u64 = 16;
+
+impl Platform {
+    pub fn total_pes(&self) -> u64 {
+        self.pe_rows * self.pe_cols
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.total_pes() * self.macs_per_pe
+    }
+
+    /// GLB capacity in words.
+    pub fn glb_words(&self) -> f64 {
+        (self.glb_bytes / WORD_BYTES) as f64
+    }
+
+    /// PE buffer capacity in words.
+    pub fn pe_buf_words(&self) -> f64 {
+        (self.pe_buf_bytes / WORD_BYTES) as f64
+    }
+
+    /// DRAM bandwidth in words per clock cycle.
+    pub fn dram_words_per_cycle(&self) -> f64 {
+        self.dram_bw_bytes_per_s / WORD_BYTES as f64 / self.clock_hz
+    }
+
+    /// Table II: Eyeriss-class edge platform.
+    /// 16×16 PEs, 1 MAC/PE, 1 KB PE buffer, 128 KB GLB, 16 MB/s DRAM.
+    pub fn edge() -> Platform {
+        Platform {
+            name: "edge".into(),
+            pe_rows: 16,
+            pe_cols: 16,
+            macs_per_pe: 1,
+            pe_buf_bytes: 1 << 10,
+            glb_bytes: 128 << 10,
+            dram_bw_bytes_per_s: 16e6,
+            clock_hz: 200e6, // embedded-class clock
+            glb_bw_words_per_cycle: 32.0,
+            pe_bw_words_per_cycle: 2.0,
+            energy: EnergyTable::for_capacities(128 << 10, 1 << 10),
+        }
+    }
+
+    /// Table II: mobile platform. 16×16 PEs, 64 MACs/PE, 32 KB PE buffer,
+    /// 16 MB GLB, 32 GB/s DRAM.
+    pub fn mobile() -> Platform {
+        Platform {
+            name: "mobile".into(),
+            pe_rows: 16,
+            pe_cols: 16,
+            macs_per_pe: 64,
+            pe_buf_bytes: 32 << 10,
+            glb_bytes: 16 << 20,
+            dram_bw_bytes_per_s: 32e9,
+            clock_hz: 800e6,
+            glb_bw_words_per_cycle: 128.0,
+            pe_bw_words_per_cycle: 64.0,
+            energy: EnergyTable::for_capacities(16 << 20, 32 << 10),
+        }
+    }
+
+    /// Table II: cloud-TPU-class platform. 32×32 PEs, 64 MACs/PE, 128 KB
+    /// PE buffer, 64 MB GLB, 128 GB/s DRAM.
+    pub fn cloud() -> Platform {
+        Platform {
+            name: "cloud".into(),
+            pe_rows: 32,
+            pe_cols: 32,
+            macs_per_pe: 64,
+            pe_buf_bytes: 128 << 10,
+            glb_bytes: 64 << 20,
+            dram_bw_bytes_per_s: 128e9,
+            clock_hz: 1e9,
+            glb_bw_words_per_cycle: 512.0,
+            pe_bw_words_per_cycle: 64.0,
+            energy: EnergyTable::for_capacities(64 << 20, 128 << 10),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<Platform> {
+        match name {
+            "edge" => Ok(Platform::edge()),
+            "mobile" => Ok(Platform::mobile()),
+            "cloud" => Ok(Platform::cloud()),
+            other => Err(anyhow!("unknown platform '{other}' (edge|mobile|cloud)")),
+        }
+    }
+
+    pub fn all() -> Vec<Platform> {
+        vec![Platform::edge(), Platform::mobile(), Platform::cloud()]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("pes", Json::num(self.total_pes() as f64)),
+            ("macs_per_pe", Json::num(self.macs_per_pe as f64)),
+            ("pe_buf_bytes", Json::num(self.pe_buf_bytes as f64)),
+            ("glb_bytes", Json::num(self.glb_bytes as f64)),
+            ("dram_bw", Json::num(self.dram_bw_bytes_per_s)),
+        ])
+    }
+
+    /// The 16-float platform vector consumed by the AOT fitness evaluator
+    /// (see `python/compile/model.py`, PLATFORM_VECTOR layout).
+    pub fn to_feature_vector(&self) -> Vec<f32> {
+        vec![
+            self.energy.dram as f32,
+            self.energy.glb as f32,
+            self.energy.pe_buf as f32,
+            self.energy.reg as f32,
+            self.energy.mac as f32,
+            self.energy.noc as f32,
+            self.energy.metadata as f32,
+            self.dram_words_per_cycle() as f32,
+            self.glb_bw_words_per_cycle as f32,
+            self.pe_bw_words_per_cycle as f32,
+            self.glb_words() as f32,
+            self.pe_buf_words() as f32,
+            self.total_pes() as f32,
+            self.macs_per_pe as f32,
+            self.clock_hz as f32,
+            0.0, // reserved
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_resources() {
+        let e = Platform::edge();
+        assert_eq!(e.total_pes(), 256);
+        assert_eq!(e.total_macs(), 256);
+        assert_eq!(e.glb_bytes, 128 * 1024);
+        let m = Platform::mobile();
+        assert_eq!(m.total_macs(), 256 * 64);
+        let c = Platform::cloud();
+        assert_eq!(c.total_pes(), 1024);
+        assert_eq!(c.total_macs(), 1024 * 64);
+        assert_eq!(c.glb_bytes, 64 << 20);
+    }
+
+    #[test]
+    fn bandwidth_ordering() {
+        let e = Platform::edge();
+        let c = Platform::cloud();
+        // Edge DRAM is profoundly bandwidth-starved (16 MB/s) vs cloud.
+        assert!(e.dram_words_per_cycle() < 0.1);
+        assert!(c.dram_words_per_cycle() > 10.0);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for p in Platform::all() {
+            assert_eq!(Platform::by_name(&p.name).unwrap(), p);
+        }
+        assert!(Platform::by_name("laptop").is_err());
+    }
+
+    #[test]
+    fn feature_vector_len() {
+        assert_eq!(Platform::edge().to_feature_vector().len(), 16);
+    }
+}

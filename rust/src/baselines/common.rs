@@ -1,0 +1,157 @@
+//! Shared heuristics for the prior-work baselines: the "manually
+//! specified sparse strategy" that Sparseloop Mapper explores mappings
+//! under, and the "fixed mapping" that SAGE-like explores formats under.
+
+use crate::genome::{Genome, GenomeSpec};
+use crate::workload::{Workload, TENSOR_P, TENSOR_Q};
+
+/// A hand-crafted sparse strategy in gene form (what an engineer would
+/// specify for Sparseloop): CP formats for very sparse operands, bitmask
+/// for moderately sparse, uncompressed for dense; skip at the GLB when
+/// both operands are sparse, gate at compute otherwise.
+pub fn manual_strategy_genes(spec: &GenomeSpec, w: &Workload) -> Vec<(usize, u32)> {
+    let mut out = Vec::new();
+    let fmt_for = |density: f64| -> u32 {
+        if density >= 0.99 {
+            0 // uncompressed
+        } else if density < 0.15 {
+            3 // coordinate payload
+        } else {
+            1 // bitmask
+        }
+    };
+    let dp = w.tensors[TENSOR_P].density;
+    let dq = w.tensors[TENSOR_Q].density;
+    for slot in 0..5 {
+        out.push((spec.format_start + slot, fmt_for(dp)));
+        out.push((spec.format_start + 5 + slot, fmt_for(dq)));
+        out.push((spec.format_start + 10 + slot, 0)); // Z uncompressed
+    }
+    // S/G: GLB skip driven by the sparser operand; compute gate both.
+    let glb_sg = if dp >= 0.99 && dq >= 0.99 {
+        0
+    } else if dp <= dq {
+        5 // Skip Q<-P (P sparser)
+    } else {
+        4 // Skip P<-Q
+    };
+    out.push((spec.sg_start, glb_sg));
+    out.push((spec.sg_start + 1, 0));
+    out.push((spec.sg_start + 2, 3)); // Gate P<->Q at MAC
+    out
+}
+
+/// Apply gene overrides.
+pub fn apply(genome: &mut Genome, overrides: &[(usize, u32)]) {
+    for &(i, v) in overrides {
+        genome[i] = v;
+    }
+}
+
+/// A reasonable fixed mapping in gene form (what SAGE assumes): an
+/// output-stationary mapping with factors split between L2_T (GLB
+/// tiling), L2_S (PE parallelism over M/N) and L3_T. Deterministic.
+pub fn heuristic_mapping_genes(spec: &GenomeSpec, w: &Workload) -> Vec<(usize, u32)> {
+    let mut out = Vec::new();
+    // Permutations: identity (M outer, K inner at every level) — an
+    // output-stationary flavour since K ends up innermost.
+    for level in 0..5 {
+        out.push((level, 1));
+    }
+    // Factor assignment: walk each dim's factors; alternate M/N factors
+    // between L2_S (spatial) and L2_T, push K factors to L3_T, overflow
+    // to L1_T.
+    let mut gene = spec.factor_start;
+    for (dim, dspec) in w.dims.iter().enumerate() {
+        let is_contraction = w.contraction.contains(&dim);
+        for (idx, _prime) in dspec.factors.iter().enumerate() {
+            let level = if is_contraction {
+                if idx < 3 {
+                    4 // L3_T... gene value 4 = L3_T (1-based level index)
+                } else {
+                    1 // L1_T
+                }
+            } else if idx == 0 {
+                3 // L2_S
+            } else if idx < 3 {
+                2 // L2_T
+            } else {
+                1 // L1_T
+            };
+            out.push((gene, level));
+            gene += 1;
+        }
+    }
+    out
+}
+
+/// Gene indices of the mapping segment (perms + factors).
+pub fn mapping_gene_indices(spec: &GenomeSpec) -> Vec<usize> {
+    (0..spec.format_start).collect()
+}
+
+/// Gene indices of the sparse-strategy segment (formats + S/G).
+pub fn strategy_gene_indices(spec: &GenomeSpec) -> Vec<usize> {
+    (spec.format_start..spec.len()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::GenomeSpec;
+
+    fn setup() -> (Workload, GenomeSpec) {
+        let w = Workload::spmm("t", 16, 32, 16, 0.1, 0.5);
+        let s = GenomeSpec::for_workload(&w);
+        (w, s)
+    }
+
+    #[test]
+    fn manual_strategy_respects_densities() {
+        let (w, spec) = setup();
+        let genes = manual_strategy_genes(&spec, &w);
+        let mut g = vec![0u32; spec.len()];
+        apply(&mut g, &genes);
+        // P at 10% -> CP (3); Q at 50% -> bitmask (1).
+        assert_eq!(g[spec.format_start], 3);
+        assert_eq!(g[spec.format_start + 5], 1);
+        // P sparser -> Skip Q<-P at the GLB (gene 5).
+        assert_eq!(g[spec.sg_start], 5);
+    }
+
+    #[test]
+    fn dense_workload_gets_no_sg() {
+        let w = Workload::spmm("d", 16, 16, 16, 1.0, 1.0);
+        let spec = GenomeSpec::for_workload(&w);
+        let genes = manual_strategy_genes(&spec, &w);
+        let mut g = vec![9u32; spec.len()];
+        apply(&mut g, &genes);
+        assert_eq!(g[spec.sg_start], 0);
+        assert_eq!(g[spec.format_start], 0);
+    }
+
+    #[test]
+    fn heuristic_mapping_is_complete_and_in_range() {
+        let (w, spec) = setup();
+        let genes = heuristic_mapping_genes(&spec, &w);
+        // Covers all perm + factor genes exactly once.
+        let idxs: Vec<usize> = genes.iter().map(|&(i, _)| i).collect();
+        assert_eq!(idxs.len(), spec.format_start);
+        let mut sorted = idxs.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), spec.format_start);
+        for &(i, v) in &genes {
+            assert!(v >= spec.ranges[i].lo && v <= spec.ranges[i].hi, "gene {i}={v}");
+        }
+    }
+
+    #[test]
+    fn segment_indices_partition_genome() {
+        let (_, spec) = setup();
+        let m = mapping_gene_indices(&spec);
+        let s = strategy_gene_indices(&spec);
+        assert_eq!(m.len() + s.len(), spec.len());
+        assert_eq!(m.last().unwrap() + 1, s[0]);
+    }
+}

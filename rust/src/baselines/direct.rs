@@ -1,0 +1,225 @@
+//! Direct-value genome encoding — the encoding the paper *argues against*
+//! (§IV.B), implemented as the ablation baseline for Fig. 18 and Fig. 10.
+//!
+//! Genes: five permutation genes under a *random* (scrambled) code→perm
+//! table, then one gene per (mapping level, dim) holding the tile factor
+//! value directly in `[1, dim]`, then the same strategy genes as PFCE.
+//! Dimension-tiling constraints (`∏ tiles == dim`) are NOT guaranteed —
+//! violating genomes decode to dead designs, exactly the failure mode
+//! prime-factor encoding eliminates.
+
+use crate::genome::spec::{FORMAT_GENES_PER_TENSOR, SG_SITES};
+use crate::genome::Design;
+use crate::mapping::permutation::factorial;
+use crate::mapping::{Mapping, NUM_MAP_LEVELS};
+use crate::sparse::{RankFormat, SgMechanism, SparseStrategy};
+use crate::util::rng::Pcg64;
+use crate::workload::Workload;
+
+/// Direct-encoding genome layout.
+#[derive(Clone, Debug)]
+pub struct DirectSpec {
+    pub rank: usize,
+    pub dim_sizes: Vec<u64>,
+    /// Scrambled permutation table (random encoding, Fig. 10a): maps gene
+    /// value-1 → permutation.
+    pub perm_table: Vec<Vec<usize>>,
+    pub tile_start: usize,
+    pub format_start: usize,
+    pub sg_start: usize,
+    pub len: usize,
+}
+
+impl DirectSpec {
+    pub fn new(w: &Workload, seed: u64) -> DirectSpec {
+        let rank = w.rank();
+        let nperm = factorial(rank) as usize;
+        let mut table: Vec<Vec<usize>> =
+            (0..nperm).map(|c| crate::mapping::permutation::decode(c as u64 + 1, rank)).collect();
+        // Random encoding: scramble the code→permutation assignment.
+        let mut rng = Pcg64::new(seed, 0x5eed1234);
+        rng.shuffle(&mut table);
+        let tile_start = NUM_MAP_LEVELS;
+        let format_start = tile_start + NUM_MAP_LEVELS * rank;
+        let sg_start = format_start + 3 * FORMAT_GENES_PER_TENSOR;
+        DirectSpec {
+            rank,
+            dim_sizes: w.dims.iter().map(|d| d.padded).collect(),
+            perm_table: table,
+            tile_start,
+            format_start,
+            sg_start,
+            len: sg_start + SG_SITES,
+        }
+    }
+
+    /// Uniform random genome (tile genes uniform in `[1, dim]` — almost
+    /// never multiplying to the dim size, the paper's 0.000023% point).
+    pub fn random(&self, rng: &mut Pcg64) -> Vec<u32> {
+        let mut g = Vec::with_capacity(self.len);
+        for _ in 0..NUM_MAP_LEVELS {
+            g.push(rng.range_u32(1, self.perm_table.len() as u32));
+        }
+        for level in 0..NUM_MAP_LEVELS {
+            let _ = level;
+            for &size in &self.dim_sizes {
+                g.push(rng.range_u32(1, size as u32));
+            }
+        }
+        for _ in 0..3 * FORMAT_GENES_PER_TENSOR {
+            g.push(rng.range_u32(0, 4));
+        }
+        for _ in 0..SG_SITES {
+            g.push(rng.range_u32(0, 6));
+        }
+        g
+    }
+
+    /// Mutate one random gene within its (direct) range.
+    pub fn mutate(&self, genome: &mut [u32], rng: &mut Pcg64) {
+        let i = rng.index(self.len);
+        if i < NUM_MAP_LEVELS {
+            genome[i] = rng.range_u32(1, self.perm_table.len() as u32);
+        } else if i < self.format_start {
+            let dim = (i - self.tile_start) % self.rank;
+            genome[i] = rng.range_u32(1, self.dim_sizes[dim] as u32);
+        } else if i < self.sg_start {
+            genome[i] = rng.range_u32(0, 4);
+        } else {
+            genome[i] = rng.range_u32(0, 6);
+        }
+    }
+
+    /// Decode. Returns `None` when the tiling constraint is violated —
+    /// a *dead individual* (fitness 0) in the paper's terms.
+    pub fn decode(&self, w: &Workload, genome: &[u32]) -> Option<Design> {
+        // Tiling constraint check first.
+        let mut tile = vec![vec![1u64; self.rank]; NUM_MAP_LEVELS];
+        for level in 0..NUM_MAP_LEVELS {
+            for dim in 0..self.rank {
+                tile[level][dim] =
+                    genome[self.tile_start + level * self.rank + dim] as u64;
+            }
+        }
+        for dim in 0..self.rank {
+            let prod: u64 = (0..NUM_MAP_LEVELS).map(|l| tile[l][dim]).product();
+            if prod != self.dim_sizes[dim] {
+                return None;
+            }
+        }
+        let perm: Vec<Vec<usize>> = (0..NUM_MAP_LEVELS)
+            .map(|l| {
+                let code = (genome[l] as usize - 1) % self.perm_table.len();
+                self.perm_table[code].clone()
+            })
+            .collect();
+        let mapping = Mapping { tile, perm };
+
+        let mut formats: [Vec<RankFormat>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for (t, fmts) in formats.iter_mut().enumerate() {
+            let ranks = crate::genome::tensor_ranks(&mapping, w, t);
+            let genes =
+                &genome[self.format_start + t * FORMAT_GENES_PER_TENSOR..][..FORMAT_GENES_PER_TENSOR];
+            let k = ranks.len();
+            *fmts = if k <= FORMAT_GENES_PER_TENSOR {
+                genes[FORMAT_GENES_PER_TENSOR - k..]
+                    .iter()
+                    .map(|&x| RankFormat::from_gene(x))
+                    .collect()
+            } else {
+                let mut v: Vec<RankFormat> =
+                    genes.iter().map(|&x| RankFormat::from_gene(x)).collect();
+                v.extend(std::iter::repeat(RankFormat::Uncompressed).take(k - FORMAT_GENES_PER_TENSOR));
+                v
+            };
+        }
+        let sg = [
+            SgMechanism::from_gene(genome[self.sg_start]),
+            SgMechanism::from_gene(genome[self.sg_start + 1]),
+            SgMechanism::from_gene(genome[self.sg_start + 2]),
+        ];
+        Some(Design { mapping, strategy: SparseStrategy { formats, sg } })
+    }
+
+    /// Fraction of random genomes satisfying the tiling constraint —
+    /// reproduces the paper's "0.000023%" style argument quantitatively.
+    pub fn tiling_hit_rate(&self, w: &Workload, samples: usize, rng: &mut Pcg64) -> f64 {
+        let mut hits = 0;
+        for _ in 0..samples {
+            let g = self.random(rng);
+            if self.decode(w, &g).is_some() {
+                hits += 1;
+            }
+        }
+        hits as f64 / samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Workload, DirectSpec) {
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        let s = DirectSpec::new(&w, 1);
+        (w, s)
+    }
+
+    #[test]
+    fn layout() {
+        let (_, s) = setup();
+        assert_eq!(s.tile_start, 5);
+        assert_eq!(s.format_start, 5 + 15);
+        assert_eq!(s.len, 5 + 15 + 15 + 3);
+    }
+
+    #[test]
+    fn most_random_genomes_are_dead() {
+        let (w, s) = setup();
+        let mut rng = Pcg64::seeded(2);
+        let rate = s.tiling_hit_rate(&w, 3_000, &mut rng);
+        // Even for this tiny 4x8x4 workload the hit rate is tiny.
+        assert!(rate < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn valid_direct_genome_decodes() {
+        let (w, s) = setup();
+        let mut g = vec![1u32; s.len];
+        // Put the full size at level 0 (L1_T), ones elsewhere.
+        for dim in 0..s.rank {
+            g[s.tile_start + dim] = s.dim_sizes[dim] as u32;
+        }
+        for i in s.format_start..s.len {
+            g[i] = 0;
+        }
+        let d = s.decode(&w, &g).expect("should satisfy tiling");
+        assert!(d.mapping.respects(&w));
+    }
+
+    #[test]
+    fn perm_table_is_scrambled_but_complete() {
+        let (_, s) = setup();
+        assert_eq!(s.perm_table.len(), 6);
+        let mut sorted = s.perm_table.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6); // all distinct permutations present
+        // Different seeds give different scrambles (random encoding).
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        let s2 = DirectSpec::new(&w, 2);
+        assert_ne!(s.perm_table, s2.perm_table);
+    }
+
+    #[test]
+    fn mutate_stays_interpretable() {
+        let (w, s) = setup();
+        let mut rng = Pcg64::seeded(3);
+        let mut g = s.random(&mut rng);
+        for _ in 0..200 {
+            s.mutate(&mut g, &mut rng);
+        }
+        // Decode either succeeds or reports dead — never panics.
+        let _ = s.decode(&w, &g);
+    }
+}

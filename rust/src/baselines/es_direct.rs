@@ -1,0 +1,130 @@
+//! Standard ES over the *direct-value* encoding — the paper's "standard
+//! ES (with latin hypercube sampling initialization)" ablation baseline
+//! (Fig. 18) and the "random encoding" arm of Fig. 10.
+//!
+//! Uses [`super::direct::DirectSpec`]: genes carry tile values directly
+//! and permutations decode through a scrambled table, so crossover and
+//! mutation routinely violate dimension-tiling constraints and produce
+//! dead offspring — the behaviour the PFCE encoding eliminates.
+
+use super::direct::DirectSpec;
+use crate::genome::Design;
+use crate::search::{EvalContext, Outcome};
+use crate::util::rng::Pcg64;
+
+pub struct EsDirectConfig {
+    pub population: usize,
+    pub parent_frac: f64,
+    pub mutation_prob: f64,
+}
+
+impl Default for EsDirectConfig {
+    fn default() -> Self {
+        EsDirectConfig { population: 100, parent_frac: 0.25, mutation_prob: 0.6 }
+    }
+}
+
+/// LHS over the direct gene ranges.
+fn lhs_direct(spec: &DirectSpec, n: usize, rng: &mut Pcg64) -> Vec<Vec<u32>> {
+    // Reuse the random sampler per-stratum: direct ranges are wide, so a
+    // simple per-gene stratified shuffle suffices.
+    let mut pop: Vec<Vec<u32>> = (0..n).map(|_| spec.random(rng)).collect();
+    // Stratify the tile genes (the widest ranges) across the population.
+    for gene in spec.tile_start..spec.format_start {
+        let dim = (gene - spec.tile_start) % spec.rank;
+        let width = spec.dim_sizes[dim].max(1);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for (stratum, &who) in order.iter().enumerate() {
+            let lo = 1 + stratum as u64 * width / n as u64;
+            let hi = (1 + (stratum as u64 + 1) * width / n as u64).clamp(lo, width);
+            pop[who][gene] = rng.range_u32(lo as u32, hi as u32);
+        }
+    }
+    pop
+}
+
+pub fn es_direct(mut ctx: EvalContext, seed: u64) -> Outcome {
+    let workload = ctx.workload().clone();
+    let spec = DirectSpec::new(&workload, seed);
+    let mut rng = Pcg64::seeded(seed);
+    let cfg = EsDirectConfig::default();
+
+    let decode_all = |genomes: &[Vec<u32>]| -> Vec<Option<Design>> {
+        genomes.iter().map(|g| spec.decode(&workload, g)).collect()
+    };
+
+    let genomes = lhs_direct(&spec, cfg.population, &mut rng);
+    let designs = decode_all(&genomes);
+    let results = ctx.eval_designs(&genomes, &designs);
+    let mut pop: Vec<(Vec<u32>, f64)> = genomes
+        .into_iter()
+        .zip(&results)
+        .map(|(g, r)| (g, if r.valid { 1.0 / r.edp } else { 0.0 }))
+        .collect();
+
+    while !ctx.exhausted() {
+        pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let parents = ((pop.len() as f64 * cfg.parent_frac) as usize).max(2);
+        pop.truncate(parents);
+
+        let mut children: Vec<Vec<u32>> = Vec::with_capacity(cfg.population);
+        while children.len() < cfg.population {
+            let pa = &pop[rng.index(pop.len())].0;
+            let pb = &pop[rng.index(pop.len())].0;
+            let cut = 1 + rng.index(spec.len - 1);
+            let mut c = pa[..cut].to_vec();
+            c.extend_from_slice(&pb[cut..]);
+            if rng.chance(cfg.mutation_prob) {
+                spec.mutate(&mut c, &mut rng);
+            }
+            children.push(c);
+        }
+        let designs = decode_all(&children);
+        let results = ctx.eval_designs(&children, &designs);
+        if results.is_empty() {
+            break;
+        }
+        for (g, r) in children.into_iter().zip(&results) {
+            pop.push((g, if r.valid { 1.0 / r.edp } else { 0.0 }));
+        }
+    }
+    ctx.outcome("es-direct")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::Backend;
+    use crate::workload::Workload;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("t", 16, 32, 16, 0.3, 0.3);
+        EvalContext::new(Backend::native(w, Platform::mobile()), budget)
+    }
+
+    #[test]
+    fn runs_within_budget() {
+        let o = es_direct(ctx(1_000), 3);
+        assert_eq!(o.method, "es-direct");
+        assert!(o.evals <= 1_000);
+    }
+
+    #[test]
+    fn suffers_from_dead_offspring() {
+        // The defining property: most direct-encoding evaluations are
+        // dead (tiling violations), so the valid ratio is far below the
+        // PFCE encoding's.
+        let o = es_direct(ctx(2_000), 4);
+        assert!(o.valid_ratio() < 0.5, "valid ratio {}", o.valid_ratio());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = es_direct(ctx(600), 9);
+        let b = es_direct(ctx(600), 9);
+        assert_eq!(a.best_edp, b.best_edp);
+        assert_eq!(a.valid_evals, b.valid_evals);
+    }
+}

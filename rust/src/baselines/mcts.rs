@@ -1,0 +1,139 @@
+//! Monte Carlo Tree Search baseline (§III.C), over the raw
+//! direct-encoded space.
+//!
+//! The genome is built gene-by-gene: tree depth = gene index, actions =
+//! (quantized) gene values. UCB1 selection, single-node expansion,
+//! uniform random rollout completion, reward backpropagation. Rewards
+//! map EDP to (0, 1] via a running-best ratio; dead individuals give 0 —
+//! exactly the sparse-reward regime the paper argues MCTS struggles with
+//! ("each node contains a large number of invalid branches").
+
+use super::space::{DirectSpace, MAX_ACTIONS};
+use crate::search::{EvalContext, Outcome};
+use crate::util::rng::Pcg64;
+
+struct Node {
+    /// Children indexed by action index; 0 = unexpanded.
+    children: Vec<usize>,
+    visits: f64,
+    value_sum: f64,
+}
+
+pub fn mcts(mut ctx: EvalContext, seed: u64) -> Outcome {
+    let space = DirectSpace::new(&ctx, seed);
+    let mut rng = Pcg64::seeded(seed);
+    let c_uct = 1.4;
+    let n_genes = space.len();
+    // Precompute the per-depth action sets.
+    let actions: Vec<Vec<u32>> =
+        (0..n_genes).map(|i| space.actions(i, MAX_ACTIONS)).collect();
+
+    let mut nodes: Vec<Node> = vec![Node {
+        children: vec![0; actions[0].len()],
+        visits: 0.0,
+        value_sum: 0.0,
+    }];
+    let mut best_edp_seen = f64::INFINITY;
+
+    while !ctx.exhausted() {
+        // --- selection + expansion ---------------------------------------
+        let mut genome: Vec<u32> = Vec::with_capacity(n_genes);
+        let mut path: Vec<usize> = vec![0];
+        let mut node = 0usize;
+        let mut depth = 0usize;
+        while depth < n_genes {
+            let acts = &actions[depth];
+            let parent_visits = nodes[node].visits.max(1.0);
+            let mut best_a = 0;
+            let mut best_score = f64::NEG_INFINITY;
+            for a in 0..acts.len() {
+                let child = nodes[node].children[a];
+                let score = if child == 0 {
+                    f64::INFINITY - a as f64 * 1e-9 // break ties stably
+                } else {
+                    let ch = &nodes[child];
+                    ch.value_sum / ch.visits.max(1e-9)
+                        + c_uct * (parent_visits.ln() / ch.visits.max(1e-9)).sqrt()
+                };
+                if score > best_score {
+                    best_score = score;
+                    best_a = a;
+                }
+            }
+            genome.push(acts[best_a]);
+            let child = nodes[node].children[best_a];
+            if child == 0 {
+                let next_width = if depth + 1 < n_genes {
+                    actions[depth + 1].len()
+                } else {
+                    0
+                };
+                nodes.push(Node {
+                    children: vec![0; next_width],
+                    visits: 0.0,
+                    value_sum: 0.0,
+                });
+                let new_id = nodes.len() - 1;
+                nodes[node].children[best_a] = new_id;
+                path.push(new_id);
+                depth += 1;
+                break;
+            }
+            node = child;
+            path.push(node);
+            depth += 1;
+        }
+        // --- rollout: random completion over the action sets ----------------
+        for d in depth..n_genes {
+            genome.push(space.sample_action(d, &mut rng));
+        }
+        // --- evaluation ---------------------------------------------------
+        let results = space.eval(&mut ctx, std::slice::from_ref(&genome));
+        let Some(result) = results.first() else { break };
+        let reward = if result.valid {
+            best_edp_seen = best_edp_seen.min(result.edp);
+            1.0 / (1.0 + (result.edp / best_edp_seen).ln().max(0.0))
+        } else {
+            0.0
+        };
+        // --- backpropagation ------------------------------------------------
+        for &id in &path {
+            nodes[id].visits += 1.0;
+            nodes[id].value_sum += reward;
+        }
+    }
+    ctx.outcome("mcts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::Backend;
+    use crate::workload::Workload;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("t", 16, 32, 16, 0.3, 0.3);
+        EvalContext::new(Backend::native(w, Platform::mobile()), budget)
+    }
+
+    #[test]
+    fn mcts_runs_and_respects_budget() {
+        let o = mcts(ctx(800), 3);
+        assert_eq!(o.method, "mcts");
+        assert!(o.evals <= 800);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = mcts(ctx(600), 11);
+        let b = mcts(ctx(600), 11);
+        assert_eq!(a.best_edp, b.best_edp);
+    }
+
+    #[test]
+    fn suffers_sparse_rewards_in_raw_space() {
+        let o = mcts(ctx(2_000), 4);
+        assert!(o.valid_ratio() < 0.6, "valid ratio {}", o.valid_ratio());
+    }
+}

@@ -1,0 +1,87 @@
+//! Prior-work and classical-optimizer baselines (§III.C, §V): random /
+//! Sparseloop-Mapper-like / SAGE-like sampling arms, PSO, MCTS, TBPSA,
+//! PPO, DQN, and the direct-encoding standard ES ablation.
+
+pub mod common;
+pub mod direct;
+pub mod es_direct;
+pub mod mcts;
+pub mod nn;
+pub mod pso;
+pub mod rl;
+pub mod samplers;
+pub mod space;
+pub mod tbpsa;
+
+pub use direct::DirectSpec;
+pub use es_direct::es_direct;
+pub use mcts::mcts;
+pub use pso::pso;
+pub use rl::{dqn, ppo};
+pub use samplers::{pure_random, sage_like, sparseloop_mapper};
+pub use tbpsa::tbpsa;
+
+use crate::es::{run_sparsemap, EsConfig, EsVariant};
+use crate::search::{EvalContext, Outcome};
+
+/// All method names runnable through [`run_method`].
+pub const ALL_METHODS: &[&str] = &[
+    "sparsemap",
+    "es-pfce",
+    "es-direct",
+    "random",
+    "sparseloop",
+    "sage-like",
+    "pso",
+    "mcts",
+    "tbpsa",
+    "ppo",
+    "dqn",
+];
+
+/// Dispatch a search method by name (the CLI / experiment driver entry).
+pub fn run_method(name: &str, ctx: EvalContext, seed: u64) -> anyhow::Result<Outcome> {
+    Ok(match name {
+        "sparsemap" => run_sparsemap(ctx, EsConfig::default(), seed),
+        "es-pfce" => run_sparsemap(
+            ctx,
+            EsConfig { variant: EsVariant::Pfce, ..EsConfig::default() },
+            seed,
+        ),
+        "es-direct" => es_direct(ctx, seed),
+        "random" => pure_random(ctx, seed),
+        "sparseloop" => sparseloop_mapper(ctx, seed),
+        "sage-like" => sage_like(ctx, seed),
+        "pso" => pso(ctx, seed),
+        "mcts" => mcts(ctx, seed),
+        "tbpsa" => tbpsa(ctx, seed),
+        "ppo" => rl::ppo(ctx, seed),
+        "dqn" => rl::dqn(ctx, seed),
+        other => anyhow::bail!("unknown method '{other}' (one of {ALL_METHODS:?})"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::Backend;
+    use crate::workload::Workload;
+
+    #[test]
+    fn all_methods_dispatch() {
+        for m in ALL_METHODS {
+            let w = Workload::spmm("t", 16, 16, 16, 0.5, 0.5);
+            let ctx = EvalContext::new(Backend::native(w, Platform::mobile()), 60);
+            let o = run_method(m, ctx, 1).unwrap();
+            assert!(o.evals <= 60, "{m} overspent");
+        }
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        let w = Workload::spmm("t", 16, 16, 16, 0.5, 0.5);
+        let ctx = EvalContext::new(Backend::native(w, Platform::mobile()), 10);
+        assert!(run_method("gradient-descent", ctx, 1).is_err());
+    }
+}

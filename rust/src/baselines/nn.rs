@@ -1,0 +1,171 @@
+//! A minimal fully-connected neural network with SGD — substrate for the
+//! DQN and PPO baselines (the offline vendor set has no ML framework).
+//!
+//! One hidden layer, ReLU, He initialization, mean-squared-error loss,
+//! plain SGD with gradient clipping. Sized for the tiny function
+//! approximation these baselines need (tens of inputs, tens of outputs).
+
+use crate::util::rng::Pcg64;
+
+/// A 2-layer MLP: `out = W2·relu(W1·x + b1) + b2`.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub n_in: usize,
+    pub n_hidden: usize,
+    pub n_out: usize,
+    w1: Vec<f64>, // [hidden, in]
+    b1: Vec<f64>,
+    w2: Vec<f64>, // [out, hidden]
+    b2: Vec<f64>,
+}
+
+impl Mlp {
+    pub fn new(n_in: usize, n_hidden: usize, n_out: usize, rng: &mut Pcg64) -> Mlp {
+        let he1 = (2.0 / n_in as f64).sqrt();
+        let he2 = (2.0 / n_hidden as f64).sqrt();
+        Mlp {
+            n_in,
+            n_hidden,
+            n_out,
+            w1: (0..n_hidden * n_in).map(|_| rng.normal() * he1).collect(),
+            b1: vec![0.0; n_hidden],
+            w2: (0..n_out * n_hidden).map(|_| rng.normal() * he2).collect(),
+            b2: vec![0.0; n_out],
+        }
+    }
+
+    /// Forward pass; returns (hidden activations, outputs).
+    fn forward_full(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        debug_assert_eq!(x.len(), self.n_in);
+        let mut h = vec![0.0; self.n_hidden];
+        for i in 0..self.n_hidden {
+            let mut acc = self.b1[i];
+            let row = &self.w1[i * self.n_in..(i + 1) * self.n_in];
+            for (w, xv) in row.iter().zip(x) {
+                acc += w * xv;
+            }
+            h[i] = acc.max(0.0); // ReLU
+        }
+        let mut y = vec![0.0; self.n_out];
+        for o in 0..self.n_out {
+            let mut acc = self.b2[o];
+            let row = &self.w2[o * self.n_hidden..(o + 1) * self.n_hidden];
+            for (w, hv) in row.iter().zip(&h) {
+                acc += w * hv;
+            }
+            y[o] = acc;
+        }
+        (h, y)
+    }
+
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        self.forward_full(x).1
+    }
+
+    /// One SGD step on ½‖y − target‖² restricted to output `out_idx`
+    /// (Q-learning style single-action update). Returns the squared error
+    /// before the update.
+    pub fn sgd_step(&mut self, x: &[f64], out_idx: usize, target: f64, lr: f64) -> f64 {
+        let (h, y) = self.forward_full(x);
+        let err = y[out_idx] - target;
+        let g_out = err.clamp(-1.0, 1.0); // gradient clipping (Huber-ish)
+
+        // Output layer grads.
+        for j in 0..self.n_hidden {
+            let g = g_out * h[j];
+            self.w2[out_idx * self.n_hidden + j] -= lr * g;
+        }
+        self.b2[out_idx] -= lr * g_out;
+
+        // Hidden layer grads (through ReLU).
+        for j in 0..self.n_hidden {
+            if h[j] <= 0.0 {
+                continue;
+            }
+            let gh = g_out * self.w2[out_idx * self.n_hidden + j];
+            for k in 0..self.n_in {
+                self.w1[j * self.n_in + k] -= lr * gh * x[k];
+            }
+            self.b1[j] -= lr * gh;
+        }
+        err * err
+    }
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(logits: &[f64]) -> Vec<f64> {
+    let m = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// Sample an index from a probability vector.
+pub fn sample_categorical(probs: &[f64], rng: &mut Pcg64) -> usize {
+    let u = rng.f64();
+    let mut acc = 0.0;
+    for (i, p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_a_linear_function() {
+        // y = 2*x0 - x1; the MLP should fit it from samples.
+        let mut rng = Pcg64::seeded(5);
+        let mut net = Mlp::new(2, 16, 1, &mut rng);
+        for _ in 0..4_000 {
+            let x = [rng.f64() * 2.0 - 1.0, rng.f64() * 2.0 - 1.0];
+            let t = 2.0 * x[0] - x[1];
+            net.sgd_step(&x, 0, t, 0.02);
+        }
+        let mut worst: f64 = 0.0;
+        for _ in 0..50 {
+            let x = [rng.f64() * 2.0 - 1.0, rng.f64() * 2.0 - 1.0];
+            let t = 2.0 * x[0] - x[1];
+            worst = worst.max((net.forward(&x)[0] - t).abs());
+        }
+        assert!(worst < 0.25, "worst abs err = {worst}");
+    }
+
+    #[test]
+    fn multi_output_independent_updates() {
+        let mut rng = Pcg64::seeded(6);
+        let mut net = Mlp::new(1, 8, 3, &mut rng);
+        for _ in 0..3_000 {
+            let x = [rng.f64()];
+            net.sgd_step(&x, 1, 5.0, 0.05); // only output 1 trained
+        }
+        let y = net.forward(&[0.5]);
+        assert!((y[1] - 5.0).abs() < 0.5, "y1={}", y[1]);
+    }
+
+    #[test]
+    fn softmax_properties() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // Stability with huge logits.
+        let q = softmax(&[1000.0, 1000.0]);
+        assert!((q[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn categorical_sampling_distribution() {
+        let mut rng = Pcg64::seeded(7);
+        let probs = [0.1, 0.6, 0.3];
+        let mut counts = [0usize; 3];
+        for _ in 0..6_000 {
+            counts[sample_categorical(&probs, &mut rng)] += 1;
+        }
+        assert!((counts[1] as f64 / 6_000.0 - 0.6).abs() < 0.05);
+    }
+}

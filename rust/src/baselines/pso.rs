@@ -1,0 +1,125 @@
+//! Particle Swarm Optimization baseline (§III.C).
+//!
+//! Standard global-best PSO over a continuous relaxation of the *raw*
+//! (direct-encoded) design space — see [`super::space`] for why the
+//! classical baselines do not get SparseMap's prime-factor encoding.
+//! Positions live in `[lo, hi]` per gene and decode by rounding;
+//! constants follow Clerc's constriction values.
+
+use super::space::DirectSpace;
+use crate::search::{EvalContext, Outcome};
+use crate::util::rng::Pcg64;
+
+pub struct PsoConfig {
+    pub swarm: usize,
+    pub inertia: f64,
+    pub c1: f64,
+    pub c2: f64,
+}
+
+impl Default for PsoConfig {
+    fn default() -> Self {
+        PsoConfig { swarm: 40, inertia: 0.729, c1: 1.494, c2: 1.494 }
+    }
+}
+
+fn decode(pos: &[f64], space: &DirectSpace) -> Vec<u32> {
+    (0..space.len()).map(|i| space.snap(i, pos[i])).collect()
+}
+
+pub fn pso(mut ctx: EvalContext, seed: u64) -> Outcome {
+    let space = DirectSpace::new(&ctx, seed);
+    let cfg = PsoConfig::default();
+    let mut rng = Pcg64::seeded(seed);
+    let n = space.len();
+    let lo: Vec<f64> = (0..n).map(|i| space.bounds(i).0 as f64).collect();
+    let hi: Vec<f64> = (0..n).map(|i| space.bounds(i).1 as f64).collect();
+
+    // Positions start at feasible-looking points (small-divisor-biased
+    // samples): per-level tile factors multiply up to the dimension, so a
+    // uniform start overshoots and the whole swarm would begin dead.
+    let mut pos: Vec<Vec<f64>> = (0..cfg.swarm)
+        .map(|_| (0..n).map(|i| space.sample_action(i, &mut rng) as f64).collect())
+        .collect();
+    let mut vel: Vec<Vec<f64>> = (0..cfg.swarm)
+        .map(|_| (0..n).map(|i| (hi[i] - lo[i]) * (rng.f64() - 0.5) * 0.05).collect())
+        .collect();
+    let mut pbest = pos.clone();
+    let mut pbest_cost = vec![f64::INFINITY; cfg.swarm];
+    let mut gbest = pos[0].clone();
+    let mut gbest_cost = f64::INFINITY;
+
+    while !ctx.exhausted() {
+        let genomes: Vec<Vec<u32>> = pos.iter().map(|p| decode(p, &space)).collect();
+        let results = space.eval(&mut ctx, &genomes);
+        for (i, r) in results.iter().enumerate() {
+            let cost = if r.valid { r.edp } else { f64::INFINITY };
+            if cost < pbest_cost[i] {
+                pbest_cost[i] = cost;
+                pbest[i] = pos[i].clone();
+            }
+            if cost < gbest_cost {
+                gbest_cost = cost;
+                gbest = pos[i].clone();
+            }
+        }
+        if results.len() < cfg.swarm {
+            break;
+        }
+        for i in 0..cfg.swarm {
+            for d in 0..n {
+                let r1 = rng.f64();
+                let r2 = rng.f64();
+                vel[i][d] = cfg.inertia * vel[i][d]
+                    + cfg.c1 * r1 * (pbest[i][d] - pos[i][d])
+                    + cfg.c2 * r2 * (gbest[d] - pos[i][d]);
+                let vmax = (hi[d] - lo[d]) * 0.5;
+                vel[i][d] = vel[i][d].clamp(-vmax, vmax);
+                pos[i][d] = (pos[i][d] + vel[i][d]).clamp(lo[d], hi[d]);
+            }
+        }
+    }
+    ctx.outcome("pso")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::Backend;
+    use crate::workload::Workload;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("t", 16, 32, 16, 0.3, 0.3);
+        EvalContext::new(Backend::native(w, Platform::mobile()), budget)
+    }
+
+    #[test]
+    fn pso_runs_within_budget() {
+        let o = pso(ctx(1_000), 5);
+        assert!(o.evals <= 1_000);
+        assert_eq!(o.method, "pso");
+    }
+
+    #[test]
+    fn decode_clamps_to_bounds() {
+        let c = ctx(10);
+        let space = DirectSpace::new(&c, 1);
+        let below = vec![-10.0; space.len()];
+        let above = vec![1e9; space.len()];
+        for g in [decode(&below, &space), decode(&above, &space)] {
+            for (i, &v) in g.iter().enumerate() {
+                let (lo, hi) = space.bounds(i);
+                assert!(v >= lo && v <= hi, "gene {i} value {v} not in [{lo},{hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn pso_struggles_with_raw_space_validity() {
+        // The paper's point: classical optimizers waste most of the
+        // budget on invalid (tiling-violating) points.
+        let o = pso(ctx(2_000), 6);
+        assert!(o.valid_ratio() < 0.6, "valid ratio {}", o.valid_ratio());
+    }
+}

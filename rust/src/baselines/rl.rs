@@ -1,0 +1,235 @@
+//! Reinforcement-learning baselines: PPO and DQN (§III.C, ConfuciuX-style
+//! sequential parameter assignment).
+//!
+//! Both model genome construction as an episodic MDP: at step t the agent
+//! chooses the value of gene t; the episode reward is the fitness of the
+//! completed design (0 for dead individuals — the sparse-reward regime
+//! the paper highlights).
+//!
+//! * **PPO** — factored categorical policy (one logits row per gene),
+//!   clipped-surrogate updates with an EMA value baseline.
+//! * **DQN** — Q(s, a) from a small in-tree MLP (`nn::Mlp`); the state
+//!   encodes the current gene index and the normalized choices made so
+//!   far; ε-greedy behaviour policy with a shrinking ε and a replay pass.
+
+use super::nn::{sample_categorical, softmax, Mlp};
+use super::space::{DirectSpace, MAX_ACTIONS};
+use crate::search::{EvalContext, Outcome};
+use crate::util::rng::Pcg64;
+
+/// Shared: reward for one completed genome (0 for dead, otherwise a
+/// monotone-decreasing squash of EDP against the best seen).
+fn reward(edp: f64, valid: bool, best: &mut f64) -> f64 {
+    if !valid || !edp.is_finite() {
+        return 0.0;
+    }
+    *best = best.min(edp);
+    1.0 / (1.0 + (edp / *best).ln().max(0.0))
+}
+
+// ---------------------------------------------------------------------------
+// PPO
+// ---------------------------------------------------------------------------
+
+pub fn ppo(mut ctx: EvalContext, seed: u64) -> Outcome {
+    let space = DirectSpace::new(&ctx, seed);
+    let mut rng = Pcg64::seeded(seed);
+    let n = space.len();
+    let clip = 0.2;
+    let lr = 0.15;
+    let batch = 24usize;
+
+    // Factored policy over the (quantized) raw action sets. Tile-gene
+    // logits start with a downward ramp (prior toward small tile factors)
+    // so the initial policy sees occasional rewards to learn from.
+    let actions: Vec<Vec<u32>> = (0..n).map(|i| space.actions(i, MAX_ACTIONS)).collect();
+    let mut logits: Vec<Vec<f64>> = actions
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            if space.is_tile_gene(i) {
+                (0..a.len()).map(|k| -0.8 * k as f64).collect()
+            } else {
+                vec![0.0; a.len()]
+            }
+        })
+        .collect();
+    let mut baseline = 0.0f64;
+    let mut best = f64::INFINITY;
+
+    while !ctx.exhausted() {
+        // Sample a batch of genomes + remember old probabilities.
+        let mut genomes = Vec::with_capacity(batch);
+        let mut chosen: Vec<Vec<usize>> = Vec::with_capacity(batch);
+        let mut old_probs: Vec<Vec<f64>> = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let mut g = Vec::with_capacity(n);
+            let mut acts = Vec::with_capacity(n);
+            let mut ops = Vec::with_capacity(n);
+            for (gi, row) in logits.iter().enumerate() {
+                let probs = softmax(row);
+                let a = sample_categorical(&probs, &mut rng);
+                g.push(actions[gi][a]);
+                acts.push(a);
+                ops.push(probs[a]);
+            }
+            genomes.push(g);
+            chosen.push(acts);
+            old_probs.push(ops);
+        }
+        let results = space.eval(&mut ctx, &genomes);
+        if results.is_empty() {
+            break;
+        }
+        let rewards: Vec<f64> =
+            results.iter().map(|r| reward(r.edp, r.valid, &mut best)).collect();
+        let mean_r = rewards.iter().sum::<f64>() / rewards.len() as f64;
+        baseline = 0.9 * baseline + 0.1 * mean_r;
+
+        // Two epochs of clipped updates.
+        for _ in 0..2 {
+            for (ep, acts) in chosen.iter().enumerate().take(results.len()) {
+                let adv = rewards[ep] - baseline;
+                if adv.abs() < 1e-12 {
+                    continue;
+                }
+                for (gi, &a) in acts.iter().enumerate() {
+                    let probs = softmax(&logits[gi]);
+                    let ratio = probs[a] / old_probs[ep][gi].max(1e-12);
+                    // Clipped surrogate: zero gradient outside the trust
+                    // region in the direction of improvement.
+                    let clipped = if adv > 0.0 {
+                        ratio <= 1.0 + clip
+                    } else {
+                        ratio >= 1.0 - clip
+                    };
+                    if !clipped {
+                        continue;
+                    }
+                    // ∇ log π gradient step for a categorical.
+                    for (v, p) in probs.iter().enumerate() {
+                        let indicator = if v == a { 1.0 } else { 0.0 };
+                        logits[gi][v] += lr * adv * (indicator - p);
+                    }
+                }
+            }
+        }
+    }
+    ctx.outcome("ppo")
+}
+
+// ---------------------------------------------------------------------------
+// DQN
+// ---------------------------------------------------------------------------
+
+pub fn dqn(mut ctx: EvalContext, seed: u64) -> Outcome {
+    let space = DirectSpace::new(&ctx, seed);
+    let mut rng = Pcg64::seeded(seed);
+    let n = space.len();
+    let actions: Vec<Vec<u32>> = (0..n).map(|i| space.actions(i, MAX_ACTIONS)).collect();
+    let max_width = actions.iter().map(|a| a.len()).max().unwrap();
+
+    // State: gene-position one-hot + normalized previous choice.
+    let state_dim = n + 2;
+    let mut qnet = Mlp::new(state_dim, 32, max_width, &mut rng);
+    let gamma = 0.98;
+    let lr = 0.01;
+    let mut best = f64::INFINITY;
+    let mut episode = 0usize;
+
+    let encode_state = |pos: usize, prev_norm: f64| -> Vec<f64> {
+        let mut s = vec![0.0; state_dim];
+        if pos < n {
+            s[pos] = 1.0;
+        }
+        s[n] = pos as f64 / n as f64;
+        s[n + 1] = prev_norm;
+        s
+    };
+
+    while !ctx.exhausted() {
+        let eps = ((-(episode as f64) / 300.0).exp()).max(0.10);
+        // Roll one episode.
+        let mut genome = Vec::with_capacity(n);
+        let mut transitions: Vec<(Vec<f64>, usize)> = Vec::with_capacity(n);
+        let mut prev_norm = 0.0;
+        for gi in 0..n {
+            let width = actions[gi].len();
+            let s = encode_state(gi, prev_norm);
+            let a = if rng.chance(eps) {
+                // Exploration biased toward small tile factors — the
+                // unbiased choice almost never completes a live design,
+                // so the Q function would never see a nonzero target.
+                let u = rng.f64();
+                let u = if gi >= n { u } else { u * u };
+                ((u * width as f64) as usize).min(width - 1)
+            } else {
+                let q = qnet.forward(&s);
+                (0..width).max_by(|&i, &j| q[i].partial_cmp(&q[j]).unwrap()).unwrap()
+            };
+            genome.push(actions[gi][a]);
+            transitions.push((s, a));
+            prev_norm = a as f64 / width.max(1) as f64;
+        }
+        let results = space.eval(&mut ctx, std::slice::from_ref(&genome));
+        let Some(result) = results.first().copied() else { break };
+        let final_reward = reward(result.edp, result.valid, &mut best);
+
+        // Backward TD sweep: terminal reward only, bootstrapped through
+        // the episode (Monte-Carlo-flavoured n-step update).
+        let mut target = final_reward;
+        for (s, a) in transitions.iter().rev() {
+            qnet.sgd_step(s, *a, target, lr);
+            target *= gamma;
+        }
+        episode += 1;
+    }
+    ctx.outcome("dqn")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::Backend;
+    use crate::workload::Workload;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("t", 16, 32, 16, 0.3, 0.3);
+        EvalContext::new(Backend::native(w, Platform::mobile()), budget)
+    }
+
+    #[test]
+    fn reward_shaping() {
+        let mut best = f64::INFINITY;
+        assert_eq!(reward(1e9, false, &mut best), 0.0);
+        let r1 = reward(1e9, true, &mut best);
+        assert!((r1 - 1.0).abs() < 1e-12); // first valid = best
+        let r2 = reward(1e12, true, &mut best);
+        assert!(r2 < r1 && r2 > 0.0);
+    }
+
+    #[test]
+    fn ppo_runs_within_budget() {
+        let o = ppo(ctx(800), 5);
+        assert_eq!(o.method, "ppo");
+        assert!(o.evals <= 800);
+    }
+
+    #[test]
+    fn dqn_runs_within_budget() {
+        let o = dqn(ctx(500), 6);
+        assert_eq!(o.method, "dqn");
+        assert!(o.evals <= 500);
+    }
+
+    #[test]
+    fn rl_baselines_suffer_sparse_rewards() {
+        // The paper's argument: RL drowns in invalid points of the raw
+        // space (sparse rewards). Valid-exploration stays low.
+        let p = ppo(ctx(2_000), 8);
+        let d = dqn(ctx(2_000), 8);
+        assert!(p.valid_ratio() < 0.7, "ppo valid {}", p.valid_ratio());
+        assert!(d.valid_ratio() < 0.7, "dqn valid {}", d.valid_ratio());
+    }
+}

@@ -1,0 +1,214 @@
+//! The *raw* search space the classical baselines operate on.
+//!
+//! The paper's PSO/MCTS/TBPSA/PPO/DQN baselines explore the design space
+//! as characterized in §III.B — direct tile values, no prime-factor
+//! encoding — which is precisely why they drown in invalid points (the
+//! sparse-reward problem the paper highlights). Giving them SparseMap's
+//! encoding would quietly hand them the paper's first contribution, so
+//! they search [`DirectSpec`] instead.
+
+use super::direct::DirectSpec;
+use crate::genome::spec::FORMAT_GENES_PER_TENSOR;
+use crate::genome::Design;
+use crate::mapping::NUM_MAP_LEVELS;
+use crate::model::EvalResult;
+use crate::search::EvalContext;
+use crate::workload::Workload;
+
+/// Adapter bundling the direct genome spec with its workload.
+pub struct DirectSpace {
+    pub spec: DirectSpec,
+    pub workload: Workload,
+    /// Divisor sets per dimension — tile genes are snapped to divisors of
+    /// their dimension (the natural discretization of a tile size; the
+    /// joint product constraint still kills most combinations).
+    divisors: Vec<Vec<u32>>,
+}
+
+impl DirectSpace {
+    pub fn new(ctx: &EvalContext, seed: u64) -> DirectSpace {
+        let workload = ctx.workload().clone();
+        let spec = DirectSpec::new(&workload, seed);
+        let divisors = spec
+            .dim_sizes
+            .iter()
+            .map(|&n| (1..=n as u32).filter(|d| n as u32 % d == 0).collect())
+            .collect();
+        DirectSpace { spec, workload, divisors }
+    }
+
+    /// Snap a continuous tile-gene proposal to the nearest divisor of its
+    /// dimension; non-tile genes round + clamp.
+    pub fn snap(&self, i: usize, x: f64) -> u32 {
+        let (lo, hi) = self.bounds(i);
+        let v = (x.round() as i64).clamp(lo as i64, hi as i64) as u32;
+        if i >= self.spec.tile_start && i < self.spec.format_start {
+            let dim = (i - self.spec.tile_start) % self.spec.rank;
+            *self.divisors[dim]
+                .iter()
+                .min_by_key(|&&d| (d as i64 - v as i64).unsigned_abs())
+                .unwrap()
+        } else {
+            v
+        }
+    }
+
+    /// Sample one action for gene `i` (used by rollouts). Tile genes are
+    /// sampled with a small-divisor bias (u² index) — per-level tile
+    /// factors multiply up, so unbiased sampling would overshoot the
+    /// dimension almost surely and the rollout would never see a reward.
+    pub fn sample_action(&self, i: usize, rng: &mut crate::util::rng::Pcg64) -> u32 {
+        if i >= self.spec.tile_start && i < self.spec.format_start {
+            let dim = (i - self.spec.tile_start) % self.spec.rank;
+            let divs = &self.divisors[dim];
+            let u = rng.f64();
+            divs[((u * u * divs.len() as f64) as usize).min(divs.len() - 1)]
+        } else {
+            let (lo, hi) = self.bounds(i);
+            rng.range_u32(lo, hi)
+        }
+    }
+
+    /// Is gene `i` a tile gene?
+    pub fn is_tile_gene(&self, i: usize) -> bool {
+        i >= self.spec.tile_start && i < self.spec.format_start
+    }
+
+    pub fn len(&self) -> usize {
+        self.spec.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spec.len == 0
+    }
+
+    /// Inclusive value bounds of gene `i`.
+    pub fn bounds(&self, i: usize) -> (u32, u32) {
+        let s = &self.spec;
+        if i < NUM_MAP_LEVELS {
+            (1, s.perm_table.len() as u32)
+        } else if i < s.format_start {
+            let dim = (i - s.tile_start) % s.rank;
+            (1, s.dim_sizes[dim] as u32)
+        } else if i < s.sg_start {
+            (0, 4)
+        } else {
+            (0, 6)
+        }
+    }
+
+    /// A discretized action set for tree/tabular methods (MCTS, PPO, DQN):
+    /// divisors for tile genes (subsampled when plentiful), the full range
+    /// for narrow genes, log-spaced values otherwise.
+    pub fn actions(&self, i: usize, max_actions: usize) -> Vec<u32> {
+        if i >= self.spec.tile_start && i < self.spec.format_start {
+            let dim = (i - self.spec.tile_start) % self.spec.rank;
+            let divs = &self.divisors[dim];
+            if divs.len() <= max_actions {
+                return divs.clone();
+            }
+            let mut out: Vec<u32> = (0..max_actions)
+                .map(|k| divs[k * (divs.len() - 1) / (max_actions - 1)])
+                .collect();
+            out.dedup();
+            return out;
+        }
+        let (lo, hi) = self.bounds(i);
+        let width = (hi - lo + 1) as usize;
+        if width <= max_actions {
+            return (lo..=hi).collect();
+        }
+        let mut out: Vec<u32> = (0..max_actions)
+            .map(|k| {
+                let f = k as f64 / (max_actions - 1) as f64;
+                let v = (lo as f64) * ((hi as f64) / (lo as f64).max(1.0)).powf(f);
+                (v.round() as u32).clamp(lo, hi)
+            })
+            .collect();
+        out.dedup();
+        out
+    }
+
+    /// Decode with the L1_T tiles *derived* as the remainder quotient —
+    /// how one actually implements a direct tiling search (choose the
+    /// four inner levels, let the outermost temporal level absorb the
+    /// rest). Still dead whenever the inner product doesn't divide the
+    /// dimension, which is the common case.
+    pub fn decode(&self, genome: &[u32]) -> Option<Design> {
+        let s = &self.spec;
+        let mut g = genome.to_vec();
+        for dim in 0..s.rank {
+            let inner: u64 = (1..NUM_MAP_LEVELS)
+                .map(|l| g[s.tile_start + l * s.rank + dim] as u64)
+                .product();
+            let size = s.dim_sizes[dim];
+            if inner == 0 || size % inner != 0 {
+                return None; // tiling violation: dead individual
+            }
+            g[s.tile_start + dim] = (size / inner) as u32; // L1_T derived
+        }
+        s.decode(&self.workload, &g)
+    }
+
+    /// Evaluate direct genomes: decode (tiling violations are dead on
+    /// arrival) and charge the context budget.
+    pub fn eval(&self, ctx: &mut EvalContext, genomes: &[Vec<u32>]) -> Vec<EvalResult> {
+        let designs: Vec<Option<Design>> =
+            genomes.iter().map(|g| self.decode(g)).collect();
+        ctx.eval_designs(genomes, &designs)
+    }
+}
+
+/// Sanity constant shared by the discretized baselines.
+pub const MAX_ACTIONS: usize = 24;
+pub const FORMAT_GENES: usize = FORMAT_GENES_PER_TENSOR;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::Backend;
+    use crate::util::rng::Pcg64;
+
+    fn space() -> (DirectSpace, EvalContext) {
+        let w = Workload::spmm("t", 16, 32, 16, 0.3, 0.3);
+        let ctx = EvalContext::new(Backend::native(w, Platform::mobile()), 5_000);
+        let s = DirectSpace::new(&ctx, 1);
+        (s, ctx)
+    }
+
+    #[test]
+    fn bounds_cover_all_segments() {
+        let (s, _) = space();
+        assert_eq!(s.bounds(0), (1, 6)); // 3! permutations
+        let (lo, hi) = s.bounds(s.spec.tile_start);
+        assert_eq!((lo, hi), (1, 16)); // M dim
+        assert_eq!(s.bounds(s.spec.format_start), (0, 4));
+        assert_eq!(s.bounds(s.spec.sg_start), (0, 6));
+    }
+
+    #[test]
+    fn actions_quantize_wide_ranges() {
+        let w = Workload::spmm("big", 12_288, 24_576, 12_288, 0.1, 0.1);
+        let ctx = EvalContext::new(Backend::native(w, Platform::cloud()), 10);
+        let s = DirectSpace::new(&ctx, 2);
+        let acts = s.actions(s.spec.tile_start, MAX_ACTIONS);
+        assert!(acts.len() <= MAX_ACTIONS);
+        assert!(acts.len() >= MAX_ACTIONS / 2);
+        assert_eq!(acts[0], 1);
+        assert_eq!(*acts.last().unwrap(), 12_288);
+        assert!(acts.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn eval_charges_budget_and_marks_dead() {
+        let (s, mut ctx) = space();
+        let mut rng = Pcg64::seeded(3);
+        let genomes: Vec<Vec<u32>> = (0..100).map(|_| s.spec.random(&mut rng)).collect();
+        let results = s.eval(&mut ctx, &genomes);
+        assert_eq!(ctx.used(), 100);
+        // Random direct genomes are overwhelmingly dead (tiling).
+        let dead = results.iter().filter(|r| !r.valid).count();
+        assert!(dead > 80, "only {dead}/100 dead");
+    }
+}

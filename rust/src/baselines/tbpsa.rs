@@ -1,0 +1,122 @@
+//! TBPSA baseline — Test-Based Population Size Adaptation (the
+//! noisy-optimization evolution strategy from Nevergrad, used as a
+//! baseline in Fig. 17a), over the raw direct-encoded space.
+
+use super::space::DirectSpace;
+use crate::search::{EvalContext, Outcome};
+use crate::util::rng::Pcg64;
+
+pub fn tbpsa(mut ctx: EvalContext, seed: u64) -> Outcome {
+    let space = DirectSpace::new(&ctx, seed);
+    let mut rng = Pcg64::seeded(seed);
+    let n = space.len();
+    let lambda = 30usize;
+    let mu = 8usize;
+
+    let lo: Vec<f64> = (0..n).map(|i| space.bounds(i).0 as f64).collect();
+    let hi: Vec<f64> = (0..n).map(|i| space.bounds(i).1 as f64).collect();
+    // Means start at feasible-looking points (see pso.rs — uniform
+    // starts are dead).
+    let mut mean: Vec<f64> =
+        (0..n).map(|i| space.sample_action(i, &mut rng) as f64).collect();
+    // Tile genes explore in small absolute steps (a few divisor hops);
+    // wide Gaussians there land on dead products almost surely.
+    let mut sigma: Vec<f64> = (0..n)
+        .map(|i| {
+            let base = (hi[i] - lo[i]).max(1.0);
+            if space.is_tile_gene(i) { (base / 64.0).clamp(1.0, 8.0) } else { base / 3.0 }
+        })
+        .collect();
+
+    let mut dead_iters = 0usize;
+    while !ctx.exhausted() {
+        let samples: Vec<Vec<f64>> = (0..lambda)
+            .map(|_| {
+                (0..n)
+                    .map(|i| (mean[i] + sigma[i] * rng.normal()).clamp(lo[i], hi[i]))
+                    .collect()
+            })
+            .collect();
+        let genomes: Vec<Vec<u32>> = samples
+            .iter()
+            .map(|s| (0..n).map(|i| space.snap(i, s[i])).collect())
+            .collect();
+        let results = space.eval(&mut ctx, &genomes);
+        if results.is_empty() {
+            break;
+        }
+        // Restart: if the distribution has drifted into an all-dead
+        // region for several iterations, re-seed the mean (standard
+        // restart heuristic for noisy ES).
+        if results.iter().all(|r| !r.valid) {
+            dead_iters += 1;
+            if dead_iters >= 5 {
+                for (d, m) in mean.iter_mut().enumerate() {
+                    *m = space.sample_action(d, &mut rng) as f64;
+                }
+                dead_iters = 0;
+                continue;
+            }
+        } else {
+            dead_iters = 0;
+        }
+        let mut scored: Vec<(f64, usize)> = results
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (if r.valid { r.edp } else { f64::INFINITY }, i))
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let elites: Vec<&Vec<f64>> =
+            scored.iter().take(mu).map(|&(_, i)| &samples[i]).collect();
+
+        // Recenter on the elite mean; adapt sigma toward elite spread
+        // (floored so the search never collapses while invalids dominate).
+        for d in 0..n {
+            let m = elites.iter().map(|e| e[d]).sum::<f64>() / elites.len() as f64;
+            let var = elites.iter().map(|e| (e[d] - m) * (e[d] - m)).sum::<f64>()
+                / elites.len() as f64;
+            mean[d] = m;
+            let floor = if space.is_tile_gene(d) {
+                0.5
+            } else {
+                (hi[d] - lo[d]).max(1.0) * 0.02
+            };
+            sigma[d] = (0.7 * sigma[d] + 0.3 * var.sqrt()).max(floor);
+        }
+    }
+    ctx.outcome("tbpsa")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::Backend;
+    use crate::workload::Workload;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("t", 16, 32, 16, 0.3, 0.3);
+        EvalContext::new(Backend::native(w, Platform::mobile()), budget)
+    }
+
+    #[test]
+    fn tbpsa_runs_within_budget() {
+        let o = tbpsa(ctx(900), 3);
+        assert_eq!(o.method, "tbpsa");
+        assert!(o.evals <= 900);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = tbpsa(ctx(600), 7);
+        let b = tbpsa(ctx(600), 7);
+        assert_eq!(a.best_edp, b.best_edp);
+        assert_eq!(a.valid_evals, b.valid_evals);
+    }
+
+    #[test]
+    fn mostly_dead_in_raw_space() {
+        let o = tbpsa(ctx(1_500), 4);
+        assert!(o.valid_ratio() < 0.7, "valid ratio {}", o.valid_ratio());
+    }
+}

@@ -1,0 +1,14 @@
+//! The SparseMap evolution strategy (§IV): sensitivity calibration,
+//! high-sensitivity hypercube initialization, annealing mutation,
+//! sensitivity-aware crossover and the generational loop.
+
+pub mod hypercube;
+pub mod operators;
+pub mod population;
+pub mod sensitivity;
+pub mod sparsemap;
+
+pub use hypercube::{HshiConfig, HshiResult};
+pub use population::{Individual, lhs_init};
+pub use sensitivity::{CalibConfig, Sensitivity};
+pub use sparsemap::{run_sparsemap, EsConfig, EsVariant, SparseMapSearch};

@@ -1,0 +1,148 @@
+//! Customized evolutionary operators (§IV.E): annealing mutation and
+//! sensitivity-aware crossover.
+
+use crate::genome::{ops, GenomeSpec};
+use crate::util::rng::Pcg64;
+
+/// Eq. 6: probability that a mutation lands in the *high-sensitivity*
+/// segment at generation `g` of `total` — starts at 0.8 and anneals to 0.
+pub fn p_high(g: usize, total: usize) -> f64 {
+    let phi = if total == 0 { 1.0 } else { g as f64 / total as f64 };
+    (0.8 * (-phi).exp() * (1.0 - phi)).clamp(0.0, 1.0)
+}
+
+/// Annealing mutation: choose the high- or low-sensitivity segment with
+/// probability `p_high(g)` / `1 - p_high(g)` (Eq. 6/7), then mutate one
+/// gene of that segment uniformly within its range.
+pub fn annealing_mutation(
+    spec: &GenomeSpec,
+    genome: &mut [u32],
+    high: &[usize],
+    low: &[usize],
+    g: usize,
+    total: usize,
+    rng: &mut Pcg64,
+) {
+    let use_high = !high.is_empty() && (low.is_empty() || rng.chance(p_high(g, total)));
+    let segment = if use_high { high } else { low };
+    if segment.is_empty() {
+        // No segmentation available: plain point mutation.
+        ops::point_mutation(spec, genome, 0.0, rng);
+        return;
+    }
+    let idx = *rng.choose(segment);
+    ops::mutate_gene(spec, genome, idx, rng);
+}
+
+/// Crossover cut points aligned with the *natural boundaries of
+/// high-sensitivity segments*: positions where gene sensitivity class
+/// changes. Cutting there never fragments a contiguous high-sensitivity
+/// run, which is what produces dead offspring (§IV.E).
+pub fn sensitivity_boundaries(len: usize, high: &[usize]) -> Vec<usize> {
+    let is_high: Vec<bool> = {
+        let mut v = vec![false; len];
+        for &i in high {
+            if i < len {
+                v[i] = true;
+            }
+        }
+        v
+    };
+    (1..len).filter(|&i| is_high[i] != is_high[i - 1]).collect()
+}
+
+/// Sensitivity-aware crossover: single cut at a sensitivity boundary.
+pub fn sensitivity_aware_crossover(
+    a: &[u32],
+    b: &[u32],
+    high: &[usize],
+    rng: &mut Pcg64,
+) -> (Vec<u32>, Vec<u32>) {
+    let bounds = sensitivity_boundaries(a.len(), high);
+    ops::boundary_crossover(a, b, &bounds, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Workload;
+
+    #[test]
+    fn p_high_anneals_to_zero() {
+        assert!((p_high(0, 100) - 0.8).abs() < 1e-12);
+        assert!(p_high(50, 100) < p_high(10, 100));
+        assert!(p_high(100, 100) < 1e-12);
+        // Monotone decreasing.
+        let vals: Vec<f64> = (0..=100).map(|g| p_high(g, 100)).collect();
+        assert!(vals.windows(2).all(|w| w[1] <= w[0] + 1e-15));
+    }
+
+    #[test]
+    fn early_mutations_prefer_high_segment() {
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        let spec = GenomeSpec::for_workload(&w);
+        let high: Vec<usize> = (0..5).collect(); // pretend perms are high
+        let low: Vec<usize> = (5..spec.len()).collect();
+        let mut rng = Pcg64::seeded(2);
+        let base = spec.random(&mut rng);
+        let mut high_hits = 0;
+        let n = 400;
+        for _ in 0..n {
+            let mut g = base.clone();
+            annealing_mutation(&spec, &mut g, &high, &low, 0, 100, &mut rng);
+            let changed: Vec<usize> =
+                (0..g.len()).filter(|&i| g[i] != base[i]).collect();
+            assert!(changed.len() <= 1);
+            if changed.first().map(|&i| i < 5).unwrap_or(false) {
+                high_hits += 1;
+            }
+        }
+        // P_h(0) = 0.8 — expect roughly 80% (allowing sampling noise and
+        // same-value re-rolls).
+        assert!(high_hits > n / 2, "high_hits = {high_hits}/{n}");
+    }
+
+    #[test]
+    fn late_mutations_prefer_low_segment() {
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        let spec = GenomeSpec::for_workload(&w);
+        let high: Vec<usize> = (0..5).collect();
+        let low: Vec<usize> = (5..spec.len()).collect();
+        let mut rng = Pcg64::seeded(3);
+        let base = spec.random(&mut rng);
+        let mut high_hits = 0;
+        for _ in 0..400 {
+            let mut g = base.clone();
+            annealing_mutation(&spec, &mut g, &high, &low, 95, 100, &mut rng);
+            if (0..5).any(|i| g[i] != base[i]) {
+                high_hits += 1;
+            }
+        }
+        assert!(high_hits < 40, "high_hits = {high_hits}");
+    }
+
+    #[test]
+    fn boundaries_at_class_changes() {
+        // genes: L L H H L  -> boundaries at 2 and 4.
+        let b = sensitivity_boundaries(5, &[2, 3]);
+        assert_eq!(b, vec![2, 4]);
+        // All low: no boundaries.
+        assert!(sensitivity_boundaries(5, &[]).is_empty());
+    }
+
+    #[test]
+    fn crossover_never_splits_high_run() {
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        let spec = GenomeSpec::for_workload(&w);
+        let high: Vec<usize> = vec![6, 7, 8]; // a contiguous high run
+        let mut rng = Pcg64::seeded(4);
+        let a: Vec<u32> = spec.ranges.iter().map(|r| r.lo).collect();
+        let b: Vec<u32> = spec.ranges.iter().map(|r| r.hi).collect();
+        for _ in 0..60 {
+            let (c1, _) = sensitivity_aware_crossover(&a, &b, &high, &mut rng);
+            // Within the high run, all genes must come from one parent.
+            let from_a = high.iter().filter(|&&i| c1[i] == a[i]).count();
+            assert!(from_a == 0 || from_a == high.len(), "run fragmented");
+        }
+    }
+}

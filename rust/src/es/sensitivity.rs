@@ -1,0 +1,209 @@
+//! Monte-Carlo high-sensitivity gene calibration (§IV.D, Eq. 2–5).
+//!
+//! For each gene v: fix all other genes to a random combination, sweep v
+//! over Monte-Carlo samples of its range, evaluate, and average the
+//! normalized EDP variation ratio between random pairs of valid samples
+//! (Eq. 2). Repeat over `trials` random contexts and average (Eq. 3).
+//! Genes above the 3/4-quantile threshold (Eq. 4/5) are *high-sensitivity*.
+
+use crate::genome::Genome;
+use crate::search::EvalContext;
+use crate::util::rng::Pcg64;
+
+/// Calibration output.
+#[derive(Clone, Debug)]
+pub struct Sensitivity {
+    /// Per-gene sensitivity S(v).
+    pub scores: Vec<f64>,
+    /// Indices of high-sensitivity genes (Eq. 4).
+    pub high: Vec<usize>,
+    /// Indices of low-sensitivity genes (Eq. 5).
+    pub low: Vec<usize>,
+    /// Valid genomes encountered during calibration — reused by the
+    /// hypercube initializer for low-sensitivity gene assignments.
+    pub valid_pool: Vec<Genome>,
+    /// Evaluations spent (the <10%-of-budget overhead claim, E8).
+    pub evals_spent: usize,
+}
+
+/// Calibration hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibConfig {
+    /// Monte-Carlo samples of each gene per trial.
+    pub samples_per_gene: usize,
+    /// Independent random contexts per gene (the paper's I).
+    pub trials: usize,
+    /// Random EDP-pairs drawn per trial for the variation ratio.
+    pub pairs: usize,
+    /// Hard cap on evaluations spent (0 = unlimited). SparseMap sets
+    /// this to ~10% of the search budget — the paper's E8 overhead claim.
+    pub max_evals: usize,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig { samples_per_gene: 6, trials: 3, pairs: 8, max_evals: 0 }
+    }
+}
+
+/// Run the calibration. Consumes budget from `ctx`.
+pub fn calibrate(ctx: &mut EvalContext, cfg: CalibConfig, rng: &mut Pcg64) -> Sensitivity {
+    let spec = ctx.spec.clone();
+    let n = spec.len();
+    let mut scores = vec![0.0f64; n];
+    let mut valid_pool: Vec<Genome> = Vec::new();
+    let start_evals = ctx.used();
+
+    let over_cap =
+        |ctx: &EvalContext| cfg.max_evals > 0 && ctx.used() - start_evals >= cfg.max_evals;
+
+    // Visit genes in random order so a budget cap doesn't systematically
+    // starve the trailing (strategy) genes.
+    let mut gene_order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut gene_order);
+    for gene in gene_order {
+        let range = spec.ranges[gene];
+        if range.width() <= 1 {
+            continue; // constant gene: no sensitivity
+        }
+        let mut trial_scores = Vec::with_capacity(cfg.trials);
+        for _ in 0..cfg.trials {
+            if ctx.exhausted() || over_cap(ctx) {
+                break;
+            }
+            // Fix the other genes to one random context.
+            let context_genome = spec.random(rng);
+            // Monte-Carlo sample of this gene's values (dedup).
+            let k = (cfg.samples_per_gene as u32).min(range.width()) as usize;
+            let mut values: Vec<u32> = if (range.width() as usize) <= cfg.samples_per_gene {
+                (range.lo..=range.hi).collect()
+            } else {
+                let mut vs: Vec<u32> = (0..k).map(|_| range.sample(rng)).collect();
+                vs.sort_unstable();
+                vs.dedup();
+                vs
+            };
+            if values.len() < 2 {
+                continue;
+            }
+            let genomes: Vec<Genome> = values
+                .iter()
+                .map(|&v| {
+                    let mut g = context_genome.clone();
+                    g[gene] = v;
+                    g
+                })
+                .collect();
+            let results = ctx.eval_batch(&genomes);
+            // Valid (value, EDP) pairs — dead points are excluded (V_d).
+            let mut vd: Vec<(f64, f64)> = Vec::new();
+            for ((v, g), r) in values.iter().zip(&genomes).zip(&results) {
+                if r.valid {
+                    vd.push((*v as f64, r.edp));
+                    valid_pool.push(g.clone());
+                }
+            }
+            values.clear();
+            if vd.len() < 2 {
+                continue;
+            }
+            // Average normalized EDP variation ratio over random pairs.
+            let mut acc = 0.0;
+            let mut cnt = 0;
+            for _ in 0..cfg.pairs {
+                let i = rng.index(vd.len());
+                let mut j = rng.index(vd.len());
+                if i == j {
+                    j = (j + 1) % vd.len();
+                }
+                let (v1, e1) = vd[i];
+                let (v2, e2) = vd[j];
+                if (v1 - v2).abs() < 1e-12 {
+                    continue;
+                }
+                acc += (e1 - e2).abs() / ((v1 - v2).abs() * e1.min(e2));
+                cnt += 1;
+            }
+            if cnt > 0 {
+                trial_scores.push(acc / cnt as f64);
+            }
+        }
+        if !trial_scores.is_empty() {
+            scores[gene] = trial_scores.iter().sum::<f64>() / trial_scores.len() as f64;
+        }
+    }
+
+    let (high, low) = split_by_threshold(&scores);
+    Sensitivity { scores, high, low, valid_pool, evals_spent: ctx.used() - start_evals }
+}
+
+/// Eq. 4/5: high = { v : S(v) > 3/4·(Smax − Smin) + Smin }.
+pub fn split_by_threshold(scores: &[f64]) -> (Vec<usize>, Vec<usize>) {
+    let smax = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let smin = scores.iter().copied().fold(f64::INFINITY, f64::min);
+    if !smax.is_finite() || !smin.is_finite() || (smax - smin) < 1e-30 {
+        // Degenerate: treat everything as low-sensitivity.
+        return (Vec::new(), (0..scores.len()).collect());
+    }
+    let thr = 0.75 * (smax - smin) + smin;
+    let mut high = Vec::new();
+    let mut low = Vec::new();
+    for (i, &s) in scores.iter().enumerate() {
+        if s > thr {
+            high.push(i);
+        } else {
+            low.push(i);
+        }
+    }
+    (high, low)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::{Backend, EvalContext};
+    use crate::workload::Workload;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        EvalContext::new(Backend::native(w, Platform::edge()), budget)
+    }
+
+    #[test]
+    fn threshold_split() {
+        let scores = vec![0.0, 1.0, 10.0, 7.4, 7.6];
+        let (high, low) = split_by_threshold(&scores);
+        assert_eq!(high, vec![2, 4]); // > 7.5
+        assert_eq!(low, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn degenerate_scores_all_low() {
+        let (high, low) = split_by_threshold(&[0.5; 4]);
+        assert!(high.is_empty());
+        assert_eq!(low.len(), 4);
+    }
+
+    #[test]
+    fn calibration_produces_partition_and_pool() {
+        let mut c = ctx(6_000);
+        let mut rng = Pcg64::seeded(11);
+        let s = calibrate(&mut c, CalibConfig::default(), &mut rng);
+        assert_eq!(s.scores.len(), c.spec.len());
+        assert_eq!(s.high.len() + s.low.len(), c.spec.len());
+        assert!(!s.valid_pool.is_empty(), "no valid points found during calibration");
+        assert!(s.evals_spent > 0);
+        // Sensitivities must be finite and non-negative.
+        assert!(s.scores.iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut c = ctx(50);
+        let mut rng = Pcg64::seeded(12);
+        let s = calibrate(&mut c, CalibConfig::default(), &mut rng);
+        assert!(s.evals_spent <= 50);
+        assert!(c.used() <= 50);
+    }
+}

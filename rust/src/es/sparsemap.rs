@@ -1,0 +1,276 @@
+//! The SparseMap search loop (§IV.H, Fig. 16) and its ablation variants.
+
+use super::hypercube::{initialize, HshiConfig};
+use super::operators::{annealing_mutation, sensitivity_aware_crossover};
+use super::population::{evaluate_all, lhs_init, mean_valid_edp, select_top, Individual};
+use super::sensitivity::{calibrate, CalibConfig, Sensitivity};
+use crate::genome::ops;
+use crate::search::{EvalContext, Outcome};
+use crate::util::rng::Pcg64;
+
+/// Which feature set to run — the Fig. 18 ablation arms.
+///
+/// * `Standard` — plain ES over the PFCE genome with LHS initialization,
+///   uniform one-point crossover and uniform mutation. (The paper's
+///   "standard ES" additionally uses a *direct value* encoding; that arm
+///   lives in `baselines::es_direct` since it needs a different genome.)
+/// * `Pfce` — `Standard` + nothing else (encoding is already PFCE here);
+///   kept as an explicit alias for experiment scripts.
+/// * `Full` — PFCE + high-sensitivity hypercube initialization +
+///   annealing mutation + sensitivity-aware crossover (SparseMap proper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EsVariant {
+    Standard,
+    Pfce,
+    Full,
+}
+
+impl EsVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            EsVariant::Standard => "es-std",
+            EsVariant::Pfce => "es-pfce",
+            EsVariant::Full => "sparsemap",
+        }
+    }
+}
+
+/// ES hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct EsConfig {
+    pub population: usize,
+    /// Fraction of the population selected as parents.
+    pub parent_frac: f64,
+    /// Probability an offspring is mutated.
+    pub mutation_prob: f64,
+    pub variant: EsVariant,
+    pub calib: CalibConfig,
+    pub hshi: HshiConfig,
+}
+
+impl Default for EsConfig {
+    fn default() -> Self {
+        EsConfig {
+            population: 100,
+            parent_frac: 0.25,
+            mutation_prob: 0.6,
+            variant: EsVariant::Full,
+            calib: CalibConfig::default(),
+            hshi: HshiConfig::default(),
+        }
+    }
+}
+
+/// The SparseMap searcher.
+pub struct SparseMapSearch {
+    pub ctx: EvalContext,
+    pub cfg: EsConfig,
+    rng: Pcg64,
+}
+
+impl SparseMapSearch {
+    pub fn new(ctx: EvalContext, cfg: EsConfig, seed: u64) -> SparseMapSearch {
+        SparseMapSearch { ctx, cfg, rng: Pcg64::seeded(seed) }
+    }
+
+    /// Run until the context budget is exhausted; returns the outcome.
+    pub fn run(mut self) -> Outcome {
+        let spec = self.ctx.spec.clone();
+        let full = self.cfg.variant == EsVariant::Full;
+        let budget = self.ctx.budget;
+        // Scale the population and initialization overhead to the budget:
+        // calibration ≤ ~10% (E8), HSHI ≤ ~20%.
+        let population = self.cfg.population.min((budget / 8).max(8));
+        self.cfg.population = population;
+
+        // --- initialization -------------------------------------------------
+        let sens: Option<Sensitivity> = if full {
+            let mut calib = self.cfg.calib;
+            if calib.max_evals == 0 {
+                calib.max_evals = (budget / 10).max(40);
+            }
+            Some(calibrate(&mut self.ctx, calib, &mut self.rng))
+        } else {
+            None
+        };
+        let mut init_genomes = if let Some(s) = &sens {
+            let mut h = self.cfg.hshi;
+            h.hypercubes = population;
+            h.tries_per_cube =
+                h.tries_per_cube.min((budget / 5 / population.max(1)).max(1));
+            let r = initialize(&mut self.ctx, s, h, &mut self.rng);
+            let mut pop = r.population;
+            // Top up with random genomes if HSHI under-filled.
+            while pop.len() < population {
+                pop.push(spec.random(&mut self.rng));
+            }
+            pop
+        } else {
+            lhs_init(&spec, population, &mut self.rng)
+        };
+        if full && !init_genomes.is_empty() {
+            // Warm-start seeds: when resources are extremely tight (edge
+            // platform, huge workloads) the valid region can be too thin
+            // for stratified random search — inject the deterministic
+            // heuristic mapping (with and without the manual sparse
+            // strategy) so the population never starts fully dead.
+            let workload = self.ctx.workload().clone();
+            let mapping = crate::baselines::common::heuristic_mapping_genes(&spec, &workload);
+            let manual = crate::baselines::common::manual_strategy_genes(&spec, &workload);
+            let mut seed1 = vec![0u32; spec.len()];
+            for i in 0..spec.len() {
+                seed1[i] = spec.ranges[i].lo;
+            }
+            crate::baselines::common::apply(&mut seed1, &mapping);
+            let mut seed2 = seed1.clone();
+            crate::baselines::common::apply(&mut seed2, &manual);
+            let k = init_genomes.len();
+            init_genomes[k - 1] = seed1;
+            if k >= 2 {
+                init_genomes[k - 2] = seed2;
+            }
+        }
+        let init_genomes = init_genomes;
+        let mut pop: Vec<Individual> = evaluate_all(&mut self.ctx, init_genomes);
+        if let Some(m) = mean_valid_edp(&pop) {
+            self.ctx.telemetry.push_population_mean(m);
+        }
+
+        let (high, low) = match &sens {
+            Some(s) => (s.high.clone(), s.low.clone()),
+            None => (Vec::new(), (0..spec.len()).collect()),
+        };
+
+        // --- generations -----------------------------------------------------
+        // Estimate total generations from the remaining budget so the
+        // annealing schedule spans the whole run.
+        let per_gen = self.cfg.population.max(1);
+        let total_gens = (self.ctx.remaining() / per_gen).max(1);
+        let mut gen = 0;
+        while !self.ctx.exhausted() && gen < total_gens * 4 {
+            let n_parents =
+                ((pop.len() as f64 * self.cfg.parent_frac) as usize).max(2);
+            let parents = select_top(pop.clone(), n_parents);
+
+            // Crossover: fill a fresh offspring pool.
+            let mut offspring = Vec::with_capacity(self.cfg.population);
+            while offspring.len() < self.cfg.population {
+                let pa = &parents[self.rng.index(parents.len())].genome;
+                let pb = &parents[self.rng.index(parents.len())].genome;
+                let (mut c1, mut c2) = if full {
+                    sensitivity_aware_crossover(pa, pb, &high, &mut self.rng)
+                } else {
+                    ops::onepoint_crossover(pa, pb, &mut self.rng)
+                };
+                // Mutation.
+                for c in [&mut c1, &mut c2] {
+                    if self.rng.chance(self.cfg.mutation_prob) {
+                        if full {
+                            annealing_mutation(
+                                &spec, c, &high, &low, gen, total_gens, &mut self.rng,
+                            );
+                        } else {
+                            ops::point_mutation(&spec, c, 0.05, &mut self.rng);
+                        }
+                    }
+                }
+                offspring.push(c1);
+                if offspring.len() < self.cfg.population {
+                    offspring.push(c2);
+                }
+            }
+
+            let children = evaluate_all(&mut self.ctx, offspring);
+            if children.is_empty() {
+                break; // budget exhausted mid-generation
+            }
+            // (μ+λ) survival: parents compete with offspring.
+            pop.extend(children);
+            pop = select_top(pop, self.cfg.population);
+            if let Some(m) = mean_valid_edp(&pop) {
+                self.ctx.telemetry.push_population_mean(m);
+            }
+            gen += 1;
+        }
+
+        self.ctx.outcome(self.cfg.variant.name())
+    }
+}
+
+/// Convenience one-call API.
+pub fn run_sparsemap(ctx: EvalContext, cfg: EsConfig, seed: u64) -> Outcome {
+    SparseMapSearch::new(ctx, cfg, seed).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::Backend;
+    use crate::workload::Workload;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("mm", 64, 128, 64, 0.2, 0.2);
+        EvalContext::new(Backend::native(w, Platform::mobile()), budget)
+    }
+
+    fn small_cfg(variant: EsVariant) -> EsConfig {
+        EsConfig {
+            population: 24,
+            variant,
+            calib: CalibConfig { samples_per_gene: 4, trials: 2, pairs: 4, max_evals: 0 },
+            hshi: HshiConfig { hypercubes: 24, tries_per_cube: 6 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn full_sparsemap_finds_valid_design() {
+        let o = run_sparsemap(ctx(3_000), small_cfg(EsVariant::Full), 7);
+        assert!(o.found_valid(), "no valid design found");
+        assert!(o.evals <= 3_000);
+        assert_eq!(o.method, "sparsemap");
+        assert!(!o.curve.is_empty());
+    }
+
+    #[test]
+    fn standard_es_runs_too() {
+        let o = run_sparsemap(ctx(2_000), small_cfg(EsVariant::Standard), 7);
+        assert_eq!(o.method, "es-std");
+        assert!(o.evals <= 2_000);
+    }
+
+    #[test]
+    fn search_improves_over_random_sampling() {
+        // Same budget: SparseMap's best should beat pure random's best
+        // (with overwhelming probability at this budget).
+        let budget = 3_000;
+        let o = run_sparsemap(ctx(budget), small_cfg(EsVariant::Full), 11);
+        let mut random_ctx = ctx(budget);
+        let mut rng = Pcg64::seeded(11);
+        let genomes: Vec<_> =
+            (0..budget).map(|_| random_ctx.spec.random(&mut rng)).collect();
+        random_ctx.eval_batch(&genomes);
+        let random_best = random_ctx.outcome("random").best_edp;
+        assert!(
+            o.best_edp <= random_best * 1.5,
+            "sparsemap {:.3e} vs random {:.3e}",
+            o.best_edp,
+            random_best
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_sparsemap(ctx(1_200), small_cfg(EsVariant::Full), 42);
+        let b = run_sparsemap(ctx(1_200), small_cfg(EsVariant::Full), 42);
+        assert_eq!(a.best_edp, b.best_edp);
+        assert_eq!(a.best_genome, b.best_genome);
+    }
+
+    #[test]
+    fn population_mean_curve_recorded() {
+        let o = run_sparsemap(ctx(2_000), small_cfg(EsVariant::Full), 3);
+        assert!(o.population_mean_curve.len() >= 2);
+    }
+}

@@ -1,0 +1,247 @@
+//! Genome → design decoding (Fig. 13 bottom half).
+//!
+//! A genome decodes into a [`Design`]: a complete [`Mapping`] plus a
+//! [`SparseStrategy`]. Decoding is *total* — every in-range genome decodes
+//! to a structurally well-formed design (it may still be invalid w.r.t.
+//! resources or compatibility; that is the cost model's verdict, not a
+//! decode failure).
+
+use super::spec::{GeneKind, GenomeSpec, FORMAT_GENES_PER_TENSOR};
+use crate::mapping::{permutation, Mapping, NUM_MAP_LEVELS};
+use crate::sparse::{RankFormat, SgMechanism, SparseStrategy};
+use crate::workload::Workload;
+
+/// A fully decoded accelerator design point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Design {
+    pub mapping: Mapping,
+    pub strategy: SparseStrategy,
+}
+
+/// One materialized rank of a tensor under a mapping: dimension `dim`
+/// tiled at mapping level `level` with extent `extent` (> 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RankId {
+    pub level: usize,
+    pub dim: usize,
+    pub extent: u64,
+}
+
+/// Enumerate the materialized ranks of tensor `t` under `m`, ordered
+/// outer→inner following the loop nest (level order, then the level's
+/// permutation). These are the ranks the per-tensor format stack applies
+/// to — e.g. the paper's example where P's ranks are (M2, K4, K5).
+pub fn tensor_ranks(m: &Mapping, w: &Workload, t: usize) -> Vec<RankId> {
+    let mut out = Vec::new();
+    for level in 0..NUM_MAP_LEVELS {
+        for &dim in &m.perm[level] {
+            let extent = m.tile[level][dim];
+            if extent > 1 && w.relevant(t, dim) {
+                out.push(RankId { level, dim, extent });
+            }
+        }
+    }
+    out
+}
+
+/// Decode a genome into a design. `genome` must be in-range for `spec`.
+pub fn decode(spec: &GenomeSpec, w: &Workload, genome: &[u32]) -> Design {
+    debug_assert!(spec.in_range(genome), "genome out of range");
+    let d = w.rank();
+
+    // --- Mapping: permutations + prime-factor tiling -------------------
+    let mut tile = vec![vec![1u64; d]; NUM_MAP_LEVELS];
+    let mut perm = Vec::with_capacity(NUM_MAP_LEVELS);
+    for level in 0..NUM_MAP_LEVELS {
+        perm.push(permutation::decode(genome[level] as u64, d));
+    }
+    for (i, kind) in spec.kinds.iter().enumerate() {
+        if let GeneKind::Factor { dim, prime, .. } = kind {
+            let level = (genome[i] as usize - 1).min(NUM_MAP_LEVELS - 1);
+            tile[level][*dim] *= prime;
+        }
+    }
+    let mapping = Mapping { tile, perm };
+
+    // --- Sparse strategy ------------------------------------------------
+    let mut formats: [Vec<RankFormat>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for (t, fmts) in formats.iter_mut().enumerate() {
+        let ranks = tensor_ranks(&mapping, w, t);
+        let genes = &genome
+            [spec.format_start + t * FORMAT_GENES_PER_TENSOR..]
+            [..FORMAT_GENES_PER_TENSOR];
+        *fmts = assign_formats(&ranks, genes);
+    }
+    let sg = [
+        SgMechanism::from_gene(genome[spec.sg_start]),
+        SgMechanism::from_gene(genome[spec.sg_start + 1]),
+        SgMechanism::from_gene(genome[spec.sg_start + 2]),
+    ];
+
+    Design { mapping, strategy: SparseStrategy { formats, sg } }
+}
+
+/// Per-rank format assignment (§IV.F): with k ≤ 5 ranks, the *last* k
+/// genes of the 5-gene segment apply (outer→inner); with k > 5, the five
+/// genes cover the first five ranks and deeper ranks default to
+/// uncompressed.
+fn assign_formats(ranks: &[RankId], genes: &[u32]) -> Vec<RankFormat> {
+    let k = ranks.len();
+    let g = genes.len(); // == 5
+    if k <= g {
+        genes[g - k..].iter().map(|&x| RankFormat::from_gene(x)).collect()
+    } else {
+        let mut out: Vec<RankFormat> =
+            genes.iter().map(|&x| RankFormat::from_gene(x)).collect();
+        out.extend(std::iter::repeat(RankFormat::Uncompressed).take(k - g));
+        out
+    }
+}
+
+/// Pretty-print a decoded design (mapping loop nest + strategy line).
+pub fn describe(design: &Design, w: &Workload) -> String {
+    format!("{}strategy: {}\n", design.mapping.render(w), design.strategy.describe())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{TENSOR_P, TENSOR_Q, TENSOR_Z};
+
+    fn setup() -> (Workload, GenomeSpec) {
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        let s = GenomeSpec::for_workload(&w);
+        (w, s)
+    }
+
+    /// Build the paper's Fig. 13 example: M2=4, K4=2, K5=4, N3=4.
+    fn fig13_genome(w: &Workload, spec: &GenomeSpec) -> Vec<u32> {
+        let mut g = vec![1u32; spec.len()];
+        // Clear strategy segments (vec![1] would mean bitmask/gate).
+        for i in spec.format_start..spec.len() {
+            g[i] = 0;
+        }
+        // Factors: M has [2,2], K has [2,2,2], N has [2,2].
+        // Assign M's two factors to level 2 (L2_T -> gene value 2).
+        let mut fi = spec.factor_start;
+        g[fi] = 2;
+        g[fi + 1] = 2;
+        fi += 2;
+        // K: first factor -> level 4 (L3_T), last two -> level 5 (L3_S).
+        g[fi] = 4;
+        g[fi + 1] = 5;
+        g[fi + 2] = 5;
+        fi += 3;
+        // N: both factors -> level 3 (L2_S).
+        g[fi] = 3;
+        g[fi + 1] = 3;
+        // Formats for P: last three genes = B, B, CP (ranks M2,K4,K5).
+        let pf = spec.format_start;
+        g[pf + 2] = 1; // B
+        g[pf + 3] = 1; // B
+        g[pf + 4] = 3; // CP
+        // SG: GLB = Skip Q<-P (gene 5), PEBuf = none, C = Gate both (3).
+        g[spec.sg_start] = 5;
+        g[spec.sg_start + 2] = 3;
+        let _ = w;
+        g
+    }
+
+    #[test]
+    fn fig13_mapping_decodes() {
+        let (w, spec) = setup();
+        let g = fig13_genome(&w, &spec);
+        let d = decode(&spec, &w, &g);
+        assert!(d.mapping.respects(&w));
+        assert_eq!(d.mapping.tile[1][0], 4); // M2 = 4
+        assert_eq!(d.mapping.tile[3][1], 2); // K4 = 2
+        assert_eq!(d.mapping.tile[4][1], 4); // K5 = 4
+        assert_eq!(d.mapping.tile[2][2], 4); // N3 = 4
+    }
+
+    #[test]
+    fn fig13_ranks_and_formats() {
+        let (w, spec) = setup();
+        let g = fig13_genome(&w, &spec);
+        let d = decode(&spec, &w, &g);
+        let ranks = tensor_ranks(&d.mapping, &w, TENSOR_P);
+        assert_eq!(ranks.len(), 3); // M2, K4, K5
+        assert_eq!((ranks[0].level, ranks[0].dim), (1, 0));
+        assert_eq!((ranks[1].level, ranks[1].dim), (3, 1));
+        assert_eq!((ranks[2].level, ranks[2].dim), (4, 1));
+        assert_eq!(
+            d.strategy.formats[TENSOR_P],
+            vec![RankFormat::Bitmask, RankFormat::Bitmask, RankFormat::CoordinatePayload]
+        );
+        // Q's ranks: N3, K4, K5.
+        assert_eq!(tensor_ranks(&d.mapping, &w, TENSOR_Q).len(), 3);
+        // Z's ranks: M2, N3.
+        assert_eq!(tensor_ranks(&d.mapping, &w, TENSOR_Z).len(), 2);
+        assert_eq!(d.strategy.sg[0], SgMechanism::SkipQfromP);
+        assert_eq!(d.strategy.sg[1], SgMechanism::None);
+        assert_eq!(d.strategy.sg[2], SgMechanism::GateBoth);
+    }
+
+    #[test]
+    fn every_random_genome_decodes_and_tiles() {
+        let (w, spec) = setup();
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        for _ in 0..300 {
+            let g = spec.random(&mut rng);
+            let d = decode(&spec, &w, &g);
+            assert!(d.mapping.respects(&w)); // prime-factor encoding guarantee
+            for t in 0..3 {
+                assert_eq!(
+                    d.strategy.formats[t].len(),
+                    tensor_ranks(&d.mapping, &w, t).len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_order_follows_permutation() {
+        let (w, spec) = setup();
+        let mut g = vec![1u32; spec.len()];
+        // Put M and K both at L1_T; permutation decides rank order.
+        for i in 0..2 {
+            g[spec.factor_start + i] = 1;
+        }
+        for i in 2..5 {
+            g[spec.factor_start + i] = 1;
+        }
+        g[0] = permutation::encode(&[1, 0, 2]) as u32; // K before M at L1
+        let d = decode(&spec, &w, &g);
+        let ranks = tensor_ranks(&d.mapping, &w, TENSOR_P);
+        assert_eq!(ranks[0].dim, 1); // K rank first (outer)
+        assert_eq!(ranks[1].dim, 0);
+    }
+
+    #[test]
+    fn many_ranks_pad_with_uncompressed() {
+        // Rank explosion: B dim + splits across all levels -> > 5 ranks.
+        let w = Workload::spbmm("b", 4, 4, 16, 4, 0.5, 0.5);
+        let spec = GenomeSpec::for_workload(&w);
+        let mut g = vec![1u32; spec.len()];
+        // Spread every factor across levels 1..5 cyclically.
+        let mut level = 1;
+        for i in spec.factor_start..spec.format_start {
+            g[i] = level;
+            level = level % 5 + 1;
+        }
+        // All format genes compressed (B).
+        for i in spec.format_start..spec.sg_start {
+            g[i] = 1;
+        }
+        let d = decode(&spec, &w, &g);
+        for t in 0..3 {
+            let ranks = tensor_ranks(&d.mapping, &w, t);
+            if ranks.len() > 5 {
+                // Deeper ranks must be uncompressed.
+                assert!(d.strategy.formats[t][5..]
+                    .iter()
+                    .all(|f| *f == RankFormat::Uncompressed));
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Genome encoding/decoding (§IV.B/C/F/G): a sparse tensor accelerator
+//! design as a 1-D integer array.
+//!
+//! * [`spec`] — per-workload gene layout and ranges (prime-factor genes
+//!   guarantee dimension-tiling constraints by construction);
+//! * [`decode`] — genome → [`decode::Design`] (mapping + sparse strategy);
+//! * [`ops`] — elementary mutation/crossover building blocks.
+
+pub mod decode;
+pub mod ops;
+pub mod spec;
+
+pub use decode::{decode, describe, tensor_ranks, Design, RankId};
+pub use spec::{GeneKind, GeneRange, GenomeSpec, FORMAT_GENES_PER_TENSOR, SG_SITES};
+
+/// A genome is a plain gene vector; all structure lives in [`GenomeSpec`].
+pub type Genome = Vec<u32>;

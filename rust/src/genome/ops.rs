@@ -1,0 +1,183 @@
+//! Elementary genetic operators shared by SparseMap and the baselines:
+//! point mutation, segment-boundary crossover, neighborhood moves.
+//! (The *customized* operators — annealing mutation and sensitivity-aware
+//! crossover — live in `es::operators` and build on these.)
+
+use super::spec::GenomeSpec;
+use crate::util::rng::Pcg64;
+
+/// Mutate `rate·len` genes (at least one) uniformly within their ranges.
+pub fn point_mutation(spec: &GenomeSpec, genome: &mut [u32], rate: f64, rng: &mut Pcg64) {
+    let n = ((spec.len() as f64 * rate).round() as usize).max(1);
+    for _ in 0..n {
+        let i = rng.index(spec.len());
+        genome[i] = spec.ranges[i].sample(rng);
+    }
+}
+
+/// Mutate exactly the gene at `i` to a *different* in-range value when the
+/// range allows it.
+pub fn mutate_gene(spec: &GenomeSpec, genome: &mut [u32], i: usize, rng: &mut Pcg64) {
+    let r = spec.ranges[i];
+    if r.width() <= 1 {
+        return;
+    }
+    loop {
+        let v = r.sample(rng);
+        if v != genome[i] {
+            genome[i] = v;
+            return;
+        }
+    }
+}
+
+/// Local move: nudge gene `i` by ±1 within range (wrapping). Preserves the
+/// Cantor-locality property for permutation genes.
+pub fn nudge_gene(spec: &GenomeSpec, genome: &mut [u32], i: usize, rng: &mut Pcg64) {
+    let r = spec.ranges[i];
+    if r.width() <= 1 {
+        return;
+    }
+    let delta: i64 = if rng.chance(0.5) { 1 } else { -1 };
+    let span = r.width() as i64;
+    let cur = (genome[i] - r.lo) as i64;
+    genome[i] = r.lo + ((cur + delta).rem_euclid(span)) as u32;
+}
+
+/// Single-point crossover at a uniformly random cut.
+pub fn onepoint_crossover(a: &[u32], b: &[u32], rng: &mut Pcg64) -> (Vec<u32>, Vec<u32>) {
+    assert_eq!(a.len(), b.len());
+    let cut = 1 + rng.index(a.len() - 1);
+    let mut c1 = a[..cut].to_vec();
+    c1.extend_from_slice(&b[cut..]);
+    let mut c2 = b[..cut].to_vec();
+    c2.extend_from_slice(&a[cut..]);
+    (c1, c2)
+}
+
+/// Crossover cutting only at the provided boundaries (used by
+/// sensitivity-aware crossover with high-sensitivity segment boundaries).
+pub fn boundary_crossover(
+    a: &[u32],
+    b: &[u32],
+    boundaries: &[usize],
+    rng: &mut Pcg64,
+) -> (Vec<u32>, Vec<u32>) {
+    assert_eq!(a.len(), b.len());
+    let valid: Vec<usize> =
+        boundaries.iter().copied().filter(|&c| c > 0 && c < a.len()).collect();
+    if valid.is_empty() {
+        return onepoint_crossover(a, b, rng);
+    }
+    let cut = *rng.choose(&valid);
+    let mut c1 = a[..cut].to_vec();
+    c1.extend_from_slice(&b[cut..]);
+    let mut c2 = b[..cut].to_vec();
+    c2.extend_from_slice(&a[cut..]);
+    (c1, c2)
+}
+
+/// Uniform crossover (per-gene coin flip) — used by some baselines.
+pub fn uniform_crossover(a: &[u32], b: &[u32], rng: &mut Pcg64) -> Vec<u32> {
+    a.iter().zip(b).map(|(&x, &y)| if rng.chance(0.5) { x } else { y }).collect()
+}
+
+/// Hamming distance between genomes (diversity metric for telemetry).
+pub fn hamming(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Workload;
+
+    fn setup() -> (GenomeSpec, Pcg64) {
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        (GenomeSpec::for_workload(&w), Pcg64::seeded(3))
+    }
+
+    #[test]
+    fn point_mutation_stays_in_range() {
+        let (spec, mut rng) = setup();
+        let mut g = spec.random(&mut rng);
+        for _ in 0..100 {
+            point_mutation(&spec, &mut g, 0.2, &mut rng);
+            assert!(spec.in_range(&g));
+        }
+    }
+
+    #[test]
+    fn mutate_gene_changes_value() {
+        let (spec, mut rng) = setup();
+        let mut g = spec.random(&mut rng);
+        for i in 0..spec.len() {
+            let before = g[i];
+            mutate_gene(&spec, &mut g, i, &mut rng);
+            if spec.ranges[i].width() > 1 {
+                assert_ne!(g[i], before, "gene {i}");
+            }
+            assert!(spec.in_range(&g));
+        }
+    }
+
+    #[test]
+    fn nudge_moves_by_one_mod_range() {
+        let (spec, mut rng) = setup();
+        let mut g = spec.random(&mut rng);
+        for _ in 0..200 {
+            let i = rng.index(spec.len());
+            let before = g[i] as i64;
+            nudge_gene(&spec, &mut g, i, &mut rng);
+            let r = spec.ranges[i];
+            if r.width() > 1 {
+                let after = g[i] as i64;
+                let diff = (after - before).rem_euclid(r.width() as i64);
+                assert!(diff == 1 || diff == r.width() as i64 - 1);
+            }
+            assert!(spec.in_range(&g));
+        }
+    }
+
+    #[test]
+    fn crossover_children_mix_parents() {
+        let (spec, mut rng) = setup();
+        let a = vec![spec.ranges[0].lo; spec.len()]
+            .iter()
+            .zip(&spec.ranges)
+            .map(|(_, r)| r.lo)
+            .collect::<Vec<_>>();
+        let b = spec.ranges.iter().map(|r| r.hi).collect::<Vec<_>>();
+        let (c1, c2) = onepoint_crossover(&a, &b, &mut rng);
+        assert_eq!(c1.len(), a.len());
+        // Each child gene comes from one of the parents at that locus.
+        for i in 0..a.len() {
+            assert!(c1[i] == a[i] || c1[i] == b[i]);
+            assert!(c2[i] == a[i] || c2[i] == b[i]);
+            // And the two children are complementary.
+            assert!((c1[i] == a[i]) != (c1[i] == b[i]) || a[i] == b[i]);
+        }
+    }
+
+    #[test]
+    fn boundary_crossover_cuts_at_boundaries() {
+        let (spec, mut rng) = setup();
+        let a: Vec<u32> = spec.ranges.iter().map(|r| r.lo).collect();
+        let b: Vec<u32> = spec.ranges.iter().map(|r| r.hi).collect();
+        let bounds = spec.segment_boundaries();
+        for _ in 0..50 {
+            let (c1, _) = boundary_crossover(&a, &b, &bounds, &mut rng);
+            // Find the switch point: must be one of the boundaries.
+            let cut = (0..a.len()).find(|&i| c1[i] != a[i]);
+            if let Some(cut) = cut {
+                assert!(bounds.contains(&cut), "cut at {cut}, bounds {bounds:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_metric() {
+        assert_eq!(hamming(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(hamming(&[1, 2, 3], &[3, 2, 1]), 2);
+    }
+}

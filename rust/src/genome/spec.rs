@@ -1,0 +1,239 @@
+//! Genome specification: gene layout, ranges and segment structure for a
+//! given workload (Fig. 13 top row, Fig. 15 for multi-dimensional
+//! workloads).
+//!
+//! Layout (left to right):
+//! * `perm1..perm5` — Cantor codes, one per mapping level, range `[1, D!]`;
+//! * one *prime-factor* gene per prime factor of every (padded) dimension,
+//!   range `[1, 5]` — the mapping level the factor is assigned to;
+//! * `P0..P4, Q0..Q4, Z0..Z4` — per-rank compression formats, range `[0,4]`;
+//! * `SG_L2, SG_L3, SG_C` — skip/gate mechanism per site, range `[0,6]`.
+
+use crate::mapping::permutation::factorial;
+use crate::mapping::NUM_MAP_LEVELS;
+use crate::sparse::{NUM_RANK_FORMATS, NUM_SG_CHOICES};
+use crate::util::rng::Pcg64;
+use crate::workload::Workload;
+
+/// Number of format genes per tensor (fixed, §IV.F).
+pub const FORMAT_GENES_PER_TENSOR: usize = 5;
+/// Number of S/G sites (GLB, PE buffer, compute).
+pub const SG_SITES: usize = 3;
+
+/// What a gene position encodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GeneKind {
+    /// Permutation of mapping level `level` (0..5).
+    Perm { level: usize },
+    /// `idx`-th prime factor of dimension `dim`.
+    Factor { dim: usize, idx: usize, prime: u64 },
+    /// Format slot `slot` (0..5) of tensor `tensor` (0=P,1=Q,2=Z).
+    Format { tensor: usize, slot: usize },
+    /// S/G gene of site `site` (0=GLB/L2, 1=PEBuf/L3, 2=Compute).
+    Sg { site: usize },
+}
+
+/// Inclusive value range of a gene.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GeneRange {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl GeneRange {
+    pub fn width(&self) -> u32 {
+        self.hi - self.lo + 1
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> u32 {
+        rng.range_u32(self.lo, self.hi)
+    }
+
+    pub fn clamp_wrap(&self, v: u32) -> u32 {
+        self.lo + (v.saturating_sub(self.lo)) % self.width()
+    }
+}
+
+/// Genome layout for one workload.
+#[derive(Clone, Debug)]
+pub struct GenomeSpec {
+    pub kinds: Vec<GeneKind>,
+    pub ranges: Vec<GeneRange>,
+    /// Gene index where the factor segment starts (== NUM_MAP_LEVELS).
+    pub factor_start: usize,
+    /// Gene index where the format segment starts.
+    pub format_start: usize,
+    /// Gene index where the S/G segment starts.
+    pub sg_start: usize,
+    /// Iteration-space rank D.
+    pub rank: usize,
+}
+
+impl GenomeSpec {
+    pub fn for_workload(w: &Workload) -> GenomeSpec {
+        let d = w.rank();
+        let perm_hi = factorial(d) as u32;
+        let mut kinds = Vec::new();
+        let mut ranges = Vec::new();
+
+        for level in 0..NUM_MAP_LEVELS {
+            kinds.push(GeneKind::Perm { level });
+            ranges.push(GeneRange { lo: 1, hi: perm_hi });
+        }
+        let factor_start = kinds.len();
+        for (dim, dspec) in w.dims.iter().enumerate() {
+            for (idx, &prime) in dspec.factors.iter().enumerate() {
+                kinds.push(GeneKind::Factor { dim, idx, prime });
+                ranges.push(GeneRange { lo: 1, hi: NUM_MAP_LEVELS as u32 });
+            }
+        }
+        let format_start = kinds.len();
+        for tensor in 0..3 {
+            for slot in 0..FORMAT_GENES_PER_TENSOR {
+                kinds.push(GeneKind::Format { tensor, slot });
+                ranges.push(GeneRange { lo: 0, hi: NUM_RANK_FORMATS - 1 });
+            }
+        }
+        let sg_start = kinds.len();
+        for site in 0..SG_SITES {
+            kinds.push(GeneKind::Sg { site });
+            ranges.push(GeneRange { lo: 0, hi: NUM_SG_CHOICES - 1 });
+        }
+
+        GenomeSpec { kinds, ranges, factor_start, format_start, sg_start, rank: d }
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    /// Sample a uniformly random genome (every gene independently within
+    /// its range). Note: always satisfies dimension-tiling constraints by
+    /// construction — the point of prime-factor encoding.
+    pub fn random(&self, rng: &mut Pcg64) -> Vec<u32> {
+        self.ranges.iter().map(|r| r.sample(rng)).collect()
+    }
+
+    /// Check a genome is structurally in-range.
+    pub fn in_range(&self, genome: &[u32]) -> bool {
+        genome.len() == self.len()
+            && genome.iter().zip(&self.ranges).all(|(&g, r)| g >= r.lo && g <= r.hi)
+    }
+
+    /// Repair out-of-range genes by wrapping into range (used after
+    /// unconstrained mutation).
+    pub fn repair(&self, genome: &mut [u32]) {
+        for (g, r) in genome.iter_mut().zip(&self.ranges) {
+            if *g < r.lo || *g > r.hi {
+                *g = r.clamp_wrap(*g);
+            }
+        }
+    }
+
+    /// Size of the *encoded* search space: product of gene range widths.
+    /// Returned as log10 to avoid overflow (the paper quotes O(10^41)-
+    /// class joint spaces for direct encodings; ours is much smaller).
+    pub fn log10_space(&self) -> f64 {
+        self.ranges.iter().map(|r| (r.width() as f64).log10()).sum()
+    }
+
+    /// Natural segment boundaries used by sensitivity-aware crossover:
+    /// [perm | factors | formats | sg] plus per-tensor format boundaries.
+    pub fn segment_boundaries(&self) -> Vec<usize> {
+        let mut b = vec![
+            self.factor_start,
+            self.format_start,
+            self.format_start + FORMAT_GENES_PER_TENSOR,
+            self.format_start + 2 * FORMAT_GENES_PER_TENSOR,
+            self.sg_start,
+        ];
+        b.dedup();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> (Workload, GenomeSpec) {
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        let s = GenomeSpec::for_workload(&w);
+        (w, s)
+    }
+
+    #[test]
+    fn layout_lengths() {
+        let (w, s) = spec();
+        // 5 perms + 7 factors (2+3+2) + 15 formats + 3 sg = 30.
+        assert_eq!(s.len(), 5 + w.num_factor_genes() + 15 + 3);
+        assert_eq!(s.factor_start, 5);
+        assert_eq!(s.format_start, 12);
+        assert_eq!(s.sg_start, 27);
+    }
+
+    #[test]
+    fn perm_range_depends_on_rank() {
+        let (_, s) = spec();
+        assert_eq!(s.ranges[0], GeneRange { lo: 1, hi: 6 }); // 3! = 6
+        let wb = Workload::spbmm("b", 2, 4, 4, 4, 0.5, 0.5);
+        let sb = GenomeSpec::for_workload(&wb);
+        assert_eq!(sb.ranges[0], GeneRange { lo: 1, hi: 24 }); // 4! = 24
+    }
+
+    #[test]
+    fn random_always_in_range() {
+        let (_, s) = spec();
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..200 {
+            let g = s.random(&mut rng);
+            assert!(s.in_range(&g));
+        }
+    }
+
+    #[test]
+    fn repair_wraps() {
+        let (_, s) = spec();
+        let mut g = s.random(&mut Pcg64::seeded(2));
+        g[0] = 99; // perm out of range
+        g[s.sg_start] = 100;
+        assert!(!s.in_range(&g));
+        s.repair(&mut g);
+        assert!(s.in_range(&g));
+    }
+
+    #[test]
+    fn space_size_reasonable() {
+        let (_, s) = spec();
+        // 6^5 * 5^7 * 5^15 * 7^3 ≈ 10^19.6 — large but far below the
+        // direct-value encoding the paper criticizes.
+        let l = s.log10_space();
+        assert!(l > 15.0 && l < 25.0, "log10 space = {l}");
+    }
+
+    #[test]
+    fn factor_genes_carry_primes() {
+        let (w, s) = spec();
+        let mut count = 0;
+        for k in &s.kinds {
+            if let GeneKind::Factor { dim, prime, .. } = k {
+                assert!(w.dims[*dim].factors.contains(prime));
+                count += 1;
+            }
+        }
+        assert_eq!(count, 7);
+    }
+
+    #[test]
+    fn segment_boundaries_sorted_unique() {
+        let (_, s) = spec();
+        let b = s.segment_boundaries();
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+        assert!(b.contains(&s.factor_start));
+        assert!(b.contains(&s.sg_start));
+    }
+}

@@ -1,0 +1,40 @@
+//! # SparseMap — evolution-strategy DSE for sparse tensor accelerators
+//!
+//! A reproduction of *"SparseMap: A Sparse Tensor Accelerator Framework
+//! Based on Evolution Strategy"* as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L3 (this crate)** — the search framework: genome codec
+//!   ([`genome`]), the customized evolution strategy ([`es`]), baseline
+//!   optimizers ([`baselines`]), the native analytical cost model
+//!   ([`model`]) and experiment drivers ([`report`]).
+//! * **L2/L1 (python/compile, build-time only)** — the batched fitness
+//!   evaluator as a JAX graph with a Pallas hot-spot kernel, AOT-lowered
+//!   to `artifacts/*.hlo.txt`.
+//! * **Runtime** ([`runtime`]) — loads the AOT artifacts through the PJRT
+//!   CPU client (`xla` crate) and evaluates whole populations per call;
+//!   Python never runs on the search path.
+
+pub mod arch;
+pub mod baselines;
+pub mod es;
+pub mod genome;
+pub mod mapping;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod search;
+pub mod sparse;
+pub mod util;
+pub mod workload;
+
+/// Common imports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::arch::{Boundary, Platform, StorageLevel};
+    pub use crate::genome::{decode, Design, Genome, GenomeSpec};
+    pub use crate::mapping::{MapLevel, Mapping};
+    pub use crate::model::{EvalResult, NativeEvaluator};
+    pub use crate::sparse::{RankFormat, SgMechanism, SparseStrategy};
+    pub use crate::util::rng::Pcg64;
+    pub use crate::workload::{Workload, WorkloadKind};
+}

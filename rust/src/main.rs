@@ -1,0 +1,203 @@
+//! SparseMap CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md E1–E9)
+//! plus utility commands for single searches and diagnostics. Run with
+//! no arguments for usage.
+
+use sparsemap::arch::Platform;
+use sparsemap::baselines::{run_method, ALL_METHODS};
+use sparsemap::es::sensitivity::calibrate;
+use sparsemap::es::CalibConfig;
+use sparsemap::genome::{decode, describe};
+use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, table4, ExpConfig};
+use sparsemap::util::cli::Args;
+use sparsemap::util::rng::Pcg64;
+use sparsemap::workload::table3;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+sparsemap — evolution-strategy DSE for sparse tensor accelerators
+
+USAGE: sparsemap <COMMAND> [OPTIONS]
+
+Experiment commands (one per paper table/figure):
+  fig2                 E1: mapping x sparse-strategy interplay sweep
+  fig7                 E2: design-space PCA scatter (1000 samples)
+  fig10                E3: Cantor vs random permutation encoding
+  fig17a               E4: SparseMap vs PSO/MCTS/TBPSA/PPO/DQN (VGG16, cloud)
+  fig17b               E5: valid-point ratio per platform
+  fig18                E7: ablation convergence (es-direct / es-pfce / full)
+  table4               E6/E9: full 28x3 EDP matrix (--summary for ratios only)
+
+Utility commands:
+  search               run one search arm
+                         --workload mm3 --platform cloud --method sparsemap
+                         --budget 20000 --seed 42 [--pjrt] [--show-design]
+  calibrate            run high-sensitivity gene calibration and print S(v)
+                         --workload mm3 --platform cloud
+  workloads            list the Table III workload suite
+  platforms            list the Table II platforms
+  demo                 run the AOT gated-SpMM artifact through PJRT
+
+Common options:
+  --budget N           samples per search arm (default 20000)
+  --seed N             RNG seed (default 42)
+  --out DIR            CSV output directory (default results/)
+  --threads N          worker threads for experiment matrices
+  --pjrt               evaluate through the AOT PJRT artifact
+  --workloads a,b,c    restrict table4 to a workload subset
+";
+
+fn exp_config(args: &Args) -> anyhow::Result<ExpConfig> {
+    let mut cfg = ExpConfig {
+        budget: args.opt_u64("budget", 20_000)? as usize,
+        seed: args.opt_u64("seed", 42)?,
+        out_dir: PathBuf::from(args.opt_or("out", "results")),
+        use_pjrt: args.flag("pjrt"),
+        ..Default::default()
+    };
+    if let Some(t) = args.opt("threads") {
+        cfg.threads = t.parse().map_err(|_| anyhow::anyhow!("--threads expects a number"))?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let cfg = exp_config(args)?;
+    let wl_id = args.opt_or("workload", "mm3");
+    let platform = Platform::by_name(&args.opt_or("platform", "cloud"))?;
+    let method = args.opt_or("method", "sparsemap");
+    anyhow::ensure!(ALL_METHODS.contains(&method.as_str()), "unknown method {method}");
+    let workload = table3::by_id(&wl_id)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload '{wl_id}' (see `sparsemap workloads`)"))?;
+
+    let ctx = cfg.context(workload.clone(), platform.clone());
+    let t0 = std::time::Instant::now();
+    let outcome = run_method(&method, ctx, cfg.seed)?;
+    let dt = t0.elapsed();
+
+    println!(
+        "{} on {} @ {}: best EDP {:.4e}  ({} evals, {:.1}% valid, {:.2}s, {:.0} evals/s)",
+        outcome.method,
+        outcome.workload,
+        outcome.platform,
+        outcome.best_edp,
+        outcome.evals,
+        100.0 * outcome.valid_ratio(),
+        dt.as_secs_f64(),
+        outcome.evals as f64 / dt.as_secs_f64().max(1e-9),
+    );
+    if args.flag("show-design") {
+        if let Some(g) = &outcome.best_genome {
+            let spec = sparsemap::genome::GenomeSpec::for_workload(&workload);
+            if g.len() == spec.len() {
+                let design = decode(&spec, &workload, g);
+                println!("--- best design ---\n{}", describe(&design, &workload));
+            } else {
+                println!("(best genome uses a foreign encoding; not rendered)");
+            }
+        }
+    }
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let path = cfg.out_dir.join(format!("search_{}_{}_{}.json", method, wl_id, platform.name));
+    std::fs::write(&path, outcome.to_json().pretty())?;
+    println!("outcome written to {}", path.display());
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let cfg = exp_config(args)?;
+    let workload = table3::by_id(&args.opt_or("workload", "mm3"))
+        .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
+    let platform = Platform::by_name(&args.opt_or("platform", "cloud"))?;
+    let mut ctx = cfg.context(workload, platform);
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let sens = calibrate(&mut ctx, CalibConfig::default(), &mut rng);
+    println!(
+        "gene sensitivities (E8; {} evals = {:.1}% of budget):",
+        sens.evals_spent,
+        100.0 * sens.evals_spent as f64 / cfg.budget as f64
+    );
+    for (i, s) in sens.scores.iter().enumerate() {
+        let class = if sens.high.contains(&i) { "HIGH" } else { "low " };
+        println!("  gene {i:3} [{class}]  S = {s:.4e}  ({:?})", ctx.spec.kinds[i]);
+    }
+    Ok(())
+}
+
+fn cmd_demo() -> anyhow::Result<()> {
+    let rt = sparsemap::runtime::Runtime::from_default_dir()?;
+    let demo = sparsemap::runtime::SpmmDemo::new(&rt)?;
+    let (m, k, n) = (demo.m, demo.k, demo.n);
+    let mut rng = Pcg64::seeded(1);
+    let p: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let q: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let pm: Vec<f32> = (0..m * k).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect();
+    let qm: Vec<f32> = (0..k * n).map(|_| if rng.chance(0.25) { 1.0 } else { 0.0 }).collect();
+    let (z, eff) = demo.run(&p, &q, &pm, &qm)?;
+    println!(
+        "gated SpMM {m}x{k} * {k}x{n} through PJRT: effectual MACs {eff} of {} ({:.1}%)",
+        m * k * n,
+        100.0 * eff / (m * k * n) as f64,
+    );
+    println!("z[0..4] = {:?}", &z[..4]);
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cfg = exp_config(&args)?;
+
+    match args.subcommand.as_str() {
+        "fig2" => println!("{}", fig2::run(&cfg)?),
+        "fig7" => println!("{}", fig7::run(&cfg)?),
+        "fig10" => println!("{}", fig10::run(&cfg)?),
+        "fig17a" => println!("{}", fig17::run_a(&cfg)?),
+        "fig17b" => println!("{}", fig17::run_b(&cfg)?),
+        "fig18" => println!("{}", fig18::run(&cfg)?),
+        "table4" => {
+            let subset = args
+                .opt("workloads")
+                .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+            println!("{}", table4::run(&cfg, subset, args.flag("summary"))?);
+        }
+        "search" => cmd_search(&args)?,
+        "calibrate" => cmd_calibrate(&args)?,
+        "demo" => cmd_demo()?,
+        "workloads" => {
+            for w in table3::all() {
+                let dims: Vec<String> =
+                    w.dims.iter().map(|d| format!("{}={}", d.name, d.size)).collect();
+                println!(
+                    "{:8} {:7} {}  dP={:.3} dQ={:.3}",
+                    w.id,
+                    w.kind.as_str(),
+                    dims.join(" "),
+                    w.tensors[0].density,
+                    w.tensors[1].density
+                );
+            }
+        }
+        "platforms" => {
+            for p in Platform::all() {
+                println!(
+                    "{:7} {}x{} PEs, {} MACs/PE, PE buf {} KB, GLB {} KB, DRAM {:.3} GB/s",
+                    p.name,
+                    p.pe_rows,
+                    p.pe_cols,
+                    p.macs_per_pe,
+                    p.pe_buf_bytes >> 10,
+                    p.glb_bytes >> 10,
+                    p.dram_bw_bytes_per_s / 1e9
+                );
+            }
+        }
+        "" | "help" => println!("{USAGE}"),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

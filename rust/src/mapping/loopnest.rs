@@ -1,0 +1,314 @@
+//! Loop-nest reuse analysis: tile sizes, fetch multiplicities, spatial
+//! multicast — the Timeloop-style core of the cost model.
+//!
+//! Terminology (see DESIGN.md §Cost model):
+//! * a *tile* of tensor T at storage level S is the block of T resident in
+//!   S for one iteration of the loops above S;
+//! * T's tile is *refetched* across the boundary above S once per
+//!   iteration of every temporal loop above S that is **relevant** to T
+//!   (indexes one of T's dims) — plus once per iteration of irrelevant
+//!   loops that are *outer* to a relevant one (the tile sequence repeats).
+//!   A trailing run of irrelevant loops immediately above the boundary
+//!   keeps the tile stationary (this is what distinguishes OS/IS/WS).
+
+use super::{MapLevel, Mapping};
+use crate::arch::Boundary;
+use crate::workload::Workload;
+
+/// One loop of the flattened nest.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Loop {
+    pub dim: usize,
+    pub bound: u64,
+    pub level: MapLevel,
+}
+
+/// Flatten a mapping into its loop nest, outer→inner. Unit loops are
+/// dropped (they carry no information).
+pub fn flatten(m: &Mapping) -> Vec<Loop> {
+    let mut out = Vec::new();
+    for level in MapLevel::ALL {
+        let li = level.index();
+        for &d in &m.perm[li] {
+            let bound = m.tile[li][d];
+            if bound > 1 {
+                out.push(Loop { dim: d, bound, level });
+            }
+        }
+    }
+    out
+}
+
+/// Mapping levels whose factors are *inside* a storage level's tile.
+pub fn levels_inside(storage_tile_of: Boundary) -> &'static [usize] {
+    match storage_tile_of {
+        // GLB tile spans everything below L1_T.
+        Boundary::DramGlb => &[1, 2, 3, 4],
+        // A single PE's tile spans L3_T and L3_S (its own MACs' data);
+        // L2_S partitions across PEs so it is excluded.
+        Boundary::GlbPe => &[3, 4],
+        // A MAC consumes single operands.
+        Boundary::PeMac => &[],
+    }
+}
+
+/// Temporal mapping levels *above* a boundary (whose loops drive
+/// refetches across it).
+pub fn temporal_levels_above(b: Boundary) -> &'static [usize] {
+    match b {
+        Boundary::DramGlb => &[0],
+        Boundary::GlbPe => &[0, 1],
+        Boundary::PeMac => &[0, 1, 3], // L2_S (2) and L3_S (4) are spatial
+    }
+}
+
+/// Elements of tensor `t`'s tile at the storage level fed by boundary `b`
+/// (dense count, padded dims).
+pub fn tile_elems(m: &Mapping, w: &Workload, t: usize, b: Boundary) -> f64 {
+    let inside = levels_inside(b);
+    w.tensors[t]
+        .dims
+        .iter()
+        .map(|&d| inside.iter().map(|&li| m.tile[li][d] as f64).product::<f64>())
+        .product()
+}
+
+/// The ordered (outer→inner) temporal loops above boundary `b`.
+pub fn temporal_loops_above(m: &Mapping, b: Boundary) -> Vec<Loop> {
+    temporal_loops_above_from(&flatten(m), b)
+}
+
+/// As [`temporal_loops_above`] but reusing an already-flattened nest —
+/// the cost-model hot path flattens once and derives all three boundary
+/// lists from it.
+pub fn temporal_loops_above_from(flat: &[Loop], b: Boundary) -> Vec<Loop> {
+    let lvls = temporal_levels_above(b);
+    flat.iter().copied().filter(|l| lvls.contains(&l.level.index())).collect()
+}
+
+/// Fetch multiplicity of input tensor `t` across boundary `b`: how many
+/// times each *tile-sized* transfer happens. Implements the trailing-
+/// irrelevant-loop stationarity rule.
+pub fn input_multiplicity(m: &Mapping, w: &Workload, t: usize, b: Boundary) -> f64 {
+    let loops = temporal_loops_above(m, b);
+    multiplicity_with(&loops, |l| w.relevant(t, l.dim))
+}
+
+/// [`input_multiplicity`] over a precomputed boundary loop list.
+pub fn input_multiplicity_over(loops: &[Loop], w: &Workload, t: usize) -> f64 {
+    multiplicity_with(loops, |l| w.relevant(t, l.dim))
+}
+
+/// Generic multiplicity: walking inner→outer, skip the trailing loops for
+/// which `relevant` is false, then multiply every remaining bound.
+fn multiplicity_with(loops: &[Loop], relevant: impl Fn(&Loop) -> bool) -> f64 {
+    let mut mult = 1.0;
+    let mut seen_relevant = false;
+    for l in loops.iter().rev() {
+        if !seen_relevant && !relevant(l) {
+            continue; // stationary across this loop
+        }
+        seen_relevant = true;
+        mult *= l.bound as f64;
+    }
+    mult
+}
+
+/// Number of *distinct* output (Z) tiles enumerated above boundary `b`:
+/// the product of Z-relevant temporal loop bounds. Contraction loops are
+/// handled separately by [`psum_passes`] so they are excluded here (they
+/// revisit the same tile rather than producing a new one).
+pub fn output_tile_changes(m: &Mapping, w: &Workload, b: Boundary) -> f64 {
+    output_tile_changes_over(&temporal_loops_above(m, b), w)
+}
+
+/// [`output_tile_changes`] over a precomputed boundary loop list.
+pub fn output_tile_changes_over(loops: &[Loop], w: &Workload) -> f64 {
+    let z = crate::workload::TENSOR_Z;
+    loops.iter().filter(|l| w.relevant(z, l.dim)).map(|l| l.bound as f64).product()
+}
+
+/// Partial-sum passes per output tile at boundary `b`: the product of
+/// contraction-loop bounds that sit *outer* to at least one Z-relevant
+/// loop above the boundary. passes == 1 ⇒ output-stationary at this
+/// level (psums never spill); passes == p ⇒ each tile crosses the
+/// boundary `2p - 1` times (p writes, p-1 read-backs).
+pub fn psum_passes(m: &Mapping, w: &Workload, b: Boundary) -> f64 {
+    psum_passes_over(&temporal_loops_above(m, b), w)
+}
+
+/// [`psum_passes`] over a precomputed boundary loop list.
+pub fn psum_passes_over(loops: &[Loop], w: &Workload) -> f64 {
+    let z = crate::workload::TENSOR_Z;
+    // Position of the innermost Z-relevant loop.
+    let last_z = loops.iter().rposition(|l| w.relevant(z, l.dim));
+    let Some(last_z) = last_z else {
+        return 1.0; // single Z tile above this boundary
+    };
+    loops[..last_z]
+        .iter()
+        .filter(|l| w.contraction.contains(&l.dim))
+        .map(|l| l.bound as f64)
+        .product()
+}
+
+/// Total words of Z (dense-equivalent) crossing boundary `b`, counting
+/// both psum spills and final writes.
+pub fn output_traffic_elems(m: &Mapping, w: &Workload, b: Boundary) -> f64 {
+    let z = crate::workload::TENSOR_Z;
+    let tile = tile_elems(m, w, z, b);
+    let loops = temporal_loops_above(m, b);
+    tile * output_tile_changes_over(&loops, w) * (2.0 * psum_passes_over(&loops, w) - 1.0)
+}
+
+/// [`output_traffic_elems`] from precomputed pieces.
+pub fn output_traffic_elems_over(loops: &[Loop], w: &Workload, tile: f64) -> f64 {
+    tile * output_tile_changes_over(loops, w) * (2.0 * psum_passes_over(loops, w) - 1.0)
+}
+
+/// Spatial fan-out (number of hardware instances addressed) at a spatial
+/// mapping level.
+pub fn spatial_fanout(m: &Mapping, level: MapLevel) -> u64 {
+    m.fanout(level)
+}
+
+/// Number of *distinct* tiles of tensor `t` across a spatial level's
+/// instances; fanout / distinct = multicast width (same data broadcast).
+pub fn spatial_distinct(m: &Mapping, w: &Workload, t: usize, level: MapLevel) -> u64 {
+    debug_assert!(level.is_spatial());
+    let li = level.index();
+    (0..w.rank())
+        .filter(|&d| w.relevant(t, d))
+        .map(|d| m.tile[li][d])
+        .product::<u64>()
+        .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{TENSOR_P, TENSOR_Q, TENSOR_Z};
+
+    /// M=4, K=8, N=4 SpMM with an easily-hand-checked mapping.
+    fn setup() -> (Workload, Mapping) {
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        let m = Mapping::trivial(&w, MapLevel::L3T);
+        (w, m)
+    }
+
+    #[test]
+    fn flatten_order_and_unit_drop() {
+        let (w, mut m) = setup();
+        m.tile = vec![
+            vec![2, 1, 1], // L1_T: m1=2
+            vec![1, 2, 1], // L2_T: k2=2
+            vec![1, 1, 2], // L2_S: n3=2
+            vec![2, 4, 2], // L3_T
+            vec![1, 1, 1], // L3_S
+        ];
+        assert!(m.respects(&w));
+        let loops = flatten(&m);
+        assert_eq!(loops.len(), 6);
+        assert_eq!(loops[0].level, MapLevel::L1T);
+        assert_eq!(loops[0].dim, 0);
+        assert!(loops.iter().all(|l| l.bound > 1));
+    }
+
+    #[test]
+    fn tile_sizes() {
+        let (w, mut m) = setup();
+        m.tile = vec![
+            vec![1, 1, 1],
+            vec![2, 2, 2], // L2_T
+            vec![1, 1, 1],
+            vec![2, 4, 2], // L3_T
+            vec![1, 1, 1],
+        ];
+        // GLB tile of P: (m at L2T..L3S = 2*2) x (k = 2*4) = 4*8 = 32.
+        assert_eq!(tile_elems(&m, &w, TENSOR_P, Boundary::DramGlb), 32.0);
+        // PE tile of P: levels {L3T,L3S}: 2*4 = 8.
+        assert_eq!(tile_elems(&m, &w, TENSOR_P, Boundary::GlbPe), 8.0);
+        // MAC operand: 1.
+        assert_eq!(tile_elems(&m, &w, TENSOR_P, Boundary::PeMac), 1.0);
+    }
+
+    #[test]
+    fn stationarity_trailing_irrelevant() {
+        let (w, mut m) = setup();
+        // L1_T loops: order (n1, k1) outer->inner with bounds 4, 8 — all
+        // tiling at L1; inner dims at L3_T unit.
+        m.tile = vec![
+            vec![4, 8, 4], // everything at L1_T
+            vec![1, 1, 1],
+            vec![1, 1, 1],
+            vec![1, 1, 1],
+            vec![1, 1, 1],
+        ];
+        m.perm[0] = vec![0, 2, 1]; // for m1 { for n1 { for k1 } }
+        // P(M,K): k is innermost and relevant, so every loop counts:
+        // mult = 4*4*8 = 128.
+        assert_eq!(input_multiplicity(&m, &w, TENSOR_P, Boundary::DramGlb), 128.0);
+        // Q(K,N): trailing relevant k counts, n relevant, m outer counts:
+        // 4*4*8 = 128.
+        assert_eq!(input_multiplicity(&m, &w, TENSOR_Q, Boundary::DramGlb), 128.0);
+        // Z(M,N): trailing k1 is irrelevant -> stationary; mult = 4*4.
+        assert_eq!(input_multiplicity(&m, &w, TENSOR_Z, Boundary::DramGlb), 16.0);
+
+        // Now put k outermost: for k1 { for m1 { for n1 } }.
+        m.perm[0] = vec![1, 0, 2];
+        // P: trailing n1 irrelevant -> skip; then m1, k1 count: 8*4 = 32.
+        assert_eq!(input_multiplicity(&m, &w, TENSOR_P, Boundary::DramGlb), 32.0);
+        // Z: m,n relevant (trailing), k outer counts: 8*4*4 = 128.
+        assert_eq!(input_multiplicity(&m, &w, TENSOR_Z, Boundary::DramGlb), 128.0);
+    }
+
+    #[test]
+    fn psum_passes_output_vs_input_stationary() {
+        let (w, mut m) = setup();
+        m.tile =
+            vec![vec![4, 8, 4], vec![1, 1, 1], vec![1, 1, 1], vec![1, 1, 1], vec![1, 1, 1]];
+        // OS: k innermost above DRAM boundary -> no Z-relevant loop inside
+        // k... k is inner to the last Z loop? order m,n,k: last Z loop is
+        // n (pos 1), k at pos 2 is NOT outer to it -> passes 1.
+        m.perm[0] = vec![0, 2, 1];
+        assert_eq!(psum_passes(&m, &w, Boundary::DramGlb), 1.0);
+        // k outermost: passes = 8 (each Z tile revisited per k1 step).
+        m.perm[0] = vec![1, 0, 2];
+        assert_eq!(psum_passes(&m, &w, Boundary::DramGlb), 8.0);
+        // K-outer traffic: 16 distinct Z elements, each crossing
+        // 2*8-1 = 15 times (8 spills, 7 read-backs) = 240 words.
+        assert_eq!(output_traffic_elems(&m, &w, Boundary::DramGlb), 240.0);
+        // OS: every Z element written exactly once.
+        m.perm[0] = vec![0, 2, 1];
+        assert_eq!(output_traffic_elems(&m, &w, Boundary::DramGlb), 16.0);
+        assert_eq!(output_tile_changes(&m, &w, Boundary::DramGlb), 16.0);
+    }
+
+    #[test]
+    fn spatial_multicast() {
+        let (w, mut m) = setup();
+        m.tile = vec![
+            vec![1, 1, 1],
+            vec![1, 1, 1],
+            vec![4, 1, 2], // L2_S: m x n over PEs
+            vec![1, 8, 2],
+            vec![1, 1, 1],
+        ];
+        assert_eq!(spatial_fanout(&m, MapLevel::L2S), 8);
+        // P(M,K): distinct across m=4, broadcast across n=2.
+        assert_eq!(spatial_distinct(&m, &w, TENSOR_P, MapLevel::L2S), 4);
+        // Q(K,N): distinct across n=2, broadcast across m=4.
+        assert_eq!(spatial_distinct(&m, &w, TENSOR_Q, MapLevel::L2S), 2);
+        // Z: distinct across both: 8 (no multicast).
+        assert_eq!(spatial_distinct(&m, &w, TENSOR_Z, MapLevel::L2S), 8);
+    }
+
+    #[test]
+    fn no_loops_means_mult_one() {
+        let (w, m) = setup(); // everything at L3_T
+        for t in [TENSOR_P, TENSOR_Q, TENSOR_Z] {
+            assert_eq!(input_multiplicity(&m, &w, t, Boundary::DramGlb), 1.0);
+        }
+        assert_eq!(psum_passes(&m, &w, Boundary::DramGlb), 1.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Mapping representation: five mapping levels over the 3-level storage
+//! template (Fig. 4), per-level dimension tiling + loop permutations.
+
+pub mod loopnest;
+pub mod permutation;
+
+use crate::workload::Workload;
+
+/// The five mapping levels, outer to inner (Fig. 4):
+/// `L1_T` (DRAM→GLB temporal), `L2_T` (GLB temporal), `L2_S` (spatial
+/// across PEs), `L3_T` (PE-buffer temporal), `L3_S` (spatial across MACs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MapLevel {
+    L1T,
+    L2T,
+    L2S,
+    L3T,
+    L3S,
+}
+
+pub const NUM_MAP_LEVELS: usize = 5;
+
+impl MapLevel {
+    pub const ALL: [MapLevel; NUM_MAP_LEVELS] =
+        [MapLevel::L1T, MapLevel::L2T, MapLevel::L2S, MapLevel::L3T, MapLevel::L3S];
+
+    pub fn index(self) -> usize {
+        match self {
+            MapLevel::L1T => 0,
+            MapLevel::L2T => 1,
+            MapLevel::L2S => 2,
+            MapLevel::L3T => 3,
+            MapLevel::L3S => 4,
+        }
+    }
+
+    pub fn from_index(i: usize) -> MapLevel {
+        Self::ALL[i]
+    }
+
+    pub fn is_spatial(self) -> bool {
+        matches!(self, MapLevel::L2S | MapLevel::L3S)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MapLevel::L1T => "L1_T",
+            MapLevel::L2T => "L2_T",
+            MapLevel::L2S => "L2_S",
+            MapLevel::L3T => "L3_T",
+            MapLevel::L3S => "L3_S",
+        }
+    }
+}
+
+/// A fully specified mapping for a workload: per-level tile factor of
+/// every dimension, plus a per-level loop permutation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mapping {
+    /// `tile[level][dim]` — iteration count of dim `dim` at mapping level
+    /// `level`. For every dim, the product across levels equals the padded
+    /// dimension size.
+    pub tile: Vec<Vec<u64>>,
+    /// `perm[level]` — order (outer→inner) of dim indices at this level.
+    pub perm: Vec<Vec<usize>>,
+}
+
+impl Mapping {
+    /// Fresh mapping with all factors 1 at every level except `home`,
+    /// which gets the full dim size, and identity permutations.
+    pub fn trivial(w: &Workload, home: MapLevel) -> Mapping {
+        let d = w.rank();
+        let mut tile = vec![vec![1u64; d]; NUM_MAP_LEVELS];
+        for (i, dim) in w.dims.iter().enumerate() {
+            tile[home.index()][i] = dim.padded;
+        }
+        Mapping { tile, perm: vec![(0..d).collect(); NUM_MAP_LEVELS] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.tile[0].len()
+    }
+
+    /// Product of a dim's factors across all levels (should equal the
+    /// padded size).
+    pub fn dim_product(&self, dim: usize) -> u64 {
+        self.tile.iter().map(|lvl| lvl[dim]).product()
+    }
+
+    /// Does this mapping tile every dim to exactly its padded size?
+    pub fn respects(&self, w: &Workload) -> bool {
+        w.dims.iter().enumerate().all(|(i, d)| self.dim_product(i) == d.padded)
+    }
+
+    /// Spatial fan-out at a spatial level: product of all dims' factors.
+    pub fn fanout(&self, level: MapLevel) -> u64 {
+        debug_assert!(level.is_spatial());
+        self.tile[level.index()].iter().product()
+    }
+
+    /// Pretty multi-line loop-nest rendering (Fig. 4 style).
+    pub fn render(&self, w: &Workload) -> String {
+        let mut out = String::new();
+        let mut indent = 0;
+        for level in MapLevel::ALL {
+            let li = level.index();
+            for &d in &self.perm[li] {
+                let bound = self.tile[li][d];
+                if bound == 1 {
+                    continue;
+                }
+                for _ in 0..indent {
+                    out.push_str("  ");
+                }
+                let kw = if level.is_spatial() { "par-for" } else { "for" };
+                out.push_str(&format!(
+                    "{kw} {}{} in [0,{})   # {}\n",
+                    w.dims[d].name.to_lowercase(),
+                    li + 1,
+                    bound,
+                    level.name()
+                ));
+                indent += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl() -> Workload {
+        Workload::spmm("t", 4, 8, 4, 0.5, 0.5)
+    }
+
+    #[test]
+    fn trivial_respects_workload() {
+        let w = wl();
+        for lvl in MapLevel::ALL {
+            let m = Mapping::trivial(&w, lvl);
+            assert!(m.respects(&w));
+        }
+    }
+
+    #[test]
+    fn fanout_counts_spatial_product() {
+        let w = wl();
+        let mut m = Mapping::trivial(&w, MapLevel::L1T);
+        m.tile[MapLevel::L2S.index()] = vec![2, 1, 2];
+        assert_eq!(m.fanout(MapLevel::L2S), 4);
+        assert_eq!(m.fanout(MapLevel::L3S), 1);
+    }
+
+    #[test]
+    fn render_skips_unit_loops() {
+        let w = wl();
+        let m = Mapping::trivial(&w, MapLevel::L2T);
+        let r = m.render(&w);
+        assert_eq!(r.lines().count(), 3); // only the three L2_T loops
+        assert!(r.contains("for m2 in [0,4)"));
+        assert!(r.contains("for k2 in [0,8)"));
+    }
+
+    #[test]
+    fn level_indices() {
+        for (i, l) in MapLevel::ALL.iter().enumerate() {
+            assert_eq!(l.index(), i);
+            assert_eq!(MapLevel::from_index(i), *l);
+        }
+        assert!(MapLevel::L2S.is_spatial());
+        assert!(!MapLevel::L3T.is_spatial());
+    }
+}

@@ -1,0 +1,154 @@
+//! Cantor (factorial-base) encoding of loop permutations (§IV.C, Eq. 1).
+//!
+//! Each mapping level orders its D loops by a permutation encoded as a
+//! single integer in `[1, D!]`. Cantor encoding's key property (Fig. 10):
+//! nearby codes differ mostly in the *inner* loop order, so small gene
+//! mutations make small mapping changes — outer-loop order, which
+//! dominates accelerator behaviour, maps to the high-order digits.
+
+/// `n!` for small `n`.
+pub fn factorial(n: usize) -> u64 {
+    (1..=n as u64).product()
+}
+
+/// Encode a permutation (a list of distinct dim indices `0..d`) into its
+/// 1-based Cantor code: `Σ (a_i - 1)·(d-i)! + 1` where `a_i` is the rank
+/// of element i among the not-yet-used values.
+pub fn encode(perm: &[usize]) -> u64 {
+    let d = perm.len();
+    debug_assert!(is_permutation(perm));
+    let mut used = vec![false; d];
+    let mut code = 0u64;
+    for (i, &p) in perm.iter().enumerate() {
+        let rank = (0..p).filter(|&j| !used[j]).count() as u64; // 0-based a_i - 1
+        code += rank * factorial(d - i - 1);
+        used[p] = true;
+    }
+    code + 1
+}
+
+/// Decode a 1-based Cantor code into the permutation of `0..d`.
+/// Codes outside `[1, d!]` are wrapped (mod d!) so that any gene value
+/// decodes to *some* valid permutation — mutation never produces an
+/// undecodable genome.
+pub fn decode(code: u64, d: usize) -> Vec<usize> {
+    let total = factorial(d);
+    let mut c = (code.saturating_sub(1)) % total;
+    let mut avail: Vec<usize> = (0..d).collect();
+    let mut out = Vec::with_capacity(d);
+    for i in 0..d {
+        let f = factorial(d - i - 1);
+        let idx = (c / f) as usize;
+        c %= f;
+        out.push(avail.remove(idx));
+    }
+    out
+}
+
+/// Is `xs` a permutation of `0..xs.len()`?
+pub fn is_permutation(xs: &[usize]) -> bool {
+    let mut seen = vec![false; xs.len()];
+    for &x in xs {
+        if x >= xs.len() || seen[x] {
+            return false;
+        }
+        seen[x] = true;
+    }
+    true
+}
+
+/// Kendall-tau distance between two permutations (number of discordant
+/// pairs) — used by tests to verify the locality property of the encoding.
+pub fn kendall_tau(a: &[usize], b: &[usize]) -> usize {
+    assert_eq!(a.len(), b.len());
+    let d = a.len();
+    let pos_b: Vec<usize> = {
+        let mut p = vec![0; d];
+        for (i, &x) in b.iter().enumerate() {
+            p[x] = i;
+        }
+        p
+    };
+    let mapped: Vec<usize> = a.iter().map(|&x| pos_b[x]).collect();
+    let mut count = 0;
+    for i in 0..d {
+        for j in (i + 1)..d {
+            if mapped[i] > mapped[j] {
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorials() {
+        assert_eq!(factorial(0), 1);
+        assert_eq!(factorial(3), 6);
+        assert_eq!(factorial(4), 24);
+    }
+
+    #[test]
+    fn code_1_is_identity() {
+        // Paper: code 1 corresponds to permutation MKN (identity order).
+        assert_eq!(decode(1, 3), vec![0, 1, 2]);
+        assert_eq!(encode(&[0, 1, 2]), 1);
+    }
+
+    #[test]
+    fn roundtrip_all_d3_d4() {
+        for d in [3usize, 4] {
+            for code in 1..=factorial(d) {
+                let p = decode(code, d);
+                assert!(is_permutation(&p));
+                assert_eq!(encode(&p), code, "d={d} code={code}");
+            }
+        }
+    }
+
+    #[test]
+    fn codes_bijective() {
+        let mut seen = std::collections::HashSet::new();
+        for code in 1..=6u64 {
+            seen.insert(decode(code, 3));
+        }
+        assert_eq!(seen.len(), 6);
+    }
+
+    #[test]
+    fn out_of_range_wraps() {
+        assert_eq!(decode(7, 3), decode(1, 3));
+        assert_eq!(decode(0, 3), decode(1, 3)); // 0 saturates to the first code
+        assert!(is_permutation(&decode(u64::MAX, 4)));
+    }
+
+    #[test]
+    fn locality_adjacent_codes_share_outer_loop() {
+        // The defining property vs random encoding: adjacent Cantor codes
+        // agree on the outermost loop in most cases (they only differ in
+        // low-order factorial digits).
+        let d = 3;
+        let mut share = 0;
+        for code in 1..factorial(d) {
+            let a = decode(code, d);
+            let b = decode(code + 1, d);
+            if a[0] == b[0] {
+                share += 1;
+            }
+        }
+        // 3 of 5 adjacent pairs share the outer loop for d=3 (code pairs
+        // crossing a (d-1)! boundary change it; the rest keep it).
+        assert!(share >= 3, "share={share}");
+    }
+
+    #[test]
+    fn kendall_tau_sanity() {
+        assert_eq!(kendall_tau(&[0, 1, 2], &[0, 1, 2]), 0);
+        assert_eq!(kendall_tau(&[0, 1, 2], &[2, 1, 0]), 3);
+        assert_eq!(kendall_tau(&[0, 1, 2], &[0, 2, 1]), 1);
+    }
+}

@@ -1,0 +1,235 @@
+//! The cost formula — energy, latency, EDP and validity from a feature
+//! vector.
+//!
+//! **This arithmetic is the contract with `python/compile/model.py`.** The
+//! Python module implements the identical formula in JAX (lowered to the
+//! AOT artifact the Rust runtime executes); `rust/tests/runtime_xla.rs`
+//! cross-validates the two to f32 tolerance. Keep them in lock-step.
+
+use super::features::*;
+use crate::arch::Platform;
+
+/// Full cost breakdown of one design point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostBreakdown {
+    /// Total energy, picojoules.
+    pub energy_pj: f64,
+    /// Total latency, cycles.
+    pub cycles: f64,
+    /// Energy-delay product, pJ·cycles (the paper's objective).
+    pub edp: f64,
+    /// 1.0 if valid, 0.0 otherwise.
+    pub valid: f64,
+    /// GLB / PE-buffer utilization (diagnostics; >1 ⇒ invalid).
+    pub glb_util: f64,
+    pub pe_util: f64,
+    /// Energy split (diagnostics and Fig. 2-style breakdowns).
+    pub energy_dram_pj: f64,
+    pub energy_onchip_pj: f64,
+    pub energy_compute_pj: f64,
+    /// Latency split.
+    pub cycles_compute: f64,
+    pub cycles_dram: f64,
+    pub cycles_glb: f64,
+    pub cycles_pe: f64,
+}
+
+/// Platform vector layout (see `Platform::to_feature_vector`):
+/// `[e_dram, e_glb, e_pebuf, e_reg, e_mac, e_noc, e_meta,
+///   bw_dram, bw_glb, bw_pe, glb_words, pe_words, n_pes, macs_per_pe,
+///   clock, reserved]`.
+pub fn evaluate_features(f: &Features, p: &[f64]) -> CostBreakdown {
+    let (e_dram, e_glb, e_pebuf, e_reg, e_mac, e_noc, e_meta) =
+        (p[0], p[1], p[2], p[3], p[4], p[5], p[6]);
+    let (bw_dram, bw_glb, bw_pe) = (p[7], p[8], p[9]);
+    let (glb_cap, pe_cap) = (p[10], p[11]);
+    let n_pes = p[12];
+    let macs_per_pe = p[13];
+
+    // ---- boundary 0: DRAM <-> GLB (compressed words) --------------------
+    let w0_p = f[F_P_WORDS_B0] * f[F_CR_P_B0];
+    let w0_q = f[F_Q_WORDS_B0] * f[F_CR_Q_B0];
+    let w0_z = f[F_Z_WORDS_B0] * f[F_CR_Z_B0];
+    let w0 = w0_p + w0_q + w0_z;
+    let meta0 = f[F_P_WORDS_B0] * f[F_META_P_B0]
+        + f[F_Q_WORDS_B0] * f[F_META_Q_B0]
+        + f[F_Z_WORDS_B0] * f[F_META_Z_B0];
+    let energy_b0 = w0 * (e_dram + e_glb) + meta0 * e_meta;
+
+    // ---- boundary 1: GLB -> PE (S/G at the GLB filters the stream) ------
+    let glb_reads = f[F_P_GLB_READS_B1] * f[F_CR_P_B1] * f[F_SG_P_ENERGY_B1]
+        + f[F_Q_GLB_READS_B1] * f[F_CR_Q_B1] * f[F_SG_Q_ENERGY_B1]
+        + f[F_Z_GLB_WORDS_B1] * f[F_CR_Z_B1];
+    let noc_words = f[F_P_NOC_WORDS_B1] * f[F_CR_P_B1] * f[F_SG_P_ENERGY_B1]
+        + f[F_Q_NOC_WORDS_B1] * f[F_CR_Q_B1] * f[F_SG_Q_ENERGY_B1]
+        + f[F_Z_NOC_WORDS_B1] * f[F_CR_Z_B1];
+    let meta1 = f[F_P_NOC_WORDS_B1] * f[F_META_P_B1]
+        + f[F_Q_NOC_WORDS_B1] * f[F_META_Q_B1]
+        + f[F_Z_NOC_WORDS_B1] * f[F_META_Z_B1];
+    let energy_b1 = glb_reads * e_glb
+        + noc_words * (e_noc + e_pebuf)
+        + meta1 * e_meta
+        + noc_words * f[F_CTRL_B1];
+
+    // ---- boundary 2: PE buffer -> MAC operands --------------------------
+    let w2 = f[F_P_WORDS_B2] * f[F_SG_P_ENERGY_B2]
+        + f[F_Q_WORDS_B2] * f[F_SG_Q_ENERGY_B2]
+        + f[F_Z_WORDS_B2];
+    let energy_b2 = w2 * (e_pebuf + e_reg) + w2 * f[F_CTRL_B2];
+
+    // ---- compute ---------------------------------------------------------
+    let effectual_macs = f[F_TOTAL_OPS] * f[F_MAC_ENERGY_FRAC];
+    let energy_mac = effectual_macs * e_mac + f[F_TOTAL_OPS] * f[F_CTRL_C];
+
+    let energy_pj = energy_b0 + energy_b1 + energy_b2 + energy_mac;
+
+    // ---- latency: overlapped pipeline, bottleneck stage wins ------------
+    let cycles_compute =
+        f[F_TOTAL_OPS] / f[F_ACTIVE_MACS].max(1.0) * f[F_COMPUTE_CYCLE_FRAC];
+    let cycles_dram = w0 / bw_dram.max(1e-12);
+    let cycles_glb = glb_reads * f[F_SG_CYCLES_B1] / bw_glb.max(1e-12);
+    let cycles_pe = w2 * f[F_SG_CYCLES_B2]
+        / (bw_pe.max(1e-12) * f[F_ACTIVE_PES].max(1.0));
+    let cycles = cycles_compute.max(cycles_dram).max(cycles_glb).max(cycles_pe).max(1.0);
+
+    // ---- validity ---------------------------------------------------------
+    let glb_util = f[F_GLB_TILE_WORDS] / glb_cap.max(1.0);
+    let pe_util = f[F_PE_TILE_WORDS] / pe_cap.max(1.0);
+    let fits = if glb_util <= 1.0 && pe_util <= 1.0 { 1.0 } else { 0.0 };
+    let valid = f[F_STRUCT_VALID] * fits;
+
+    let _ = (n_pes, macs_per_pe);
+    CostBreakdown {
+        energy_pj,
+        cycles,
+        edp: energy_pj * cycles,
+        valid,
+        glb_util,
+        pe_util,
+        energy_dram_pj: energy_b0,
+        energy_onchip_pj: energy_b1 + energy_b2,
+        energy_compute_pj: energy_mac,
+        cycles_compute,
+        cycles_dram,
+        cycles_glb,
+        cycles_pe,
+    }
+}
+
+/// Platform vector in f64 (native path).
+pub fn platform_vector(plat: &Platform) -> Vec<f64> {
+    plat.to_feature_vector().iter().map(|&x| x as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{decode, GenomeSpec};
+    use crate::model::features::extract;
+    use crate::util::rng::Pcg64;
+    use crate::workload::Workload;
+
+    fn eval_genome(genome: &[u32]) -> (CostBreakdown, Workload) {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        let p = Platform::edge();
+        let spec = GenomeSpec::for_workload(&w);
+        let d = decode(&spec, &w, genome);
+        let f = extract(&d, &w, &p);
+        (evaluate_features(&f, &platform_vector(&p)), w)
+    }
+
+    /// Mapping genes 1, strategy segments cleared.
+    fn dense_genome(spec: &GenomeSpec) -> Vec<u32> {
+        let mut g = vec![1u32; spec.len()];
+        for i in spec.format_start..spec.len() {
+            g[i] = 0;
+        }
+        g
+    }
+
+    #[test]
+    fn dense_design_costs_are_positive() {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        let spec = GenomeSpec::for_workload(&w);
+        let (cb, _) = eval_genome(&dense_genome(&spec));
+        assert!(cb.energy_pj > 0.0);
+        assert!(cb.cycles >= 1.0);
+        assert!((cb.edp - cb.energy_pj * cb.cycles).abs() < 1e-6);
+        assert!(cb.valid == 1.0 || cb.valid == 0.0);
+    }
+
+    #[test]
+    fn energy_split_sums_to_total() {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        let spec = GenomeSpec::for_workload(&w);
+        let (cb, _) = eval_genome(&dense_genome(&spec));
+        let sum = cb.energy_dram_pj + cb.energy_onchip_pj + cb.energy_compute_pj;
+        assert!((sum - cb.energy_pj).abs() / cb.energy_pj < 1e-12);
+    }
+
+    #[test]
+    fn latency_is_max_of_stages() {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        let spec = GenomeSpec::for_workload(&w);
+        let (cb, _) = eval_genome(&dense_genome(&spec));
+        let stage_max =
+            cb.cycles_compute.max(cb.cycles_dram).max(cb.cycles_glb).max(cb.cycles_pe);
+        assert!((cb.cycles - stage_max.max(1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_designs_never_nan() {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        let p = Platform::mobile();
+        let spec = GenomeSpec::for_workload(&w);
+        let pv = platform_vector(&p);
+        let mut rng = Pcg64::seeded(21);
+        for _ in 0..300 {
+            let g = spec.random(&mut rng);
+            let d = decode(&spec, &w, &g);
+            let f = extract(&d, &w, &p);
+            let cb = evaluate_features(&f, &pv);
+            assert!(cb.energy_pj.is_finite() && cb.cycles.is_finite() && cb.edp.is_finite());
+            assert!(cb.energy_pj >= 0.0 && cb.cycles >= 1.0);
+        }
+    }
+
+    #[test]
+    fn capacity_violation_invalidates() {
+        // All tiling at L2_T: the whole workload must sit in the GLB. On
+        // edge (128 KB) a 16x32 + 32x16 + 16x16 tile fits, so make the
+        // workload big instead.
+        let w = Workload::spmm("big", 1024, 1024, 1024, 0.9, 0.9);
+        let p = Platform::edge();
+        let spec = GenomeSpec::for_workload(&w);
+        let mut g = dense_genome(&spec);
+        for i in spec.factor_start..spec.format_start {
+            g[i] = 2; // everything at L2_T
+        }
+        let d = decode(&spec, &w, &g);
+        let f = extract(&d, &w, &p);
+        let cb = evaluate_features(&f, &platform_vector(&p));
+        assert!(cb.glb_util > 1.0);
+        assert_eq!(cb.valid, 0.0);
+    }
+
+    #[test]
+    fn gating_saves_energy_not_cycles() {
+        let w = Workload::spmm("t", 32, 32, 32, 0.3, 0.3);
+        let p = Platform::mobile();
+        let spec = GenomeSpec::for_workload(&w);
+        let mut g = dense_genome(&spec);
+        for i in spec.factor_start..spec.format_start {
+            g[i] = 4; // all at L3_T: pure temporal in-PE execution
+        }
+        let d_none = decode(&spec, &w, &g);
+        let mut g_gate = g.clone();
+        g_gate[spec.sg_start + 2] = 3; // Gate P<->Q at compute
+        let d_gate = decode(&spec, &w, &g_gate);
+        let pv = platform_vector(&p);
+        let c_none = evaluate_features(&extract(&d_none, &w, &p), &pv);
+        let c_gate = evaluate_features(&extract(&d_gate, &w, &p), &pv);
+        assert!(c_gate.energy_pj < c_none.energy_pj);
+        assert!((c_gate.cycles - c_none.cycles).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,350 @@
+//! FEATURE_SCHEMA_V1 — the Rust ⇄ JAX evaluator contract.
+//!
+//! [`extract`] turns a decoded design into a fixed-length numeric feature
+//! vector. Everything *combinatorial* (loop-order reuse analysis, rank
+//! enumeration, format storage models, S/G multipliers, fan-outs) is
+//! resolved here; everything *arithmetic* (traffic scaling, energy sums,
+//! bandwidth-bound latency, capacity checks, EDP) happens in the shared
+//! cost formula — implemented twice, once in `model::cost` (f64, native)
+//! and once in `python/compile/model.py` (f32, the AOT/PJRT hot path),
+//! and cross-validated by tests.
+//!
+//! Any change here must bump [`SCHEMA_VERSION`] and be mirrored in
+//! `python/compile/model.py`.
+
+use crate::arch::{Boundary, Platform};
+use crate::genome::{tensor_ranks, Design};
+use crate::mapping::{loopnest, MapLevel};
+use crate::sparse::{control_overhead, effect, stack_storage, RankFormat};
+use crate::workload::{Workload, NUM_TENSORS, TENSOR_P, TENSOR_Q, TENSOR_Z};
+
+use super::validity::structural_problems;
+
+/// Schema version — serialized into `artifacts/meta.json` by the Python
+/// AOT pipeline and asserted by the Rust runtime at load time.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Feature vector length per design.
+pub const NUM_FEATURES: usize = 48;
+/// Platform vector length.
+pub const NUM_PLATFORM_FEATURES: usize = 16;
+
+// --- feature indices (keep in sync with python/compile/model.py) --------
+pub const F_P_WORDS_B0: usize = 0;
+pub const F_Q_WORDS_B0: usize = 1;
+pub const F_Z_WORDS_B0: usize = 2;
+pub const F_P_GLB_READS_B1: usize = 3;
+pub const F_Q_GLB_READS_B1: usize = 4;
+pub const F_Z_GLB_WORDS_B1: usize = 5;
+pub const F_P_NOC_WORDS_B1: usize = 6;
+pub const F_Q_NOC_WORDS_B1: usize = 7;
+pub const F_Z_NOC_WORDS_B1: usize = 8;
+pub const F_P_WORDS_B2: usize = 9;
+pub const F_Q_WORDS_B2: usize = 10;
+pub const F_Z_WORDS_B2: usize = 11;
+pub const F_CR_P_B0: usize = 12;
+pub const F_CR_Q_B0: usize = 13;
+pub const F_CR_Z_B0: usize = 14;
+pub const F_CR_P_B1: usize = 15;
+pub const F_CR_Q_B1: usize = 16;
+pub const F_CR_Z_B1: usize = 17;
+pub const F_META_P_B0: usize = 18;
+pub const F_META_Q_B0: usize = 19;
+pub const F_META_Z_B0: usize = 20;
+pub const F_META_P_B1: usize = 21;
+pub const F_META_Q_B1: usize = 22;
+pub const F_META_Z_B1: usize = 23;
+pub const F_SG_P_ENERGY_B1: usize = 24;
+pub const F_SG_Q_ENERGY_B1: usize = 25;
+pub const F_SG_CYCLES_B1: usize = 26;
+pub const F_SG_P_ENERGY_B2: usize = 27;
+pub const F_SG_Q_ENERGY_B2: usize = 28;
+pub const F_SG_CYCLES_B2: usize = 29;
+pub const F_MAC_ENERGY_FRAC: usize = 30;
+pub const F_COMPUTE_CYCLE_FRAC: usize = 31;
+pub const F_TOTAL_OPS: usize = 32;
+pub const F_ACTIVE_MACS: usize = 33;
+pub const F_GLB_TILE_WORDS: usize = 34;
+pub const F_PE_TILE_WORDS: usize = 35;
+pub const F_STRUCT_VALID: usize = 36;
+pub const F_CTRL_B1: usize = 37;
+pub const F_CTRL_B2: usize = 38;
+pub const F_CTRL_C: usize = 39;
+pub const F_ACTIVE_PES: usize = 40;
+pub const F_DENSITY_P: usize = 41;
+pub const F_DENSITY_Q: usize = 42;
+pub const F_DENSITY_Z: usize = 43;
+// 44..48 reserved (zero).
+
+/// Extracted feature vector (f64 precision; the runtime casts to f32).
+pub type Features = [f64; NUM_FEATURES];
+
+/// Compression statistics of a tensor's tile at a boundary, given the
+/// tensor's (precomputed) materialized ranks.
+fn tile_compression(
+    design: &Design,
+    w: &Workload,
+    t: usize,
+    ranks: &[crate::genome::RankId],
+    b: Boundary,
+) -> (f64 /* cr */, f64 /* meta_frac */) {
+    let inside = loopnest::levels_inside(b);
+    let mut extents: Vec<u64> = Vec::new();
+    let mut formats: Vec<RankFormat> = Vec::new();
+    for (rank, fmt) in ranks.iter().zip(&design.strategy.formats[t]) {
+        if inside.contains(&rank.level) {
+            extents.push(rank.extent);
+            formats.push(*fmt);
+        }
+    }
+    let dense: f64 = extents.iter().map(|&e| e as f64).product();
+    if extents.is_empty() || dense <= 1.0 {
+        return (1.0, 0.0);
+    }
+    let (data, meta) = stack_storage(&extents, &formats, w.tensors[t].density);
+    ((data + meta) / dense, meta / dense)
+}
+
+/// Extract FEATURE_SCHEMA_V1 for one design.
+pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
+    let mut f = [0.0f64; NUM_FEATURES];
+    let m = &design.mapping;
+    let dp = w.tensors[TENSOR_P].density;
+    let dq = w.tensors[TENSOR_Q].density;
+    let dz = w.tensors[TENSOR_Z].density;
+
+    // Hot path: flatten the nest once and derive the three boundary loop
+    // lists and per-tensor rank lists from it (profiling showed repeated
+    // flatten/rank walks dominated extraction — see EXPERIMENTS.md §Perf).
+    let flat = loopnest::flatten(m);
+    let loops_b0 = loopnest::temporal_loops_above_from(&flat, Boundary::DramGlb);
+    let loops_b1 = loopnest::temporal_loops_above_from(&flat, Boundary::GlbPe);
+    let loops_b2 = loopnest::temporal_loops_above_from(&flat, Boundary::PeMac);
+    let ranks: [Vec<crate::genome::RankId>; 3] = [
+        tensor_ranks(m, w, 0),
+        tensor_ranks(m, w, 1),
+        tensor_ranks(m, w, 2),
+    ];
+
+    // --- boundary 0: DRAM -> GLB (dense-equivalent words) ---------------
+    for (t, idx) in [(TENSOR_P, F_P_WORDS_B0), (TENSOR_Q, F_Q_WORDS_B0)] {
+        f[idx] = loopnest::tile_elems(m, w, t, Boundary::DramGlb)
+            * loopnest::input_multiplicity_over(&loops_b0, w, t);
+    }
+    f[F_Z_WORDS_B0] = loopnest::output_traffic_elems_over(
+        &loops_b0,
+        w,
+        loopnest::tile_elems(m, w, TENSOR_Z, Boundary::DramGlb),
+    );
+
+    // --- boundary 1: GLB -> PEs over the NoC -----------------------------
+    let pe_fanout = m.fanout(MapLevel::L2S) as f64;
+    for (t, ridx, nidx) in [
+        (TENSOR_P, F_P_GLB_READS_B1, F_P_NOC_WORDS_B1),
+        (TENSOR_Q, F_Q_GLB_READS_B1, F_Q_NOC_WORDS_B1),
+    ] {
+        let tile = loopnest::tile_elems(m, w, t, Boundary::GlbPe);
+        let mult = loopnest::input_multiplicity_over(&loops_b1, w, t);
+        let distinct = loopnest::spatial_distinct(m, w, t, MapLevel::L2S) as f64;
+        // GLB is read once per distinct tile (multicast on the NoC)...
+        f[ridx] = tile * mult * distinct;
+        // ...but every PE receives its copy.
+        f[nidx] = tile * mult * pe_fanout;
+    }
+    {
+        // Output at boundary 1: per-PE psum traffic plus cross-PE
+        // reduction when contraction dims are spatial at L2_S.
+        let tile = loopnest::tile_elems(m, w, TENSOR_Z, Boundary::GlbPe);
+        let base = loopnest::output_traffic_elems_over(&loops_b1, w, tile);
+        let distinct_z =
+            loopnest::spatial_distinct(m, w, TENSOR_Z, MapLevel::L2S) as f64;
+        let spatial_k = pe_fanout / distinct_z; // reduction width across PEs
+        f[F_Z_GLB_WORDS_B1] = base * distinct_z * spatial_k.max(1.0);
+        f[F_Z_NOC_WORDS_B1] = base * pe_fanout.max(1.0);
+    }
+
+    // --- boundary 2: PE buffer -> MACs -----------------------------------
+    let mac_fanout = m.fanout(MapLevel::L3S) as f64;
+    for (t, idx) in [(TENSOR_P, F_P_WORDS_B2), (TENSOR_Q, F_Q_WORDS_B2)] {
+        let mult = loopnest::input_multiplicity_over(&loops_b2, w, t);
+        let distinct = loopnest::spatial_distinct(m, w, t, MapLevel::L3S) as f64;
+        f[idx] = mult * distinct * pe_fanout;
+    }
+    {
+        let base = loopnest::output_traffic_elems_over(&loops_b2, w, 1.0);
+        let distinct_z =
+            loopnest::spatial_distinct(m, w, TENSOR_Z, MapLevel::L3S) as f64;
+        let spatial_k = mac_fanout / distinct_z;
+        f[F_Z_WORDS_B2] = base * distinct_z * spatial_k.max(1.0) * pe_fanout;
+    }
+
+    // --- compression ratios and metadata fractions ----------------------
+    // Computed once per (tensor, boundary) and reused by the capacity
+    // accounting below (stack_storage is the second-hottest call).
+    let mut crs = [[0.0f64; 2]; NUM_TENSORS];
+    let mut metas = [[0.0f64; 2]; NUM_TENSORS];
+    for t in 0..NUM_TENSORS {
+        let (cr_b0, meta_b0) = tile_compression(design, w, t, &ranks[t], Boundary::DramGlb);
+        let (cr_b1, meta_b1) = tile_compression(design, w, t, &ranks[t], Boundary::GlbPe);
+        crs[t] = [cr_b0, cr_b1];
+        metas[t] = [meta_b0, meta_b1];
+    }
+    for (t, cr0, cr1, me0, me1) in [
+        (TENSOR_P, F_CR_P_B0, F_CR_P_B1, F_META_P_B0, F_META_P_B1),
+        (TENSOR_Q, F_CR_Q_B0, F_CR_Q_B1, F_META_Q_B0, F_META_Q_B1),
+        (TENSOR_Z, F_CR_Z_B0, F_CR_Z_B1, F_META_Z_B0, F_META_Z_B1),
+    ] {
+        f[cr0] = crs[t][0];
+        f[cr1] = crs[t][1];
+        f[me0] = metas[t][0];
+        f[me1] = metas[t][1];
+    }
+
+    // --- S/G multipliers --------------------------------------------------
+    let sg_l2 = effect(design.strategy.sg[0], dp, dq);
+    let sg_l3 = effect(design.strategy.sg[1], dp, dq);
+    let sg_c = effect(design.strategy.sg[2], dp, dq);
+    f[F_SG_P_ENERGY_B1] = sg_l2.p_energy;
+    f[F_SG_Q_ENERGY_B1] = sg_l2.q_energy;
+    f[F_SG_CYCLES_B1] = sg_l2.cycles;
+    f[F_SG_P_ENERGY_B2] = sg_l3.p_energy;
+    f[F_SG_Q_ENERGY_B2] = sg_l3.q_energy;
+    f[F_SG_CYCLES_B2] = sg_l3.cycles;
+    f[F_MAC_ENERGY_FRAC] = sg_c.p_energy.min(sg_c.q_energy);
+    // Skips anywhere shorten the effectual compute stream; floor at the
+    // intrinsic effectual fraction dp*dq.
+    f[F_COMPUTE_CYCLE_FRAC] =
+        (sg_l2.cycles * sg_l3.cycles * sg_c.cycles).max(dp * dq).min(1.0);
+    f[F_CTRL_B1] = control_overhead(design.strategy.sg[0]);
+    f[F_CTRL_B2] = control_overhead(design.strategy.sg[1]);
+    f[F_CTRL_C] = control_overhead(design.strategy.sg[2]);
+
+    // --- compute / occupancy / validity ----------------------------------
+    f[F_TOTAL_OPS] = w.total_ops();
+    f[F_ACTIVE_PES] = pe_fanout.max(1.0);
+    f[F_ACTIVE_MACS] = (pe_fanout * mac_fanout).max(1.0);
+    let mut glb_words = 0.0;
+    let mut pe_words = 0.0;
+    for t in 0..NUM_TENSORS {
+        glb_words += loopnest::tile_elems(m, w, t, Boundary::DramGlb) * crs[t][0];
+        pe_words += loopnest::tile_elems(m, w, t, Boundary::GlbPe) * crs[t][1];
+    }
+    f[F_GLB_TILE_WORDS] = glb_words;
+    f[F_PE_TILE_WORDS] = pe_words;
+    f[F_STRUCT_VALID] =
+        if structural_problems(design, w, plat).is_empty() { 1.0 } else { 0.0 };
+    f[F_DENSITY_P] = dp;
+    f[F_DENSITY_Q] = dq;
+    f[F_DENSITY_Z] = dz;
+    f
+}
+
+/// Cast features to the f32 row consumed by the PJRT executable.
+pub fn to_f32_row(f: &Features) -> Vec<f32> {
+    f.iter().map(|&x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{decode, GenomeSpec};
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (Workload, Platform, GenomeSpec) {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        let p = Platform::edge();
+        let s = GenomeSpec::for_workload(&w);
+        (w, p, s)
+    }
+
+    /// All-ones mapping genes with *cleared* strategy segments (formats
+    /// uncompressed, no S/G) — the dense reference genome.
+    fn dense_genome(spec: &GenomeSpec) -> Vec<u32> {
+        let mut g = vec![1u32; spec.len()];
+        for i in spec.format_start..spec.len() {
+            g[i] = 0;
+        }
+        g
+    }
+
+    #[test]
+    fn features_finite_for_random_designs() {
+        let (w, p, spec) = setup();
+        let mut rng = Pcg64::seeded(9);
+        for _ in 0..200 {
+            let g = spec.random(&mut rng);
+            let d = decode(&spec, &w, &g);
+            let f = extract(&d, &w, &p);
+            for (i, v) in f.iter().enumerate() {
+                assert!(v.is_finite() && *v >= 0.0, "feature {i} = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_uncompressed_baseline() {
+        let (w, p, spec) = setup();
+        let g = dense_genome(&spec); // all tiling at L1_T, no formats
+        let d = decode(&spec, &w, &g);
+        let f = extract(&d, &w, &p);
+        // No compression: all ratios 1, no metadata.
+        for idx in [F_CR_P_B0, F_CR_Q_B0, F_CR_Z_B0] {
+            assert_eq!(f[idx], 1.0);
+        }
+        for idx in [F_META_P_B0, F_META_Q_B0] {
+            assert_eq!(f[idx], 0.0);
+        }
+        // No S/G: all multipliers 1.
+        assert_eq!(f[F_SG_CYCLES_B1], 1.0);
+        assert_eq!(f[F_MAC_ENERGY_FRAC], 1.0);
+        assert_eq!(f[F_TOTAL_OPS], (16 * 32 * 16) as f64);
+        assert_eq!(f[F_STRUCT_VALID], 1.0);
+        assert_eq!(f[F_ACTIVE_MACS], 1.0); // no spatial mapping at all
+    }
+
+    #[test]
+    fn compression_reduces_traffic_ratio_when_sparse() {
+        let (w, p, spec) = setup();
+        let mut g = dense_genome(&spec);
+        // Tile M,K at L2_T so P has materialized ranks inside the GLB.
+        for i in spec.factor_start..spec.format_start {
+            g[i] = 2;
+        }
+        // P formats: bitmask everywhere.
+        for s in 0..5 {
+            g[spec.format_start + s] = 1;
+        }
+        let d = decode(&spec, &w, &g);
+        let f = extract(&d, &w, &p);
+        // P density 0.5, bitmask: cr < 1 (0.5 data + 1/16 metadata bits).
+        assert!(f[F_CR_P_B0] < 1.0, "cr={}", f[F_CR_P_B0]);
+        assert!(f[F_META_P_B0] > 0.0);
+        // Q left uncompressed.
+        assert_eq!(f[F_CR_Q_B0], 1.0);
+    }
+
+    #[test]
+    fn spatial_mapping_populates_fanout() {
+        let (w, p, spec) = setup();
+        let mut g = dense_genome(&spec);
+        // Put all of M (16 = 2^4) at L2_S: fanout 16.
+        for i in 0..4 {
+            g[spec.factor_start + i] = 3;
+        }
+        let d = decode(&spec, &w, &g);
+        let f = extract(&d, &w, &p);
+        assert_eq!(f[F_ACTIVE_PES], 16.0);
+        assert_eq!(f[F_STRUCT_VALID], 1.0); // 16 <= 256 PEs
+        // Q (K,N) has no M dim: broadcast to all 16 PEs, one GLB read.
+        assert!(f[F_Q_NOC_WORDS_B1] >= 16.0 * f[F_Q_GLB_READS_B1] / 16.0);
+        assert!(f[F_Q_GLB_READS_B1] * 16.0 == f[F_Q_NOC_WORDS_B1]);
+    }
+
+    #[test]
+    fn schema_row_is_f32_sized() {
+        let (w, p, spec) = setup();
+        let d = decode(&spec, &w, &dense_genome(&spec));
+        let row = to_f32_row(&extract(&d, &w, &p));
+        assert_eq!(row.len(), NUM_FEATURES);
+    }
+}

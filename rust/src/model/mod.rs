@@ -1,0 +1,183 @@
+//! The analytical sparse-accelerator cost model (the paper's "HW
+//! evaluation environment", a Sparseloop/TimeloopV2-class substrate).
+//!
+//! Pipeline: genome → [`crate::genome::decode`] → [`features::extract`]
+//! (combinatorial analysis) → [`cost::evaluate_features`] (shared
+//! arithmetic, mirrored in `python/compile/model.py` for the AOT path).
+
+pub mod cost;
+pub mod features;
+pub mod validity;
+
+pub use cost::{evaluate_features, platform_vector, CostBreakdown};
+pub use features::{extract, to_f32_row, Features, NUM_FEATURES, NUM_PLATFORM_FEATURES,
+                   SCHEMA_VERSION};
+pub use validity::{structural_problems, InvalidReason};
+
+use crate::arch::Platform;
+use crate::genome::{decode, Design, GenomeSpec};
+use crate::workload::Workload;
+
+/// Evaluation verdict for one genome/design.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalResult {
+    pub energy_pj: f64,
+    pub cycles: f64,
+    /// EDP in pJ·cycles; `f64::INFINITY` when invalid (dead individual —
+    /// the paper assigns these fitness 0).
+    pub edp: f64,
+    pub valid: bool,
+}
+
+impl EvalResult {
+    pub fn from_breakdown(cb: &CostBreakdown) -> EvalResult {
+        let valid = cb.valid > 0.5;
+        EvalResult {
+            energy_pj: cb.energy_pj,
+            cycles: cb.cycles,
+            edp: if valid { cb.edp } else { f64::INFINITY },
+            valid,
+        }
+    }
+
+    /// Fitness for maximizing searches: 1/EDP, 0 for dead individuals.
+    pub fn fitness(&self) -> f64 {
+        if self.valid && self.edp.is_finite() && self.edp > 0.0 {
+            1.0 / self.edp
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A reusable native evaluator for a (workload, platform) pair.
+///
+/// This is the reference implementation; the PJRT-backed
+/// [`crate::runtime::BatchEvaluator`] executes the same formula from the
+/// AOT artifact and is the default search hot path.
+pub struct NativeEvaluator {
+    pub workload: Workload,
+    pub platform: Platform,
+    pub spec: GenomeSpec,
+    platform_vec: Vec<f64>,
+}
+
+impl NativeEvaluator {
+    pub fn new(workload: Workload, platform: Platform) -> NativeEvaluator {
+        let spec = GenomeSpec::for_workload(&workload);
+        let platform_vec = platform_vector(&platform);
+        NativeEvaluator { workload, platform, spec, platform_vec }
+    }
+
+    /// Decode + evaluate one genome.
+    pub fn eval_genome(&self, genome: &[u32]) -> EvalResult {
+        let design = decode(&self.spec, &self.workload, genome);
+        self.eval_design(&design)
+    }
+
+    /// Evaluate an already-decoded design.
+    pub fn eval_design(&self, design: &Design) -> EvalResult {
+        let f = extract(design, &self.workload, &self.platform);
+        let cb = evaluate_features(&f, &self.platform_vec);
+        EvalResult::from_breakdown(&cb)
+    }
+
+    /// Full breakdown (reports, Fig. 2).
+    pub fn breakdown(&self, design: &Design) -> CostBreakdown {
+        let f = extract(design, &self.workload, &self.platform);
+        evaluate_features(&f, &self.platform_vec)
+    }
+
+    /// Diagnostics: why is this genome invalid (empty if valid).
+    pub fn explain_invalid(&self, genome: &[u32]) -> Vec<InvalidReason> {
+        let design = decode(&self.spec, &self.workload, genome);
+        let mut problems = structural_problems(&design, &self.workload, &self.platform);
+        let cb = self.breakdown(&design);
+        if cb.glb_util > 1.0 {
+            problems.push(InvalidReason::GlbCapacity {
+                words: cb.glb_util * self.platform.glb_words(),
+                capacity: self.platform.glb_words(),
+            });
+        }
+        if cb.pe_util > 1.0 {
+            problems.push(InvalidReason::PeCapacity {
+                words: cb.pe_util * self.platform.pe_buf_words(),
+                capacity: self.platform.pe_buf_words(),
+            });
+        }
+        problems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn native_evaluator_roundtrip() {
+        let ev = NativeEvaluator::new(
+            Workload::spmm("t", 16, 32, 16, 0.5, 0.25),
+            Platform::edge(),
+        );
+        let mut g = vec![1u32; ev.spec.len()];
+        for i in ev.spec.format_start..ev.spec.len() {
+            g[i] = 0;
+        }
+        let r = ev.eval_genome(&g);
+        assert!(r.valid);
+        assert!(r.edp.is_finite());
+        assert!(r.fitness() > 0.0);
+    }
+
+    #[test]
+    fn invalid_genome_explained() {
+        let ev = NativeEvaluator::new(
+            Workload::spmm("t", 1024, 1024, 1024, 0.9, 0.9),
+            Platform::edge(),
+        );
+        let mut g = vec![1u32; ev.spec.len()];
+        for i in ev.spec.factor_start..ev.spec.format_start {
+            g[i] = 3; // everything spatial at L2_S: massive fanout
+        }
+        let r = ev.eval_genome(&g);
+        assert!(!r.valid);
+        assert_eq!(r.fitness(), 0.0);
+        assert!(!ev.explain_invalid(&g).is_empty());
+    }
+
+    #[test]
+    fn some_random_genomes_valid_some_not() {
+        // The defining property of the joint design space (Fig. 7): it
+        // contains both valid and invalid points in quantity.
+        let ev = NativeEvaluator::new(
+            Workload::spmm("mm3", 730, 730, 730, 0.118, 0.118),
+            Platform::cloud(),
+        );
+        let mut rng = Pcg64::seeded(7);
+        let mut valid = 0;
+        let n = 400;
+        for _ in 0..n {
+            let g = ev.spec.random(&mut rng);
+            if ev.eval_genome(&g).valid {
+                valid += 1;
+            }
+        }
+        assert!(valid > 0, "no valid designs in {n} samples");
+        assert!(valid < n, "every design valid — invalid structure missing");
+    }
+
+    #[test]
+    fn better_hardware_lower_edp() {
+        // The same modest design should not be slower on cloud than edge.
+        let w = Workload::spmm("t", 64, 64, 64, 0.3, 0.3);
+        let spec = GenomeSpec::for_workload(&w);
+        let mut g = vec![1u32; spec.len()];
+        for i in spec.format_start..spec.len() {
+            g[i] = 0;
+        }
+        let edge = NativeEvaluator::new(w.clone(), Platform::edge()).eval_genome(&g);
+        let cloud = NativeEvaluator::new(w, Platform::cloud()).eval_genome(&g);
+        assert!(cloud.cycles <= edge.cycles);
+    }
+}

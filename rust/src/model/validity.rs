@@ -1,0 +1,134 @@
+//! Structural validity of a design point: sparse-strategy compatibility
+//! (see [`crate::sparse::compat`]) and spatial fan-out limits. Capacity
+//! checks are continuous (buffer utilization) and are computed inside the
+//! cost arithmetic so the AOT evaluator can perform them too.
+
+use crate::arch::Platform;
+use crate::genome::Design;
+use crate::mapping::MapLevel;
+use crate::workload::Workload;
+
+/// Why a design is structurally invalid.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InvalidReason {
+    /// Sparse-strategy internal inconsistency or strategy⇄mapping clash.
+    Strategy(String),
+    /// Spatial fan-out at L2_S exceeds the PE count.
+    PeFanout { required: u64, available: u64 },
+    /// Spatial fan-out at L3_S exceeds the MACs per PE.
+    MacFanout { required: u64, available: u64 },
+    /// GLB tile footprint exceeds capacity (reported by the cost model).
+    GlbCapacity { words: f64, capacity: f64 },
+    /// PE-buffer tile footprint exceeds capacity.
+    PeCapacity { words: f64, capacity: f64 },
+}
+
+impl std::fmt::Display for InvalidReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InvalidReason::Strategy(s) => write!(f, "strategy: {s}"),
+            InvalidReason::PeFanout { required, available } => {
+                write!(f, "L2_S fanout {required} > {available} PEs")
+            }
+            InvalidReason::MacFanout { required, available } => {
+                write!(f, "L3_S fanout {required} > {available} MACs/PE")
+            }
+            InvalidReason::GlbCapacity { words, capacity } => {
+                write!(f, "GLB tile {words:.0} words > capacity {capacity:.0}")
+            }
+            InvalidReason::PeCapacity { words, capacity } => {
+                write!(f, "PE tile {words:.0} words > capacity {capacity:.0}")
+            }
+        }
+    }
+}
+
+/// Structural checks only (no capacity — that needs the traffic model).
+pub fn structural_problems(
+    design: &Design,
+    _w: &Workload,
+    plat: &Platform,
+) -> Vec<InvalidReason> {
+    let mut problems: Vec<InvalidReason> = design
+        .strategy
+        .check()
+        .into_iter()
+        .map(|p| InvalidReason::Strategy(p.to_string()))
+        .collect();
+
+    let pe_fan = design.mapping.fanout(MapLevel::L2S);
+    if pe_fan > plat.total_pes() {
+        problems.push(InvalidReason::PeFanout { required: pe_fan, available: plat.total_pes() });
+    }
+    let mac_fan = design.mapping.fanout(MapLevel::L3S);
+    if mac_fan > plat.macs_per_pe {
+        problems
+            .push(InvalidReason::MacFanout { required: mac_fan, available: plat.macs_per_pe });
+    }
+    problems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{decode, GenomeSpec};
+    use crate::mapping::Mapping;
+    use crate::sparse::{RankFormat, SgMechanism, SparseStrategy};
+
+    fn base() -> (Workload, Platform) {
+        (Workload::spmm("t", 16, 16, 16, 0.5, 0.5), Platform::edge())
+    }
+
+    #[test]
+    fn valid_design_has_no_problems() {
+        let (w, p) = base();
+        let spec = GenomeSpec::for_workload(&w);
+        let mut g = vec![1u32; spec.len()]; // all factors at L1_T
+        for i in spec.format_start..spec.len() {
+            g[i] = 0; // no compression, no S/G
+        }
+        let d = decode(&spec, &w, &g);
+        assert!(structural_problems(&d, &w, &p).is_empty());
+    }
+
+    #[test]
+    fn oversized_fanout_detected() {
+        let (w, p) = base();
+        let m = Mapping::trivial(&w, MapLevel::L2S); // 16*16*16 = 4096 PEs
+        let d = Design { mapping: m, strategy: SparseStrategy::dense([0, 0, 0]) };
+        let problems = structural_problems(&d, &w, &p);
+        assert!(problems
+            .iter()
+            .any(|r| matches!(r, InvalidReason::PeFanout { required: 4096, available: 256 })));
+    }
+
+    #[test]
+    fn mac_fanout_detected_on_edge() {
+        let (w, p) = base();
+        let m = Mapping::trivial(&w, MapLevel::L3S); // 4096 MACs in 1 PE
+        let d = Design { mapping: m, strategy: SparseStrategy::dense([0, 0, 0]) };
+        let problems = structural_problems(&d, &w, &p);
+        assert!(problems.iter().any(|r| matches!(r, InvalidReason::MacFanout { .. })));
+    }
+
+    #[test]
+    fn strategy_problems_propagate() {
+        let (w, p) = base();
+        let m = Mapping::trivial(&w, MapLevel::L3T);
+        let mut s = SparseStrategy::dense([2, 2, 2]);
+        s.sg[0] = SgMechanism::SkipPfromQ; // Q uncompressed
+        let d = Design { mapping: m, strategy: s };
+        let problems = structural_problems(&d, &w, &p);
+        assert_eq!(problems.len(), 1);
+        assert!(matches!(&problems[0], InvalidReason::Strategy(_)));
+    }
+
+    #[test]
+    fn display_messages() {
+        let r = InvalidReason::PeFanout { required: 512, available: 256 };
+        assert!(r.to_string().contains("512"));
+        let r2 = InvalidReason::GlbCapacity { words: 1e6, capacity: 65536.0 };
+        assert!(r2.to_string().contains("capacity"));
+        let _ = RankFormat::Bitmask; // silence unused import in some cfgs
+    }
+}

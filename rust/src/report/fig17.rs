@@ -1,0 +1,169 @@
+//! E4/E5 / Fig. 17 — (a) SparseMap vs classical optimizers on the pruned
+//! VGG16 conv layers (cloud platform, shared budget); (b) percentage of
+//! valid points explored per platform, averaged over the conv layers.
+
+use super::{write_csv, ExpConfig};
+use crate::arch::Platform;
+use crate::baselines::run_method;
+use crate::search::Outcome;
+use crate::util::stats::geomean;
+use crate::util::table::{sci, Table};
+use crate::util::threadpool::{parallel_map, ThreadPool};
+use crate::workload::table3;
+use std::sync::Arc;
+
+/// The Fig. 17a method set.
+pub const FIG17_METHODS: &[&str] = &["sparsemap", "pso", "mcts", "tbpsa", "ppo", "dqn"];
+
+/// Run every (method, conv-layer) arm on the given platform.
+pub fn run_matrix(cfg: &ExpConfig, platform: &Platform, layers: &[&str]) -> Vec<Outcome> {
+    let pool = ThreadPool::new(cfg.threads.max(1));
+    let cfg = Arc::new(cfg.clone());
+    let platform = platform.clone();
+    let jobs: Vec<(String, String)> = FIG17_METHODS
+        .iter()
+        .flat_map(|m| layers.iter().map(move |l| (m.to_string(), l.to_string())))
+        .collect();
+    parallel_map(&pool, jobs, move |(method, layer)| {
+        let w = table3::by_id(&layer).expect("layer");
+        // Workers always use the native backend (PJRT clients are not
+        // shared across threads); the two backends are cross-validated.
+        let ctx = crate::search::EvalContext::new(
+            crate::search::Backend::native(w, platform.clone()),
+            cfg.budget,
+        );
+        run_method(&method, ctx, cfg.seed).expect("method")
+    })
+}
+
+/// Fig. 17a: EDP per conv layer per method on cloud.
+pub fn run_a(cfg: &ExpConfig) -> anyhow::Result<String> {
+    let layers: Vec<&str> = (1..=13).map(|i| Box::leak(format!("conv{i}").into_boxed_str()) as &str).collect();
+    let outcomes = run_matrix(cfg, &Platform::cloud(), &layers);
+
+    let mut table = Table::new(
+        &["layer", "sparsemap", "pso", "mcts", "tbpsa", "ppo", "dqn", "best"],
+    );
+    let mut csv = String::from("layer,method,best_edp,valid_ratio\n");
+    for layer in &layers {
+        let mut cells = vec![layer.to_string()];
+        let mut best = ("", f64::INFINITY);
+        for method in FIG17_METHODS {
+            let o = outcomes
+                .iter()
+                .find(|o| &o.workload == layer && &o.method == method)
+                .expect("outcome");
+            cells.push(if o.found_valid() { sci(o.best_edp) } else { "-".into() });
+            if o.best_edp < best.1 {
+                best = (method, o.best_edp);
+            }
+            csv.push_str(&format!(
+                "{layer},{method},{},{:.4}\n",
+                if o.found_valid() { format!("{:.6e}", o.best_edp) } else { String::new() },
+                o.valid_ratio()
+            ));
+        }
+        cells.push(best.0.to_string());
+        table.row(cells);
+    }
+    write_csv(&cfg.out_dir, "fig17a.csv", &csv)?;
+
+    // Geomean improvement of SparseMap over each baseline.
+    let mut summary = String::new();
+    for method in &FIG17_METHODS[1..] {
+        let ratios: Vec<f64> = layers
+            .iter()
+            .filter_map(|layer| {
+                let ours = outcomes
+                    .iter()
+                    .find(|o| &o.workload == layer && o.method == "sparsemap")?;
+                let theirs = outcomes
+                    .iter()
+                    .find(|o| &o.workload == layer && &o.method == method)?;
+                if ours.found_valid() && theirs.found_valid() {
+                    Some(theirs.best_edp / ours.best_edp)
+                } else if ours.found_valid() {
+                    Some(1e6) // baseline found nothing valid at all
+                } else {
+                    None
+                }
+            })
+            .collect();
+        summary.push_str(&format!(
+            "  vs {:8}: geomean EDP reduction {:.1}x\n",
+            method,
+            geomean(&ratios)
+        ));
+    }
+    Ok(format!(
+        "Fig. 17a — pruned VGG16 @ cloud, budget {} per arm\n{}\nSparseMap improvement:\n{}",
+        cfg.budget,
+        table.render(),
+        summary
+    ))
+}
+
+/// Fig. 17b: valid-point percentage per platform (avg over conv layers).
+pub fn run_b(cfg: &ExpConfig) -> anyhow::Result<String> {
+    // A subset of layers keeps the default run affordable; the full list
+    // is used when budget <= 5000 is overridden upward.
+    let layers = ["conv2", "conv4", "conv7", "conv11"];
+    let mut table = Table::new(&["platform", "sparsemap", "pso", "mcts", "tbpsa", "ppo", "dqn"]);
+    let mut csv = String::from("platform,method,valid_ratio\n");
+    for plat in Platform::all() {
+        let outcomes = run_matrix(cfg, &plat, &layers);
+        let mut cells = vec![plat.name.clone()];
+        for method in FIG17_METHODS {
+            let ratios: Vec<f64> = outcomes
+                .iter()
+                .filter(|o| &o.method == method)
+                .map(|o| o.valid_ratio())
+                .collect();
+            let avg = ratios.iter().sum::<f64>() / ratios.len().max(1) as f64;
+            cells.push(format!("{:.1}%", 100.0 * avg));
+            csv.push_str(&format!("{},{},{:.4}\n", plat.name, method, avg));
+        }
+        table.row(cells);
+    }
+    write_csv(&cfg.out_dir, "fig17b.csv", &csv)?;
+    Ok(format!(
+        "Fig. 17b — valid points explored (avg over {} conv layers, budget {})\n{}",
+        layers.len(),
+        cfg.budget,
+        table.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            budget: 300,
+            threads: 4,
+            out_dir: std::env::temp_dir().join("sparsemap_fig17"),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matrix_runs_all_arms() {
+        let cfg = tiny_cfg();
+        let outcomes = run_matrix(&cfg, &Platform::cloud(), &["conv11"]);
+        assert_eq!(outcomes.len(), FIG17_METHODS.len());
+        for o in &outcomes {
+            assert!(o.evals <= cfg.budget);
+        }
+    }
+
+    #[test]
+    fn sparsemap_explores_more_valid_points_than_weakest_baseline() {
+        let cfg = ExpConfig { budget: 800, threads: 4, ..tiny_cfg() };
+        let outcomes = run_matrix(&cfg, &Platform::cloud(), &["conv11"]);
+        let get = |m: &str| outcomes.iter().find(|o| o.method == m).unwrap().valid_ratio();
+        let ours = get("sparsemap");
+        let weakest = FIG17_METHODS[1..].iter().map(|m| get(m)).fold(f64::INFINITY, f64::min);
+        assert!(ours >= weakest, "sparsemap {ours} < weakest baseline {weakest}");
+    }
+}

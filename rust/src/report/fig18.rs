@@ -1,0 +1,77 @@
+//! E7 / Fig. 18 — ablation: standard ES (direct encoding + LHS) vs
+//! ES + PFCE (prime-factor & Cantor encoding) vs full SparseMap
+//! (+ customized operators and HSHI), as population-mean-EDP convergence
+//! curves on one SpMM (mm3) and one SpConv (conv4) at cloud.
+
+use super::{write_csv, ExpConfig};
+use crate::arch::Platform;
+use crate::baselines::run_method;
+use crate::search::Outcome;
+use crate::util::table::{sci, Table};
+use crate::workload::table3;
+
+pub const ABLATION_ARMS: &[&str] = &["es-direct", "es-pfce", "sparsemap"];
+pub const ABLATION_WORKLOADS: &[&str] = &["mm3", "conv4"];
+
+pub fn run_arms(cfg: &ExpConfig) -> Vec<Outcome> {
+    let mut out = Vec::new();
+    for wl in ABLATION_WORKLOADS {
+        for method in ABLATION_ARMS {
+            let w = table3::by_id(wl).expect("workload");
+            let ctx = cfg.context(w, Platform::cloud());
+            out.push(run_method(method, ctx, cfg.seed).expect("method"));
+        }
+    }
+    out
+}
+
+pub fn run(cfg: &ExpConfig) -> anyhow::Result<String> {
+    let outcomes = run_arms(cfg);
+    let mut csv = String::from("workload,arm,evals,best_edp\n");
+    for o in &outcomes {
+        for &(e, v) in &o.curve {
+            csv.push_str(&format!("{},{},{},{:.6e}\n", o.workload, o.method, e, v));
+        }
+    }
+    write_csv(&cfg.out_dir, "fig18.csv", &csv)?;
+
+    let mut table = Table::new(&["workload", "arm", "best_edp", "valid_ratio"]);
+    for o in &outcomes {
+        table.row(vec![
+            o.workload.clone(),
+            o.method.clone(),
+            if o.found_valid() { sci(o.best_edp) } else { "-".into() },
+            format!("{:.1}%", 100.0 * o.valid_ratio()),
+        ]);
+    }
+    Ok(format!(
+        "Fig. 18 — ablation convergence (cloud, budget {} per arm)\n{}",
+        cfg.budget,
+        table.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_ordering_holds() {
+        // es-direct (dead-offspring-ridden) should not beat full
+        // SparseMap at equal budget; PFCE should sit at or above direct.
+        let cfg = ExpConfig { budget: 2_500, seed: 21, ..Default::default() };
+        let w = table3::by_id("mm3").unwrap();
+        let run = |m: &str| {
+            let ctx = cfg.context(w.clone(), Platform::cloud());
+            run_method(m, ctx, cfg.seed).unwrap()
+        };
+        let direct = run("es-direct");
+        let pfce = run("es-pfce");
+        let full = run("sparsemap");
+        // Valid-exploration ordering is the robust part of the claim.
+        assert!(pfce.valid_ratio() > direct.valid_ratio());
+        assert!(full.found_valid());
+        // Full SparseMap should beat the direct-encoding ES on EDP.
+        assert!(full.best_edp <= direct.best_edp);
+    }
+}

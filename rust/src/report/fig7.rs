@@ -1,0 +1,109 @@
+//! E2 / Fig. 7 — design-space structure: 1000 random samples of the
+//! joint (mapping × sparse strategy) space for an SpMM workload, PCA-
+//! projected to (mapping-PC1, strategy-PC1), tagged valid/invalid with
+//! EDP. The qualitative claim: invalid points vastly outnumber and
+//! surround the valid ones.
+
+use super::{write_csv, ExpConfig};
+use crate::arch::Platform;
+use crate::model::NativeEvaluator;
+use crate::util::pca;
+use crate::util::rng::Pcg64;
+use crate::workload::table3;
+
+#[derive(Clone, Debug)]
+pub struct Fig7Point {
+    pub mapping_pc: f64,
+    pub strategy_pc: f64,
+    pub edp: f64,
+    pub valid: bool,
+}
+
+pub fn sample(cfg: &ExpConfig, n: usize) -> Vec<Fig7Point> {
+    let w = table3::by_id("mm3").expect("mm3"); // the bibd-class SpMM
+    let ev = NativeEvaluator::new(w, Platform::cloud());
+    let mut rng = Pcg64::seeded(cfg.seed);
+
+    let mut mapping_rows: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut strategy_rows: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut results = Vec::with_capacity(n);
+    for _ in 0..n {
+        let g = ev.spec.random(&mut rng);
+        let r = ev.eval_genome(&g);
+        mapping_rows.push(
+            g[..ev.spec.format_start].iter().map(|&x| x as f64).collect(),
+        );
+        strategy_rows.push(
+            g[ev.spec.format_start..].iter().map(|&x| x as f64).collect(),
+        );
+        results.push(r);
+    }
+
+    let map_pca = pca::fit(&mapping_rows, 1, 60);
+    let str_pca = pca::fit(&strategy_rows, 1, 60);
+    mapping_rows
+        .iter()
+        .zip(&strategy_rows)
+        .zip(&results)
+        .map(|((m, s), r)| Fig7Point {
+            mapping_pc: pca::project(&map_pca, m)[0],
+            strategy_pc: pca::project(&str_pca, s)[0],
+            edp: if r.valid { r.edp } else { f64::NAN },
+            valid: r.valid,
+        })
+        .collect()
+}
+
+pub fn run(cfg: &ExpConfig) -> anyhow::Result<String> {
+    let points = sample(cfg, 1000);
+    let valid = points.iter().filter(|p| p.valid).count();
+    let mut csv = String::from("mapping_pc1,strategy_pc1,edp,valid\n");
+    for p in &points {
+        csv.push_str(&format!(
+            "{:.4},{:.4},{},{}\n",
+            p.mapping_pc,
+            p.strategy_pc,
+            if p.valid { format!("{:.4e}", p.edp) } else { String::new() },
+            p.valid as u8
+        ));
+    }
+    write_csv(&cfg.out_dir, "fig7.csv", &csv)?;
+    Ok(format!(
+        "Fig. 7 — design-space scatter (mm3 @ cloud, 1000 samples)\n\
+         valid: {} / {}  ({:.1}%) — invalid points dominate the space\n\
+         CSV: fig7.csv (mapping_pc1, strategy_pc1, edp, valid)\n",
+        valid,
+        points.len(),
+        100.0 * valid as f64 / points.len() as f64
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invalid_points_dominate() {
+        let cfg = ExpConfig { seed: 3, ..Default::default() };
+        let pts = sample(&cfg, 400);
+        let valid = pts.iter().filter(|p| p.valid).count();
+        assert!(valid > 0, "no valid points at all");
+        assert!(
+            (valid as f64) < 0.5 * pts.len() as f64,
+            "valid points are not a minority: {valid}/{}",
+            pts.len()
+        );
+    }
+
+    #[test]
+    fn projections_have_spread() {
+        let cfg = ExpConfig { seed: 4, ..Default::default() };
+        let pts = sample(&cfg, 200);
+        let var = |xs: Vec<f64>| {
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+        };
+        assert!(var(pts.iter().map(|p| p.mapping_pc).collect()) > 1e-6);
+        assert!(var(pts.iter().map(|p| p.strategy_pc).collect()) > 1e-6);
+    }
+}

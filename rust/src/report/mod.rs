@@ -1,0 +1,99 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §Experiments, E1–E9). Each driver returns the rendered
+//! report and writes CSV next to it so plots can be regenerated.
+
+pub mod fig10;
+pub mod fig17;
+pub mod fig18;
+pub mod fig2;
+pub mod fig7;
+pub mod table4;
+
+use crate::arch::Platform;
+use crate::search::{Backend, EvalContext};
+use crate::workload::Workload;
+use std::path::{Path, PathBuf};
+
+/// Common knobs for all experiment drivers.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    /// Sample budget per search arm (paper: 20 000).
+    pub budget: usize,
+    pub seed: u64,
+    /// Output directory for CSV artifacts.
+    pub out_dir: PathBuf,
+    /// Use the PJRT AOT evaluator (default) or the native model.
+    pub use_pjrt: bool,
+    /// Worker threads for independent arms.
+    pub threads: usize,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            budget: 20_000,
+            seed: 42,
+            out_dir: PathBuf::from("results"),
+            use_pjrt: false,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Build a fresh evaluation context for one arm.
+    ///
+    /// Note: the PJRT backend compiles the artifact per context; drivers
+    /// that fan out across threads use the native backend inside workers
+    /// (the two are cross-validated — see `rust/tests/runtime_xla.rs`).
+    pub fn context(&self, workload: Workload, platform: Platform) -> EvalContext {
+        let backend = if self.use_pjrt {
+            match crate::runtime::Runtime::from_default_dir()
+                .and_then(|rt| Backend::pjrt(&rt, workload.clone(), platform.clone()))
+            {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("warning: PJRT backend unavailable ({e}); using native");
+                    Backend::native(workload, platform)
+                }
+            }
+        } else {
+            Backend::native(workload, platform)
+        };
+        EvalContext::new(backend, self.budget)
+    }
+}
+
+/// Write a CSV file under the configured output dir.
+pub fn write_csv(dir: &Path, name: &str, csv: &str) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, csv)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = ExpConfig::default();
+        assert_eq!(c.budget, 20_000);
+        assert!(!c.use_pjrt);
+    }
+
+    #[test]
+    fn context_builds_native() {
+        let c = ExpConfig { budget: 10, ..Default::default() };
+        let ctx = c.context(Workload::spmm("t", 4, 4, 4, 0.5, 0.5), Platform::edge());
+        assert_eq!(ctx.budget, 10);
+    }
+
+    #[test]
+    fn write_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("sparsemap_csv_test");
+        let p = write_csv(&dir, "x.csv", "a,b\n1,2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "a,b\n1,2\n");
+    }
+}

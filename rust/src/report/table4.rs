@@ -1,0 +1,183 @@
+//! E6/E9 / Table IV — EDP of Sparseloop-Mapper-like, SAGE-like and
+//! SparseMap across all 28 Table III workloads × 3 platforms, plus the
+//! headline geomean reduction ratios from the abstract.
+
+use super::{write_csv, ExpConfig};
+use crate::arch::Platform;
+use crate::baselines::run_method;
+use crate::search::Outcome;
+use crate::util::stats::geomean;
+use crate::util::table::{ratio, sci, Table};
+use crate::util::threadpool::{parallel_map, ThreadPool};
+use crate::workload::table3;
+use std::sync::Arc;
+
+pub const TABLE4_METHODS: &[&str] = &["sparseloop", "sage-like", "sparsemap"];
+
+/// One cell of Table IV.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub workload: String,
+    pub platform: String,
+    pub method: String,
+    pub edp: f64,
+    pub valid_ratio: f64,
+}
+
+/// Run the full (or restricted) matrix.
+pub fn run_matrix(cfg: &ExpConfig, workloads: &[String]) -> Vec<Cell> {
+    let pool = ThreadPool::new(cfg.threads.max(1));
+    let cfg = Arc::new(cfg.clone());
+    let jobs: Vec<(String, String, String)> = workloads
+        .iter()
+        .flat_map(|w| {
+            Platform::all().into_iter().flat_map(move |p| {
+                TABLE4_METHODS
+                    .iter()
+                    .map(move |m| (w.clone(), p.name.clone(), m.to_string()))
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    parallel_map(&pool, jobs, move |(wl, plat, method)| {
+        let w = table3::by_id(&wl).expect("workload");
+        let p = Platform::by_name(&plat).expect("platform");
+        let ctx = crate::search::EvalContext::new(
+            crate::search::Backend::native(w, p),
+            cfg.budget,
+        );
+        let o: Outcome = run_method(&method, ctx, cfg.seed).expect("method");
+        Cell {
+            workload: wl,
+            platform: plat,
+            method,
+            edp: o.best_edp,
+            valid_ratio: o.valid_ratio(),
+        }
+    })
+}
+
+/// Geomean EDP reduction of SparseMap vs `method` on `platform`.
+pub fn reduction(cells: &[Cell], method: &str, platform: &str) -> f64 {
+    let ratios: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.method == "sparsemap" && c.platform == platform && c.edp.is_finite())
+        .filter_map(|ours| {
+            cells
+                .iter()
+                .find(|c| {
+                    c.method == method
+                        && c.platform == platform
+                        && c.workload == ours.workload
+                })
+                .map(|theirs| {
+                    if theirs.edp.is_finite() {
+                        (theirs.edp / ours.edp).max(1e-6)
+                    } else {
+                        1e6 // the baseline found nothing valid
+                    }
+                })
+        })
+        .collect();
+    geomean(&ratios)
+}
+
+pub fn run(cfg: &ExpConfig, subset: Option<Vec<String>>, summary_only: bool) -> anyhow::Result<String> {
+    let workloads: Vec<String> = match subset {
+        Some(s) => s,
+        None => table3::all().iter().map(|w| w.id.clone()).collect(),
+    };
+    let cells = run_matrix(cfg, &workloads);
+
+    let mut csv = String::from("workload,platform,method,best_edp,valid_ratio\n");
+    for c in &cells {
+        csv.push_str(&format!(
+            "{},{},{},{},{:.4}\n",
+            c.workload,
+            c.platform,
+            c.method,
+            if c.edp.is_finite() { format!("{:.6e}", c.edp) } else { String::new() },
+            c.valid_ratio
+        ));
+    }
+    write_csv(&cfg.out_dir, "table4.csv", &csv)?;
+
+    let mut out = String::new();
+    if !summary_only {
+        let mut table = Table::new(&[
+            "workload",
+            "edge:sloop",
+            "edge:sage",
+            "edge:ours",
+            "mobile:sloop",
+            "mobile:sage",
+            "mobile:ours",
+            "cloud:sloop",
+            "cloud:sage",
+            "cloud:ours",
+        ]);
+        for wl in &workloads {
+            let mut row = vec![wl.clone()];
+            for plat in ["edge", "mobile", "cloud"] {
+                for m in TABLE4_METHODS {
+                    let cell = cells
+                        .iter()
+                        .find(|c| &c.workload == wl && c.platform == plat && &c.method == m);
+                    row.push(match cell {
+                        Some(c) if c.edp.is_finite() => sci(c.edp),
+                        _ => "-".into(),
+                    });
+                }
+            }
+            table.row(row);
+        }
+        out.push_str(&format!(
+            "Table IV — best EDP per (workload, platform, method), budget {}\n{}",
+            cfg.budget,
+            table.render()
+        ));
+    }
+
+    out.push_str("\nHeadline geomean EDP reductions (SparseMap vs ...):\n");
+    for plat in ["edge", "mobile", "cloud"] {
+        out.push_str(&format!(
+            "  {:6}: vs SAGE-like {:>8}   vs Sparseloop {:>8}\n",
+            plat,
+            ratio(reduction(&cells, "sage-like", plat)),
+            ratio(reduction(&cells, "sparseloop", plat)),
+        ));
+    }
+    out.push_str("  (paper: 26.8x/19.2x/171.4x vs SAGE; 8.8x/4.5x/158.9x vs Sparseloop)\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_matrix_and_headline_shape() {
+        let cfg = ExpConfig {
+            budget: 800,
+            threads: 8,
+            out_dir: std::env::temp_dir().join("sparsemap_t4"),
+            ..Default::default()
+        };
+        let cells = run_matrix(&cfg, &vec!["mm1".to_string(), "conv11".to_string()]);
+        assert_eq!(cells.len(), 2 * 3 * 3);
+        // Smoke-scale shape check: SparseMap must be in the same league
+        // as both baselines at a 800-sample budget (its calibration +
+        // HSHI overhead is amortized at the paper's 20k budget, where it
+        // wins outright — EXPERIMENTS.md E6 records 6.5x/7.9x/9.3x vs
+        // Sparseloop and larger vs SAGE-like).
+        for plat in ["edge", "mobile", "cloud"] {
+            for m in ["sage-like", "sparseloop"] {
+                let r = reduction(&cells, m, plat);
+                assert!(
+                    r > 0.5,
+                    "sparsemap lost to {m} on {plat}: geomean ratio {r}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! PJRT CPU client wrapper + artifact metadata loading.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/meta.json` — the contract written by
+/// `python/compile/aot.py`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub schema_version: u32,
+    pub batch: usize,
+    pub num_features: usize,
+    pub num_platform_features: usize,
+    pub demo_shape: (usize, usize, usize),
+    pub cost_model_file: String,
+    pub spmm_demo_file: String,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text).context("parsing meta.json")?;
+        let get_u = |k: &str| -> Result<u64> {
+            json.get(k).and_then(|v| v.as_u64()).ok_or_else(|| anyhow!("meta.json missing {k}"))
+        };
+        let demo = json
+            .get("demo_shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("meta.json missing demo_shape"))?;
+        let artifacts =
+            json.get("artifacts").ok_or_else(|| anyhow!("meta.json missing artifacts"))?;
+        let file = |k: &str| -> Result<String> {
+            artifacts
+                .get(k)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow!("meta.json missing artifacts.{k}"))
+        };
+        Ok(ArtifactMeta {
+            schema_version: get_u("schema_version")? as u32,
+            batch: get_u("batch")? as usize,
+            num_features: get_u("num_features")? as usize,
+            num_platform_features: get_u("num_platform_features")? as usize,
+            demo_shape: (
+                demo[0].as_u64().unwrap_or(0) as usize,
+                demo[1].as_u64().unwrap_or(0) as usize,
+                demo[2].as_u64().unwrap_or(0) as usize,
+            ),
+            cost_model_file: file("cost_model")?,
+            spmm_demo_file: file("spmm_demo")?,
+        })
+    }
+
+    /// Assert the artifact matches what this binary was compiled against.
+    pub fn check_schema(&self) -> Result<()> {
+        use crate::model::{NUM_FEATURES, NUM_PLATFORM_FEATURES, SCHEMA_VERSION};
+        if self.schema_version != SCHEMA_VERSION {
+            return Err(anyhow!(
+                "artifact schema v{} != binary schema v{} — re-run `make artifacts`",
+                self.schema_version,
+                SCHEMA_VERSION
+            ));
+        }
+        if self.num_features != NUM_FEATURES || self.num_platform_features != NUM_PLATFORM_FEATURES
+        {
+            return Err(anyhow!(
+                "artifact feature widths ({}, {}) != binary ({}, {})",
+                self.num_features,
+                self.num_platform_features,
+                NUM_FEATURES,
+                NUM_PLATFORM_FEATURES
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: `$SPARSEMAP_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (where Cargo runs tests/binaries).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("SPARSEMAP_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Tests and binaries run with CWD = workspace root; fall back to the
+    // manifest dir for robustness.
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("meta.json").exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A process-wide PJRT CPU client with compiled executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create the CPU client and load artifact metadata from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let meta = ArtifactMeta::load(dir)?;
+        meta.check_schema()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, meta, dir: dir.to_path_buf() })
+    }
+
+    /// Convenience: default artifacts location.
+    pub fn from_default_dir() -> Result<Runtime> {
+        Self::new(&artifacts_dir())
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("sparsemap_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"schema_version":1,"batch":256,"num_features":48,
+                "num_platform_features":16,"demo_shape":[64,64,64],
+                "outputs":["energy_pj","cycles","edp","valid"],
+                "artifacts":{"cost_model":"cost_model.hlo.txt",
+                              "spmm_demo":"spmm_demo.hlo.txt"}}"#,
+        )
+        .unwrap();
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(meta.batch, 256);
+        assert_eq!(meta.demo_shape, (64, 64, 64));
+        meta.check_schema().unwrap();
+    }
+
+    #[test]
+    fn stale_schema_rejected() {
+        let dir = std::env::temp_dir().join("sparsemap_meta_stale");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"schema_version":99,"batch":256,"num_features":48,
+                "num_platform_features":16,"demo_shape":[64,64,64],
+                "artifacts":{"cost_model":"a","spmm_demo":"b"}}"#,
+        )
+        .unwrap();
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        assert!(meta.check_schema().is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactMeta::load(Path::new("/nonexistent/path")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

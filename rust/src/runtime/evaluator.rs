@@ -1,0 +1,161 @@
+//! Batched fitness evaluation through the AOT cost-model executable, and
+//! the gated-SpMM demo runner.
+
+use super::client::Runtime;
+use crate::arch::Platform;
+use crate::genome::{decode, GenomeSpec};
+use crate::model::{extract, EvalResult, NUM_FEATURES};
+use crate::workload::Workload;
+use anyhow::{anyhow, Result};
+
+/// Evaluates whole populations per PJRT call. One instance per
+/// (workload, platform) search arm; the compiled executable is shared
+/// state inside the `xla` crate and cheap to clone handles of.
+pub struct BatchEvaluator {
+    exe: xla::PjRtLoadedExecutable,
+    pub workload: Workload,
+    pub platform: Platform,
+    pub spec: GenomeSpec,
+    batch: usize,
+    plat_row: Vec<f32>,
+}
+
+impl BatchEvaluator {
+    pub fn new(rt: &Runtime, workload: Workload, platform: Platform) -> Result<BatchEvaluator> {
+        let exe = rt.compile(&rt.meta.cost_model_file)?;
+        let spec = GenomeSpec::for_workload(&workload);
+        let plat_row = platform.to_feature_vector();
+        Ok(BatchEvaluator { exe, workload, platform, spec, batch: rt.meta.batch, plat_row })
+    }
+
+    /// The static batch size of the executable (padding granularity).
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Evaluate a slice of genomes. Internally pads to the executable's
+    /// static batch; results are returned in input order.
+    pub fn eval_genomes(&self, genomes: &[Vec<u32>]) -> Result<Vec<EvalResult>> {
+        let mut out = Vec::with_capacity(genomes.len());
+        for chunk in genomes.chunks(self.batch) {
+            out.extend(self.eval_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    /// Evaluate pre-decoded designs (used by foreign encodings such as
+    /// the direct-value ablation baseline).
+    pub fn eval_designs(&self, designs: &[crate::genome::Design]) -> Result<Vec<EvalResult>> {
+        let mut out = Vec::with_capacity(designs.len());
+        for chunk in designs.chunks(self.batch) {
+            let rows: Vec<crate::model::Features> = chunk
+                .iter()
+                .map(|d| extract(d, &self.workload, &self.platform))
+                .collect();
+            out.extend(self.execute_rows(&rows)?);
+        }
+        Ok(out)
+    }
+
+    fn eval_chunk(&self, chunk: &[Vec<u32>]) -> Result<Vec<EvalResult>> {
+        debug_assert!(chunk.len() <= self.batch);
+        // Extract features (combinatorial analysis on the Rust side).
+        let rows: Vec<crate::model::Features> = chunk
+            .iter()
+            .map(|genome| {
+                let design = decode(&self.spec, &self.workload, genome);
+                extract(&design, &self.workload, &self.platform)
+            })
+            .collect();
+        self.execute_rows(&rows)
+    }
+
+    fn execute_rows(&self, rows: &[crate::model::Features]) -> Result<Vec<EvalResult>> {
+        debug_assert!(rows.len() <= self.batch);
+        let mut flat = vec![0f32; self.batch * NUM_FEATURES];
+        for (i, feats) in rows.iter().enumerate() {
+            for (j, &v) in feats.iter().enumerate() {
+                flat[i * NUM_FEATURES + j] = v as f32;
+            }
+        }
+        let feats_lit = xla::Literal::vec1(&flat)
+            .reshape(&[self.batch as i64, NUM_FEATURES as i64])
+            .map_err(|e| anyhow!("reshape features: {e:?}"))?;
+        let plat_lit = xla::Literal::vec1(&self.plat_row);
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[feats_lit, plat_lit])
+            .map_err(|e| anyhow!("execute cost model: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let table = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("unwrap tuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("read result: {e:?}"))?;
+        debug_assert_eq!(table.len(), self.batch * 4);
+
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let row = &table[i * 4..i * 4 + 4];
+                let valid = row[3] > 0.5;
+                EvalResult {
+                    energy_pj: row[0] as f64,
+                    cycles: row[1] as f64,
+                    edp: if valid { row[2] as f64 } else { f64::INFINITY },
+                    valid,
+                }
+            })
+            .collect())
+    }
+}
+
+/// The instantiated-design demo: run the gated-SpMM artifact on concrete
+/// tiles (Fig. 14's hardware behaviour, executed through PJRT).
+pub struct SpmmDemo {
+    exe: xla::PjRtLoadedExecutable,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl SpmmDemo {
+    pub fn new(rt: &Runtime) -> Result<SpmmDemo> {
+        let exe = rt.compile(&rt.meta.spmm_demo_file)?;
+        let (m, k, n) = rt.meta.demo_shape;
+        Ok(SpmmDemo { exe, m, k, n })
+    }
+
+    /// Execute Z = (P⊙maskP)(Q⊙maskQ); returns (z, effectual_macs).
+    pub fn run(
+        &self,
+        p: &[f32],
+        q: &[f32],
+        pmask: &[f32],
+        qmask: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        let (m, k, n) = (self.m as i64, self.k as i64, self.n as i64);
+        anyhow::ensure!(p.len() == (m * k) as usize, "P size mismatch");
+        anyhow::ensure!(q.len() == (k * n) as usize, "Q size mismatch");
+        let args = [
+            xla::Literal::vec1(p).reshape(&[m, k]).map_err(|e| anyhow!("{e:?}"))?,
+            xla::Literal::vec1(q).reshape(&[k, n]).map_err(|e| anyhow!("{e:?}"))?,
+            xla::Literal::vec1(pmask).reshape(&[m, k]).map_err(|e| anyhow!("{e:?}"))?,
+            xla::Literal::vec1(qmask).reshape(&[k, n]).map_err(|e| anyhow!("{e:?}"))?,
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute spmm demo: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let (z_lit, eff_lit) =
+            result.to_tuple2().map_err(|e| anyhow!("unwrap tuple2: {e:?}"))?;
+        let z = z_lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let eff = eff_lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((z, eff[0] as f64))
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load and execute the AOT artifacts from the search hot
+//! path. Python never runs here — `make artifacts` produced HLO text at
+//! build time; this module compiles it once per process and executes it
+//! per population batch.
+
+pub mod client;
+pub mod evaluator;
+
+pub use client::{artifacts_dir, ArtifactMeta, Runtime};
+pub use evaluator::{BatchEvaluator, SpmmDemo};

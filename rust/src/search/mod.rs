@@ -1,0 +1,204 @@
+//! Shared search infrastructure: evaluation backends, budget accounting
+//! and telemetry (best-so-far curves, valid-point ratios — the raw data
+//! behind Fig. 17b and Fig. 18).
+
+pub mod telemetry;
+
+pub use telemetry::{Outcome, Telemetry};
+
+use crate::arch::Platform;
+use crate::model::{EvalResult, NativeEvaluator};
+use crate::runtime::{BatchEvaluator, Runtime};
+use crate::workload::Workload;
+use anyhow::Result;
+
+/// Fitness backend: the native Rust model or the PJRT AOT executable.
+/// Both implement the same FEATURE_SCHEMA_V1 formula.
+pub enum Backend {
+    Native(NativeEvaluator),
+    Pjrt(Box<BatchEvaluator>),
+}
+
+impl Backend {
+    pub fn native(workload: Workload, platform: Platform) -> Backend {
+        Backend::Native(NativeEvaluator::new(workload, platform))
+    }
+
+    pub fn pjrt(rt: &Runtime, workload: Workload, platform: Platform) -> Result<Backend> {
+        Ok(Backend::Pjrt(Box::new(BatchEvaluator::new(rt, workload, platform)?)))
+    }
+
+    pub fn workload(&self) -> &Workload {
+        match self {
+            Backend::Native(e) => &e.workload,
+            Backend::Pjrt(e) => &e.workload,
+        }
+    }
+
+    pub fn platform(&self) -> &Platform {
+        match self {
+            Backend::Native(e) => &e.platform,
+            Backend::Pjrt(e) => &e.platform,
+        }
+    }
+
+    fn eval(&self, genomes: &[Vec<u32>]) -> Vec<EvalResult> {
+        match self {
+            Backend::Native(e) => genomes.iter().map(|g| e.eval_genome(g)).collect(),
+            Backend::Pjrt(e) => e
+                .eval_genomes(genomes)
+                .expect("PJRT evaluation failed (artifact/runtime error)"),
+        }
+    }
+
+    fn eval_design(&self, design: &crate::genome::Design) -> EvalResult {
+        match self {
+            Backend::Native(e) => e.eval_design(design),
+            Backend::Pjrt(e) => e
+                .eval_designs(std::slice::from_ref(design))
+                .expect("PJRT evaluation failed")
+                .pop()
+                .unwrap(),
+        }
+    }
+}
+
+/// A budgeted evaluation context handed to every search algorithm.
+///
+/// All algorithms draw from the same sample budget (the paper's 20 000)
+/// and report through the same telemetry, which keeps comparisons fair.
+pub struct EvalContext {
+    backend: Backend,
+    pub spec: crate::genome::GenomeSpec,
+    pub budget: usize,
+    pub telemetry: Telemetry,
+}
+
+impl EvalContext {
+    pub fn new(backend: Backend, budget: usize) -> EvalContext {
+        let spec = crate::genome::GenomeSpec::for_workload(backend.workload());
+        EvalContext { backend, spec, budget, telemetry: Telemetry::new() }
+    }
+
+    pub fn workload(&self) -> &Workload {
+        self.backend.workload()
+    }
+
+    pub fn platform(&self) -> &Platform {
+        self.backend.platform()
+    }
+
+    pub fn used(&self) -> usize {
+        self.telemetry.evals
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.budget.saturating_sub(self.used())
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Evaluate a batch, truncated to the remaining budget. Returns one
+    /// result per *submitted* genome that fit in the budget.
+    pub fn eval_batch(&mut self, genomes: &[Vec<u32>]) -> Vec<EvalResult> {
+        let n = genomes.len().min(self.remaining());
+        if n == 0 {
+            return Vec::new();
+        }
+        let results = self.backend.eval(&genomes[..n]);
+        for (g, r) in genomes[..n].iter().zip(&results) {
+            self.telemetry.record(g, r);
+        }
+        results
+    }
+
+    /// Evaluate one genome (budget permitting).
+    pub fn eval_one(&mut self, genome: &[u32]) -> Option<EvalResult> {
+        self.eval_batch(std::slice::from_ref(&genome.to_vec())).pop()
+    }
+
+    /// Evaluate pre-decoded designs from a *foreign* encoding (the
+    /// direct-value ablation baseline). `None` designs are dead on
+    /// arrival (tiling-constraint violations) but still consume budget —
+    /// the evaluator would have rejected them. `record` pairs each design
+    /// with the genome to log in telemetry.
+    pub fn eval_designs(
+        &mut self,
+        record: &[Vec<u32>],
+        designs: &[Option<crate::genome::Design>],
+    ) -> Vec<EvalResult> {
+        assert_eq!(record.len(), designs.len());
+        let n = designs.len().min(self.remaining());
+        let mut out = Vec::with_capacity(n);
+        for (g, d) in record[..n].iter().zip(&designs[..n]) {
+            let r = match d {
+                Some(design) => self.backend.eval_design(design),
+                None => EvalResult {
+                    energy_pj: 0.0,
+                    cycles: 0.0,
+                    edp: f64::INFINITY,
+                    valid: false,
+                },
+            };
+            self.telemetry.record(g, &r);
+            out.push(r);
+        }
+        out
+    }
+
+    /// Finalize into an outcome.
+    pub fn outcome(self, method: &str) -> Outcome {
+        self.telemetry.into_outcome(
+            method,
+            &self.backend.workload().id,
+            &self.backend.platform().name,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        EvalContext::new(Backend::native(w, Platform::edge()), budget)
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let mut c = ctx(10);
+        let mut rng = crate::util::rng::Pcg64::seeded(1);
+        let genomes: Vec<_> = (0..20).map(|_| c.spec.random(&mut rng)).collect();
+        let r = c.eval_batch(&genomes);
+        assert_eq!(r.len(), 10);
+        assert!(c.exhausted());
+        assert!(c.eval_batch(&genomes).is_empty());
+    }
+
+    #[test]
+    fn telemetry_tracks_best() {
+        let mut c = ctx(100);
+        let mut rng = crate::util::rng::Pcg64::seeded(2);
+        let genomes: Vec<_> = (0..50).map(|_| c.spec.random(&mut rng)).collect();
+        c.eval_batch(&genomes);
+        let o = c.outcome("test");
+        assert_eq!(o.evals, 50);
+        assert!(o.best_edp > 0.0);
+        assert!(o.valid_evals <= o.evals);
+        // Curve is monotone non-increasing.
+        assert!(o.curve.windows(2).all(|w| w[1].1 <= w[0].1));
+    }
+
+    #[test]
+    fn eval_one_consumes_budget() {
+        let mut c = ctx(2);
+        let mut rng = crate::util::rng::Pcg64::seeded(3);
+        let g = c.spec.random(&mut rng);
+        assert!(c.eval_one(&g).is_some());
+        assert!(c.eval_one(&g).is_some());
+        assert!(c.eval_one(&g).is_none());
+    }
+}

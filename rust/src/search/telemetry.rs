@@ -1,0 +1,166 @@
+//! Search telemetry: per-evaluation bookkeeping and final outcomes.
+
+use crate::model::EvalResult;
+use crate::util::json::Json;
+
+/// Rolling statistics recorded by [`crate::search::EvalContext`].
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    pub evals: usize,
+    pub valid_evals: usize,
+    /// Best-so-far (evals, edp) checkpoints; appended whenever the best
+    /// improves (the Fig. 18 convergence-curve data).
+    pub curve: Vec<(usize, f64)>,
+    pub best_edp: f64,
+    pub best_genome: Option<Vec<u32>>,
+    /// Sum of per-generation mean-EDP snapshots pushed by algorithms that
+    /// track population averages (optional).
+    pub population_mean_curve: Vec<(usize, f64)>,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry { best_edp: f64::INFINITY, ..Default::default() }
+    }
+
+    pub fn record(&mut self, genome: &[u32], r: &EvalResult) {
+        self.evals += 1;
+        if r.valid {
+            self.valid_evals += 1;
+            if r.edp < self.best_edp {
+                self.best_edp = r.edp;
+                self.best_genome = Some(genome.to_vec());
+                self.curve.push((self.evals, r.edp));
+            }
+        }
+    }
+
+    /// Fraction of evaluated points that were valid (Fig. 17b metric).
+    pub fn valid_ratio(&self) -> f64 {
+        if self.evals == 0 {
+            0.0
+        } else {
+            self.valid_evals as f64 / self.evals as f64
+        }
+    }
+
+    pub fn push_population_mean(&mut self, mean_edp: f64) {
+        self.population_mean_curve.push((self.evals, mean_edp));
+    }
+
+    pub fn into_outcome(self, method: &str, workload: &str, platform: &str) -> Outcome {
+        Outcome {
+            method: method.to_string(),
+            workload: workload.to_string(),
+            platform: platform.to_string(),
+            evals: self.evals,
+            valid_evals: self.valid_evals,
+            best_edp: self.best_edp,
+            best_genome: self.best_genome,
+            curve: self.curve,
+            population_mean_curve: self.population_mean_curve,
+        }
+    }
+}
+
+/// Final result of one search run.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub method: String,
+    pub workload: String,
+    pub platform: String,
+    pub evals: usize,
+    pub valid_evals: usize,
+    /// Best valid EDP found (`f64::INFINITY` if none).
+    pub best_edp: f64,
+    pub best_genome: Option<Vec<u32>>,
+    pub curve: Vec<(usize, f64)>,
+    pub population_mean_curve: Vec<(usize, f64)>,
+}
+
+impl Outcome {
+    pub fn valid_ratio(&self) -> f64 {
+        if self.evals == 0 {
+            0.0
+        } else {
+            self.valid_evals as f64 / self.evals as f64
+        }
+    }
+
+    pub fn found_valid(&self) -> bool {
+        self.best_edp.is_finite()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("workload", Json::str(&self.workload)),
+            ("platform", Json::str(&self.platform)),
+            ("evals", Json::num(self.evals as f64)),
+            ("valid_evals", Json::num(self.valid_evals as f64)),
+            (
+                "best_edp",
+                if self.best_edp.is_finite() {
+                    Json::num(self.best_edp)
+                } else {
+                    Json::Null
+                },
+            ),
+            (
+                "curve",
+                Json::Arr(
+                    self.curve
+                        .iter()
+                        .map(|&(e, v)| Json::arr_f64(&[e as f64, v]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok(edp: f64) -> EvalResult {
+        EvalResult { energy_pj: 1.0, cycles: edp, edp, valid: true }
+    }
+
+    fn dead() -> EvalResult {
+        EvalResult { energy_pj: 0.0, cycles: 0.0, edp: f64::INFINITY, valid: false }
+    }
+
+    #[test]
+    fn best_tracking_and_curve() {
+        let mut t = Telemetry::new();
+        t.record(&[1], &ok(100.0));
+        t.record(&[2], &dead());
+        t.record(&[3], &ok(50.0));
+        t.record(&[4], &ok(70.0)); // no improvement
+        assert_eq!(t.best_edp, 50.0);
+        assert_eq!(t.best_genome, Some(vec![3]));
+        assert_eq!(t.curve, vec![(1, 100.0), (3, 50.0)]);
+        assert_eq!(t.valid_evals, 3);
+        assert!((t.valid_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_json_serializes() {
+        let mut t = Telemetry::new();
+        t.record(&[1, 2], &ok(10.0));
+        let o = t.into_outcome("sparsemap", "mm3", "cloud");
+        let j = o.to_json().dumps();
+        assert!(j.contains("\"sparsemap\""));
+        assert!(j.contains("\"best_edp\""));
+    }
+
+    #[test]
+    fn no_valid_outcome() {
+        let mut t = Telemetry::new();
+        t.record(&[1], &dead());
+        let o = t.into_outcome("x", "w", "p");
+        assert!(!o.found_valid());
+        assert_eq!(o.to_json().get("best_edp"), Some(&Json::Null));
+    }
+}

@@ -1,0 +1,154 @@
+//! Sparse-strategy ⇄ mapping compatibility rules.
+//!
+//! §III.B-2 of the paper: a large share of the joint design space is
+//! *invalid* — either resources are over-subscribed or the mapping and
+//! sparse strategy are mutually inconsistent. These rules define the
+//! inconsistency half (capacity/fanout checks live in `model::validity`):
+//!
+//! 1. **Skipping needs metadata.** A skip mechanism driven by operand X
+//!    requires X to have at least one compressing rank at (or above) the
+//!    site — otherwise there is no nonzero-location metadata to jump with.
+//! 2. **UOP needs a compressed child.** `UOP` encodes segment offsets
+//!    *into* a compressed child rank; it is invalid at the innermost rank
+//!    of a stack and invalid directly above an uncompressed rank (there
+//!    are no variable-length segments to offset into). Plain uncompressed
+//!    ranks under Bitmask/RLE/CP are fine — that is ordinary block-sparse
+//!    storage (dense payload blocks under sparse outer coordinates).
+
+use super::format::RankFormat;
+use super::saf::SgMechanism;
+
+/// Why a strategy/mapping combination is invalid. Used for diagnostics
+/// and for Fig. 7-style invalid-point analysis.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Incompat {
+    /// Skip mechanism at `site` drives on a tensor with no compressed rank.
+    SkipNeedsCompressedDriver { site: &'static str, tensor: &'static str },
+    /// UOP at the innermost rank of the tensor's stack.
+    UopAtLeaf { tensor: &'static str },
+    /// UOP directly above an uncompressed rank (no segments to index).
+    UopNeedsCompressedChild { tensor: &'static str },
+}
+
+impl std::fmt::Display for Incompat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Incompat::SkipNeedsCompressedDriver { site, tensor } => {
+                write!(f, "skip at {site} drives on uncompressed tensor {tensor}")
+            }
+            Incompat::UopAtLeaf { tensor } => {
+                write!(f, "UOP at innermost rank of {tensor}")
+            }
+            Incompat::UopNeedsCompressedChild { tensor } => {
+                write!(f, "UOP above an uncompressed rank in {tensor}")
+            }
+        }
+    }
+}
+
+/// Check a per-tensor format stack (outer→inner ranks) for structural
+/// validity (rule 2 in both halves).
+pub fn check_stack(tensor: &'static str, stack: &[RankFormat]) -> Vec<Incompat> {
+    let mut problems = Vec::new();
+    for (i, f) in stack.iter().enumerate() {
+        if *f != RankFormat::UncompressedOffsetPair {
+            continue;
+        }
+        match stack.get(i + 1) {
+            // UOP at the innermost rank: nothing to offset into.
+            None => {
+                problems.push(Incompat::UopAtLeaf { tensor });
+                break;
+            }
+            // UOP above a dense rank: segments are fixed-length, the
+            // offset array is meaningless (and the hardware indexer
+            // expects variable-length children).
+            Some(child) if !child.compressing() => {
+                problems.push(Incompat::UopNeedsCompressedChild { tensor });
+                break;
+            }
+            Some(_) => {}
+        }
+    }
+    problems
+}
+
+/// Check S/G mechanisms against the P/Q format stacks (rule 1). `sites`
+/// pairs a site name with its mechanism.
+pub fn check_saf(
+    sites: &[(&'static str, SgMechanism)],
+    p_compressed: bool,
+    q_compressed: bool,
+) -> Vec<Incompat> {
+    let mut problems = Vec::new();
+    for &(site, m) in sites {
+        if !m.is_skip() {
+            continue;
+        }
+        let (needs_p, needs_q) = m.drivers();
+        if needs_p && !p_compressed {
+            problems.push(Incompat::SkipNeedsCompressedDriver { site, tensor: "P" });
+        }
+        if needs_q && !q_compressed {
+            problems.push(Incompat::SkipNeedsCompressedDriver { site, tensor: "Q" });
+        }
+    }
+    problems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use RankFormat::*;
+
+    #[test]
+    fn csr_is_valid() {
+        assert!(check_stack("P", &[UncompressedOffsetPair, CoordinatePayload]).is_empty());
+    }
+
+    #[test]
+    fn uop_leaf_invalid() {
+        let p = check_stack("P", &[Bitmask, UncompressedOffsetPair]);
+        assert_eq!(p, vec![Incompat::UopAtLeaf { tensor: "P" }]);
+        // UOP alone is also a leaf.
+        assert!(!check_stack("Q", &[UncompressedOffsetPair]).is_empty());
+    }
+
+    #[test]
+    fn uop_over_dense_invalid_but_blocksparse_fine() {
+        let p = check_stack("P", &[UncompressedOffsetPair, Uncompressed]);
+        assert!(p.contains(&Incompat::UopNeedsCompressedChild { tensor: "P" }));
+        // Block-sparse: compressed outer rank over dense payload — valid.
+        assert!(check_stack("P", &[Bitmask, Uncompressed]).is_empty());
+        assert!(check_stack("P", &[Uncompressed, Bitmask]).is_empty());
+    }
+
+    #[test]
+    fn fully_uncompressed_valid() {
+        assert!(check_stack("Z", &[Uncompressed, Uncompressed]).is_empty());
+    }
+
+    #[test]
+    fn skip_requires_driver_metadata() {
+        let sites = [("GLB", SgMechanism::SkipPfromQ)];
+        // Q uncompressed -> invalid.
+        let p = check_saf(&sites, true, false);
+        assert_eq!(p.len(), 1);
+        // Q compressed -> fine.
+        assert!(check_saf(&sites, false, true).is_empty());
+    }
+
+    #[test]
+    fn gate_never_needs_metadata() {
+        let sites = [("C", SgMechanism::GateBoth)];
+        assert!(check_saf(&sites, false, false).is_empty());
+    }
+
+    #[test]
+    fn double_sided_skip_needs_both() {
+        let sites = [("PEBuf", SgMechanism::SkipBoth)];
+        assert_eq!(check_saf(&sites, false, false).len(), 2);
+        assert_eq!(check_saf(&sites, true, false).len(), 1);
+        assert!(check_saf(&sites, true, true).is_empty());
+    }
+}

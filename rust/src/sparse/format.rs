@@ -1,0 +1,259 @@
+//! Per-rank 1D compression formats (Fig. 5) and their storage models.
+//!
+//! A multi-dimensional sparse tensor is compressed by stacking 1D formats
+//! rank by rank (outer→inner); e.g. `UOP(M)-CP(K)` is CSR. The storage
+//! model below estimates, per rank, metadata bits and kept-slot counts
+//! under a uniform-random occupancy assumption — the same modelling class
+//! Sparseloop uses for its format primitives.
+
+use crate::arch::WORD_BITS;
+
+/// The five per-rank format choices, in genome order (gene value 0..4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RankFormat {
+    /// Uncompressed: all slots stored, no metadata (gene 0).
+    Uncompressed,
+    /// Bitmask: one presence bit per slot (gene 1).
+    Bitmask,
+    /// Run-length encoding of zero runs (gene 2).
+    Rle,
+    /// Coordinate payload: explicit coordinate per kept slot (gene 3).
+    CoordinatePayload,
+    /// Uncompressed offset pairs: per-slot start offsets into the child
+    /// rank — the CSR row-pointer array (gene 4).
+    UncompressedOffsetPair,
+}
+
+pub const NUM_RANK_FORMATS: u32 = 5;
+
+impl RankFormat {
+    pub fn from_gene(g: u32) -> RankFormat {
+        match g % NUM_RANK_FORMATS {
+            0 => RankFormat::Uncompressed,
+            1 => RankFormat::Bitmask,
+            2 => RankFormat::Rle,
+            3 => RankFormat::CoordinatePayload,
+            _ => RankFormat::UncompressedOffsetPair,
+        }
+    }
+
+    pub fn gene(self) -> u32 {
+        match self {
+            RankFormat::Uncompressed => 0,
+            RankFormat::Bitmask => 1,
+            RankFormat::Rle => 2,
+            RankFormat::CoordinatePayload => 3,
+            RankFormat::UncompressedOffsetPair => 4,
+        }
+    }
+
+    pub fn short_name(self) -> &'static str {
+        match self {
+            RankFormat::Uncompressed => "U",
+            RankFormat::Bitmask => "B",
+            RankFormat::Rle => "RLE",
+            RankFormat::CoordinatePayload => "CP",
+            RankFormat::UncompressedOffsetPair => "UOP",
+        }
+    }
+
+    /// Does this format drop empty slots (i.e., provide compression and
+    /// nonzero-location metadata usable for intersection)?
+    pub fn compressing(self) -> bool {
+        !matches!(self, RankFormat::Uncompressed)
+    }
+}
+
+/// ceil(log2(n)) with a floor of 1 bit.
+pub fn bits_for(n: u64) -> u64 {
+    (64 - n.max(2).saturating_sub(1).leading_zeros()) as u64
+}
+
+/// Storage model of one rank within a format stack.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankCost {
+    /// Expected number of slots kept (passed to the child rank) per full
+    /// tile traversal.
+    pub kept_slots: f64,
+    /// Metadata bits for this rank across the tile.
+    pub metadata_bits: f64,
+}
+
+/// Evaluate the storage of a format stack over ranks with extents
+/// `extents[i]` (outer→inner) at overall tensor density `density`.
+///
+/// Occupancy model: an element is nonzero with iid probability `density`;
+/// a rank-i slot is *occupied* if any element beneath it is nonzero, so
+/// `p_i = 1 - (1-d)^(inner_elems_i)`.
+///
+/// Returns `(data_words, metadata_words)` for the tile.
+pub fn stack_storage(extents: &[u64], formats: &[RankFormat], density: f64) -> (f64, f64) {
+    assert_eq!(extents.len(), formats.len());
+    let d = density.clamp(1e-9, 1.0);
+    let total_elems: f64 = extents.iter().map(|&e| e as f64).product();
+    if extents.is_empty() {
+        return (0.0, 0.0);
+    }
+
+    let mut fibers = 1.0f64; // number of fibers entering this rank
+    let mut metadata_bits = 0.0f64;
+    let mut any_compressing = false;
+
+    for (i, (&e, &fmt)) in extents.iter().zip(formats).enumerate() {
+        let inner_elems: f64 = extents[i + 1..].iter().map(|&x| x as f64).product();
+        // Probability a slot at this rank is occupied.
+        let p = 1.0 - (1.0 - d).powf(inner_elems.max(1.0));
+        let e_f = e as f64;
+        let kept = e_f * p; // expected occupied slots per fiber
+        match fmt {
+            RankFormat::Uncompressed => {
+                // Keeps every slot; no metadata.
+                fibers *= e_f;
+            }
+            RankFormat::Bitmask => {
+                metadata_bits += fibers * e_f; // 1 bit per slot
+                fibers *= kept;
+                any_compressing = true;
+            }
+            RankFormat::Rle => {
+                // One run-length token per kept slot. Token width is
+                // sized for the *typical* zero-run (≈ 1/density), plus an
+                // escape bit for longer runs — so RLE beats CP when the
+                // tensor is relatively dense (short runs, narrow tokens)
+                // and loses to CP when extremely sparse (long runs).
+                let typical_run = ((1.0 / d).ceil() as u64).clamp(1, e.max(1));
+                let token_bits = (bits_for(typical_run + 1) + 1) as f64;
+                metadata_bits += fibers * kept * token_bits;
+                fibers *= kept;
+                any_compressing = true;
+            }
+            RankFormat::CoordinatePayload => {
+                metadata_bits += fibers * kept * bits_for(e) as f64;
+                fibers *= kept;
+                any_compressing = true;
+            }
+            RankFormat::UncompressedOffsetPair => {
+                // (e+1) offsets per fiber, wide enough to index all
+                // children beneath this rank.
+                let child_count = (kept * inner_elems).max(1.0);
+                metadata_bits += fibers * (e_f + 1.0) * bits_for(child_count as u64 + 1) as f64;
+                fibers *= kept;
+                any_compressing = true;
+            }
+        }
+    }
+
+    // Data payload: leaf slots that survived the stack. With at least one
+    // compressing rank the payload is (approx) the nonzeros beneath the
+    // kept slots; fully uncompressed stacks store everything.
+    let data_words = if any_compressing {
+        // `fibers` is now the expected number of stored leaf slots.
+        fibers.min(total_elems)
+    } else {
+        total_elems
+    };
+    let metadata_words = metadata_bits / WORD_BITS as f64;
+    (data_words, metadata_words)
+}
+
+/// Convenience: compressed words (data + metadata) of a tile.
+pub fn stack_words(extents: &[u64], formats: &[RankFormat], density: f64) -> f64 {
+    let (d, m) = stack_storage(extents, formats, density);
+    d + m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gene_roundtrip() {
+        for g in 0..NUM_RANK_FORMATS {
+            assert_eq!(RankFormat::from_gene(g).gene(), g);
+        }
+        assert_eq!(RankFormat::from_gene(7), RankFormat::Rle); // wraps
+    }
+
+    #[test]
+    fn bits_for_sane() {
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(8), 3);
+        assert_eq!(bits_for(9), 4);
+        assert_eq!(bits_for(1), 1);
+    }
+
+    #[test]
+    fn uncompressed_stores_everything() {
+        let (d, m) = stack_storage(
+            &[16, 16],
+            &[RankFormat::Uncompressed, RankFormat::Uncompressed],
+            0.1,
+        );
+        assert_eq!(d, 256.0);
+        assert_eq!(m, 0.0);
+    }
+
+    #[test]
+    fn csr_like_vs_dense() {
+        // CSR = UOP(M)-CP(K) on a 64x64 @ 5% tile: far smaller than dense.
+        let csr = stack_words(
+            &[64, 64],
+            &[RankFormat::UncompressedOffsetPair, RankFormat::CoordinatePayload],
+            0.05,
+        );
+        assert!(csr < 64.0 * 64.0 * 0.25, "csr={csr}");
+        // ...but larger than the bare nonzero count (metadata overhead).
+        assert!(csr > 64.0 * 64.0 * 0.05);
+    }
+
+    #[test]
+    fn bitmask_overhead_dominates_when_dense() {
+        // At 90% density CP coordinates cost more than bitmask bits.
+        let bm = stack_words(&[1, 256], &[RankFormat::Uncompressed, RankFormat::Bitmask], 0.9);
+        let cp = stack_words(
+            &[1, 256],
+            &[RankFormat::Uncompressed, RankFormat::CoordinatePayload],
+            0.9,
+        );
+        assert!(bm < cp, "bm={bm} cp={cp}");
+    }
+
+    #[test]
+    fn cp_wins_when_very_sparse() {
+        let bm = stack_words(&[1, 4096], &[RankFormat::Uncompressed, RankFormat::Bitmask], 0.01);
+        let cp = stack_words(
+            &[1, 4096],
+            &[RankFormat::Uncompressed, RankFormat::CoordinatePayload],
+            0.01,
+        );
+        assert!(cp < bm, "cp={cp} bm={bm}");
+    }
+
+    #[test]
+    fn density_monotone() {
+        let f = [RankFormat::Bitmask, RankFormat::CoordinatePayload];
+        let lo = stack_words(&[32, 32], &f, 0.05);
+        let hi = stack_words(&[32, 32], &f, 0.5);
+        assert!(lo < hi);
+    }
+
+    #[test]
+    fn storage_never_negative_or_nan() {
+        let fmts = [
+            RankFormat::Uncompressed,
+            RankFormat::Bitmask,
+            RankFormat::Rle,
+            RankFormat::CoordinatePayload,
+            RankFormat::UncompressedOffsetPair,
+        ];
+        for &f1 in &fmts {
+            for &f2 in &fmts {
+                for d in [1e-6, 0.01, 0.5, 1.0] {
+                    let (dw, mw) = stack_storage(&[8, 128], &[f1, f2], d);
+                    assert!(dw.is_finite() && dw >= 0.0);
+                    assert!(mw.is_finite() && mw >= 0.0);
+                }
+            }
+        }
+    }
+}

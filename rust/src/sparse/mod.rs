@@ -1,0 +1,106 @@
+//! Sparse strategy: per-rank compression formats ([`format`]),
+//! skipping/gating mechanisms ([`saf`]) and the compatibility rules
+//! between sparse strategy and mapping ([`compat`]).
+
+pub mod compat;
+pub mod format;
+pub mod saf;
+
+pub use compat::Incompat;
+pub use format::{bits_for, stack_storage, stack_words, RankFormat, NUM_RANK_FORMATS};
+pub use saf::{control_overhead, effect, SgEffect, SgMechanism, NUM_SG_CHOICES};
+
+/// A complete sparse strategy for one design: per-tensor format stacks
+/// (aligned with the tensor's materialized ranks, outer→inner) and the
+/// S/G mechanism at each of the three sites.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseStrategy {
+    /// Format stack per tensor (P, Q, Z order), one entry per materialized
+    /// rank of that tensor under the current mapping.
+    pub formats: [Vec<RankFormat>; 3],
+    /// S/G at GLB (L2), PE buffer (L3), compute (C).
+    pub sg: [SgMechanism; 3],
+}
+
+impl SparseStrategy {
+    /// Fully dense strategy (no compression, no S/G).
+    pub fn dense(num_ranks: [usize; 3]) -> SparseStrategy {
+        SparseStrategy {
+            formats: [
+                vec![RankFormat::Uncompressed; num_ranks[0]],
+                vec![RankFormat::Uncompressed; num_ranks[1]],
+                vec![RankFormat::Uncompressed; num_ranks[2]],
+            ],
+            sg: [SgMechanism::None; 3],
+        }
+    }
+
+    /// Is tensor `t`'s stack compressed at all?
+    pub fn compressed(&self, t: usize) -> bool {
+        self.formats[t].iter().any(|f| f.compressing())
+    }
+
+    /// All structural compatibility problems of this strategy.
+    pub fn check(&self) -> Vec<Incompat> {
+        let names: [&'static str; 3] = ["P", "Q", "Z"];
+        let mut problems = Vec::new();
+        for (t, name) in names.iter().enumerate() {
+            problems.extend(compat::check_stack(name, &self.formats[t]));
+        }
+        let sites = [("GLB", self.sg[0]), ("PEBuf", self.sg[1]), ("C", self.sg[2])];
+        problems.extend(compat::check_saf(&sites, self.compressed(0), self.compressed(1)));
+        problems
+    }
+
+    /// Short human-readable description, e.g. `P:UOP-CP Q:B-B Z:U | GLB:Skip Q<-P`.
+    pub fn describe(&self) -> String {
+        let names = ["P", "Q", "Z"];
+        let mut parts: Vec<String> = Vec::new();
+        for (t, name) in names.iter().enumerate() {
+            let stack: Vec<&str> = self.formats[t].iter().map(|f| f.short_name()).collect();
+            parts.push(format!("{name}:{}", if stack.is_empty() { "-".into() } else { stack.join("-") }));
+        }
+        let sg: Vec<String> = ["GLB", "PEBuf", "C"]
+            .iter()
+            .zip(&self.sg)
+            .filter(|(_, m)| **m != SgMechanism::None)
+            .map(|(s, m)| format!("{s}:{}", m.name()))
+            .collect();
+        if sg.is_empty() {
+            parts.join(" ")
+        } else {
+            format!("{} | {}", parts.join(" "), sg.join(" "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_strategy_valid_and_uncompressed() {
+        let s = SparseStrategy::dense([2, 2, 2]);
+        assert!(s.check().is_empty());
+        assert!(!s.compressed(0) && !s.compressed(1) && !s.compressed(2));
+    }
+
+    #[test]
+    fn check_aggregates_all_problems() {
+        let mut s = SparseStrategy::dense([2, 2, 2]);
+        s.formats[0] = vec![RankFormat::Bitmask, RankFormat::UncompressedOffsetPair];
+        s.sg[0] = SgMechanism::SkipPfromQ; // drives on uncompressed Q
+        let problems = s.check();
+        assert_eq!(problems.len(), 2);
+    }
+
+    #[test]
+    fn describe_readable() {
+        let mut s = SparseStrategy::dense([1, 2, 1]);
+        s.formats[1] = vec![RankFormat::UncompressedOffsetPair, RankFormat::CoordinatePayload];
+        s.sg[2] = SgMechanism::GateBoth;
+        let d = s.describe();
+        assert!(d.contains("Q:UOP-CP"), "{d}");
+        assert!(d.contains("C:Gate P<->Q"), "{d}");
+    }
+}

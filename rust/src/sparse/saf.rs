@@ -1,0 +1,191 @@
+//! Skipping/Gating mechanisms (sparse acceleration features, Fig. 6).
+//!
+//! At each of the three sites — GLB (L2), PE buffer (L3) and the compute
+//! unit (C) — the accelerator may apply one of seven S/G choices encoded
+//! by a single gene (0..6, the table under Fig. 13):
+//!
+//! | gene | mechanism        | meaning                                      |
+//! |------|------------------|----------------------------------------------|
+//! | 0    | None             | process everything                           |
+//! | 1    | Gate P←Q         | idle P-side work when the Q operand is zero  |
+//! | 2    | Gate Q←P         | idle Q-side work when the P operand is zero  |
+//! | 3    | Gate P↔Q         | idle both when either is zero                |
+//! | 4    | Skip P←Q         | jump over P work for zero Q operands         |
+//! | 5    | Skip Q←P         | jump over Q work for zero P operands         |
+//! | 6    | Skip/Gate P↔Q    | double-sided intersection                    |
+//!
+//! Gating saves energy only; skipping saves energy *and* cycles (it needs
+//! the driving operand's metadata to find the next effectual element).
+
+/// Decoded S/G mechanism at one site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SgMechanism {
+    None,
+    GatePfromQ,
+    GateQfromP,
+    GateBoth,
+    SkipPfromQ,
+    SkipQfromP,
+    SkipBoth,
+}
+
+pub const NUM_SG_CHOICES: u32 = 7;
+
+impl SgMechanism {
+    pub fn from_gene(g: u32) -> SgMechanism {
+        match g % NUM_SG_CHOICES {
+            0 => SgMechanism::None,
+            1 => SgMechanism::GatePfromQ,
+            2 => SgMechanism::GateQfromP,
+            3 => SgMechanism::GateBoth,
+            4 => SgMechanism::SkipPfromQ,
+            5 => SgMechanism::SkipQfromP,
+            _ => SgMechanism::SkipBoth,
+        }
+    }
+
+    pub fn gene(self) -> u32 {
+        match self {
+            SgMechanism::None => 0,
+            SgMechanism::GatePfromQ => 1,
+            SgMechanism::GateQfromP => 2,
+            SgMechanism::GateBoth => 3,
+            SgMechanism::SkipPfromQ => 4,
+            SgMechanism::SkipQfromP => 5,
+            SgMechanism::SkipBoth => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SgMechanism::None => "None",
+            SgMechanism::GatePfromQ => "Gate P<-Q",
+            SgMechanism::GateQfromP => "Gate Q<-P",
+            SgMechanism::GateBoth => "Gate P<->Q",
+            SgMechanism::SkipPfromQ => "Skip P<-Q",
+            SgMechanism::SkipQfromP => "Skip Q<-P",
+            SgMechanism::SkipBoth => "Skip/Gate P<->Q",
+        }
+    }
+
+    pub fn is_skip(self) -> bool {
+        matches!(self, SgMechanism::SkipPfromQ | SgMechanism::SkipQfromP | SgMechanism::SkipBoth)
+    }
+
+    pub fn is_gate(self) -> bool {
+        matches!(self, SgMechanism::GatePfromQ | SgMechanism::GateQfromP | SgMechanism::GateBoth)
+    }
+
+    pub fn double_sided(self) -> bool {
+        matches!(self, SgMechanism::GateBoth | SgMechanism::SkipBoth)
+    }
+
+    /// Which operand's metadata *drives* the decision (must be available
+    /// in compressed form for skipping): returns (needs_P, needs_Q).
+    pub fn drivers(self) -> (bool, bool) {
+        match self {
+            SgMechanism::None => (false, false),
+            SgMechanism::GatePfromQ | SgMechanism::SkipPfromQ => (false, true),
+            SgMechanism::GateQfromP | SgMechanism::SkipQfromP => (true, false),
+            SgMechanism::GateBoth | SgMechanism::SkipBoth => (true, true),
+        }
+    }
+}
+
+/// Fractions of work that remain effectual after applying a mechanism,
+/// given operand densities `dp`, `dq`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SgEffect {
+    /// Fraction of P-side traffic/work still *energized*.
+    pub p_energy: f64,
+    /// Fraction of Q-side traffic/work still energized.
+    pub q_energy: f64,
+    /// Fraction of cycles still spent (1.0 for gating — it cannot shorten
+    /// the schedule).
+    pub cycles: f64,
+}
+
+/// Effect of a mechanism at a transfer/compute site.
+pub fn effect(m: SgMechanism, dp: f64, dq: f64) -> SgEffect {
+    let both = dp * dq; // fraction of positions where both are nonzero
+    match m {
+        SgMechanism::None => SgEffect { p_energy: 1.0, q_energy: 1.0, cycles: 1.0 },
+        SgMechanism::GatePfromQ => SgEffect { p_energy: dq, q_energy: 1.0, cycles: 1.0 },
+        SgMechanism::GateQfromP => SgEffect { p_energy: 1.0, q_energy: dp, cycles: 1.0 },
+        SgMechanism::GateBoth => SgEffect { p_energy: both, q_energy: both, cycles: 1.0 },
+        SgMechanism::SkipPfromQ => SgEffect { p_energy: dq, q_energy: 1.0, cycles: dq },
+        SgMechanism::SkipQfromP => SgEffect { p_energy: 1.0, q_energy: dp, cycles: dp },
+        SgMechanism::SkipBoth => SgEffect { p_energy: both, q_energy: both, cycles: both },
+    }
+}
+
+/// Relative hardware overhead (control energy per effectual word) of the
+/// mechanism — double-sided intersection needs look-ahead comparators
+/// (ExTensor-style), single-sided needs a simple metadata scanner, gating
+/// a mere enable signal.
+pub fn control_overhead(m: SgMechanism) -> f64 {
+    match m {
+        SgMechanism::None => 0.0,
+        SgMechanism::GatePfromQ | SgMechanism::GateQfromP => 0.02,
+        SgMechanism::GateBoth => 0.04,
+        SgMechanism::SkipPfromQ | SgMechanism::SkipQfromP => 0.10,
+        SgMechanism::SkipBoth => 0.25,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gene_roundtrip() {
+        for g in 0..NUM_SG_CHOICES {
+            assert_eq!(SgMechanism::from_gene(g).gene(), g);
+        }
+    }
+
+    #[test]
+    fn gating_never_saves_cycles() {
+        for m in [SgMechanism::GatePfromQ, SgMechanism::GateQfromP, SgMechanism::GateBoth] {
+            assert_eq!(effect(m, 0.3, 0.4).cycles, 1.0);
+            assert!(m.is_gate() && !m.is_skip());
+        }
+    }
+
+    #[test]
+    fn skipping_saves_cycles_proportional_to_driver() {
+        let e = effect(SgMechanism::SkipPfromQ, 0.9, 0.2);
+        assert_eq!(e.cycles, 0.2); // driven by Q's density
+        assert_eq!(e.p_energy, 0.2);
+        assert_eq!(e.q_energy, 1.0);
+    }
+
+    #[test]
+    fn double_sided_is_strongest() {
+        let dp = 0.3;
+        let dq = 0.4;
+        let both = effect(SgMechanism::SkipBoth, dp, dq);
+        let one = effect(SgMechanism::SkipPfromQ, dp, dq);
+        assert!(both.cycles < one.cycles);
+        assert!(both.p_energy <= one.p_energy);
+        assert!(control_overhead(SgMechanism::SkipBoth) > control_overhead(SgMechanism::SkipPfromQ));
+    }
+
+    #[test]
+    fn drivers_match_semantics() {
+        assert_eq!(SgMechanism::SkipPfromQ.drivers(), (false, true));
+        assert_eq!(SgMechanism::GateQfromP.drivers(), (true, false));
+        assert_eq!(SgMechanism::SkipBoth.drivers(), (true, true));
+        assert_eq!(SgMechanism::None.drivers(), (false, false));
+    }
+
+    #[test]
+    fn dense_operands_neutralize() {
+        for g in 0..NUM_SG_CHOICES {
+            let e = effect(SgMechanism::from_gene(g), 1.0, 1.0);
+            assert_eq!(e.p_energy, 1.0);
+            assert_eq!(e.q_energy, 1.0);
+            assert_eq!(e.cycles, 1.0);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny command-line parser (the vendor set has no `clap`).
+//!
+//! Grammar: `sparsemap <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key=value` or `--key value`. Unknown keys are
+//! reported with the subcommand's usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-flag token is the subcommand.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    args.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let val = it.next().unwrap().clone();
+                    args.options.insert(stripped.to_string(), val);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_empty() {
+                args.subcommand = tok.clone();
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["search", "mm3", "extra"]);
+        assert_eq!(a.subcommand, "search");
+        assert_eq!(a.positional, vec!["mm3", "extra"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = parse(&["search", "--budget=500", "--platform", "cloud"]);
+        assert_eq!(a.opt("budget"), Some("500"));
+        assert_eq!(a.opt("platform"), Some("cloud"));
+        assert_eq!(a.opt_u64("budget", 0).unwrap(), 500);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["table4", "--summary"]);
+        assert!(a.flag("summary"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        // --quiet is a flag because the next token is another option.
+        let a = parse(&["run", "--quiet", "--seed", "7"]);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["run", "--seed", "x"]);
+        assert!(a.opt_u64("seed", 0).is_err());
+        assert!(a.opt_f64("seed", 0.0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["run"]);
+        assert_eq!(a.opt_or("platform", "edge"), "edge");
+        assert_eq!(a.opt_u64("budget", 20_000).unwrap(), 20_000);
+    }
+}

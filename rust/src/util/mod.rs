@@ -1,0 +1,16 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline and the vendored crate set only
+//! provides `xla` + `anyhow`, so the conveniences a project would normally
+//! pull from crates.io are implemented here: a PCG64 RNG ([`rng`]), a JSON
+//! codec ([`json`]), a CLI parser ([`cli`]), a thread pool ([`threadpool`]),
+//! descriptive statistics ([`stats`]), power-iteration PCA ([`pca`]) and
+//! ASCII/CSV table rendering ([`table`]).
+
+pub mod cli;
+pub mod json;
+pub mod pca;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,169 @@
+//! Principal component analysis via power iteration with deflation.
+//!
+//! Used by the Fig. 7 reproduction: 1000 random design points are encoded
+//! as numeric vectors, the mapping-gene block and the sparse-strategy-gene
+//! block are each reduced to one principal component, and the scatter of
+//! (PC_mapping, PC_sparse, EDP, valid) is written out.
+
+/// Result of a PCA fit: principal axes (row-major, `k × d`) and the
+/// per-feature mean that was subtracted.
+#[derive(Clone, Debug)]
+pub struct Pca {
+    pub mean: Vec<f64>,
+    pub components: Vec<Vec<f64>>,
+    pub explained: Vec<f64>,
+}
+
+/// Fit `k` principal components of `data` (n samples × d features) using
+/// power iteration on the covariance matrix with Hotelling deflation.
+/// Deterministic: the iteration starts from a fixed vector.
+pub fn fit(data: &[Vec<f64>], k: usize, iters: usize) -> Pca {
+    let n = data.len();
+    assert!(n > 1, "need at least 2 samples");
+    let d = data[0].len();
+    assert!(data.iter().all(|r| r.len() == d), "ragged data");
+    let k = k.min(d);
+
+    // Center.
+    let mut mean = vec![0.0; d];
+    for row in data {
+        for (m, x) in mean.iter_mut().zip(row) {
+            *m += x;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let centered: Vec<Vec<f64>> = data
+        .iter()
+        .map(|row| row.iter().zip(&mean).map(|(x, m)| x - m).collect())
+        .collect();
+
+    // Covariance (d × d). d is small (tens of genes), dense is fine.
+    let mut cov = vec![vec![0.0; d]; d];
+    for row in &centered {
+        for i in 0..d {
+            if row[i] == 0.0 {
+                continue;
+            }
+            for j in i..d {
+                cov[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..d {
+        for j in i..d {
+            cov[i][j] /= (n - 1) as f64;
+            cov[j][i] = cov[i][j];
+        }
+    }
+
+    let mut components = Vec::with_capacity(k);
+    let mut explained = Vec::with_capacity(k);
+    for c in 0..k {
+        // Deterministic start: e_c + small ramp avoids being orthogonal to
+        // the dominant eigenvector in pathological symmetric cases.
+        let mut v: Vec<f64> = (0..d).map(|i| 1.0 + 0.01 * ((i + c) as f64)).collect();
+        normalize(&mut v);
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let mut w = matvec(&cov, &v);
+            lambda = norm(&w);
+            if lambda < 1e-300 {
+                break;
+            }
+            for x in &mut w {
+                *x /= lambda;
+            }
+            v = w;
+        }
+        // Deflate: cov -= λ v vᵀ
+        for i in 0..d {
+            for j in 0..d {
+                cov[i][j] -= lambda * v[i] * v[j];
+            }
+        }
+        components.push(v);
+        explained.push(lambda);
+    }
+    Pca { mean, components, explained }
+}
+
+/// Project a sample onto the fitted components.
+pub fn project(pca: &Pca, row: &[f64]) -> Vec<f64> {
+    let centered: Vec<f64> = row.iter().zip(&pca.mean).map(|(x, m)| x - m).collect();
+    pca.components.iter().map(|c| dot(c, &centered)).collect()
+}
+
+fn matvec(m: &[Vec<f64>], v: &[f64]) -> Vec<f64> {
+    m.iter().map(|row| dot(row, v)).collect()
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v);
+    if n > 0.0 {
+        for x in v {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn recovers_dominant_axis() {
+        // Points spread along (1, 2, 0)/√5 with small isotropic noise.
+        let mut rng = Pcg64::seeded(3);
+        let axis = [1.0 / 5f64.sqrt(), 2.0 / 5f64.sqrt(), 0.0];
+        let data: Vec<Vec<f64>> = (0..500)
+            .map(|_| {
+                let t = rng.normal() * 10.0;
+                (0..3).map(|i| axis[i] * t + rng.normal() * 0.1).collect()
+            })
+            .collect();
+        let pca = fit(&data, 1, 100);
+        let c = &pca.components[0];
+        let cos = (c[0] * axis[0] + c[1] * axis[1] + c[2] * axis[2]).abs();
+        assert!(cos > 0.999, "cos={cos}");
+        assert!(pca.explained[0] > 50.0);
+    }
+
+    #[test]
+    fn components_orthogonal() {
+        let mut rng = Pcg64::seeded(5);
+        let data: Vec<Vec<f64>> = (0..200)
+            .map(|_| (0..4).map(|_| rng.normal()).collect())
+            .collect();
+        let pca = fit(&data, 3, 200);
+        for i in 0..3 {
+            for j in (i + 1)..3 {
+                let d: f64 = pca.components[i]
+                    .iter()
+                    .zip(&pca.components[j])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                assert!(d.abs() < 1e-6, "components {i},{j} not orthogonal: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_centers() {
+        let data = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let pca = fit(&data, 1, 50);
+        // Projection of the mean point is 0.
+        let p = project(&pca, &[3.0, 4.0]);
+        assert!(p[0].abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! ASCII table rendering + CSV writing for report generators.
+
+/// A simple column-aligned ASCII table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for w in &widths {
+                out.push('+');
+                for _ in 0..w + 2 {
+                    out.push('-');
+                }
+            }
+            out.push_str("+\n");
+        };
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str("| ");
+                out.push_str(c);
+                for _ in 0..widths[i] - c.len() + 1 {
+                    out.push(' ');
+                }
+            }
+            out.push_str("|\n");
+        };
+        sep(&mut out);
+        line(&mut out, &self.header);
+        sep(&mut out);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        if !self.rows.is_empty() {
+            sep(&mut out);
+        }
+        let _ = ncol;
+        out
+    }
+
+    /// CSV serialization (RFC-4180 quoting for cells containing `,"\n`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let write_row = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    out.push('"');
+                    out.push_str(&c.replace('"', "\"\""));
+                    out.push('"');
+                } else {
+                    out.push_str(c);
+                }
+            }
+            out.push('\n');
+        };
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+}
+
+/// Format a value in engineering/scientific style matching the paper's
+/// Table IV (e.g. `1.92E+10`).
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    format!("{:.2E}", x)
+}
+
+/// Format a ratio like `26.8x`.
+pub fn ratio(x: f64) -> String {
+    format!("{:.1}x", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["id", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-id".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("| id      |"));
+        assert!(s.contains("| long-id |"));
+        assert_eq!(s.lines().filter(|l| l.starts_with('+')).count(), 3);
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"q".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n\"x,y\",\"q\"\"q\"\n");
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(sci(1.92e10), "1.92E10");
+        assert_eq!(sci(0.0), "0");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,152 @@
+//! A small fixed-size thread pool with a parallel-map primitive.
+//!
+//! No `tokio`/`rayon` in the offline vendor set; search drivers only need
+//! fork–join over independent work items (e.g. one search arm per seed, or
+//! chunked population evaluation), which this covers with `std::thread` +
+//! channels.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` threads (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("sparsemap-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { workers, sender: Some(sender) }
+    }
+
+    /// Pool sized to the machine (leaving one core for the coordinator).
+    pub fn default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.saturating_sub(1).max(1))
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Apply `f` to every item of `items` in parallel on `pool`, preserving
+/// order. `f` must be cloneable across threads (wrap captured state in
+/// `Arc`). Results are collected via a channel; panics in workers surface
+/// as a panic here (missing results).
+pub fn parallel_map<T, R, F>(pool: &ThreadPool, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let f = Arc::new(f);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    for (i, item) in items.into_iter().enumerate() {
+        let tx = tx.clone();
+        let f = Arc::clone(&f);
+        pool.execute(move || {
+            let r = f(item);
+            let _ = tx.send((i, r));
+        });
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut got = 0;
+    while let Ok((i, r)) = rx.recv() {
+        out[i] = Some(r);
+        got += 1;
+    }
+    assert_eq!(got, n, "worker panicked; {}/{} results received", got, n);
+    out.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Sequential fallback used when determinism across thread counts is
+/// required (e.g. golden-file tests of search trajectories).
+pub fn serial_map<T, R, F: Fn(T) -> R>(items: Vec<T>, f: F) -> Vec<R> {
+    items.into_iter().map(f).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = parallel_map(&pool, (0..64).collect::<Vec<i64>>(), |x| x * x);
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = parallel_map(&pool, Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn matches_serial() {
+        let pool = ThreadPool::new(5);
+        let xs: Vec<u64> = (1..200).collect();
+        let p = parallel_map(&pool, xs.clone(), |x| x.pow(2) % 97);
+        let s = serial_map(xs, |x| x.pow(2) % 97);
+        assert_eq!(p, s);
+    }
+}

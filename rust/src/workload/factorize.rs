@@ -1,0 +1,112 @@
+//! Integer factorization helpers for prime-factor genome encoding.
+//!
+//! Dimension sizes are decomposed into prime factors; each factor becomes
+//! one gene that selects the mapping level it is assigned to (§IV.B of the
+//! paper). Large prime dimensions are padded to the nearest larger
+//! composite so they can be tiled ("input tensors may be padded in
+//! practical scenarios").
+
+/// Trial-division primality test; dimension sizes are ≤ ~10^5 so this is
+/// more than fast enough.
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    if n % 2 == 0 {
+        return n == 2;
+    }
+    let mut d = 3;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 2;
+    }
+    true
+}
+
+/// Prime factorization in non-decreasing order. `factorize(1) == []`.
+pub fn factorize(mut n: u64) -> Vec<u64> {
+    assert!(n >= 1, "factorize(0)");
+    let mut out = Vec::new();
+    let mut d = 2;
+    while d * d <= n {
+        while n % d == 0 {
+            out.push(d);
+            n /= d;
+        }
+        d += if d == 2 { 1 } else { 2 };
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+/// Pad a dimension size for tiling, following the paper's rule: a *large
+/// prime* dimension is replaced by the nearest larger composite number.
+/// Small primes (≤ 7) are left alone — they tile fine as a single factor.
+pub fn pad_dimension(n: u64) -> u64 {
+    if n <= 7 || !is_prime(n) {
+        return n;
+    }
+    let mut m = n + 1;
+    while is_prime(m) {
+        m += 1;
+    }
+    m
+}
+
+/// Number of trailing padded elements introduced by [`pad_dimension`].
+pub fn padding_of(n: u64) -> u64 {
+    pad_dimension(n) - n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primality() {
+        let primes = [2u64, 3, 5, 7, 11, 73, 9973];
+        let composites = [1u64, 4, 6, 9, 100, 730, 9975];
+        for p in primes {
+            assert!(is_prime(p), "{p}");
+        }
+        for c in composites {
+            assert!(!is_prime(c), "{c}");
+        }
+    }
+
+    #[test]
+    fn factorization_roundtrip() {
+        for n in 1..2000u64 {
+            let fs = factorize(n);
+            assert_eq!(fs.iter().product::<u64>(), n.max(1));
+            for f in &fs {
+                assert!(is_prime(*f));
+            }
+            // Non-decreasing.
+            assert!(fs.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn padding_rules() {
+        assert_eq!(pad_dimension(2), 2); // small primes untouched
+        assert_eq!(pad_dimension(7), 7);
+        assert_eq!(pad_dimension(11), 12);
+        assert_eq!(pad_dimension(12), 12); // composites untouched
+        assert_eq!(pad_dimension(73), 74);
+        assert_eq!(padding_of(13), 1); // 13 -> 14
+    }
+
+    #[test]
+    fn padded_always_composite_or_small() {
+        for n in 1..5000u64 {
+            let p = pad_dimension(n);
+            assert!(p >= n);
+            assert!(p <= 7 || !is_prime(p), "pad({n}) = {p} is prime");
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Sparse tensor algebra workload definitions.
+//!
+//! A [`Workload`] is an einsum-like contraction `P ⊙ Q → Z` described by a
+//! list of named iteration dimensions, per-tensor dimension projections and
+//! densities. SpMM is the native form; SpConv is lowered to an implicit
+//! GEMM ([`spconv`]). The paper's full benchmark suite (Table III) is
+//! provided by [`table3`].
+
+pub mod factorize;
+pub mod spconv;
+pub mod table3;
+
+use crate::util::json::Json;
+use factorize::{factorize, pad_dimension};
+
+/// One iteration-space dimension of a workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dim {
+    /// Human-readable name ("M", "K", "N", "B", ...).
+    pub name: String,
+    /// Logical size as given by the workload.
+    pub size: u64,
+    /// Size after padding prime dimensions to composites (what the mapping
+    /// actually tiles).
+    pub padded: u64,
+    /// Prime factors of `padded`, non-decreasing. One genome gene each.
+    pub factors: Vec<u64>,
+}
+
+impl Dim {
+    pub fn new(name: &str, size: u64) -> Self {
+        let padded = pad_dimension(size);
+        Dim { name: name.to_string(), size, padded, factors: factorize(padded) }
+    }
+}
+
+/// Role of a tensor in the contraction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorRole {
+    /// First input operand (paper's P).
+    InputA,
+    /// Second input operand (paper's Q).
+    InputB,
+    /// Output (paper's Z); written with partial-sum accumulation.
+    Output,
+}
+
+/// Index of a tensor in [`Workload::tensors`]; fixed order P, Q, Z.
+pub const TENSOR_P: usize = 0;
+pub const TENSOR_Q: usize = 1;
+pub const TENSOR_Z: usize = 2;
+pub const NUM_TENSORS: usize = 3;
+
+/// A tensor participating in the workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub role: TensorRole,
+    /// Indices into [`Workload::dims`] this tensor is projected onto,
+    /// ordered from its outermost to innermost logical rank.
+    pub dims: Vec<usize>,
+    /// Fraction of nonzero elements, in `(0, 1]`.
+    pub density: f64,
+}
+
+/// Kind tag, used for reporting only — both kinds evaluate through the
+/// same GEMM-shaped model after lowering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    SpMM,
+    SpConv,
+    SpBMM,
+}
+
+impl WorkloadKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WorkloadKind::SpMM => "SpMM",
+            WorkloadKind::SpConv => "SpConv",
+            WorkloadKind::SpBMM => "SpBMM",
+        }
+    }
+}
+
+/// A sparse tensor algebra workload (einsum contraction with densities).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    pub id: String,
+    pub kind: WorkloadKind,
+    pub dims: Vec<Dim>,
+    /// Exactly three tensors: P, Q, Z (see `TENSOR_*`).
+    pub tensors: Vec<TensorSpec>,
+    /// Indices of contracted (reduction) dimensions.
+    pub contraction: Vec<usize>,
+}
+
+impl Workload {
+    /// Plain SpMM: `P[M,K] × Q[K,N] = Z[M,N]` with given densities.
+    pub fn spmm(id: &str, m: u64, k: u64, n: u64, dp: f64, dq: f64) -> Workload {
+        assert!(dp > 0.0 && dp <= 1.0 && dq > 0.0 && dq <= 1.0, "bad density");
+        let dims = vec![Dim::new("M", m), Dim::new("K", k), Dim::new("N", n)];
+        let dz = output_density(dp, dq, k);
+        Workload {
+            id: id.to_string(),
+            kind: WorkloadKind::SpMM,
+            tensors: vec![
+                TensorSpec {
+                    name: "P".into(),
+                    role: TensorRole::InputA,
+                    dims: vec![0, 1],
+                    density: dp,
+                },
+                TensorSpec {
+                    name: "Q".into(),
+                    role: TensorRole::InputB,
+                    dims: vec![1, 2],
+                    density: dq,
+                },
+                TensorSpec {
+                    name: "Z".into(),
+                    role: TensorRole::Output,
+                    dims: vec![0, 2],
+                    density: dz,
+                },
+            ],
+            dims,
+            contraction: vec![1],
+        }
+    }
+
+    /// Batched SpMM: `P[B,M,K] × Q[B,K,N] = Z[B,M,N]` — the 4-dimension
+    /// example of Fig. 15 (multi-dimensional workload support).
+    pub fn spbmm(id: &str, b: u64, m: u64, k: u64, n: u64, dp: f64, dq: f64) -> Workload {
+        let mut w = Workload::spmm(id, m, k, n, dp, dq);
+        w.kind = WorkloadKind::SpBMM;
+        w.dims.insert(0, Dim::new("B", b));
+        for t in &mut w.tensors {
+            for d in &mut t.dims {
+                *d += 1;
+            }
+            t.dims.insert(0, 0); // every tensor carries the batch dim
+        }
+        w.contraction = vec![2];
+        w
+    }
+
+    /// Number of iteration dimensions.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total MAC operations of the dense iteration space (padded sizes).
+    pub fn total_ops(&self) -> f64 {
+        self.dims.iter().map(|d| d.padded as f64).product()
+    }
+
+    /// Dense element count of tensor `t` (padded).
+    pub fn tensor_elems(&self, t: usize) -> f64 {
+        self.tensors[t].dims.iter().map(|&d| self.dims[d].padded as f64).product()
+    }
+
+    /// Is dimension `d` relevant to (projected onto) tensor `t`?
+    pub fn relevant(&self, t: usize, d: usize) -> bool {
+        self.tensors[t].dims.contains(&d)
+    }
+
+    /// Total number of prime-factor genes across all dims.
+    pub fn num_factor_genes(&self) -> usize {
+        self.dims.iter().map(|d| d.factors.len()).sum()
+    }
+
+    /// Lightweight JSON description (used by telemetry dumps).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("kind", Json::str(self.kind.as_str())),
+            (
+                "dims",
+                Json::Arr(
+                    self.dims
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("name", Json::str(&d.name)),
+                                ("size", Json::num(d.size as f64)),
+                                ("padded", Json::num(d.padded as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "tensors",
+                Json::Arr(
+                    self.tensors
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("name", Json::str(&t.name)),
+                                ("density", Json::num(t.density)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Expected output density of a length-`k` dot product with operand
+/// densities `dp`, `dq` under a uniform-random occupancy model:
+/// `1 - (1 - dp*dq)^k`, clamped away from 0.
+pub fn output_density(dp: f64, dq: f64, k: u64) -> f64 {
+    let p = 1.0 - (1.0 - dp * dq).powf(k as f64);
+    p.clamp(1e-6, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmm_shape() {
+        let w = Workload::spmm("t", 32, 64, 48, 0.5, 0.25);
+        assert_eq!(w.rank(), 3);
+        assert_eq!(w.tensors[TENSOR_P].dims, vec![0, 1]);
+        assert_eq!(w.tensors[TENSOR_Q].dims, vec![1, 2]);
+        assert_eq!(w.tensors[TENSOR_Z].dims, vec![0, 2]);
+        assert_eq!(w.contraction, vec![1]);
+        assert_eq!(w.total_ops(), (32 * 64 * 48) as f64);
+        assert_eq!(w.tensor_elems(TENSOR_P), (32 * 64) as f64);
+    }
+
+    #[test]
+    fn prime_dim_padded() {
+        let w = Workload::spmm("t", 31, 64, 48, 0.5, 0.5);
+        assert_eq!(w.dims[0].size, 31);
+        assert_eq!(w.dims[0].padded, 32);
+        assert_eq!(w.dims[0].factors, vec![2, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn output_density_monotone() {
+        // Denser inputs and longer dot products -> denser output.
+        assert!(output_density(0.5, 0.5, 64) > output_density(0.1, 0.1, 64));
+        assert!(output_density(0.1, 0.1, 1024) > output_density(0.1, 0.1, 4));
+        assert!(output_density(1.0, 1.0, 1) == 1.0);
+    }
+
+    #[test]
+    fn bmm_has_four_dims() {
+        let w = Workload::spbmm("b", 8, 16, 32, 16, 0.5, 0.5);
+        assert_eq!(w.rank(), 4);
+        assert_eq!(w.dims[0].name, "B");
+        // Batch dim is relevant to every tensor, K only to P and Q.
+        for t in 0..NUM_TENSORS {
+            assert!(w.relevant(t, 0));
+        }
+        assert!(w.relevant(TENSOR_P, 2) && w.relevant(TENSOR_Q, 2) && !w.relevant(TENSOR_Z, 2));
+        assert_eq!(w.contraction, vec![2]);
+    }
+
+    #[test]
+    fn factor_gene_count() {
+        let w = Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+        // 4 = 2*2 (2 genes), 8 = 2*2*2 (3), 4 = 2*2 (2)
+        assert_eq!(w.num_factor_genes(), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_density_rejected() {
+        Workload::spmm("t", 4, 4, 4, 0.0, 0.5);
+    }
+}

@@ -1,0 +1,106 @@
+//! SpConv → implicit GEMM lowering.
+//!
+//! The paper evaluates SpConv layers (pruned VGG16, Table III) through the
+//! same mapping/sparse-strategy machinery as SpMM. We lower a convolution
+//! `X[C,H,W] * W[Kout,C,R,S] -> Y[Kout,H',W']` to the implicit GEMM
+//!
+//! ```text
+//!   P[M,K] = weights  reshaped to  [Kout, C·R·S]
+//!   Q[K,N] = im2col(X)             [C·R·S, H'·W']
+//!   Z[M,N] = Y                     [Kout,  H'·W']
+//! ```
+//!
+//! Stride 1 and 'same' zero padding are assumed for odd kernels (the VGG16
+//! convention); even kernels use 'valid'. This matches how the paper's
+//! cost environment treats conv workloads: only the GEMM extents and the
+//! operand densities matter for DSE.
+
+use super::{Workload, WorkloadKind};
+
+/// Convolution layer description (NCHW, single image).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConvShape {
+    /// Input channels.
+    pub c: u64,
+    /// Input spatial height/width.
+    pub h: u64,
+    pub w: u64,
+    /// Output channels.
+    pub kout: u64,
+    /// Kernel spatial size.
+    pub r: u64,
+    pub s: u64,
+}
+
+impl ConvShape {
+    /// Output spatial extent under stride-1 'same' (odd kernel) or
+    /// 'valid' (even kernel) padding.
+    pub fn out_hw(&self) -> (u64, u64) {
+        let oh = if self.r % 2 == 1 { self.h } else { (self.h + 1).saturating_sub(self.r) };
+        let ow = if self.s % 2 == 1 { self.w } else { (self.w + 1).saturating_sub(self.s) };
+        (oh.max(1), ow.max(1))
+    }
+
+    /// GEMM extents `(M, K, N)` of the implicit-GEMM lowering.
+    pub fn gemm_extents(&self) -> (u64, u64, u64) {
+        let (oh, ow) = self.out_hw();
+        (self.kout, self.c * self.r * self.s, oh * ow)
+    }
+}
+
+/// Lower a conv layer to a GEMM-shaped [`Workload`].
+///
+/// `d_act` is the input-activation density, `d_wgt` the weight density
+/// (both from Table III). Weights become operand P, activations operand Q
+/// — so "weight stationary" designs keep P resident, matching how the
+/// paper discusses NVDLA-class accelerators.
+pub fn lower_conv(id: &str, shape: ConvShape, d_act: f64, d_wgt: f64) -> Workload {
+    let (m, k, n) = shape.gemm_extents();
+    let mut w = Workload::spmm(id, m, k, n, d_wgt, d_act);
+    w.kind = WorkloadKind::SpConv;
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{TENSOR_P, TENSOR_Q};
+
+    #[test]
+    fn same_padding_for_odd_kernels() {
+        let s = ConvShape { c: 64, h: 32, w: 32, kout: 256, r: 3, s: 3 };
+        assert_eq!(s.out_hw(), (32, 32));
+        assert_eq!(s.gemm_extents(), (256, 64 * 9, 32 * 32));
+    }
+
+    #[test]
+    fn valid_padding_for_even_kernels() {
+        let s = ConvShape { c: 128, h: 64, w: 64, kout: 512, r: 4, s: 4 };
+        assert_eq!(s.out_hw(), (61, 61));
+    }
+
+    #[test]
+    fn pointwise_conv() {
+        let s = ConvShape { c: 1024, h: 8, w: 8, kout: 256, r: 1, s: 1 };
+        assert_eq!(s.gemm_extents(), (256, 1024, 64));
+    }
+
+    #[test]
+    fn lowering_assigns_densities() {
+        let s = ConvShape { c: 3, h: 32, w: 32, kout: 64, r: 3, s: 3 };
+        let w = lower_conv("conv1", s, 1.0, 0.546);
+        assert_eq!(w.kind, WorkloadKind::SpConv);
+        assert!((w.tensors[TENSOR_P].density - 0.546).abs() < 1e-12); // weights
+        assert!((w.tensors[TENSOR_Q].density - 1.0).abs() < 1e-12); // acts
+        assert_eq!(w.dims[0].size, 64);
+        assert_eq!(w.dims[1].size, 27);
+        assert_eq!(w.dims[2].size, 1024);
+    }
+
+    #[test]
+    fn degenerate_spatial_floor() {
+        let s = ConvShape { c: 8, h: 2, w: 2, kout: 8, r: 4, s: 4 };
+        let (oh, ow) = s.out_hw();
+        assert!(oh >= 1 && ow >= 1);
+    }
+}

@@ -1,0 +1,146 @@
+//! The paper's full workload suite (Table III): 15 SpMM + 13 SpConv.
+//!
+//! Densities are verbatim from the table. Sizes printed in the paper with
+//! a "K" suffix are resolved to concrete power-of-two-friendly values
+//! (92K → 92160, 7.7K → 7680, ...), documented per row; the DSE behaviour
+//! depends only on extents/densities, not on the authors' exact rounding.
+
+use super::spconv::{lower_conv, ConvShape};
+use super::Workload;
+
+/// All Table III workloads, mm1..mm15 then conv1..conv13.
+pub fn all() -> Vec<Workload> {
+    let mut v = spmm_suite();
+    v.extend(spconv_suite());
+    v
+}
+
+/// Look up a Table III workload by id (e.g. "mm3", "conv4").
+pub fn by_id(id: &str) -> Option<Workload> {
+    all().into_iter().find(|w| w.id == id)
+}
+
+/// The 15 SpMM rows (DeepBench + sparseGPT-derived).
+pub fn spmm_suite() -> Vec<Workload> {
+    // (id, M, K(shared), N, dP, dQ). Operand1 is M×K, operand2 K×N; the
+    // table lists each operand's own shape — the shared middle extent is
+    // the contraction K.
+    let rows: &[(&str, u64, u64, u64, f64, f64)] = &[
+        ("mm1", 124, 124, 124, 0.785, 0.785),
+        ("mm2", 171, 92_160, 171, 0.209, 0.209),
+        ("mm3", 730, 730, 730, 0.118, 0.118), // DeepBench "bibd" class
+        ("mm4", 7_680, 2_560, 7_680, 0.050, 0.050),
+        ("mm5", 9_216, 9_216, 9_216, 0.041, 0.041),
+        ("mm6", 2_560, 2_560, 2_560, 0.011, 0.011),
+        ("mm7", 1_632, 4_608, 1_632, 0.003, 0.003),
+        ("mm8", 2_048, 12_288, 128, 1.0, 0.50), // sparseGPT MHA/MLP rows
+        ("mm9", 2_048, 12_288, 49_152, 1.0, 0.50),
+        ("mm10", 2_048, 49_152, 12_288, 1.0, 0.50),
+        ("mm11", 128, 1_024, 128, 0.006, 0.006),
+        ("mm12", 768, 64, 768, 0.059, 0.059),
+        ("mm13", 12_288, 24_576, 12_288, 0.010, 0.010),
+        ("mm14", 256, 512, 2_048, 0.328, 0.718),
+        ("mm15", 1_024, 16_384, 16_384, 0.600, 0.780),
+    ];
+    rows.iter()
+        .map(|&(id, m, k, n, dp, dq)| Workload::spmm(id, m, k, n, dp, dq))
+        .collect()
+}
+
+/// The 13 SpConv rows (VGG16-style pruned layers; operand1 = activations
+/// C×H×W, operand2 = weights Kout×C×R×S, densities verbatim).
+pub fn spconv_suite() -> Vec<Workload> {
+    let rows: &[(&str, u64, u64, u64, u64, u64, u64, f64, f64)] = &[
+        // id,           C,   H,  W, Kout,  R, S, d_act, d_wgt
+        ("conv1", 3, 32, 32, 64, 3, 3, 1.0, 0.546),
+        ("conv2", 64, 32, 32, 256, 1, 1, 0.450, 0.252),
+        ("conv3", 128, 16, 16, 512, 1, 1, 0.396, 0.366),
+        ("conv4", 128, 16, 16, 128, 3, 3, 0.477, 0.647),
+        ("conv5", 1_024, 8, 8, 256, 1, 1, 0.402, 0.501),
+        ("conv6", 256, 8, 8, 256, 3, 3, 0.430, 0.617),
+        ("conv7", 512, 4, 4, 2_048, 1, 1, 0.590, 0.118),
+        ("conv8", 128, 64, 64, 512, 4, 4, 0.400, 0.300),
+        ("conv9", 128, 64, 64, 64, 1, 1, 1.0, 0.200),
+        ("conv10", 256, 64, 64, 512, 1, 1, 0.400, 0.250),
+        ("conv11", 4, 32, 32, 64, 3, 3, 0.340, 0.146),
+        ("conv12", 1_024, 4, 4, 64, 1, 1, 0.790, 0.118),
+        ("conv13", 256, 16, 16, 128, 1, 1, 0.902, 0.051),
+    ];
+    rows.iter()
+        .map(|&(id, c, h, w, kout, r, s, da, dw)| {
+            lower_conv(id, ConvShape { c, h, w, kout, r, s }, da, dw)
+        })
+        .collect()
+}
+
+/// Convenience: the VGG16 conv layers used by Fig. 17.
+pub fn vgg16_convs() -> Vec<Workload> {
+    spconv_suite()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{WorkloadKind, TENSOR_P, TENSOR_Q};
+
+    #[test]
+    fn suite_sizes() {
+        assert_eq!(spmm_suite().len(), 15);
+        assert_eq!(spconv_suite().len(), 13);
+        assert_eq!(all().len(), 28);
+    }
+
+    #[test]
+    fn unique_ids() {
+        let mut ids: Vec<String> = all().iter().map(|w| w.id.clone()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 28);
+    }
+
+    #[test]
+    fn lookup() {
+        let w = by_id("mm3").unwrap();
+        assert_eq!(w.dims[0].size, 730);
+        assert!((w.tensors[TENSOR_P].density - 0.118).abs() < 1e-12);
+        assert!(by_id("nope").is_none());
+    }
+
+    #[test]
+    fn densities_in_range() {
+        for w in all() {
+            for t in &w.tensors {
+                assert!(t.density > 0.0 && t.density <= 1.0, "{}: {}", w.id, t.density);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_rows_are_gemms() {
+        let w = by_id("conv4").unwrap();
+        assert_eq!(w.kind, WorkloadKind::SpConv);
+        // conv4: 128 out-ch, K = 128*3*3, N = 16*16.
+        assert_eq!(w.dims[0].size, 128);
+        assert_eq!(w.dims[1].size, 128 * 9);
+        assert_eq!(w.dims[2].size, 256);
+        assert!((w.tensors[TENSOR_P].density - 0.647).abs() < 1e-12);
+        assert!((w.tensors[TENSOR_Q].density - 0.477).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mm8_dense_operand() {
+        let w = by_id("mm8").unwrap();
+        assert_eq!(w.tensors[TENSOR_P].density, 1.0);
+        assert_eq!(w.tensors[TENSOR_Q].density, 0.5);
+    }
+
+    #[test]
+    fn all_dims_factorizable() {
+        for w in all() {
+            for d in &w.dims {
+                assert!(!d.factors.is_empty(), "{}: dim {} has no factors", w.id, d.name);
+                assert_eq!(d.factors.iter().product::<u64>(), d.padded);
+            }
+        }
+    }
+}

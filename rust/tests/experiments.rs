@@ -1,0 +1,178 @@
+//! Experiment-shape tests: scaled-down versions of every paper artifact,
+//! asserting the *qualitative* reproduction targets (who wins, where
+//! crossovers fall) rather than absolute numbers.
+
+use sparsemap::arch::Platform;
+use sparsemap::baselines::{run_method, DirectSpec};
+use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, table4, ExpConfig};
+use sparsemap::search::{Backend, EvalContext};
+use sparsemap::util::rng::Pcg64;
+use sparsemap::workload::table3;
+
+fn cfg(budget: usize, seed: u64) -> ExpConfig {
+    ExpConfig {
+        budget,
+        seed,
+        out_dir: std::env::temp_dir().join("sm_experiments"),
+        threads: 8,
+        ..Default::default()
+    }
+}
+
+// --- E1 / Fig. 2 -----------------------------------------------------------
+
+#[test]
+fn e1_no_universal_winner() {
+    let winners = fig2::winners(&cfg(0, 1));
+    let distinct: std::collections::HashSet<&str> =
+        winners.iter().map(|&(_, a)| a).collect();
+    assert!(distinct.len() >= 2, "single universal winner: {winners:?}");
+}
+
+// --- E2 / Fig. 7 -----------------------------------------------------------
+
+#[test]
+fn e2_invalid_points_dominate_joint_space() {
+    let pts = fig7::sample(&cfg(0, 2), 500);
+    let valid = pts.iter().filter(|p| p.valid).count();
+    assert!(valid > 0);
+    assert!(valid < pts.len() / 2, "{valid}/{} valid", pts.len());
+}
+
+// --- E3 / Fig. 10 ----------------------------------------------------------
+
+#[test]
+fn e3_cantor_beats_random_encoding_majority() {
+    let mut wins = 0;
+    for seed in [31, 32, 33] {
+        let (c, r) = fig10::run_arms(&cfg(1_500, seed));
+        if c.best_edp <= r.best_edp * 1.1 {
+            wins += 1;
+        }
+    }
+    assert!(wins >= 2, "cantor won {wins}/3");
+}
+
+// --- E4 / Fig. 17a ---------------------------------------------------------
+
+#[test]
+fn e4_sparsemap_wins_on_vgg_layers() {
+    let outcomes = fig17::run_matrix(&cfg(1_200, 4), &Platform::cloud(), &["conv11", "conv12"]);
+    for layer in ["conv11", "conv12"] {
+        let ours = outcomes
+            .iter()
+            .find(|o| o.workload == layer && o.method == "sparsemap")
+            .unwrap();
+        assert!(ours.found_valid(), "sparsemap found nothing on {layer}");
+        let mut beaten = 0;
+        let mut total = 0;
+        for o in outcomes.iter().filter(|o| o.workload == layer && o.method != "sparsemap") {
+            total += 1;
+            if ours.best_edp <= o.best_edp {
+                beaten += 1;
+            }
+        }
+        // At this scaled-down budget SparseMap must beat the majority of
+        // baselines per layer (at the paper's 20k budget it wins 12/13
+        // layers outright — see EXPERIMENTS.md E4).
+        assert!(
+            beaten * 10 >= total * 6,
+            "{layer}: sparsemap beat only {beaten}/{total} baselines"
+        );
+    }
+}
+
+// --- E5 / Fig. 17b ---------------------------------------------------------
+
+#[test]
+fn e5_sparsemap_valid_ratio_leads() {
+    let outcomes = fig17::run_matrix(&cfg(1_000, 5), &Platform::cloud(), &["conv11"]);
+    let ours = outcomes.iter().find(|o| o.method == "sparsemap").unwrap().valid_ratio();
+    let mean_baseline: f64 = outcomes
+        .iter()
+        .filter(|o| o.method != "sparsemap")
+        .map(|o| o.valid_ratio())
+        .sum::<f64>()
+        / (outcomes.len() - 1) as f64;
+    assert!(
+        ours >= mean_baseline,
+        "sparsemap valid ratio {ours:.3} below baseline mean {mean_baseline:.3}"
+    );
+}
+
+// --- E6/E9 / Table IV -------------------------------------------------------
+
+#[test]
+fn e6_sparsemap_wins_table4_subset_on_all_platforms() {
+    let cells = table4::run_matrix(
+        &cfg(2_500, 6),
+        &vec!["mm3".to_string(), "conv11".to_string(), "mm12".to_string()],
+    );
+    for plat in ["edge", "mobile", "cloud"] {
+        for baseline in ["sage-like", "sparseloop"] {
+            let r = table4::reduction(&cells, baseline, plat);
+            assert!(
+                r >= 0.9,
+                "sparsemap lost to {baseline} on {plat}: geomean {r:.3}"
+            );
+        }
+    }
+}
+
+// --- E7 / Fig. 18 ----------------------------------------------------------
+
+#[test]
+fn e7_ablation_validity_ordering() {
+    let cfg = cfg(1_800, 7);
+    let w = table3::by_id("mm3").unwrap();
+    let run = |m: &str| {
+        let ctx = EvalContext::new(Backend::native(w.clone(), Platform::cloud()), cfg.budget);
+        run_method(m, ctx, cfg.seed).unwrap()
+    };
+    let direct = run("es-direct");
+    let pfce = run("es-pfce");
+    let full = run("sparsemap");
+    // PFCE eliminates tiling-dead individuals entirely -> strictly more
+    // valid exploration than the direct encoding.
+    assert!(pfce.valid_ratio() > direct.valid_ratio() * 1.5);
+    // Full SparseMap converges at least as well as the direct arm.
+    assert!(full.best_edp <= direct.best_edp);
+    let _ = fig18::ABLATION_ARMS;
+}
+
+// --- E8 / calibration overhead ----------------------------------------------
+
+#[test]
+fn e8_hshi_overhead_under_ten_percent() {
+    use sparsemap::es::{run_sparsemap, EsConfig};
+    let w = table3::by_id("mm3").unwrap();
+    let budget = 5_000;
+    let ctx = EvalContext::new(Backend::native(w.clone(), Platform::cloud()), budget);
+    // Run calibration alone and check its share.
+    let mut ctx2 = EvalContext::new(Backend::native(w, Platform::cloud()), budget);
+    let mut rng = Pcg64::seeded(8);
+    let mut calib = sparsemap::es::CalibConfig::default();
+    calib.max_evals = budget / 10;
+    let sens = sparsemap::es::sensitivity::calibrate(&mut ctx2, calib, &mut rng);
+    assert!(
+        sens.evals_spent <= budget / 10,
+        "calibration used {} of {budget}",
+        sens.evals_spent
+    );
+    // And the full search still uses its entire budget productively.
+    let o = run_sparsemap(ctx, EsConfig::default(), 8);
+    assert!(o.evals >= budget * 9 / 10);
+}
+
+// --- paper's 0.000023% direct-encoding argument ------------------------------
+
+#[test]
+fn direct_encoding_tiling_hit_rate_is_tiny() {
+    // §IV.B: for a 4x8x4 toy the paper counts 7875 valid of 4^5*8^5*4^5.
+    // Our uniform sampler over the direct space should land well under 1%.
+    let w = sparsemap::workload::Workload::spmm("t", 4, 8, 4, 0.5, 0.5);
+    let spec = DirectSpec::new(&w, 3);
+    let mut rng = Pcg64::seeded(9);
+    let rate = spec.tiling_hit_rate(&w, 5_000, &mut rng);
+    assert!(rate < 0.01, "hit rate {rate}");
+}

@@ -1,0 +1,223 @@
+//! Property-based tests (hand-rolled: seeded random generation + invariant
+//! checks, proptest-style) over the coordinator's core invariants.
+
+use sparsemap::arch::{Boundary, Platform};
+use sparsemap::genome::{decode, ops, tensor_ranks, GenomeSpec};
+use sparsemap::mapping::{loopnest, permutation, MapLevel};
+use sparsemap::model::{evaluate_features, extract, platform_vector, NativeEvaluator};
+use sparsemap::util::rng::Pcg64;
+use sparsemap::workload::{table3, Workload, TENSOR_P, TENSOR_Q, TENSOR_Z};
+
+fn random_workload(rng: &mut Pcg64) -> Workload {
+    let dims: Vec<u64> = (0..3).map(|_| 1 << rng.range_u32(2, 9)).collect();
+    let dp = 0.01 + rng.f64() * 0.99;
+    let dq = 0.01 + rng.f64() * 0.99;
+    Workload::spmm("prop", dims[0], dims[1], dims[2], dp, dq)
+}
+
+/// Invariant: decoding any in-range genome yields a mapping that tiles
+/// every dimension exactly (the PFCE guarantee) with aligned format
+/// stacks, for arbitrary workloads.
+#[test]
+fn prop_decode_total_and_constraint_preserving() {
+    let mut rng = Pcg64::seeded(101);
+    for _ in 0..40 {
+        let w = random_workload(&mut rng);
+        let spec = GenomeSpec::for_workload(&w);
+        for _ in 0..50 {
+            let g = spec.random(&mut rng);
+            let d = decode(&spec, &w, &g);
+            assert!(d.mapping.respects(&w));
+            for t in 0..3 {
+                assert_eq!(
+                    d.strategy.formats[t].len(),
+                    tensor_ranks(&d.mapping, &w, t).len()
+                );
+            }
+        }
+    }
+}
+
+/// Invariant: genetic operators never leave the genome's valid ranges.
+#[test]
+fn prop_operators_preserve_ranges() {
+    let mut rng = Pcg64::seeded(102);
+    for _ in 0..20 {
+        let w = random_workload(&mut rng);
+        let spec = GenomeSpec::for_workload(&w);
+        let mut a = spec.random(&mut rng);
+        let b = spec.random(&mut rng);
+        for _ in 0..30 {
+            let (c1, c2) = ops::onepoint_crossover(&a, &b, &mut rng);
+            assert!(spec.in_range(&c1) && spec.in_range(&c2));
+            ops::point_mutation(&spec, &mut a, 0.3, &mut rng);
+            assert!(spec.in_range(&a));
+            let i = rng.index(spec.len());
+            ops::nudge_gene(&spec, &mut a, i, &mut rng);
+            assert!(spec.in_range(&a));
+        }
+    }
+}
+
+/// Invariant: Cantor encoding is a bijection on every rank d ∈ {2..5} and
+/// adjacent codes are closer (Kendall tau) on average than random pairs.
+#[test]
+fn prop_cantor_bijection_and_locality() {
+    for d in 2..=5usize {
+        let total = permutation::factorial(d);
+        let mut seen = std::collections::HashSet::new();
+        for code in 1..=total {
+            let p = permutation::decode(code, d);
+            assert_eq!(permutation::encode(&p), code);
+            seen.insert(p);
+        }
+        assert_eq!(seen.len() as u64, total);
+    }
+    // Locality: mean tau between adjacent codes < mean tau between random
+    // code pairs (d = 4).
+    let d = 4;
+    let total = permutation::factorial(d);
+    let adj: f64 = (1..total)
+        .map(|c| {
+            permutation::kendall_tau(
+                &permutation::decode(c, d),
+                &permutation::decode(c + 1, d),
+            ) as f64
+        })
+        .sum::<f64>()
+        / (total - 1) as f64;
+    let mut rng = Pcg64::seeded(103);
+    let rand: f64 = (0..200)
+        .map(|_| {
+            let a = 1 + rng.below(total);
+            let b = 1 + rng.below(total);
+            permutation::kendall_tau(
+                &permutation::decode(a, d),
+                &permutation::decode(b, d),
+            ) as f64
+        })
+        .sum::<f64>()
+        / 200.0;
+    assert!(adj < rand, "adjacent tau {adj} >= random tau {rand}");
+}
+
+/// Invariant: traffic accounting is conservative — every tensor's DRAM
+/// traffic is at least its tile size × 1 and at most the full dense
+/// iteration-space traffic.
+#[test]
+fn prop_traffic_bounds() {
+    let mut rng = Pcg64::seeded(104);
+    for _ in 0..25 {
+        let w = random_workload(&mut rng);
+        let spec = GenomeSpec::for_workload(&w);
+        for _ in 0..40 {
+            let g = spec.random(&mut rng);
+            let d = decode(&spec, &w, &g);
+            for t in [TENSOR_P, TENSOR_Q] {
+                let tile = loopnest::tile_elems(&d.mapping, &w, t, Boundary::DramGlb);
+                let mult = loopnest::input_multiplicity(&d.mapping, &w, t, Boundary::DramGlb);
+                let traffic = tile * mult;
+                assert!(traffic + 1e-9 >= w.tensor_elems(t), "tensor read less than once");
+                assert!(
+                    traffic <= w.total_ops() + 1e-9,
+                    "traffic {traffic} exceeds dense op count {}",
+                    w.total_ops()
+                );
+            }
+            let ztraf = loopnest::output_traffic_elems(&d.mapping, &w, Boundary::DramGlb);
+            assert!(ztraf + 1e-9 >= w.tensor_elems(TENSOR_Z));
+        }
+    }
+}
+
+/// Invariant: denser workloads never get *cheaper* total energy under the
+/// same design (monotonicity of the sparsity model).
+#[test]
+fn prop_energy_monotone_in_density() {
+    let mut rng = Pcg64::seeded(105);
+    for _ in 0..20 {
+        let m = 1u64 << rng.range_u32(3, 7);
+        let spec_w = Workload::spmm("a", m, m, m, 0.2, 0.2);
+        let spec = GenomeSpec::for_workload(&spec_w);
+        let g = spec.random(&mut rng);
+        let mut last = 0.0;
+        for d in [0.05, 0.2, 0.5, 0.9] {
+            let w = Workload::spmm("a", m, m, m, d, d);
+            let ev = NativeEvaluator::new(w, Platform::mobile());
+            let design = decode(&ev.spec, &ev.workload, &g);
+            let cb = ev.breakdown(&design);
+            assert!(
+                cb.energy_pj >= last * 0.999,
+                "energy decreased with density: {} -> {}",
+                last,
+                cb.energy_pj
+            );
+            last = cb.energy_pj;
+        }
+    }
+}
+
+/// Invariant: the feature-vector formula equals the native breakdown —
+/// `evaluate_features` is deterministic and pure.
+#[test]
+fn prop_evaluate_features_pure() {
+    let mut rng = Pcg64::seeded(106);
+    let w = table3::by_id("mm3").unwrap();
+    let plat = Platform::cloud();
+    let spec = GenomeSpec::for_workload(&w);
+    let pv = platform_vector(&plat);
+    for _ in 0..100 {
+        let g = spec.random(&mut rng);
+        let d = decode(&spec, &w, &g);
+        let f = extract(&d, &w, &plat);
+        let a = evaluate_features(&f, &pv);
+        let b = evaluate_features(&f, &pv);
+        assert_eq!(a, b);
+    }
+}
+
+/// Invariant: spatial fanout at a level equals the product of per-tensor
+/// distinct × multicast decomposition for each tensor.
+#[test]
+fn prop_spatial_decomposition() {
+    let mut rng = Pcg64::seeded(107);
+    for _ in 0..25 {
+        let w = random_workload(&mut rng);
+        let spec = GenomeSpec::for_workload(&w);
+        let g = spec.random(&mut rng);
+        let d = decode(&spec, &w, &g);
+        for level in [MapLevel::L2S, MapLevel::L3S] {
+            let fanout = d.mapping.fanout(level);
+            for t in 0..3 {
+                let distinct = loopnest::spatial_distinct(&d.mapping, &w, t, level);
+                assert!(fanout % distinct == 0, "distinct must divide fanout");
+            }
+        }
+    }
+}
+
+/// Invariant: EvalContext budget accounting is exact under arbitrary
+/// interleavings of batch sizes.
+#[test]
+fn prop_budget_accounting_exact() {
+    let mut rng = Pcg64::seeded(108);
+    for _ in 0..10 {
+        let w = random_workload(&mut rng);
+        let budget = 50 + rng.index(300);
+        let mut ctx = sparsemap::search::EvalContext::new(
+            sparsemap::search::Backend::native(w, Platform::edge()),
+            budget,
+        );
+        let spec = ctx.spec.clone();
+        let mut submitted = 0;
+        while !ctx.exhausted() {
+            let n = 1 + rng.index(40);
+            let genomes: Vec<Vec<u32>> = (0..n).map(|_| spec.random(&mut rng)).collect();
+            let got = ctx.eval_batch(&genomes).len();
+            submitted += got;
+            assert_eq!(ctx.used(), submitted);
+            assert!(got == n || ctx.exhausted());
+        }
+        assert_eq!(ctx.used(), budget);
+    }
+}

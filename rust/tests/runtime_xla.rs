@@ -1,0 +1,132 @@
+//! PJRT runtime integration: the AOT cost-model artifact must agree with
+//! the native Rust evaluator (the FEATURE_SCHEMA_V1 contract), and the
+//! gated-SpMM demo artifact must compute correct numerics.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use sparsemap::arch::Platform;
+use sparsemap::model::NativeEvaluator;
+use sparsemap::runtime::{BatchEvaluator, Runtime, SpmmDemo};
+use sparsemap::util::rng::Pcg64;
+use sparsemap::workload::{table3, Workload};
+
+fn runtime() -> Runtime {
+    Runtime::from_default_dir().expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn meta_schema_matches_binary() {
+    let rt = runtime();
+    assert_eq!(rt.meta.schema_version, sparsemap::model::SCHEMA_VERSION);
+    assert_eq!(rt.meta.num_features, sparsemap::model::NUM_FEATURES);
+    assert_eq!(rt.meta.num_platform_features, sparsemap::model::NUM_PLATFORM_FEATURES);
+}
+
+#[test]
+fn pjrt_matches_native_on_random_genomes() {
+    let rt = runtime();
+    for (w, plat) in [
+        (Workload::spmm("t1", 16, 32, 16, 0.5, 0.25), Platform::edge()),
+        (table3::by_id("mm3").unwrap(), Platform::cloud()),
+        (table3::by_id("conv4").unwrap(), Platform::mobile()),
+    ] {
+        let pjrt = BatchEvaluator::new(&rt, w.clone(), plat.clone()).unwrap();
+        let native = NativeEvaluator::new(w, plat);
+        let mut rng = Pcg64::seeded(99);
+        let genomes: Vec<Vec<u32>> =
+            (0..300).map(|_| native.spec.random(&mut rng)).collect();
+        let via_pjrt = pjrt.eval_genomes(&genomes).unwrap();
+        for (g, p) in genomes.iter().zip(&via_pjrt) {
+            let n = native.eval_genome(g);
+            assert_eq!(n.valid, p.valid, "validity disagreement");
+            if n.valid {
+                let rel = (n.edp - p.edp).abs() / n.edp.max(1e-30);
+                // f32 artifact vs f64 native: generous but tight enough to
+                // catch any formula drift.
+                assert!(rel < 2e-3, "EDP mismatch: native {} pjrt {} rel {rel}", n.edp, p.edp);
+                let rel_e = (n.energy_pj - p.energy_pj).abs() / n.energy_pj.max(1e-30);
+                assert!(rel_e < 2e-3, "energy mismatch rel {rel_e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_handles_partial_and_multi_chunk_batches() {
+    let rt = runtime();
+    let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+    let ev = BatchEvaluator::new(&rt, w, Platform::edge()).unwrap();
+    let mut rng = Pcg64::seeded(5);
+    for n in [1usize, 7, 255, 256, 257, 600] {
+        let genomes: Vec<Vec<u32>> = (0..n).map(|_| ev.spec.random(&mut rng)).collect();
+        let out = ev.eval_genomes(&genomes).unwrap();
+        assert_eq!(out.len(), n, "batch size {n}");
+    }
+}
+
+#[test]
+fn spmm_demo_numerics() {
+    let rt = runtime();
+    let demo = SpmmDemo::new(&rt).unwrap();
+    let (m, k, n) = (demo.m, demo.k, demo.n);
+    let mut rng = Pcg64::seeded(3);
+    let p: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let q: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let pm: Vec<f32> =
+        (0..m * k).map(|_| if rng.chance(0.4) { 1.0 } else { 0.0 }).collect();
+    let qm: Vec<f32> =
+        (0..k * n).map(|_| if rng.chance(0.6) { 1.0 } else { 0.0 }).collect();
+
+    let (z, eff) = demo.run(&p, &q, &pm, &qm).unwrap();
+
+    // Reference on the Rust side.
+    let mut z_ref = vec![0f32; m * n];
+    let mut eff_ref = 0f64;
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for l in 0..k {
+                acc += p[i * k + l] * pm[i * k + l] * q[l * n + j] * qm[l * n + j];
+                eff_ref += (pm[i * k + l] * qm[l * n + j]) as f64;
+            }
+            z_ref[i * n + j] = acc;
+        }
+    }
+    assert!((eff - eff_ref).abs() < 0.5, "effectual {eff} vs {eff_ref}");
+    for (a, b) in z.iter().zip(&z_ref) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn effectual_count_matches_cost_model_gate_fraction() {
+    // The demo's effectual-MAC ratio should track the cost model's
+    // F_MAC_ENERGY_FRAC (= dp*dq under Gate P<->Q) for matching densities.
+    let rt = runtime();
+    let demo = SpmmDemo::new(&rt).unwrap();
+    let (m, k, n) = (demo.m, demo.k, demo.n);
+    let (dp, dq) = (0.5, 0.3);
+    let mut rng = Pcg64::seeded(11);
+    let p: Vec<f32> = (0..m * k).map(|_| 1.0).collect();
+    let q: Vec<f32> = (0..k * n).map(|_| 1.0).collect();
+    let pm: Vec<f32> =
+        (0..m * k).map(|_| if rng.f64() < dp { 1.0 } else { 0.0 }).collect();
+    let qm: Vec<f32> =
+        (0..k * n).map(|_| if rng.f64() < dq { 1.0 } else { 0.0 }).collect();
+    let (_, eff) = demo.run(&p, &q, &pm, &qm).unwrap();
+    let frac = eff / (m * k * n) as f64;
+    assert!((frac - dp * dq).abs() < 0.03, "effectual frac {frac} vs {}", dp * dq);
+}
+
+#[test]
+fn pjrt_backend_runs_a_search() {
+    use sparsemap::baselines::run_method;
+    use sparsemap::search::{Backend, EvalContext};
+    let rt = runtime();
+    let w = table3::by_id("conv11").unwrap();
+    let backend = Backend::pjrt(&rt, w, Platform::cloud()).unwrap();
+    let ctx = EvalContext::new(backend, 600);
+    let o = run_method("sparsemap", ctx, 7).unwrap();
+    assert!(o.evals <= 600);
+    assert!(o.found_valid(), "PJRT-backed search found no valid design");
+}
