@@ -63,24 +63,74 @@ fn main() {
             std::hint::black_box(acc);
         }),
     });
+    // Parallel population evaluation: the acceptance bar is >= 2x at 4
+    // threads vs 1 thread (cache off so every genome hits the model).
+    // Genomes and pools are built once, outside the timed closure, so the
+    // measurement is the eval_batch call alone.
+    let pop_genomes: std::rc::Rc<Vec<Vec<u32>>> = {
+        let spec = sparsemap::genome::GenomeSpec::for_workload(&table3::by_id("mm3").unwrap());
+        let mut rng = Pcg64::seeded(7);
+        std::rc::Rc::new((0..20_000).map(|_| spec.random(&mut rng)).collect())
+    };
+    for threads in [1usize, 2, 4, 8] {
+        let pool = if threads > 1 {
+            Some(std::sync::Arc::new(sparsemap::util::threadpool::ThreadPool::new(threads)))
+        } else {
+            None
+        };
+        let genomes = pop_genomes.clone();
+        benches.push(Bench {
+            name: Box::leak(format!("population_eval_20k_mm3_{threads}t").into_boxed_str()),
+            runs: 3,
+            items: 20_000,
+            f: Box::new(move || {
+                let mut ctx = EvalContext::new(
+                    Backend::native(table3::by_id("mm3").unwrap(), Platform::cloud()),
+                    20_000,
+                )
+                .with_pool(pool.clone())
+                .with_cache(false);
+                std::hint::black_box(ctx.eval_batch(&genomes));
+            }),
+        });
+    }
+    // Cache effectiveness: 40 "generations" re-submitting the same 500
+    // genomes — 19.5k of the 20k submissions are served from the cache.
+    let cache_genomes = pop_genomes.clone();
+    benches.push(Bench {
+        name: "cached_reeval_20k_duplicated_population",
+        runs: 3,
+        items: 20_000,
+        f: Box::new(move || {
+            let mut ctx = EvalContext::new(
+                Backend::native(table3::by_id("mm3").unwrap(), Platform::cloud()),
+                20_000,
+            );
+            let base = &cache_genomes[..500];
+            for _ in 0..40 {
+                std::hint::black_box(ctx.eval_batch(base));
+            }
+        }),
+    });
     // Compile the artifact once; the bench measures steady-state
     // batched evaluation (what a search actually pays per generation).
-    let pjrt_ev = std::rc::Rc::new(
-        sparsemap::runtime::Runtime::from_default_dir()
-            .and_then(|rt| {
-                sparsemap::runtime::BatchEvaluator::new(
-                    &rt,
-                    table3::by_id("mm3").unwrap(),
-                    Platform::cloud(),
-                )
-            })
-            .expect("run `make artifacts` first"),
-    );
-    let pjrt_genomes: std::rc::Rc<Vec<Vec<u32>>> = {
-        let mut rng = Pcg64::seeded(1);
-        std::rc::Rc::new((0..8 * 256).map(|_| pjrt_ev.spec.random(&mut rng)).collect())
-    };
+    #[cfg(feature = "xla")]
     {
+        let pjrt_ev = std::rc::Rc::new(
+            sparsemap::runtime::Runtime::from_default_dir()
+                .and_then(|rt| {
+                    sparsemap::runtime::BatchEvaluator::new(
+                        &rt,
+                        table3::by_id("mm3").unwrap(),
+                        Platform::cloud(),
+                    )
+                })
+                .expect("run `make artifacts` first"),
+        );
+        let pjrt_genomes: std::rc::Rc<Vec<Vec<u32>>> = {
+            let mut rng = Pcg64::seeded(1);
+            std::rc::Rc::new((0..8 * 256).map(|_| pjrt_ev.spec.random(&mut rng)).collect())
+        };
         let ev = pjrt_ev.clone();
         let genomes = pjrt_genomes.clone();
         benches.push(Bench {

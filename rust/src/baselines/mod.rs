@@ -40,6 +40,11 @@ pub const ALL_METHODS: &[&str] = &[
 ];
 
 /// Dispatch a search method by name (the CLI / experiment driver entry).
+///
+/// Every method evaluates through the [`EvalContext`] it is handed, so
+/// all arms inherit the context's worker pool and evaluation cache
+/// equally — attach a pool with `EvalContext::with_pool` (or via
+/// `ExpConfig::context` / `--threads`) and the comparison stays fair.
 pub fn run_method(name: &str, ctx: EvalContext, seed: u64) -> anyhow::Result<Outcome> {
     Ok(match name {
         "sparsemap" => run_sparsemap(ctx, EsConfig::default(), seed),
@@ -75,6 +80,25 @@ mod tests {
             let ctx = EvalContext::new(Backend::native(w, Platform::mobile()), 60);
             let o = run_method(m, ctx, 1).unwrap();
             assert!(o.evals <= 60, "{m} overspent");
+        }
+    }
+
+    #[test]
+    fn methods_identical_serial_vs_parallel() {
+        // Parallel evaluation must not perturb any arm's trajectory:
+        // `pso` exercises `eval_batch`, `es-direct` the foreign-encoding
+        // `eval_designs` path.
+        for m in ["pso", "es-direct"] {
+            let w = Workload::spmm("t", 16, 16, 16, 0.5, 0.5);
+            let serial_ctx = EvalContext::new(Backend::native(w.clone(), Platform::mobile()), 200);
+            let serial = run_method(m, serial_ctx, 9).unwrap();
+            let pool = std::sync::Arc::new(crate::util::threadpool::ThreadPool::new(4));
+            let par_ctx = EvalContext::new(Backend::native(w, Platform::mobile()), 200)
+                .with_pool(Some(pool));
+            let par = run_method(m, par_ctx, 9).unwrap();
+            assert_eq!(serial.best_edp, par.best_edp, "{m}");
+            assert_eq!(serial.best_genome, par.best_genome, "{m}");
+            assert_eq!(serial.curve, par.curve, "{m}");
         }
     }
 

@@ -46,6 +46,11 @@ pub struct EsConfig {
     pub variant: EsVariant,
     pub calib: CalibConfig,
     pub hshi: HshiConfig,
+    /// Worker threads for population evaluation: 0 leaves the context's
+    /// pool untouched (serial unless the caller attached one); `>= 2`
+    /// attaches a fresh pool when the context has none. Trajectories are
+    /// bit-identical across thread counts (see `crate::search`).
+    pub threads: usize,
 }
 
 impl Default for EsConfig {
@@ -57,6 +62,7 @@ impl Default for EsConfig {
             variant: EsVariant::Full,
             calib: CalibConfig::default(),
             hshi: HshiConfig::default(),
+            threads: 0,
         }
     }
 }
@@ -69,7 +75,11 @@ pub struct SparseMapSearch {
 }
 
 impl SparseMapSearch {
-    pub fn new(ctx: EvalContext, cfg: EsConfig, seed: u64) -> SparseMapSearch {
+    pub fn new(mut ctx: EvalContext, cfg: EsConfig, seed: u64) -> SparseMapSearch {
+        if cfg.threads > 1 && ctx.pool().is_none() {
+            let pool = crate::util::threadpool::ThreadPool::new(cfg.threads);
+            ctx.set_pool(Some(std::sync::Arc::new(pool)));
+        }
         SparseMapSearch { ctx, cfg, rng: Pcg64::seeded(seed) }
     }
 
@@ -266,6 +276,16 @@ mod tests {
         let b = run_sparsemap(ctx(1_200), small_cfg(EsVariant::Full), 42);
         assert_eq!(a.best_edp, b.best_edp);
         assert_eq!(a.best_genome, b.best_genome);
+    }
+
+    #[test]
+    fn threads_config_does_not_change_results() {
+        let serial = run_sparsemap(ctx(800), small_cfg(EsVariant::Full), 42);
+        let par_cfg = EsConfig { threads: 4, ..small_cfg(EsVariant::Full) };
+        let par = run_sparsemap(ctx(800), par_cfg, 42);
+        assert_eq!(serial.best_edp, par.best_edp);
+        assert_eq!(serial.best_genome, par.best_genome);
+        assert_eq!(serial.curve, par.curve);
     }
 
     #[test]

@@ -11,9 +11,28 @@
 //! * **L2/L1 (python/compile, build-time only)** — the batched fitness
 //!   evaluator as a JAX graph with a Pallas hot-spot kernel, AOT-lowered
 //!   to `artifacts/*.hlo.txt`.
-//! * **Runtime** ([`runtime`]) — loads the AOT artifacts through the PJRT
-//!   CPU client (`xla` crate) and evaluates whole populations per call;
-//!   Python never runs on the search path.
+//! * **Runtime** (`runtime`, behind the optional `xla` feature) — loads
+//!   the AOT artifacts through the PJRT CPU client (`xla` crate) and
+//!   evaluates whole populations per call; Python never runs on the
+//!   search path. The default build is native-only and fully offline.
+//!
+//! ## The parallel, memoizing evaluation pipeline
+//!
+//! Search wall-clock is dominated by fitness evaluation, so the shared
+//! [`search::EvalContext`] owns two orthogonal accelerations that every
+//! algorithm (SparseMap and all baselines) inherits transparently:
+//!
+//! * **Parallel batches** — attach a
+//!   [`util::threadpool::ThreadPool`] (CLI: `--threads N`) and native
+//!   population batches are chunked across workers with an
+//!   order-preserving parallel map. The cost model is pure, so search
+//!   trajectories are **bit-identical between 1 and N threads**.
+//! * **Evaluation cache** — results are memoized by genome. A repeated
+//!   genome (ES populations re-produce identical offspring constantly)
+//!   is served from the cache without a model call, but **still debits
+//!   one evaluation from the sample budget**: the paper's budget counts
+//!   submissions, not distinct designs, so cached and uncached arms stay
+//!   comparable. Caching never changes a trajectory, only its cost.
 
 pub mod arch;
 pub mod baselines;
@@ -22,6 +41,7 @@ pub mod genome;
 pub mod mapping;
 pub mod model;
 pub mod report;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod search;
 pub mod sparse;

@@ -38,14 +38,22 @@ Utility commands:
   workloads            list the Table III workload suite
   platforms            list the Table II platforms
   demo                 run the AOT gated-SpMM artifact through PJRT
+                         (needs a build with --features xla)
 
 Common options:
   --budget N           samples per search arm (default 20000)
   --seed N             RNG seed (default 42)
   --out DIR            CSV output directory (default results/)
-  --threads N          worker threads for experiment matrices
+  --threads N          worker threads: population evaluation fans out
+                       across N workers (results are bit-identical for
+                       any N); matrix experiments also run N arms at once
   --pjrt               evaluate through the AOT PJRT artifact
   --workloads a,b,c    restrict table4 to a workload subset
+
+Repeat evaluations are served from a per-arm cache: they still debit the
+sample budget (submissions are what the paper counts) but skip the model
+call; `search` reports both submissions and the model evals/s actually
+paid for.
 ";
 
 fn exp_config(args: &Args) -> anyhow::Result<ExpConfig> {
@@ -76,16 +84,20 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
     let outcome = run_method(&method, ctx, cfg.seed)?;
     let dt = t0.elapsed();
 
+    let model_evals = outcome.evals - outcome.cache_hits;
     println!(
-        "{} on {} @ {}: best EDP {:.4e}  ({} evals, {:.1}% valid, {:.2}s, {:.0} evals/s)",
+        "{} on {} @ {}: best EDP {:.4e}  ({} evals, {} cache hits, {:.1}% valid, {:.2}s, \
+         {:.0} model evals/s, {} threads)",
         outcome.method,
         outcome.workload,
         outcome.platform,
         outcome.best_edp,
         outcome.evals,
+        outcome.cache_hits,
         100.0 * outcome.valid_ratio(),
         dt.as_secs_f64(),
-        outcome.evals as f64 / dt.as_secs_f64().max(1e-9),
+        model_evals as f64 / dt.as_secs_f64().max(1e-9),
+        cfg.threads.max(1),
     );
     if args.flag("show-design") {
         if let Some(g) = &outcome.best_genome {
@@ -125,6 +137,15 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_demo() -> anyhow::Result<()> {
+    anyhow::bail!(
+        "the demo executes AOT artifacts through PJRT; rebuild with `--features xla` \
+         (and a real xla crate in rust/vendor/xla)"
+    )
+}
+
+#[cfg(feature = "xla")]
 fn cmd_demo() -> anyhow::Result<()> {
     let rt = sparsemap::runtime::Runtime::from_default_dir()?;
     let demo = sparsemap::runtime::SpmmDemo::new(&rt)?;

@@ -40,6 +40,12 @@ impl EvalResult {
         }
     }
 
+    /// The canonical dead-individual verdict (structurally invalid or
+    /// dead-on-arrival designs; fitness 0).
+    pub fn dead() -> EvalResult {
+        EvalResult { energy_pj: 0.0, cycles: 0.0, edp: f64::INFINITY, valid: false }
+    }
+
     /// Fitness for maximizing searches: 1/EDP, 0 for dead individuals.
     pub fn fitness(&self) -> f64 {
         if self.valid && self.edp.is_finite() && self.edp > 0.0 {

@@ -11,8 +11,10 @@ pub mod table4;
 
 use crate::arch::Platform;
 use crate::search::{Backend, EvalContext};
+use crate::util::threadpool::ThreadPool;
 use crate::workload::Workload;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Common knobs for all experiment drivers.
 #[derive(Clone, Debug)]
@@ -41,13 +43,9 @@ impl Default for ExpConfig {
 }
 
 impl ExpConfig {
-    /// Build a fresh evaluation context for one arm.
-    ///
-    /// Note: the PJRT backend compiles the artifact per context; drivers
-    /// that fan out across threads use the native backend inside workers
-    /// (the two are cross-validated — see `rust/tests/runtime_xla.rs`).
-    pub fn context(&self, workload: Workload, platform: Platform) -> EvalContext {
-        let backend = if self.use_pjrt {
+    #[cfg(feature = "xla")]
+    fn backend(&self, workload: Workload, platform: Platform) -> Backend {
+        if self.use_pjrt {
             match crate::runtime::Runtime::from_default_dir()
                 .and_then(|rt| Backend::pjrt(&rt, workload.clone(), platform.clone()))
             {
@@ -59,8 +57,39 @@ impl ExpConfig {
             }
         } else {
             Backend::native(workload, platform)
-        };
-        EvalContext::new(backend, self.budget)
+        }
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn backend(&self, workload: Workload, platform: Platform) -> Backend {
+        if self.use_pjrt {
+            eprintln!("warning: built without the `xla` feature; using the native backend");
+        }
+        Backend::native(workload, platform)
+    }
+
+    /// Worker pool for population evaluation inside one arm (`None` when
+    /// `threads <= 1`). Matrix drivers that already fan out one-arm-per-
+    /// thread (`fig17`, `table4`) keep their per-arm contexts serial
+    /// instead — nesting a context pool inside an arm pool would only
+    /// oversubscribe the machine.
+    fn eval_pool(&self) -> Option<Arc<ThreadPool>> {
+        if self.threads > 1 {
+            Some(Arc::new(ThreadPool::new(self.threads)))
+        } else {
+            None
+        }
+    }
+
+    /// Build a fresh evaluation context for one arm, with the evaluation
+    /// pool attached (population batches fan out across `threads`).
+    ///
+    /// Note: the PJRT backend compiles the artifact per context; drivers
+    /// that fan out across threads use the native backend inside workers
+    /// (the two are cross-validated — see `rust/tests/runtime_xla.rs`).
+    pub fn context(&self, workload: Workload, platform: Platform) -> EvalContext {
+        EvalContext::new(self.backend(workload, platform), self.budget)
+            .with_pool(self.eval_pool())
     }
 }
 
@@ -88,6 +117,15 @@ mod tests {
         let c = ExpConfig { budget: 10, ..Default::default() };
         let ctx = c.context(Workload::spmm("t", 4, 4, 4, 0.5, 0.5), Platform::edge());
         assert_eq!(ctx.budget, 10);
+    }
+
+    #[test]
+    fn context_attaches_eval_pool() {
+        let w = || Workload::spmm("t", 4, 4, 4, 0.5, 0.5);
+        let par = ExpConfig { budget: 10, threads: 3, ..Default::default() };
+        assert_eq!(par.context(w(), Platform::edge()).threads(), 3);
+        let serial = ExpConfig { budget: 10, threads: 1, ..Default::default() };
+        assert_eq!(serial.context(w(), Platform::edge()).threads(), 1);
     }
 
     #[test]

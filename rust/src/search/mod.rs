@@ -1,29 +1,113 @@
-//! Shared search infrastructure: evaluation backends, budget accounting
-//! and telemetry (best-so-far curves, valid-point ratios — the raw data
-//! behind Fig. 17b and Fig. 18).
+//! Shared search infrastructure: evaluation backends, budget accounting,
+//! the parallel/memoizing evaluation pipeline and telemetry (best-so-far
+//! curves, valid-point ratios — the raw data behind Fig. 17b and Fig. 18).
+//!
+//! ## Parallel evaluation
+//!
+//! An [`EvalContext`] optionally carries a shared
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool). Native-model
+//! batches are chunked across the pool with the order-preserving
+//! `parallel_map`; because the cost model is pure and results are
+//! re-assembled in submission order, search trajectories are bit-identical
+//! between 1 and N threads. The PJRT backend keeps its own internal
+//! batching and ignores the pool.
+//!
+//! ## Evaluation cache and budget semantics
+//!
+//! ES populations re-produce identical offspring constantly. The context
+//! memoizes results by genome: a repeated genome (within a batch or across
+//! generations) is served from the cache without touching the model, but
+//! **still debits one evaluation from the sample budget** — the paper's
+//! 20 000-sample budget counts *submissions*, not distinct designs, so
+//! cached arms stay comparable with uncached ones. Because the model is
+//! deterministic, caching never changes a trajectory, only its wall-clock
+//! cost. The cache is bounded by the budget (only misses insert entries).
 
 pub mod telemetry;
 
 pub use telemetry::{Outcome, Telemetry};
 
 use crate::arch::Platform;
+use crate::genome::Design;
 use crate::model::{EvalResult, NativeEvaluator};
+#[cfg(feature = "xla")]
 use crate::runtime::{BatchEvaluator, Runtime};
+use crate::util::threadpool::{parallel_map, ThreadPool};
 use crate::workload::Workload;
+#[cfg(feature = "xla")]
 use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Fitness backend: the native Rust model or the PJRT AOT executable.
-/// Both implement the same FEATURE_SCHEMA_V1 formula.
+/// Both implement the same FEATURE_SCHEMA_V1 formula. The native evaluator
+/// is shared behind an `Arc` so batches can fan out across worker threads.
 pub enum Backend {
-    Native(NativeEvaluator),
+    Native(Arc<NativeEvaluator>),
+    #[cfg(feature = "xla")]
     Pjrt(Box<BatchEvaluator>),
+}
+
+/// Split `n` items so each of `workers` threads sees several chunks (for
+/// load balancing) without paying per-item channel overhead.
+fn chunk_size(n: usize, workers: usize) -> usize {
+    (n / (workers * 4)).max(1)
+}
+
+/// A submission slot: either a cached result or an index into the
+/// first-occurrence-ordered miss list.
+type Slot = std::result::Result<EvalResult, usize>;
+
+/// Resolve a batch of cache keys against `cache` (shared by `eval_batch`
+/// and `eval_designs` so the budget/hit semantics cannot diverge).
+/// Returns per-submission slots, the key indices that must be evaluated
+/// (deduplicated, first occurrence kept), and the hit count.
+fn resolve_cache(
+    cache: &HashMap<Vec<u32>, EvalResult>,
+    enabled: bool,
+    keys: &[Vec<u32>],
+) -> (Vec<Slot>, Vec<usize>, usize) {
+    let mut slots: Vec<Slot> = Vec::with_capacity(keys.len());
+    let mut miss_idx: Vec<usize> = Vec::new();
+    let mut pending: HashMap<&[u32], usize> = HashMap::new();
+    let mut hits = 0usize;
+    for (i, g) in keys.iter().enumerate() {
+        if enabled {
+            if let Some(&r) = cache.get(g.as_slice()) {
+                slots.push(Ok(r));
+                hits += 1;
+                continue;
+            }
+            if let Some(&j) = pending.get(g.as_slice()) {
+                slots.push(Err(j));
+                hits += 1;
+                continue;
+            }
+            pending.insert(g.as_slice(), miss_idx.len());
+        }
+        slots.push(Err(miss_idx.len()));
+        miss_idx.push(i);
+    }
+    (slots, miss_idx, hits)
+}
+
+/// Re-assemble per-submission results from slots + evaluated misses.
+fn assemble(slots: Vec<Slot>, miss_results: &[EvalResult]) -> Vec<EvalResult> {
+    slots
+        .into_iter()
+        .map(|s| match s {
+            Ok(r) => r,
+            Err(i) => miss_results[i],
+        })
+        .collect()
 }
 
 impl Backend {
     pub fn native(workload: Workload, platform: Platform) -> Backend {
-        Backend::Native(NativeEvaluator::new(workload, platform))
+        Backend::Native(Arc::new(NativeEvaluator::new(workload, platform)))
     }
 
+    #[cfg(feature = "xla")]
     pub fn pjrt(rt: &Runtime, workload: Workload, platform: Platform) -> Result<Backend> {
         Ok(Backend::Pjrt(Box::new(BatchEvaluator::new(rt, workload, platform)?)))
     }
@@ -31,6 +115,7 @@ impl Backend {
     pub fn workload(&self) -> &Workload {
         match self {
             Backend::Native(e) => &e.workload,
+            #[cfg(feature = "xla")]
             Backend::Pjrt(e) => &e.workload,
         }
     }
@@ -38,27 +123,86 @@ impl Backend {
     pub fn platform(&self) -> &Platform {
         match self {
             Backend::Native(e) => &e.platform,
+            #[cfg(feature = "xla")]
             Backend::Pjrt(e) => &e.platform,
         }
     }
 
-    fn eval(&self, genomes: &[Vec<u32>]) -> Vec<EvalResult> {
+    /// Evaluate genomes, fanning the native model out over `pool` when one
+    /// is attached. Results are always in submission order.
+    fn eval(&self, pool: Option<&Arc<ThreadPool>>, genomes: &[Vec<u32>]) -> Vec<EvalResult> {
         match self {
-            Backend::Native(e) => genomes.iter().map(|g| e.eval_genome(g)).collect(),
+            Backend::Native(e) => match pool {
+                Some(pool) if pool.size() > 1 && genomes.len() > 1 => {
+                    let jobs: Vec<Vec<Vec<u32>>> = genomes
+                        .chunks(chunk_size(genomes.len(), pool.size()))
+                        .map(|c| c.to_vec())
+                        .collect();
+                    let ev = Arc::clone(e);
+                    parallel_map(pool, jobs, move |chunk| {
+                        chunk.iter().map(|g| ev.eval_genome(g)).collect::<Vec<_>>()
+                    })
+                    .into_iter()
+                    .flatten()
+                    .collect()
+                }
+                _ => genomes.iter().map(|g| e.eval_genome(g)).collect(),
+            },
+            #[cfg(feature = "xla")]
             Backend::Pjrt(e) => e
                 .eval_genomes(genomes)
                 .expect("PJRT evaluation failed (artifact/runtime error)"),
         }
     }
 
-    fn eval_design(&self, design: &crate::genome::Design) -> EvalResult {
+    /// Evaluate pre-decoded designs (`None` = dead on arrival), fanning
+    /// out over `pool` like [`Backend::eval`].
+    fn eval_designs_batch(
+        &self,
+        pool: Option<&Arc<ThreadPool>>,
+        designs: Vec<Option<Design>>,
+    ) -> Vec<EvalResult> {
         match self {
-            Backend::Native(e) => e.eval_design(design),
-            Backend::Pjrt(e) => e
-                .eval_designs(std::slice::from_ref(design))
-                .expect("PJRT evaluation failed")
-                .pop()
-                .unwrap(),
+            Backend::Native(e) => match pool {
+                Some(pool) if pool.size() > 1 && designs.len() > 1 => {
+                    let jobs: Vec<Vec<Option<Design>>> = designs
+                        .chunks(chunk_size(designs.len(), pool.size()))
+                        .map(|c| c.to_vec())
+                        .collect();
+                    let ev = Arc::clone(e);
+                    parallel_map(pool, jobs, move |chunk| {
+                        chunk
+                            .into_iter()
+                            .map(|d| match d {
+                                Some(d) => ev.eval_design(&d),
+                                None => EvalResult::dead(),
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                    .into_iter()
+                    .flatten()
+                    .collect()
+                }
+                _ => designs
+                    .into_iter()
+                    .map(|d| match d {
+                        Some(d) => e.eval_design(&d),
+                        None => EvalResult::dead(),
+                    })
+                    .collect(),
+            },
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(e) => designs
+                .into_iter()
+                .map(|d| match d {
+                    Some(d) => e
+                        .eval_designs(std::slice::from_ref(&d))
+                        .expect("PJRT evaluation failed")
+                        .pop()
+                        .unwrap(),
+                    None => EvalResult::dead(),
+                })
+                .collect(),
         }
     }
 }
@@ -67,17 +211,73 @@ impl Backend {
 ///
 /// All algorithms draw from the same sample budget (the paper's 20 000)
 /// and report through the same telemetry, which keeps comparisons fair.
+/// The context also owns the parallel/memoizing pipeline: attach a worker
+/// pool with [`EvalContext::with_pool`] and every batch — from SparseMap
+/// itself or any baseline — fans out transparently.
 pub struct EvalContext {
     backend: Backend,
     pub spec: crate::genome::GenomeSpec,
     pub budget: usize,
     pub telemetry: Telemetry,
+    pool: Option<Arc<ThreadPool>>,
+    cache_enabled: bool,
+    genome_cache: HashMap<Vec<u32>, EvalResult>,
+    design_cache: HashMap<Vec<u32>, EvalResult>,
+    model_calls: usize,
 }
 
 impl EvalContext {
     pub fn new(backend: Backend, budget: usize) -> EvalContext {
         let spec = crate::genome::GenomeSpec::for_workload(backend.workload());
-        EvalContext { backend, spec, budget, telemetry: Telemetry::new() }
+        EvalContext {
+            backend,
+            spec,
+            budget,
+            telemetry: Telemetry::new(),
+            pool: None,
+            cache_enabled: true,
+            genome_cache: HashMap::new(),
+            design_cache: HashMap::new(),
+            model_calls: 0,
+        }
+    }
+
+    /// Attach (or detach) a worker pool for native batch evaluation.
+    pub fn with_pool(mut self, pool: Option<Arc<ThreadPool>>) -> EvalContext {
+        self.pool = pool;
+        self
+    }
+
+    /// In-place variant of [`EvalContext::with_pool`].
+    pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
+        self.pool = pool;
+    }
+
+    pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
+    }
+
+    /// Worker threads evaluation fans out over (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.size())
+    }
+
+    /// Enable/disable the evaluation cache (on by default). Disabling is
+    /// only useful for raw-throughput measurements; results never change.
+    pub fn with_cache(mut self, enabled: bool) -> EvalContext {
+        self.cache_enabled = enabled;
+        self
+    }
+
+    /// Number of genomes actually sent to the model so far (submissions
+    /// minus cache hits minus dead-on-arrival designs).
+    pub fn model_calls(&self) -> usize {
+        self.model_calls
+    }
+
+    /// Submissions served from the cache so far.
+    pub fn cache_hits(&self) -> usize {
+        self.telemetry.cache_hits
     }
 
     pub fn workload(&self) -> &Workload {
@@ -102,13 +302,31 @@ impl EvalContext {
 
     /// Evaluate a batch, truncated to the remaining budget. Returns one
     /// result per *submitted* genome that fit in the budget.
+    ///
+    /// Every submission debits one evaluation from the budget; duplicates
+    /// (within the batch or of anything evaluated before) are served from
+    /// the cache without a model call. Unique genomes are evaluated in
+    /// first-occurrence order, in parallel when a pool is attached.
     pub fn eval_batch(&mut self, genomes: &[Vec<u32>]) -> Vec<EvalResult> {
         let n = genomes.len().min(self.remaining());
         if n == 0 {
             return Vec::new();
         }
-        let results = self.backend.eval(&genomes[..n]);
-        for (g, r) in genomes[..n].iter().zip(&results) {
+        let batch = &genomes[..n];
+
+        let (slots, miss_idx, hits) = resolve_cache(&self.genome_cache, self.cache_enabled, batch);
+        let misses: Vec<Vec<u32>> = miss_idx.iter().map(|&i| batch[i].clone()).collect();
+        self.model_calls += misses.len();
+        let miss_results = self.backend.eval(self.pool.as_ref(), &misses);
+        if self.cache_enabled {
+            for (g, r) in misses.iter().zip(&miss_results) {
+                self.genome_cache.insert(g.clone(), *r);
+            }
+        }
+        self.telemetry.cache_hits += hits;
+
+        let results = assemble(slots, &miss_results);
+        for (g, r) in batch.iter().zip(&results) {
             self.telemetry.record(g, r);
         }
         results
@@ -123,29 +341,38 @@ impl EvalContext {
     /// direct-value ablation baseline). `None` designs are dead on
     /// arrival (tiling-constraint violations) but still consume budget —
     /// the evaluator would have rejected them. `record` pairs each design
-    /// with the genome to log in telemetry.
+    /// with the genome to log in telemetry; it also keys the cache, in a
+    /// namespace separate from [`EvalContext::eval_batch`]'s since foreign
+    /// encodings may reuse gene vectors with different meanings.
     pub fn eval_designs(
         &mut self,
         record: &[Vec<u32>],
-        designs: &[Option<crate::genome::Design>],
+        designs: &[Option<Design>],
     ) -> Vec<EvalResult> {
         assert_eq!(record.len(), designs.len());
         let n = designs.len().min(self.remaining());
-        let mut out = Vec::with_capacity(n);
-        for (g, d) in record[..n].iter().zip(&designs[..n]) {
-            let r = match d {
-                Some(design) => self.backend.eval_design(design),
-                None => EvalResult {
-                    energy_pj: 0.0,
-                    cycles: 0.0,
-                    edp: f64::INFINITY,
-                    valid: false,
-                },
-            };
-            self.telemetry.record(g, &r);
-            out.push(r);
+        if n == 0 {
+            return Vec::new();
         }
-        out
+
+        let keys = &record[..n];
+        let (slots, miss_idx, hits) = resolve_cache(&self.design_cache, self.cache_enabled, keys);
+        let miss_designs: Vec<Option<Design>> =
+            miss_idx.iter().map(|&i| designs[i].clone()).collect();
+        self.model_calls += miss_designs.iter().filter(|d| d.is_some()).count();
+        let miss_results = self.backend.eval_designs_batch(self.pool.as_ref(), miss_designs);
+        if self.cache_enabled {
+            for (&i, r) in miss_idx.iter().zip(&miss_results) {
+                self.design_cache.insert(keys[i].clone(), *r);
+            }
+        }
+        self.telemetry.cache_hits += hits;
+
+        let results = assemble(slots, &miss_results);
+        for (g, r) in keys.iter().zip(&results) {
+            self.telemetry.record(g, r);
+        }
+        results
     }
 
     /// Finalize into an outcome.
@@ -161,6 +388,7 @@ impl EvalContext {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg64;
 
     fn ctx(budget: usize) -> EvalContext {
         let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
@@ -170,7 +398,7 @@ mod tests {
     #[test]
     fn budget_enforced() {
         let mut c = ctx(10);
-        let mut rng = crate::util::rng::Pcg64::seeded(1);
+        let mut rng = Pcg64::seeded(1);
         let genomes: Vec<_> = (0..20).map(|_| c.spec.random(&mut rng)).collect();
         let r = c.eval_batch(&genomes);
         assert_eq!(r.len(), 10);
@@ -181,7 +409,7 @@ mod tests {
     #[test]
     fn telemetry_tracks_best() {
         let mut c = ctx(100);
-        let mut rng = crate::util::rng::Pcg64::seeded(2);
+        let mut rng = Pcg64::seeded(2);
         let genomes: Vec<_> = (0..50).map(|_| c.spec.random(&mut rng)).collect();
         c.eval_batch(&genomes);
         let o = c.outcome("test");
@@ -195,10 +423,53 @@ mod tests {
     #[test]
     fn eval_one_consumes_budget() {
         let mut c = ctx(2);
-        let mut rng = crate::util::rng::Pcg64::seeded(3);
+        let mut rng = Pcg64::seeded(3);
         let g = c.spec.random(&mut rng);
         assert!(c.eval_one(&g).is_some());
         assert!(c.eval_one(&g).is_some());
         assert!(c.eval_one(&g).is_none());
+    }
+
+    #[test]
+    fn parallel_matches_serial_results() {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        let mut serial = EvalContext::new(Backend::native(w.clone(), Platform::edge()), 200);
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut par =
+            EvalContext::new(Backend::native(w, Platform::edge()), 200).with_pool(Some(pool));
+        assert_eq!(par.threads(), 4);
+        let mut rng = Pcg64::seeded(11);
+        let genomes: Vec<_> = (0..100).map(|_| serial.spec.random(&mut rng)).collect();
+        assert_eq!(serial.eval_batch(&genomes), par.eval_batch(&genomes));
+        assert_eq!(serial.telemetry.curve, par.telemetry.curve);
+    }
+
+    #[test]
+    fn duplicates_hit_cache_but_debit_budget() {
+        let mut c = ctx(50);
+        let mut rng = Pcg64::seeded(5);
+        let g = c.spec.random(&mut rng);
+        let batch = vec![g.clone(); 8];
+        let r = c.eval_batch(&batch);
+        assert_eq!(r.len(), 8);
+        assert_eq!(c.used(), 8, "cache hits must still debit budget");
+        assert_eq!(c.model_calls(), 1, "duplicates must not re-run the model");
+        assert_eq!(c.cache_hits(), 7);
+        assert!(r.iter().all(|x| *x == r[0]));
+        // Hits persist across batches (generations) too.
+        c.eval_batch(&batch);
+        assert_eq!(c.model_calls(), 1);
+        assert_eq!(c.used(), 16);
+    }
+
+    #[test]
+    fn cache_disabled_reruns_model() {
+        let mut c = ctx(50).with_cache(false);
+        let mut rng = Pcg64::seeded(6);
+        let g = c.spec.random(&mut rng);
+        let batch = vec![g.clone(); 4];
+        c.eval_batch(&batch);
+        assert_eq!(c.model_calls(), 4);
+        assert_eq!(c.cache_hits(), 0);
     }
 }

@@ -8,6 +8,9 @@ use crate::util::json::Json;
 pub struct Telemetry {
     pub evals: usize,
     pub valid_evals: usize,
+    /// Submissions served from the evaluation cache (they still debit the
+    /// sample budget — see `crate::search` module docs).
+    pub cache_hits: usize,
     /// Best-so-far (evals, edp) checkpoints; appended whenever the best
     /// improves (the Fig. 18 convergence-curve data).
     pub curve: Vec<(usize, f64)>,
@@ -55,6 +58,7 @@ impl Telemetry {
             platform: platform.to_string(),
             evals: self.evals,
             valid_evals: self.valid_evals,
+            cache_hits: self.cache_hits,
             best_edp: self.best_edp,
             best_genome: self.best_genome,
             curve: self.curve,
@@ -71,6 +75,8 @@ pub struct Outcome {
     pub platform: String,
     pub evals: usize,
     pub valid_evals: usize,
+    /// Submissions served from the evaluation cache.
+    pub cache_hits: usize,
     /// Best valid EDP found (`f64::INFINITY` if none).
     pub best_edp: f64,
     pub best_genome: Option<Vec<u32>>,
@@ -98,6 +104,7 @@ impl Outcome {
             ("platform", Json::str(&self.platform)),
             ("evals", Json::num(self.evals as f64)),
             ("valid_evals", Json::num(self.valid_evals as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
             (
                 "best_edp",
                 if self.best_edp.is_finite() {

@@ -5,11 +5,13 @@
 //! chunked population evaluation), which this covers with `std::thread` +
 //! channels.
 
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// A queued unit of work.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Fixed pool of worker threads consuming a shared job queue.
 pub struct ThreadPool {
@@ -48,13 +50,28 @@ impl ThreadPool {
     }
 
     /// Submit a fire-and-forget job.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.sender.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    ///
+    /// If the pool can no longer accept work (every worker has died, or
+    /// the pool is shutting down), the job is handed back in `Err` so the
+    /// caller can run it inline or drop it — submission never panics or
+    /// aborts a search mid-flight.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), Job> {
+        let job: Job = Box::new(f);
+        match &self.sender {
+            Some(tx) => tx.send(job).map_err(|e| e.0),
+            None => Err(job),
+        }
     }
 
     /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.workers.len()
+    }
+}
+
+impl fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ThreadPool({} workers)", self.workers.len())
     }
 }
 
@@ -69,8 +86,10 @@ impl Drop for ThreadPool {
 
 /// Apply `f` to every item of `items` in parallel on `pool`, preserving
 /// order. `f` must be cloneable across threads (wrap captured state in
-/// `Arc`). Results are collected via a channel; panics in workers surface
-/// as a panic here (missing results).
+/// `Arc`). Results are collected via a channel. If the pool has stopped
+/// accepting work (all workers dead), rejected jobs degrade to running
+/// inline on the calling thread, so the map still completes. A panic
+/// *inside a running job* loses that result and surfaces as a panic here.
 pub fn parallel_map<T, R, F>(pool: &ThreadPool, items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send + 'static,
@@ -86,10 +105,13 @@ where
     for (i, item) in items.into_iter().enumerate() {
         let tx = tx.clone();
         let f = Arc::clone(&f);
-        pool.execute(move || {
+        let submitted = pool.execute(move || {
             let r = f(item);
             let _ = tx.send((i, r));
         });
+        if let Err(job) = submitted {
+            job(); // pool closed: degrade gracefully to inline execution
+        }
     }
     drop(tx);
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
@@ -119,9 +141,10 @@ mod tests {
         let counter = Arc::new(AtomicUsize::new(0));
         for _ in 0..100 {
             let c = Arc::clone(&counter);
-            pool.execute(move || {
+            let sent = pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
             });
+            assert!(sent.is_ok());
         }
         drop(pool); // join
         assert_eq!(counter.load(Ordering::SeqCst), 100);
@@ -148,5 +171,28 @@ mod tests {
         let p = parallel_map(&pool, xs.clone(), |x| x.pow(2) % 97);
         let s = serial_map(xs, |x| x.pow(2) % 97);
         assert_eq!(p, s);
+    }
+
+    #[test]
+    fn dead_pool_hands_jobs_back_and_map_degrades_inline() {
+        // Kill the only worker, then verify (a) execute returns the job
+        // instead of panicking and (b) parallel_map completes inline.
+        let pool = ThreadPool::new(1);
+        let _ = pool.execute(|| panic!("intentional: kill the worker"));
+        // Wait until the pool observably rejects work (the worker's death
+        // drops the receiver, closing the channel).
+        let handed_back = (0..5_000).any(|_| match pool.execute(|| {}) {
+            Ok(()) => {
+                thread::sleep(std::time::Duration::from_millis(1));
+                false
+            }
+            Err(job) => {
+                job();
+                true
+            }
+        });
+        assert!(handed_back, "pool never reported closure");
+        let out = parallel_map(&pool, (0..10).collect::<Vec<i64>>(), |x| x + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<i64>>());
     }
 }

@@ -1,0 +1,109 @@
+//! The two contracts of the parallel/memoizing evaluation pipeline
+//! (see `crate::search` module docs):
+//!
+//! 1. **Thread-count invariance** — a full SparseMap run produces
+//!    bit-identical trajectories (best EDP, best genome, both telemetry
+//!    curves) at 1 and 8 threads for the same seed.
+//! 2. **Cache budget semantics** — duplicated submissions are served from
+//!    the cache (one model call) but every submission debits the budget.
+
+use sparsemap::arch::Platform;
+use sparsemap::es::{run_sparsemap, CalibConfig, EsConfig, EsVariant, HshiConfig};
+use sparsemap::search::{Backend, EvalContext};
+use sparsemap::util::rng::Pcg64;
+use sparsemap::util::threadpool::ThreadPool;
+use sparsemap::workload::table3;
+use std::sync::Arc;
+
+fn ctx(budget: usize, threads: usize) -> EvalContext {
+    let w = table3::by_id("mm3").unwrap();
+    let c = EvalContext::new(Backend::native(w, Platform::cloud()), budget);
+    if threads > 1 {
+        c.with_pool(Some(Arc::new(ThreadPool::new(threads))))
+    } else {
+        c
+    }
+}
+
+fn small_cfg() -> EsConfig {
+    EsConfig {
+        population: 24,
+        variant: EsVariant::Full,
+        calib: CalibConfig { samples_per_gene: 4, trials: 2, pairs: 4, max_evals: 0 },
+        hshi: HshiConfig { hypercubes: 24, tries_per_cube: 6 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn serial_and_parallel_trajectories_identical() {
+    let a = run_sparsemap(ctx(1_500, 1), small_cfg(), 42);
+    let b = run_sparsemap(ctx(1_500, 8), small_cfg(), 42);
+    assert_eq!(a.best_edp, b.best_edp);
+    assert_eq!(a.best_genome, b.best_genome);
+    assert_eq!(a.curve, b.curve);
+    assert_eq!(a.population_mean_curve, b.population_mean_curve);
+    assert_eq!(a.evals, b.evals);
+    assert_eq!(a.valid_evals, b.valid_evals);
+    assert_eq!(a.cache_hits, b.cache_hits);
+}
+
+#[test]
+fn duplicated_batch_one_model_call_full_budget_debit() {
+    let mut c = ctx(100, 1);
+    let mut rng = Pcg64::seeded(9);
+    let g = c.spec.random(&mut rng);
+    let batch: Vec<Vec<u32>> = vec![g.clone(); 10];
+    let r = c.eval_batch(&batch);
+    assert_eq!(r.len(), 10);
+    assert_eq!(c.model_calls(), 1, "duplicates within a batch must dedupe to one model call");
+    assert_eq!(c.used(), 10, "every submission debits the budget, hit or miss");
+    assert_eq!(c.cache_hits(), 9);
+    assert!(r.iter().all(|x| *x == r[0]));
+
+    // A later generation re-submitting the same genome is a pure hit.
+    let r2 = c.eval_batch(&batch);
+    assert_eq!(r2, r);
+    assert_eq!(c.model_calls(), 1);
+    assert_eq!(c.used(), 20);
+    assert_eq!(c.cache_hits(), 19);
+}
+
+#[test]
+fn cache_hits_reported_in_outcome() {
+    let mut c = ctx(60, 4);
+    let mut rng = Pcg64::seeded(3);
+    let g = c.spec.random(&mut rng);
+    c.eval_batch(&vec![g; 30]);
+    let o = c.outcome("cache-probe");
+    assert_eq!(o.evals, 30);
+    assert_eq!(o.cache_hits, 29);
+    assert!(o.to_json().dumps().contains("cache_hits"));
+}
+
+/// Wall-clock speedup check for the acceptance bar (>= 2x at 4 threads).
+/// Timing-sensitive, so it is `#[ignore]`d by default; the same numbers
+/// come out of `cargo bench -- population_eval`. Run explicitly with
+/// `cargo test --release -- --ignored`.
+#[test]
+#[ignore]
+fn parallel_speedup_at_4_threads() {
+    let n = 30_000;
+    let mut elapsed = [0.0f64; 2];
+    for (slot, threads) in [(0usize, 1usize), (1, 4)] {
+        let mut c = ctx(n, threads).with_cache(false);
+        let mut rng = Pcg64::seeded(1);
+        let genomes: Vec<Vec<u32>> = (0..n).map(|_| c.spec.random(&mut rng)).collect();
+        let t0 = std::time::Instant::now();
+        let r = c.eval_batch(&genomes);
+        elapsed[slot] = t0.elapsed().as_secs_f64();
+        assert_eq!(r.len(), n);
+    }
+    let speedup = elapsed[0] / elapsed[1];
+    assert!(
+        speedup >= 2.0,
+        "4-thread speedup only {speedup:.2}x (serial {:.2}s, parallel {:.2}s)",
+        elapsed[0],
+        elapsed[1]
+    );
+}

@@ -2,7 +2,11 @@
 //! the native Rust evaluator (the FEATURE_SCHEMA_V1 contract), and the
 //! gated-SpMM demo artifact must compute correct numerics.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Requires `make artifacts` (the Makefile test target guarantees it) and
+//! a build with `--features xla` against the *real* xla-rs crate (the
+//! in-tree `vendor/xla` stub errors on every call by design).
+
+#![cfg(feature = "xla")]
 
 use sparsemap::arch::Platform;
 use sparsemap::model::NativeEvaluator;

@@ -1,0 +1,191 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The SparseMap build environment is fully offline, so this in-tree shim
+//! provides the subset of the `anyhow` 1.x API the codebase uses:
+//!
+//! * [`Error`] / [`Result`] with `?`-conversion from any
+//!   `std::error::Error + Send + Sync + 'static`,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros (format-string
+//!   forms),
+//! * the [`Context`] extension trait (`.context(..)` / `.with_context(..)`)
+//!   on `Result` and `Option`.
+//!
+//! Errors carry a flat chain of human-readable frames (outermost context
+//! first); `Display` prints the outermost frame and `Debug` prints the
+//! whole chain `anyhow`-style, so CLI error output stays familiar.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A lightweight error: an ordered chain of message frames, outermost
+/// context first.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate over the frames, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost frame (the original cause).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.frames.first().map(|s| s.as_str()).unwrap_or("unknown error"))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.frames.first().map(|s| s.as_str()).unwrap_or("unknown error"))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, which makes
+// this blanket conversion coherent (the same trick the real crate uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut frames = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            frames.push(s.to_string());
+            source = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T, E> {
+    /// Attach a context frame to the error, if any.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-evaluated context frame to the error, if any.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tokens:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tokens)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($tokens:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($tokens)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(e.to_string(), "missing file");
+    }
+
+    #[test]
+    fn context_stacks_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(e.root_cause(), "missing file");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        assert!(none.context("empty").is_err());
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        fn guarded(v: u32) -> Result<u32> {
+            ensure!(v < 10, "v too big: {v}");
+            Ok(v)
+        }
+        assert!(guarded(3).is_ok());
+        assert_eq!(guarded(12).unwrap_err().to_string(), "v too big: 12");
+    }
+}

@@ -1,0 +1,108 @@
+//! Stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The offline build environment cannot ship the real XLA toolchain, so
+//! this placeholder lets `--features xla` builds *link*: every runtime
+//! entry point returns an [`XlaError`] explaining that the stub is active.
+//! The default (native-only) build never compiles this crate at all.
+//!
+//! To execute the AOT artifacts for real, replace this directory with the
+//! actual xla-rs crate (same API surface) and rebuild with
+//! `cargo build --release --features xla`.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs's; printed with `{:?}` at call sites.
+#[derive(Clone, Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn stub<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what}: built against the in-tree xla stub; replace rust/vendor/xla with the real \
+         xla-rs crate to enable PJRT execution"
+    )))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal (stub).
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub("Literal::reshape")
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        stub("Literal::to_tuple1")
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        stub("Literal::to_tuple2")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+}
