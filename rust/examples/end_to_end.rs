@@ -1,10 +1,11 @@
 //! End-to-end driver — proves all three layers compose on a real small
 //! workload:
 //!
-//!   1. **L3 search** (Rust ES) finds the best accelerator design for a
-//!      pruned-VGG16 conv layer, with fitness evaluated through the
-//!      **AOT PJRT cost-model artifact** (L2 JAX graph + L1 Pallas kernel,
-//!      lowered at build time by `make artifacts`).
+//!   1. **L3 search** through the `sparsemap::api` front door finds the
+//!      best accelerator design for a pruned-VGG16 conv layer, with
+//!      fitness evaluated through the **AOT PJRT cost-model artifact**
+//!      (L2 JAX graph + L1 Pallas kernel, lowered at build time by
+//!      `make artifacts`).
 //!   2. The evaluation is cross-checked against the native Rust model.
 //!   3. The winning design is **functionally instantiated**: the gated-
 //!      SpMM Pallas artifact executes a tile of the actual workload with
@@ -12,15 +13,13 @@
 //!      effectual-MAC count is compared with the cost model's prediction.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example end_to_end
+//! make artifacts && cargo run --release --features xla --example end_to_end
 //! ```
 
-use sparsemap::arch::Platform;
-use sparsemap::baselines::run_method;
+use sparsemap::api::SearchRequest;
 use sparsemap::genome::{decode, describe, GenomeSpec};
 use sparsemap::model::NativeEvaluator;
 use sparsemap::runtime::{Runtime, SpmmDemo};
-use sparsemap::search::{Backend, EvalContext};
 use sparsemap::util::rng::Pcg64;
 use sparsemap::workload::table3;
 
@@ -28,33 +27,35 @@ fn main() -> anyhow::Result<()> {
     let budget: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(5_000);
     let workload = table3::by_id("conv4").expect("conv4");
-    let platform = Platform::mobile();
 
     // --- 1. search through the PJRT-evaluated hot path -------------------
     let rt = Runtime::from_default_dir()?;
     println!(
-        "[1/3] searching {} on {} via PJRT artifact ({}, batch {})",
-        workload.id,
-        platform.name,
-        rt.meta.cost_model_file,
-        rt.meta.batch
+        "[1/3] searching {} on mobile via PJRT artifact ({}, batch {})",
+        workload.id, rt.meta.cost_model_file, rt.meta.batch
     );
-    let backend = Backend::pjrt(&rt, workload.clone(), platform.clone())?;
-    let t0 = std::time::Instant::now();
-    let outcome = run_method("sparsemap", EvalContext::new(backend, budget), 42)?;
-    let dt = t0.elapsed().as_secs_f64();
+    let report = SearchRequest::new()
+        .workload_named("conv4")
+        .platform_named("mobile")
+        .budget(budget)
+        .seed(42)
+        .pjrt(true)
+        .build()?
+        .run()?;
+    let outcome = &report.outcome;
     println!(
         "      best EDP {:.4e}  ({} evals in {:.2}s -> {:.0} evals/s, {:.1}% valid)",
         outcome.best_edp,
         outcome.evals,
-        dt,
-        outcome.evals as f64 / dt,
+        report.wall_s,
+        outcome.evals as f64 / report.wall_s.max(1e-9),
         100.0 * outcome.valid_ratio()
     );
 
     // --- 2. cross-check PJRT fitness against the native model -------------
     let genome = outcome.best_genome.clone().expect("no valid design");
-    let native = NativeEvaluator::new(workload.clone(), platform.clone());
+    let platform = sparsemap::arch::Platform::mobile();
+    let native = NativeEvaluator::new(workload.clone(), platform);
     let nres = native.eval_genome(&genome);
     let rel = (nres.edp - outcome.best_edp).abs() / nres.edp;
     println!(

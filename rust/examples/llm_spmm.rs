@@ -1,0 +1,79 @@
+//! LLM SpMM scenario: the sparseGPT-style workloads of Table III
+//! (mm8–mm10: dense activations x 50%-pruned weights) searched across all
+//! three platforms — the "adapting to new sparse workloads" story of the
+//! paper's introduction, driven through the batch API (`api::run_batch`
+//! fans the 18 arms out across worker threads).
+//!
+//! ```bash
+//! cargo run --release --example llm_spmm -- [budget]
+//! ```
+
+use sparsemap::api::{run_batch, SearchRequest};
+use sparsemap::util::table::{sci, Table};
+use sparsemap::workload::table3;
+
+fn main() -> anyhow::Result<()> {
+    let budget: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4_000);
+    let workloads = ["mm8", "mm9", "mm10"];
+    let platforms = ["edge", "mobile", "cloud"];
+    let methods = ["sparsemap", "sage-like"];
+
+    for wl in &workloads {
+        let w = table3::by_id(wl).unwrap();
+        println!(
+            "{wl}: {}x{} (dense) x {}x{} @ {:.0}% weight density",
+            w.dims[0].size,
+            w.dims[1].size,
+            w.dims[1].size,
+            w.dims[2].size,
+            100.0 * w.tensors[1].density
+        );
+    }
+
+    // One request per (workload, platform, method) arm; the pool runs
+    // them 6 at a time.
+    let mut requests = Vec::new();
+    for wl in &workloads {
+        for plat in &platforms {
+            for m in &methods {
+                requests.push(
+                    SearchRequest::new()
+                        .workload_named(wl)
+                        .platform_named(plat)
+                        .method(m)
+                        .budget(budget)
+                        .seed(7),
+                );
+            }
+        }
+    }
+    let reports = run_batch(requests, 6)?;
+    let find = |wl: &str, plat: &str, m: &str| {
+        reports
+            .iter()
+            .map(|r| &r.outcome)
+            .find(|o| o.workload == wl && o.platform == plat && o.method == m)
+            .expect("arm ran")
+    };
+
+    let mut table = Table::new(&["workload", "platform", "sparsemap EDP", "sage-like EDP", "gain"]);
+    for wl in &workloads {
+        for plat in &platforms {
+            let ours = find(wl, plat, "sparsemap");
+            let sage = find(wl, plat, "sage-like");
+            let gain = sage.best_edp / ours.best_edp;
+            table.row(vec![
+                wl.to_string(),
+                plat.to_string(),
+                sci(ours.best_edp),
+                if sage.found_valid() { sci(sage.best_edp) } else { "-".into() },
+                if gain.is_finite() { format!("{gain:.2}x") } else { "inf".into() },
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "joint mapping+strategy search vs fixed-mapping format search, budget {budget}/arm"
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: search one workload on one platform through the
+//! `sparsemap::api` front door, stream progress, and print the winning
+//! accelerator design.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sparsemap::api::SearchRequest;
+use sparsemap::genome::{decode, describe, GenomeSpec};
+use sparsemap::search::{Progress, SearchControl};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe the arm: a DeepBench bibd-class SpMM on the cloud
+    //    platform, 10k-sample budget. Swap `workload_named` for
+    //    `.workload(Workload::custom(..)?)` to search any contraction.
+    let request = SearchRequest::new()
+        .workload_named("mm3")
+        .platform_named("cloud")
+        .budget(10_000)
+        .seed(42);
+
+    // 2. Validate into a session and run with a progress observer.
+    let session = request.build()?;
+    let workload = session.workload().clone();
+    println!(
+        "searching {} ({}) on {} ...",
+        workload.id,
+        workload.kind.as_str(),
+        session.platform().name
+    );
+    let report = session.run_observed(Box::new(|p: &Progress| {
+        if p.batches % 25 == 0 {
+            println!(
+                "  gen ~{:3}: {:5}/{} evals, best EDP {:.4e}",
+                p.batches, p.evals, p.budget, p.best_edp
+            );
+        }
+        SearchControl::Continue
+    }))?;
+
+    // 3. Report.
+    let outcome = &report.outcome;
+    println!(
+        "best EDP: {:.4e} pJ*cycles  ({} evals, {:.1}% of explored points valid)",
+        outcome.best_edp,
+        outcome.evals,
+        100.0 * outcome.valid_ratio()
+    );
+    let genome = outcome.best_genome.clone().expect("no valid design found");
+    let spec = GenomeSpec::for_workload(&workload);
+    let design = decode(&spec, &workload, &genome);
+    println!("--- winning design ---\n{}", describe(&design, &workload));
+
+    println!("convergence (evals -> best EDP):");
+    for (e, v) in outcome.curve.iter().take(12) {
+        println!("  {:>6} -> {:.4e}", e, v);
+    }
+    Ok(())
+}

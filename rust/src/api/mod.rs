@@ -1,0 +1,126 @@
+//! The public programmatic surface of SparseMap — the front door every
+//! consumer (CLI, experiment drivers, examples, services) goes through.
+//!
+//! * [`SearchRequest`] — a typed, JSON-round-trippable description of one
+//!   search arm: workload × platform × method plus budget, seed, threads,
+//!   backend and cache policy. Workloads and platforms are either the
+//!   paper's named suites (Table III / Table II) or **fully custom**
+//!   scenarios built with [`crate::workload::Workload::custom`] /
+//!   [`crate::arch::Platform::custom`] or parsed from JSON specs — any
+//!   einsum-shaped contraction on any PE-array geometry is searchable.
+//! * [`SearchSession`] — the validated, runnable form. Streams progress
+//!   through [`crate::search::SearchObserver`] (generation, best-so-far
+//!   EDP, evals, cache hits), supports early stop from the observer and
+//!   cancellation from other threads, and lowers to a raw
+//!   [`crate::search::EvalContext`] for drivers with bespoke loops.
+//! * [`SearchReport`] — the typed result, `to_json`/`from_json`
+//!   round-trippable for storage and services.
+//! * [`run_batch`] — many arms over a shared worker pool.
+//!
+//! ```no_run
+//! use sparsemap::api::SearchRequest;
+//! use sparsemap::workload::{Workload, WorkloadKind};
+//!
+//! // A scenario that exists nowhere in the paper's tables:
+//! let workload = Workload::custom(
+//!     "my_spmm",
+//!     WorkloadKind::SpMM,
+//!     vec![("M".into(), 384), ("K".into(), 4096), ("N".into(), 384)],
+//!     vec![
+//!         ("P".into(), vec![0, 1], 0.25),
+//!         ("Q".into(), vec![1, 2], 0.60),
+//!         ("Z".into(), vec![0, 2], 0.0), // derive the output density
+//!     ],
+//!     vec![1],
+//! )?;
+//! let report = SearchRequest::new()
+//!     .workload(workload)
+//!     .platform_named("mobile")
+//!     .budget(5_000)
+//!     .build()?
+//!     .run()?;
+//! println!("{}", report.to_json().pretty());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+mod report;
+mod request;
+mod session;
+
+pub use report::{SearchReport, REPORT_SCHEMA};
+pub use request::{PlatformSel, SearchRequest, WorkloadSel};
+pub use session::SearchSession;
+
+use crate::util::threadpool::{parallel_map, ThreadPool};
+use anyhow::Result;
+
+/// Run a batch of arms, fanned out `threads` at a time over a shared
+/// worker pool. Every request is validated up front (an invalid one
+/// fails the whole batch before any search starts); reports come back in
+/// request order. Arms default to serial evaluation inside (request
+/// `threads` = 1) — that is the right shape here, where the parallelism
+/// is across arms.
+pub fn run_batch(requests: Vec<SearchRequest>, threads: usize) -> Result<Vec<SearchReport>> {
+    let sessions: Vec<SearchSession> =
+        requests.into_iter().map(SearchRequest::build).collect::<Result<_>>()?;
+    if threads <= 1 || sessions.len() <= 1 {
+        return sessions.into_iter().map(SearchSession::run).collect();
+    }
+    let pool = ThreadPool::new(threads.min(sessions.len()));
+    parallel_map(&pool, sessions, SearchSession::run).into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_preserves_request_order() {
+        let mut requests = Vec::new();
+        for wl in ["mm1", "mm12"] {
+            for plat in ["edge", "mobile"] {
+                requests.push(
+                    SearchRequest::new()
+                        .workload_named(wl)
+                        .platform_named(plat)
+                        .method("random")
+                        .budget(60)
+                        .seed(2),
+                );
+            }
+        }
+        let reports = run_batch(requests.clone(), 4).unwrap();
+        assert_eq!(reports.len(), 4);
+        for (req, rep) in requests.iter().zip(&reports) {
+            assert_eq!(rep.request, *req);
+            assert!(rep.outcome.evals <= 60);
+        }
+    }
+
+    #[test]
+    fn batch_fails_fast_on_invalid_request() {
+        let requests = vec![
+            SearchRequest::new().budget(50),
+            SearchRequest::new().workload_named("not-a-workload"),
+        ];
+        assert!(run_batch(requests, 2).is_err());
+    }
+
+    #[test]
+    fn batch_matches_sequential_runs() {
+        let mk = || {
+            SearchRequest::new()
+                .workload_named("mm1")
+                .platform_named("mobile")
+                .method("random")
+                .budget(100)
+                .seed(11)
+        };
+        let solo = mk().build().unwrap().run().unwrap();
+        let batch = run_batch(vec![mk(), mk()], 2).unwrap();
+        for rep in &batch {
+            assert_eq!(rep.outcome.best_edp, solo.outcome.best_edp);
+            assert_eq!(rep.outcome.curve, solo.outcome.curve);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! [`SearchReport`] — the typed result of one search arm, with a full
+//! JSON round-trip.
+
+use super::request::SearchRequest;
+use crate::search::Outcome;
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Result};
+
+/// Schema tag stamped into every serialized report.
+pub const REPORT_SCHEMA: &str = "sparsemap.search_report.v1";
+
+/// The result of one search arm: the validated request it answered, the
+/// full search outcome (best EDP/genome, convergence curve, budget
+/// accounting) and run metadata. Serializes losslessly with
+/// [`SearchReport::to_json`] / [`SearchReport::from_json`].
+#[derive(Clone, Debug)]
+pub struct SearchReport {
+    /// The request this report answers (echoed for provenance).
+    pub request: SearchRequest,
+    pub outcome: Outcome,
+    /// Wall-clock seconds the run took.
+    pub wall_s: f64,
+    /// Whether an observer or cancel token ended the run before the
+    /// budget was spent.
+    pub stopped_early: bool,
+}
+
+impl SearchReport {
+    /// Genomes actually sent to the cost model (submissions minus cache
+    /// hits).
+    pub fn model_evals(&self) -> usize {
+        self.outcome.evals - self.outcome.cache_hits
+    }
+
+    /// Model evaluations per second actually paid for.
+    pub fn model_evals_per_s(&self) -> f64 {
+        self.model_evals() as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn into_outcome(self) -> Outcome {
+        self.outcome
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(REPORT_SCHEMA)),
+            ("request", self.request.to_json()),
+            ("outcome", self.outcome.to_json_full()),
+            ("wall_s", Json::num(self.wall_s)),
+            ("stopped_early", Json::Bool(self.stopped_early)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SearchReport> {
+        if let Some(schema) = j.get("schema").and_then(Json::as_str) {
+            ensure!(schema == REPORT_SCHEMA, "unsupported report schema '{schema}'");
+        }
+        Ok(SearchReport {
+            request: SearchRequest::from_json(
+                j.get("request").ok_or_else(|| anyhow!("report JSON is missing 'request'"))?,
+            )?,
+            outcome: Outcome::from_json(
+                j.get("outcome").ok_or_else(|| anyhow!("report JSON is missing 'outcome'"))?,
+            )?,
+            wall_s: j.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0),
+            stopped_early: j.get("stopped_early").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_round_trips() {
+        let report = SearchRequest::new()
+            .workload_named("mm1")
+            .platform_named("edge")
+            .method("random")
+            .budget(80)
+            .seed(5)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let dumped = report.to_json().pretty();
+        let parsed = SearchReport::from_json(&Json::parse(&dumped).unwrap()).unwrap();
+        assert_eq!(parsed.request, report.request);
+        assert_eq!(parsed.outcome.best_edp, report.outcome.best_edp);
+        assert_eq!(parsed.outcome.best_genome, report.outcome.best_genome);
+        assert_eq!(parsed.outcome.curve, report.outcome.curve);
+        assert_eq!(parsed.stopped_early, report.stopped_early);
+        assert_eq!(parsed.to_json(), report.to_json());
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        let j = Json::obj(vec![("schema", Json::str("bogus.v9"))]);
+        assert!(SearchReport::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! [`SearchRequest`] — the typed, JSON-round-trippable description of one
+//! search arm.
+
+use super::session::SearchSession;
+use crate::arch::Platform;
+use crate::util::json::Json;
+use crate::workload::{spec, table3, Workload};
+use anyhow::{anyhow, Result};
+
+/// Largest integer `Json`'s f64 numbers hold exactly.
+const JSON_EXACT_INT_MAX: u64 = 1 << 53;
+
+/// Emit a `u64` losslessly: as a JSON number when f64 holds it exactly,
+/// as a decimal string above 2^53 (seeds are arbitrary u64s).
+fn u64_to_json(x: u64) -> Json {
+    if x <= JSON_EXACT_INT_MAX {
+        Json::num(x as f64)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+/// Inverse of [`u64_to_json`]: accepts both encodings.
+fn u64_from_json(j: &Json, field: &str) -> Result<u64> {
+    match j {
+        Json::Str(s) => s.parse::<u64>().map_err(|_| {
+            anyhow!("request field '{field}' must be a non-negative integer, got '{s}'")
+        }),
+        other => other
+            .as_u64()
+            .ok_or_else(|| anyhow!("request field '{field}' must be a non-negative integer")),
+    }
+}
+
+/// Workload selector: a Table III id or a fully custom contraction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadSel {
+    Named(String),
+    Custom(Workload),
+}
+
+/// Platform selector: a Table II name or a fully custom geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlatformSel {
+    Named(String),
+    Custom(Platform),
+}
+
+/// One search arm: what to search (workload × platform), how (method),
+/// and with which resources (budget, seed, threads, backend, cache).
+///
+/// Build with the fluent setters, then [`SearchRequest::build`] validates
+/// everything into a runnable [`SearchSession`]:
+///
+/// ```no_run
+/// use sparsemap::api::SearchRequest;
+///
+/// let report = SearchRequest::new()
+///     .workload_named("mm3")
+///     .platform_named("cloud")
+///     .budget(10_000)
+///     .seed(42)
+///     .build()?
+///     .run()?;
+/// println!("best EDP {:.4e}", report.outcome.best_edp);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchRequest {
+    pub workload: WorkloadSel,
+    pub platform: PlatformSel,
+    /// One of [`crate::baselines::ALL_METHODS`].
+    pub method: String,
+    /// Sample budget (the paper uses 20 000).
+    pub budget: usize,
+    pub seed: u64,
+    /// Worker threads for population evaluation inside the arm
+    /// (trajectories are bit-identical for any count; 0/1 = serial).
+    pub threads: usize,
+    /// Evaluate through the AOT PJRT artifact instead of the native
+    /// model (falls back to native when unavailable).
+    pub use_pjrt: bool,
+    /// Memoize repeated genomes (on by default; results never change).
+    pub cache: bool,
+}
+
+impl Default for SearchRequest {
+    fn default() -> Self {
+        SearchRequest {
+            workload: WorkloadSel::Named("mm3".to_string()),
+            platform: PlatformSel::Named("cloud".to_string()),
+            method: "sparsemap".to_string(),
+            budget: 20_000,
+            seed: 42,
+            threads: 1,
+            use_pjrt: false,
+            cache: true,
+        }
+    }
+}
+
+impl SearchRequest {
+    pub fn new() -> SearchRequest {
+        SearchRequest::default()
+    }
+
+    /// Search a Table III workload by id (see `sparsemap workloads`).
+    pub fn workload_named(mut self, id: &str) -> Self {
+        self.workload = WorkloadSel::Named(id.to_string());
+        self
+    }
+
+    /// Search a custom workload (validated at [`SearchRequest::build`]).
+    pub fn workload(mut self, w: Workload) -> Self {
+        self.workload = WorkloadSel::Custom(w);
+        self
+    }
+
+    /// Target a Table II platform by name (edge | mobile | cloud).
+    pub fn platform_named(mut self, name: &str) -> Self {
+        self.platform = PlatformSel::Named(name.to_string());
+        self
+    }
+
+    /// Target a custom platform (validated at [`SearchRequest::build`]).
+    pub fn platform(mut self, p: Platform) -> Self {
+        self.platform = PlatformSel::Custom(p);
+        self
+    }
+
+    pub fn method(mut self, method: &str) -> Self {
+        self.method = method.to_string();
+        self
+    }
+
+    pub fn budget(mut self, budget: usize) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn pjrt(mut self, use_pjrt: bool) -> Self {
+        self.use_pjrt = use_pjrt;
+        self
+    }
+
+    pub fn cache(mut self, cache: bool) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    /// Resolve the selectors into concrete, validated values.
+    pub fn resolve(&self) -> Result<(Workload, Platform)> {
+        let workload = match &self.workload {
+            WorkloadSel::Named(id) => table3::by_id(id).ok_or_else(|| {
+                anyhow!("unknown workload '{id}' (see `sparsemap workloads`, or pass a spec)")
+            })?,
+            WorkloadSel::Custom(w) => {
+                w.validate()?;
+                w.clone()
+            }
+        };
+        let platform = match &self.platform {
+            PlatformSel::Named(name) => Platform::by_name(name)?,
+            PlatformSel::Custom(p) => {
+                p.validate()?;
+                p.clone()
+            }
+        };
+        Ok((workload, platform))
+    }
+
+    /// Validate the whole request into a runnable [`SearchSession`].
+    pub fn build(self) -> Result<SearchSession> {
+        SearchSession::new(self)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "workload",
+                match &self.workload {
+                    WorkloadSel::Named(id) => Json::str(id),
+                    WorkloadSel::Custom(w) => spec::workload_to_spec(w),
+                },
+            ),
+            (
+                "platform",
+                match &self.platform {
+                    PlatformSel::Named(name) => Json::str(name),
+                    PlatformSel::Custom(p) => p.to_spec_json(),
+                },
+            ),
+            ("method", Json::str(&self.method)),
+            ("budget", u64_to_json(self.budget as u64)),
+            ("seed", u64_to_json(self.seed)),
+            ("threads", Json::num(self.threads as f64)),
+            ("pjrt", Json::Bool(self.use_pjrt)),
+            ("cache", Json::Bool(self.cache)),
+        ])
+    }
+
+    /// Parse a request; absent fields take the [`Default`] values, so a
+    /// minimal spec file only needs the parts it wants to change.
+    pub fn from_json(j: &Json) -> Result<SearchRequest> {
+        anyhow::ensure!(j.as_obj().is_some(), "search request must be a JSON object");
+        let mut req = SearchRequest::default();
+        if let Some(w) = j.get("workload") {
+            req.workload = match w {
+                Json::Str(id) => WorkloadSel::Named(id.clone()),
+                other => WorkloadSel::Custom(spec::workload_from_spec(other)?),
+            };
+        }
+        if let Some(p) = j.get("platform") {
+            req.platform = match p {
+                Json::Str(name) => PlatformSel::Named(name.clone()),
+                other => PlatformSel::Custom(Platform::from_spec(other)?),
+            };
+        }
+        if let Some(m) = j.get("method") {
+            req.method = m
+                .as_str()
+                .ok_or_else(|| anyhow!("request field 'method' must be a string"))?
+                .to_string();
+        }
+        if let Some(b) = j.get("budget") {
+            req.budget = u64_from_json(b, "budget")? as usize;
+        }
+        if let Some(s) = j.get("seed") {
+            req.seed = u64_from_json(s, "seed")?;
+        }
+        if let Some(t) = j.get("threads") {
+            req.threads = t
+                .as_u64()
+                .ok_or_else(|| anyhow!("request field 'threads' must be an integer"))?
+                as usize;
+        }
+        if let Some(p) = j.get("pjrt") {
+            req.use_pjrt =
+                p.as_bool().ok_or_else(|| anyhow!("request field 'pjrt' must be a bool"))?;
+        }
+        if let Some(c) = j.get("cache") {
+            req.cache =
+                c.as_bool().ok_or_else(|| anyhow!("request field 'cache' must be a bool"))?;
+        }
+        Ok(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_setters() {
+        let r = SearchRequest::new()
+            .workload_named("conv4")
+            .platform_named("edge")
+            .method("pso")
+            .budget(500)
+            .seed(7)
+            .threads(4);
+        assert_eq!(r.workload, WorkloadSel::Named("conv4".to_string()));
+        assert_eq!(r.method, "pso");
+        assert_eq!(r.budget, 500);
+        assert!(r.cache, "cache defaults on");
+    }
+
+    #[test]
+    fn named_request_json_round_trips() {
+        let r = SearchRequest::new().workload_named("mm5").platform_named("mobile").seed(9);
+        let j = Json::parse(&r.to_json().dumps()).unwrap();
+        assert_eq!(SearchRequest::from_json(&j).unwrap(), r);
+    }
+
+    #[test]
+    fn custom_request_json_round_trips() {
+        let w = Workload::spmm("custom", 64, 128, 32, 0.4, 0.2);
+        let p = Platform::custom("pico", 8, 8, 2, 4 << 10, 512 << 10, 4e9, 4e8, 32.0, 8.0)
+            .unwrap();
+        let r = SearchRequest::new().workload(w).platform(p).budget(300);
+        let j = Json::parse(&r.to_json().dumps()).unwrap();
+        assert_eq!(SearchRequest::from_json(&j).unwrap(), r);
+    }
+
+    #[test]
+    fn huge_seed_round_trips_losslessly() {
+        let r = SearchRequest::new().seed(u64::MAX).workload_named("mm1");
+        let j = Json::parse(&r.to_json().dumps()).unwrap();
+        let r2 = SearchRequest::from_json(&j).unwrap();
+        assert_eq!(r2.seed, u64::MAX);
+        assert_eq!(r2, r);
+    }
+
+    #[test]
+    fn minimal_spec_takes_defaults() {
+        let r =
+            SearchRequest::from_json(&Json::parse(r#"{"workload": "mm1"}"#).unwrap()).unwrap();
+        assert_eq!(r.workload, WorkloadSel::Named("mm1".to_string()));
+        assert_eq!(r.budget, 20_000);
+        assert_eq!(r.method, "sparsemap");
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_names() {
+        assert!(SearchRequest::new().workload_named("nope").resolve().is_err());
+        assert!(SearchRequest::new().platform_named("laptop").resolve().is_err());
+    }
+}

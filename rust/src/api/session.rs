@@ -1,0 +1,191 @@
+//! [`SearchSession`] — a validated request, ready to run.
+
+use super::report::SearchReport;
+use super::request::SearchRequest;
+use crate::arch::Platform;
+use crate::baselines::{run_method, ALL_METHODS};
+use crate::search::{Backend, EvalContext, SearchObserver};
+use crate::util::threadpool::ThreadPool;
+use crate::workload::Workload;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A validated search arm. Created by [`SearchRequest::build`]; run with
+/// [`SearchSession::run`] (or [`SearchSession::run_observed`] to stream
+/// progress and stop early). The session owns a cancel token so a run
+/// can be aborted from another thread ([`SearchSession::cancel_token`]).
+pub struct SearchSession {
+    request: SearchRequest,
+    workload: Workload,
+    platform: Platform,
+    stop: Arc<AtomicBool>,
+}
+
+impl SearchSession {
+    pub(crate) fn new(request: SearchRequest) -> Result<SearchSession> {
+        ensure!(request.budget >= 1, "search budget must be at least 1 sample");
+        ensure!(
+            ALL_METHODS.contains(&request.method.as_str()),
+            "unknown method '{}' (one of {ALL_METHODS:?})",
+            request.method
+        );
+        let (workload, platform) = request.resolve()?;
+        Ok(SearchSession {
+            request,
+            workload,
+            platform,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn request(&self) -> &SearchRequest {
+        &self.request
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// Shared cancel token: store `true` (from any thread) and the run
+    /// winds down through the algorithms' normal budget-exhausted path,
+    /// still returning a well-formed report with `stopped_early` set.
+    pub fn cancel_token(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    #[cfg(feature = "xla")]
+    fn backend(&self) -> Backend {
+        if self.request.use_pjrt {
+            match crate::runtime::Runtime::from_default_dir().and_then(|rt| {
+                Backend::pjrt(&rt, self.workload.clone(), self.platform.clone())
+            }) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("warning: PJRT backend unavailable ({e}); using native");
+                    Backend::native(self.workload.clone(), self.platform.clone())
+                }
+            }
+        } else {
+            Backend::native(self.workload.clone(), self.platform.clone())
+        }
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn backend(&self) -> Backend {
+        if self.request.use_pjrt {
+            eprintln!("warning: built without the `xla` feature; using the native backend");
+        }
+        Backend::native(self.workload.clone(), self.platform.clone())
+    }
+
+    fn make_context(&self, observer: Option<Box<dyn SearchObserver>>) -> EvalContext {
+        let pool = if self.request.threads > 1 {
+            Some(Arc::new(ThreadPool::new(self.request.threads)))
+        } else {
+            None
+        };
+        EvalContext::new(self.backend(), self.request.budget)
+            .with_cache(self.request.cache)
+            .with_pool(pool)
+            .with_stop_flag(Some(Arc::clone(&self.stop)))
+            .with_observer(observer)
+    }
+
+    /// Lower the session into a raw [`EvalContext`] — the escape hatch
+    /// for drivers that run their own loop over the evaluator (gene
+    /// calibration, the Fig. 10 encoding study) rather than a method
+    /// from [`ALL_METHODS`].
+    pub fn into_context(self) -> EvalContext {
+        self.make_context(None)
+    }
+
+    /// Run the arm to completion (budget exhausted or cancelled).
+    pub fn run(self) -> Result<SearchReport> {
+        self.run_with(None)
+    }
+
+    /// Run with a streaming observer: called after every evaluated batch
+    /// with generation, evals, cache hits and best-so-far EDP; returning
+    /// [`crate::search::SearchControl::Stop`] ends the run early.
+    pub fn run_observed(self, observer: Box<dyn SearchObserver>) -> Result<SearchReport> {
+        self.run_with(Some(observer))
+    }
+
+    fn run_with(self, observer: Option<Box<dyn SearchObserver>>) -> Result<SearchReport> {
+        let ctx = self.make_context(observer);
+        let t0 = std::time::Instant::now();
+        let outcome = run_method(&self.request.method, ctx, self.request.seed)?;
+        Ok(SearchReport {
+            request: self.request,
+            outcome,
+            wall_s: t0.elapsed().as_secs_f64(),
+            stopped_early: self.stop.load(Ordering::SeqCst),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{Progress, SearchControl};
+
+    fn tiny() -> SearchRequest {
+        SearchRequest::new().workload_named("mm1").platform_named("mobile").budget(120).seed(3)
+    }
+
+    #[test]
+    fn build_validates_method_and_budget() {
+        assert!(tiny().method("gradient-descent").build().is_err());
+        assert!(tiny().budget(0).build().is_err());
+        assert!(tiny().build().is_ok());
+    }
+
+    #[test]
+    fn run_produces_report() {
+        let report = tiny().build().unwrap().run().unwrap();
+        assert_eq!(report.outcome.workload, "mm1");
+        assert_eq!(report.outcome.platform, "mobile");
+        assert!(report.outcome.evals <= 120);
+        assert!(!report.stopped_early);
+        assert!(report.wall_s >= 0.0);
+    }
+
+    #[test]
+    fn observer_can_stop_early() {
+        let report = tiny()
+            .budget(5_000)
+            .build()
+            .unwrap()
+            .run_observed(Box::new(|p: &Progress| {
+                if p.evals >= 100 {
+                    SearchControl::Stop
+                } else {
+                    SearchControl::Continue
+                }
+            }))
+            .unwrap();
+        assert!(report.stopped_early);
+        assert!(report.outcome.evals < 5_000, "stopped well before the budget");
+    }
+
+    #[test]
+    fn pre_cancelled_session_returns_empty_report() {
+        let session = tiny().method("random").build().unwrap();
+        session.cancel_token().store(true, Ordering::SeqCst);
+        let report = session.run().unwrap();
+        assert!(report.stopped_early);
+        assert_eq!(report.outcome.evals, 0);
+    }
+
+    #[test]
+    fn into_context_carries_request_knobs() {
+        let ctx = tiny().threads(3).build().unwrap().into_context();
+        assert_eq!(ctx.budget, 120);
+        assert_eq!(ctx.threads(), 3);
+    }
+}

@@ -114,6 +114,148 @@ impl Platform {
         }
     }
 
+    /// Validated constructor for custom (non-Table-II) platforms: any PE
+    /// array geometry with the energy table derived from the buffer
+    /// capacities, exactly like the built-in platforms.
+    #[allow(clippy::too_many_arguments)]
+    pub fn custom(
+        name: &str,
+        pe_rows: u64,
+        pe_cols: u64,
+        macs_per_pe: u64,
+        pe_buf_bytes: u64,
+        glb_bytes: u64,
+        dram_bw_bytes_per_s: f64,
+        clock_hz: f64,
+        glb_bw_words_per_cycle: f64,
+        pe_bw_words_per_cycle: f64,
+    ) -> Result<Platform> {
+        let p = Platform {
+            name: name.to_string(),
+            pe_rows,
+            pe_cols,
+            macs_per_pe,
+            pe_buf_bytes,
+            glb_bytes,
+            dram_bw_bytes_per_s,
+            clock_hz,
+            glb_bw_words_per_cycle,
+            pe_bw_words_per_cycle,
+            energy: EnergyTable::for_capacities(glb_bytes, pe_buf_bytes),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Check the resource invariants the cost model relies on.
+    pub fn validate(&self) -> Result<()> {
+        use anyhow::ensure;
+        ensure!(!self.name.is_empty(), "platform name must not be empty");
+        ensure!(
+            self.pe_rows >= 1 && self.pe_cols >= 1,
+            "platform '{}' PE grid {}x{} must be positive in both extents",
+            self.name,
+            self.pe_rows,
+            self.pe_cols
+        );
+        ensure!(self.macs_per_pe >= 1, "platform '{}' needs at least 1 MAC per PE", self.name);
+        ensure!(
+            self.pe_buf_bytes >= WORD_BYTES && self.glb_bytes >= WORD_BYTES,
+            "platform '{}' buffers must hold at least one {}-byte word",
+            self.name,
+            WORD_BYTES
+        );
+        ensure!(
+            self.dram_bw_bytes_per_s > 0.0 && self.dram_bw_bytes_per_s.is_finite(),
+            "platform '{}' DRAM bandwidth must be positive",
+            self.name
+        );
+        ensure!(
+            self.clock_hz > 0.0 && self.clock_hz.is_finite(),
+            "platform '{}' clock must be positive",
+            self.name
+        );
+        ensure!(
+            self.glb_bw_words_per_cycle > 0.0 && self.pe_bw_words_per_cycle > 0.0,
+            "platform '{}' on-chip bandwidths must be positive",
+            self.name
+        );
+        Ok(())
+    }
+
+    /// Parse a JSON platform spec: either a bare name (`"cloud"`) or a
+    /// full custom description. Convenience unit fields are accepted
+    /// alongside the raw ones (`pe_buf_kib`/`glb_kib` for bytes,
+    /// `dram_gbps` for bytes/s, `clock_ghz` for Hz).
+    pub fn from_spec(j: &Json) -> Result<Platform> {
+        if let Some(name) = j.as_str() {
+            return Platform::by_name(name);
+        }
+        anyhow::ensure!(j.as_obj().is_some(), "platform spec must be a name or a JSON object");
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("platform spec is missing 'name'"))?;
+        let u64_field = |key: &str| -> Result<u64> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("platform spec field '{key}' must be a whole number"))
+        };
+        let f64_field = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("platform spec field '{key}' must be a number"))
+        };
+        let bytes_field = |raw: &str, kib: &str| -> Result<u64> {
+            if j.get(raw).is_some() {
+                u64_field(raw)
+            } else if j.get(kib).is_some() {
+                Ok(u64_field(kib)? << 10)
+            } else {
+                Err(anyhow!("platform spec needs '{raw}' (bytes) or '{kib}' (KiB)"))
+            }
+        };
+        let dram_bw = if j.get("dram_bw_bytes_per_s").is_some() {
+            f64_field("dram_bw_bytes_per_s")?
+        } else {
+            f64_field("dram_gbps")? * 1e9
+        };
+        let clock = if j.get("clock_hz").is_some() {
+            f64_field("clock_hz")?
+        } else {
+            f64_field("clock_ghz")? * 1e9
+        };
+        Platform::custom(
+            name,
+            u64_field("pe_rows")?,
+            u64_field("pe_cols")?,
+            u64_field("macs_per_pe")?,
+            bytes_field("pe_buf_bytes", "pe_buf_kib")?,
+            bytes_field("glb_bytes", "glb_kib")?,
+            dram_bw,
+            clock,
+            f64_field("glb_bw_words_per_cycle")?,
+            f64_field("pe_bw_words_per_cycle")?,
+        )
+    }
+
+    /// Emit the full JSON spec (raw units). Inverse of [`Self::from_spec`]:
+    /// parsing the result reproduces the platform exactly.
+    pub fn to_spec_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("pe_rows", Json::num(self.pe_rows as f64)),
+            ("pe_cols", Json::num(self.pe_cols as f64)),
+            ("macs_per_pe", Json::num(self.macs_per_pe as f64)),
+            ("pe_buf_bytes", Json::num(self.pe_buf_bytes as f64)),
+            ("glb_bytes", Json::num(self.glb_bytes as f64)),
+            ("dram_bw_bytes_per_s", Json::num(self.dram_bw_bytes_per_s)),
+            ("clock_hz", Json::num(self.clock_hz)),
+            ("glb_bw_words_per_cycle", Json::num(self.glb_bw_words_per_cycle)),
+            ("pe_bw_words_per_cycle", Json::num(self.pe_bw_words_per_cycle)),
+        ])
+    }
+
     pub fn by_name(name: &str) -> Result<Platform> {
         match name {
             "edge" => Ok(Platform::edge()),
@@ -200,5 +342,42 @@ mod tests {
     #[test]
     fn feature_vector_len() {
         assert_eq!(Platform::edge().to_feature_vector().len(), 16);
+    }
+
+    #[test]
+    fn custom_platform_validates() {
+        let p = Platform::custom("pico", 8, 8, 4, 2 << 10, 256 << 10, 8e9, 5e8, 16.0, 4.0)
+            .unwrap();
+        assert_eq!(p.total_pes(), 64);
+        assert_eq!(p.energy, EnergyTable::for_capacities(256 << 10, 2 << 10));
+        // Non-positive PE grid, zero-capacity buffers and dead clocks are
+        // rejected.
+        assert!(Platform::custom("bad", 0, 8, 4, 2 << 10, 256 << 10, 8e9, 5e8, 16.0, 4.0)
+            .is_err());
+        assert!(Platform::custom("bad", 8, 8, 0, 2 << 10, 256 << 10, 8e9, 5e8, 16.0, 4.0)
+            .is_err());
+        assert!(Platform::custom("bad", 8, 8, 4, 0, 256 << 10, 8e9, 5e8, 16.0, 4.0).is_err());
+        assert!(Platform::custom("bad", 8, 8, 4, 2 << 10, 256 << 10, 0.0, 5e8, 16.0, 4.0)
+            .is_err());
+    }
+
+    #[test]
+    fn spec_json_round_trips() {
+        use crate::util::json::Json;
+        for p in Platform::all() {
+            let j = p.to_spec_json();
+            let p2 = Platform::from_spec(&Json::parse(&j.dumps()).unwrap()).unwrap();
+            assert_eq!(p, p2);
+        }
+        // Bare names resolve through by_name.
+        assert_eq!(Platform::from_spec(&Json::str("edge")).unwrap(), Platform::edge());
+        // Convenience units.
+        let src = r#"{"name": "tiny", "pe_rows": 4, "pe_cols": 4, "macs_per_pe": 1,
+                      "pe_buf_kib": 1, "glb_kib": 64, "dram_gbps": 1, "clock_ghz": 0.2,
+                      "glb_bw_words_per_cycle": 8, "pe_bw_words_per_cycle": 2}"#;
+        let p = Platform::from_spec(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(p.pe_buf_bytes, 1 << 10);
+        assert_eq!(p.glb_bytes, 64 << 10);
+        assert!((p.dram_bw_bytes_per_s - 1e9).abs() < 1.0);
     }
 }

@@ -118,8 +118,8 @@ impl DirectSpec {
         let mut formats: [Vec<RankFormat>; 3] = [Vec::new(), Vec::new(), Vec::new()];
         for (t, fmts) in formats.iter_mut().enumerate() {
             let ranks = crate::genome::tensor_ranks(&mapping, w, t);
-            let genes =
-                &genome[self.format_start + t * FORMAT_GENES_PER_TENSOR..][..FORMAT_GENES_PER_TENSOR];
+            let start = self.format_start + t * FORMAT_GENES_PER_TENSOR;
+            let genes = &genome[start..][..FORMAT_GENES_PER_TENSOR];
             let k = ranks.len();
             *fmts = if k <= FORMAT_GENES_PER_TENSOR {
                 genes[FORMAT_GENES_PER_TENSOR - k..]
@@ -129,7 +129,8 @@ impl DirectSpec {
             } else {
                 let mut v: Vec<RankFormat> =
                     genes.iter().map(|&x| RankFormat::from_gene(x)).collect();
-                v.extend(std::iter::repeat(RankFormat::Uncompressed).take(k - FORMAT_GENES_PER_TENSOR));
+                let pad = k - FORMAT_GENES_PER_TENSOR;
+                v.extend(std::iter::repeat(RankFormat::Uncompressed).take(pad));
                 v
             };
         }

@@ -39,12 +39,15 @@ pub const ALL_METHODS: &[&str] = &[
     "dqn",
 ];
 
-/// Dispatch a search method by name (the CLI / experiment driver entry).
+/// Dispatch a search method by name — the internal engine behind
+/// [`crate::api::SearchSession::run`]. Downstream users should go
+/// through [`crate::api::SearchRequest`]; this stays public for drivers
+/// that assemble their own [`EvalContext`].
 ///
 /// Every method evaluates through the [`EvalContext`] it is handed, so
-/// all arms inherit the context's worker pool and evaluation cache
-/// equally — attach a pool with `EvalContext::with_pool` (or via
-/// `ExpConfig::context` / `--threads`) and the comparison stays fair.
+/// all arms inherit the context's worker pool, evaluation cache and
+/// observer equally — attach a pool with `EvalContext::with_pool` (or
+/// via a request's `threads`) and the comparison stays fair.
 pub fn run_method(name: &str, ctx: EvalContext, seed: u64) -> anyhow::Result<Outcome> {
     Ok(match name {
         "sparsemap" => run_sparsemap(ctx, EsConfig::default(), seed),

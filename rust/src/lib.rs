@@ -33,7 +33,19 @@
 //!   one evaluation from the sample budget**: the paper's budget counts
 //!   submissions, not distinct designs, so cached and uncached arms stay
 //!   comparable. Caching never changes a trajectory, only its cost.
+//!
+//! ## Programmatic use — start at [`api`]
+//!
+//! [`api`] is the crate's front door: build a [`api::SearchRequest`]
+//! (named *or fully custom* workloads and platforms, budget, seed,
+//! threads, backend, cache policy), validate it into a
+//! [`api::SearchSession`], stream progress through a
+//! [`search::SearchObserver`], cancel from another thread, and get a
+//! JSON-round-trippable [`api::SearchReport`] back. The CLI
+//! (`search`, `run-spec`), the experiment drivers ([`report`]) and the
+//! examples are all thin layers over it.
 
+pub mod api;
 pub mod arch;
 pub mod baselines;
 pub mod es;
@@ -50,10 +62,12 @@ pub mod workload;
 
 /// Common imports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::api::{run_batch, SearchReport, SearchRequest, SearchSession};
     pub use crate::arch::{Boundary, Platform, StorageLevel};
     pub use crate::genome::{decode, Design, Genome, GenomeSpec};
     pub use crate::mapping::{MapLevel, Mapping};
     pub use crate::model::{EvalResult, NativeEvaluator};
+    pub use crate::search::{Progress, SearchControl, SearchObserver};
     pub use crate::sparse::{RankFormat, SgMechanism, SparseStrategy};
     pub use crate::util::rng::Pcg64;
     pub use crate::workload::{Workload, WorkloadKind};

@@ -1,16 +1,19 @@
 //! SparseMap CLI — the L3 coordinator entrypoint.
 //!
 //! Subcommands map 1:1 onto the paper's experiments (DESIGN.md E1–E9)
-//! plus utility commands for single searches and diagnostics. Run with
+//! plus utility commands for single searches and diagnostics. Everything
+//! search-shaped goes through [`sparsemap::api`] — the CLI is a thin
+//! argument-parsing layer over `SearchRequest`/`SearchSession`. Run with
 //! no arguments for usage.
 
+use sparsemap::api::SearchRequest;
 use sparsemap::arch::Platform;
-use sparsemap::baselines::{run_method, ALL_METHODS};
 use sparsemap::es::sensitivity::calibrate;
 use sparsemap::es::CalibConfig;
 use sparsemap::genome::{decode, describe};
 use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, table4, ExpConfig};
 use sparsemap::util::cli::Args;
+use sparsemap::util::json::Json;
 use sparsemap::util::rng::Pcg64;
 use sparsemap::workload::table3;
 use std::path::PathBuf;
@@ -33,6 +36,13 @@ Utility commands:
   search               run one search arm
                          --workload mm3 --platform cloud --method sparsemap
                          --budget 20000 --seed 42 [--pjrt] [--show-design]
+                         [--json]
+  run-spec FILE        run a search request from a JSON spec file: custom
+                         workloads (any einsum contraction) and platforms
+                         (any PE-array geometry) welcome; CLI options
+                         override spec fields; [--json] prints the full
+                         report to stdout, [--show-design] renders the
+                         winner
   calibrate            run high-sensitivity gene calibration and print S(v)
                          --workload mm3 --platform cloud
   workloads            list the Table III workload suite
@@ -43,12 +53,15 @@ Utility commands:
 Common options:
   --budget N           samples per search arm (default 20000)
   --seed N             RNG seed (default 42)
-  --out DIR            CSV output directory (default results/)
+  --out DIR            CSV/report output directory (default results/)
   --threads N          worker threads: population evaluation fans out
                        across N workers (results are bit-identical for
                        any N); matrix experiments also run N arms at once
   --pjrt               evaluate through the AOT PJRT artifact
   --workloads a,b,c    restrict table4 to a workload subset
+
+Unknown options are rejected (with a nearest-match suggestion), so typos
+fail loudly instead of silently running defaults.
 
 Repeat evaluations are served from a per-arm cache: they still debit the
 sample budget (submissions are what the paper counts) but skip the model
@@ -56,7 +69,27 @@ call; `search` reports both submissions and the model evals/s actually
 paid for.
 ";
 
+/// Per-subcommand argument whitelists (on top of the common set).
+fn check_args(args: &Args) -> anyhow::Result<()> {
+    const COMMON_OPTS: &[&str] = &["budget", "seed", "out", "threads"];
+    const COMMON_FLAGS: &[&str] = &["pjrt"];
+    let (opts, flags): (&[&str], &[&str]) = match args.subcommand.as_str() {
+        "search" => (&["workload", "platform", "method"], &["show-design", "json"]),
+        "run-spec" => (&["workload", "platform", "method"], &["show-design", "json"]),
+        "calibrate" => (&["workload", "platform"], &[]),
+        "table4" => (&["workloads"], &["summary"]),
+        _ => (&[], &[]),
+    };
+    let known_opts: Vec<&str> = COMMON_OPTS.iter().chain(opts).copied().collect();
+    let known_flags: Vec<&str> = COMMON_FLAGS.iter().chain(flags).copied().collect();
+    args.reject_unknown(&known_opts, &known_flags)
+}
+
 fn exp_config(args: &Args) -> anyhow::Result<ExpConfig> {
+    anyhow::ensure!(
+        args.opt_u64("budget", 20_000)? >= 1,
+        "--budget must be at least 1 sample"
+    );
     let mut cfg = ExpConfig {
         budget: args.opt_u64("budget", 20_000)? as usize,
         seed: args.opt_u64("seed", 42)?,
@@ -70,35 +103,60 @@ fn exp_config(args: &Args) -> anyhow::Result<ExpConfig> {
     Ok(cfg)
 }
 
-fn cmd_search(args: &Args) -> anyhow::Result<()> {
-    let cfg = exp_config(args)?;
-    let wl_id = args.opt_or("workload", "mm3");
-    let platform = Platform::by_name(&args.opt_or("platform", "cloud"))?;
-    let method = args.opt_or("method", "sparsemap");
-    anyhow::ensure!(ALL_METHODS.contains(&method.as_str()), "unknown method {method}");
-    let workload = table3::by_id(&wl_id)
-        .ok_or_else(|| anyhow::anyhow!("unknown workload '{wl_id}' (see `sparsemap workloads`)"))?;
+/// Overlay CLI options onto a request (from defaults or a spec file).
+fn apply_overrides(mut req: SearchRequest, args: &Args) -> anyhow::Result<SearchRequest> {
+    if let Some(w) = args.opt("workload") {
+        req = req.workload_named(w);
+    }
+    if let Some(p) = args.opt("platform") {
+        req = req.platform_named(p);
+    }
+    if let Some(m) = args.opt("method") {
+        req = req.method(m);
+    }
+    if args.opt("budget").is_some() {
+        req.budget = args.opt_u64("budget", 0)? as usize;
+    }
+    if args.opt("seed").is_some() {
+        req.seed = args.opt_u64("seed", 0)?;
+    }
+    if let Some(t) = args.opt("threads") {
+        req.threads = t.parse().map_err(|_| anyhow::anyhow!("--threads expects a number"))?;
+    }
+    if args.flag("pjrt") {
+        req = req.pjrt(true);
+    }
+    Ok(req)
+}
 
-    let ctx = cfg.context(workload.clone(), platform.clone());
-    let t0 = std::time::Instant::now();
-    let outcome = run_method(&method, ctx, cfg.seed)?;
-    let dt = t0.elapsed();
+/// Run a built request, print the summary (or the full JSON report with
+/// `--json`), write the report next to the CSVs, and optionally render
+/// the winning design.
+fn run_and_report(req: SearchRequest, args: &Args) -> anyhow::Result<()> {
+    let out_dir = PathBuf::from(args.opt_or("out", "results"));
+    let session = req.build()?;
+    let (workload, platform) = (session.workload().clone(), session.platform().clone());
+    let report = session.run()?;
+    let outcome = &report.outcome;
 
-    let model_evals = outcome.evals - outcome.cache_hits;
-    println!(
-        "{} on {} @ {}: best EDP {:.4e}  ({} evals, {} cache hits, {:.1}% valid, {:.2}s, \
-         {:.0} model evals/s, {} threads)",
-        outcome.method,
-        outcome.workload,
-        outcome.platform,
-        outcome.best_edp,
-        outcome.evals,
-        outcome.cache_hits,
-        100.0 * outcome.valid_ratio(),
-        dt.as_secs_f64(),
-        model_evals as f64 / dt.as_secs_f64().max(1e-9),
-        cfg.threads.max(1),
-    );
+    if args.flag("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        println!(
+            "{} on {} @ {}: best EDP {:.4e}  ({} evals, {} cache hits, {:.1}% valid, {:.2}s, \
+             {:.0} model evals/s, {} threads)",
+            outcome.method,
+            outcome.workload,
+            outcome.platform,
+            outcome.best_edp,
+            outcome.evals,
+            outcome.cache_hits,
+            100.0 * outcome.valid_ratio(),
+            report.wall_s,
+            report.model_evals_per_s(),
+            report.request.threads.max(1),
+        );
+    }
     if args.flag("show-design") {
         if let Some(g) = &outcome.best_genome {
             let spec = sparsemap::genome::GenomeSpec::for_workload(&workload);
@@ -110,19 +168,55 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
-    std::fs::create_dir_all(&cfg.out_dir)?;
-    let path = cfg.out_dir.join(format!("search_{}_{}_{}.json", method, wl_id, platform.name));
-    std::fs::write(&path, outcome.to_json().pretty())?;
-    println!("outcome written to {}", path.display());
+    std::fs::create_dir_all(&out_dir)?;
+    let path = out_dir.join(format!(
+        "search_{}_{}_{}.json",
+        outcome.method, workload.id, platform.name
+    ));
+    std::fs::write(&path, report.to_json().pretty())?;
+    if !args.flag("json") {
+        println!("report written to {}", path.display());
+    }
     Ok(())
+}
+
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    // SearchRequest::default() already encodes the CLI defaults
+    // (mm3/cloud/sparsemap/20000/42); only the thread default differs —
+    // the CLI uses all cores like the experiment drivers do.
+    let req = SearchRequest::new().threads(ExpConfig::default().threads);
+    run_and_report(apply_overrides(req, args)?, args)
+}
+
+fn cmd_run_spec(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: sparsemap run-spec <file.json> [overrides]"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read spec file '{path}': {e}"))?;
+    let spec = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let mut req = SearchRequest::from_json(&spec)?;
+    if spec.get("threads").is_none() && args.opt("threads").is_none() {
+        // Match `search`: default to all cores unless the spec or the
+        // CLI pins a thread count.
+        req.threads = ExpConfig::default().threads;
+    }
+    let req = apply_overrides(req, args)?;
+    run_and_report(req, args)
 }
 
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     let cfg = exp_config(args)?;
-    let workload = table3::by_id(&args.opt_or("workload", "mm3"))
-        .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
-    let platform = Platform::by_name(&args.opt_or("platform", "cloud"))?;
-    let mut ctx = cfg.context(workload, platform);
+    let session = SearchRequest::new()
+        .workload_named(&args.opt_or("workload", "mm3"))
+        .platform_named(&args.opt_or("platform", "cloud"))
+        .budget(cfg.budget)
+        .seed(cfg.seed)
+        .threads(cfg.threads)
+        .pjrt(cfg.use_pjrt)
+        .build()?;
+    let mut ctx = session.into_context();
     let mut rng = Pcg64::seeded(cfg.seed);
     let sens = calibrate(&mut ctx, CalibConfig::default(), &mut rng);
     println!(
@@ -168,6 +262,11 @@ fn cmd_demo() -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
+    if args.flag("help") || args.opt("help").is_some() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    check_args(&args)?;
     let cfg = exp_config(&args)?;
 
     match args.subcommand.as_str() {
@@ -184,6 +283,7 @@ fn main() -> anyhow::Result<()> {
             println!("{}", table4::run(&cfg, subset, args.flag("summary"))?);
         }
         "search" => cmd_search(&args)?,
+        "run-spec" => cmd_run_spec(&args)?,
         "calibrate" => cmd_calibrate(&args)?,
         "demo" => cmd_demo()?,
         "workloads" => {

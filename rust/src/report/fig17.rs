@@ -3,42 +3,41 @@
 //! valid points explored per platform, averaged over the conv layers.
 
 use super::{write_csv, ExpConfig};
+use crate::api::{run_batch, SearchRequest};
 use crate::arch::Platform;
-use crate::baselines::run_method;
 use crate::search::Outcome;
 use crate::util::stats::geomean;
 use crate::util::table::{sci, Table};
-use crate::util::threadpool::{parallel_map, ThreadPool};
-use crate::workload::table3;
-use std::sync::Arc;
 
 /// The Fig. 17a method set.
 pub const FIG17_METHODS: &[&str] = &["sparsemap", "pso", "mcts", "tbpsa", "ppo", "dqn"];
 
-/// Run every (method, conv-layer) arm on the given platform.
+/// Run every (method, conv-layer) arm on the given platform through the
+/// batch API. Arms evaluate serially inside (the parallelism is across
+/// arms) and always on the native backend — PJRT clients are not shared
+/// across threads; the two backends are cross-validated.
 pub fn run_matrix(cfg: &ExpConfig, platform: &Platform, layers: &[&str]) -> Vec<Outcome> {
-    let pool = ThreadPool::new(cfg.threads.max(1));
-    let cfg = Arc::new(cfg.clone());
-    let platform = platform.clone();
-    let jobs: Vec<(String, String)> = FIG17_METHODS
+    let requests: Vec<SearchRequest> = FIG17_METHODS
         .iter()
-        .flat_map(|m| layers.iter().map(move |l| (m.to_string(), l.to_string())))
+        .flat_map(|m| {
+            layers.iter().map(move |l| {
+                SearchRequest::new()
+                    .workload_named(l)
+                    .platform(platform.clone())
+                    .method(m)
+                    .budget(cfg.budget)
+                    .seed(cfg.seed)
+            })
+        })
         .collect();
-    parallel_map(&pool, jobs, move |(method, layer)| {
-        let w = table3::by_id(&layer).expect("layer");
-        // Workers always use the native backend (PJRT clients are not
-        // shared across threads); the two backends are cross-validated.
-        let ctx = crate::search::EvalContext::new(
-            crate::search::Backend::native(w, platform.clone()),
-            cfg.budget,
-        );
-        run_method(&method, ctx, cfg.seed).expect("method")
-    })
+    let reports = run_batch(requests, cfg.threads.max(1)).expect("fig17 arms validate");
+    reports.into_iter().map(|r| r.into_outcome()).collect()
 }
 
 /// Fig. 17a: EDP per conv layer per method on cloud.
 pub fn run_a(cfg: &ExpConfig) -> anyhow::Result<String> {
-    let layers: Vec<&str> = (1..=13).map(|i| Box::leak(format!("conv{i}").into_boxed_str()) as &str).collect();
+    let layers: Vec<&str> =
+        (1..=13).map(|i| Box::leak(format!("conv{i}").into_boxed_str()) as &str).collect();
     let outcomes = run_matrix(cfg, &Platform::cloud(), &layers);
 
     let mut table = Table::new(

@@ -4,11 +4,8 @@
 //! curves on one SpMM (mm3) and one SpConv (conv4) at cloud.
 
 use super::{write_csv, ExpConfig};
-use crate::arch::Platform;
-use crate::baselines::run_method;
 use crate::search::Outcome;
 use crate::util::table::{sci, Table};
-use crate::workload::table3;
 
 pub const ABLATION_ARMS: &[&str] = &["es-direct", "es-pfce", "sparsemap"];
 pub const ABLATION_WORKLOADS: &[&str] = &["mm3", "conv4"];
@@ -17,9 +14,18 @@ pub fn run_arms(cfg: &ExpConfig) -> Vec<Outcome> {
     let mut out = Vec::new();
     for wl in ABLATION_WORKLOADS {
         for method in ABLATION_ARMS {
-            let w = table3::by_id(wl).expect("workload");
-            let ctx = cfg.context(w, Platform::cloud());
-            out.push(run_method(method, ctx, cfg.seed).expect("method"));
+            let report = crate::api::SearchRequest::new()
+                .workload_named(wl)
+                .platform_named("cloud")
+                .method(method)
+                .budget(cfg.budget)
+                .seed(cfg.seed)
+                .threads(cfg.threads)
+                .build()
+                .expect("ablation arms validate")
+                .run()
+                .expect("ablation search");
+            out.push(report.into_outcome());
         }
     }
     out
@@ -60,10 +66,18 @@ mod tests {
         // es-direct (dead-offspring-ridden) should not beat full
         // SparseMap at equal budget; PFCE should sit at or above direct.
         let cfg = ExpConfig { budget: 2_500, seed: 21, ..Default::default() };
-        let w = table3::by_id("mm3").unwrap();
         let run = |m: &str| {
-            let ctx = cfg.context(w.clone(), Platform::cloud());
-            run_method(m, ctx, cfg.seed).unwrap()
+            crate::api::SearchRequest::new()
+                .workload_named("mm3")
+                .platform_named("cloud")
+                .method(m)
+                .budget(cfg.budget)
+                .seed(cfg.seed)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+                .into_outcome()
         };
         let direct = run("es-direct");
         let pfce = run("es-pfce");

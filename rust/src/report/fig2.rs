@@ -176,7 +176,10 @@ pub fn run(cfg: &ExpConfig) -> anyhow::Result<String> {
         }
     }
     write_csv(&cfg.out_dir, "fig2.csv", &csv)?;
-    Ok(format!("Fig. 2 — mapping x sparse-strategy interplay (mobile, 256^3 GEMM)\n{}", table.render()))
+    Ok(format!(
+        "Fig. 2 — mapping x sparse-strategy interplay (mobile, 256^3 GEMM)\n{}",
+        table.render()
+    ))
 }
 
 /// Winners per density — used by tests and EXPERIMENTS.md.

@@ -9,12 +9,11 @@ pub mod fig2;
 pub mod fig7;
 pub mod table4;
 
+use crate::api::SearchRequest;
 use crate::arch::Platform;
-use crate::search::{Backend, EvalContext};
-use crate::util::threadpool::ThreadPool;
+use crate::search::EvalContext;
 use crate::workload::Workload;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 
 /// Common knobs for all experiment drivers.
 #[derive(Clone, Debug)]
@@ -43,53 +42,33 @@ impl Default for ExpConfig {
 }
 
 impl ExpConfig {
-    #[cfg(feature = "xla")]
-    fn backend(&self, workload: Workload, platform: Platform) -> Backend {
-        if self.use_pjrt {
-            match crate::runtime::Runtime::from_default_dir()
-                .and_then(|rt| Backend::pjrt(&rt, workload.clone(), platform.clone()))
-            {
-                Ok(b) => b,
-                Err(e) => {
-                    eprintln!("warning: PJRT backend unavailable ({e}); using native");
-                    Backend::native(workload, platform)
-                }
-            }
-        } else {
-            Backend::native(workload, platform)
-        }
+    /// Lower this config into a [`SearchRequest`] for one arm — the
+    /// single place experiment knobs map onto the public API. Matrix
+    /// drivers that fan out one-arm-per-thread (`fig17`, `table4`)
+    /// override `threads` to 1 per arm instead — nesting a context pool
+    /// inside an arm pool would only oversubscribe the machine.
+    pub fn request(&self, workload: Workload, platform: Platform) -> SearchRequest {
+        SearchRequest::new()
+            .workload(workload)
+            .platform(platform)
+            .budget(self.budget)
+            .seed(self.seed)
+            .threads(self.threads)
+            .pjrt(self.use_pjrt)
     }
 
-    #[cfg(not(feature = "xla"))]
-    fn backend(&self, workload: Workload, platform: Platform) -> Backend {
-        if self.use_pjrt {
-            eprintln!("warning: built without the `xla` feature; using the native backend");
-        }
-        Backend::native(workload, platform)
-    }
-
-    /// Worker pool for population evaluation inside one arm (`None` when
-    /// `threads <= 1`). Matrix drivers that already fan out one-arm-per-
-    /// thread (`fig17`, `table4`) keep their per-arm contexts serial
-    /// instead — nesting a context pool inside an arm pool would only
-    /// oversubscribe the machine.
-    fn eval_pool(&self) -> Option<Arc<ThreadPool>> {
-        if self.threads > 1 {
-            Some(Arc::new(ThreadPool::new(self.threads)))
-        } else {
-            None
-        }
-    }
-
-    /// Build a fresh evaluation context for one arm, with the evaluation
-    /// pool attached (population batches fan out across `threads`).
+    /// Build a fresh evaluation context for one arm through the API,
+    /// with the evaluation pool attached (population batches fan out
+    /// across `threads`).
     ///
     /// Note: the PJRT backend compiles the artifact per context; drivers
     /// that fan out across threads use the native backend inside workers
     /// (the two are cross-validated — see `rust/tests/runtime_xla.rs`).
     pub fn context(&self, workload: Workload, platform: Platform) -> EvalContext {
-        EvalContext::new(self.backend(workload, platform), self.budget)
-            .with_pool(self.eval_pool())
+        self.request(workload, platform)
+            .build()
+            .expect("experiment workloads/platforms always validate")
+            .into_context()
     }
 }
 

@@ -3,14 +3,11 @@
 //! headline geomean reduction ratios from the abstract.
 
 use super::{write_csv, ExpConfig};
+use crate::api::{run_batch, SearchRequest};
 use crate::arch::Platform;
-use crate::baselines::run_method;
-use crate::search::Outcome;
 use crate::util::stats::geomean;
 use crate::util::table::{ratio, sci, Table};
-use crate::util::threadpool::{parallel_map, ThreadPool};
 use crate::workload::table3;
-use std::sync::Arc;
 
 pub const TABLE4_METHODS: &[&str] = &["sparseloop", "sage-like", "sparsemap"];
 
@@ -24,37 +21,41 @@ pub struct Cell {
     pub valid_ratio: f64,
 }
 
-/// Run the full (or restricted) matrix.
+/// Run the full (or restricted) matrix through the batch API (arms
+/// evaluate serially inside; the parallelism is across arms).
 pub fn run_matrix(cfg: &ExpConfig, workloads: &[String]) -> Vec<Cell> {
-    let pool = ThreadPool::new(cfg.threads.max(1));
-    let cfg = Arc::new(cfg.clone());
-    let jobs: Vec<(String, String, String)> = workloads
+    let requests: Vec<SearchRequest> = workloads
         .iter()
         .flat_map(|w| {
             Platform::all().into_iter().flat_map(move |p| {
                 TABLE4_METHODS
                     .iter()
-                    .map(move |m| (w.clone(), p.name.clone(), m.to_string()))
+                    .map(move |m| {
+                        SearchRequest::new()
+                            .workload_named(w)
+                            .platform(p.clone())
+                            .method(m)
+                            .budget(cfg.budget)
+                            .seed(cfg.seed)
+                    })
                     .collect::<Vec<_>>()
             })
         })
         .collect();
-    parallel_map(&pool, jobs, move |(wl, plat, method)| {
-        let w = table3::by_id(&wl).expect("workload");
-        let p = Platform::by_name(&plat).expect("platform");
-        let ctx = crate::search::EvalContext::new(
-            crate::search::Backend::native(w, p),
-            cfg.budget,
-        );
-        let o: Outcome = run_method(&method, ctx, cfg.seed).expect("method");
-        Cell {
-            workload: wl,
-            platform: plat,
-            method,
-            edp: o.best_edp,
-            valid_ratio: o.valid_ratio(),
-        }
-    })
+    let reports = run_batch(requests, cfg.threads.max(1)).expect("table4 arms validate");
+    reports
+        .into_iter()
+        .map(|r| {
+            let o = r.into_outcome();
+            Cell {
+                workload: o.workload.clone(),
+                platform: o.platform.clone(),
+                method: o.method.clone(),
+                edp: o.best_edp,
+                valid_ratio: o.valid_ratio(),
+            }
+        })
+        .collect()
 }
 
 /// Geomean EDP reduction of SparseMap vs `method` on `platform`.
@@ -82,7 +83,11 @@ pub fn reduction(cells: &[Cell], method: &str, platform: &str) -> f64 {
     geomean(&ratios)
 }
 
-pub fn run(cfg: &ExpConfig, subset: Option<Vec<String>>, summary_only: bool) -> anyhow::Result<String> {
+pub fn run(
+    cfg: &ExpConfig,
+    subset: Option<Vec<String>>,
+    summary_only: bool,
+) -> anyhow::Result<String> {
     let workloads: Vec<String> = match subset {
         Some(s) => s,
         None => table3::all().iter().map(|w| w.id.clone()).collect(),

@@ -37,7 +37,49 @@ use crate::workload::Workload;
 #[cfg(feature = "xla")]
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// Progress snapshot streamed to a [`SearchObserver`] after every
+/// evaluated batch (≈ one generation for population algorithms). Carries
+/// the live telemetry the Fig. 17b/18 curves are built from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Progress {
+    /// Batches evaluated so far — a generation proxy.
+    pub batches: usize,
+    /// Budget submissions spent so far.
+    pub evals: usize,
+    pub valid_evals: usize,
+    /// Submissions served from the evaluation cache.
+    pub cache_hits: usize,
+    /// Best valid EDP so far (`f64::INFINITY` until one is found).
+    pub best_edp: f64,
+    /// Total sample budget of the run.
+    pub budget: usize,
+}
+
+/// What a [`SearchObserver`] wants the search to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchControl {
+    Continue,
+    /// Stop early: the context reports an exhausted budget from now on,
+    /// so every algorithm winds down through its normal exit path.
+    Stop,
+}
+
+/// Streaming callback attached to an [`EvalContext`] (see
+/// [`EvalContext::with_observer`]). Every search algorithm funnels its
+/// evaluations through the context, so observers work uniformly across
+/// SparseMap and all baselines without per-algorithm wiring.
+pub trait SearchObserver: Send {
+    fn on_batch(&mut self, progress: &Progress) -> SearchControl;
+}
+
+impl<F: FnMut(&Progress) -> SearchControl + Send> SearchObserver for F {
+    fn on_batch(&mut self, progress: &Progress) -> SearchControl {
+        self(progress)
+    }
+}
 
 /// Fitness backend: the native Rust model or the PJRT AOT executable.
 /// Both implement the same FEATURE_SCHEMA_V1 formula. The native evaluator
@@ -224,6 +266,12 @@ pub struct EvalContext {
     genome_cache: HashMap<Vec<u32>, EvalResult>,
     design_cache: HashMap<Vec<u32>, EvalResult>,
     model_calls: usize,
+    observer: Option<Box<dyn SearchObserver>>,
+    /// Shared halt flag: set by an observer's [`SearchControl::Stop`] or
+    /// externally (cancellation); once set, `remaining()` reports 0.
+    stop_flag: Option<Arc<AtomicBool>>,
+    stopped: bool,
+    batches: usize,
 }
 
 impl EvalContext {
@@ -239,6 +287,10 @@ impl EvalContext {
             genome_cache: HashMap::new(),
             design_cache: HashMap::new(),
             model_calls: 0,
+            observer: None,
+            stop_flag: None,
+            stopped: false,
+            batches: 0,
         }
     }
 
@@ -269,6 +321,58 @@ impl EvalContext {
         self
     }
 
+    /// Attach a streaming [`SearchObserver`], called after every batch.
+    /// Observers only *read* progress and can request an early stop —
+    /// they never perturb a trajectory that runs to completion.
+    pub fn with_observer(mut self, observer: Option<Box<dyn SearchObserver>>) -> EvalContext {
+        self.observer = observer;
+        self
+    }
+
+    /// In-place variant of [`EvalContext::with_observer`].
+    pub fn set_observer(&mut self, observer: Option<Box<dyn SearchObserver>>) {
+        self.observer = observer;
+    }
+
+    /// Attach a shared halt flag. Setting it (from any thread) cancels
+    /// the search: the context reports an exhausted budget and every
+    /// algorithm winds down through its normal exit path.
+    pub fn with_stop_flag(mut self, flag: Option<Arc<AtomicBool>>) -> EvalContext {
+        self.stop_flag = flag;
+        self
+    }
+
+    /// Did an observer or the halt flag stop this run before the budget?
+    pub fn stopped_early(&self) -> bool {
+        self.stopped || self.stop_flag.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
+    }
+
+    /// Batches evaluated so far (the observer's generation proxy).
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    /// Bump batch count and notify the observer, honoring its verdict.
+    fn finish_batch(&mut self) {
+        self.batches += 1;
+        if let Some(obs) = self.observer.as_mut() {
+            let progress = Progress {
+                batches: self.batches,
+                evals: self.telemetry.evals,
+                valid_evals: self.telemetry.valid_evals,
+                cache_hits: self.telemetry.cache_hits,
+                best_edp: self.telemetry.best_edp,
+                budget: self.budget,
+            };
+            if obs.on_batch(&progress) == SearchControl::Stop {
+                self.stopped = true;
+                if let Some(f) = &self.stop_flag {
+                    f.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+
     /// Number of genomes actually sent to the model so far (submissions
     /// minus cache hits minus dead-on-arrival designs).
     pub fn model_calls(&self) -> usize {
@@ -293,6 +397,9 @@ impl EvalContext {
     }
 
     pub fn remaining(&self) -> usize {
+        if self.stopped_early() {
+            return 0;
+        }
         self.budget.saturating_sub(self.used())
     }
 
@@ -329,6 +436,7 @@ impl EvalContext {
         for (g, r) in batch.iter().zip(&results) {
             self.telemetry.record(g, r);
         }
+        self.finish_batch();
         results
     }
 
@@ -372,6 +480,7 @@ impl EvalContext {
         for (g, r) in keys.iter().zip(&results) {
             self.telemetry.record(g, r);
         }
+        self.finish_batch();
         results
     }
 
@@ -471,5 +580,58 @@ mod tests {
         c.eval_batch(&batch);
         assert_eq!(c.model_calls(), 4);
         assert_eq!(c.cache_hits(), 0);
+    }
+
+    #[test]
+    fn observer_streams_progress() {
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        let mut c = ctx(100).with_observer(Some(Box::new(move |p: &Progress| {
+            sink.lock().unwrap().push(p.clone());
+            SearchControl::Continue
+        })));
+        let mut rng = Pcg64::seeded(7);
+        let genomes: Vec<_> = (0..10).map(|_| c.spec.random(&mut rng)).collect();
+        c.eval_batch(&genomes[..5]);
+        c.eval_batch(&genomes[5..]);
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 2);
+        assert_eq!(seen[0].batches, 1);
+        assert_eq!(seen[0].evals, 5);
+        assert_eq!(seen[1].evals, 10);
+        assert_eq!(seen[1].budget, 100);
+    }
+
+    #[test]
+    fn observer_stop_halts_search() {
+        let mut c = ctx(1_000).with_observer(Some(Box::new(|p: &Progress| {
+            if p.evals >= 20 {
+                SearchControl::Stop
+            } else {
+                SearchControl::Continue
+            }
+        })));
+        let mut rng = Pcg64::seeded(8);
+        loop {
+            let genomes: Vec<_> = (0..10).map(|_| c.spec.random(&mut rng)).collect();
+            if c.eval_batch(&genomes).is_empty() {
+                break;
+            }
+        }
+        assert!(c.stopped_early());
+        assert_eq!(c.used(), 20, "stopped after the second batch");
+    }
+
+    #[test]
+    fn stop_flag_cancels_externally() {
+        let flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut c = ctx(100).with_stop_flag(Some(Arc::clone(&flag)));
+        let mut rng = Pcg64::seeded(9);
+        let genomes: Vec<_> = (0..5).map(|_| c.spec.random(&mut rng)).collect();
+        assert_eq!(c.eval_batch(&genomes).len(), 5);
+        flag.store(true, std::sync::atomic::Ordering::SeqCst);
+        assert!(c.exhausted());
+        assert!(c.eval_batch(&genomes).is_empty());
+        assert!(c.stopped_early());
     }
 }

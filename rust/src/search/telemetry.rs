@@ -124,6 +124,94 @@ impl Outcome {
             ),
         ])
     }
+
+    /// Superset of [`Outcome::to_json`] that also carries the winning
+    /// genome and the population-mean curve, so an outcome can be
+    /// reconstructed losslessly with [`Outcome::from_json`]. Used by
+    /// [`crate::api::SearchReport`].
+    pub fn to_json_full(&self) -> Json {
+        let mut j = self.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert(
+                "best_genome".to_string(),
+                match &self.best_genome {
+                    Some(g) => Json::Arr(g.iter().map(|&x| Json::num(x as f64)).collect()),
+                    None => Json::Null,
+                },
+            );
+            o.insert(
+                "population_mean_curve".to_string(),
+                Json::Arr(
+                    self.population_mean_curve
+                        .iter()
+                        .map(|&(e, v)| Json::arr_f64(&[e as f64, v]))
+                        .collect(),
+                ),
+            );
+        }
+        j
+    }
+
+    /// Parse an outcome from either JSON form (`to_json` or
+    /// `to_json_full`); fields only the full form carries default to
+    /// empty.
+    pub fn from_json(j: &Json) -> anyhow::Result<Outcome> {
+        use anyhow::anyhow;
+        let s = |key: &str| -> anyhow::Result<String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("outcome JSON is missing string field '{key}'"))
+        };
+        let n = |key: &str| -> anyhow::Result<usize> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow!("outcome JSON is missing count field '{key}'"))
+        };
+        let curve_of = |key: &str| -> anyhow::Result<Vec<(usize, f64)>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|pt| {
+                    let pt = pt.as_arr().filter(|a| a.len() == 2);
+                    let e = pt.and_then(|a| a[0].as_u64());
+                    let v = pt.and_then(|a| a[1].as_f64());
+                    match (e, v) {
+                        (Some(e), Some(v)) => Ok((e as usize, v)),
+                        _ => {
+                            Err(anyhow!("outcome JSON field '{key}' must hold [evals, edp] pairs"))
+                        }
+                    }
+                })
+                .collect()
+        };
+        let best_genome = match j.get("best_genome") {
+            Some(Json::Arr(a)) => Some(
+                a.iter()
+                    .map(|g| {
+                        g.as_u64()
+                            .map(|x| x as u32)
+                            .ok_or_else(|| anyhow!("best_genome entries must be integers"))
+                    })
+                    .collect::<anyhow::Result<Vec<u32>>>()?,
+            ),
+            _ => None,
+        };
+        Ok(Outcome {
+            method: s("method")?,
+            workload: s("workload")?,
+            platform: s("platform")?,
+            evals: n("evals")?,
+            valid_evals: n("valid_evals")?,
+            cache_hits: n("cache_hits")?,
+            best_edp: j.get("best_edp").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
+            best_genome,
+            curve: curve_of("curve")?,
+            population_mean_curve: curve_of("population_mean_curve")?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +248,23 @@ mod tests {
         let j = o.to_json().dumps();
         assert!(j.contains("\"sparsemap\""));
         assert!(j.contains("\"best_edp\""));
+    }
+
+    #[test]
+    fn full_json_round_trips() {
+        let mut t = Telemetry::new();
+        t.record(&[1, 2, 3], &ok(10.0));
+        t.record(&[4, 5, 6], &ok(4.0));
+        t.push_population_mean(7.5);
+        let o = t.into_outcome("sparsemap", "mm3", "cloud");
+        let parsed = Json::parse(&o.to_json_full().dumps()).unwrap();
+        let o2 = Outcome::from_json(&parsed).unwrap();
+        assert_eq!(o2.method, o.method);
+        assert_eq!(o2.best_edp, o.best_edp);
+        assert_eq!(o2.best_genome, o.best_genome);
+        assert_eq!(o2.curve, o.curve);
+        assert_eq!(o2.population_mean_curve, o.population_mean_curve);
+        assert_eq!(o2.to_json_full(), o.to_json_full());
     }
 
     #[test]

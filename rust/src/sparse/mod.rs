@@ -58,7 +58,8 @@ impl SparseStrategy {
         let mut parts: Vec<String> = Vec::new();
         for (t, name) in names.iter().enumerate() {
             let stack: Vec<&str> = self.formats[t].iter().map(|f| f.short_name()).collect();
-            parts.push(format!("{name}:{}", if stack.is_empty() { "-".into() } else { stack.join("-") }));
+            let stack = if stack.is_empty() { "-".into() } else { stack.join("-") };
+            parts.push(format!("{name}:{stack}"));
         }
         let sg: Vec<String> = ["GLB", "PEBuf", "C"]
             .iter()

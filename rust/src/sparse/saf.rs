@@ -168,7 +168,8 @@ mod tests {
         let one = effect(SgMechanism::SkipPfromQ, dp, dq);
         assert!(both.cycles < one.cycles);
         assert!(both.p_energy <= one.p_energy);
-        assert!(control_overhead(SgMechanism::SkipBoth) > control_overhead(SgMechanism::SkipPfromQ));
+        let (skip_both, skip_one) = (SgMechanism::SkipBoth, SgMechanism::SkipPfromQ);
+        assert!(control_overhead(skip_both) > control_overhead(skip_one));
     }
 
     #[test]

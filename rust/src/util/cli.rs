@@ -1,8 +1,9 @@
 //! Tiny command-line parser (the vendor set has no `clap`).
 //!
 //! Grammar: `sparsemap <subcommand> [--flag] [--key value] [positional...]`.
-//! Flags may be given as `--key=value` or `--key value`. Unknown keys are
-//! reported with the subcommand's usage string.
+//! Flags may be given as `--key=value` or `--key value`. Callers validate
+//! parsed names against their known sets with [`Args::reject_unknown`],
+//! which points typos at the nearest valid option.
 
 use std::collections::BTreeMap;
 
@@ -69,6 +70,67 @@ impl Args {
                 .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
         }
     }
+
+    /// Reject any option or flag outside the known sets, suggesting the
+    /// nearest valid name — so a typo like `--budjet 500` errors out
+    /// instead of silently running with the default. Kind mismatches are
+    /// rejected too: a known option that swallowed no value (`--budget`
+    /// at the end of the line) or a known flag that swallowed one
+    /// (`--json spec.json`) would otherwise silently fall back to the
+    /// default, which is the exact failure this check exists to stop.
+    pub fn reject_unknown(&self, known_opts: &[&str], known_flags: &[&str]) -> anyhow::Result<()> {
+        for given in self.options.keys().map(String::as_str) {
+            if known_opts.contains(&given) {
+                continue;
+            }
+            if known_flags.contains(&given) {
+                anyhow::bail!(
+                    "'--{given}' is a flag and takes no value (it swallowed the next argument)"
+                );
+            }
+            anyhow::bail!("unknown option '--{given}'{}", suggest(given, known_opts, known_flags));
+        }
+        for given in self.flags.iter().map(String::as_str) {
+            if known_flags.contains(&given) {
+                continue;
+            }
+            if known_opts.contains(&given) {
+                anyhow::bail!("'--{given}' expects a value");
+            }
+            anyhow::bail!("unknown option '--{given}'{}", suggest(given, known_opts, known_flags));
+        }
+        Ok(())
+    }
+}
+
+/// A " (did you mean ...)" hint naming the known option closest to
+/// `given` by edit distance, if any is within a plausible typo radius.
+fn suggest(given: &str, known_opts: &[&str], known_flags: &[&str]) -> String {
+    known_opts
+        .iter()
+        .chain(known_flags)
+        .map(|&k| (levenshtein(given, k), k))
+        .filter(|&(d, _)| d <= 3)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, k)| format!(" (did you mean '--{k}'?)"))
+        .unwrap_or_default()
+}
+
+/// Classic two-row Levenshtein edit distance.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -121,5 +183,60 @@ mod tests {
         let a = parse(&["run"]);
         assert_eq!(a.opt_or("platform", "edge"), "edge");
         assert_eq!(a.opt_u64("budget", 20_000).unwrap(), 20_000);
+    }
+
+    #[test]
+    fn unknown_option_rejected_with_suggestion() {
+        let a = parse(&["search", "--budjet", "500"]);
+        let err = a.reject_unknown(&["budget", "seed"], &["pjrt"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--budjet"), "{msg}");
+        assert!(msg.contains("did you mean '--budget'"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse(&["search", "--pjrtt"]);
+        let err = a.reject_unknown(&["budget"], &["pjrt"]).unwrap_err();
+        assert!(err.to_string().contains("did you mean '--pjrt'"));
+    }
+
+    #[test]
+    fn known_args_pass() {
+        let a = parse(&["search", "--budget", "500", "--pjrt"]);
+        assert!(a.reject_unknown(&["budget"], &["pjrt"]).is_ok());
+    }
+
+    #[test]
+    fn option_missing_its_value_rejected() {
+        // `--budget` at end of line parses as a flag; it must not
+        // silently fall back to the default budget.
+        let a = parse(&["search", "--budget"]);
+        let msg = a.reject_unknown(&["budget"], &["pjrt"]).unwrap_err().to_string();
+        assert!(msg.contains("expects a value"), "{msg}");
+    }
+
+    #[test]
+    fn flag_given_a_value_rejected() {
+        // `--json spec.json` parses as an option and would silently eat
+        // the positional; reject it loudly.
+        let a = parse(&["run-spec", "--json", "spec.json"]);
+        let msg = a.reject_unknown(&["budget"], &["json"]).unwrap_err().to_string();
+        assert!(msg.contains("takes no value"), "{msg}");
+    }
+
+    #[test]
+    fn wildly_wrong_name_gets_no_suggestion() {
+        let a = parse(&["search", "--zzzzzzzzzz"]);
+        let msg = a.reject_unknown(&["budget"], &[]).unwrap_err().to_string();
+        assert!(!msg.contains("did you mean"), "{msg}");
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("budget", "budget"), 0);
+        assert_eq!(levenshtein("budjet", "budget"), 1);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
     }
 }

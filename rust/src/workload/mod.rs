@@ -4,10 +4,12 @@
 //! list of named iteration dimensions, per-tensor dimension projections and
 //! densities. SpMM is the native form; SpConv is lowered to an implicit
 //! GEMM ([`spconv`]). The paper's full benchmark suite (Table III) is
-//! provided by [`table3`].
+//! provided by [`table3`]; arbitrary custom contractions are built with
+//! [`Workload::custom`] or parsed from a JSON spec ([`spec`]).
 
 pub mod factorize;
 pub mod spconv;
+pub mod spec;
 pub mod table3;
 
 use crate::util::json::Json;
@@ -80,7 +82,21 @@ impl WorkloadKind {
             WorkloadKind::SpBMM => "SpBMM",
         }
     }
+
+    /// Parse a kind tag (case-insensitive). Inverse of [`Self::as_str`].
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "spmm" => Some(WorkloadKind::SpMM),
+            "spconv" => Some(WorkloadKind::SpConv),
+            "spbmm" => Some(WorkloadKind::SpBMM),
+            _ => None,
+        }
+    }
 }
+
+/// Largest supported iteration-space rank: permutation genes store 1-based
+/// Cantor codes in a `u32`, and `12! < 2^32 < 13!`.
+pub const MAX_RANK: usize = 12;
 
 /// A sparse tensor algebra workload (einsum contraction with densities).
 #[derive(Clone, Debug, PartialEq)]
@@ -142,6 +158,125 @@ impl Workload {
         }
         w.contraction = vec![2];
         w
+    }
+
+    /// Validated constructor for arbitrary einsum-shaped contractions —
+    /// the entry point for custom (non-Table-III) scenarios.
+    ///
+    /// `dims` are the named iteration dimensions; `tensors` are exactly
+    /// three `(name, dim indices, density)` triples in P, Q, Z order. A
+    /// non-positive Z density means "derive it from the operand densities"
+    /// (see [`output_density`]). `contraction` lists the reduced dims.
+    pub fn custom(
+        id: &str,
+        kind: WorkloadKind,
+        dims: Vec<(String, u64)>,
+        tensors: Vec<(String, Vec<usize>, f64)>,
+        contraction: Vec<usize>,
+    ) -> anyhow::Result<Workload> {
+        anyhow::ensure!(tensors.len() == NUM_TENSORS, "expected exactly 3 tensors (P, Q, Z)");
+        let built_dims: Vec<Dim> = dims.iter().map(|(n, s)| Dim::new(n, *s)).collect();
+        let contracted_sizes: f64 = contraction
+            .iter()
+            .map(|&d| dims.get(d).map_or(1.0, |&(_, s)| s as f64))
+            .product();
+        let roles = [TensorRole::InputA, TensorRole::InputB, TensorRole::Output];
+        let dp = tensors[TENSOR_P].2;
+        let dq = tensors[TENSOR_Q].2;
+        let tensors = tensors
+            .into_iter()
+            .zip(roles)
+            .map(|((name, dims, density), role)| {
+                let density = if role == TensorRole::Output && density <= 0.0 {
+                    output_density(dp, dq, contracted_sizes.max(1.0) as u64)
+                } else {
+                    density
+                };
+                TensorSpec { name, role, dims, density }
+            })
+            .collect();
+        let w = Workload { id: id.to_string(), kind, dims: built_dims, tensors, contraction };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Check the structural invariants every search path relies on. The
+    /// hard-coded constructors satisfy these by construction; custom
+    /// workloads (builder or JSON spec) are rejected with a message here.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        ensure!(!self.id.is_empty(), "workload id must not be empty");
+        ensure!(!self.dims.is_empty(), "workload needs at least one dimension");
+        ensure!(
+            self.rank() <= MAX_RANK,
+            "rank {} exceeds the supported maximum {MAX_RANK} (Cantor permutation \
+             codes must fit a u32 gene)",
+            self.rank()
+        );
+        let mut names = std::collections::HashSet::new();
+        for d in &self.dims {
+            ensure!(!d.name.is_empty(), "dimension names must not be empty");
+            ensure!(d.size >= 1, "dimension '{}' has size 0", d.name);
+            ensure!(names.insert(d.name.as_str()), "duplicate dimension name '{}'", d.name);
+        }
+        ensure!(
+            self.tensors.len() == NUM_TENSORS,
+            "expected exactly {NUM_TENSORS} tensors (P, Q, Z), got {}",
+            self.tensors.len()
+        );
+        let roles = [TensorRole::InputA, TensorRole::InputB, TensorRole::Output];
+        for (t, (spec, role)) in self.tensors.iter().zip(roles).enumerate() {
+            ensure!(
+                spec.role == role,
+                "tensor {t} ('{}') must have role {role:?} (fixed P, Q, Z order)",
+                spec.name
+            );
+            ensure!(
+                !spec.dims.is_empty(),
+                "tensor '{}' is projected onto no dimensions",
+                spec.name
+            );
+            let mut seen = std::collections::HashSet::new();
+            for &d in &spec.dims {
+                ensure!(
+                    d < self.rank(),
+                    "tensor '{}' references dimension index {d}, but the workload has \
+                     only {} dims",
+                    spec.name,
+                    self.rank()
+                );
+                ensure!(seen.insert(d), "tensor '{}' repeats dimension index {d}", spec.name);
+            }
+            ensure!(
+                spec.density > 0.0 && spec.density <= 1.0,
+                "tensor '{}' density {} is outside (0, 1]",
+                spec.name,
+                spec.density
+            );
+        }
+        ensure!(!self.contraction.is_empty(), "at least one contracted dimension is required");
+        let mut contracted = std::collections::HashSet::new();
+        for &d in &self.contraction {
+            ensure!(
+                d < self.rank(),
+                "contraction references dimension index {d}, but the workload has only {} dims",
+                self.rank()
+            );
+            ensure!(contracted.insert(d), "contraction repeats dimension '{}'", self.dims[d].name);
+            ensure!(
+                !self.tensors[TENSOR_Z].dims.contains(&d),
+                "contracted dimension '{}' must not be projected onto the output",
+                self.dims[d].name
+            );
+        }
+        for (i, d) in self.dims.iter().enumerate() {
+            ensure!(
+                self.tensors.iter().any(|t| t.dims.contains(&i)),
+                "dimension '{}' is projected onto no tensor",
+                d.name
+            );
+        }
+        Ok(())
     }
 
     /// Number of iteration dimensions.
@@ -271,5 +406,59 @@ mod tests {
     #[should_panic]
     fn zero_density_rejected() {
         Workload::spmm("t", 4, 4, 4, 0.0, 0.5);
+    }
+
+    #[test]
+    fn custom_matches_spmm_constructor() {
+        let built = Workload::custom(
+            "t",
+            WorkloadKind::SpMM,
+            vec![("M".into(), 32), ("K".into(), 64), ("N".into(), 48)],
+            vec![
+                ("P".into(), vec![0, 1], 0.5),
+                ("Q".into(), vec![1, 2], 0.25),
+                ("Z".into(), vec![0, 2], 0.0),
+            ],
+            vec![1],
+        )
+        .unwrap();
+        assert_eq!(built, Workload::spmm("t", 32, 64, 48, 0.5, 0.25));
+    }
+
+    #[test]
+    fn builtin_constructors_validate() {
+        assert!(Workload::spmm("t", 32, 64, 48, 0.5, 0.25).validate().is_ok());
+        assert!(Workload::spbmm("b", 8, 16, 32, 16, 0.5, 0.5).validate().is_ok());
+    }
+
+    #[test]
+    fn custom_rejects_structural_errors() {
+        let dims = || vec![("M".to_string(), 8), ("K".to_string(), 8), ("N".to_string(), 8)];
+        let tensors = || {
+            vec![
+                ("P".to_string(), vec![0, 1], 0.5),
+                ("Q".to_string(), vec![1, 2], 0.5),
+                ("Z".to_string(), vec![0, 2], 0.0),
+            ]
+        };
+        // Contracted dim projected onto the output.
+        assert!(Workload::custom("t", WorkloadKind::SpMM, dims(), tensors(), vec![0]).is_err());
+        // No contraction at all.
+        assert!(Workload::custom("t", WorkloadKind::SpMM, dims(), tensors(), vec![]).is_err());
+        // Repeated contraction entries (would skew the derived density).
+        assert!(Workload::custom("t", WorkloadKind::SpMM, dims(), tensors(), vec![1, 1]).is_err());
+        // Duplicate dim names.
+        let mut dd = dims();
+        dd[2].0 = "M".to_string();
+        assert!(Workload::custom("t", WorkloadKind::SpMM, dd, tensors(), vec![1]).is_err());
+        // Rank above the Cantor-code ceiling.
+        let many: Vec<(String, u64)> = (0..=MAX_RANK).map(|i| (format!("D{i}"), 2)).collect();
+        let wide = vec![
+            ("P".to_string(), (0..MAX_RANK).collect::<Vec<_>>(), 0.5),
+            ("Q".to_string(), vec![MAX_RANK - 1, MAX_RANK], 0.5),
+            ("Z".to_string(), (0..MAX_RANK - 1).chain([MAX_RANK]).collect(), 1.0),
+        ];
+        assert!(Workload::custom("t", WorkloadKind::SpMM, many, wide, vec![MAX_RANK - 1])
+            .is_err());
     }
 }

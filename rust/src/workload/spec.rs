@@ -1,0 +1,289 @@
+//! JSON workload specs — the serialization format behind custom
+//! scenarios (`sparsemap run-spec`, [`crate::api::SearchRequest`]).
+//!
+//! Two shapes are accepted:
+//!
+//! * **Generic einsum** — named dims, per-tensor projections (by dim
+//!   name) and densities; works for any contraction the framework can
+//!   search:
+//!
+//! ```json
+//! {
+//!   "id": "my_spmm",
+//!   "kind": "SpMM",
+//!   "dims": [{"name": "M", "size": 512}, {"name": "K", "size": 2048},
+//!            {"name": "N", "size": 512}],
+//!   "tensors": [
+//!     {"name": "P", "dims": ["M", "K"], "density": 0.3},
+//!     {"name": "Q", "dims": ["K", "N"], "density": 0.5},
+//!     {"name": "Z", "dims": ["M", "N"]}
+//!   ],
+//!   "contraction": ["K"]
+//! }
+//! ```
+//!
+//!   The output tensor's density may be omitted (derived from the operand
+//!   densities, see [`super::output_density`]).
+//!
+//! * **SpConv shorthand** — a convolution layer lowered to implicit GEMM
+//!   exactly like the Table III conv rows:
+//!
+//! ```json
+//! {
+//!   "id": "my_conv",
+//!   "kind": "SpConv",
+//!   "conv": {"c": 64, "h": 32, "w": 32, "kout": 128, "r": 3, "s": 3},
+//!   "density_act": 0.45,
+//!   "density_wgt": 0.25
+//! }
+//! ```
+
+use super::spconv::{lower_conv, ConvShape};
+use super::{Workload, WorkloadKind, NUM_TENSORS};
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Context, Result};
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("workload spec is missing '{key}'"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    req(j, key)?.as_u64().ok_or_else(|| anyhow!("workload spec field '{key}' must be an integer"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    req(j, key)?.as_f64().ok_or_else(|| anyhow!("workload spec field '{key}' must be a number"))
+}
+
+/// Parse a JSON workload spec (see the module docs for the format).
+pub fn workload_from_spec(j: &Json) -> Result<Workload> {
+    ensure!(j.as_obj().is_some(), "workload spec must be a JSON object");
+    let id = req(j, "id")?
+        .as_str()
+        .ok_or_else(|| anyhow!("workload spec field 'id' must be a string"))?;
+    let kind_str = j.get("kind").and_then(Json::as_str).unwrap_or("SpMM");
+    let kind = WorkloadKind::parse(kind_str)
+        .ok_or_else(|| anyhow!("unknown workload kind '{kind_str}' (SpMM|SpConv|SpBMM)"))?;
+
+    if let Some(conv) = j.get("conv") {
+        ensure!(
+            kind == WorkloadKind::SpConv,
+            "a 'conv' block requires \"kind\": \"SpConv\" (got {})",
+            kind.as_str()
+        );
+        let shape = ConvShape {
+            c: req_u64(conv, "c")?,
+            h: req_u64(conv, "h")?,
+            w: req_u64(conv, "w")?,
+            kout: req_u64(conv, "kout")?,
+            r: req_u64(conv, "r")?,
+            s: req_u64(conv, "s")?,
+        };
+        let d_act = req_f64(j, "density_act")?;
+        let d_wgt = req_f64(j, "density_wgt")?;
+        ensure!(
+            d_act > 0.0 && d_act <= 1.0 && d_wgt > 0.0 && d_wgt <= 1.0,
+            "conv densities must be in (0, 1]"
+        );
+        ensure!(
+            shape.c >= 1 && shape.h >= 1 && shape.w >= 1 && shape.kout >= 1 && shape.r >= 1
+                && shape.s >= 1,
+            "conv extents must all be >= 1"
+        );
+        let w = lower_conv(id, shape, d_act, d_wgt);
+        w.validate().with_context(|| format!("conv workload '{id}'"))?;
+        return Ok(w);
+    }
+
+    let dims_json = req(j, "dims")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("workload spec field 'dims' must be an array"))?;
+    let mut dims: Vec<(String, u64)> = Vec::with_capacity(dims_json.len());
+    for d in dims_json {
+        let name = req(d, "name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("dim 'name' must be a string"))?;
+        dims.push((name.to_string(), req_u64(d, "size")?));
+    }
+    let resolve = |name: &str| -> Result<usize> {
+        dims.iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| anyhow!("'{name}' does not name a declared dimension"))
+    };
+
+    let tensors_json = req(j, "tensors")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("workload spec field 'tensors' must be an array"))?;
+    ensure!(
+        tensors_json.len() == NUM_TENSORS,
+        "workload spec needs exactly {NUM_TENSORS} tensors (P, Q, Z order), got {}",
+        tensors_json.len()
+    );
+    let default_names = ["P", "Q", "Z"];
+    let mut tensors: Vec<(String, Vec<usize>, f64)> = Vec::with_capacity(NUM_TENSORS);
+    for (t, tj) in tensors_json.iter().enumerate() {
+        let name = tj.get("name").and_then(Json::as_str).unwrap_or(default_names[t]);
+        let proj = req(tj, "dims")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensor '{name}' field 'dims' must be an array of dim names"))?;
+        let mut refs = Vec::with_capacity(proj.len());
+        for p in proj {
+            let dim_name = p
+                .as_str()
+                .ok_or_else(|| anyhow!("tensor '{name}' projections must be dim names"))?;
+            refs.push(resolve(dim_name).with_context(|| format!("tensor '{name}'"))?);
+        }
+        // Z's density defaults to "derive from the inputs" (<= 0 sentinel).
+        let density = match tj.get("density") {
+            Some(d) => {
+                d.as_f64().ok_or_else(|| anyhow!("tensor '{name}' density must be a number"))?
+            }
+            None if t == NUM_TENSORS - 1 => 0.0,
+            None => anyhow::bail!("tensor '{name}' is missing 'density'"),
+        };
+        tensors.push((name.to_string(), refs, density));
+    }
+
+    let contraction_json = req(j, "contraction")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("workload spec field 'contraction' must be an array of dim names"))?;
+    let mut contraction = Vec::with_capacity(contraction_json.len());
+    for c in contraction_json {
+        let dim_name =
+            c.as_str().ok_or_else(|| anyhow!("contraction entries must be dim names"))?;
+        contraction.push(resolve(dim_name).context("contraction")?);
+    }
+
+    Workload::custom(id, kind, dims, tensors, contraction)
+        .with_context(|| format!("workload '{id}'"))
+}
+
+/// Emit the generic-einsum JSON spec for a workload. Inverse of
+/// [`workload_from_spec`]: parsing the result reproduces the workload
+/// exactly (densities are emitted explicitly, including the output's).
+pub fn workload_to_spec(w: &Workload) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(&w.id)),
+        ("kind", Json::str(w.kind.as_str())),
+        (
+            "dims",
+            Json::Arr(
+                w.dims
+                    .iter()
+                    .map(|d| {
+                        Json::obj(vec![
+                            ("name", Json::str(&d.name)),
+                            ("size", Json::num(d.size as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "tensors",
+            Json::Arr(
+                w.tensors
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("name", Json::str(&t.name)),
+                            (
+                                "dims",
+                                Json::Arr(
+                                    t.dims.iter().map(|&d| Json::str(&w.dims[d].name)).collect(),
+                                ),
+                            ),
+                            ("density", Json::num(t.density)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "contraction",
+            Json::Arr(w.contraction.iter().map(|&d| Json::str(&w.dims[d].name)).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spmm_spec() -> String {
+        r#"{
+            "id": "custom_mm",
+            "kind": "SpMM",
+            "dims": [{"name": "M", "size": 96}, {"name": "K", "size": 128},
+                     {"name": "N", "size": 64}],
+            "tensors": [
+                {"name": "P", "dims": ["M", "K"], "density": 0.3},
+                {"name": "Q", "dims": ["K", "N"], "density": 0.5},
+                {"name": "Z", "dims": ["M", "N"]}
+            ],
+            "contraction": ["K"]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_generic_spmm() {
+        let w = workload_from_spec(&Json::parse(&spmm_spec()).unwrap()).unwrap();
+        assert_eq!(w.id, "custom_mm");
+        assert_eq!(w.rank(), 3);
+        assert_eq!(w.tensors[0].dims, vec![0, 1]);
+        assert_eq!(w.contraction, vec![1]);
+        assert!(w.tensors[2].density > 0.0, "derived output density");
+    }
+
+    #[test]
+    fn round_trips_through_spec_json() {
+        let w = workload_from_spec(&Json::parse(&spmm_spec()).unwrap()).unwrap();
+        let j = workload_to_spec(&w);
+        let w2 = workload_from_spec(&Json::parse(&j.dumps()).unwrap()).unwrap();
+        assert_eq!(w, w2);
+        // Table III rows round-trip too.
+        for w in crate::workload::table3::all().into_iter().take(4) {
+            let j = workload_to_spec(&w);
+            assert_eq!(workload_from_spec(&j).unwrap(), w);
+        }
+    }
+
+    #[test]
+    fn parses_conv_shorthand() {
+        let src = r#"{
+            "id": "c", "kind": "SpConv",
+            "conv": {"c": 64, "h": 16, "w": 16, "kout": 128, "r": 3, "s": 3},
+            "density_act": 0.45, "density_wgt": 0.25
+        }"#;
+        let w = workload_from_spec(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(w.kind, WorkloadKind::SpConv);
+        assert_eq!(w.dims[0].size, 128); // Kout becomes GEMM M
+    }
+
+    #[test]
+    fn rejects_bad_dim_ref() {
+        let src = spmm_spec().replace("\"contraction\": [\"K\"]", "\"contraction\": [\"X\"]");
+        let err = workload_from_spec(&Json::parse(&src).unwrap()).unwrap_err();
+        assert!(err.root_cause().contains('X'), "{err:?}");
+    }
+
+    #[test]
+    fn rejects_zero_density() {
+        let src = spmm_spec().replace("\"density\": 0.3", "\"density\": 0.0");
+        assert!(workload_from_spec(&Json::parse(&src).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_contracted_output_dim() {
+        let src = spmm_spec().replace("\"dims\": [\"M\", \"N\"]", "\"dims\": [\"M\", \"K\"]");
+        assert!(workload_from_spec(&Json::parse(&src).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        for src in ["{}", r#"{"id": "x"}"#, r#"{"id": "x", "kind": "nope"}"#] {
+            assert!(workload_from_spec(&Json::parse(src).unwrap()).is_err(), "{src}");
+        }
+    }
+}

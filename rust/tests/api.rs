@@ -1,0 +1,189 @@
+//! Integration tests for the `sparsemap::api` front door: JSON
+//! round-trips, custom-spec validation, and bit-for-bit parity between
+//! the API path and the raw seed-era wiring.
+
+use sparsemap::api::{SearchReport, SearchRequest};
+use sparsemap::arch::Platform;
+use sparsemap::baselines::run_method;
+use sparsemap::search::{Backend, EvalContext};
+use sparsemap::util::json::Json;
+use sparsemap::workload::spec::workload_from_spec;
+use sparsemap::workload::{table3, Workload, WorkloadKind};
+
+/// A workload/platform pair that exists nowhere in the paper's tables.
+fn custom_pair() -> (Workload, Platform) {
+    let w = Workload::custom(
+        "offmenu_mm",
+        WorkloadKind::SpMM,
+        vec![("M".into(), 96), ("K".into(), 192), ("N".into(), 80)],
+        vec![
+            ("P".into(), vec![0, 1], 0.35),
+            ("Q".into(), vec![1, 2], 0.15),
+            ("Z".into(), vec![0, 2], 0.0),
+        ],
+        vec![1],
+    )
+    .unwrap();
+    let p = Platform::custom("offmenu", 12, 12, 8, 8 << 10, 2 << 20, 12e9, 6e8, 64.0, 16.0)
+        .unwrap();
+    (w, p)
+}
+
+#[test]
+fn api_search_matches_seed_path_bit_for_bit() {
+    // The seed-era wiring: hand-built backend + context + run_method.
+    let w = table3::by_id("mm3").unwrap();
+    let plat = Platform::cloud();
+    let ctx = EvalContext::new(Backend::native(w, plat), 400);
+    let seed_path = run_method("sparsemap", ctx, 42).unwrap();
+
+    // The same arm through the API.
+    let api_path = SearchRequest::new()
+        .workload_named("mm3")
+        .platform_named("cloud")
+        .budget(400)
+        .seed(42)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .into_outcome();
+
+    assert_eq!(api_path.best_edp.to_bits(), seed_path.best_edp.to_bits());
+    assert_eq!(api_path.best_genome, seed_path.best_genome);
+    assert_eq!(api_path.curve, seed_path.curve);
+    assert_eq!(api_path.evals, seed_path.evals);
+    assert_eq!(api_path.cache_hits, seed_path.cache_hits);
+}
+
+#[test]
+fn custom_pair_runs_end_to_end_with_json_round_trip() {
+    let (w, p) = custom_pair();
+    let report = SearchRequest::new()
+        .workload(w)
+        .platform(p)
+        .method("sparsemap")
+        .budget(600)
+        .seed(3)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(report.outcome.workload, "offmenu_mm");
+    assert_eq!(report.outcome.platform, "offmenu");
+    assert!(report.outcome.evals <= 600);
+    assert!(report.outcome.best_edp.is_finite(), "found a valid design");
+
+    let parsed = SearchReport::from_json(&Json::parse(&report.to_json().pretty()).unwrap())
+        .unwrap();
+    assert_eq!(parsed.request, report.request);
+    assert_eq!(parsed.outcome.best_edp.to_bits(), report.outcome.best_edp.to_bits());
+    assert_eq!(parsed.outcome.best_genome, report.outcome.best_genome);
+    assert_eq!(parsed.to_json(), report.to_json());
+}
+
+#[test]
+fn spec_file_request_round_trips_and_runs() {
+    // The same shape a `run-spec` file has: custom workload + platform,
+    // defined only in JSON.
+    let src = r#"{
+        "workload": {
+            "id": "spec_only",
+            "kind": "SpMM",
+            "dims": [{"name": "M", "size": 64}, {"name": "K", "size": 96},
+                     {"name": "N", "size": 48}],
+            "tensors": [
+                {"name": "P", "dims": ["M", "K"], "density": 0.4},
+                {"name": "Q", "dims": ["K", "N"], "density": 0.3},
+                {"name": "Z", "dims": ["M", "N"]}
+            ],
+            "contraction": ["K"]
+        },
+        "platform": {
+            "name": "spec_plat", "pe_rows": 8, "pe_cols": 16, "macs_per_pe": 2,
+            "pe_buf_kib": 4, "glb_kib": 512, "dram_gbps": 6, "clock_ghz": 0.7,
+            "glb_bw_words_per_cycle": 48, "pe_bw_words_per_cycle": 8
+        },
+        "method": "random",
+        "budget": 200,
+        "seed": 9
+    }"#;
+    let req = SearchRequest::from_json(&Json::parse(src).unwrap()).unwrap();
+    let reparsed = Json::parse(&req.to_json().dumps()).unwrap();
+    assert_eq!(SearchRequest::from_json(&reparsed).unwrap(), req);
+
+    let report = req.build().unwrap().run().unwrap();
+    assert_eq!(report.outcome.workload, "spec_only");
+    assert_eq!(report.outcome.platform, "spec_plat");
+    assert_eq!(report.outcome.evals, 200);
+    let rt = SearchReport::from_json(&Json::parse(&report.to_json().dumps()).unwrap()).unwrap();
+    assert_eq!(rt.to_json(), report.to_json());
+}
+
+#[test]
+fn workload_spec_validation_errors() {
+    let base = r#"{
+        "id": "v", "kind": "SpMM",
+        "dims": [{"name": "M", "size": 8}, {"name": "K", "size": 8},
+                 {"name": "N", "size": 8}],
+        "tensors": [
+            {"name": "P", "dims": ["M", "K"], "density": 0.5},
+            {"name": "Q", "dims": ["K", "N"], "density": 0.5},
+            {"name": "Z", "dims": ["M", "N"]}
+        ],
+        "contraction": ["K"]
+    }"#;
+    assert!(workload_from_spec(&Json::parse(base).unwrap()).is_ok());
+    // Bad dim reference.
+    let bad_ref = base.replace(r#"["M", "K"]"#, r#"["M", "Bogus"]"#);
+    assert!(workload_from_spec(&Json::parse(&bad_ref).unwrap()).is_err());
+    // Zero density.
+    let zero_density = base.replace("0.5", "0");
+    assert!(workload_from_spec(&Json::parse(&zero_density).unwrap()).is_err());
+    // Zero-size dimension.
+    let zero_dim = base.replace(r#"{"name": "K", "size": 8}"#, r#"{"name": "K", "size": 0}"#);
+    assert!(workload_from_spec(&Json::parse(&zero_dim).unwrap()).is_err());
+}
+
+#[test]
+fn builder_validation_errors() {
+    // Zero density through the builder.
+    assert!(Workload::custom(
+        "w",
+        WorkloadKind::SpMM,
+        vec![("M".into(), 8), ("K".into(), 8), ("N".into(), 8)],
+        vec![
+            ("P".into(), vec![0, 1], 0.0),
+            ("Q".into(), vec![1, 2], 0.5),
+            ("Z".into(), vec![0, 2], 0.0),
+        ],
+        vec![1],
+    )
+    .is_err());
+    // Out-of-range dim index.
+    assert!(Workload::custom(
+        "w",
+        WorkloadKind::SpMM,
+        vec![("M".into(), 8), ("K".into(), 8), ("N".into(), 8)],
+        vec![
+            ("P".into(), vec![0, 7], 0.5),
+            ("Q".into(), vec![1, 2], 0.5),
+            ("Z".into(), vec![0, 2], 0.0),
+        ],
+        vec![1],
+    )
+    .is_err());
+    // Non-positive PE grid.
+    assert!(Platform::custom("p", 16, 0, 1, 1 << 10, 128 << 10, 1e9, 2e8, 8.0, 2.0).is_err());
+    // A request wrapping an invalid custom platform fails at build().
+    let mut bad = Platform::mobile();
+    bad.pe_rows = 0;
+    assert!(SearchRequest::new().platform(bad).budget(10).build().is_err());
+}
+
+#[test]
+fn named_request_unknown_ids_fail_at_build() {
+    assert!(SearchRequest::new().workload_named("mm999").budget(10).build().is_err());
+    assert!(SearchRequest::new().platform_named("datacenter").budget(10).build().is_err());
+    assert!(SearchRequest::new().method("annealing").budget(10).build().is_err());
+}
