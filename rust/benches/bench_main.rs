@@ -10,7 +10,7 @@
 use sparsemap::arch::Platform;
 use sparsemap::baselines::run_method;
 use sparsemap::model::NativeEvaluator;
-use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, table4, ExpConfig};
+use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, patterns, table4, ExpConfig};
 use sparsemap::search::{Backend, EvalContext};
 use sparsemap::util::rng::Pcg64;
 use sparsemap::workload::table3;
@@ -112,6 +112,32 @@ fn main() {
             }
         }),
     });
+    // Per-tile occupancy queries on the density models: these run inside
+    // every fitness call (per-rank slot probabilities + per-tensor
+    // sizing ratios), so they must stay in the tens-of-ns range.
+    benches.push(Bench {
+        name: "density_model_occupancy_1m_queries",
+        runs: 3,
+        items: 1_000_000,
+        f: Box::new(|| {
+            use sparsemap::sparsity::DensityModel;
+            let models = [
+                DensityModel::uniform(0.1),
+                DensityModel::block(64, 0.1),
+                DensityModel::banded(102, 1024),
+                DensityModel::row_skewed(0.6, 0.1),
+                DensityModel::measured((0..32).map(|i| (i as f64 + 0.5) / 64.0).collect()),
+            ];
+            let tiles = [16.0, 256.0, 4096.0, 65_536.0];
+            let mut acc = 0.0f64;
+            for i in 0..1_000_000usize {
+                let m = &models[i % models.len()];
+                let t = tiles[(i / models.len()) % tiles.len()];
+                acc += m.slot_prob(t) + m.sizing_ratio(t);
+            }
+            std::hint::black_box(acc);
+        }),
+    });
     // Compile the artifact once; the bench measures steady-state
     // batched evaluation (what a search actually pays per generation).
     #[cfg(feature = "xla")]
@@ -208,6 +234,15 @@ fn main() {
         items: 0,
         f: Box::new(move || {
             std::hint::black_box(fig18::run_arms(&c18));
+        }),
+    });
+    let cpat = cfg(600);
+    benches.push(Bench {
+        name: "patterns_sweep_3_arms_600",
+        runs: 1,
+        items: 3 * 600,
+        f: Box::new(move || {
+            std::hint::black_box(patterns::run_arms(&cpat));
         }),
     });
     let c4 = cfg(1_000);

@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     // --- 3. functionally instantiate: run the workload tile ----------------
     let demo = SpmmDemo::new(&rt)?;
     let (m, k, n) = (demo.m, demo.k, demo.n);
-    let (dp, dq) = (workload.tensors[0].density, workload.tensors[1].density);
+    let (dp, dq) = (workload.tensors[0].density.avg(), workload.tensors[1].density.avg());
     let mut rng = Pcg64::seeded(7);
     let p: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
     let q: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();

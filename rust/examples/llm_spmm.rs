@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
             w.dims[1].size,
             w.dims[1].size,
             w.dims[2].size,
-            100.0 * w.tensors[1].density
+            100.0 * w.tensors[1].density.avg()
         );
     }
 

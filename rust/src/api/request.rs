@@ -293,6 +293,38 @@ mod tests {
     }
 
     #[test]
+    fn structured_density_round_trips_and_bad_density_is_typed_error() {
+        use crate::sparsity::DensityModel;
+        use crate::workload::WorkloadKind;
+        let w = Workload::custom_models(
+            "blocky",
+            WorkloadKind::SpMM,
+            vec![("M".into(), 64), ("K".into(), 256), ("N".into(), 64)],
+            vec![
+                ("P".into(), vec![0, 1], Some(DensityModel::block(16, 0.2))),
+                ("Q".into(), vec![1, 2], Some(DensityModel::row_skewed(0.5, 0.4))),
+                ("Z".into(), vec![0, 2], None),
+            ],
+            vec![1],
+        )
+        .unwrap();
+        let r = SearchRequest::new().workload(w).budget(100);
+        let j = Json::parse(&r.to_json().dumps()).unwrap();
+        assert_eq!(SearchRequest::from_json(&j).unwrap(), r);
+
+        // A bad density reaches the API as a typed validation error (it
+        // used to be an assert panic in the workload constructor).
+        let bad = Workload::spmm("bad", 8, 8, 8, 0.0, 0.5);
+        let err = SearchRequest::new()
+            .workload(bad)
+            .budget(10)
+            .build()
+            .err()
+            .expect("bad density must fail request validation");
+        assert!(format!("{err:?}").contains("density"), "{err:?}");
+    }
+
+    #[test]
     fn huge_seed_round_trips_losslessly() {
         let r = SearchRequest::new().seed(u64::MAX).workload_named("mm1");
         let j = Json::parse(&r.to_json().dumps()).unwrap();

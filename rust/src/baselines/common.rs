@@ -20,8 +20,8 @@ pub fn manual_strategy_genes(spec: &GenomeSpec, w: &Workload) -> Vec<(usize, u32
             1 // bitmask
         }
     };
-    let dp = w.tensors[TENSOR_P].density;
-    let dq = w.tensors[TENSOR_Q].density;
+    let dp = w.density(TENSOR_P);
+    let dq = w.density(TENSOR_Q);
     for slot in 0..5 {
         out.push((spec.format_start + slot, fmt_for(dp)));
         out.push((spec.format_start + 5 + slot, fmt_for(dq)));

@@ -34,6 +34,17 @@
 //!   submissions, not distinct designs, so cached and uncached arms stay
 //!   comparable. Caching never changes a trajectory, only its cost.
 //!
+//! ## Structured sparsity patterns — [`sparsity`]
+//!
+//! Every workload tensor carries a [`sparsity::DensityModel`] rather
+//! than a bare scalar: uniform (the legacy scalar, bit-for-bit
+//! compatible), block, banded, power-law-row and measured-histogram
+//! patterns. The cost model consumes per-rank slot occupancies,
+//! tail-quantile tile provisioning and effectual-MAC fractions from the
+//! model, so the *shape* of sparsity — not just its amount — steers the
+//! search (`sparsemap patterns` demonstrates the outcome shift; fit a
+//! model to a real tensor with `sparsemap inspect-tensor <file>`).
+//!
 //! ## Programmatic use — start at [`api`]
 //!
 //! [`api`] is the crate's front door: build a [`api::SearchRequest`]
@@ -57,6 +68,7 @@ pub mod report;
 pub mod runtime;
 pub mod search;
 pub mod sparse;
+pub mod sparsity;
 pub mod util;
 pub mod workload;
 
@@ -69,6 +81,7 @@ pub mod prelude {
     pub use crate::model::{EvalResult, NativeEvaluator};
     pub use crate::search::{Progress, SearchControl, SearchObserver};
     pub use crate::sparse::{RankFormat, SgMechanism, SparseStrategy};
+    pub use crate::sparsity::DensityModel;
     pub use crate::util::rng::Pcg64;
     pub use crate::workload::{Workload, WorkloadKind};
 }

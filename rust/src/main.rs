@@ -11,7 +11,8 @@ use sparsemap::arch::Platform;
 use sparsemap::es::sensitivity::calibrate;
 use sparsemap::es::CalibConfig;
 use sparsemap::genome::{decode, describe};
-use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, table4, ExpConfig};
+use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, patterns, table4, ExpConfig};
+use sparsemap::sparsity::inspect;
 use sparsemap::util::cli::Args;
 use sparsemap::util::json::Json;
 use sparsemap::util::rng::Pcg64;
@@ -31,6 +32,9 @@ Experiment commands (one per paper table/figure):
   fig17b               E5: valid-point ratio per platform
   fig18                E7: ablation convergence (es-direct / es-pfce / full)
   table4               E6/E9: full 28x3 EDP matrix (--summary for ratios only)
+  patterns             sparsity-pattern sweep: best design/EDP under
+                         uniform vs block vs banded operand sparsity at
+                         equal mean density
 
 Utility commands:
   search               run one search arm
@@ -45,6 +49,9 @@ Utility commands:
                          winner
   calibrate            run high-sensitivity gene calibration and print S(v)
                          --workload mm3 --platform cloud
+  inspect-tensor FILE  parse a sparse tensor file (COO/MatrixMarket or
+                         SMTX), fit a density model and print the
+                         paste-ready "density" spec + row histogram
   workloads            list the Table III workload suite
   platforms            list the Table II platforms
   demo                 run the AOT gated-SpMM artifact through PJRT
@@ -206,6 +213,18 @@ fn cmd_run_spec(args: &Args) -> anyhow::Result<()> {
     run_and_report(req, args)
 }
 
+fn cmd_inspect_tensor(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: sparsemap inspect-tensor <file>"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read tensor file '{path}': {e}"))?;
+    let report = inspect::inspect(&text).map_err(|e| e.context(format!("'{path}'")))?;
+    print!("{report}");
+    Ok(())
+}
+
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     let cfg = exp_config(args)?;
     let session = SearchRequest::new()
@@ -282,9 +301,11 @@ fn main() -> anyhow::Result<()> {
                 .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
             println!("{}", table4::run(&cfg, subset, args.flag("summary"))?);
         }
+        "patterns" => println!("{}", patterns::run(&cfg)?),
         "search" => cmd_search(&args)?,
         "run-spec" => cmd_run_spec(&args)?,
         "calibrate" => cmd_calibrate(&args)?,
+        "inspect-tensor" => cmd_inspect_tensor(&args)?,
         "demo" => cmd_demo()?,
         "workloads" => {
             for w in table3::all() {
@@ -295,8 +316,8 @@ fn main() -> anyhow::Result<()> {
                     w.id,
                     w.kind.as_str(),
                     dims.join(" "),
-                    w.tensors[0].density,
-                    w.tensors[1].density
+                    w.tensors[0].density.avg(),
+                    w.tensors[1].density.avg()
                 );
             }
         }

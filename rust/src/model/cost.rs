@@ -214,6 +214,52 @@ mod tests {
     }
 
     #[test]
+    fn block_pattern_changes_compressed_cost() {
+        use crate::sparsity::DensityModel;
+        use crate::workload::WorkloadKind;
+        // Same mean density, clustered vs uniform nonzeros: clustered
+        // coordinates compress better, so the same compressed design is
+        // cheaper — the pattern is decision-relevant, not cosmetic.
+        let mk = |model: DensityModel| {
+            Workload::custom_models(
+                "t",
+                WorkloadKind::SpMM,
+                vec![("M".into(), 32), ("K".into(), 64), ("N".into(), 32)],
+                vec![
+                    ("P".into(), vec![0, 1], Some(model)),
+                    ("Q".into(), vec![1, 2], Some(DensityModel::uniform(0.3))),
+                    ("Z".into(), vec![0, 2], None),
+                ],
+                vec![1],
+            )
+            .unwrap()
+        };
+        let w_u = mk(DensityModel::uniform(0.1));
+        let w_b = mk(DensityModel::block(16, 0.1));
+        let p = Platform::mobile();
+        let spec = GenomeSpec::for_workload(&w_u);
+        let mut g = vec![1u32; spec.len()];
+        for i in spec.format_start..spec.len() {
+            g[i] = 0;
+        }
+        for i in spec.factor_start..spec.format_start {
+            g[i] = 2; // tile at L2_T so ranks materialize in the GLB
+        }
+        for s in 0..5 {
+            g[spec.format_start + s] = 3; // P: coordinate payload
+        }
+        let pv = platform_vector(&p);
+        let c_u = evaluate_features(&extract(&decode(&spec, &w_u, &g), &w_u, &p), &pv);
+        let c_b = evaluate_features(&extract(&decode(&spec, &w_b, &g), &w_b, &p), &pv);
+        assert!(
+            c_b.energy_pj < c_u.energy_pj,
+            "block {} vs uniform {}",
+            c_b.energy_pj,
+            c_u.energy_pj
+        );
+    }
+
+    #[test]
     fn gating_saves_energy_not_cycles() {
         let w = Workload::spmm("t", 32, 32, 32, 0.3, 0.3);
         let p = Platform::mobile();

@@ -15,7 +15,8 @@
 use crate::arch::{Boundary, Platform};
 use crate::genome::{tensor_ranks, Design};
 use crate::mapping::{loopnest, MapLevel};
-use crate::sparse::{control_overhead, effect, stack_storage, RankFormat};
+use crate::sparse::{control_overhead, effect, stack_storage_model, RankFormat};
+use crate::sparsity::effectual_frac;
 use crate::workload::{Workload, NUM_TENSORS, TENSOR_P, TENSOR_Q, TENSOR_Z};
 
 use super::validity::structural_problems;
@@ -101,7 +102,7 @@ fn tile_compression(
     if extents.is_empty() || dense <= 1.0 {
         return (1.0, 0.0);
     }
-    let (data, meta) = stack_storage(&extents, &formats, w.tensors[t].density);
+    let (data, meta) = stack_storage_model(&extents, &formats, &w.tensors[t].density);
     ((data + meta) / dense, meta / dense)
 }
 
@@ -109,9 +110,13 @@ fn tile_compression(
 pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
     let mut f = [0.0f64; NUM_FEATURES];
     let m = &design.mapping;
-    let dp = w.tensors[TENSOR_P].density;
-    let dq = w.tensors[TENSOR_Q].density;
-    let dz = w.tensors[TENSOR_Z].density;
+    // S/G effects and the density features consume the mean densities;
+    // the structured pattern shape enters through per-rank slot
+    // occupancy (tile_compression) and tail-quantile tile provisioning
+    // (capacity accounting below).
+    let dp = w.density(TENSOR_P);
+    let dq = w.density(TENSOR_Q);
+    let dz = w.density(TENSOR_Z);
 
     // Hot path: flatten the nest once and derive the three boundary loop
     // lists and per-tensor rank lists from it (profiling showed repeated
@@ -212,9 +217,14 @@ pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
     f[F_SG_CYCLES_B2] = sg_l3.cycles;
     f[F_MAC_ENERGY_FRAC] = sg_c.p_energy.min(sg_c.q_energy);
     // Skips anywhere shorten the effectual compute stream; floor at the
-    // intrinsic effectual fraction dp*dq.
-    f[F_COMPUTE_CYCLE_FRAC] =
-        (sg_l2.cycles * sg_l3.cycles * sg_c.cycles).max(dp * dq).min(1.0);
+    // intrinsic effectual-MAC fraction of the operand patterns (for
+    // uniform models exactly the legacy dp*dq).
+    f[F_COMPUTE_CYCLE_FRAC] = (sg_l2.cycles * sg_l3.cycles * sg_c.cycles)
+        .max(effectual_frac(
+            &w.tensors[TENSOR_P].density,
+            &w.tensors[TENSOR_Q].density,
+        ))
+        .min(1.0);
     f[F_CTRL_B1] = control_overhead(design.strategy.sg[0]);
     f[F_CTRL_B2] = control_overhead(design.strategy.sg[1]);
     f[F_CTRL_C] = control_overhead(design.strategy.sg[2]);
@@ -223,11 +233,18 @@ pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
     f[F_TOTAL_OPS] = w.total_ops();
     f[F_ACTIVE_PES] = pe_fanout.max(1.0);
     f[F_ACTIVE_MACS] = (pe_fanout * mac_fanout).max(1.0);
+    // Buffers are provisioned for the tail-quantile tile occupancy of
+    // each tensor's sparsity pattern ([`DensityModel::sizing_ratio`]):
+    // a mean-sized buffer under-provisions banded/skewed tensors whose
+    // hot tiles are locally dense. Uniform models have ratio exactly 1.
     let mut glb_words = 0.0;
     let mut pe_words = 0.0;
     for t in 0..NUM_TENSORS {
-        glb_words += loopnest::tile_elems(m, w, t, Boundary::DramGlb) * crs[t][0];
-        pe_words += loopnest::tile_elems(m, w, t, Boundary::GlbPe) * crs[t][1];
+        let dm = &w.tensors[t].density;
+        let tile_b0 = loopnest::tile_elems(m, w, t, Boundary::DramGlb);
+        let tile_b1 = loopnest::tile_elems(m, w, t, Boundary::GlbPe);
+        glb_words += tile_b0 * crs[t][0] * dm.sizing_ratio(tile_b0);
+        pe_words += tile_b1 * crs[t][1] * dm.sizing_ratio(tile_b1);
     }
     f[F_GLB_TILE_WORDS] = glb_words;
     f[F_PE_TILE_WORDS] = pe_words;
@@ -338,6 +355,56 @@ mod tests {
         // Q (K,N) has no M dim: broadcast to all 16 PEs, one GLB read.
         assert!(f[F_Q_NOC_WORDS_B1] >= 16.0 * f[F_Q_GLB_READS_B1] / 16.0);
         assert!(f[F_Q_GLB_READS_B1] * 16.0 == f[F_Q_NOC_WORDS_B1]);
+    }
+
+    #[test]
+    fn structured_pattern_inflates_capacity_provisioning() {
+        use crate::sparsity::DensityModel;
+        use crate::workload::WorkloadKind;
+        // Banded vs uniform P at the same mean density (4/32 = 0.125):
+        // the banded tensor must provision buffers for locally-dense
+        // band tiles, so its tile-words features grow.
+        let mk = |model: DensityModel| {
+            Workload::custom_models(
+                "t",
+                WorkloadKind::SpMM,
+                vec![("M".into(), 16), ("K".into(), 32), ("N".into(), 16)],
+                vec![
+                    ("P".into(), vec![0, 1], Some(model)),
+                    ("Q".into(), vec![1, 2], Some(DensityModel::uniform(0.25))),
+                    ("Z".into(), vec![0, 2], None),
+                ],
+                vec![1],
+            )
+            .unwrap()
+        };
+        let w_uni = mk(DensityModel::uniform(0.125));
+        let w_band = mk(DensityModel::banded(4, 32));
+        let p = Platform::edge();
+        let spec = GenomeSpec::for_workload(&w_uni);
+        let mut g = dense_genome(&spec);
+        for i in spec.factor_start..spec.format_start {
+            g[i] = 2; // tile everything at L2_T so GLB tiles materialize
+        }
+        let f_uni = extract(&decode(&spec, &w_uni, &g), &w_uni, &p);
+        let f_band = extract(&decode(&spec, &w_band, &g), &w_band, &p);
+        // Small PE tiles sit inside a band row: P95 occupancy is the
+        // dense band segment, far above the 12.5% mean.
+        assert!(
+            f_band[F_PE_TILE_WORDS] > f_uni[F_PE_TILE_WORDS],
+            "banded {} vs uniform {}",
+            f_band[F_PE_TILE_WORDS],
+            f_uni[F_PE_TILE_WORDS]
+        );
+        // GLB tiles span whole rows, where banded occupancy concentrates
+        // to the mean — provisioning matches the uniform case there.
+        assert_eq!(f_band[F_GLB_TILE_WORDS], f_uni[F_GLB_TILE_WORDS]);
+        // Mean-density features are identical — only provisioning and
+        // compression statistics change.
+        assert_eq!(f_band[F_DENSITY_P], f_uni[F_DENSITY_P]);
+        for v in f_band.iter() {
+            assert!(v.is_finite() && *v >= 0.0);
+        }
     }
 
     #[test]

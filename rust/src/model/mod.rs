@@ -59,8 +59,8 @@ impl EvalResult {
 /// A reusable native evaluator for a (workload, platform) pair.
 ///
 /// This is the reference implementation; the PJRT-backed
-/// [`crate::runtime::BatchEvaluator`] executes the same formula from the
-/// AOT artifact and is the default search hot path.
+/// `runtime::BatchEvaluator` (behind the `xla` feature) executes the
+/// same formula from the AOT artifact and is the default search hot path.
 pub struct NativeEvaluator {
     pub workload: Workload,
     pub platform: Platform,

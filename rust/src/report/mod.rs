@@ -1,5 +1,6 @@
 //! Experiment drivers — one per table/figure of the paper's evaluation
-//! (see DESIGN.md §Experiments, E1–E9). Each driver returns the rendered
+//! (see DESIGN.md §Experiments, E1–E9) plus beyond-paper studies (the
+//! [`patterns`] sparsity-pattern sweep). Each driver returns the rendered
 //! report and writes CSV next to it so plots can be regenerated.
 
 pub mod fig10;
@@ -7,6 +8,7 @@ pub mod fig17;
 pub mod fig18;
 pub mod fig2;
 pub mod fig7;
+pub mod patterns;
 pub mod table4;
 
 use crate::api::SearchRequest;

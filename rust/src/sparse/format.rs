@@ -7,6 +7,7 @@
 //! Sparseloop uses for its format primitives.
 
 use crate::arch::WORD_BITS;
+use crate::sparsity::DensityModel;
 
 /// The five per-rank format choices, in genome order (gene value 0..4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -80,16 +81,30 @@ pub struct RankCost {
 }
 
 /// Evaluate the storage of a format stack over ranks with extents
-/// `extents[i]` (outer→inner) at overall tensor density `density`.
+/// `extents[i]` (outer→inner) at uniform overall tensor density
+/// `density` — the legacy scalar entry point, equivalent to
+/// [`stack_storage_model`] with [`DensityModel::Uniform`].
+pub fn stack_storage(extents: &[u64], formats: &[RankFormat], density: f64) -> (f64, f64) {
+    stack_storage_model(extents, formats, &DensityModel::uniform(density))
+}
+
+/// Evaluate the storage of a format stack over ranks with extents
+/// `extents[i]` (outer→inner) under a sparsity-pattern model.
 ///
-/// Occupancy model: an element is nonzero with iid probability `density`;
-/// a rank-i slot is *occupied* if any element beneath it is nonzero, so
-/// `p_i = 1 - (1-d)^(inner_elems_i)`.
+/// Occupancy model: a rank-i slot is *occupied* if any element beneath
+/// it is nonzero, with probability [`DensityModel::slot_prob`] of the
+/// slot's leaf count — for `Uniform` the classic iid
+/// `p_i = 1 - (1-d)^(inner_elems_i)`, for structured patterns the
+/// clustered/banded/skewed equivalents.
 ///
 /// Returns `(data_words, metadata_words)` for the tile.
-pub fn stack_storage(extents: &[u64], formats: &[RankFormat], density: f64) -> (f64, f64) {
+pub fn stack_storage_model(
+    extents: &[u64],
+    formats: &[RankFormat],
+    model: &DensityModel,
+) -> (f64, f64) {
     assert_eq!(extents.len(), formats.len());
-    let d = density.clamp(1e-9, 1.0);
+    let d = model.avg().clamp(1e-9, 1.0);
     let total_elems: f64 = extents.iter().map(|&e| e as f64).product();
     if extents.is_empty() {
         return (0.0, 0.0);
@@ -102,7 +117,7 @@ pub fn stack_storage(extents: &[u64], formats: &[RankFormat], density: f64) -> (
     for (i, (&e, &fmt)) in extents.iter().zip(formats).enumerate() {
         let inner_elems: f64 = extents[i + 1..].iter().map(|&x| x as f64).product();
         // Probability a slot at this rank is occupied.
-        let p = 1.0 - (1.0 - d).powf(inner_elems.max(1.0));
+        let p = model.slot_prob(inner_elems.max(1.0));
         let e_f = e as f64;
         let kept = e_f * p; // expected occupied slots per fiber
         match fmt {
@@ -235,6 +250,27 @@ mod tests {
         let lo = stack_words(&[32, 32], &f, 0.05);
         let hi = stack_words(&[32, 32], &f, 0.5);
         assert!(lo < hi);
+    }
+
+    #[test]
+    fn uniform_model_path_equals_legacy_scalar_path() {
+        for d in [0.01, 0.118, 0.5, 1.0] {
+            let f = [RankFormat::UncompressedOffsetPair, RankFormat::Bitmask];
+            let a = stack_storage(&[32, 128], &f, d);
+            let b = stack_storage_model(&[32, 128], &f, &DensityModel::uniform(d));
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn block_model_shrinks_coarse_rank_metadata() {
+        let f = [RankFormat::CoordinatePayload, RankFormat::CoordinatePayload];
+        let (_, uni_meta) = stack_storage_model(&[64, 64], &f, &DensityModel::uniform(0.05));
+        let (_, blk_meta) = stack_storage_model(&[64, 64], &f, &DensityModel::block(16, 0.05));
+        // Clustered nonzeros leave far fewer outer slots occupied, so the
+        // outer CP rank stores fewer coordinates at equal mean density.
+        assert!(blk_meta < uni_meta, "block {blk_meta} vs uniform {uni_meta}");
     }
 
     #[test]

@@ -7,7 +7,9 @@ pub mod format;
 pub mod saf;
 
 pub use compat::Incompat;
-pub use format::{bits_for, stack_storage, stack_words, RankFormat, NUM_RANK_FORMATS};
+pub use format::{
+    bits_for, stack_storage, stack_storage_model, stack_words, RankFormat, NUM_RANK_FORMATS,
+};
 pub use saf::{control_overhead, effect, SgEffect, SgMechanism, NUM_SG_CHOICES};
 
 /// A complete sparse strategy for one design: per-tensor format stacks

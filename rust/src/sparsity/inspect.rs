@@ -1,0 +1,467 @@
+//! Fitting a [`DensityModel`] to a real sparse tensor file — the engine
+//! behind `sparsemap inspect-tensor <file>`.
+//!
+//! Two text formats are accepted:
+//!
+//! * **COO / MatrixMarket** — `%`/`#` comment lines, an optional
+//!   `rows cols nnz` header line, then one `row col [value]` entry per
+//!   line (values are ignored; indices may be 0- or 1-based).
+//! * **SMTX (DLMC-style CSR)** — a `rows, cols, nnz` first line (the
+//!   comma marks the format), then `rows + 1` row offsets and `nnz`
+//!   column indices as whitespace-separated integers.
+//!
+//! The fit is a deliberately simple decision cascade (band → block →
+//! uniform → power-law rows → empirical histogram); the output is a
+//! ready-to-paste `"density"` spec for `run-spec` scenarios.
+
+use super::model::DensityModel;
+use anyhow::{anyhow, ensure, Context, Result};
+
+/// Shape and occupancy statistics of a parsed sparse tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorStats {
+    pub rows: u64,
+    pub cols: u64,
+    pub nnz: u64,
+    /// Nonzero count per row.
+    pub row_nnz: Vec<u64>,
+    /// 95th percentile of `|col - row * cols/rows|` (diagonal distance).
+    pub p95_band_offset: f64,
+    /// Mean length of runs of consecutive nonzero columns within rows.
+    pub mean_run_len: f64,
+}
+
+impl TensorStats {
+    /// Mean element density `nnz / (rows * cols)`.
+    pub fn density(&self) -> f64 {
+        self.nnz as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Per-row densities, ascending.
+    pub fn row_densities_sorted(&self) -> Vec<f64> {
+        let mut d: Vec<f64> =
+            self.row_nnz.iter().map(|&n| n as f64 / self.cols as f64).collect();
+        d.sort_by(|a, b| a.total_cmp(b));
+        d
+    }
+}
+
+/// Largest dimension the inspect tool accepts (guards `Vec` allocations
+/// sized from untrusted file headers).
+pub const MAX_INSPECT_DIM: u64 = 1 << 24;
+/// Largest nonzero count the inspect tool accepts.
+pub const MAX_INSPECT_NNZ: u64 = 1 << 26;
+
+/// Parse a sparse tensor from COO/MatrixMarket or SMTX text.
+pub fn parse_tensor_text(text: &str) -> Result<TensorStats> {
+    let data_lines: Vec<&str> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('%') && !l.starts_with('#'))
+        .collect();
+    ensure!(!data_lines.is_empty(), "tensor file has no data lines");
+    let had_comments = text.lines().any(|l| {
+        let t = l.trim();
+        t.starts_with('%') || t.starts_with('#')
+    });
+    if data_lines[0].contains(',') {
+        parse_smtx(&data_lines)
+    } else {
+        parse_coo(&data_lines, had_comments)
+    }
+}
+
+fn int_token(t: &str) -> Result<u64> {
+    t.parse::<u64>().map_err(|_| anyhow!("'{t}' is not a non-negative integer"))
+}
+
+/// Strict integer tokenization (headers, SMTX bodies, COO indices —
+/// negative or fractional values are rejected, never coerced).
+fn ints_of(line: &str) -> Result<Vec<u64>> {
+    line.split([' ', '\t', ',']).filter(|t| !t.is_empty()).map(int_token).collect()
+}
+
+fn parse_smtx(lines: &[&str]) -> Result<TensorStats> {
+    let header = ints_of(lines[0])?;
+    ensure!(
+        header.len() == 3,
+        "SMTX header must be 'rows, cols, nnz', got {} fields",
+        header.len()
+    );
+    let (rows, cols, nnz) = (header[0], header[1], header[2]);
+    ensure!(rows >= 1 && cols >= 1, "SMTX dimensions must be >= 1");
+    ensure!(nnz >= 1, "tensor has no nonzeros");
+    ensure!(
+        rows <= MAX_INSPECT_DIM && cols <= MAX_INSPECT_DIM && nnz <= MAX_INSPECT_NNZ,
+        "SMTX header {rows} x {cols} with {nnz} nonzeros exceeds the inspect-tool \
+         limits ({MAX_INSPECT_DIM} per dimension, {MAX_INSPECT_NNZ} nonzeros)"
+    );
+    let mut body: Vec<u64> = Vec::with_capacity((rows + 1 + nnz) as usize);
+    for line in &lines[1..] {
+        body.extend(ints_of(line)?);
+    }
+    ensure!(
+        body.len() as u64 == rows + 1 + nnz,
+        "SMTX body has {} integers, expected {} offsets + {} column indices",
+        body.len(),
+        rows + 1,
+        nnz
+    );
+    let offsets = &body[..(rows + 1) as usize];
+    let cols_idx = &body[(rows + 1) as usize..];
+    ensure!(
+        offsets[0] == 0 && *offsets.last().unwrap() == nnz,
+        "SMTX row offsets must run 0..nnz"
+    );
+    let mut entries: Vec<(u64, u64)> = Vec::with_capacity(nnz as usize);
+    for r in 0..rows as usize {
+        ensure!(
+            offsets[r] <= offsets[r + 1] && offsets[r + 1] <= nnz,
+            "SMTX row offsets must be non-decreasing and bounded by nnz ({nnz})"
+        );
+        for &c in &cols_idx[offsets[r] as usize..offsets[r + 1] as usize] {
+            ensure!(c < cols, "SMTX column index {c} out of range (cols = {cols})");
+            entries.push((r as u64, c));
+        }
+    }
+    Ok(stats_from_entries(rows, cols, entries))
+}
+
+fn parse_coo(lines: &[&str], had_comments: bool) -> Result<TensorStats> {
+    // A `rows cols nnz` header: always present after MatrixMarket
+    // comments; otherwise recognized when the first line is all-integer
+    // (a float value field marks a `row col value` entry) and its third
+    // field counts the remaining entry lines. An integer-valued
+    // headerless first entry that happens to match the line count stays
+    // inherently ambiguous — add a header or comment line.
+    let first = ints_of(lines[0]);
+    let has_header = matches!(
+        &first,
+        Ok(h) if h.len() == 3 && (had_comments || h[2] == (lines.len() - 1) as u64)
+    );
+    let first = if has_header { first.unwrap() } else { Vec::new() };
+    let entry_lines = if has_header { &lines[1..] } else { lines };
+    ensure!(!entry_lines.is_empty(), "tensor has no nonzeros");
+    let mut entries: Vec<(u64, u64)> = Vec::with_capacity(entry_lines.len());
+    for line in entry_lines {
+        let toks: Vec<&str> =
+            line.split([' ', '\t', ',']).filter(|t| !t.is_empty()).collect();
+        ensure!(
+            toks.len() == 2 || toks.len() == 3,
+            "COO entries must be 'row col [value]', got '{line}'"
+        );
+        let r = int_token(toks[0]).with_context(|| format!("row index in '{line}'"))?;
+        let c = int_token(toks[1]).with_context(|| format!("column index in '{line}'"))?;
+        if let Some(v) = toks.get(2) {
+            ensure!(v.parse::<f64>().is_ok(), "'{v}' is not a numeric entry value");
+        }
+        entries.push((r, c));
+    }
+    // MatrixMarket is 1-based; plain COO dumps are usually 0-based.
+    let one_based = entries.iter().all(|&(r, c)| r >= 1 && c >= 1);
+    if one_based {
+        for e in &mut entries {
+            e.0 -= 1;
+            e.1 -= 1;
+        }
+    }
+    let max_r = entries.iter().map(|e| e.0).max().unwrap_or(0);
+    let max_c = entries.iter().map(|e| e.1).max().unwrap_or(0);
+    let (rows, cols) = if has_header {
+        ensure!(
+            max_r < first[0] && max_c < first[1],
+            "entry index ({max_r}, {max_c}) outside header shape {}x{}",
+            first[0],
+            first[1]
+        );
+        (first[0], first[1])
+    } else {
+        (max_r.saturating_add(1), max_c.saturating_add(1))
+    };
+    ensure!(
+        rows <= MAX_INSPECT_DIM && cols <= MAX_INSPECT_DIM,
+        "tensor shape {rows} x {cols} exceeds the inspect-tool limit of \
+         {MAX_INSPECT_DIM} per dimension"
+    );
+    Ok(stats_from_entries(rows, cols, entries))
+}
+
+fn stats_from_entries(rows: u64, cols: u64, mut entries: Vec<(u64, u64)>) -> TensorStats {
+    entries.sort_unstable();
+    entries.dedup();
+    let nnz = entries.len() as u64;
+    let mut row_nnz = vec![0u64; rows as usize];
+    let mut offsets: Vec<f64> = Vec::with_capacity(entries.len());
+    let mut runs: u64 = 0;
+    let mut prev: Option<(u64, u64)> = None;
+    for &(r, c) in &entries {
+        row_nnz[r as usize] += 1;
+        // Distance from the (rectangular) main diagonal.
+        let diag = r as f64 * cols as f64 / rows as f64;
+        offsets.push((c as f64 - diag).abs());
+        let continues = matches!(prev, Some((pr, pc)) if pr == r && pc + 1 == c);
+        if !continues {
+            runs += 1;
+        }
+        prev = Some((r, c));
+    }
+    offsets.sort_by(|a, b| a.total_cmp(b));
+    let p95_band_offset = offsets[((offsets.len() - 1) as f64 * 0.95) as usize];
+    let mean_run_len = nnz as f64 / runs.max(1) as f64;
+    TensorStats { rows, cols, nnz, row_nnz, p95_band_offset, mean_run_len }
+}
+
+/// Fit the best-matching density model: band → block → uniform →
+/// power-law rows → empirical histogram.
+pub fn fit_model(stats: &TensorStats) -> DensityModel {
+    let avg = stats.density().clamp(1e-9, 1.0);
+    // Banded: 95% of nonzeros within a band much narrower than the row,
+    // AND the band actually filled (a banded model's mean density is
+    // bandwidth/cols, so a sparsely-populated diagonal stripe would get
+    // a wildly wrong density from it — fall through to the skewed /
+    // histogram fits instead).
+    let bw_est = (2.0 * stats.p95_band_offset + 1.0).ceil().max(1.0) as u64;
+    let band_filled = bw_est as f64 * stats.rows as f64 <= stats.nnz as f64 * 4.0;
+    if stats.cols >= 8 && bw_est <= stats.cols / 4 && band_filled {
+        return DensityModel::banded(bw_est, stats.cols);
+    }
+    // Block: long runs of consecutive nonzero columns.
+    if stats.mean_run_len >= 2.5 {
+        return DensityModel::block(stats.mean_run_len.round() as u64, avg);
+    }
+    let rd = stats.row_densities_sorted();
+    let mean = avg;
+    let var = rd.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>() / rd.len() as f64;
+    let cov = var.sqrt() / mean;
+    if cov < 0.25 {
+        return DensityModel::uniform(avg);
+    }
+    // Power-law rows: match the P95/mean row-density ratio of the
+    // RowSkewed law, (1 - alpha) * 0.05^(-alpha).
+    let p95 = rd[((rd.len() - 1) as f64 * 0.95) as usize];
+    let target = p95 / mean;
+    let mut best = (f64::INFINITY, 0.0);
+    for step in 1..90 {
+        let alpha = step as f64 / 100.0;
+        let ratio = (1.0 - alpha) * 0.05f64.powf(-alpha);
+        let err = (ratio - target).abs();
+        if err < best.0 {
+            best = (err, alpha);
+        }
+    }
+    if best.0 / target.max(1e-9) <= 0.25 {
+        return DensityModel::row_skewed(best.1, avg);
+    }
+    // Fallback: keep the empirical row-density histogram (the
+    // constructor quantile-downsamples to its hot-path bucket cap).
+    DensityModel::measured(rd)
+}
+
+/// Parse, fit and render the full `inspect-tensor` report.
+pub fn inspect(text: &str) -> Result<String> {
+    let stats = parse_tensor_text(text)?;
+    let model = fit_model(&stats);
+    Ok(render_report(&stats, &model))
+}
+
+/// Human-readable report: shape, fitted model (with the paste-ready spec
+/// JSON) and a row-density histogram.
+pub fn render_report(stats: &TensorStats, model: &DensityModel) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "tensor: {} x {}, {} nonzeros, density {:.4}\n",
+        stats.rows,
+        stats.cols,
+        stats.nnz,
+        stats.density()
+    ));
+    out.push_str(&format!("fitted model: {}\n", model.describe()));
+    out.push_str(&format!("spec JSON:    \"density\": {}\n", model.to_json().dumps()));
+    out.push_str("\nrow-density histogram (16 bins over [0, max]):\n");
+    let rd: Vec<f64> =
+        stats.row_nnz.iter().map(|&n| n as f64 / stats.cols as f64).collect();
+    let max = rd.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+    let mut bins = [0usize; 16];
+    for d in &rd {
+        let i = ((d / max) * 16.0).min(15.0) as usize;
+        bins[i] += 1;
+    }
+    let tallest = bins.iter().copied().max().unwrap_or(1).max(1);
+    for (i, count) in bins.iter().enumerate() {
+        let hi = max * (i + 1) as f64 / 16.0;
+        let bar = "#".repeat((count * 40).div_ceil(tallest).min(40));
+        out.push_str(&format!("  <= {hi:.4} | {bar} {count}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn coo_text(entries: &[(u64, u64)], header: Option<(u64, u64)>) -> String {
+        let mut s = String::new();
+        if let Some((r, c)) = header {
+            s.push_str("%%MatrixMarket matrix coordinate real general\n");
+            s.push_str(&format!("{r} {c} {}\n", entries.len()));
+        }
+        for &(r, c) in entries {
+            // 1-based, MatrixMarket style.
+            s.push_str(&format!("{} {} 1.0\n", r + 1, c + 1));
+        }
+        s
+    }
+
+    #[test]
+    fn parses_coo_with_and_without_header() {
+        let entries = [(0u64, 0u64), (1, 2), (3, 1)];
+        for header in [Some((4, 4)), None] {
+            let stats = parse_tensor_text(&coo_text(&entries, header)).unwrap();
+            assert_eq!(stats.nnz, 3);
+            assert_eq!(stats.rows, 4);
+            assert_eq!(stats.row_nnz, vec![1, 1, 0, 1]);
+        }
+    }
+
+    #[test]
+    fn headerless_float_entry_is_not_mistaken_for_a_header() {
+        // "3 2 1.0" truncates to [3, 2, 1] and the value field happens
+        // to equal the remaining line count — the decimal point must
+        // mark it as an entry, not a header.
+        let stats = parse_tensor_text("3 2 1.0\n1 1 5.0\n").unwrap();
+        assert_eq!(stats.nnz, 2);
+        // 1-based entries (3,2) and (1,1) -> 0-based rows 0 and 2.
+        assert_eq!(stats.rows, 3);
+        assert_eq!(stats.row_nnz, vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn parses_smtx() {
+        // 3x4 CSR: rows [0,2), [2,3), [3,5).
+        let text = "3, 4, 5\n0 2 3 5\n0 1 2 1 3\n";
+        let stats = parse_tensor_text(text).unwrap();
+        assert_eq!((stats.rows, stats.cols, stats.nnz), (3, 4, 5));
+        assert_eq!(stats.row_nnz, vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_malformed_files() {
+        for src in [
+            "",
+            "%% only comments\n",
+            "1 2 3 4 5\n",             // 5-field entry
+            "3, 4, 5\n0 2 3 5\n0 1\n", // SMTX with missing column indices
+            "2, 4, 5\n0 70 5\n0 1 2 1 3\n", // SMTX offset beyond nnz
+            "not numbers at all\n",
+            "-3 4 1.0\n",  // negative index must not coerce to 0
+            "2.5 3 1.0\n", // fractional index must not truncate
+        ] {
+            assert!(parse_tensor_text(src).is_err(), "{src:?}");
+        }
+    }
+
+    #[test]
+    fn fits_banded_for_diagonal_matrix() {
+        let entries: Vec<(u64, u64)> = (0..64).map(|i| (i, i)).collect();
+        let stats = parse_tensor_text(&coo_text(&entries, Some((64, 64)))).unwrap();
+        match fit_model(&stats) {
+            DensityModel::Banded { bandwidth, cols } => {
+                assert!(bandwidth <= 4, "bandwidth {bandwidth}");
+                assert_eq!(cols, 64);
+            }
+            other => panic!("expected banded, fitted {}", other.describe()),
+        }
+    }
+
+    #[test]
+    fn sparse_diagonal_is_not_fitted_as_banded() {
+        // Diagonal entries on only every 8th row: a banded fit would
+        // claim density bandwidth/cols (~8x the truth) — must fall
+        // through to a skewed/histogram fit.
+        let entries: Vec<(u64, u64)> = (0..128u64).step_by(8).map(|i| (i, i)).collect();
+        let stats = parse_tensor_text(&coo_text(&entries, Some((128, 128)))).unwrap();
+        let model = fit_model(&stats);
+        assert!(
+            !matches!(model, DensityModel::Banded { .. }),
+            "fitted {}",
+            model.describe()
+        );
+    }
+
+    #[test]
+    fn rejects_oversized_headers_without_allocating() {
+        // A corrupt SMTX header must produce a typed error, not an
+        // allocation abort.
+        let err = parse_tensor_text("999999999999999, 4, 5\n0 2 3 5\n0 1 2 1 3\n");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn fits_uniform_for_scattered_matrix() {
+        // Same count in every row, columns spread via a stride walk.
+        let mut entries = Vec::new();
+        for r in 0..32u64 {
+            for j in 0..8u64 {
+                entries.push((r, (r * 17 + j * 29) % 64));
+            }
+        }
+        let stats = parse_tensor_text(&coo_text(&entries, Some((32, 64)))).unwrap();
+        match fit_model(&stats) {
+            DensityModel::Uniform { density } => {
+                assert!((density - 8.0 / 64.0).abs() < 1e-9);
+            }
+            other => panic!("expected uniform, fitted {}", other.describe()),
+        }
+    }
+
+    #[test]
+    fn fits_blocks_for_clustered_columns() {
+        // Runs of 8 consecutive columns at scattered offsets.
+        let mut entries = Vec::new();
+        for r in 0..32u64 {
+            let start = (r * 37) % 120;
+            for j in 0..8u64 {
+                entries.push((r, start + j));
+            }
+        }
+        let stats = parse_tensor_text(&coo_text(&entries, Some((32, 128)))).unwrap();
+        match fit_model(&stats) {
+            DensityModel::Block { block, .. } => assert!(block >= 4, "block {block}"),
+            other => panic!("expected block, fitted {}", other.describe()),
+        }
+    }
+
+    #[test]
+    fn fits_skewed_or_measured_for_power_law_rows() {
+        // Row r gets ~ c / (r+1) nonzeros — a heavy-tailed profile.
+        let mut rng = Pcg64::seeded(5);
+        let mut entries = Vec::new();
+        for r in 0..128u64 {
+            let count = (256 / (r + 1)).clamp(1, 128);
+            for _ in 0..count {
+                entries.push((r, rng.below(256)));
+            }
+        }
+        let stats = parse_tensor_text(&coo_text(&entries, Some((128, 256)))).unwrap();
+        let model = fit_model(&stats);
+        assert!(
+            matches!(
+                model,
+                DensityModel::RowSkewed { .. } | DensityModel::Measured { .. }
+            ),
+            "expected a skewed fit, got {}",
+            model.describe()
+        );
+        assert!(model.validate().is_ok());
+    }
+
+    #[test]
+    fn report_renders_model_and_histogram() {
+        let entries: Vec<(u64, u64)> = (0..32).map(|i| (i, i)).collect();
+        let report = inspect(&coo_text(&entries, Some((32, 32)))).unwrap();
+        assert!(report.contains("32 x 32"), "{report}");
+        assert!(report.contains("\"density\""), "{report}");
+        assert!(report.contains('#'), "{report}");
+    }
+}

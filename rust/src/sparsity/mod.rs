@@ -1,0 +1,33 @@
+//! Structured sparsity patterns — density models beyond a uniform scalar.
+//!
+//! Real sparse tensors are rarely uniform: pruned weights come in dense
+//! blocks, stencil operators are banded, graph tensors have power-law
+//! rows. Ranking accelerator designs correctly requires modeling *where*
+//! the nonzeros live, not just how many there are (the central lesson of
+//! Sparseloop's per-tile density models). This subsystem provides:
+//!
+//! * [`DensityModel`] — `Uniform` (the legacy scalar), `Block`, `Banded`,
+//!   `RowSkewed` and `Measured` patterns, each answering the three
+//!   questions the cost model asks: per-slot occupancy probability
+//!   ([`DensityModel::slot_prob`], drives compression storage), expected
+//!   per-tile nonzeros ([`DensityModel::tile_nonzeros`]) and a
+//!   tail-quantile tile occupancy for buffer provisioning
+//!   ([`DensityModel::occupancy_quantile`], [`DensityModel::sizing_ratio`]).
+//! * [`effectual_frac`] / [`effectual_macs`] — effectual-MAC accounting
+//!   for a `P × Q` contraction under two operand patterns.
+//! * [`inspect`] — fitting a model to a real tensor file (COO /
+//!   MatrixMarket / SMTX), behind `sparsemap inspect-tensor`.
+//!
+//! Every [`crate::workload::TensorSpec`] carries a `DensityModel`; with
+//! `Uniform` the whole stack reproduces the pre-subsystem scalar
+//! arithmetic bit-for-bit (enforced by `rust/tests/proptests.rs`), while
+//! structured patterns change compression cost, buffer provisioning and
+//! therefore search outcomes (`sparsemap patterns`).
+
+pub mod inspect;
+pub mod model;
+
+pub use inspect::{fit_model, parse_tensor_text, TensorStats};
+pub use model::{
+    effectual_frac, effectual_macs, DensityModel, MAX_MEASURED_BUCKETS, SIZING_QUANTILE,
+};

@@ -1,0 +1,686 @@
+//! [`DensityModel`] — structured sparsity patterns and their occupancy
+//! statistics.
+//!
+//! Every query is deterministic, allocation-free and cheap (a handful of
+//! `powf` calls at worst): density models are evaluated inside every
+//! fitness call on the ES hot path (see `benches/bench_main.rs`,
+//! `density_model_occupancy_queries`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Result};
+
+/// The tail quantile used for buffer provisioning: structured tensors are
+/// sized for their 95th-percentile tile occupancy, not the mean (a mean
+/// provision under-sizes skewed tensors — Sparseloop's argument for
+/// per-tile density models).
+pub const SIZING_QUANTILE: f64 = 0.95;
+
+/// Quadrature points for the [`DensityModel::RowSkewed`] occupancy
+/// mixture (midpoint rule over the row-density distribution).
+const SKEW_QUAD_POINTS: usize = 8;
+
+/// Most histogram buckets a [`DensityModel::Measured`] model may carry:
+/// `slot_prob` is O(buckets) with a `powf` per bucket and runs inside
+/// every fitness call, so [`DensityModel::measured`] downsamples larger
+/// histograms to this many quantile samples.
+pub const MAX_MEASURED_BUCKETS: usize = 64;
+
+/// A structural model of where a tensor's nonzeros live.
+///
+/// The legacy scalar density is [`DensityModel::Uniform`]; its queries
+/// reproduce the pre-subsystem arithmetic bit-for-bit (in particular
+/// [`DensityModel::sizing_ratio`] is exactly `1.0`), so uniform workloads
+/// search identically to older builds. The structured variants change
+/// per-rank slot occupancy (compression cost), tail tile occupancy
+/// (buffer provisioning) and therefore the search outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DensityModel {
+    /// Every element is nonzero independently with probability `density`.
+    Uniform {
+        /// Mean nonzero fraction, in `(0, 1]`.
+        density: f64,
+    },
+    /// Nonzeros arrive in fully-dense blocks of `block` consecutive
+    /// elements (innermost rank); a block is present with probability
+    /// `density` (2:4-style and tile-pruned weights).
+    Block {
+        /// Elements per dense block, `>= 1`.
+        block: u64,
+        /// Block presence probability = mean element density, in `(0, 1]`.
+        density: f64,
+    },
+    /// A banded matrix: each length-`cols` row carries one contiguous run
+    /// of `bandwidth` nonzeros (stencils, tridiagonal-class operators).
+    /// Mean density is `bandwidth / cols`.
+    Banded {
+        /// Nonzero band width in elements, `>= 1`.
+        bandwidth: u64,
+        /// Row length (the tensor's innermost extent), `>= 1`.
+        cols: u64,
+    },
+    /// Power-law row occupancy (graph adjacency, attention masks): row
+    /// densities follow `d·(1-alpha)·u^(-alpha)` for `u ~ U(0,1]`, so a
+    /// few rows are much denser than the mean `d`.
+    ///
+    /// Row densities are saturated at 1.0, so when `alpha` and `density`
+    /// are both large the realized mean of the saturated law sits
+    /// somewhat below `density`; [`DensityModel::avg`] keeps returning
+    /// the nominal `density` (the figure used for traffic and effectual
+    /// MACs), which makes the tail statistics mildly conservative for
+    /// extreme parameter pairs. Prefer moderate skews (`alpha <= 0.7`)
+    /// at moderate densities.
+    RowSkewed {
+        /// Skew exponent in `[0, 1)`; `0` degenerates to near-uniform.
+        alpha: f64,
+        /// Mean nonzero fraction, in `(0, 1]`.
+        density: f64,
+    },
+    /// An empirical per-row-group density histogram, e.g. fitted from a
+    /// real tensor file by `sparsemap inspect-tensor`.
+    Measured {
+        /// Sampled group densities, ascending, each in `[0, 1]`.
+        buckets: Vec<f64>,
+        /// Cached mean of `buckets` (kept consistent by the constructor).
+        avg: f64,
+    },
+}
+
+impl DensityModel {
+    /// Uniform iid occupancy at the given mean density.
+    pub fn uniform(density: f64) -> DensityModel {
+        DensityModel::Uniform { density }
+    }
+
+    /// Dense blocks of `block` elements, present with probability
+    /// `density`.
+    pub fn block(block: u64, density: f64) -> DensityModel {
+        DensityModel::Block { block, density }
+    }
+
+    /// A band of `bandwidth` nonzeros per length-`cols` row.
+    pub fn banded(bandwidth: u64, cols: u64) -> DensityModel {
+        DensityModel::Banded { bandwidth, cols }
+    }
+
+    /// Power-law rows with skew `alpha` and mean density `density`.
+    pub fn row_skewed(alpha: f64, density: f64) -> DensityModel {
+        DensityModel::RowSkewed { alpha, density }
+    }
+
+    /// An empirical histogram of group densities (sorted internally;
+    /// histograms larger than [`MAX_MEASURED_BUCKETS`] are downsampled
+    /// to that many quantile samples to keep occupancy queries cheap on
+    /// the search hot path).
+    pub fn measured(mut buckets: Vec<f64>) -> DensityModel {
+        buckets.sort_by(|a, b| a.total_cmp(b));
+        if buckets.len() > MAX_MEASURED_BUCKETS {
+            buckets = (0..MAX_MEASURED_BUCKETS)
+                .map(|i| {
+                    let pos = (buckets.len() - 1) as f64 * i as f64
+                        / (MAX_MEASURED_BUCKETS - 1) as f64;
+                    buckets[pos.round() as usize]
+                })
+                .collect();
+        }
+        let avg = if buckets.is_empty() {
+            0.0
+        } else {
+            buckets.iter().sum::<f64>() / buckets.len() as f64
+        };
+        DensityModel::Measured { buckets, avg }
+    }
+
+    /// Short tag naming the variant (the JSON `kind`).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            DensityModel::Uniform { .. } => "uniform",
+            DensityModel::Block { .. } => "block",
+            DensityModel::Banded { .. } => "banded",
+            DensityModel::RowSkewed { .. } => "row_skewed",
+            DensityModel::Measured { .. } => "measured",
+        }
+    }
+
+    /// Is this the legacy scalar (uniform) model?
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, DensityModel::Uniform { .. })
+    }
+
+    /// Mean nonzero fraction of the whole tensor, in `(0, 1]` for valid
+    /// models. O(1) — cached where not a stored field.
+    pub fn avg(&self) -> f64 {
+        match self {
+            DensityModel::Uniform { density } => *density,
+            DensityModel::Block { density, .. } => *density,
+            DensityModel::Banded { bandwidth, cols } => {
+                (*bandwidth as f64 / (*cols).max(1) as f64).min(1.0)
+            }
+            DensityModel::RowSkewed { density, .. } => *density,
+            DensityModel::Measured { avg, .. } => *avg,
+        }
+    }
+
+    /// Check the model parameters, with a typed error naming the problem
+    /// (surfaced through workload / API request validation — bad
+    /// densities no longer panic inside the cost model).
+    pub fn validate(&self) -> Result<()> {
+        let check_density = |d: f64| -> Result<()> {
+            ensure!(
+                d.is_finite() && d > 0.0 && d <= 1.0,
+                "density {d} is outside (0, 1]"
+            );
+            Ok(())
+        };
+        match self {
+            DensityModel::Uniform { density } => check_density(*density),
+            DensityModel::Block { block, density } => {
+                ensure!(*block >= 1, "block size must be >= 1, got {block}");
+                check_density(*density)
+            }
+            DensityModel::Banded { bandwidth, cols } => {
+                ensure!(*bandwidth >= 1, "bandwidth must be >= 1, got {bandwidth}");
+                ensure!(*cols >= 1, "banded row length must be >= 1, got {cols}");
+                ensure!(
+                    bandwidth <= cols,
+                    "bandwidth {bandwidth} exceeds the row length {cols} \
+                     (the band cannot be wider than the row)"
+                );
+                Ok(())
+            }
+            DensityModel::RowSkewed { alpha, density } => {
+                ensure!(
+                    alpha.is_finite() && (0.0..1.0).contains(alpha),
+                    "row-skew alpha {alpha} is outside [0, 1)"
+                );
+                check_density(*density)
+            }
+            DensityModel::Measured { buckets, avg } => {
+                ensure!(!buckets.is_empty(), "measured histogram has no buckets");
+                ensure!(
+                    buckets.len() <= MAX_MEASURED_BUCKETS,
+                    "measured histogram has {} buckets (max {MAX_MEASURED_BUCKETS}; the \
+                     `measured` constructor downsamples automatically)",
+                    buckets.len()
+                );
+                for b in buckets {
+                    ensure!(
+                        b.is_finite() && (0.0..=1.0).contains(b),
+                        "measured bucket {b} is outside [0, 1]"
+                    );
+                }
+                ensure!(avg.is_finite() && *avg > 0.0, "measured histogram is all-zero");
+                Ok(())
+            }
+        }
+    }
+
+    /// Probability that a storage slot covering `inner_elems` leaf
+    /// elements holds at least one nonzero — the per-rank occupancy the
+    /// format storage model ([`crate::sparse::stack_storage_model`])
+    /// multiplies through a format stack. Always in `[0, 1]` and
+    /// non-decreasing in `inner_elems`.
+    pub fn slot_prob(&self, inner_elems: f64) -> f64 {
+        let n = inner_elems.max(1.0);
+        match self {
+            // Bit-for-bit the legacy uniform-iid occupancy:
+            // p = 1 - (1-d)^n with d clamped away from zero.
+            DensityModel::Uniform { density } => {
+                let d = density.clamp(1e-9, 1.0);
+                1.0 - (1.0 - d).powf(n)
+            }
+            // One Bernoulli trial per block touched instead of per
+            // element: clustering makes coarse slots emptier.
+            DensityModel::Block { block, density } => {
+                let d = density.clamp(1e-9, 1.0);
+                let trials = (n / (*block).max(1) as f64).max(1.0);
+                1.0 - (1.0 - d).powf(trials)
+            }
+            // A window of n elements within a length-`cols` row
+            // intersects the contiguous band in n + bandwidth - 1 of the
+            // cols start positions (so slot_prob(1) is exactly the mean
+            // density); windows a full row or larger always intersect.
+            DensityModel::Banded { bandwidth, cols } => {
+                ((n + *bandwidth as f64 - 1.0) / (*cols).max(1) as f64).min(1.0)
+            }
+            // Mixture over the row-density distribution (midpoint
+            // quadrature): occupied-row probability averaged over skew.
+            DensityModel::RowSkewed { .. } => {
+                let mut acc = 0.0;
+                for i in 0..SKEW_QUAD_POINTS {
+                    let u = (i as f64 + 0.5) / SKEW_QUAD_POINTS as f64;
+                    let d = self.row_density_at(u).clamp(1e-9, 1.0);
+                    acc += 1.0 - (1.0 - d).powf(n);
+                }
+                acc / SKEW_QUAD_POINTS as f64
+            }
+            // Mixture over the empirical buckets.
+            DensityModel::Measured { buckets, .. } => {
+                if buckets.is_empty() {
+                    return 0.0;
+                }
+                let mut acc = 0.0;
+                for b in buckets {
+                    let d = b.clamp(1e-9, 1.0);
+                    acc += 1.0 - (1.0 - d).powf(n);
+                }
+                acc / buckets.len() as f64
+            }
+        }
+    }
+
+    /// Expected nonzero count of a tile of `tile_elems` elements at a
+    /// uniformly random position: `avg() * tile_elems`. Monotone in the
+    /// tile size for every model.
+    pub fn tile_nonzeros(&self, tile_elems: f64) -> f64 {
+        self.avg() * tile_elems.max(0.0)
+    }
+
+    /// `q`-quantile of the *per-tile* density for tiles of `tile_elems`
+    /// elements, in `[0, 1]`: the occupancy a buffer must provision for
+    /// to hold a fraction `q` of tiles. The mean is the 50%-ish point;
+    /// skewed models have heavy upper tails.
+    pub fn occupancy_quantile(&self, tile_elems: f64, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        let n = tile_elems.max(1.0);
+        match self {
+            DensityModel::Uniform { density } => {
+                binomial_density_quantile(density.clamp(0.0, 1.0), n, q)
+            }
+            // One effective trial per block: the per-tile density
+            // fluctuates like a binomial over n/block blocks.
+            DensityModel::Block { block, density } => {
+                let trials = (n / (*block).max(1) as f64).max(1.0);
+                binomial_density_quantile(density.clamp(0.0, 1.0), trials, q)
+            }
+            // Bimodal: a sub-row tile either misses the band (density 0)
+            // or holds a dense band segment of min(bandwidth, n) elements.
+            DensityModel::Banded { bandwidth, cols } => {
+                let cols_f = (*cols).max(1) as f64;
+                if n >= cols_f {
+                    return self.avg();
+                }
+                let hit = self.slot_prob(n);
+                if q <= 1.0 - hit {
+                    0.0
+                } else {
+                    ((*bandwidth as f64).min(n) / n).min(1.0)
+                }
+            }
+            // Closed-form quantile of the row-density law d·(1-a)·u^(-a)
+            // (row-granularity tiles — the conservative aligned case).
+            DensityModel::RowSkewed { .. } => {
+                self.row_density_at((1.0 - q).max(1e-9)).clamp(0.0, 1.0)
+            }
+            DensityModel::Measured { buckets, .. } => {
+                if buckets.is_empty() {
+                    return 0.0;
+                }
+                let pos = q * (buckets.len() - 1) as f64;
+                let lo = pos.floor() as usize;
+                let hi = pos.ceil() as usize;
+                let frac = pos - lo as f64;
+                (buckets[lo] * (1.0 - frac) + buckets[hi] * frac).clamp(0.0, 1.0)
+            }
+        }
+    }
+
+    /// Buffer-provisioning multiplier for a tile of `tile_elems`
+    /// elements: P95 tile occupancy over mean occupancy, floored at 1.
+    ///
+    /// [`DensityModel::Uniform`] returns exactly `1.0` — the legacy
+    /// mean-provisioning semantics (and the concentration limit of large
+    /// uniform tiles) — which keeps uniform search trajectories
+    /// bit-for-bit identical to pre-subsystem builds.
+    pub fn sizing_ratio(&self, tile_elems: f64) -> f64 {
+        if let DensityModel::Uniform { .. } = self {
+            return 1.0;
+        }
+        let avg = self.avg().max(1e-12);
+        (self.occupancy_quantile(tile_elems, SIZING_QUANTILE) / avg).max(1.0)
+    }
+
+    /// Row density at quantile position `u ∈ (0, 1]` for the skewed law
+    /// (clamped to a density). Only meaningful for `RowSkewed`.
+    fn row_density_at(&self, u: f64) -> f64 {
+        match self {
+            DensityModel::RowSkewed { alpha, density } => {
+                (density * (1.0 - alpha) * u.max(1e-9).powf(-alpha)).min(1.0)
+            }
+            _ => self.avg(),
+        }
+    }
+
+    /// Human-readable one-liner, e.g. `block(b=64, d=0.125)`.
+    pub fn describe(&self) -> String {
+        match self {
+            DensityModel::Uniform { density } => format!("uniform(d={density:.4})"),
+            DensityModel::Block { block, density } => {
+                format!("block(b={block}, d={density:.4})")
+            }
+            DensityModel::Banded { bandwidth, cols } => {
+                format!("banded(bw={bandwidth}/{cols}, d={:.4})", self.avg())
+            }
+            DensityModel::RowSkewed { alpha, density } => {
+                format!("row_skewed(alpha={alpha:.2}, d={density:.4})")
+            }
+            DensityModel::Measured { buckets, avg } => {
+                format!("measured({} buckets, d={avg:.4})", buckets.len())
+            }
+        }
+    }
+
+    /// JSON form: a bare number for `Uniform` (the legacy scalar — keeps
+    /// existing specs and reports byte-identical), an object with a
+    /// `kind` tag otherwise.
+    pub fn to_json(&self) -> Json {
+        match self {
+            DensityModel::Uniform { density } => Json::num(*density),
+            DensityModel::Block { block, density } => Json::obj(vec![
+                ("kind", Json::str("block")),
+                ("block", Json::num(*block as f64)),
+                ("density", Json::num(*density)),
+            ]),
+            // `cols` is re-derived from the tensor's innermost extent on
+            // parse, so it is not serialized.
+            DensityModel::Banded { bandwidth, .. } => Json::obj(vec![
+                ("kind", Json::str("banded")),
+                ("bandwidth", Json::num(*bandwidth as f64)),
+            ]),
+            DensityModel::RowSkewed { alpha, density } => Json::obj(vec![
+                ("kind", Json::str("row_skewed")),
+                ("alpha", Json::num(*alpha)),
+                ("density", Json::num(*density)),
+            ]),
+            DensityModel::Measured { buckets, .. } => Json::obj(vec![
+                ("kind", Json::str("measured")),
+                ("buckets", Json::arr_f64(buckets)),
+            ]),
+        }
+    }
+
+    /// Parse the JSON form (number or `kind`-tagged object; inverse of
+    /// [`DensityModel::to_json`]). `inner_extent` is the owning tensor's
+    /// innermost dimension size, used to resolve `banded` row lengths.
+    pub fn from_json(j: &Json, inner_extent: u64) -> Result<DensityModel> {
+        if let Some(d) = j.as_f64() {
+            let m = DensityModel::uniform(d);
+            m.validate()?;
+            return Ok(m);
+        }
+        ensure!(
+            j.as_obj().is_some(),
+            "density must be a number or an object with a 'kind' tag"
+        );
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("density object needs a string 'kind'"))?;
+        let num = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("density model '{kind}' needs a number '{key}'"))
+        };
+        let int = |key: &str| -> Result<u64> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("density model '{kind}' needs an integer '{key}'"))
+        };
+        let m = match kind {
+            "uniform" => DensityModel::uniform(num("density")?),
+            "block" => DensityModel::block(int("block")?, num("density")?),
+            "banded" => DensityModel::banded(int("bandwidth")?, inner_extent.max(1)),
+            "row_skewed" => DensityModel::row_skewed(num("alpha")?, num("density")?),
+            "measured" => {
+                let buckets = j
+                    .get("buckets")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("density model 'measured' needs a 'buckets' array"))?
+                    .iter()
+                    .map(|b| {
+                        b.as_f64()
+                            .ok_or_else(|| anyhow!("'measured' buckets must be numbers"))
+                    })
+                    .collect::<Result<Vec<f64>>>()?;
+                DensityModel::measured(buckets)
+            }
+            other => {
+                return Err(anyhow!(
+                    "unknown density model kind '{other}' \
+                     (uniform|block|banded|row_skewed|measured)"
+                ))
+            }
+        };
+        m.validate()?;
+        Ok(m)
+    }
+}
+
+/// Effectual-MAC fraction of a `P × Q` contraction: the probability both
+/// operands of a MAC are nonzero. Operand patterns are modeled as
+/// independent, so this is the product of the mean densities — for
+/// uniform models, bit-for-bit the legacy `dp * dq`.
+pub fn effectual_frac(p: &DensityModel, q: &DensityModel) -> f64 {
+    p.avg() * q.avg()
+}
+
+/// Expected effectual MACs of a contraction with `total_ops` dense MACs.
+pub fn effectual_macs(total_ops: f64, p: &DensityModel, q: &DensityModel) -> f64 {
+    total_ops * effectual_frac(p, q)
+}
+
+/// `q`-quantile of a binomial *density* (successes/trials) with mean `d`
+/// over `trials` trials, via the normal approximation. Clamped to [0, 1].
+fn binomial_density_quantile(d: f64, trials: f64, q: f64) -> f64 {
+    let sd = (d * (1.0 - d) / trials.max(1.0)).sqrt();
+    (d + inv_norm_cdf(q) * sd).clamp(0.0, 1.0)
+}
+
+/// Acklam's rational approximation of the standard normal inverse CDF
+/// (absolute error < 1.15e-9 — far below modeling error here).
+fn inv_norm_cdf(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -39.69683028665376,
+        220.9460984245205,
+        -275.9285104469687,
+        138.357751867269,
+        -30.66479806614716,
+        2.506628277459239,
+    ];
+    const B: [f64; 5] = [
+        -54.47609879822406,
+        161.5858368580409,
+        -155.6989798598866,
+        66.80131188771972,
+        -13.28068155288572,
+    ];
+    const C: [f64; 6] = [
+        -0.007784894002430293,
+        -0.3223964580411365,
+        -2.400758277161838,
+        -2.549732539343734,
+        4.374664141464968,
+        2.938163982698783,
+    ];
+    const D: [f64; 4] = [
+        0.007784695709041462,
+        0.3224671290700398,
+        2.445134137142996,
+        3.754408661907416,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let p = p.clamp(1e-12, 1.0 - 1e-12);
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -((((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_models() -> Vec<DensityModel> {
+        vec![
+            DensityModel::uniform(0.1),
+            DensityModel::block(64, 0.1),
+            DensityModel::banded(102, 1024),
+            DensityModel::row_skewed(0.6, 0.1),
+            DensityModel::measured(vec![0.01, 0.05, 0.1, 0.2, 0.4]),
+        ]
+    }
+
+    #[test]
+    fn inv_norm_cdf_reference_points() {
+        assert!(inv_norm_cdf(0.5).abs() < 1e-9);
+        assert!((inv_norm_cdf(0.95) - 1.6449).abs() < 1e-3);
+        assert!((inv_norm_cdf(0.975) - 1.9600).abs() < 1e-3);
+        assert!((inv_norm_cdf(0.05) + inv_norm_cdf(0.95)).abs() < 1e-9);
+        assert!(inv_norm_cdf(0.001) < -3.0 && inv_norm_cdf(0.999) > 3.0);
+    }
+
+    #[test]
+    fn uniform_slot_prob_matches_legacy_formula() {
+        for d in [1e-6, 0.01, 0.118, 0.5, 1.0] {
+            let m = DensityModel::uniform(d);
+            for n in [1.0, 7.0, 64.0, 4096.0] {
+                let legacy = 1.0 - (1.0 - d.clamp(1e-9, 1.0)).powf(n);
+                assert_eq!(m.slot_prob(n).to_bits(), legacy.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_sizing_ratio_is_exactly_one() {
+        let m = DensityModel::uniform(0.3);
+        for t in [1.0, 100.0, 1e6] {
+            assert_eq!(m.sizing_ratio(t), 1.0);
+        }
+    }
+
+    #[test]
+    fn structured_models_provision_above_mean() {
+        for m in all_models().into_iter().filter(|m| !m.is_uniform()) {
+            let r = m.sizing_ratio(256.0);
+            assert!(r >= 1.0 && r.is_finite(), "{}: ratio {r}", m.describe());
+        }
+        // A small-tile banded tensor must provision for the dense band
+        // segment, far above the 10% mean.
+        let banded = DensityModel::banded(102, 1024);
+        assert!(banded.sizing_ratio(128.0) > 3.0);
+        // Skewed rows have a heavy tail quantile.
+        let skew = DensityModel::row_skewed(0.6, 0.1);
+        assert!(skew.occupancy_quantile(1024.0, 0.95) > 2.0 * skew.avg());
+    }
+
+    #[test]
+    fn block_coarsens_slot_occupancy() {
+        let u = DensityModel::uniform(0.1);
+        let b = DensityModel::block(64, 0.1);
+        // Same mean, but a 64-element slot holds one block-trial instead
+        // of 64 element-trials: much likelier to be empty.
+        assert_eq!(b.avg(), u.avg());
+        assert!(b.slot_prob(64.0) < u.slot_prob(64.0) * 0.2);
+    }
+
+    #[test]
+    fn banded_rows_always_occupied() {
+        let m = DensityModel::banded(16, 512);
+        assert_eq!(m.slot_prob(512.0), 1.0);
+        assert!(m.slot_prob(4.0) < 0.05);
+        assert!((m.avg() - 16.0 / 512.0).abs() < 1e-12);
+        // A single-element slot is occupied exactly at the mean density.
+        assert_eq!(m.slot_prob(1.0), m.avg());
+    }
+
+    #[test]
+    fn measured_quantiles_interpolate_sorted_buckets() {
+        let m = DensityModel::measured(vec![0.4, 0.1, 0.2, 0.3]);
+        assert!((m.avg() - 0.25).abs() < 1e-12);
+        assert_eq!(m.occupancy_quantile(64.0, 0.0), 0.1);
+        assert_eq!(m.occupancy_quantile(64.0, 1.0), 0.4);
+        assert!((m.occupancy_quantile(64.0, 0.5) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_downsamples_large_histograms() {
+        let big: Vec<f64> = (0..1000).map(|i| i as f64 / 1000.0).collect();
+        let m = DensityModel::measured(big);
+        match &m {
+            DensityModel::Measured { buckets, .. } => {
+                assert_eq!(buckets.len(), MAX_MEASURED_BUCKETS);
+                assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "still sorted");
+            }
+            _ => unreachable!(),
+        }
+        // The quantile-sampled histogram preserves the mean closely.
+        assert!((m.avg() - 0.4995).abs() < 0.01, "avg {}", m.avg());
+        assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        assert!(DensityModel::uniform(0.0).validate().is_err());
+        assert!(DensityModel::uniform(1.5).validate().is_err());
+        assert!(DensityModel::uniform(f64::NAN).validate().is_err());
+        assert!(DensityModel::block(0, 0.5).validate().is_err());
+        assert!(DensityModel::banded(0, 64).validate().is_err());
+        assert!(DensityModel::banded(128, 64).validate().is_err(), "band wider than row");
+        assert!(DensityModel::row_skewed(1.0, 0.5).validate().is_err());
+        assert!(DensityModel::row_skewed(-0.1, 0.5).validate().is_err());
+        assert!(DensityModel::measured(vec![]).validate().is_err());
+        assert!(DensityModel::measured(vec![0.0, 0.0]).validate().is_err());
+        for m in all_models() {
+            assert!(m.validate().is_ok(), "{}", m.describe());
+        }
+    }
+
+    #[test]
+    fn json_round_trips_every_variant() {
+        for m in all_models() {
+            let j = m.to_json();
+            let parsed = DensityModel::from_json(
+                &Json::parse(&j.dumps()).unwrap(),
+                1024, // the banded fixture's row length
+            )
+            .unwrap();
+            assert_eq!(parsed, m, "{}", m.describe());
+        }
+        // The uniform form is a bare number (legacy spec compatibility).
+        assert_eq!(DensityModel::uniform(0.25).to_json(), Json::num(0.25));
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_models() {
+        for src in [
+            r#"{"kind": "nope", "density": 0.5}"#,
+            r#"{"kind": "block", "density": 0.5}"#,
+            r#"{"kind": "block", "block": 4, "density": 0}"#,
+            r#"{"density": 0.5}"#,
+            r#""free-text""#,
+            "0",
+            "-0.5",
+        ] {
+            let j = Json::parse(src).unwrap();
+            assert!(DensityModel::from_json(&j, 64).is_err(), "{src}");
+        }
+    }
+
+    #[test]
+    fn effectual_frac_is_product_of_means() {
+        let p = DensityModel::uniform(0.118);
+        let q = DensityModel::block(16, 0.3);
+        let f = effectual_frac(&p, &q);
+        assert_eq!(f.to_bits(), (0.118f64 * 0.3).to_bits());
+        assert_eq!(effectual_macs(1000.0, &p, &q), 1000.0 * f);
+    }
+}

@@ -2,17 +2,21 @@
 //!
 //! A [`Workload`] is an einsum-like contraction `P ⊙ Q → Z` described by a
 //! list of named iteration dimensions, per-tensor dimension projections and
-//! densities. SpMM is the native form; SpConv is lowered to an implicit
-//! GEMM ([`spconv`]). The paper's full benchmark suite (Table III) is
-//! provided by [`table3`]; arbitrary custom contractions are built with
-//! [`Workload::custom`] or parsed from a JSON spec ([`spec`]).
+//! sparsity patterns ([`DensityModel`] — a plain scalar density is the
+//! `Uniform` model). SpMM is the native form; SpConv is lowered to an
+//! implicit GEMM ([`spconv`]). The paper's full benchmark suite (Table III)
+//! is provided by [`table3`]; arbitrary custom contractions are built with
+//! [`Workload::custom`] / [`Workload::custom_models`] or parsed from a
+//! JSON spec ([`spec`]).
 
 pub mod factorize;
 pub mod spconv;
 pub mod spec;
 pub mod table3;
 
+use crate::sparsity::DensityModel;
 use crate::util::json::Json;
+use anyhow::Context;
 use factorize::{factorize, pad_dimension};
 
 /// One iteration-space dimension of a workload.
@@ -61,8 +65,10 @@ pub struct TensorSpec {
     /// Indices into [`Workload::dims`] this tensor is projected onto,
     /// ordered from its outermost to innermost logical rank.
     pub dims: Vec<usize>,
-    /// Fraction of nonzero elements, in `(0, 1]`.
-    pub density: f64,
+    /// Sparsity pattern of this tensor. The mean nonzero fraction is
+    /// `density.avg()`, in `(0, 1]`; a bare scalar density is
+    /// [`DensityModel::Uniform`].
+    pub density: DensityModel,
 }
 
 /// Kind tag, used for reporting only — both kinds evaluate through the
@@ -111,9 +117,15 @@ pub struct Workload {
 }
 
 impl Workload {
-    /// Plain SpMM: `P[M,K] × Q[K,N] = Z[M,N]` with given densities.
+    /// Plain SpMM: `P[M,K] × Q[K,N] = Z[M,N]` with uniform densities.
+    ///
+    /// Out-of-range densities no longer panic here; every custom / spec
+    /// / API path rejects them with a typed error via
+    /// [`Workload::validate`]. Direct constructor calls defer that check
+    /// to the caller (the Table III suite is valid by construction) —
+    /// call `validate()` before evaluating hand-built workloads with
+    /// untrusted densities.
     pub fn spmm(id: &str, m: u64, k: u64, n: u64, dp: f64, dq: f64) -> Workload {
-        assert!(dp > 0.0 && dp <= 1.0 && dq > 0.0 && dq <= 1.0, "bad density");
         let dims = vec![Dim::new("M", m), Dim::new("K", k), Dim::new("N", n)];
         let dz = output_density(dp, dq, k);
         Workload {
@@ -124,19 +136,19 @@ impl Workload {
                     name: "P".into(),
                     role: TensorRole::InputA,
                     dims: vec![0, 1],
-                    density: dp,
+                    density: DensityModel::uniform(dp),
                 },
                 TensorSpec {
                     name: "Q".into(),
                     role: TensorRole::InputB,
                     dims: vec![1, 2],
-                    density: dq,
+                    density: DensityModel::uniform(dq),
                 },
                 TensorSpec {
                     name: "Z".into(),
                     role: TensorRole::Output,
                     dims: vec![0, 2],
-                    density: dz,
+                    density: DensityModel::uniform(dz),
                 },
             ],
             dims,
@@ -164,14 +176,37 @@ impl Workload {
     /// the entry point for custom (non-Table-III) scenarios.
     ///
     /// `dims` are the named iteration dimensions; `tensors` are exactly
-    /// three `(name, dim indices, density)` triples in P, Q, Z order. A
-    /// non-positive Z density means "derive it from the operand densities"
-    /// (see [`output_density`]). `contraction` lists the reduced dims.
+    /// three `(name, dim indices, density)` triples in P, Q, Z order,
+    /// with uniform scalar densities. A non-positive Z density means
+    /// "derive it from the operand densities" (see [`output_density`]).
+    /// `contraction` lists the reduced dims. For structured sparsity
+    /// patterns use [`Workload::custom_models`].
     pub fn custom(
         id: &str,
         kind: WorkloadKind,
         dims: Vec<(String, u64)>,
         tensors: Vec<(String, Vec<usize>, f64)>,
+        contraction: Vec<usize>,
+    ) -> anyhow::Result<Workload> {
+        let tensors = tensors
+            .into_iter()
+            .map(|(name, dims, density)| {
+                let model =
+                    if density <= 0.0 { None } else { Some(DensityModel::uniform(density)) };
+                (name, dims, model)
+            })
+            .collect();
+        Workload::custom_models(id, kind, dims, tensors, contraction)
+    }
+
+    /// Like [`Workload::custom`], but with a full [`DensityModel`] per
+    /// tensor. `None` is only valid for the output tensor Z and derives a
+    /// uniform density from the operands' mean densities.
+    pub fn custom_models(
+        id: &str,
+        kind: WorkloadKind,
+        dims: Vec<(String, u64)>,
+        tensors: Vec<(String, Vec<usize>, Option<DensityModel>)>,
         contraction: Vec<usize>,
     ) -> anyhow::Result<Workload> {
         anyhow::ensure!(tensors.len() == NUM_TENSORS, "expected exactly 3 tensors (P, Q, Z)");
@@ -181,21 +216,28 @@ impl Workload {
             .map(|&d| dims.get(d).map_or(1.0, |&(_, s)| s as f64))
             .product();
         let roles = [TensorRole::InputA, TensorRole::InputB, TensorRole::Output];
-        let dp = tensors[TENSOR_P].2;
-        let dq = tensors[TENSOR_Q].2;
-        let tensors = tensors
-            .into_iter()
-            .zip(roles)
-            .map(|((name, dims, density), role)| {
-                let density = if role == TensorRole::Output && density <= 0.0 {
-                    output_density(dp, dq, contracted_sizes.max(1.0) as u64)
-                } else {
-                    density
-                };
-                TensorSpec { name, role, dims, density }
-            })
-            .collect();
-        let w = Workload { id: id.to_string(), kind, dims: built_dims, tensors, contraction };
+        let dp = tensors[TENSOR_P].2.as_ref().map_or(0.0, DensityModel::avg);
+        let dq = tensors[TENSOR_Q].2.as_ref().map_or(0.0, DensityModel::avg);
+        let mut specs = Vec::with_capacity(NUM_TENSORS);
+        for ((name, dims, model), role) in tensors.into_iter().zip(roles) {
+            let density = match (model, role) {
+                (Some(m), _) => m,
+                (None, TensorRole::Output) => DensityModel::uniform(output_density(
+                    dp,
+                    dq,
+                    contracted_sizes.max(1.0) as u64,
+                )),
+                (None, _) => anyhow::bail!("tensor '{name}' is missing a density"),
+            };
+            specs.push(TensorSpec { name, role, dims, density });
+        }
+        let w = Workload {
+            id: id.to_string(),
+            kind,
+            dims: built_dims,
+            tensors: specs,
+            contraction,
+        };
         w.validate()?;
         Ok(w)
     }
@@ -247,12 +289,21 @@ impl Workload {
                 );
                 ensure!(seen.insert(d), "tensor '{}' repeats dimension index {d}", spec.name);
             }
-            ensure!(
-                spec.density > 0.0 && spec.density <= 1.0,
-                "tensor '{}' density {} is outside (0, 1]",
-                spec.name,
-                spec.density
-            );
+            spec.density
+                .validate()
+                .with_context(|| format!("tensor '{}' density model", spec.name))?;
+            // Banded row lengths are defined as (and re-derived on spec
+            // parse from) the tensor's innermost dimension — enforce the
+            // match so serialization round-trips are lossless.
+            if let DensityModel::Banded { cols, .. } = spec.density {
+                let inner = self.dims[*spec.dims.last().unwrap()].size;
+                ensure!(
+                    cols == inner,
+                    "tensor '{}': banded row length {cols} must equal the innermost \
+                     dimension size {inner}",
+                    spec.name
+                );
+            }
         }
         ensure!(!self.contraction.is_empty(), "at least one contracted dimension is required");
         let mut contracted = std::collections::HashSet::new();
@@ -299,6 +350,12 @@ impl Workload {
         self.tensors[t].dims.contains(&d)
     }
 
+    /// Mean nonzero fraction of tensor `t` (`density.avg()`) — the
+    /// scalar the legacy model consumed everywhere.
+    pub fn density(&self, t: usize) -> f64 {
+        self.tensors[t].density.avg()
+    }
+
     /// Total number of prime-factor genes across all dims.
     pub fn num_factor_genes(&self) -> usize {
         self.dims.iter().map(|d| d.factors.len()).sum()
@@ -332,7 +389,8 @@ impl Workload {
                         .map(|t| {
                             Json::obj(vec![
                                 ("name", Json::str(&t.name)),
-                                ("density", Json::num(t.density)),
+                                ("density", Json::num(t.density.avg())),
+                                ("pattern", Json::str(t.density.kind_name())),
                             ])
                         })
                         .collect(),
@@ -403,9 +461,62 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn zero_density_rejected() {
-        Workload::spmm("t", 4, 4, 4, 0.0, 0.5);
+    fn zero_density_rejected_by_validate() {
+        // Construction no longer panics; validation (run by every custom
+        // / spec / API path) reports a typed error instead.
+        let w = Workload::spmm("t", 4, 4, 4, 0.0, 0.5);
+        let err = w.validate().unwrap_err();
+        assert!(format!("{err:?}").contains("density"), "{err:?}");
+    }
+
+    #[test]
+    fn structured_models_flow_through_custom_models() {
+        let w = Workload::custom_models(
+            "t",
+            WorkloadKind::SpMM,
+            vec![("M".into(), 32), ("K".into(), 64), ("N".into(), 48)],
+            vec![
+                ("P".into(), vec![0, 1], Some(DensityModel::block(16, 0.25))),
+                ("Q".into(), vec![1, 2], Some(DensityModel::banded(8, 48))),
+                ("Z".into(), vec![0, 2], None),
+            ],
+            vec![1],
+        )
+        .unwrap();
+        assert_eq!(w.density(TENSOR_P), 0.25);
+        assert!((w.density(TENSOR_Q) - 8.0 / 48.0).abs() < 1e-12);
+        // The derived output density comes from the operands' means.
+        assert_eq!(
+            w.tensors[TENSOR_Z].density,
+            DensityModel::uniform(output_density(0.25, 8.0 / 48.0, 64))
+        );
+        // A missing input density is a typed error, not a panic.
+        assert!(Workload::custom_models(
+            "t",
+            WorkloadKind::SpMM,
+            vec![("M".into(), 8), ("K".into(), 8), ("N".into(), 8)],
+            vec![
+                ("P".into(), vec![0, 1], None),
+                ("Q".into(), vec![1, 2], Some(DensityModel::uniform(0.5))),
+                ("Z".into(), vec![0, 2], None),
+            ],
+            vec![1],
+        )
+        .is_err());
+        // A banded row length that disagrees with the tensor's innermost
+        // dimension would not survive a spec round-trip — rejected.
+        assert!(Workload::custom_models(
+            "t",
+            WorkloadKind::SpMM,
+            vec![("M".into(), 8), ("K".into(), 8), ("N".into(), 8)],
+            vec![
+                ("P".into(), vec![0, 1], Some(DensityModel::banded(2, 1024))),
+                ("Q".into(), vec![1, 2], Some(DensityModel::uniform(0.5))),
+                ("Z".into(), vec![0, 2], None),
+            ],
+            vec![1],
+        )
+        .is_err());
     }
 
     #[test]

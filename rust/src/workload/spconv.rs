@@ -90,8 +90,8 @@ mod tests {
         let s = ConvShape { c: 3, h: 32, w: 32, kout: 64, r: 3, s: 3 };
         let w = lower_conv("conv1", s, 1.0, 0.546);
         assert_eq!(w.kind, WorkloadKind::SpConv);
-        assert!((w.tensors[TENSOR_P].density - 0.546).abs() < 1e-12); // weights
-        assert!((w.tensors[TENSOR_Q].density - 1.0).abs() < 1e-12); // acts
+        assert!((w.tensors[TENSOR_P].density.avg() - 0.546).abs() < 1e-12); // weights
+        assert!((w.tensors[TENSOR_Q].density.avg() - 1.0).abs() < 1e-12); // acts
         assert_eq!(w.dims[0].size, 64);
         assert_eq!(w.dims[1].size, 27);
         assert_eq!(w.dims[2].size, 1024);

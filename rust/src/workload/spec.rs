@@ -23,7 +23,13 @@
 //! ```
 //!
 //!   The output tensor's density may be omitted (derived from the operand
-//!   densities, see [`super::output_density`]).
+//!   densities, see [`super::output_density`]). A density may also be a
+//!   structured sparsity pattern ([`crate::sparsity::DensityModel`]) in
+//!   object form, e.g. `{"kind": "block", "block": 4, "density": 0.3}`,
+//!   `{"kind": "banded", "bandwidth": 8}` (band width over the tensor's
+//!   innermost dimension), `{"kind": "row_skewed", "alpha": 0.7,
+//!   "density": 0.3}` or `{"kind": "measured", "buckets": [..]}` (as
+//!   printed by `sparsemap inspect-tensor`).
 //!
 //! * **SpConv shorthand** — a convolution layer lowered to implicit GEMM
 //!   exactly like the Table III conv rows:
@@ -40,6 +46,7 @@
 
 use super::spconv::{lower_conv, ConvShape};
 use super::{Workload, WorkloadKind, NUM_TENSORS};
+use crate::sparsity::DensityModel;
 use crate::util::json::Json;
 use anyhow::{anyhow, ensure, Context, Result};
 
@@ -120,7 +127,8 @@ pub fn workload_from_spec(j: &Json) -> Result<Workload> {
         tensors_json.len()
     );
     let default_names = ["P", "Q", "Z"];
-    let mut tensors: Vec<(String, Vec<usize>, f64)> = Vec::with_capacity(NUM_TENSORS);
+    let mut tensors: Vec<(String, Vec<usize>, Option<DensityModel>)> =
+        Vec::with_capacity(NUM_TENSORS);
     for (t, tj) in tensors_json.iter().enumerate() {
         let name = tj.get("name").and_then(Json::as_str).unwrap_or(default_names[t]);
         let proj = req(tj, "dims")?
@@ -133,12 +141,15 @@ pub fn workload_from_spec(j: &Json) -> Result<Workload> {
                 .ok_or_else(|| anyhow!("tensor '{name}' projections must be dim names"))?;
             refs.push(resolve(dim_name).with_context(|| format!("tensor '{name}'"))?);
         }
-        // Z's density defaults to "derive from the inputs" (<= 0 sentinel).
+        // Banded patterns span the tensor's innermost dimension.
+        let inner_extent = refs.last().map_or(1, |&d| dims[d].1);
+        // Z's density defaults to "derive from the inputs".
         let density = match tj.get("density") {
-            Some(d) => {
-                d.as_f64().ok_or_else(|| anyhow!("tensor '{name}' density must be a number"))?
-            }
-            None if t == NUM_TENSORS - 1 => 0.0,
+            Some(d) => Some(
+                DensityModel::from_json(d, inner_extent)
+                    .with_context(|| format!("tensor '{name}' density"))?,
+            ),
+            None if t == NUM_TENSORS - 1 => None,
             None => anyhow::bail!("tensor '{name}' is missing 'density'"),
         };
         tensors.push((name.to_string(), refs, density));
@@ -154,13 +165,14 @@ pub fn workload_from_spec(j: &Json) -> Result<Workload> {
         contraction.push(resolve(dim_name).context("contraction")?);
     }
 
-    Workload::custom(id, kind, dims, tensors, contraction)
+    Workload::custom_models(id, kind, dims, tensors, contraction)
         .with_context(|| format!("workload '{id}'"))
 }
 
 /// Emit the generic-einsum JSON spec for a workload. Inverse of
 /// [`workload_from_spec`]: parsing the result reproduces the workload
-/// exactly (densities are emitted explicitly, including the output's).
+/// exactly (densities are emitted explicitly, including the output's —
+/// uniform models as bare numbers, structured patterns in object form).
 pub fn workload_to_spec(w: &Workload) -> Json {
     Json::obj(vec![
         ("id", Json::str(&w.id)),
@@ -193,7 +205,7 @@ pub fn workload_to_spec(w: &Workload) -> Json {
                                     t.dims.iter().map(|&d| Json::str(&w.dims[d].name)).collect(),
                                 ),
                             ),
-                            ("density", Json::num(t.density)),
+                            ("density", t.density.to_json()),
                         ])
                     })
                     .collect(),
@@ -233,7 +245,7 @@ mod tests {
         assert_eq!(w.rank(), 3);
         assert_eq!(w.tensors[0].dims, vec![0, 1]);
         assert_eq!(w.contraction, vec![1]);
-        assert!(w.tensors[2].density > 0.0, "derived output density");
+        assert!(w.tensors[2].density.avg() > 0.0, "derived output density");
     }
 
     #[test]
@@ -259,6 +271,59 @@ mod tests {
         let w = workload_from_spec(&Json::parse(src).unwrap()).unwrap();
         assert_eq!(w.kind, WorkloadKind::SpConv);
         assert_eq!(w.dims[0].size, 128); // Kout becomes GEMM M
+    }
+
+    #[test]
+    fn parses_and_round_trips_structured_densities() {
+        let src = r#"{
+            "id": "blocky", "kind": "SpMM",
+            "dims": [{"name": "M", "size": 64}, {"name": "K", "size": 512},
+                     {"name": "N", "size": 64}],
+            "tensors": [
+                {"name": "P", "dims": ["M", "K"],
+                 "density": {"kind": "block", "block": 16, "density": 0.2}},
+                {"name": "Q", "dims": ["K", "N"],
+                 "density": {"kind": "banded", "bandwidth": 8}},
+                {"name": "Z", "dims": ["M", "N"]}
+            ],
+            "contraction": ["K"]
+        }"#;
+        let w = workload_from_spec(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(w.tensors[0].density, DensityModel::block(16, 0.2));
+        // The banded row length resolves to Q's innermost dim (N = 64).
+        assert_eq!(w.tensors[1].density, DensityModel::banded(8, 64));
+        let j = workload_to_spec(&w);
+        assert_eq!(workload_from_spec(&Json::parse(&j.dumps()).unwrap()).unwrap(), w);
+    }
+
+    #[test]
+    fn rejects_bad_structured_density() {
+        let mk = |density: &str| {
+            format!(
+                r#"{{
+                    "id": "v", "kind": "SpMM",
+                    "dims": [{{"name": "M", "size": 8}}, {{"name": "K", "size": 8}},
+                             {{"name": "N", "size": 8}}],
+                    "tensors": [
+                        {{"name": "P", "dims": ["M", "K"], "density": {density}}},
+                        {{"name": "Q", "dims": ["K", "N"], "density": 0.5}},
+                        {{"name": "Z", "dims": ["M", "N"]}}
+                    ],
+                    "contraction": ["K"]
+                }}"#
+            )
+        };
+        for bad in [
+            r#"{"kind": "block", "block": 0, "density": 0.5}"#,
+            r#"{"kind": "block", "block": 4, "density": 1.5}"#,
+            r#"{"kind": "warp", "density": 0.5}"#,
+            r#"{"block": 4}"#,
+            "true",
+        ] {
+            let j = Json::parse(&mk(bad)).unwrap();
+            assert!(workload_from_spec(&j).is_err(), "{bad}");
+        }
+        assert!(workload_from_spec(&Json::parse(&mk("0.5")).unwrap()).is_ok());
     }
 
     #[test]

@@ -102,7 +102,7 @@ mod tests {
     fn lookup() {
         let w = by_id("mm3").unwrap();
         assert_eq!(w.dims[0].size, 730);
-        assert!((w.tensors[TENSOR_P].density - 0.118).abs() < 1e-12);
+        assert!((w.tensors[TENSOR_P].density.avg() - 0.118).abs() < 1e-12);
         assert!(by_id("nope").is_none());
     }
 
@@ -110,7 +110,9 @@ mod tests {
     fn densities_in_range() {
         for w in all() {
             for t in &w.tensors {
-                assert!(t.density > 0.0 && t.density <= 1.0, "{}: {}", w.id, t.density);
+                let d = t.density.avg();
+                assert!(d > 0.0 && d <= 1.0, "{}: {}", w.id, d);
+                assert!(t.density.validate().is_ok(), "{}", w.id);
             }
         }
     }
@@ -123,15 +125,15 @@ mod tests {
         assert_eq!(w.dims[0].size, 128);
         assert_eq!(w.dims[1].size, 128 * 9);
         assert_eq!(w.dims[2].size, 256);
-        assert!((w.tensors[TENSOR_P].density - 0.647).abs() < 1e-12);
-        assert!((w.tensors[TENSOR_Q].density - 0.477).abs() < 1e-12);
+        assert!((w.tensors[TENSOR_P].density.avg() - 0.647).abs() < 1e-12);
+        assert!((w.tensors[TENSOR_Q].density.avg() - 0.477).abs() < 1e-12);
     }
 
     #[test]
     fn mm8_dense_operand() {
         let w = by_id("mm8").unwrap();
-        assert_eq!(w.tensors[TENSOR_P].density, 1.0);
-        assert_eq!(w.tensors[TENSOR_Q].density, 0.5);
+        assert_eq!(w.tensors[TENSOR_P].density.avg(), 1.0);
+        assert_eq!(w.tensors[TENSOR_Q].density.avg(), 0.5);
     }
 
     #[test]

@@ -121,6 +121,41 @@ fn spec_file_request_round_trips_and_runs() {
 }
 
 #[test]
+fn structured_density_spec_runs_end_to_end() {
+    // Object-form densities (block P, banded Q) through the same JSON
+    // path `run-spec` uses: parse, round-trip, search, report round-trip.
+    let src = r#"{
+        "workload": {
+            "id": "block_spec",
+            "kind": "SpMM",
+            "dims": [{"name": "M", "size": 64}, {"name": "K", "size": 128},
+                     {"name": "N", "size": 48}],
+            "tensors": [
+                {"name": "P", "dims": ["M", "K"],
+                 "density": {"kind": "block", "block": 16, "density": 0.2}},
+                {"name": "Q", "dims": ["K", "N"],
+                 "density": {"kind": "banded", "bandwidth": 12}},
+                {"name": "Z", "dims": ["M", "N"]}
+            ],
+            "contraction": ["K"]
+        },
+        "platform": "mobile",
+        "method": "sparsemap",
+        "budget": 300,
+        "seed": 7
+    }"#;
+    let req = SearchRequest::from_json(&Json::parse(src).unwrap()).unwrap();
+    let rt = Json::parse(&req.to_json().dumps()).unwrap();
+    assert_eq!(SearchRequest::from_json(&rt).unwrap(), req);
+    let report = req.build().unwrap().run().unwrap();
+    assert_eq!(report.outcome.workload, "block_spec");
+    assert!(report.outcome.evals <= 300);
+    let parsed =
+        SearchReport::from_json(&Json::parse(&report.to_json().pretty()).unwrap()).unwrap();
+    assert_eq!(parsed.to_json(), report.to_json());
+}
+
+#[test]
 fn workload_spec_validation_errors() {
     let base = r#"{
         "id": "v", "kind": "SpMM",

@@ -5,8 +5,10 @@ use sparsemap::arch::{Boundary, Platform};
 use sparsemap::genome::{decode, ops, tensor_ranks, GenomeSpec};
 use sparsemap::mapping::{loopnest, permutation, MapLevel};
 use sparsemap::model::{evaluate_features, extract, platform_vector, NativeEvaluator};
+use sparsemap::sparse::{stack_storage, stack_storage_model, RankFormat};
+use sparsemap::sparsity::DensityModel;
 use sparsemap::util::rng::Pcg64;
-use sparsemap::workload::{table3, Workload, TENSOR_P, TENSOR_Q, TENSOR_Z};
+use sparsemap::workload::{table3, Workload, WorkloadKind, TENSOR_P, TENSOR_Q, TENSOR_Z};
 
 fn random_workload(rng: &mut Pcg64) -> Workload {
     let dims: Vec<u64> = (0..3).map(|_| 1 << rng.range_u32(2, 9)).collect();
@@ -193,6 +195,143 @@ fn prop_spatial_decomposition() {
                 assert!(fanout % distinct == 0, "distinct must divide fanout");
             }
         }
+    }
+}
+
+/// One random instance of every density-model variant at a shared mean
+/// density (where the variant permits pinning it).
+fn random_density_models(rng: &mut Pcg64) -> Vec<DensityModel> {
+    let d = 0.01 + rng.f64() * 0.98;
+    let mut buckets: Vec<f64> = (0..1 + rng.index(31)).map(|_| rng.f64()).collect();
+    buckets.push(d); // at least one strictly positive bucket
+    vec![
+        DensityModel::uniform(d),
+        DensityModel::block(1 + rng.below(128), d),
+        DensityModel::banded(1 + rng.below(64), 64 + rng.below(1024)),
+        DensityModel::row_skewed(rng.f64() * 0.9, d),
+        DensityModel::measured(buckets),
+    ]
+}
+
+/// Invariant: every density model's occupancy statistics are proper
+/// probabilities/densities — `avg`, `slot_prob` and `occupancy_quantile`
+/// in [0, 1], quantiles non-decreasing in `q`, `sizing_ratio` a finite
+/// multiplier >= 1.
+#[test]
+fn prop_density_model_occupancies_in_unit_interval() {
+    let mut rng = Pcg64::seeded(109);
+    for _ in 0..60 {
+        for m in random_density_models(&mut rng) {
+            assert!(m.validate().is_ok(), "{}", m.describe());
+            let avg = m.avg();
+            assert!((0.0..=1.0).contains(&avg) && avg > 0.0, "{}", m.describe());
+            let mut tile = 1.0f64;
+            while tile <= 10e6 {
+                let p = m.slot_prob(tile);
+                assert!((0.0..=1.0).contains(&p), "{}: slot_prob {p}", m.describe());
+                let mut last_q = 0.0f64;
+                for q in [0.0, 0.25, 0.5, 0.75, 0.95, 1.0] {
+                    let v = m.occupancy_quantile(tile, q);
+                    assert!((0.0..=1.0).contains(&v), "{}: quantile {v}", m.describe());
+                    assert!(v + 1e-12 >= last_q, "{}: quantile not monotone", m.describe());
+                    last_q = v;
+                }
+                let r = m.sizing_ratio(tile);
+                assert!(r.is_finite() && r >= 1.0, "{}: ratio {r}", m.describe());
+                tile *= 7.0;
+            }
+        }
+    }
+}
+
+/// Invariant: expected tile nonzeros and per-slot occupancy are monotone
+/// in the tile/slot size for every model.
+#[test]
+fn prop_density_model_monotone_in_tile_size() {
+    let mut rng = Pcg64::seeded(111);
+    for _ in 0..60 {
+        for m in random_density_models(&mut rng) {
+            let mut last_nnz = 0.0f64;
+            let mut last_p = 0.0f64;
+            let mut tile = 1.0f64;
+            while tile <= 10e6 {
+                let nnz = m.tile_nonzeros(tile);
+                let p = m.slot_prob(tile);
+                assert!(nnz + 1e-12 >= last_nnz, "{}: nonzeros shrank", m.describe());
+                assert!(nnz <= tile + 1e-9, "{}: more nonzeros than slots", m.describe());
+                assert!(p + 1e-12 >= last_p, "{}: slot_prob shrank", m.describe());
+                last_nnz = nnz;
+                last_p = p;
+                tile *= 3.0;
+            }
+        }
+    }
+}
+
+/// Invariant: `Uniform(d)` reproduces the legacy scalar-density path
+/// exactly — same storage-model bits, a sizing ratio of exactly 1, and
+/// workloads built through the scalar and model constructors are
+/// identical values.
+#[test]
+fn prop_uniform_reproduces_legacy_scalar_path() {
+    let mut rng = Pcg64::seeded(112);
+    const FMTS: [RankFormat; 5] = [
+        RankFormat::Uncompressed,
+        RankFormat::Bitmask,
+        RankFormat::Rle,
+        RankFormat::CoordinatePayload,
+        RankFormat::UncompressedOffsetPair,
+    ];
+    for _ in 0..300 {
+        let d = 0.001 + rng.f64() * 0.999;
+        let extents: Vec<u64> = (0..1 + rng.index(3)).map(|_| 1 + rng.below(256)).collect();
+        let formats: Vec<RankFormat> =
+            extents.iter().map(|_| FMTS[rng.index(FMTS.len())]).collect();
+        let legacy = stack_storage(&extents, &formats, d);
+        let model = stack_storage_model(&extents, &formats, &DensityModel::uniform(d));
+        assert_eq!(legacy.0.to_bits(), model.0.to_bits());
+        assert_eq!(legacy.1.to_bits(), model.1.to_bits());
+        let m = DensityModel::uniform(d);
+        assert_eq!(m.avg().to_bits(), d.to_bits());
+        assert_eq!(m.sizing_ratio(1.0 + rng.f64() * 1e6), 1.0);
+    }
+    // Workload-level parity: the scalar constructor is exactly the
+    // Uniform model path.
+    let dims = vec![("M".to_string(), 48), ("K".to_string(), 96), ("N".to_string(), 32)];
+    let scalar = Workload::custom(
+        "u",
+        WorkloadKind::SpMM,
+        dims.clone(),
+        vec![
+            ("P".to_string(), vec![0, 1], 0.3),
+            ("Q".to_string(), vec![1, 2], 0.7),
+            ("Z".to_string(), vec![0, 2], 0.0),
+        ],
+        vec![1],
+    )
+    .unwrap();
+    let modeled = Workload::custom_models(
+        "u",
+        WorkloadKind::SpMM,
+        dims,
+        vec![
+            ("P".to_string(), vec![0, 1], Some(DensityModel::uniform(0.3))),
+            ("Q".to_string(), vec![1, 2], Some(DensityModel::uniform(0.7))),
+            ("Z".to_string(), vec![0, 2], None),
+        ],
+        vec![1],
+    )
+    .unwrap();
+    assert_eq!(scalar, modeled);
+    let ev = NativeEvaluator::new(scalar.clone(), Platform::mobile());
+    let em = NativeEvaluator::new(modeled, Platform::mobile());
+    let mut rng = Pcg64::seeded(113);
+    for _ in 0..50 {
+        let g = ev.spec.random(&mut rng);
+        assert_eq!(
+            ev.eval_genome(&g).edp.to_bits(),
+            em.eval_genome(&g).edp.to_bits()
+        );
     }
 }
 
