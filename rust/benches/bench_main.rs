@@ -6,12 +6,19 @@
 //! 20k-budget runs are recorded in EXPERIMENTS.md).
 //!
 //! Run: `cargo bench` (optionally `cargo bench -- <filter> [--quick]`).
+//!
+//! `--json <file>` additionally writes a machine-readable snapshot
+//! (`sparsemap.bench.v1`: name, runs, median/min seconds, items/sec per
+//! benchmark) — the format CI archives and `BENCH_*.json` snapshots at
+//! the repo root use to track the perf trajectory across PRs. See
+//! README "Performance".
 
 use sparsemap::arch::Platform;
 use sparsemap::baselines::run_method;
 use sparsemap::model::NativeEvaluator;
 use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, patterns, table4, ExpConfig};
 use sparsemap::search::{Backend, EvalContext};
+use sparsemap::util::json::Json;
 use sparsemap::util::rng::Pcg64;
 use sparsemap::workload::table3;
 use std::time::Instant;
@@ -33,8 +40,28 @@ fn time_one(f: &dyn Fn()) -> f64 {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
-    let filter: Vec<&String> =
-        args.iter().filter(|a| !a.starts_with("--")).collect();
+    let json_path: Option<String> = match args.iter().position(|a| a == "--json") {
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => Some(v.clone()),
+            // A missing or flag-shaped value would otherwise silently
+            // skip the snapshot (or write a file named like a flag) —
+            // fail loudly instead so CI consumers notice.
+            _ => {
+                eprintln!("error: --json requires an output file path");
+                std::process::exit(2);
+            }
+        },
+        None => None,
+    };
+    let filter: Vec<&String> = {
+        // Drop flags and --json's value from the name filters.
+        let json_value_idx = args.iter().position(|a| a == "--json").map(|i| i + 1);
+        args.iter()
+            .enumerate()
+            .filter(|(i, a)| !a.starts_with("--") && Some(*i) != json_value_idx)
+            .map(|(_, a)| a)
+            .collect()
+    };
 
     let tmp = std::env::temp_dir().join("sm_bench");
     let cfg = |budget: usize| ExpConfig {
@@ -112,6 +139,51 @@ fn main() {
             }
         }),
     });
+    // Staged-engine effectiveness: a 10k-offspring population over 100
+    // parents where only the S/G genes mutate — the common ES shape. The
+    // `staged_*` arm reuses memoized mapping/format stages; the
+    // `scratch_*` arm is the same population through the from-scratch
+    // decode→extract loop (`with_staging(false)`, cache off for both so
+    // every genome is recomputed). The ratio of the two is the engine's
+    // headline speedup (the `#[ignore]`d test in engine_parity.rs
+    // asserts >= 2x on the 100-genome version).
+    let offspring_pop: std::rc::Rc<Vec<Vec<u32>>> = {
+        let w = table3::by_id("mm3").unwrap();
+        let spec = sparsemap::genome::GenomeSpec::for_workload(&w);
+        let mut rng = Pcg64::seeded(11);
+        let parents: Vec<Vec<u32>> = (0..100).map(|_| spec.random(&mut rng)).collect();
+        std::rc::Rc::new(
+            (0..10_000)
+                .map(|i| {
+                    let mut g = parents[i % parents.len()].clone();
+                    for j in spec.sg_start..spec.len() {
+                        g[j] = rng.range_u32(spec.ranges[j].lo, spec.ranges[j].hi);
+                    }
+                    g
+                })
+                .collect(),
+        )
+    };
+    for (name, staging) in [
+        ("staged_offspring_eval_10k_mm3", true),
+        ("scratch_offspring_eval_10k_mm3", false),
+    ] {
+        let genomes = offspring_pop.clone();
+        benches.push(Bench {
+            name,
+            runs: 3,
+            items: 10_000,
+            f: Box::new(move || {
+                let mut ctx = EvalContext::new(
+                    Backend::native(table3::by_id("mm3").unwrap(), Platform::cloud()),
+                    20_000,
+                )
+                .with_cache(false)
+                .with_staging(staging);
+                std::hint::black_box(ctx.eval_batch(&genomes));
+            }),
+        });
+    }
     // Per-tile occupancy queries on the density models: these run inside
     // every fitness call (per-rank slot probabilities + per-tensor
     // sizing ratios), so they must stay in the tens-of-ns range.
@@ -257,6 +329,7 @@ fn main() {
     });
 
     println!("{:<40} {:>10} {:>12} {:>14}", "benchmark", "runs", "median", "throughput");
+    let mut rows: Vec<Json> = Vec::new();
     for b in &benches {
         if !filter.is_empty() && !filter.iter().any(|f| b.name.contains(f.as_str())) {
             continue;
@@ -265,11 +338,35 @@ fn main() {
         let mut times: Vec<f64> = (0..runs).map(|_| time_one(&b.f)).collect();
         times.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = times[times.len() / 2];
+        let min = times[0];
         let thr = if b.items > 0 {
             format!("{:>10.0}/s", b.items as f64 / median)
         } else {
             "-".to_string()
         };
         println!("{:<40} {:>10} {:>10.3}s {:>14}", b.name, runs, median, thr);
+        rows.push(Json::obj(vec![
+            ("name", Json::str(b.name)),
+            ("runs", Json::num(runs as f64)),
+            ("median_s", Json::num(median)),
+            ("min_s", Json::num(min)),
+            ("items", Json::num(b.items as f64)),
+            (
+                "items_per_s",
+                if b.items > 0 { Json::num(b.items as f64 / median) } else { Json::Null },
+            ),
+        ]));
+    }
+    if let Some(path) = json_path {
+        let doc = Json::obj(vec![
+            ("schema", Json::str("sparsemap.bench.v1")),
+            ("quick", Json::Bool(quick)),
+            ("benches", Json::Arr(rows)),
+        ]);
+        if let Err(e) = std::fs::write(&path, doc.pretty()) {
+            eprintln!("error: could not write bench JSON to {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("bench JSON written to {path}");
     }
 }

@@ -37,6 +37,20 @@ impl SearchReport {
         self.model_evals() as f64 / self.wall_s.max(1e-9)
     }
 
+    /// Distinct genomes the evaluation engine interned — the cache-key
+    /// working set of the run.
+    pub fn distinct_genomes(&self) -> usize {
+        self.outcome.interned
+    }
+
+    /// Stage-level cache hits (see `search::engine`): how much of the
+    /// population's structure the staged cache exploited. One evaluation
+    /// can contribute up to 4 hits (its mapping stage + three per-tensor
+    /// format stages), so this can legitimately exceed `evals`.
+    pub fn stage_hits(&self) -> usize {
+        self.outcome.stage_hits
+    }
+
     pub fn into_outcome(self) -> Outcome {
         self.outcome
     }
@@ -91,6 +105,8 @@ mod tests {
         assert_eq!(parsed.outcome.best_genome, report.outcome.best_genome);
         assert_eq!(parsed.outcome.curve, report.outcome.curve);
         assert_eq!(parsed.stopped_early, report.stopped_early);
+        assert_eq!(parsed.distinct_genomes(), report.distinct_genomes());
+        assert_eq!(parsed.stage_hits(), report.stage_hits());
         assert_eq!(parsed.to_json(), report.to_json());
     }
 

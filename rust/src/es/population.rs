@@ -40,6 +40,18 @@ pub fn select_top(mut pop: Vec<Individual>, keep: usize) -> Vec<Individual> {
     pop
 }
 
+/// Indices of the top `keep` individuals by fitness, without cloning the
+/// population — the per-generation parent-selection hot path (cloning
+/// every genome per generation was measurable next to the staged
+/// engine's cheap evaluations). Same stable descending order as
+/// [`select_top`], so trajectories are unchanged.
+pub fn top_indices(pop: &[Individual], keep: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..pop.len()).collect();
+    idx.sort_by(|&a, &b| pop[b].fitness().partial_cmp(&pop[a].fitness()).unwrap());
+    idx.truncate(keep);
+    idx
+}
+
 /// Mean EDP of the *valid* members (the Fig. 18 y-axis); `None` if all
 /// dead.
 pub fn mean_valid_edp(pop: &[Individual]) -> Option<f64> {
@@ -114,6 +126,25 @@ mod tests {
         // Top selection can't be worse than the population's best.
         let best_all = pop.iter().map(|i| i.fitness()).fold(0.0f64, f64::max);
         assert_eq!(top[0].fitness(), best_all);
+    }
+
+    #[test]
+    fn top_indices_matches_select_top_including_ties() {
+        let mut c = ctx();
+        let mut rng = Pcg64::seeded(8);
+        let mut genomes: Vec<_> = (0..30).map(|_| c.spec.random(&mut rng)).collect();
+        // Force fitness ties: duplicate some genomes.
+        genomes.extend(genomes[..10].to_vec());
+        let pop = evaluate_all(&mut c, genomes);
+        for keep in [1, 5, 17, 40] {
+            let by_clone = select_top(pop.clone(), keep);
+            let by_index = top_indices(&pop, keep);
+            assert_eq!(by_clone.len(), by_index.len());
+            for (a, &i) in by_clone.iter().zip(&by_index) {
+                assert_eq!(a.genome, pop[i].genome, "keep={keep}");
+                assert_eq!(a.result, pop[i].result, "keep={keep}");
+            }
+        }
     }
 
     #[test]

@@ -2,7 +2,9 @@
 
 use super::hypercube::{initialize, HshiConfig};
 use super::operators::{annealing_mutation, sensitivity_aware_crossover};
-use super::population::{evaluate_all, lhs_init, mean_valid_edp, select_top, Individual};
+use super::population::{
+    evaluate_all, lhs_init, mean_valid_edp, select_top, top_indices, Individual,
+};
 use super::sensitivity::{calibrate, CalibConfig, Sensitivity};
 use crate::genome::ops;
 use crate::search::{EvalContext, Outcome};
@@ -160,13 +162,17 @@ impl SparseMapSearch {
         while !self.ctx.exhausted() && gen < total_gens * 4 {
             let n_parents =
                 ((pop.len() as f64 * self.cfg.parent_frac) as usize).max(2);
-            let parents = select_top(pop.clone(), n_parents);
+            // Parents are only read: select by index instead of cloning
+            // every genome per generation (same stable order as
+            // `select_top`, so the rng stream and trajectory are
+            // untouched — see `top_indices`).
+            let parents = top_indices(&pop, n_parents);
 
             // Crossover: fill a fresh offspring pool.
             let mut offspring = Vec::with_capacity(self.cfg.population);
             while offspring.len() < self.cfg.population {
-                let pa = &parents[self.rng.index(parents.len())].genome;
-                let pb = &parents[self.rng.index(parents.len())].genome;
+                let pa = &pop[parents[self.rng.index(parents.len())]].genome;
+                let pb = &pop[parents[self.rng.index(parents.len())]].genome;
                 let (mut c1, mut c2) = if full {
                     sensitivity_aware_crossover(pa, pb, &high, &mut self.rng)
                 } else {

@@ -44,29 +44,38 @@ pub fn tensor_ranks(m: &Mapping, w: &Workload, t: usize) -> Vec<RankId> {
     out
 }
 
-/// Decode a genome into a design. `genome` must be in-range for `spec`.
-pub fn decode(spec: &GenomeSpec, w: &Workload, genome: &[u32]) -> Design {
-    debug_assert!(spec.in_range(genome), "genome out of range");
+/// Decode only the *mapping segment* (permutation + prime-factor genes,
+/// `genome[..spec.format_start]`) into a [`Mapping`]. A pure function of
+/// that segment — the evaluation engine memoizes it per distinct segment
+/// (see `crate::search::engine`). `genome` may be a full genome or just
+/// the mapping prefix.
+pub fn decode_mapping(spec: &GenomeSpec, w: &Workload, genome: &[u32]) -> Mapping {
     let d = w.rank();
-
-    // --- Mapping: permutations + prime-factor tiling -------------------
     let mut tile = vec![vec![1u64; d]; NUM_MAP_LEVELS];
     let mut perm = Vec::with_capacity(NUM_MAP_LEVELS);
     for level in 0..NUM_MAP_LEVELS {
         perm.push(permutation::decode(genome[level] as u64, d));
     }
-    for (i, kind) in spec.kinds.iter().enumerate() {
+    for (i, kind) in spec.kinds[..spec.format_start].iter().enumerate() {
         if let GeneKind::Factor { dim, prime, .. } = kind {
             let level = (genome[i] as usize - 1).min(NUM_MAP_LEVELS - 1);
             tile[level][*dim] *= prime;
         }
     }
-    let mapping = Mapping { tile, perm };
+    Mapping { tile, perm }
+}
 
-    // --- Sparse strategy ------------------------------------------------
+/// Decode the *strategy segments* (per-tensor format genes + S/G genes)
+/// against an already-decoded mapping. Pure in (mapping, those genes).
+pub fn decode_strategy(
+    spec: &GenomeSpec,
+    w: &Workload,
+    mapping: &Mapping,
+    genome: &[u32],
+) -> SparseStrategy {
     let mut formats: [Vec<RankFormat>; 3] = [Vec::new(), Vec::new(), Vec::new()];
     for (t, fmts) in formats.iter_mut().enumerate() {
-        let ranks = tensor_ranks(&mapping, w, t);
+        let ranks = tensor_ranks(mapping, w, t);
         let genes = &genome
             [spec.format_start + t * FORMAT_GENES_PER_TENSOR..]
             [..FORMAT_GENES_PER_TENSOR];
@@ -77,15 +86,25 @@ pub fn decode(spec: &GenomeSpec, w: &Workload, genome: &[u32]) -> Design {
         SgMechanism::from_gene(genome[spec.sg_start + 1]),
         SgMechanism::from_gene(genome[spec.sg_start + 2]),
     ];
+    SparseStrategy { formats, sg }
+}
 
-    Design { mapping, strategy: SparseStrategy { formats, sg } }
+/// Decode a genome into a design. `genome` must be in-range for `spec`.
+/// Composes the two segment-pure stages ([`decode_mapping`],
+/// [`decode_strategy`]) so the staged and from-scratch evaluation paths
+/// share this exact code.
+pub fn decode(spec: &GenomeSpec, w: &Workload, genome: &[u32]) -> Design {
+    debug_assert!(spec.in_range(genome), "genome out of range");
+    let mapping = decode_mapping(spec, w, genome);
+    let strategy = decode_strategy(spec, w, &mapping, genome);
+    Design { mapping, strategy }
 }
 
 /// Per-rank format assignment (§IV.F): with k ≤ 5 ranks, the *last* k
 /// genes of the 5-gene segment apply (outer→inner); with k > 5, the five
 /// genes cover the first five ranks and deeper ranks default to
 /// uncompressed.
-fn assign_formats(ranks: &[RankId], genes: &[u32]) -> Vec<RankFormat> {
+pub fn assign_formats(ranks: &[RankId], genes: &[u32]) -> Vec<RankFormat> {
     let k = ranks.len();
     let g = genes.len(); // == 5
     if k <= g {
@@ -196,6 +215,22 @@ mod tests {
                     tensor_ranks(&d.mapping, &w, t).len()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn staged_decode_equals_monolithic_decode() {
+        let (w, spec) = setup();
+        let mut rng = crate::util::rng::Pcg64::seeded(17);
+        for _ in 0..200 {
+            let g = spec.random(&mut rng);
+            let d = decode(&spec, &w, &g);
+            // The mapping stage sees only the mapping prefix…
+            let m = decode_mapping(&spec, &w, spec.mapping_genes(&g));
+            assert_eq!(m, d.mapping);
+            // …and the strategy stage rebuilds the rest from it.
+            let s = decode_strategy(&spec, &w, &m, &g);
+            assert_eq!(s, d.strategy);
         }
     }
 

@@ -10,7 +10,10 @@ pub mod decode;
 pub mod ops;
 pub mod spec;
 
-pub use decode::{decode, describe, tensor_ranks, Design, RankId};
+pub use decode::{
+    assign_formats, decode, decode_mapping, decode_strategy, describe, tensor_ranks, Design,
+    RankId,
+};
 pub use spec::{GeneKind, GeneRange, GenomeSpec, FORMAT_GENES_PER_TENSOR, SG_SITES};
 
 /// A genome is a plain gene vector; all structure lives in [`GenomeSpec`].

@@ -141,6 +141,23 @@ impl GenomeSpec {
         self.ranges.iter().map(|r| (r.width() as f64).log10()).sum()
     }
 
+    /// The mapping segment (permutation + prime-factor genes) of a
+    /// genome — the input of [`crate::genome::decode_mapping`] and the
+    /// key of the evaluation engine's mapping-stage cache.
+    pub fn mapping_genes<'a>(&self, genome: &'a [u32]) -> &'a [u32] {
+        &genome[..self.format_start]
+    }
+
+    /// The [`FORMAT_GENES_PER_TENSOR`] format genes of tensor `t`.
+    pub fn format_genes<'a>(&self, genome: &'a [u32], t: usize) -> &'a [u32] {
+        &genome[self.format_start + t * FORMAT_GENES_PER_TENSOR..][..FORMAT_GENES_PER_TENSOR]
+    }
+
+    /// The [`SG_SITES`] skip/gate genes.
+    pub fn sg_genes<'a>(&self, genome: &'a [u32]) -> &'a [u32] {
+        &genome[self.sg_start..][..SG_SITES]
+    }
+
     /// Natural segment boundaries used by sensitivity-aware crossover:
     /// [perm | factors | formats | sg] plus per-tensor format boundaries.
     pub fn segment_boundaries(&self) -> Vec<usize> {
@@ -226,6 +243,18 @@ mod tests {
             }
         }
         assert_eq!(count, 7);
+    }
+
+    #[test]
+    fn segment_accessors_partition_the_genome() {
+        let (_, s) = spec();
+        let g: Vec<u32> = (0..s.len() as u32).collect();
+        let mut rebuilt = s.mapping_genes(&g).to_vec();
+        for t in 0..3 {
+            rebuilt.extend_from_slice(s.format_genes(&g, t));
+        }
+        rebuilt.extend_from_slice(s.sg_genes(&g));
+        assert_eq!(rebuilt, g, "segments must tile the genome exactly");
     }
 
     #[test]

@@ -16,10 +16,10 @@
 //!   evaluates whole populations per call; Python never runs on the
 //!   search path. The default build is native-only and fully offline.
 //!
-//! ## The parallel, memoizing evaluation pipeline
+//! ## The parallel, staged, memoizing evaluation pipeline
 //!
 //! Search wall-clock is dominated by fitness evaluation, so the shared
-//! [`search::EvalContext`] owns two orthogonal accelerations that every
+//! [`search::EvalContext`] owns three orthogonal accelerations that every
 //! algorithm (SparseMap and all baselines) inherits transparently:
 //!
 //! * **Parallel batches** — attach a
@@ -27,12 +27,21 @@
 //!   population batches are chunked across workers with an
 //!   order-preserving parallel map. The cost model is pure, so search
 //!   trajectories are **bit-identical between 1 and N threads**.
-//! * **Evaluation cache** — results are memoized by genome. A repeated
-//!   genome (ES populations re-produce identical offspring constantly)
-//!   is served from the cache without a model call, but **still debits
-//!   one evaluation from the sample budget**: the paper's budget counts
+//! * **Evaluation cache** — results are memoized by genome, with genomes
+//!   hash-consed to dense ids ([`search::engine`]) so a hit costs one
+//!   slice hash + one array read and clones nothing. A repeated genome
+//!   (ES populations re-produce identical offspring constantly) is
+//!   served from the cache without a model call, but **still debits one
+//!   evaluation from the sample budget**: the paper's budget counts
 //!   submissions, not distinct designs, so cached and uncached arms stay
 //!   comparable. Caching never changes a trajectory, only its cost.
+//! * **Stage memoization** — a cache miss does not recompute from
+//!   scratch: decoded mappings and per-tensor compression stats are
+//!   memoized per genome *segment*, so offspring that mutated only part
+//!   of a parent's genome reuse the rest and pay only the
+//!   allocation-free assembly + cost arithmetic
+//!   ([`search::StageEngine`]; bit-for-bit parity with the from-scratch
+//!   path is pinned by `rust/tests/engine_parity.rs`).
 //!
 //! ## Structured sparsity patterns — [`sparsity`]
 //!

@@ -150,14 +150,16 @@ fn run_and_report(req: SearchRequest, args: &Args) -> anyhow::Result<()> {
         println!("{}", report.to_json().pretty());
     } else {
         println!(
-            "{} on {} @ {}: best EDP {:.4e}  ({} evals, {} cache hits, {:.1}% valid, {:.2}s, \
-             {:.0} model evals/s, {} threads)",
+            "{} on {} @ {}: best EDP {:.4e}  ({} evals, {} cache hits, {} stage hits over \
+             {} distinct genomes, {:.1}% valid, {:.2}s, {:.0} model evals/s, {} threads)",
             outcome.method,
             outcome.workload,
             outcome.platform,
             outcome.best_edp,
             outcome.evals,
             outcome.cache_hits,
+            outcome.stage_hits,
+            outcome.interned,
             100.0 * outcome.valid_ratio(),
             report.wall_s,
             report.model_evals_per_s(),

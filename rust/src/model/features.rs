@@ -14,12 +14,10 @@
 
 use crate::arch::{Boundary, Platform};
 use crate::genome::{tensor_ranks, Design};
-use crate::mapping::{loopnest, MapLevel};
-use crate::sparse::{control_overhead, effect, stack_storage_model, RankFormat};
+use crate::mapping::{loopnest, MapLevel, Mapping};
+use crate::sparse::{control_overhead, effect, stack_storage_model, RankFormat, SgMechanism};
 use crate::sparsity::effectual_frac;
 use crate::workload::{Workload, NUM_TENSORS, TENSOR_P, TENSOR_Q, TENSOR_Z};
-
-use super::validity::structural_problems;
 
 /// Schema version — serialized into `artifacts/meta.json` by the Python
 /// AOT pipeline and asserted by the Rust runtime at load time.
@@ -81,18 +79,18 @@ pub const F_DENSITY_Z: usize = 43;
 pub type Features = [f64; NUM_FEATURES];
 
 /// Compression statistics of a tensor's tile at a boundary, given the
-/// tensor's (precomputed) materialized ranks.
+/// tensor's (precomputed) materialized ranks and format stack.
 fn tile_compression(
-    design: &Design,
     w: &Workload,
     t: usize,
     ranks: &[crate::genome::RankId],
+    tensor_formats: &[RankFormat],
     b: Boundary,
 ) -> (f64 /* cr */, f64 /* meta_frac */) {
     let inside = loopnest::levels_inside(b);
     let mut extents: Vec<u64> = Vec::new();
     let mut formats: Vec<RankFormat> = Vec::new();
-    for (rank, fmt) in ranks.iter().zip(&design.strategy.formats[t]) {
+    for (rank, fmt) in ranks.iter().zip(tensor_formats) {
         if inside.contains(&rank.level) {
             extents.push(rank.extent);
             formats.push(*fmt);
@@ -106,17 +104,51 @@ fn tile_compression(
     ((data + meta) / dense, meta / dense)
 }
 
-/// Extract FEATURE_SCHEMA_V1 for one design.
-pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
-    let mut f = [0.0f64; NUM_FEATURES];
-    let m = &design.mapping;
-    // S/G effects and the density features consume the mean densities;
-    // the structured pattern shape enters through per-rank slot
-    // occupancy (tile_compression) and tail-quantile tile provisioning
-    // (capacity accounting below).
-    let dp = w.density(TENSOR_P);
-    let dq = w.density(TENSOR_Q);
-    let dz = w.density(TENSOR_Z);
+// --- segment-pure stages -------------------------------------------------
+//
+// `extract` is decomposed into three stages with explicit inputs, one per
+// natural genome segment, so the staged evaluation engine
+// (`crate::search::engine`) can memoize each independently while the
+// from-scratch path composes the *same* functions — parity by
+// construction, not by duplication:
+//
+// * [`mapping_stage`]  — pure in the decoded mapping (permutation +
+//   factor genes): all traffic features, tile sizes, sizing ratios,
+//   fan-outs and the fan-out half of validity.
+// * [`format_stage`]   — pure in (mapping ranks, one tensor's format
+//   stack): compression ratios, metadata fractions, the
+//   compressed/stack-validity bits.
+// * [`assemble`]       — folds stage outputs plus the S/G mechanisms
+//   (pure in the S/G genes) into the final vector. Allocation-free.
+
+/// Mapping-derived feature components (everything a mapping determines
+/// independent of formats and S/G genes). `Copy` so the engine can hand
+/// it to workers and assembly without touching the heap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MapFeats {
+    /// Features `F_P_WORDS_B0..=F_Z_WORDS_B2` (indices `0..12`).
+    traffic: [f64; 12],
+    tile_b0: [f64; NUM_TENSORS],
+    tile_b1: [f64; NUM_TENSORS],
+    sizing_b0: [f64; NUM_TENSORS],
+    sizing_b1: [f64; NUM_TENSORS],
+    active_pes: f64,
+    active_macs: f64,
+    fanout_ok: bool,
+}
+
+/// Cached output of the mapping stage: the `Copy` feature components
+/// plus the materialized per-tensor ranks the format stage consumes.
+#[derive(Clone, Debug)]
+pub struct MappingStage {
+    pub feats: MapFeats,
+    pub ranks: [Vec<crate::genome::RankId>; NUM_TENSORS],
+}
+
+/// Compute the mapping stage (pure in `m`; `plat` only feeds the
+/// fan-out validity bit).
+pub fn mapping_stage(m: &Mapping, w: &Workload, plat: &Platform) -> MappingStage {
+    let mut tr = [0.0f64; 12];
 
     // Hot path: flatten the nest once and derive the three boundary loop
     // lists and per-tensor rank lists from it (profiling showed repeated
@@ -133,10 +165,10 @@ pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
 
     // --- boundary 0: DRAM -> GLB (dense-equivalent words) ---------------
     for (t, idx) in [(TENSOR_P, F_P_WORDS_B0), (TENSOR_Q, F_Q_WORDS_B0)] {
-        f[idx] = loopnest::tile_elems(m, w, t, Boundary::DramGlb)
+        tr[idx] = loopnest::tile_elems(m, w, t, Boundary::DramGlb)
             * loopnest::input_multiplicity_over(&loops_b0, w, t);
     }
-    f[F_Z_WORDS_B0] = loopnest::output_traffic_elems_over(
+    tr[F_Z_WORDS_B0] = loopnest::output_traffic_elems_over(
         &loops_b0,
         w,
         loopnest::tile_elems(m, w, TENSOR_Z, Boundary::DramGlb),
@@ -152,9 +184,9 @@ pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
         let mult = loopnest::input_multiplicity_over(&loops_b1, w, t);
         let distinct = loopnest::spatial_distinct(m, w, t, MapLevel::L2S) as f64;
         // GLB is read once per distinct tile (multicast on the NoC)...
-        f[ridx] = tile * mult * distinct;
+        tr[ridx] = tile * mult * distinct;
         // ...but every PE receives its copy.
-        f[nidx] = tile * mult * pe_fanout;
+        tr[nidx] = tile * mult * pe_fanout;
     }
     {
         // Output at boundary 1: per-PE psum traffic plus cross-PE
@@ -164,8 +196,8 @@ pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
         let distinct_z =
             loopnest::spatial_distinct(m, w, TENSOR_Z, MapLevel::L2S) as f64;
         let spatial_k = pe_fanout / distinct_z; // reduction width across PEs
-        f[F_Z_GLB_WORDS_B1] = base * distinct_z * spatial_k.max(1.0);
-        f[F_Z_NOC_WORDS_B1] = base * pe_fanout.max(1.0);
+        tr[F_Z_GLB_WORDS_B1] = base * distinct_z * spatial_k.max(1.0);
+        tr[F_Z_NOC_WORDS_B1] = base * pe_fanout.max(1.0);
     }
 
     // --- boundary 2: PE buffer -> MACs -----------------------------------
@@ -173,42 +205,140 @@ pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
     for (t, idx) in [(TENSOR_P, F_P_WORDS_B2), (TENSOR_Q, F_Q_WORDS_B2)] {
         let mult = loopnest::input_multiplicity_over(&loops_b2, w, t);
         let distinct = loopnest::spatial_distinct(m, w, t, MapLevel::L3S) as f64;
-        f[idx] = mult * distinct * pe_fanout;
+        tr[idx] = mult * distinct * pe_fanout;
     }
     {
         let base = loopnest::output_traffic_elems_over(&loops_b2, w, 1.0);
         let distinct_z =
             loopnest::spatial_distinct(m, w, TENSOR_Z, MapLevel::L3S) as f64;
         let spatial_k = mac_fanout / distinct_z;
-        f[F_Z_WORDS_B2] = base * distinct_z * spatial_k.max(1.0) * pe_fanout;
+        tr[F_Z_WORDS_B2] = base * distinct_z * spatial_k.max(1.0) * pe_fanout;
     }
 
-    // --- compression ratios and metadata fractions ----------------------
-    // Computed once per (tensor, boundary) and reused by the capacity
-    // accounting below (stack_storage is the second-hottest call).
-    let mut crs = [[0.0f64; 2]; NUM_TENSORS];
-    let mut metas = [[0.0f64; 2]; NUM_TENSORS];
+    // --- tiles, sizing ratios, fan-outs ----------------------------------
+    // Buffers are provisioned for the tail-quantile tile occupancy of
+    // each tensor's sparsity pattern ([`DensityModel::sizing_ratio`]):
+    // a mean-sized buffer under-provisions banded/skewed tensors whose
+    // hot tiles are locally dense. Uniform models have ratio exactly 1.
+    let mut tile_b0 = [0.0f64; NUM_TENSORS];
+    let mut tile_b1 = [0.0f64; NUM_TENSORS];
+    let mut sizing_b0 = [0.0f64; NUM_TENSORS];
+    let mut sizing_b1 = [0.0f64; NUM_TENSORS];
     for t in 0..NUM_TENSORS {
-        let (cr_b0, meta_b0) = tile_compression(design, w, t, &ranks[t], Boundary::DramGlb);
-        let (cr_b1, meta_b1) = tile_compression(design, w, t, &ranks[t], Boundary::GlbPe);
-        crs[t] = [cr_b0, cr_b1];
-        metas[t] = [meta_b0, meta_b1];
+        let dm = &w.tensors[t].density;
+        tile_b0[t] = loopnest::tile_elems(m, w, t, Boundary::DramGlb);
+        tile_b1[t] = loopnest::tile_elems(m, w, t, Boundary::GlbPe);
+        sizing_b0[t] = dm.sizing_ratio(tile_b0[t]);
+        sizing_b1[t] = dm.sizing_ratio(tile_b1[t]);
     }
+    let fanout_ok = m.fanout(MapLevel::L2S) <= plat.total_pes()
+        && m.fanout(MapLevel::L3S) <= plat.macs_per_pe;
+
+    MappingStage {
+        feats: MapFeats {
+            traffic: tr,
+            tile_b0,
+            tile_b1,
+            sizing_b0,
+            sizing_b1,
+            active_pes: pe_fanout.max(1.0),
+            active_macs: (pe_fanout * mac_fanout).max(1.0),
+            fanout_ok,
+        },
+        ranks,
+    }
+}
+
+/// Format-stage output for one tensor: compression ratios and metadata
+/// fractions at both storage boundaries plus the strategy-validity bits.
+/// `Copy` — the engine caches it by (mapping, format-gene) key.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TensorCompression {
+    /// Compression ratio at `[DramGlb, GlbPe]`.
+    pub cr: [f64; 2],
+    /// Metadata fraction at `[DramGlb, GlbPe]`.
+    pub meta: [f64; 2],
+    /// Any compressing rank in the stack (feeds the S/G driver check).
+    pub compressed: bool,
+    /// `compat::stack_ok` of the stack.
+    pub stack_ok: bool,
+}
+
+/// Compute the format stage for tensor `t`: pure in (its materialized
+/// ranks under the mapping, its assigned format stack).
+pub fn format_stage(
+    w: &Workload,
+    t: usize,
+    ranks: &[crate::genome::RankId],
+    formats: &[RankFormat],
+) -> TensorCompression {
+    let (cr_b0, meta_b0) = tile_compression(w, t, ranks, formats, Boundary::DramGlb);
+    let (cr_b1, meta_b1) = tile_compression(w, t, ranks, formats, Boundary::GlbPe);
+    TensorCompression {
+        cr: [cr_b0, cr_b1],
+        meta: [meta_b0, meta_b1],
+        compressed: formats.iter().any(|f| f.compressing()),
+        stack_ok: crate::sparse::compat::stack_ok(formats),
+    }
+}
+
+/// Per-workload constants consumed by [`assemble`] (precomputed once by
+/// the engine; recomputed per call on the from-scratch path — same
+/// functions, same inputs, identical bits).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadConsts {
+    pub total_ops: f64,
+    pub dp: f64,
+    pub dq: f64,
+    pub dz: f64,
+    /// Intrinsic effectual-MAC fraction of the operand patterns
+    /// (`sparsity::effectual_frac`; `dp*dq` for uniform models).
+    pub min_compute_frac: f64,
+}
+
+impl WorkloadConsts {
+    pub fn of(w: &Workload) -> WorkloadConsts {
+        WorkloadConsts {
+            total_ops: w.total_ops(),
+            dp: w.density(TENSOR_P),
+            dq: w.density(TENSOR_Q),
+            dz: w.density(TENSOR_Z),
+            min_compute_frac: effectual_frac(
+                &w.tensors[TENSOR_P].density,
+                &w.tensors[TENSOR_Q].density,
+            ),
+        }
+    }
+}
+
+/// Fold stage outputs + S/G mechanisms into the final feature vector.
+/// Pure arithmetic over `Copy` inputs: performs **zero heap allocation**
+/// (the engine's steady-state invariant — see `rust/tests/alloc_steady_state.rs`).
+pub fn assemble(
+    c: &WorkloadConsts,
+    mf: &MapFeats,
+    comp: &[TensorCompression; NUM_TENSORS],
+    sg: [SgMechanism; 3],
+) -> Features {
+    let mut f = [0.0f64; NUM_FEATURES];
+    f[..12].copy_from_slice(&mf.traffic);
+
+    // --- compression ratios and metadata fractions ----------------------
     for (t, cr0, cr1, me0, me1) in [
         (TENSOR_P, F_CR_P_B0, F_CR_P_B1, F_META_P_B0, F_META_P_B1),
         (TENSOR_Q, F_CR_Q_B0, F_CR_Q_B1, F_META_Q_B0, F_META_Q_B1),
         (TENSOR_Z, F_CR_Z_B0, F_CR_Z_B1, F_META_Z_B0, F_META_Z_B1),
     ] {
-        f[cr0] = crs[t][0];
-        f[cr1] = crs[t][1];
-        f[me0] = metas[t][0];
-        f[me1] = metas[t][1];
+        f[cr0] = comp[t].cr[0];
+        f[cr1] = comp[t].cr[1];
+        f[me0] = comp[t].meta[0];
+        f[me1] = comp[t].meta[1];
     }
 
     // --- S/G multipliers --------------------------------------------------
-    let sg_l2 = effect(design.strategy.sg[0], dp, dq);
-    let sg_l3 = effect(design.strategy.sg[1], dp, dq);
-    let sg_c = effect(design.strategy.sg[2], dp, dq);
+    let sg_l2 = effect(sg[0], c.dp, c.dq);
+    let sg_l3 = effect(sg[1], c.dp, c.dq);
+    let sg_c = effect(sg[2], c.dp, c.dq);
     f[F_SG_P_ENERGY_B1] = sg_l2.p_energy;
     f[F_SG_Q_ENERGY_B1] = sg_l2.q_energy;
     f[F_SG_CYCLES_B1] = sg_l2.cycles;
@@ -220,40 +350,50 @@ pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
     // intrinsic effectual-MAC fraction of the operand patterns (for
     // uniform models exactly the legacy dp*dq).
     f[F_COMPUTE_CYCLE_FRAC] = (sg_l2.cycles * sg_l3.cycles * sg_c.cycles)
-        .max(effectual_frac(
-            &w.tensors[TENSOR_P].density,
-            &w.tensors[TENSOR_Q].density,
-        ))
+        .max(c.min_compute_frac)
         .min(1.0);
-    f[F_CTRL_B1] = control_overhead(design.strategy.sg[0]);
-    f[F_CTRL_B2] = control_overhead(design.strategy.sg[1]);
-    f[F_CTRL_C] = control_overhead(design.strategy.sg[2]);
+    f[F_CTRL_B1] = control_overhead(sg[0]);
+    f[F_CTRL_B2] = control_overhead(sg[1]);
+    f[F_CTRL_C] = control_overhead(sg[2]);
 
     // --- compute / occupancy / validity ----------------------------------
-    f[F_TOTAL_OPS] = w.total_ops();
-    f[F_ACTIVE_PES] = pe_fanout.max(1.0);
-    f[F_ACTIVE_MACS] = (pe_fanout * mac_fanout).max(1.0);
-    // Buffers are provisioned for the tail-quantile tile occupancy of
-    // each tensor's sparsity pattern ([`DensityModel::sizing_ratio`]):
-    // a mean-sized buffer under-provisions banded/skewed tensors whose
-    // hot tiles are locally dense. Uniform models have ratio exactly 1.
+    f[F_TOTAL_OPS] = c.total_ops;
+    f[F_ACTIVE_PES] = mf.active_pes;
+    f[F_ACTIVE_MACS] = mf.active_macs;
     let mut glb_words = 0.0;
     let mut pe_words = 0.0;
     for t in 0..NUM_TENSORS {
-        let dm = &w.tensors[t].density;
-        let tile_b0 = loopnest::tile_elems(m, w, t, Boundary::DramGlb);
-        let tile_b1 = loopnest::tile_elems(m, w, t, Boundary::GlbPe);
-        glb_words += tile_b0 * crs[t][0] * dm.sizing_ratio(tile_b0);
-        pe_words += tile_b1 * crs[t][1] * dm.sizing_ratio(tile_b1);
+        glb_words += mf.tile_b0[t] * comp[t].cr[0] * mf.sizing_b0[t];
+        pe_words += mf.tile_b1[t] * comp[t].cr[1] * mf.sizing_b1[t];
     }
     f[F_GLB_TILE_WORDS] = glb_words;
     f[F_PE_TILE_WORDS] = pe_words;
-    f[F_STRUCT_VALID] =
-        if structural_problems(design, w, plat).is_empty() { 1.0 } else { 0.0 };
-    f[F_DENSITY_P] = dp;
-    f[F_DENSITY_Q] = dq;
-    f[F_DENSITY_Z] = dz;
+    // Structural validity from the stage bits: fan-outs (mapping stage),
+    // per-stack format rules (format stage), and the skip-needs-
+    // compressed-driver rule (S/G genes + compressed bits). Equivalent to
+    // `structural_problems(..).is_empty()` — the boolean twins are
+    // equivalence-tested exhaustively in `sparse::compat`.
+    let struct_valid = mf.fanout_ok
+        && comp.iter().all(|tc| tc.stack_ok)
+        && crate::sparse::compat::saf_ok(&sg, comp[0].compressed, comp[1].compressed);
+    f[F_STRUCT_VALID] = if struct_valid { 1.0 } else { 0.0 };
+    f[F_DENSITY_P] = c.dp;
+    f[F_DENSITY_Q] = c.dq;
+    f[F_DENSITY_Z] = c.dz;
     f
+}
+
+/// Extract FEATURE_SCHEMA_V1 for one design — composes the three
+/// segment-pure stages, so this from-scratch path and the staged engine
+/// are the same code.
+pub fn extract(design: &Design, w: &Workload, plat: &Platform) -> Features {
+    let ms = mapping_stage(&design.mapping, w, plat);
+    let comp = [
+        format_stage(w, TENSOR_P, &ms.ranks[TENSOR_P], &design.strategy.formats[TENSOR_P]),
+        format_stage(w, TENSOR_Q, &ms.ranks[TENSOR_Q], &design.strategy.formats[TENSOR_Q]),
+        format_stage(w, TENSOR_Z, &ms.ranks[TENSOR_Z], &design.strategy.formats[TENSOR_Z]),
+    ];
+    assemble(&WorkloadConsts::of(w), &ms.feats, &comp, design.strategy.sg)
 }
 
 /// Cast features to the f32 row consumed by the PJRT executable.
@@ -404,6 +544,43 @@ mod tests {
         assert_eq!(f_band[F_DENSITY_P], f_uni[F_DENSITY_P]);
         for v in f_band.iter() {
             assert!(v.is_finite() && *v >= 0.0);
+        }
+    }
+
+    #[test]
+    fn stage_reuse_is_bitwise_identical_to_extract() {
+        // The memoization contract: computing the mapping stage once and
+        // assembling two different strategies against it must equal two
+        // independent `extract` calls bit-for-bit.
+        let (w, p, spec) = setup();
+        let mut rng = Pcg64::seeded(23);
+        let consts = WorkloadConsts::of(&w);
+        for _ in 0..100 {
+            let g1 = spec.random(&mut rng);
+            // g2 shares g1's mapping segment, mutates formats + S/G.
+            let mut g2 = spec.random(&mut rng);
+            g2[..spec.format_start].copy_from_slice(spec.mapping_genes(&g1));
+            let d1 = decode(&spec, &w, &g1);
+            let d2 = decode(&spec, &w, &g2);
+            assert_eq!(d1.mapping, d2.mapping);
+
+            let ms = mapping_stage(&d1.mapping, &w, &p); // computed ONCE
+            for (g, d) in [(&g1, &d1), (&g2, &d2)] {
+                let comp = [
+                    format_stage(&w, 0, &ms.ranks[0], &d.strategy.formats[0]),
+                    format_stage(&w, 1, &ms.ranks[1], &d.strategy.formats[1]),
+                    format_stage(&w, 2, &ms.ranks[2], &d.strategy.formats[2]),
+                ];
+                let staged = assemble(&consts, &ms.feats, &comp, d.strategy.sg);
+                let scratch = extract(d, &w, &p);
+                for i in 0..NUM_FEATURES {
+                    assert_eq!(
+                        staged[i].to_bits(),
+                        scratch[i].to_bits(),
+                        "feature {i} diverged for genome {g:?}"
+                    );
+                }
+            }
         }
     }
 

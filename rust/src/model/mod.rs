@@ -10,9 +10,12 @@ pub mod features;
 pub mod validity;
 
 pub use cost::{evaluate_features, platform_vector, CostBreakdown};
-pub use features::{extract, to_f32_row, Features, NUM_FEATURES, NUM_PLATFORM_FEATURES,
-                   SCHEMA_VERSION};
-pub use validity::{structural_problems, InvalidReason};
+pub use features::{
+    assemble, extract, format_stage, mapping_stage, to_f32_row, Features, MapFeats,
+    MappingStage, TensorCompression, WorkloadConsts, NUM_FEATURES, NUM_PLATFORM_FEATURES,
+    SCHEMA_VERSION,
+};
+pub use validity::{is_structurally_valid, structural_problems, InvalidReason};
 
 use crate::arch::Platform;
 use crate::genome::{decode, Design, GenomeSpec};
@@ -86,6 +89,13 @@ impl NativeEvaluator {
         let f = extract(design, &self.workload, &self.platform);
         let cb = evaluate_features(&f, &self.platform_vec);
         EvalResult::from_breakdown(&cb)
+    }
+
+    /// Finish an evaluation from an already-assembled feature vector —
+    /// the staged engine's last step. Same arithmetic as
+    /// [`NativeEvaluator::eval_design`]; allocation-free.
+    pub fn eval_features(&self, f: &Features) -> EvalResult {
+        EvalResult::from_breakdown(&evaluate_features(f, &self.platform_vec))
     }
 
     /// Full breakdown (reports, Fig. 2).

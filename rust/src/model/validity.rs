@@ -43,6 +43,21 @@ impl std::fmt::Display for InvalidReason {
     }
 }
 
+/// Allocation-free twin of [`structural_problems`]:
+/// `is_structurally_valid(d, w, p)` ⟺ `structural_problems(d, w, p).is_empty()`
+/// (asserted over random designs by tests). This is the *whole-design
+/// reference* for the validity bit; the evaluation hot path computes the
+/// same predicate piecewise from stage-cached components in
+/// `model::features::assemble` (fan-outs from the mapping stage,
+/// stack/driver rules from the format stage + S/G genes) — the
+/// equivalence of those pieces is pinned exhaustively in
+/// `sparse::compat`'s tests and end-to-end by the parity suite.
+pub fn is_structurally_valid(design: &Design, _w: &Workload, plat: &Platform) -> bool {
+    design.strategy.check_ok()
+        && design.mapping.fanout(MapLevel::L2S) <= plat.total_pes()
+        && design.mapping.fanout(MapLevel::L3S) <= plat.macs_per_pe
+}
+
 /// Structural checks only (no capacity — that needs the traffic model).
 pub fn structural_problems(
     design: &Design,
@@ -121,6 +136,29 @@ mod tests {
         let problems = structural_problems(&d, &w, &p);
         assert_eq!(problems.len(), 1);
         assert!(matches!(&problems[0], InvalidReason::Strategy(_)));
+    }
+
+    #[test]
+    fn boolean_twin_matches_diagnostic_path() {
+        // Random designs over a workload whose space contains valid and
+        // invalid points in quantity: the booleans must agree everywhere.
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        let p = Platform::edge();
+        let spec = GenomeSpec::for_workload(&w);
+        let mut rng = crate::util::rng::Pcg64::seeded(31);
+        let (mut ok, mut bad) = (0, 0);
+        for _ in 0..500 {
+            let g = spec.random(&mut rng);
+            let d = decode(&spec, &w, &g);
+            let diag = structural_problems(&d, &w, &p).is_empty();
+            assert_eq!(is_structurally_valid(&d, &w, &p), diag);
+            if diag {
+                ok += 1;
+            } else {
+                bad += 1;
+            }
+        }
+        assert!(ok > 0 && bad > 0, "sample covered only one verdict ({ok}/{bad})");
     }
 
     #[test]

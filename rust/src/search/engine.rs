@@ -1,0 +1,534 @@
+//! The staged, interned evaluation engine — the search hot path.
+//!
+//! SparseMap's entire sample budget is spent inside one function
+//! (genome → decode → feature extraction → cost), so this module makes
+//! per-candidate evaluation as close to free as the population's
+//! structure allows. Three layers:
+//!
+//! 1. **Genome interning** ([`Interner`]) — genomes are hash-consed to
+//!    dense `u32` ids with the in-tree Fx hasher
+//!    ([`crate::util::hash`]). The result caches are plain
+//!    `Vec<Option<EvalResult>>` tables indexed by id: a cache hit costs
+//!    one slice hash + one array read, and *nothing is cloned on a hit*
+//!    (the old pipeline keyed a `HashMap` on cloned `Vec<u32>` genomes).
+//!
+//! 2. **Stage-level memoization** ([`StageEngine`]) — the genome's
+//!    natural segments (mapping genes | per-tensor format genes | S/G
+//!    genes, per [`crate::genome::GenomeSpec`]) are evaluated as the segment-pure
+//!    stages of `model::features`: the decoded mapping and its derived
+//!    features are cached per distinct *mapping segment*, and per-tensor
+//!    compression stats per `(mapping, format-gene)` pair. An offspring
+//!    that mutated only its S/G genes reuses the parent's decoded loop
+//!    nest and tile features wholesale and pays only the allocation-free
+//!    [`crate::model::assemble`] + cost arithmetic.
+//!
+//! 3. **Scratch reuse** — all per-batch work lists live in reusable
+//!    buffers owned by the engine/context, so steady-state evaluation of
+//!    a population performs no per-genome heap allocation (asserted by
+//!    `rust/tests/alloc_steady_state.rs` with a counting allocator).
+//!
+//! Staging never changes a result: the from-scratch path
+//! ([`crate::model::NativeEvaluator::eval_genome`]) composes the *same*
+//! stage functions, and `rust/tests/engine_parity.rs` pins bit-for-bit
+//! trajectory parity across methods and thread counts.
+//!
+//! **Memory bounds.** All three layers are capped with budget-derived
+//! bounds mirroring the eval-cache bound (entries only ever appear for
+//! budget-debited submissions, so the caps are invariants rather than
+//! working-set limits): interner ≤ budget distinct keys, mapping stages
+//! ≤ budget segments, format stages ≤ `3 × budget` pairs. If a cap is
+//! ever reached the engine degrades gracefully — new genomes are
+//! evaluated from scratch and simply not cached.
+
+use crate::genome::{assign_formats, decode_mapping, FORMAT_GENES_PER_TENSOR};
+use crate::model::{
+    assemble, format_stage, mapping_stage, EvalResult, MappingStage, NativeEvaluator,
+    TensorCompression, WorkloadConsts,
+};
+use crate::sparse::SgMechanism;
+use crate::util::hash::FxHashMap;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::NUM_TENSORS;
+use std::sync::Arc;
+use super::fan_out;
+
+/// Hash-consed genome store: each distinct gene vector gets a dense
+/// `u32` id; lookups by slice never clone, inserts clone exactly once
+/// (into a shared `Arc<[u32]>` the parallel pipeline reuses by
+/// refcount).
+pub struct Interner {
+    ids: FxHashMap<Arc<[u32]>, u32>,
+    genomes: Vec<Arc<[u32]>>,
+    cap: usize,
+}
+
+impl Interner {
+    /// `cap` bounds the number of distinct keys (budget-derived; see
+    /// module docs).
+    pub fn new(cap: usize) -> Interner {
+        Interner { ids: FxHashMap::default(), genomes: Vec::new(), cap }
+    }
+
+    /// Distinct genomes interned so far.
+    pub fn len(&self) -> usize {
+        self.genomes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.genomes.is_empty()
+    }
+
+    /// Intern a genome: returns its dense id, or `None` when the key is
+    /// new but the interner is at capacity (caller falls back to an
+    /// uncached evaluation).
+    pub fn intern(&mut self, g: &[u32]) -> Option<u32> {
+        if let Some(&id) = self.ids.get(g) {
+            return Some(id);
+        }
+        if self.genomes.len() >= self.cap {
+            return None;
+        }
+        let arc: Arc<[u32]> = Arc::from(g);
+        let id = self.genomes.len() as u32;
+        self.ids.insert(Arc::clone(&arc), id);
+        self.genomes.push(arc);
+        Some(id)
+    }
+
+    /// Look up without inserting.
+    pub fn get(&self, g: &[u32]) -> Option<u32> {
+        self.ids.get(g).copied()
+    }
+
+    /// The genome behind an id.
+    pub fn genome(&self, id: u32) -> &Arc<[u32]> {
+        &self.genomes[id as usize]
+    }
+}
+
+/// Format-stage cache key: which mapping, which tensor, which format
+/// genes. Exact (no hash truncation) and `Copy` — lookups never allocate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct FmtKey {
+    map: u32,
+    tensor: u8,
+    genes: [u32; FORMAT_GENES_PER_TENSOR],
+}
+
+/// Where a miss's mapping stage comes from.
+#[derive(Clone, Copy)]
+enum MapRef {
+    /// Already cached under this id.
+    Cached(u32),
+    /// Will be computed this batch (index into the pending list).
+    Pending(u32),
+    /// Cache at capacity: evaluate this genome from scratch.
+    Scratch,
+}
+
+/// Where a miss's per-tensor format stage comes from.
+#[derive(Clone, Copy)]
+enum FmtRef {
+    Ready(TensorCompression),
+    /// Index into this batch's pending-format list.
+    Pending(u32),
+}
+
+/// Per-genome assembly plan.
+#[derive(Clone, Copy)]
+enum AsmSlot {
+    Staged { map: u32, fmt: [FmtRef; NUM_TENSORS] },
+    Scratch,
+}
+
+/// `Copy` payload for the (optionally parallel) assembly phase: the
+/// mapping features, the three tensors' compression stats and the S/G
+/// mechanisms — everything [`assemble`] needs, nothing on the heap.
+#[derive(Clone, Copy)]
+struct AsmItem {
+    mf: crate::model::MapFeats,
+    comp: [TensorCompression; NUM_TENSORS],
+    sg: [SgMechanism; 3],
+}
+
+/// Stage-memoizing evaluator for one `(workload, platform)` pair.
+///
+/// Owned by [`crate::search::EvalContext`] for native backends; also
+/// usable standalone (benchmarks, the allocation test). Results are
+/// **not** memoized per genome here — that is the context's result
+/// cache; the engine memoizes the *stages* beneath a result.
+pub struct StageEngine {
+    eval: Arc<NativeEvaluator>,
+    consts: WorkloadConsts,
+    map_ids: FxHashMap<Arc<[u32]>, u32>,
+    map_stages: Vec<Arc<MappingStage>>,
+    fmt_cache: FxHashMap<FmtKey, TensorCompression>,
+    map_cap: usize,
+    fmt_cap: usize,
+    stage_hits: usize,
+    stage_misses: usize,
+    // --- reusable per-batch scratch (layer 3) ---------------------------
+    map_refs: Vec<MapRef>,
+    pending_segs: Vec<Arc<[u32]>>,
+    pending_map: FxHashMap<Arc<[u32]>, u32>,
+    asm: Vec<AsmSlot>,
+    pending_fmt: Vec<FmtKey>,
+    pending_fmt_map: FxHashMap<FmtKey, u32>,
+    fmt_computed: Vec<TensorCompression>,
+    asm_idx: Vec<u32>,
+    asm_items: Vec<AsmItem>,
+    scratch_idx: Vec<u32>,
+    scratch_genomes: Vec<Arc<[u32]>>,
+}
+
+impl StageEngine {
+    /// `budget` derives the cache caps (see module docs).
+    pub fn new(eval: Arc<NativeEvaluator>, budget: usize) -> StageEngine {
+        let consts = WorkloadConsts::of(&eval.workload);
+        StageEngine {
+            eval,
+            consts,
+            map_ids: FxHashMap::default(),
+            map_stages: Vec::new(),
+            fmt_cache: FxHashMap::default(),
+            map_cap: budget.max(1),
+            fmt_cap: budget.max(1) * NUM_TENSORS,
+            stage_hits: 0,
+            stage_misses: 0,
+            map_refs: Vec::new(),
+            pending_segs: Vec::new(),
+            pending_map: FxHashMap::default(),
+            asm: Vec::new(),
+            pending_fmt: Vec::new(),
+            pending_fmt_map: FxHashMap::default(),
+            fmt_computed: Vec::new(),
+            asm_idx: Vec::new(),
+            asm_items: Vec::new(),
+            scratch_idx: Vec::new(),
+            scratch_genomes: Vec::new(),
+        }
+    }
+
+    /// Override the budget-derived cache caps (tests of the degraded
+    /// path; production code keeps the defaults).
+    pub fn with_caps(mut self, map_cap: usize, fmt_cap: usize) -> StageEngine {
+        self.map_cap = map_cap;
+        self.fmt_cap = fmt_cap;
+        self
+    }
+
+    /// Stage-level cache hits: one per memoized (or batch-shared) stage
+    /// reused — a single evaluation can contribute up to 4 (mapping +
+    /// three format stages).
+    pub fn stage_hits(&self) -> usize {
+        self.stage_hits
+    }
+
+    /// Stages computed from scratch.
+    pub fn stage_misses(&self) -> usize {
+        self.stage_misses
+    }
+
+    /// Cached (mapping, format) stage counts — observability + cap tests.
+    pub fn cache_sizes(&self) -> (usize, usize) {
+        (self.map_stages.len(), self.fmt_cache.len())
+    }
+
+    fn compute_mapping_stage(ev: &NativeEvaluator, seg: &[u32]) -> MappingStage {
+        let m = decode_mapping(&ev.spec, &ev.workload, seg);
+        mapping_stage(&m, &ev.workload, &ev.platform)
+    }
+
+    fn compute_format_stage(
+        ev: &NativeEvaluator,
+        stage: &MappingStage,
+        tensor: usize,
+        genes: &[u32],
+    ) -> TensorCompression {
+        let formats = assign_formats(&stage.ranks[tensor], genes);
+        format_stage(&ev.workload, tensor, &stage.ranks[tensor], &formats)
+    }
+
+    /// Evaluate a batch of genomes through the staged pipeline, fanning
+    /// stage computation and assembly out over `pool` when present.
+    /// Results are in submission order and bit-identical to
+    /// `NativeEvaluator::eval_genome` per genome (the parity suite's
+    /// contract). The caller is responsible for budget accounting and
+    /// result caching.
+    pub fn eval_batch(
+        &mut self,
+        genomes: &[Arc<[u32]>],
+        pool: Option<&Arc<ThreadPool>>,
+    ) -> Vec<EvalResult> {
+        let n = genomes.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let spec = &self.eval.spec;
+        let (fs, sg_start) = (spec.format_start, spec.sg_start);
+
+        // --- phase 1: resolve mapping segments --------------------------
+        self.map_refs.clear();
+        self.pending_segs.clear();
+        self.pending_map.clear();
+        for g in genomes {
+            let seg = &g[..fs];
+            if let Some(&id) = self.map_ids.get(seg) {
+                self.map_refs.push(MapRef::Cached(id));
+                self.stage_hits += 1;
+            } else if let Some(&pi) = self.pending_map.get(seg) {
+                // Another miss in this batch already introduces it:
+                // batch-local sharing is a hit too.
+                self.map_refs.push(MapRef::Pending(pi));
+                self.stage_hits += 1;
+            } else if self.map_stages.len() + self.pending_segs.len() >= self.map_cap {
+                self.map_refs.push(MapRef::Scratch);
+            } else {
+                let pi = self.pending_segs.len() as u32;
+                let seg_arc: Arc<[u32]> = Arc::from(seg);
+                self.pending_map.insert(Arc::clone(&seg_arc), pi);
+                self.pending_segs.push(seg_arc);
+                self.map_refs.push(MapRef::Pending(pi));
+                self.stage_misses += 1;
+            }
+        }
+
+        // --- phase 2: compute missing mapping stages --------------------
+        let map_base = self.map_stages.len() as u32;
+        if !self.pending_segs.is_empty() {
+            let ev = Arc::clone(&self.eval);
+            let computed: Vec<MappingStage> = fan_out(pool, &self.pending_segs, move |seg| {
+                Self::compute_mapping_stage(&ev, seg)
+            });
+            for (seg, st) in self.pending_segs.drain(..).zip(computed) {
+                let id = self.map_stages.len() as u32;
+                self.map_stages.push(Arc::new(st));
+                self.map_ids.insert(seg, id);
+            }
+        }
+
+        // --- phase 3: resolve per-tensor format stages ------------------
+        self.asm.clear();
+        self.pending_fmt.clear();
+        self.pending_fmt_map.clear();
+        for (g, mr) in genomes.iter().zip(&self.map_refs) {
+            let map = match *mr {
+                MapRef::Cached(id) => id,
+                MapRef::Pending(pi) => map_base + pi,
+                MapRef::Scratch => {
+                    self.asm.push(AsmSlot::Scratch);
+                    continue;
+                }
+            };
+            let mut fmt = [FmtRef::Pending(0); NUM_TENSORS];
+            for (t, slot) in fmt.iter_mut().enumerate() {
+                let genes: [u32; FORMAT_GENES_PER_TENSOR] = g
+                    [fs + t * FORMAT_GENES_PER_TENSOR..fs + (t + 1) * FORMAT_GENES_PER_TENSOR]
+                    .try_into()
+                    .unwrap();
+                let key = FmtKey { map, tensor: t as u8, genes };
+                if let Some(&tc) = self.fmt_cache.get(&key) {
+                    *slot = FmtRef::Ready(tc);
+                    self.stage_hits += 1;
+                } else if let Some(&pi) = self.pending_fmt_map.get(&key) {
+                    *slot = FmtRef::Pending(pi);
+                    self.stage_hits += 1;
+                } else if self.fmt_cache.len() + self.pending_fmt.len() >= self.fmt_cap {
+                    // Cap reached: compute uncached, inline.
+                    let stage = &self.map_stages[map as usize];
+                    *slot =
+                        FmtRef::Ready(Self::compute_format_stage(&self.eval, stage, t, &genes));
+                } else {
+                    let pi = self.pending_fmt.len() as u32;
+                    self.pending_fmt_map.insert(key, pi);
+                    self.pending_fmt.push(key);
+                    *slot = FmtRef::Pending(pi);
+                    self.stage_misses += 1;
+                }
+            }
+            self.asm.push(AsmSlot::Staged { map, fmt });
+        }
+
+        // --- phase 3b: compute missing format stages --------------------
+        self.fmt_computed.clear();
+        if !self.pending_fmt.is_empty() {
+            let items: Vec<(FmtKey, Arc<MappingStage>)> = self
+                .pending_fmt
+                .iter()
+                .map(|&k| (k, Arc::clone(&self.map_stages[k.map as usize])))
+                .collect();
+            let ev = Arc::clone(&self.eval);
+            let computed = fan_out(pool, &items, move |(k, stage)| {
+                Self::compute_format_stage(&ev, stage, k.tensor as usize, &k.genes)
+            });
+            self.fmt_computed.extend(computed);
+            for (k, tc) in self.pending_fmt.iter().zip(&self.fmt_computed) {
+                self.fmt_cache.insert(*k, *tc);
+            }
+        }
+
+        // --- phase 4: assembly + cost ------------------------------------
+        let mut out = vec![EvalResult::dead(); n];
+        self.asm_idx.clear();
+        self.asm_items.clear();
+        self.scratch_idx.clear();
+        self.scratch_genomes.clear();
+        for (i, (g, slot)) in genomes.iter().zip(&self.asm).enumerate() {
+            match *slot {
+                AsmSlot::Scratch => {
+                    self.scratch_idx.push(i as u32);
+                    self.scratch_genomes.push(Arc::clone(g));
+                }
+                AsmSlot::Staged { map, fmt } => {
+                    let resolve = |r: FmtRef| match r {
+                        FmtRef::Ready(tc) => tc,
+                        FmtRef::Pending(pi) => self.fmt_computed[pi as usize],
+                    };
+                    let item = AsmItem {
+                        mf: self.map_stages[map as usize].feats,
+                        comp: [resolve(fmt[0]), resolve(fmt[1]), resolve(fmt[2])],
+                        sg: [
+                            SgMechanism::from_gene(g[sg_start]),
+                            SgMechanism::from_gene(g[sg_start + 1]),
+                            SgMechanism::from_gene(g[sg_start + 2]),
+                        ],
+                    };
+                    self.asm_idx.push(i as u32);
+                    self.asm_items.push(item);
+                }
+            }
+        }
+        if !self.asm_items.is_empty() {
+            let ev = Arc::clone(&self.eval);
+            let consts = self.consts;
+            let results = fan_out(pool, &self.asm_items, move |it| {
+                ev.eval_features(&assemble(&consts, &it.mf, &it.comp, it.sg))
+            });
+            for (&i, r) in self.asm_idx.iter().zip(results) {
+                out[i as usize] = r;
+            }
+        }
+        // Cap-degraded genomes evaluate from scratch — still fanned out
+        // over the pool so the degraded mode keeps its parallelism.
+        if !self.scratch_genomes.is_empty() {
+            let ev = Arc::clone(&self.eval);
+            let results = fan_out(pool, &self.scratch_genomes, move |g| ev.eval_genome(g));
+            for (&i, r) in self.scratch_idx.iter().zip(results) {
+                out[i as usize] = r;
+            }
+            // Drop the Arc refs promptly (these are the rare over-cap
+            // genomes; no point pinning them between batches).
+            self.scratch_genomes.clear();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::util::rng::Pcg64;
+    use crate::workload::Workload;
+
+    fn engine(budget: usize) -> StageEngine {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        StageEngine::new(Arc::new(NativeEvaluator::new(w, Platform::edge())), budget)
+    }
+
+    fn arcs(genomes: &[Vec<u32>]) -> Vec<Arc<[u32]>> {
+        genomes.iter().map(|g| Arc::from(g.as_slice())).collect()
+    }
+
+    #[test]
+    fn interner_dedups_and_caps() {
+        let mut it = Interner::new(2);
+        let a = it.intern(&[1, 2, 3]).unwrap();
+        assert_eq!(it.intern(&[1, 2, 3]), Some(a), "same key, same id");
+        let b = it.intern(&[4, 5, 6]).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(it.len(), 2);
+        // At cap: known keys still resolve, new keys are refused.
+        assert_eq!(it.intern(&[1, 2, 3]), Some(a));
+        assert_eq!(it.intern(&[7, 8, 9]), None);
+        assert_eq!(it.len(), 2);
+        assert_eq!(&it.genome(b)[..], &[4, 5, 6]);
+        assert_eq!(it.get(&[4, 5, 6]), Some(b));
+        assert_eq!(it.get(&[9, 9, 9]), None);
+    }
+
+    #[test]
+    fn staged_matches_from_scratch_bitwise() {
+        let mut e = engine(10_000);
+        let mut rng = Pcg64::seeded(3);
+        let genomes: Vec<Vec<u32>> = (0..200).map(|_| e.eval.spec.random(&mut rng)).collect();
+        let staged = e.eval_batch(&arcs(&genomes), None);
+        for (g, r) in genomes.iter().zip(&staged) {
+            let scratch = e.eval.eval_genome(g);
+            assert_eq!(*r, scratch, "staged diverged on {g:?}");
+        }
+        // Re-evaluating the same batch is all stage hits, same results.
+        let before = e.stage_misses();
+        let again = e.eval_batch(&arcs(&genomes), None);
+        assert_eq!(again, staged);
+        assert_eq!(e.stage_misses(), before, "warm batch must not recompute stages");
+    }
+
+    #[test]
+    fn offspring_reuse_counts_stage_hits() {
+        let mut e = engine(10_000);
+        let mut rng = Pcg64::seeded(5);
+        let base = e.eval.spec.random(&mut rng);
+        // 10 offspring mutating only the S/G genes: one mapping stage,
+        // three format stages, everything else shared.
+        let sg = e.eval.spec.sg_start;
+        let pop: Vec<Vec<u32>> = (0..10u32)
+            .map(|i| {
+                let mut g = base.clone();
+                g[sg] = i % 7;
+                g
+            })
+            .collect();
+        let r = e.eval_batch(&arcs(&pop), None);
+        for (g, r) in pop.iter().zip(&r) {
+            assert_eq!(*r, e.eval.eval_genome(g));
+        }
+        // 1 mapping + 3 format misses; the other 9 genomes hit all four.
+        assert_eq!(e.stage_misses(), 4);
+        assert_eq!(e.stage_hits(), 9 * 4);
+        assert_eq!(e.cache_sizes(), (1, 3));
+    }
+
+    #[test]
+    fn parallel_staged_is_bit_identical() {
+        let mut serial = engine(10_000);
+        let mut par = engine(10_000);
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut rng = Pcg64::seeded(7);
+        let genomes: Vec<Vec<u32>> =
+            (0..300).map(|_| serial.eval.spec.random(&mut rng)).collect();
+        let a = serial.eval_batch(&arcs(&genomes), None);
+        let b = par.eval_batch(&arcs(&genomes), Some(&pool));
+        assert_eq!(a, b);
+        assert_eq!(serial.stage_misses(), par.stage_misses());
+    }
+
+    #[test]
+    fn capped_engine_degrades_to_scratch_with_identical_results() {
+        let mut e = engine(10_000).with_caps(2, 3);
+        let mut rng = Pcg64::seeded(11);
+        let genomes: Vec<Vec<u32>> = (0..50).map(|_| e.eval.spec.random(&mut rng)).collect();
+        let r = e.eval_batch(&arcs(&genomes), None);
+        let (maps, fmts) = e.cache_sizes();
+        assert!(maps <= 2, "mapping cache exceeded its cap: {maps}");
+        assert!(fmts <= 3, "format cache exceeded its cap: {fmts}");
+        for (g, r) in genomes.iter().zip(&r) {
+            assert_eq!(*r, e.eval.eval_genome(g), "capped path diverged on {g:?}");
+        }
+        // The degraded mode keeps its parallelism: a pooled capped engine
+        // returns the same results.
+        let mut pooled = engine(10_000).with_caps(2, 3);
+        let pool = Arc::new(ThreadPool::new(4));
+        assert_eq!(pooled.eval_batch(&arcs(&genomes), Some(&pool)), r);
+    }
+}

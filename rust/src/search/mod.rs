@@ -22,9 +22,26 @@
 //! cached arms stay comparable with uncached ones. Because the model is
 //! deterministic, caching never changes a trajectory, only its wall-clock
 //! cost. The cache is bounded by the budget (only misses insert entries).
+//!
+//! ## The staged cache ([`engine`])
+//!
+//! Beneath the per-genome result cache sits a *stage-level* one. Genomes
+//! are interned to dense ids (so cache keys are never cloned on a hit),
+//! and a result-cache miss does not recompute from scratch: the genome's
+//! natural segments — mapping genes, per-tensor format genes, S/G genes —
+//! are resolved against per-segment caches, so an offspring that mutated
+//! only its strategy genes reuses its parent's decoded loop nest, traffic
+//! features and compression stats, and pays only the allocation-free
+//! assembly + cost arithmetic. Trajectories are bit-identical with
+//! staging on or off (`EvalContext::with_staging`, pinned by
+//! `rust/tests/engine_parity.rs`); `Telemetry::interned` /
+//! `Telemetry::stage_hits` expose the cache effectiveness to observers
+//! and JSON reports.
 
+pub mod engine;
 pub mod telemetry;
 
+pub use engine::{Interner, StageEngine};
 pub use telemetry::{Outcome, Telemetry};
 
 use crate::arch::Platform;
@@ -36,7 +53,6 @@ use crate::util::threadpool::{parallel_map, ThreadPool};
 use crate::workload::Workload;
 #[cfg(feature = "xla")]
 use anyhow::Result;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -52,6 +68,12 @@ pub struct Progress {
     pub valid_evals: usize,
     /// Submissions served from the evaluation cache.
     pub cache_hits: usize,
+    /// Distinct genomes interned so far (the result caches key on these).
+    pub interned: usize,
+    /// Stage-level cache hits — one per memoized decode/feature stage
+    /// reused, so a single evaluation can contribute up to 4 (see
+    /// [`engine`]).
+    pub stage_hits: usize,
     /// Best valid EDP so far (`f64::INFINITY` until one is found).
     pub best_edp: f64,
     /// Total sample budget of the run.
@@ -90,58 +112,147 @@ pub enum Backend {
     Pjrt(Box<BatchEvaluator>),
 }
 
+/// Minimum items per parallel chunk. A dispatched job costs a boxed
+/// closure plus two channel transfers (≈ a microsecond); the cheapest
+/// evaluation stages cost a few microseconds each, so a floor of 8 items
+/// keeps per-job overhead under ~10%. Without the floor, small batches on
+/// many-core hosts degenerate to chunk = 1 — one dispatch round-trip per
+/// item, slower than running inline.
+pub(crate) const MIN_CHUNK: usize = 8;
+
 /// Split `n` items so each of `workers` threads sees several chunks (for
-/// load balancing) without paying per-item channel overhead.
-fn chunk_size(n: usize, workers: usize) -> usize {
-    (n / (workers * 4)).max(1)
+/// load balancing) without paying per-item channel overhead: floored at
+/// [`MIN_CHUNK`] (per-job overhead), capped at `n` (a chunk is never
+/// larger than the batch).
+pub(crate) fn chunk_size(n: usize, workers: usize) -> usize {
+    (n / (workers * 4)).max(MIN_CHUNK).min(n.max(1))
+}
+
+/// The one pool-dispatch idiom shared by the backend and every engine
+/// phase: map `f` over `items` in [`chunk_size`]-sized chunks across
+/// `pool` (order-preserving), or serially when the pool is absent,
+/// single-threaded, or the batch is trivial. Centralized so chunking and
+/// ordering fixes land in one place.
+pub(crate) fn fan_out<T, R, F>(pool: Option<&Arc<ThreadPool>>, items: &[T], f: F) -> Vec<R>
+where
+    T: Clone + Send + 'static,
+    R: Send + 'static,
+    F: Fn(&T) -> R + Send + Sync + 'static,
+{
+    match pool {
+        Some(pool) if pool.size() > 1 && items.len() > 1 => {
+            let jobs: Vec<Vec<T>> = items
+                .chunks(chunk_size(items.len(), pool.size()))
+                .map(|c| c.to_vec())
+                .collect();
+            parallel_map(pool, jobs, move |chunk| {
+                chunk.iter().map(|t| f(t)).collect::<Vec<R>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect()
+        }
+        _ => items.iter().map(|t| f(t)).collect(),
+    }
 }
 
 /// A submission slot: either a cached result or an index into the
 /// first-occurrence-ordered miss list.
 type Slot = std::result::Result<EvalResult, usize>;
 
-/// Resolve a batch of cache keys against `cache` (shared by `eval_batch`
-/// and `eval_designs` so the budget/hit semantics cannot diverge).
-/// Returns per-submission slots, the key indices that must be evaluated
-/// (deduplicated, first occurrence kept), and the hit count.
-fn resolve_cache(
-    cache: &HashMap<Vec<u32>, EvalResult>,
+/// Reusable per-batch buffers (engine layer 3): cleared, never shrunk, so
+/// steady-state batches perform no per-genome allocation — see
+/// `rust/tests/alloc_steady_state.rs`.
+#[derive(Default)]
+struct BatchScratch {
+    slots: Vec<Slot>,
+    /// Interned id of each miss (`None` = interner at capacity, uncached).
+    miss_ids: Vec<Option<u32>>,
+    /// The miss genomes, shared by refcount with the interner.
+    miss_genomes: Vec<Arc<[u32]>>,
+    /// Original submission index of each miss (`eval_designs` pairs
+    /// misses back to their design payloads through this).
+    miss_src: Vec<usize>,
+    /// Batch-local dedup stamps indexed by interned id (no hashing, no
+    /// allocation on the hot path).
+    seen_epoch: Vec<u32>,
+    seen_miss: Vec<u32>,
+    epoch: u32,
+}
+
+/// Re-assemble per-submission results from slots + evaluated misses
+/// (the other half of the shared resolve/reassemble contract below).
+fn reassemble(slots: &[Slot], miss_results: &[EvalResult]) -> Vec<EvalResult> {
+    slots
+        .iter()
+        .map(|s| match s {
+            Ok(r) => *r,
+            Err(i) => miss_results[*i],
+        })
+        .collect()
+}
+
+/// Resolve a batch of cache keys against an id-indexed result table
+/// (shared by `eval_batch` and `eval_designs` so the budget/hit
+/// semantics cannot diverge). Fills `s.slots` (one per submission) and
+/// the first-occurrence-ordered miss lists; returns the hit count.
+/// Nothing is cloned on a hit; a brand-new genome is cloned exactly once
+/// into the interner.
+fn resolve_interned(
+    interner: &mut Interner,
+    results: &mut Vec<Option<EvalResult>>,
+    s: &mut BatchScratch,
     enabled: bool,
     keys: &[Vec<u32>],
-) -> (Vec<Slot>, Vec<usize>, usize) {
-    let mut slots: Vec<Slot> = Vec::with_capacity(keys.len());
-    let mut miss_idx: Vec<usize> = Vec::new();
-    let mut pending: HashMap<&[u32], usize> = HashMap::new();
+) -> usize {
+    s.slots.clear();
+    s.miss_ids.clear();
+    s.miss_genomes.clear();
+    s.miss_src.clear();
+    s.epoch = s.epoch.wrapping_add(1);
+    if s.epoch == 0 {
+        // u32 wrap: invalidate all stamps instead of aliasing epoch 0.
+        s.seen_epoch.fill(u32::MAX);
+        s.epoch = 1;
+    }
     let mut hits = 0usize;
     for (i, g) in keys.iter().enumerate() {
         if enabled {
-            if let Some(&r) = cache.get(g.as_slice()) {
-                slots.push(Ok(r));
-                hits += 1;
+            if let Some(id) = interner.intern(g) {
+                let idx = id as usize;
+                if results.len() <= idx {
+                    results.resize(interner.len(), None);
+                }
+                if s.seen_epoch.len() <= idx {
+                    s.seen_epoch.resize(interner.len(), 0);
+                    s.seen_miss.resize(interner.len(), 0);
+                }
+                if let Some(r) = results[idx] {
+                    s.slots.push(Ok(r));
+                    hits += 1;
+                    continue;
+                }
+                if s.seen_epoch[idx] == s.epoch {
+                    s.slots.push(Err(s.seen_miss[idx] as usize));
+                    hits += 1;
+                    continue;
+                }
+                s.seen_epoch[idx] = s.epoch;
+                s.seen_miss[idx] = s.miss_src.len() as u32;
+                s.slots.push(Err(s.miss_src.len()));
+                s.miss_ids.push(Some(id));
+                s.miss_genomes.push(Arc::clone(interner.genome(id)));
+                s.miss_src.push(i);
                 continue;
             }
-            if let Some(&j) = pending.get(g.as_slice()) {
-                slots.push(Err(j));
-                hits += 1;
-                continue;
-            }
-            pending.insert(g.as_slice(), miss_idx.len());
         }
-        slots.push(Err(miss_idx.len()));
-        miss_idx.push(i);
+        // Cache disabled, or interner at capacity: uncached miss.
+        s.slots.push(Err(s.miss_src.len()));
+        s.miss_ids.push(None);
+        s.miss_genomes.push(Arc::from(g.as_slice()));
+        s.miss_src.push(i);
     }
-    (slots, miss_idx, hits)
-}
-
-/// Re-assemble per-submission results from slots + evaluated misses.
-fn assemble(slots: Vec<Slot>, miss_results: &[EvalResult]) -> Vec<EvalResult> {
-    slots
-        .into_iter()
-        .map(|s| match s {
-            Ok(r) => r,
-            Err(i) => miss_results[i],
-        })
-        .collect()
+    hits
 }
 
 impl Backend {
@@ -170,30 +281,23 @@ impl Backend {
         }
     }
 
-    /// Evaluate genomes, fanning the native model out over `pool` when one
-    /// is attached. Results are always in submission order.
-    fn eval(&self, pool: Option<&Arc<ThreadPool>>, genomes: &[Vec<u32>]) -> Vec<EvalResult> {
+    /// Evaluate genomes from scratch (no stage memoization), fanning the
+    /// native model out over `pool` when one is attached. Results are
+    /// always in submission order. This is the reference path the staged
+    /// engine is parity-tested against. Genomes arrive as `Arc` slices so
+    /// chunking shares them by refcount instead of cloning gene vectors.
+    fn eval(&self, pool: Option<&Arc<ThreadPool>>, genomes: &[Arc<[u32]>]) -> Vec<EvalResult> {
         match self {
-            Backend::Native(e) => match pool {
-                Some(pool) if pool.size() > 1 && genomes.len() > 1 => {
-                    let jobs: Vec<Vec<Vec<u32>>> = genomes
-                        .chunks(chunk_size(genomes.len(), pool.size()))
-                        .map(|c| c.to_vec())
-                        .collect();
-                    let ev = Arc::clone(e);
-                    parallel_map(pool, jobs, move |chunk| {
-                        chunk.iter().map(|g| ev.eval_genome(g)).collect::<Vec<_>>()
-                    })
-                    .into_iter()
-                    .flatten()
-                    .collect()
-                }
-                _ => genomes.iter().map(|g| e.eval_genome(g)).collect(),
-            },
+            Backend::Native(e) => {
+                let ev = Arc::clone(e);
+                fan_out(pool, genomes, move |g| ev.eval_genome(g))
+            }
             #[cfg(feature = "xla")]
-            Backend::Pjrt(e) => e
-                .eval_genomes(genomes)
-                .expect("PJRT evaluation failed (artifact/runtime error)"),
+            Backend::Pjrt(e) => {
+                let owned: Vec<Vec<u32>> = genomes.iter().map(|g| g.to_vec()).collect();
+                e.eval_genomes(&owned)
+                    .expect("PJRT evaluation failed (artifact/runtime error)")
+            }
         }
     }
 
@@ -202,43 +306,22 @@ impl Backend {
     fn eval_designs_batch(
         &self,
         pool: Option<&Arc<ThreadPool>>,
-        designs: Vec<Option<Design>>,
+        designs: &[Option<Design>],
     ) -> Vec<EvalResult> {
         match self {
-            Backend::Native(e) => match pool {
-                Some(pool) if pool.size() > 1 && designs.len() > 1 => {
-                    let jobs: Vec<Vec<Option<Design>>> = designs
-                        .chunks(chunk_size(designs.len(), pool.size()))
-                        .map(|c| c.to_vec())
-                        .collect();
-                    let ev = Arc::clone(e);
-                    parallel_map(pool, jobs, move |chunk| {
-                        chunk
-                            .into_iter()
-                            .map(|d| match d {
-                                Some(d) => ev.eval_design(&d),
-                                None => EvalResult::dead(),
-                            })
-                            .collect::<Vec<_>>()
-                    })
-                    .into_iter()
-                    .flatten()
-                    .collect()
-                }
-                _ => designs
-                    .into_iter()
-                    .map(|d| match d {
-                        Some(d) => e.eval_design(&d),
-                        None => EvalResult::dead(),
-                    })
-                    .collect(),
-            },
+            Backend::Native(e) => {
+                let ev = Arc::clone(e);
+                fan_out(pool, designs, move |d| match d {
+                    Some(d) => ev.eval_design(d),
+                    None => EvalResult::dead(),
+                })
+            }
             #[cfg(feature = "xla")]
             Backend::Pjrt(e) => designs
-                .into_iter()
+                .iter()
                 .map(|d| match d {
                     Some(d) => e
-                        .eval_designs(std::slice::from_ref(&d))
+                        .eval_designs(std::slice::from_ref(d))
                         .expect("PJRT evaluation failed")
                         .pop()
                         .unwrap(),
@@ -263,8 +346,17 @@ pub struct EvalContext {
     pub telemetry: Telemetry,
     pool: Option<Arc<ThreadPool>>,
     cache_enabled: bool,
-    genome_cache: HashMap<Vec<u32>, EvalResult>,
-    design_cache: HashMap<Vec<u32>, EvalResult>,
+    /// Hash-consed genome store; both result namespaces key on its ids.
+    /// Capacity-bounded by the budget (distinct keys ≤ submissions).
+    interner: Interner,
+    /// Result tables indexed by interned id — one per key namespace
+    /// (genome encoding vs. the foreign-encoding `eval_designs` records).
+    genome_results: Vec<Option<EvalResult>>,
+    design_results: Vec<Option<EvalResult>>,
+    /// Stage-memoizing engine (native backends only).
+    stage: Option<StageEngine>,
+    staging: bool,
+    scratch: BatchScratch,
     model_calls: usize,
     observer: Option<Box<dyn SearchObserver>>,
     /// Shared halt flag: set by an observer's [`SearchControl::Stop`] or
@@ -277,6 +369,11 @@ pub struct EvalContext {
 impl EvalContext {
     pub fn new(backend: Backend, budget: usize) -> EvalContext {
         let spec = crate::genome::GenomeSpec::for_workload(backend.workload());
+        let stage = match &backend {
+            Backend::Native(e) => Some(StageEngine::new(Arc::clone(e), budget)),
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(_) => None,
+        };
         EvalContext {
             backend,
             spec,
@@ -284,8 +381,12 @@ impl EvalContext {
             telemetry: Telemetry::new(),
             pool: None,
             cache_enabled: true,
-            genome_cache: HashMap::new(),
-            design_cache: HashMap::new(),
+            interner: Interner::new(budget.max(1)),
+            genome_results: Vec::new(),
+            design_results: Vec::new(),
+            stage,
+            staging: true,
+            scratch: BatchScratch::default(),
             model_calls: 0,
             observer: None,
             stop_flag: None,
@@ -319,6 +420,27 @@ impl EvalContext {
     pub fn with_cache(mut self, enabled: bool) -> EvalContext {
         self.cache_enabled = enabled;
         self
+    }
+
+    /// Enable/disable the staged engine (on by default for native
+    /// backends). Disabling forces every result-cache miss through the
+    /// from-scratch decode → extract path — the reference the parity
+    /// suite and the speedup microbenches compare against. Results and
+    /// trajectories never change, only wall-clock cost.
+    pub fn with_staging(mut self, enabled: bool) -> EvalContext {
+        self.staging = enabled;
+        self
+    }
+
+    /// Stage-level cache hits so far (up to 4 per evaluation: mapping +
+    /// three format stages).
+    pub fn stage_hits(&self) -> usize {
+        self.stage.as_ref().map_or(0, |e| e.stage_hits())
+    }
+
+    /// Distinct genomes interned so far.
+    pub fn interned(&self) -> usize {
+        self.interner.len()
     }
 
     /// Attach a streaming [`SearchObserver`], called after every batch.
@@ -361,6 +483,8 @@ impl EvalContext {
                 evals: self.telemetry.evals,
                 valid_evals: self.telemetry.valid_evals,
                 cache_hits: self.telemetry.cache_hits,
+                interned: self.telemetry.interned,
+                stage_hits: self.telemetry.stage_hits,
                 best_edp: self.telemetry.best_edp,
                 budget: self.budget,
             };
@@ -421,18 +545,34 @@ impl EvalContext {
         }
         let batch = &genomes[..n];
 
-        let (slots, miss_idx, hits) = resolve_cache(&self.genome_cache, self.cache_enabled, batch);
-        let misses: Vec<Vec<u32>> = miss_idx.iter().map(|&i| batch[i].clone()).collect();
-        self.model_calls += misses.len();
-        let miss_results = self.backend.eval(self.pool.as_ref(), &misses);
+        let hits = resolve_interned(
+            &mut self.interner,
+            &mut self.genome_results,
+            &mut self.scratch,
+            self.cache_enabled,
+            batch,
+        );
+        self.model_calls += self.scratch.miss_genomes.len();
+        let miss_results = match &mut self.stage {
+            Some(engine) if self.staging => {
+                engine.eval_batch(&self.scratch.miss_genomes, self.pool.as_ref())
+            }
+            _ => self.backend.eval(self.pool.as_ref(), &self.scratch.miss_genomes),
+        };
         if self.cache_enabled {
-            for (g, r) in misses.iter().zip(&miss_results) {
-                self.genome_cache.insert(g.clone(), *r);
+            for (mid, r) in self.scratch.miss_ids.iter().zip(&miss_results) {
+                if let Some(id) = mid {
+                    self.genome_results[*id as usize] = Some(*r);
+                }
             }
         }
         self.telemetry.cache_hits += hits;
+        self.telemetry.interned = self.interner.len();
+        if let Some(e) = &self.stage {
+            self.telemetry.stage_hits = e.stage_hits();
+        }
 
-        let results = assemble(slots, &miss_results);
+        let results = reassemble(&self.scratch.slots, &miss_results);
         for (g, r) in batch.iter().zip(&results) {
             self.telemetry.record(g, r);
         }
@@ -464,19 +604,28 @@ impl EvalContext {
         }
 
         let keys = &record[..n];
-        let (slots, miss_idx, hits) = resolve_cache(&self.design_cache, self.cache_enabled, keys);
+        let hits = resolve_interned(
+            &mut self.interner,
+            &mut self.design_results,
+            &mut self.scratch,
+            self.cache_enabled,
+            keys,
+        );
         let miss_designs: Vec<Option<Design>> =
-            miss_idx.iter().map(|&i| designs[i].clone()).collect();
+            self.scratch.miss_src.iter().map(|&i| designs[i].clone()).collect();
         self.model_calls += miss_designs.iter().filter(|d| d.is_some()).count();
-        let miss_results = self.backend.eval_designs_batch(self.pool.as_ref(), miss_designs);
+        let miss_results = self.backend.eval_designs_batch(self.pool.as_ref(), &miss_designs);
         if self.cache_enabled {
-            for (&i, r) in miss_idx.iter().zip(&miss_results) {
-                self.design_cache.insert(keys[i].clone(), *r);
+            for (mid, r) in self.scratch.miss_ids.iter().zip(&miss_results) {
+                if let Some(id) = mid {
+                    self.design_results[*id as usize] = Some(*r);
+                }
             }
         }
         self.telemetry.cache_hits += hits;
+        self.telemetry.interned = self.interner.len();
 
-        let results = assemble(slots, &miss_results);
+        let results = reassemble(&self.scratch.slots, &miss_results);
         for (g, r) in keys.iter().zip(&results) {
             self.telemetry.record(g, r);
         }
@@ -580,6 +729,82 @@ mod tests {
         c.eval_batch(&batch);
         assert_eq!(c.model_calls(), 4);
         assert_eq!(c.cache_hits(), 0);
+    }
+
+    #[test]
+    fn chunk_size_floor_and_grid() {
+        // Per-job overhead floor: chunks are at least MIN_CHUNK items
+        // (or the whole batch when smaller); large batches still produce
+        // enough chunks to feed every worker.
+        for n in [1usize, 2, 5, 7, 8, 9, 31, 100, 129, 1000, 20_000] {
+            for workers in [1usize, 2, 4, 8, 16, 32, 64] {
+                let c = chunk_size(n, workers);
+                assert!(c >= 1, "n={n} w={workers}");
+                assert!(c <= n.max(1), "chunk larger than batch: n={n} w={workers} c={c}");
+                assert!(
+                    c >= MIN_CHUNK.min(n),
+                    "floor violated: n={n} w={workers} c={c}"
+                );
+                if n >= workers * 4 * MIN_CHUNK {
+                    assert!(
+                        n.div_ceil(c) >= workers,
+                        "big batch under-feeds workers: n={n} w={workers} c={c}"
+                    );
+                }
+            }
+        }
+        // The regression this guards: 100 items on a 32-worker pool used
+        // to dispatch chunk-of-1 jobs (100 channel round-trips).
+        assert_eq!(chunk_size(100, 32), MIN_CHUNK);
+        assert_eq!(chunk_size(20_000, 8), 625); // big batches unchanged
+    }
+
+    #[test]
+    fn staging_off_matches_staged_bitwise() {
+        let w = Workload::spmm("t", 16, 32, 16, 0.5, 0.25);
+        let mut staged = EvalContext::new(Backend::native(w.clone(), Platform::edge()), 400);
+        let mut scratch =
+            EvalContext::new(Backend::native(w, Platform::edge()), 400).with_staging(false);
+        let mut rng = Pcg64::seeded(13);
+        let genomes: Vec<_> = (0..200).map(|_| staged.spec.random(&mut rng)).collect();
+        assert_eq!(staged.eval_batch(&genomes), scratch.eval_batch(&genomes));
+        assert_eq!(staged.telemetry.curve, scratch.telemetry.curve);
+        assert_eq!(staged.cache_hits(), scratch.cache_hits());
+        assert_eq!(scratch.stage_hits(), 0, "disabled staging must not touch stages");
+    }
+
+    #[test]
+    fn interned_and_stage_hits_observable() {
+        let mut c = ctx(100);
+        let mut rng = Pcg64::seeded(15);
+        let base = c.spec.random(&mut rng);
+        // 10 strategy-only offspring + the base twice (result-cache hit).
+        let mut batch = vec![base.clone(), base.clone()];
+        for i in 0..10u32 {
+            let mut g = base.clone();
+            g[c.spec.sg_start] = i % 7;
+            batch.push(g);
+        }
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        c.set_observer(Some(Box::new(move |p: &Progress| {
+            sink.lock().unwrap().push((p.interned, p.stage_hits));
+            SearchControl::Continue
+        })));
+        c.eval_batch(&batch);
+        // Distinct keys: base + offspring with sg gene 0..6 where gene 0
+        // reproduces the base (i = 0 and 7 collide with it): 7 distinct.
+        assert_eq!(c.interned(), 7);
+        assert_eq!(c.telemetry.interned, 7);
+        // 6 distinct non-base offspring share the base's mapping + 3
+        // format stages (the base itself is the one stage miss).
+        assert_eq!(c.stage_hits(), 6 * 4);
+        assert_eq!(c.telemetry.stage_hits, 24);
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.as_slice(), &[(7, 24)], "observer must see the counters");
+        let o = c.outcome("probe");
+        assert_eq!(o.interned, 7);
+        assert_eq!(o.stage_hits, 24);
     }
 
     #[test]

@@ -11,6 +11,13 @@ pub struct Telemetry {
     /// Submissions served from the evaluation cache (they still debit the
     /// sample budget — see `crate::search` module docs).
     pub cache_hits: usize,
+    /// Distinct genomes interned by the evaluation engine (the result
+    /// caches key on their dense ids — see `crate::search::engine`).
+    pub interned: usize,
+    /// Stage-level cache hits: one per memoized decode/feature stage
+    /// reused (a single evaluation can contribute up to 4 — its mapping
+    /// stage plus three per-tensor format stages).
+    pub stage_hits: usize,
     /// Best-so-far (evals, edp) checkpoints; appended whenever the best
     /// improves (the Fig. 18 convergence-curve data).
     pub curve: Vec<(usize, f64)>,
@@ -59,6 +66,8 @@ impl Telemetry {
             evals: self.evals,
             valid_evals: self.valid_evals,
             cache_hits: self.cache_hits,
+            interned: self.interned,
+            stage_hits: self.stage_hits,
             best_edp: self.best_edp,
             best_genome: self.best_genome,
             curve: self.curve,
@@ -77,6 +86,11 @@ pub struct Outcome {
     pub valid_evals: usize,
     /// Submissions served from the evaluation cache.
     pub cache_hits: usize,
+    /// Distinct genomes interned (cache-key working set).
+    pub interned: usize,
+    /// Stage-level cache hits (up to 4 per evaluation: mapping + three
+    /// format stages).
+    pub stage_hits: usize,
     /// Best valid EDP found (`f64::INFINITY` if none).
     pub best_edp: f64,
     pub best_genome: Option<Vec<u32>>,
@@ -105,6 +119,8 @@ impl Outcome {
             ("evals", Json::num(self.evals as f64)),
             ("valid_evals", Json::num(self.valid_evals as f64)),
             ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("interned", Json::num(self.interned as f64)),
+            ("stage_hits", Json::num(self.stage_hits as f64)),
             (
                 "best_edp",
                 if self.best_edp.is_finite() {
@@ -206,6 +222,10 @@ impl Outcome {
             evals: n("evals")?,
             valid_evals: n("valid_evals")?,
             cache_hits: n("cache_hits")?,
+            // Added in the staged-engine schema revision; default 0 so
+            // reports serialized before it still parse.
+            interned: j.get("interned").and_then(Json::as_u64).unwrap_or(0) as usize,
+            stage_hits: j.get("stage_hits").and_then(Json::as_u64).unwrap_or(0) as usize,
             best_edp: j.get("best_edp").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
             best_genome,
             curve: curve_of("curve")?,
@@ -256,15 +276,32 @@ mod tests {
         t.record(&[1, 2, 3], &ok(10.0));
         t.record(&[4, 5, 6], &ok(4.0));
         t.push_population_mean(7.5);
+        t.interned = 2;
+        t.stage_hits = 5;
         let o = t.into_outcome("sparsemap", "mm3", "cloud");
         let parsed = Json::parse(&o.to_json_full().dumps()).unwrap();
         let o2 = Outcome::from_json(&parsed).unwrap();
         assert_eq!(o2.method, o.method);
+        assert_eq!(o2.interned, 2);
+        assert_eq!(o2.stage_hits, 5);
         assert_eq!(o2.best_edp, o.best_edp);
         assert_eq!(o2.best_genome, o.best_genome);
         assert_eq!(o2.curve, o.curve);
         assert_eq!(o2.population_mean_curve, o.population_mean_curve);
         assert_eq!(o2.to_json_full(), o.to_json_full());
+    }
+
+    #[test]
+    fn legacy_json_without_counters_still_parses() {
+        // Reports serialized before the staged-engine revision lack the
+        // interned/stage_hits fields; they must default to 0.
+        let legacy = r#"{"method":"x","workload":"w","platform":"p",
+            "evals":3,"valid_evals":2,"cache_hits":1,"best_edp":5.0,
+            "curve":[[1,5.0]]}"#;
+        let o = Outcome::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(o.interned, 0);
+        assert_eq!(o.stage_hits, 0);
+        assert_eq!(o.cache_hits, 1);
     }
 
     #[test]

@@ -73,6 +73,24 @@ pub fn check_stack(tensor: &'static str, stack: &[RankFormat]) -> Vec<Incompat> 
     problems
 }
 
+/// Allocation-free twin of [`check_stack`]: `stack_ok(s)` ⟺
+/// `check_stack(_, s).is_empty()` (enforced by tests exhaustively over
+/// all 5-format stacks). The staged evaluation engine calls this on the
+/// hot path, where building a diagnostics `Vec` per genome is waste.
+pub fn stack_ok(stack: &[RankFormat]) -> bool {
+    for (i, f) in stack.iter().enumerate() {
+        if *f != RankFormat::UncompressedOffsetPair {
+            continue;
+        }
+        match stack.get(i + 1) {
+            None => return false,
+            Some(child) if !child.compressing() => return false,
+            Some(_) => {}
+        }
+    }
+    true
+}
+
 /// Check S/G mechanisms against the P/Q format stacks (rule 1). `sites`
 /// pairs a site name with its mechanism.
 pub fn check_saf(
@@ -94,6 +112,19 @@ pub fn check_saf(
         }
     }
     problems
+}
+
+/// Allocation-free twin of [`check_saf`]: `saf_ok(m, p, q)` ⟺
+/// `check_saf(sites, p, q).is_empty()` for the same mechanisms
+/// (enforced exhaustively by tests).
+pub fn saf_ok(mechs: &[SgMechanism], p_compressed: bool, q_compressed: bool) -> bool {
+    mechs.iter().all(|&m| {
+        if !m.is_skip() {
+            return true;
+        }
+        let (needs_p, needs_q) = m.drivers();
+        (!needs_p || p_compressed) && (!needs_q || q_compressed)
+    })
 }
 
 #[cfg(test)]
@@ -150,5 +181,56 @@ mod tests {
         assert_eq!(check_saf(&sites, false, false).len(), 2);
         assert_eq!(check_saf(&sites, true, false).len(), 1);
         assert!(check_saf(&sites, true, true).is_empty());
+    }
+
+    #[test]
+    fn stack_ok_matches_check_stack_exhaustively() {
+        // All stacks of length 0..=5 over the 5 formats (5^5 = 3125 at
+        // the longest): the boolean twin must agree with the diagnostic
+        // path everywhere — the staged engine's validity bit depends on it.
+        let fmts: Vec<RankFormat> = (0..5).map(RankFormat::from_gene).collect();
+        let mut stack = Vec::new();
+        fn rec(fmts: &[RankFormat], stack: &mut Vec<RankFormat>, depth: usize) {
+            assert_eq!(
+                stack_ok(stack),
+                check_stack("T", stack).is_empty(),
+                "divergence on {stack:?}"
+            );
+            if depth == 0 {
+                return;
+            }
+            for &f in fmts {
+                stack.push(f);
+                rec(fmts, stack, depth - 1);
+                stack.pop();
+            }
+        }
+        rec(&fmts, &mut stack, 5);
+    }
+
+    #[test]
+    fn saf_ok_matches_check_saf_exhaustively() {
+        for g0 in 0..7u32 {
+            for g1 in 0..7u32 {
+                for g2 in 0..7u32 {
+                    let mechs = [
+                        SgMechanism::from_gene(g0),
+                        SgMechanism::from_gene(g1),
+                        SgMechanism::from_gene(g2),
+                    ];
+                    let sites =
+                        [("GLB", mechs[0]), ("PEBuf", mechs[1]), ("C", mechs[2])];
+                    for p in [false, true] {
+                        for q in [false, true] {
+                            assert_eq!(
+                                saf_ok(&mechs, p, q),
+                                check_saf(&sites, p, q).is_empty(),
+                                "divergence on {mechs:?} p={p} q={q}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 }

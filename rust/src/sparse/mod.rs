@@ -42,6 +42,13 @@ impl SparseStrategy {
         self.formats[t].iter().any(|f| f.compressing())
     }
 
+    /// Allocation-free twin of [`SparseStrategy::check`]:
+    /// `check_ok()` ⟺ `check().is_empty()` (the hot-path validity bit).
+    pub fn check_ok(&self) -> bool {
+        self.formats.iter().all(|s| compat::stack_ok(s))
+            && compat::saf_ok(&self.sg, self.compressed(0), self.compressed(1))
+    }
+
     /// All structural compatibility problems of this strategy.
     pub fn check(&self) -> Vec<Incompat> {
         let names: [&'static str; 3] = ["P", "Q", "Z"];

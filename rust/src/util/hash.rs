@@ -1,0 +1,145 @@
+//! An in-tree fast hasher (Fx-style multiply-rotate) for hot-path maps.
+//!
+//! The offline vendor set has no `rustc-hash`/`ahash`, and `std`'s
+//! default SipHash is DoS-resistant but ~5x slower than needed for the
+//! evaluation engine, which hashes short `u32` gene slices millions of
+//! times per search. Genome keys are attacker-free internal data, so the
+//! non-cryptographic Fx construction (the rustc interner's hasher) is the
+//! right trade: one rotate + xor + multiply per word.
+
+use std::hash::{BuildHasher, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Multiply-rotate hasher over 8-byte words.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rest.len()].copy_from_slice(rest);
+            self.add(u64::from_le_bytes(tail));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`] — plug into
+/// `HashMap::with_hasher(FxBuildHasher::default())`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxBuildHasher;
+
+impl BuildHasher for FxBuildHasher {
+    type Hasher = FxHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FxHasher {
+        FxHasher::default()
+    }
+}
+
+/// A `HashMap` keyed with the fast hasher.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::Hash;
+
+    fn hash_of<T: Hash + ?Sized>(v: &T) -> u64 {
+        let mut h = FxHasher::default();
+        v.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn deterministic_and_discriminating() {
+        let a = vec![1u32, 2, 3, 4];
+        let b = vec![1u32, 2, 3, 5];
+        assert_eq!(hash_of(&a), hash_of(&a.clone()));
+        assert_ne!(hash_of(&a), hash_of(&b));
+    }
+
+    #[test]
+    fn slice_and_owned_agree() {
+        // HashMap<Arc<[u32]>, _> looks up by &[u32] via Borrow: both
+        // sides must hash identically.
+        let owned: std::sync::Arc<[u32]> = std::sync::Arc::from(&[7u32, 8, 9][..]);
+        let slice: &[u32] = &[7, 8, 9];
+        assert_eq!(hash_of(&*owned), hash_of(&slice.to_vec()[..]));
+        assert_eq!(hash_of(&*owned), {
+            let mut h = FxHasher::default();
+            slice.hash(&mut h);
+            h.finish()
+        });
+    }
+
+    #[test]
+    fn fx_map_works_end_to_end() {
+        let mut m: FxHashMap<Vec<u32>, usize> = FxHashMap::default();
+        for i in 0..1000u32 {
+            m.insert(vec![i, i * 2, i * 3], i as usize);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u32 {
+            assert_eq!(m.get(&vec![i, i * 2, i * 3]), Some(&(i as usize)));
+        }
+    }
+
+    #[test]
+    fn byte_tail_handling() {
+        // write() must not collide trivially on short/unaligned inputs.
+        // (Non-zero bytes: the zero-padded tail word makes [0x00]
+        // indistinguishable from [] by design — callers that care hash a
+        // length prefix, as std's slice Hash impls do.)
+        let mut seen = std::collections::HashSet::new();
+        for len in 0..24usize {
+            let bytes: Vec<u8> = (1..=len as u8).collect();
+            let mut h = FxHasher::default();
+            h.write(&bytes);
+            seen.insert(h.finish());
+        }
+        assert_eq!(seen.len(), 24);
+    }
+}

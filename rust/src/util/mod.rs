@@ -8,6 +8,7 @@
 //! ASCII/CSV table rendering ([`table`]).
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod pca;
 pub mod rng;

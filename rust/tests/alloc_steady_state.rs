@@ -1,0 +1,162 @@
+//! The engine's scratch-reuse invariant, asserted with a counting
+//! allocator: **steady-state evaluation performs no per-genome heap
+//! allocation**.
+//!
+//! Two windows are measured:
+//!
+//! 1. *Warm batches* through `EvalContext::eval_batch` (every submission
+//!    a result-cache hit): the allocation count is a small constant —
+//!    independent of the population size — dominated by the returned
+//!    results `Vec`.
+//! 2. *Stage-warm batches* through `StageEngine::eval_batch` (no result
+//!    cache; every genome re-assembled from memoized stages): likewise a
+//!    small constant, so per-genome assembly + cost is allocation-free.
+//!
+//! Each integration test binary owns its `#[global_allocator]`, so the
+//! counter cannot leak into other suites.
+
+use sparsemap::arch::Platform;
+use sparsemap::model::NativeEvaluator;
+use sparsemap::search::{Backend, EvalContext, StageEngine};
+use sparsemap::util::rng::Pcg64;
+use sparsemap::workload::Workload;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Count heap allocations performed by `f`.
+fn count_allocs<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    let r = f();
+    COUNTING.store(false, Ordering::SeqCst);
+    (ALLOCS.load(Ordering::SeqCst), r)
+}
+
+fn setup(budget: usize) -> (EvalContext, Pcg64) {
+    let w = Workload::spmm("t", 64, 128, 64, 0.2, 0.2);
+    (
+        EvalContext::new(Backend::native(w, Platform::mobile()), budget),
+        Pcg64::seeded(1),
+    )
+}
+
+/// Both steady-state windows in ONE test function: the counter is
+/// process-global, so concurrent tests in this binary would pollute each
+/// other's windows. Scenario 1: warm result-cache batches through
+/// `EvalContext`. Scenario 2: stage-warm assembly through `StageEngine`.
+#[test]
+fn steady_state_evaluation_is_allocation_free_per_genome() {
+    warm_batches_allocate_constant_not_per_genome();
+    stage_warm_assembly_is_allocation_free_per_genome();
+}
+
+/// Warm result-cache batches: the allocation count is a small constant
+/// and does NOT scale with the number of genomes evaluated.
+fn warm_batches_allocate_constant_not_per_genome() {
+    let (mut c, mut rng) = setup(100_000);
+    let big: Vec<Vec<u32>> = (0..400).map(|_| c.spec.random(&mut rng)).collect();
+    let small = big[..100].to_vec();
+
+    // Warm everything: results cached, scratch buffers at capacity.
+    c.eval_batch(&big);
+    c.eval_batch(&big);
+
+    let (small_allocs, r1) = count_allocs(|| c.eval_batch(&small));
+    assert_eq!(r1.len(), 100);
+    let (big_allocs, r2) = count_allocs(|| c.eval_batch(&big));
+    assert_eq!(r2.len(), 400);
+
+    assert_eq!(
+        small_allocs, big_allocs,
+        "warm-batch allocations must not scale with population size \
+         (100 genomes: {small_allocs}, 400 genomes: {big_allocs})"
+    );
+    // The constant itself is tiny: the returned results Vec plus a
+    // couple of collection internals at most.
+    assert!(
+        big_allocs <= 8,
+        "warm batch of 400 genomes performed {big_allocs} allocations; \
+         expected a small constant (scratch reuse broken?)"
+    );
+}
+
+/// Stage-warm assembly through the engine directly (no result cache in
+/// the way): re-evaluating a population whose mapping/format stages are
+/// memoized allocates a small constant, i.e. zero per genome.
+fn stage_warm_assembly_is_allocation_free_per_genome() {
+    let w = Workload::spmm("t", 64, 128, 64, 0.2, 0.2);
+    let eval = Arc::new(NativeEvaluator::new(w, Platform::mobile()));
+    let mut engine = StageEngine::new(Arc::clone(&eval), 1_000_000);
+    let mut rng = Pcg64::seeded(5);
+    let spec = eval.spec.clone();
+
+    let mk_pop = |n: usize, rng: &mut Pcg64| -> Vec<Arc<[u32]>> {
+        let parents: Vec<Vec<u32>> = (0..10).map(|_| spec.random(rng)).collect();
+        (0..n)
+            .map(|i| {
+                let mut g = parents[i % parents.len()].clone();
+                for j in spec.sg_start..spec.len() {
+                    g[j] = rng.range_u32(spec.ranges[j].lo, spec.ranges[j].hi);
+                }
+                Arc::from(g.as_slice())
+            })
+            .collect()
+    };
+    let pop100 = mk_pop(100, &mut rng);
+    let pop400: Vec<Arc<[u32]>> = {
+        let mut v = pop100.clone();
+        v.extend(pop100.iter().cycle().take(300).cloned());
+        v
+    };
+
+    // Warm the stage caches and the engine's scratch buffers.
+    engine.eval_batch(&pop400, None);
+    engine.eval_batch(&pop400, None);
+
+    let (a100, r100) = count_allocs(|| engine.eval_batch(&pop100, None));
+    assert_eq!(r100.len(), 100);
+    let (a400, r400) = count_allocs(|| engine.eval_batch(&pop400, None));
+    assert_eq!(r400.len(), 400);
+
+    // One allocation scales with n by design: the returned results Vec.
+    // Everything else is reused scratch, so the *count* stays flat.
+    assert_eq!(
+        a100, a400,
+        "stage-warm allocations must not scale with population size \
+         (100: {a100}, 400: {a400})"
+    );
+    assert!(
+        a400 <= 4,
+        "stage-warm batch performed {a400} allocations; expected ≲ the \
+         single results Vec (per-genome allocation crept back in?)"
+    );
+}

@@ -1,0 +1,160 @@
+//! Engine parity: the staged, interned evaluation engine must reproduce
+//! the from-scratch pipeline **bit-for-bit** — same best-EDP curves,
+//! same eval counts, same cache hits — for SparseMap, both ES variants
+//! and the baselines, serial and pooled. `EvalContext::with_staging(false)`
+//! is the old-path-equivalent: every result-cache miss runs the
+//! monolithic decode → extract → cost chain.
+
+use sparsemap::arch::Platform;
+use sparsemap::baselines::run_method;
+use sparsemap::search::{Backend, EvalContext, Outcome, StageEngine};
+use sparsemap::util::rng::Pcg64;
+use sparsemap::util::threadpool::ThreadPool;
+use sparsemap::workload::Workload;
+use std::sync::Arc;
+
+fn workload() -> Workload {
+    Workload::spmm("mm", 64, 128, 64, 0.2, 0.2)
+}
+
+fn ctx(budget: usize, threads: usize, staged: bool) -> EvalContext {
+    let c = EvalContext::new(Backend::native(workload(), Platform::mobile()), budget)
+        .with_staging(staged);
+    if threads > 1 {
+        c.with_pool(Some(Arc::new(ThreadPool::new(threads))))
+    } else {
+        c
+    }
+}
+
+fn assert_outcomes_identical(a: &Outcome, b: &Outcome, label: &str) {
+    assert_eq!(a.best_edp, b.best_edp, "{label}: best_edp");
+    assert_eq!(a.best_genome, b.best_genome, "{label}: best_genome");
+    assert_eq!(a.curve, b.curve, "{label}: best-EDP curve");
+    assert_eq!(a.population_mean_curve, b.population_mean_curve, "{label}: mean curve");
+    assert_eq!(a.evals, b.evals, "{label}: evals");
+    assert_eq!(a.valid_evals, b.valid_evals, "{label}: valid_evals");
+    assert_eq!(a.cache_hits, b.cache_hits, "{label}: cache_hits");
+    assert_eq!(a.interned, b.interned, "{label}: interned");
+}
+
+/// Seed-config searches through the old-path-equivalent and the staged
+/// engine, 1 and 4 threads: identical `Outcome` telemetry everywhere.
+/// Covers SparseMap proper, the standard-ES ablation, and baselines from
+/// both evaluation paths (`pso` → `eval_batch`, `es-direct` → the
+/// foreign-encoding `eval_designs`).
+#[test]
+fn trajectories_bit_identical_across_methods_and_threads() {
+    for method in ["sparsemap", "es-pfce", "random", "pso", "es-direct"] {
+        let budget = 600;
+        let reference = run_method(method, ctx(budget, 1, false), 42).unwrap();
+        for threads in [1usize, 4] {
+            let staged = run_method(method, ctx(budget, threads, true), 42).unwrap();
+            assert_outcomes_identical(
+                &reference,
+                &staged,
+                &format!("{method} @ {threads} threads"),
+            );
+        }
+    }
+}
+
+/// Raw per-genome parity on a large random sample (no search loop in the
+/// way): every staged result equals the from-scratch result exactly.
+#[test]
+fn random_population_bitwise_parity() {
+    let mut staged = ctx(3_000, 1, true);
+    let mut scratch = ctx(3_000, 1, false);
+    let mut pooled = ctx(3_000, 8, true);
+    let mut rng = Pcg64::seeded(7);
+    let genomes: Vec<Vec<u32>> = (0..1_500).map(|_| staged.spec.random(&mut rng)).collect();
+    let a = staged.eval_batch(&genomes);
+    let b = scratch.eval_batch(&genomes);
+    let c = pooled.eval_batch(&genomes);
+    assert_eq!(a, b);
+    assert_eq!(a, c);
+    assert_eq!(staged.telemetry.curve, scratch.telemetry.curve);
+    assert_eq!(staged.telemetry.curve, pooled.telemetry.curve);
+}
+
+/// Offspring that share parent segments exercise the stage caches hard;
+/// the trajectory must still match the from-scratch path and the stage
+/// counters must show the reuse actually happened.
+#[test]
+fn segment_sharing_population_parity_and_reuse() {
+    let mut staged = ctx(5_000, 1, true);
+    let mut scratch = ctx(5_000, 1, false);
+    let mut rng = Pcg64::seeded(9);
+    let spec = staged.spec.clone();
+    let parents: Vec<Vec<u32>> = (0..20).map(|_| spec.random(&mut rng)).collect();
+    let mut pop = Vec::new();
+    for p in &parents {
+        for _ in 0..10 {
+            let mut g = p.clone();
+            // Mutate only the S/G genes: mapping + format stages reused.
+            for i in spec.sg_start..spec.len() {
+                g[i] = rng.range_u32(spec.ranges[i].lo, spec.ranges[i].hi);
+            }
+            pop.push(g);
+        }
+    }
+    assert_eq!(staged.eval_batch(&pop), scratch.eval_batch(&pop));
+    assert!(
+        staged.stage_hits() > pop.len(),
+        "sg-only offspring should hit mapping+format stages, saw {}",
+        staged.stage_hits()
+    );
+    assert_eq!(scratch.stage_hits(), 0);
+}
+
+/// The acceptance microbench (timing-sensitive, so `#[ignore]`d like the
+/// thread-speedup test; run with `cargo test --release -- --ignored`):
+/// on a 100-genome offspring population whose stages are warm, the
+/// staged engine must be ≥ 2x faster single-threaded than a from-scratch
+/// re-evaluation loop. `cargo bench -- staged` reports the same numbers.
+#[test]
+#[ignore]
+fn staged_engine_2x_faster_than_scratch_loop_single_thread() {
+    let eval = Arc::new(sparsemap::model::NativeEvaluator::new(
+        workload(),
+        Platform::mobile(),
+    ));
+    let mut engine = StageEngine::new(Arc::clone(&eval), 1_000_000);
+    let mut rng = Pcg64::seeded(3);
+    let spec = eval.spec.clone();
+    // 100-genome population: 10 parents x 10 strategy-gene variants.
+    let parents: Vec<Vec<u32>> = (0..10).map(|_| spec.random(&mut rng)).collect();
+    let mut pop: Vec<Vec<u32>> = Vec::new();
+    for p in &parents {
+        for _ in 0..10 {
+            let mut g = p.clone();
+            for i in spec.sg_start..spec.len() {
+                g[i] = rng.range_u32(spec.ranges[i].lo, spec.ranges[i].hi);
+            }
+            pop.push(g);
+        }
+    }
+    let arcs: Vec<Arc<[u32]>> = pop.iter().map(|g| Arc::from(g.as_slice())).collect();
+    engine.eval_batch(&arcs, None); // warm the stage caches
+
+    let rounds = 200;
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        std::hint::black_box(engine.eval_batch(&arcs, None));
+    }
+    let staged_s = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    for _ in 0..rounds {
+        for g in &pop {
+            std::hint::black_box(eval.eval_genome(g));
+        }
+    }
+    let scratch_s = t1.elapsed().as_secs_f64();
+
+    let speedup = scratch_s / staged_s;
+    assert!(
+        speedup >= 2.0,
+        "staged engine only {speedup:.2}x faster (staged {staged_s:.3}s vs scratch {scratch_s:.3}s)"
+    );
+}
