@@ -14,7 +14,7 @@
 //! README "Performance".
 
 use sparsemap::arch::Platform;
-use sparsemap::baselines::run_method;
+use sparsemap::optimizer::run_method;
 use sparsemap::model::NativeEvaluator;
 use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, patterns, table4, ExpConfig};
 use sparsemap::search::{Backend, EvalContext};
@@ -250,6 +250,32 @@ fn main() {
                 5_000,
             );
             std::hint::black_box(run_method("sparsemap", ctx, 42).unwrap());
+        }),
+    });
+    benches.push(Bench {
+        name: "portfolio_race_5k_mm3_cloud",
+        runs: 3,
+        items: 5_000,
+        f: Box::new(|| {
+            let ctx = EvalContext::new(
+                Backend::native(table3::by_id("mm3").unwrap(), Platform::cloud()),
+                5_000,
+            );
+            std::hint::black_box(run_method("portfolio", ctx, 42).unwrap());
+        }),
+    });
+    benches.push(Bench {
+        // Registry lookup + opts validation + builder — the dispatch
+        // overhead the trait layer added to every arm (should be
+        // microseconds against searches that take seconds).
+        name: "registry_build_all_methods",
+        runs: 5,
+        items: sparsemap::optimizer::ALL_METHODS.len(),
+        f: Box::new(|| {
+            let empty = sparsemap::util::json::Json::Obj(Default::default());
+            for m in sparsemap::optimizer::registry() {
+                std::hint::black_box(m.build(&empty).unwrap());
+            }
         }),
     });
 

@@ -3,7 +3,12 @@
 //!
 //! * [`SearchRequest`] — a typed, JSON-round-trippable description of one
 //!   search arm: workload × platform × method plus budget, seed, threads,
-//!   backend and cache policy. Workloads and platforms are either the
+//!   backend and cache policy. Methods come from the
+//!   [`crate::optimizer`] registry (names or aliases), and their
+//!   hyper-parameters ride along as a `method_opts` JSON object
+//!   validated against the method's tunable schema — including the
+//!   `portfolio` meta-method that races several members over one shared
+//!   budget. Workloads and platforms are either the
 //!   paper's named suites (Table III / Table II) or **fully custom**
 //!   scenarios built with [`crate::workload::Workload::custom`] /
 //!   [`crate::arch::Platform::custom`] or parsed from JSON specs — any

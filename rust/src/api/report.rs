@@ -51,6 +51,12 @@ impl SearchReport {
         self.outcome.stage_hits
     }
 
+    /// Per-member budget/best breakdown — non-empty only for the
+    /// `portfolio` meta-method (see `crate::optimizer::portfolio`).
+    pub fn members(&self) -> &[crate::search::MemberStats] {
+        &self.outcome.members
+    }
+
     pub fn into_outcome(self) -> Outcome {
         self.outcome
     }
@@ -107,6 +113,29 @@ mod tests {
         assert_eq!(parsed.stopped_early, report.stopped_early);
         assert_eq!(parsed.distinct_genomes(), report.distinct_genomes());
         assert_eq!(parsed.stage_hits(), report.stage_hits());
+        assert_eq!(parsed.to_json(), report.to_json());
+    }
+
+    #[test]
+    fn portfolio_report_round_trips_with_members() {
+        let report = SearchRequest::new()
+            .workload_named("mm1")
+            .platform_named("edge")
+            .method("portfolio")
+            .method_opts(Json::parse(r#"{"members": ["random", "pso"], "rounds": 2}"#).unwrap())
+            .budget(200)
+            .seed(3)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.outcome.method, "portfolio");
+        assert_eq!(report.members().len(), 2);
+        assert_eq!(report.members().iter().map(|m| m.evals).sum::<usize>(), report.outcome.evals);
+        let parsed =
+            SearchReport::from_json(&Json::parse(&report.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(parsed.request, report.request);
+        assert_eq!(parsed.outcome.members, report.outcome.members);
         assert_eq!(parsed.to_json(), report.to_json());
     }
 

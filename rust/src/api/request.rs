@@ -69,8 +69,16 @@ pub enum PlatformSel {
 pub struct SearchRequest {
     pub workload: WorkloadSel,
     pub platform: PlatformSel,
-    /// One of [`crate::baselines::ALL_METHODS`].
+    /// A method name or alias from [`crate::optimizer::registry()`]
+    /// (see [`crate::optimizer::ALL_METHODS`]; CLI: `sparsemap methods`).
     pub method: String,
+    /// Method hyper-parameters as a JSON object, validated at
+    /// [`SearchRequest::build`] against the method's tunable schema
+    /// (unknown keys and out-of-range values are rejected). Empty =
+    /// paper defaults. E.g. `{"population": 200, "mutation_prob": 0.4}`
+    /// for `sparsemap`, `{"swarm": 24}` for `pso`, or
+    /// `{"members": ["sparsemap", "pso"]}` for `portfolio`.
+    pub method_opts: Json,
     /// Sample budget (the paper uses 20 000).
     pub budget: usize,
     pub seed: u64,
@@ -90,6 +98,7 @@ impl Default for SearchRequest {
             workload: WorkloadSel::Named("mm3".to_string()),
             platform: PlatformSel::Named("cloud".to_string()),
             method: "sparsemap".to_string(),
+            method_opts: Json::Obj(Default::default()),
             budget: 20_000,
             seed: 42,
             threads: 1,
@@ -130,6 +139,14 @@ impl SearchRequest {
 
     pub fn method(mut self, method: &str) -> Self {
         self.method = method.to_string();
+        self
+    }
+
+    /// Set the method's hyper-parameters (a JSON object; validated at
+    /// [`SearchRequest::build`] against the method's tunable schema —
+    /// run `sparsemap methods` for every method's knobs).
+    pub fn method_opts(mut self, opts: Json) -> Self {
+        self.method_opts = opts;
         self
     }
 
@@ -185,7 +202,7 @@ impl SearchRequest {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             (
                 "workload",
                 match &self.workload {
@@ -206,7 +223,15 @@ impl SearchRequest {
             ("threads", Json::num(self.threads as f64)),
             ("pjrt", Json::Bool(self.use_pjrt)),
             ("cache", Json::Bool(self.cache)),
-        ])
+        ]);
+        // Default (empty) opts stay off the wire so request/report JSON
+        // from before the optimizer-registry revision is byte-identical.
+        if self.method_opts.as_obj().is_some_and(|o| !o.is_empty()) {
+            if let Json::Obj(map) = &mut j {
+                map.insert("method_opts".to_string(), self.method_opts.clone());
+            }
+        }
+        j
     }
 
     /// Parse a request; absent fields take the [`Default`] values, so a
@@ -231,6 +256,13 @@ impl SearchRequest {
                 .as_str()
                 .ok_or_else(|| anyhow!("request field 'method' must be a string"))?
                 .to_string();
+        }
+        if let Some(mo) = j.get("method_opts") {
+            anyhow::ensure!(
+                mo.as_obj().is_some(),
+                "request field 'method_opts' must be a JSON object"
+            );
+            req.method_opts = mo.clone();
         }
         if let Some(b) = j.get("budget") {
             req.budget = u64_from_json(b, "budget")? as usize;
@@ -322,6 +354,23 @@ mod tests {
             .err()
             .expect("bad density must fail request validation");
         assert!(format!("{err:?}").contains("density"), "{err:?}");
+    }
+
+    #[test]
+    fn method_opts_round_trip_and_default_stays_off_the_wire() {
+        let opts = Json::parse(r#"{"population": 200, "mutation_prob": 0.4}"#).unwrap();
+        let r = SearchRequest::new().workload_named("mm1").method_opts(opts.clone());
+        let j = Json::parse(&r.to_json().dumps()).unwrap();
+        let r2 = SearchRequest::from_json(&j).unwrap();
+        assert_eq!(r2.method_opts, opts);
+        assert_eq!(r2, r);
+        // Default empty opts are not serialized at all (legacy JSON
+        // byte-compatibility).
+        let plain = SearchRequest::new().workload_named("mm1");
+        assert!(!plain.to_json().dumps().contains("method_opts"));
+        // Non-object method_opts is a parse-time error.
+        let bad = Json::parse(r#"{"workload": "mm1", "method_opts": [1]}"#).unwrap();
+        assert!(SearchRequest::from_json(&bad).is_err());
     }
 
     #[test]

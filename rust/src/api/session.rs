@@ -3,7 +3,7 @@
 use super::report::SearchReport;
 use super::request::SearchRequest;
 use crate::arch::Platform;
-use crate::baselines::{run_method, ALL_METHODS};
+use crate::optimizer;
 use crate::search::{Backend, EvalContext, SearchObserver};
 use crate::util::threadpool::ThreadPool;
 use crate::workload::Workload;
@@ -25,11 +25,13 @@ pub struct SearchSession {
 impl SearchSession {
     pub(crate) fn new(request: SearchRequest) -> Result<SearchSession> {
         ensure!(request.budget >= 1, "search budget must be at least 1 sample");
-        ensure!(
-            ALL_METHODS.contains(&request.method.as_str()),
-            "unknown method '{}' (one of {ALL_METHODS:?})",
-            request.method
-        );
+        // The registry is the one method-validation path (names, aliases,
+        // nearest-match suggestions, and the method_opts schema).
+        // Building (and discarding) the optimizer also runs the method's
+        // own cross-field checks — e.g. the portfolio rejecting
+        // member_opts entries that match none of its members — so every
+        // bad request fails here, not mid-run.
+        optimizer::resolve(&request.method)?.build(&request.method_opts)?;
         let (workload, platform) = request.resolve()?;
         Ok(SearchSession {
             request,
@@ -99,7 +101,7 @@ impl SearchSession {
     /// Lower the session into a raw [`EvalContext`] — the escape hatch
     /// for drivers that run their own loop over the evaluator (gene
     /// calibration, the Fig. 10 encoding study) rather than a method
-    /// from [`ALL_METHODS`].
+    /// from [`crate::optimizer::ALL_METHODS`].
     pub fn into_context(self) -> EvalContext {
         self.make_context(None)
     }
@@ -119,7 +121,12 @@ impl SearchSession {
     fn run_with(self, observer: Option<Box<dyn SearchObserver>>) -> Result<SearchReport> {
         let ctx = self.make_context(observer);
         let t0 = std::time::Instant::now();
-        let outcome = run_method(&self.request.method, ctx, self.request.seed)?;
+        let outcome = optimizer::run_method_with(
+            &self.request.method,
+            &self.request.method_opts,
+            ctx,
+            self.request.seed,
+        )?;
         Ok(SearchReport {
             request: self.request,
             outcome,
@@ -143,6 +150,28 @@ mod tests {
         assert!(tiny().method("gradient-descent").build().is_err());
         assert!(tiny().budget(0).build().is_err());
         assert!(tiny().build().is_ok());
+        // Typos get a nearest-match suggestion from the registry.
+        let err = tiny().method("spasemap").build().unwrap_err().to_string();
+        assert!(err.contains("did you mean 'sparsemap'"), "{err}");
+    }
+
+    #[test]
+    fn build_validates_method_opts_and_aliases_run() {
+        use crate::util::json::Json;
+        // Unknown tunable key fails at build, with a suggestion.
+        let bad = tiny().method_opts(Json::parse(r#"{"populaton": 40}"#).unwrap());
+        let err = bad.build().unwrap_err().to_string();
+        assert!(err.contains("did you mean 'population'"), "{err}");
+        // A valid alias + opts combination runs under the canonical name.
+        let report = tiny()
+            .method("rand")
+            .method_opts(Json::parse(r#"{"batch": 32}"#).unwrap())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.outcome.method, "random");
+        assert_eq!(report.outcome.evals, 120);
     }
 
     #[test]

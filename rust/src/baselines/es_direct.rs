@@ -12,6 +12,7 @@ use crate::genome::Design;
 use crate::search::{EvalContext, Outcome};
 use crate::util::rng::Pcg64;
 
+#[derive(Clone, Copy, Debug)]
 pub struct EsDirectConfig {
     pub population: usize,
     pub parent_frac: f64,
@@ -44,11 +45,15 @@ fn lhs_direct(spec: &DirectSpec, n: usize, rng: &mut Pcg64) -> Vec<Vec<u32>> {
     pop
 }
 
-pub fn es_direct(mut ctx: EvalContext, seed: u64) -> Outcome {
+/// Config-parameterized core against a borrowed context (the registry /
+/// portfolio entry point; telemetry accumulates in `ctx`).
+pub fn es_direct_with(ctx: &mut EvalContext, cfg: &EsDirectConfig, seed: u64) {
+    // The registry schema enforces population >= 2; floor it here too so
+    // a direct caller can't hit the empty-parent indexing below.
+    let cfg = EsDirectConfig { population: cfg.population.max(2), ..*cfg };
     let workload = ctx.workload().clone();
     let spec = DirectSpec::new(&workload, seed);
     let mut rng = Pcg64::seeded(seed);
-    let cfg = EsDirectConfig::default();
 
     let decode_all = |genomes: &[Vec<u32>]| -> Vec<Option<Design>> {
         genomes.iter().map(|g| spec.decode(&workload, g)).collect()
@@ -68,8 +73,14 @@ pub fn es_direct(mut ctx: EvalContext, seed: u64) -> Outcome {
         let parents = ((pop.len() as f64 * cfg.parent_frac) as usize).max(2);
         pop.truncate(parents);
 
-        let mut children: Vec<Vec<u32>> = Vec::with_capacity(cfg.population);
-        while children.len() < cfg.population {
+        // Never breed (and decode) more offspring than the budget can
+        // evaluate. Children are drawn sequentially from the rng, so the
+        // evaluated prefix — and with it the trajectory — is bit-identical
+        // to generating the full population and letting `eval_designs`
+        // truncate; only the wasted tail goes away.
+        let brood = cfg.population.min(ctx.remaining());
+        let mut children: Vec<Vec<u32>> = Vec::with_capacity(brood);
+        while children.len() < brood {
             let pa = &pop[rng.index(pop.len())].0;
             let pb = &pop[rng.index(pop.len())].0;
             let cut = 1 + rng.index(spec.len - 1);
@@ -89,6 +100,10 @@ pub fn es_direct(mut ctx: EvalContext, seed: u64) -> Outcome {
             pop.push((g, if r.valid { 1.0 / r.edp } else { 0.0 }));
         }
     }
+}
+
+pub fn es_direct(mut ctx: EvalContext, seed: u64) -> Outcome {
+    es_direct_with(&mut ctx, &EsDirectConfig::default(), seed);
     ctx.outcome("es-direct")
 }
 

@@ -19,10 +19,25 @@ struct Node {
     value_sum: f64,
 }
 
-pub fn mcts(mut ctx: EvalContext, seed: u64) -> Outcome {
-    let space = DirectSpace::new(&ctx, seed);
+/// MCTS hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MctsConfig {
+    /// UCB1 exploration constant.
+    pub c_uct: f64,
+}
+
+impl Default for MctsConfig {
+    fn default() -> Self {
+        MctsConfig { c_uct: 1.4 }
+    }
+}
+
+/// Config-parameterized core against a borrowed context (the registry /
+/// portfolio entry point; telemetry accumulates in `ctx`).
+pub fn mcts_with(ctx: &mut EvalContext, cfg: &MctsConfig, seed: u64) {
+    let space = DirectSpace::new(ctx, seed);
     let mut rng = Pcg64::seeded(seed);
-    let c_uct = 1.4;
+    let c_uct = cfg.c_uct;
     let n_genes = space.len();
     // Precompute the per-depth action sets.
     let actions: Vec<Vec<u32>> =
@@ -88,7 +103,7 @@ pub fn mcts(mut ctx: EvalContext, seed: u64) -> Outcome {
             genome.push(space.sample_action(d, &mut rng));
         }
         // --- evaluation ---------------------------------------------------
-        let results = space.eval(&mut ctx, std::slice::from_ref(&genome));
+        let results = space.eval(ctx, std::slice::from_ref(&genome));
         let Some(result) = results.first() else { break };
         let reward = if result.valid {
             best_edp_seen = best_edp_seen.min(result.edp);
@@ -102,6 +117,10 @@ pub fn mcts(mut ctx: EvalContext, seed: u64) -> Outcome {
             nodes[id].value_sum += reward;
         }
     }
+}
+
+pub fn mcts(mut ctx: EvalContext, seed: u64) -> Outcome {
+    mcts_with(&mut ctx, &MctsConfig::default(), seed);
     ctx.outcome("mcts")
 }
 

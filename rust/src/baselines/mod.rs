@@ -1,6 +1,17 @@
 //! Prior-work and classical-optimizer baselines (§III.C, §V): random /
 //! Sparseloop-Mapper-like / SAGE-like sampling arms, PSO, MCTS, TBPSA,
 //! PPO, DQN, and the direct-encoding standard ES ablation.
+//!
+//! Each module exposes its algorithm two ways:
+//!
+//! * an owning convenience function (`pso(ctx, seed) -> Outcome`) for
+//!   bespoke drivers, and
+//! * a config-parameterized core (`pso_with(&mut ctx, &PsoConfig, seed)`)
+//!   that the [`crate::optimizer`] registry builds [`Optimizer`]s from —
+//!   method dispatch, name validation and `method_opts` all live there,
+//!   not here.
+//!
+//! [`Optimizer`]: crate::optimizer::Optimizer
 
 pub mod common;
 pub mod direct;
@@ -21,70 +32,17 @@ pub use rl::{dqn, ppo};
 pub use samplers::{pure_random, sage_like, sparseloop_mapper};
 pub use tbpsa::tbpsa;
 
-use crate::es::{run_sparsemap, EsConfig, EsVariant};
-use crate::search::{EvalContext, Outcome};
-
-/// All method names runnable through [`run_method`].
-pub const ALL_METHODS: &[&str] = &[
-    "sparsemap",
-    "es-pfce",
-    "es-direct",
-    "random",
-    "sparseloop",
-    "sage-like",
-    "pso",
-    "mcts",
-    "tbpsa",
-    "ppo",
-    "dqn",
-];
-
-/// Dispatch a search method by name — the internal engine behind
-/// [`crate::api::SearchSession::run`]. Downstream users should go
-/// through [`crate::api::SearchRequest`]; this stays public for drivers
-/// that assemble their own [`EvalContext`].
-///
-/// Every method evaluates through the [`EvalContext`] it is handed, so
-/// all arms inherit the context's worker pool, evaluation cache and
-/// observer equally — attach a pool with `EvalContext::with_pool` (or
-/// via a request's `threads`) and the comparison stays fair.
-pub fn run_method(name: &str, ctx: EvalContext, seed: u64) -> anyhow::Result<Outcome> {
-    Ok(match name {
-        "sparsemap" => run_sparsemap(ctx, EsConfig::default(), seed),
-        "es-pfce" => run_sparsemap(
-            ctx,
-            EsConfig { variant: EsVariant::Pfce, ..EsConfig::default() },
-            seed,
-        ),
-        "es-direct" => es_direct(ctx, seed),
-        "random" => pure_random(ctx, seed),
-        "sparseloop" => sparseloop_mapper(ctx, seed),
-        "sage-like" => sage_like(ctx, seed),
-        "pso" => pso(ctx, seed),
-        "mcts" => mcts(ctx, seed),
-        "tbpsa" => tbpsa(ctx, seed),
-        "ppo" => rl::ppo(ctx, seed),
-        "dqn" => rl::dqn(ctx, seed),
-        other => anyhow::bail!("unknown method '{other}' (one of {ALL_METHODS:?})"),
-    })
-}
+// Historical home of method dispatch; re-exported so seed-era imports
+// keep working. The registry in `crate::optimizer` is the source of
+// truth now.
+pub use crate::optimizer::{run_method, ALL_METHODS};
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::Platform;
-    use crate::search::Backend;
+    use crate::search::{Backend, EvalContext};
     use crate::workload::Workload;
-
-    #[test]
-    fn all_methods_dispatch() {
-        for m in ALL_METHODS {
-            let w = Workload::spmm("t", 16, 16, 16, 0.5, 0.5);
-            let ctx = EvalContext::new(Backend::native(w, Platform::mobile()), 60);
-            let o = run_method(m, ctx, 1).unwrap();
-            assert!(o.evals <= 60, "{m} overspent");
-        }
-    }
 
     #[test]
     fn methods_identical_serial_vs_parallel() {
@@ -106,9 +64,17 @@ mod tests {
     }
 
     #[test]
-    fn unknown_method_rejected() {
-        let w = Workload::spmm("t", 16, 16, 16, 0.5, 0.5);
-        let ctx = EvalContext::new(Backend::native(w, Platform::mobile()), 10);
-        assert!(run_method("gradient-descent", ctx, 1).is_err());
+    fn owning_wrappers_match_registry_dispatch() {
+        // The convenience functions and the registry build the exact
+        // same searches from defaults.
+        let mk = || {
+            let w = Workload::spmm("t", 16, 16, 16, 0.5, 0.5);
+            EvalContext::new(Backend::native(w, Platform::mobile()), 150)
+        };
+        let a = pso(mk(), 4);
+        let b = run_method("pso", mk(), 4).unwrap();
+        assert_eq!(a.best_edp.to_bits(), b.best_edp.to_bits());
+        assert_eq!(a.curve, b.curve);
+        assert_eq!(a.evals, b.evals);
     }
 }

@@ -10,6 +10,7 @@ use super::space::DirectSpace;
 use crate::search::{EvalContext, Outcome};
 use crate::util::rng::Pcg64;
 
+#[derive(Clone, Copy, Debug)]
 pub struct PsoConfig {
     pub swarm: usize,
     pub inertia: f64,
@@ -27,9 +28,13 @@ fn decode(pos: &[f64], space: &DirectSpace) -> Vec<u32> {
     (0..space.len()).map(|i| space.snap(i, pos[i])).collect()
 }
 
-pub fn pso(mut ctx: EvalContext, seed: u64) -> Outcome {
-    let space = DirectSpace::new(&ctx, seed);
-    let cfg = PsoConfig::default();
+/// Config-parameterized core against a borrowed context (the registry /
+/// portfolio entry point; telemetry accumulates in `ctx`).
+pub fn pso_with(ctx: &mut EvalContext, cfg: &PsoConfig, seed: u64) {
+    // The registry schema enforces swarm >= 1; floor it here too so a
+    // direct caller can't hit the empty-swarm indexing below.
+    let cfg = PsoConfig { swarm: cfg.swarm.max(1), ..*cfg };
+    let space = DirectSpace::new(ctx, seed);
     let mut rng = Pcg64::seeded(seed);
     let n = space.len();
     let lo: Vec<f64> = (0..n).map(|i| space.bounds(i).0 as f64).collect();
@@ -51,7 +56,7 @@ pub fn pso(mut ctx: EvalContext, seed: u64) -> Outcome {
 
     while !ctx.exhausted() {
         let genomes: Vec<Vec<u32>> = pos.iter().map(|p| decode(p, &space)).collect();
-        let results = space.eval(&mut ctx, &genomes);
+        let results = space.eval(ctx, &genomes);
         for (i, r) in results.iter().enumerate() {
             let cost = if r.valid { r.edp } else { f64::INFINITY };
             if cost < pbest_cost[i] {
@@ -79,6 +84,10 @@ pub fn pso(mut ctx: EvalContext, seed: u64) -> Outcome {
             }
         }
     }
+}
+
+pub fn pso(mut ctx: EvalContext, seed: u64) -> Outcome {
+    pso_with(&mut ctx, &PsoConfig::default(), seed);
     ctx.outcome("pso")
 }
 

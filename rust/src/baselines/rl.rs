@@ -31,13 +31,34 @@ fn reward(edp: f64, valid: bool, best: &mut f64) -> f64 {
 // PPO
 // ---------------------------------------------------------------------------
 
-pub fn ppo(mut ctx: EvalContext, seed: u64) -> Outcome {
-    let space = DirectSpace::new(&ctx, seed);
+/// PPO hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct PpoConfig {
+    /// Trust-region clip for the surrogate ratio.
+    pub clip: f64,
+    /// Policy learning rate.
+    pub lr: f64,
+    /// Episodes sampled per update.
+    pub batch: usize,
+}
+
+impl Default for PpoConfig {
+    fn default() -> Self {
+        PpoConfig { clip: 0.2, lr: 0.15, batch: 24 }
+    }
+}
+
+/// Config-parameterized core against a borrowed context (the registry /
+/// portfolio entry point; telemetry accumulates in `ctx`).
+pub fn ppo_with(ctx: &mut EvalContext, cfg: &PpoConfig, seed: u64) {
+    let space = DirectSpace::new(ctx, seed);
     let mut rng = Pcg64::seeded(seed);
     let n = space.len();
-    let clip = 0.2;
-    let lr = 0.15;
-    let batch = 24usize;
+    let clip = cfg.clip;
+    let lr = cfg.lr;
+    // Floor like the registry schema: a zero batch would spin forever
+    // without consuming budget.
+    let batch = cfg.batch.max(1);
 
     // Factored policy over the (quantized) raw action sets. Tile-gene
     // logits start with a downward ramp (prior toward small tile factors)
@@ -77,7 +98,7 @@ pub fn ppo(mut ctx: EvalContext, seed: u64) -> Outcome {
             chosen.push(acts);
             old_probs.push(ops);
         }
-        let results = space.eval(&mut ctx, &genomes);
+        let results = space.eval(ctx, &genomes);
         if results.is_empty() {
             break;
         }
@@ -115,6 +136,10 @@ pub fn ppo(mut ctx: EvalContext, seed: u64) -> Outcome {
             }
         }
     }
+}
+
+pub fn ppo(mut ctx: EvalContext, seed: u64) -> Outcome {
+    ppo_with(&mut ctx, &PpoConfig::default(), seed);
     ctx.outcome("ppo")
 }
 
@@ -122,8 +147,27 @@ pub fn ppo(mut ctx: EvalContext, seed: u64) -> Outcome {
 // DQN
 // ---------------------------------------------------------------------------
 
-pub fn dqn(mut ctx: EvalContext, seed: u64) -> Outcome {
-    let space = DirectSpace::new(&ctx, seed);
+/// DQN hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DqnConfig {
+    /// Per-step discount inside the backward TD sweep.
+    pub gamma: f64,
+    /// Q-network learning rate.
+    pub lr: f64,
+    /// Hidden width of the in-tree MLP.
+    pub hidden: usize,
+}
+
+impl Default for DqnConfig {
+    fn default() -> Self {
+        DqnConfig { gamma: 0.98, lr: 0.01, hidden: 32 }
+    }
+}
+
+/// Config-parameterized core against a borrowed context (the registry /
+/// portfolio entry point; telemetry accumulates in `ctx`).
+pub fn dqn_with(ctx: &mut EvalContext, cfg: &DqnConfig, seed: u64) {
+    let space = DirectSpace::new(ctx, seed);
     let mut rng = Pcg64::seeded(seed);
     let n = space.len();
     let actions: Vec<Vec<u32>> = (0..n).map(|i| space.actions(i, MAX_ACTIONS)).collect();
@@ -131,9 +175,9 @@ pub fn dqn(mut ctx: EvalContext, seed: u64) -> Outcome {
 
     // State: gene-position one-hot + normalized previous choice.
     let state_dim = n + 2;
-    let mut qnet = Mlp::new(state_dim, 32, max_width, &mut rng);
-    let gamma = 0.98;
-    let lr = 0.01;
+    let mut qnet = Mlp::new(state_dim, cfg.hidden.max(1), max_width, &mut rng);
+    let gamma = cfg.gamma;
+    let lr = cfg.lr;
     let mut best = f64::INFINITY;
     let mut episode = 0usize;
 
@@ -171,7 +215,7 @@ pub fn dqn(mut ctx: EvalContext, seed: u64) -> Outcome {
             transitions.push((s, a));
             prev_norm = a as f64 / width.max(1) as f64;
         }
-        let results = space.eval(&mut ctx, std::slice::from_ref(&genome));
+        let results = space.eval(ctx, std::slice::from_ref(&genome));
         let Some(result) = results.first().copied() else { break };
         let final_reward = reward(result.edp, result.valid, &mut best);
 
@@ -184,6 +228,10 @@ pub fn dqn(mut ctx: EvalContext, seed: u64) -> Outcome {
         }
         episode += 1;
     }
+}
+
+pub fn dqn(mut ctx: EvalContext, seed: u64) -> Outcome {
+    dqn_with(&mut ctx, &DqnConfig::default(), seed);
     ctx.outcome("dqn")
 }
 

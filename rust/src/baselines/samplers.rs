@@ -8,16 +8,65 @@ use crate::genome::ops;
 use crate::search::{EvalContext, Outcome};
 use crate::util::rng::Pcg64;
 
+/// Random-search batch size (shared by the three sampling arms).
+#[derive(Clone, Copy, Debug)]
+pub struct RandomConfig {
+    /// Genomes submitted per evaluation batch.
+    pub batch: usize,
+}
+
+impl Default for RandomConfig {
+    fn default() -> Self {
+        RandomConfig { batch: 256 }
+    }
+}
+
+/// Sparseloop-Mapper-like arm hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseloopConfig {
+    /// Genomes submitted per evaluation batch.
+    pub batch: usize,
+    /// Probability a sample pins the manual sparse strategy.
+    pub manual_prob: f64,
+}
+
+impl Default for SparseloopConfig {
+    fn default() -> Self {
+        SparseloopConfig { batch: 256, manual_prob: 0.8 }
+    }
+}
+
+/// SAGE-like arm hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SageConfig {
+    /// Population size of the format/strategy evolutionary loop.
+    pub population: usize,
+    /// Strategy genes re-sampled per child.
+    pub mutations: usize,
+}
+
+impl Default for SageConfig {
+    fn default() -> Self {
+        SageConfig { population: 40, mutations: 2 }
+    }
+}
+
 /// Uniform random search over the full joint genome (also the Fig. 7
-/// design-space sampler).
-pub fn pure_random(mut ctx: EvalContext, seed: u64) -> Outcome {
+/// design-space sampler). Config-parameterized core (the registry /
+/// portfolio entry point; telemetry accumulates in `ctx`).
+pub fn pure_random_with(ctx: &mut EvalContext, cfg: &RandomConfig, seed: u64) {
     let mut rng = Pcg64::seeded(seed);
     let spec = ctx.spec.clone();
+    let batch = cfg.batch.max(1);
     while !ctx.exhausted() {
-        let n = ctx.remaining().min(256);
+        let n = ctx.remaining().min(batch);
         let genomes: Vec<_> = (0..n).map(|_| spec.random(&mut rng)).collect();
         ctx.eval_batch(&genomes);
     }
+}
+
+pub fn pure_random(mut ctx: EvalContext, seed: u64) -> Outcome {
+    pure_random_with(&mut ctx, &RandomConfig::default(), seed);
     ctx.outcome("random")
 }
 
@@ -25,19 +74,20 @@ pub fn pure_random(mut ctx: EvalContext, seed: u64) -> Outcome {
 /// sparse strategy pinned to the manual configuration (§V: "mapping
 /// exploration under a manually specified sparse strategy", with the
 /// manual settings included in its sampling space).
-pub fn sparseloop_mapper(mut ctx: EvalContext, seed: u64) -> Outcome {
+pub fn sparseloop_mapper_with(ctx: &mut EvalContext, cfg: &SparseloopConfig, seed: u64) {
     let mut rng = Pcg64::seeded(seed);
     let spec = ctx.spec.clone();
     let manual = common::manual_strategy_genes(&spec, ctx.workload());
+    let batch = cfg.batch.max(1);
     while !ctx.exhausted() {
-        let n = ctx.remaining().min(256);
+        let n = ctx.remaining().min(batch);
         let genomes: Vec<_> = (0..n)
             .map(|_| {
                 let mut g = spec.random(&mut rng);
                 // Most samples pin the manual strategy; a slice of the
                 // budget samples strategies randomly too (the paper folded
                 // the manual settings into the random space).
-                if rng.chance(0.8) {
+                if rng.chance(cfg.manual_prob) {
                     common::apply(&mut g, &manual);
                 }
                 g
@@ -45,13 +95,17 @@ pub fn sparseloop_mapper(mut ctx: EvalContext, seed: u64) -> Outcome {
             .collect();
         ctx.eval_batch(&genomes);
     }
+}
+
+pub fn sparseloop_mapper(mut ctx: EvalContext, seed: u64) -> Outcome {
+    sparseloop_mapper_with(&mut ctx, &SparseloopConfig::default(), seed);
     ctx.outcome("sparseloop")
 }
 
 /// SAGE-like: the mapping is *fixed* to a reasonable heuristic; a small
 /// evolutionary search explores only the compression-format and S/G
 /// genes (SAGE explores formats; it never re-tiles).
-pub fn sage_like(mut ctx: EvalContext, seed: u64) -> Outcome {
+pub fn sage_like_with(ctx: &mut EvalContext, cfg: &SageConfig, seed: u64) {
     let mut rng = Pcg64::seeded(seed);
     let spec = ctx.spec.clone();
     let mapping = common::heuristic_mapping_genes(&spec, ctx.workload());
@@ -64,7 +118,7 @@ pub fn sage_like(mut ctx: EvalContext, seed: u64) -> Outcome {
     };
 
     // Seed population: random strategies over the fixed mapping.
-    let pop_size = 40;
+    let pop_size = cfg.population.max(2);
     let mut pop: Vec<(Vec<u32>, f64)> = Vec::new();
     let genomes: Vec<_> = (0..pop_size)
         .map(|_| {
@@ -88,7 +142,7 @@ pub fn sage_like(mut ctx: EvalContext, seed: u64) -> Outcome {
             let pb = &pop[rng.index(pop.len())].0;
             let mut c = ops::uniform_crossover(pa, pb, &mut rng);
             // Mutate a couple of strategy genes; mapping stays fixed.
-            for _ in 0..2 {
+            for _ in 0..cfg.mutations {
                 let i = strategy_idx[rng.index(strategy_idx.len())];
                 c[i] = spec.ranges[i].sample(&mut rng);
             }
@@ -100,6 +154,10 @@ pub fn sage_like(mut ctx: EvalContext, seed: u64) -> Outcome {
             pop.push((g.clone(), if r.valid { r.edp } else { f64::INFINITY }));
         }
     }
+}
+
+pub fn sage_like(mut ctx: EvalContext, seed: u64) -> Outcome {
+    sage_like_with(&mut ctx, &SageConfig::default(), seed);
     ctx.outcome("sage-like")
 }
 

@@ -6,12 +6,29 @@ use super::space::DirectSpace;
 use crate::search::{EvalContext, Outcome};
 use crate::util::rng::Pcg64;
 
-pub fn tbpsa(mut ctx: EvalContext, seed: u64) -> Outcome {
-    let space = DirectSpace::new(&ctx, seed);
+/// TBPSA hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TbpsaConfig {
+    /// Samples drawn per iteration.
+    pub lambda: usize,
+    /// Elites the distribution recenters on.
+    pub mu: usize,
+}
+
+impl Default for TbpsaConfig {
+    fn default() -> Self {
+        TbpsaConfig { lambda: 30, mu: 8 }
+    }
+}
+
+/// Config-parameterized core against a borrowed context (the registry /
+/// portfolio entry point; telemetry accumulates in `ctx`).
+pub fn tbpsa_with(ctx: &mut EvalContext, cfg: &TbpsaConfig, seed: u64) {
+    let space = DirectSpace::new(ctx, seed);
     let mut rng = Pcg64::seeded(seed);
     let n = space.len();
-    let lambda = 30usize;
-    let mu = 8usize;
+    let lambda = cfg.lambda.max(1);
+    let mu = cfg.mu.clamp(1, lambda);
 
     let lo: Vec<f64> = (0..n).map(|i| space.bounds(i).0 as f64).collect();
     let hi: Vec<f64> = (0..n).map(|i| space.bounds(i).1 as f64).collect();
@@ -41,7 +58,7 @@ pub fn tbpsa(mut ctx: EvalContext, seed: u64) -> Outcome {
             .iter()
             .map(|s| (0..n).map(|i| space.snap(i, s[i])).collect())
             .collect();
-        let results = space.eval(&mut ctx, &genomes);
+        let results = space.eval(ctx, &genomes);
         if results.is_empty() {
             break;
         }
@@ -84,6 +101,10 @@ pub fn tbpsa(mut ctx: EvalContext, seed: u64) -> Outcome {
             sigma[d] = (0.7 * sigma[d] + 0.3 * var.sqrt()).max(floor);
         }
     }
+}
+
+pub fn tbpsa(mut ctx: EvalContext, seed: u64) -> Outcome {
+    tbpsa_with(&mut ctx, &TbpsaConfig::default(), seed);
     ctx.outcome("tbpsa")
 }
 

@@ -11,4 +11,4 @@ pub mod sparsemap;
 pub use hypercube::{HshiConfig, HshiResult};
 pub use population::{Individual, lhs_init};
 pub use sensitivity::{CalibConfig, Sensitivity};
-pub use sparsemap::{run_sparsemap, EsConfig, EsVariant, SparseMapSearch};
+pub use sparsemap::{run_sparsemap, run_sparsemap_with, EsConfig, EsVariant, SparseMapSearch};

@@ -69,15 +69,17 @@ impl Default for EsConfig {
     }
 }
 
-/// The SparseMap searcher.
-pub struct SparseMapSearch {
-    pub ctx: EvalContext,
+/// The SparseMap searcher. Borrows its [`EvalContext`] so a caller (the
+/// `portfolio` meta-optimizer, bespoke drivers) can run it over a slice
+/// of a shared budget; [`run_sparsemap`] is the owning convenience form.
+pub struct SparseMapSearch<'a> {
+    pub ctx: &'a mut EvalContext,
     pub cfg: EsConfig,
     rng: Pcg64,
 }
 
-impl SparseMapSearch {
-    pub fn new(mut ctx: EvalContext, cfg: EsConfig, seed: u64) -> SparseMapSearch {
+impl<'a> SparseMapSearch<'a> {
+    pub fn new(ctx: &'a mut EvalContext, cfg: EsConfig, seed: u64) -> SparseMapSearch<'a> {
         if cfg.threads > 1 && ctx.pool().is_none() {
             let pool = crate::util::threadpool::ThreadPool::new(cfg.threads);
             ctx.set_pool(Some(std::sync::Arc::new(pool)));
@@ -85,11 +87,14 @@ impl SparseMapSearch {
         SparseMapSearch { ctx, cfg, rng: Pcg64::seeded(seed) }
     }
 
-    /// Run until the context budget is exhausted; returns the outcome.
-    pub fn run(mut self) -> Outcome {
+    /// Run until the context budget (or fence) is exhausted.
+    pub fn run(mut self) {
         let spec = self.ctx.spec.clone();
         let full = self.cfg.variant == EsVariant::Full;
-        let budget = self.ctx.budget;
+        // Scale to what this run may actually spend: identical to
+        // `ctx.budget` on a fresh context (every standalone path), and to
+        // the slice allocation when a portfolio fence is set.
+        let budget = self.ctx.remaining();
         // Scale the population and initialization overhead to the budget:
         // calibration ≤ ~10% (E8), HSHI ≤ ~20%.
         let population = self.cfg.population.min((budget / 8).max(8));
@@ -101,7 +106,7 @@ impl SparseMapSearch {
             if calib.max_evals == 0 {
                 calib.max_evals = (budget / 10).max(40);
             }
-            Some(calibrate(&mut self.ctx, calib, &mut self.rng))
+            Some(calibrate(self.ctx, calib, &mut self.rng))
         } else {
             None
         };
@@ -110,7 +115,7 @@ impl SparseMapSearch {
             h.hypercubes = population;
             h.tries_per_cube =
                 h.tries_per_cube.min((budget / 5 / population.max(1)).max(1));
-            let r = initialize(&mut self.ctx, s, h, &mut self.rng);
+            let r = initialize(self.ctx, s, h, &mut self.rng);
             let mut pop = r.population;
             // Top up with random genomes if HSHI under-filled.
             while pop.len() < population {
@@ -143,7 +148,7 @@ impl SparseMapSearch {
             }
         }
         let init_genomes = init_genomes;
-        let mut pop: Vec<Individual> = evaluate_all(&mut self.ctx, init_genomes);
+        let mut pop: Vec<Individual> = evaluate_all(self.ctx, init_genomes);
         if let Some(m) = mean_valid_edp(&pop) {
             self.ctx.telemetry.push_population_mean(m);
         }
@@ -196,7 +201,7 @@ impl SparseMapSearch {
                 }
             }
 
-            let children = evaluate_all(&mut self.ctx, offspring);
+            let children = evaluate_all(self.ctx, offspring);
             if children.is_empty() {
                 break; // budget exhausted mid-generation
             }
@@ -208,14 +213,21 @@ impl SparseMapSearch {
             }
             gen += 1;
         }
-
-        self.ctx.outcome(self.cfg.variant.name())
     }
 }
 
+/// Run one ES search against a borrowed context (telemetry accumulates
+/// in the context; the caller finalizes the outcome). This is the form
+/// the optimizer registry and the portfolio meta-optimizer drive.
+pub fn run_sparsemap_with(ctx: &mut EvalContext, cfg: &EsConfig, seed: u64) {
+    SparseMapSearch::new(ctx, *cfg, seed).run();
+}
+
 /// Convenience one-call API.
-pub fn run_sparsemap(ctx: EvalContext, cfg: EsConfig, seed: u64) -> Outcome {
-    SparseMapSearch::new(ctx, cfg, seed).run()
+pub fn run_sparsemap(mut ctx: EvalContext, cfg: EsConfig, seed: u64) -> Outcome {
+    let method = cfg.variant.name();
+    run_sparsemap_with(&mut ctx, &cfg, seed);
+    ctx.outcome(method)
 }
 
 #[cfg(test)]

@@ -54,6 +54,19 @@
 //! search (`sparsemap patterns` demonstrates the outcome shift; fit a
 //! model to a real tensor with `sparsemap inspect-tensor <file>`).
 //!
+//! ## The optimizer registry — [`optimizer`]
+//!
+//! Every search method — SparseMap, its ablations, and all baselines —
+//! lives behind the [`optimizer::Optimizer`] trait in a static
+//! [`optimizer::registry()`]: canonical name, aliases, one-line
+//! description and a typed, ranged **tunable schema**. Hyper-parameters
+//! travel as a JSON `method_opts` object (API requests, `run-spec`
+//! files, CLI `--method-opts`) and validate against that schema; the
+//! registry is the single source of truth for method names everywhere
+//! (`sparsemap methods` prints it). On top of the trait sits the
+//! [`optimizer::portfolio`] meta-optimizer: a successive-halving race of
+//! member methods over one shared budget/cache/pool.
+//!
 //! ## Programmatic use — start at [`api`]
 //!
 //! [`api`] is the crate's front door: build a [`api::SearchRequest`]
@@ -72,6 +85,7 @@ pub mod es;
 pub mod genome;
 pub mod mapping;
 pub mod model;
+pub mod optimizer;
 pub mod report;
 #[cfg(feature = "xla")]
 pub mod runtime;
@@ -88,6 +102,7 @@ pub mod prelude {
     pub use crate::genome::{decode, Design, Genome, GenomeSpec};
     pub use crate::mapping::{MapLevel, Mapping};
     pub use crate::model::{EvalResult, NativeEvaluator};
+    pub use crate::optimizer::{registry, run_method, MethodSpec, Optimizer, ALL_METHODS};
     pub use crate::search::{Progress, SearchControl, SearchObserver};
     pub use crate::sparse::{RankFormat, SgMechanism, SparseStrategy};
     pub use crate::sparsity::DensityModel;

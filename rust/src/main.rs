@@ -40,13 +40,18 @@ Utility commands:
   search               run one search arm
                          --workload mm3 --platform cloud --method sparsemap
                          --budget 20000 --seed 42 [--pjrt] [--show-design]
-                         [--json]
+                         [--json] [--method-opts '{"population": 200}']
   run-spec FILE        run a search request from a JSON spec file: custom
                          workloads (any einsum contraction) and platforms
                          (any PE-array geometry) welcome; CLI options
                          override spec fields; [--json] prints the full
                          report to stdout, [--show-design] renders the
                          winner
+  methods              list every search method in the optimizer registry:
+                         name, aliases, description, and the tunables
+                         accepted in method_opts (with defaults). --method
+                         accepts aliases; `portfolio` races members over
+                         one shared budget
   calibrate            run high-sensitivity gene calibration and print S(v)
                          --workload mm3 --platform cloud
   inspect-tensor FILE  parse a sparse tensor file (COO/MatrixMarket or
@@ -81,8 +86,12 @@ fn check_args(args: &Args) -> anyhow::Result<()> {
     const COMMON_OPTS: &[&str] = &["budget", "seed", "out", "threads"];
     const COMMON_FLAGS: &[&str] = &["pjrt"];
     let (opts, flags): (&[&str], &[&str]) = match args.subcommand.as_str() {
-        "search" => (&["workload", "platform", "method"], &["show-design", "json"]),
-        "run-spec" => (&["workload", "platform", "method"], &["show-design", "json"]),
+        "search" => {
+            (&["workload", "platform", "method", "method-opts"], &["show-design", "json"])
+        }
+        "run-spec" => {
+            (&["workload", "platform", "method", "method-opts"], &["show-design", "json"])
+        }
         "calibrate" => (&["workload", "platform"], &[]),
         "table4" => (&["workloads"], &["summary"]),
         _ => (&[], &[]),
@@ -120,6 +129,11 @@ fn apply_overrides(mut req: SearchRequest, args: &Args) -> anyhow::Result<Search
     }
     if let Some(m) = args.opt("method") {
         req = req.method(m);
+    }
+    if let Some(mo) = args.opt("method-opts") {
+        let opts = Json::parse(mo)
+            .map_err(|e| anyhow::anyhow!("--method-opts must be inline JSON: {e}"))?;
+        req = req.method_opts(opts);
     }
     if args.opt("budget").is_some() {
         req.budget = args.opt_u64("budget", 0)? as usize;
@@ -165,6 +179,20 @@ fn run_and_report(req: SearchRequest, args: &Args) -> anyhow::Result<()> {
             report.model_evals_per_s(),
             report.request.threads.max(1),
         );
+        // The portfolio meta-method carries a per-member breakdown.
+        for m in report.members() {
+            println!(
+                "  member {:12} {:6} evals over {} round(s), own best {}{}",
+                m.method,
+                m.evals,
+                m.rounds,
+                if m.best_edp.is_finite() { format!("{:.4e}", m.best_edp) } else { "-".into() },
+                match m.eliminated_round {
+                    Some(r) => format!("  (eliminated after round {r})"),
+                    None => String::new(),
+                },
+            );
+        }
     }
     if args.flag("show-design") {
         if let Some(g) = &outcome.best_genome {
@@ -225,6 +253,35 @@ fn cmd_inspect_tensor(args: &Args) -> anyhow::Result<()> {
     let report = inspect::inspect(&text).map_err(|e| e.context(format!("'{path}'")))?;
     print!("{report}");
     Ok(())
+}
+
+fn cmd_methods() {
+    use sparsemap::optimizer::TunableKind;
+    println!("search methods (pass to --method by name or alias; tune via method_opts):\n");
+    for m in sparsemap::optimizer::registry() {
+        let aliases = if m.aliases.is_empty() {
+            String::new()
+        } else {
+            format!("  (aliases: {})", m.aliases.join(", "))
+        };
+        println!("{}{}", m.name, aliases);
+        println!("    {}", m.summary);
+        if m.tunables.is_empty() {
+            println!("    tunables: none");
+        } else {
+            for t in m.tunables {
+                let range = match t.kind {
+                    TunableKind::Int { min, max } => format!("int in [{min}, {max}]"),
+                    TunableKind::Float { min, max } => format!("float in [{min}, {max}]"),
+                    TunableKind::MethodList => "array of method names".to_string(),
+                    TunableKind::OptsByMethod => "object: method -> its opts".to_string(),
+                };
+                println!("    {:14} {} (default {}) — {}", t.key, range, t.default, t.help);
+            }
+        }
+        println!();
+    }
+    println!("example: sparsemap search --method pso --method-opts '{{\"swarm\": 24}}'");
 }
 
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
@@ -306,6 +363,7 @@ fn main() -> anyhow::Result<()> {
         "patterns" => println!("{}", patterns::run(&cfg)?),
         "search" => cmd_search(&args)?,
         "run-spec" => cmd_run_spec(&args)?,
+        "methods" => cmd_methods(),
         "calibrate" => cmd_calibrate(&args)?,
         "inspect-tensor" => cmd_inspect_tensor(&args)?,
         "demo" => cmd_demo()?,

@@ -1,0 +1,371 @@
+//! The optimizer subsystem — every search method behind one trait, one
+//! registry, one dispatch path.
+//!
+//! The paper's contribution *is* the search method, so methods are
+//! first-class here rather than a string `match` over free functions:
+//!
+//! * [`Optimizer`] — a built, configured search method. It runs against a
+//!   borrowed [`EvalContext`] until the budget (or a portfolio fence) is
+//!   exhausted; telemetry accumulates in the context and the caller
+//!   finalizes the [`Outcome`].
+//! * [`MethodSpec`] — per-method metadata: canonical name, aliases, a
+//!   one-line description, the schema of its tunables (typed, ranged,
+//!   documented) and the builder that turns a JSON options object into a
+//!   runnable [`Optimizer`].
+//! * [`registry()`] — the static table of every method. It is the single
+//!   source of truth behind [`ALL_METHODS`], [`run_method`],
+//!   `api::SearchSession` validation and the CLI (`sparsemap methods`
+//!   prints it).
+//! * [`portfolio`] — the first method only expressible on top of the
+//!   trait: round-based successive-halving racing of member optimizers
+//!   over one shared budget/cache/pool.
+//!
+//! Method hyper-parameters travel as a JSON object (`method_opts` on an
+//! [`crate::api::SearchRequest`], `--method-opts` on the CLI) and are
+//! validated against the method's tunable schema: unknown keys are
+//! rejected with a nearest-match suggestion, values are type- and
+//! range-checked. An empty object means "paper defaults", and every
+//! method's default-config trajectory is bit-for-bit identical to the
+//! pre-registry dispatch (pinned by `rust/tests/golden_trajectories.rs`).
+
+pub mod portfolio;
+mod registry;
+
+pub use registry::{registry, ALL_METHODS};
+
+use crate::search::{EvalContext, Outcome};
+use crate::util::cli::nearest;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// A built, configured search method. Implementations run their whole
+/// search loop against the borrowed context; they never finalize the
+/// outcome themselves (that is the dispatcher's job), which is what lets
+/// the portfolio re-enter the same shared context with every member.
+pub trait Optimizer {
+    /// The method label stamped into the [`Outcome`] (the registry name,
+    /// e.g. `"sparsemap"`).
+    fn label(&self) -> &str;
+
+    /// Run until the context reports an exhausted budget.
+    fn run(&mut self, ctx: &mut EvalContext, seed: u64);
+
+    /// Post-process the finalized outcome (the portfolio attaches its
+    /// per-member telemetry here; plain methods do nothing).
+    fn annotate(&self, _outcome: &mut Outcome) {}
+}
+
+/// The type and valid range of one tunable.
+#[derive(Clone, Copy, Debug)]
+pub enum TunableKind {
+    /// Integer in `[min, max]`.
+    Int { min: u64, max: u64 },
+    /// Finite float in `[min, max]`.
+    Float { min: f64, max: f64 },
+    /// Non-empty array of registry method names (the portfolio's
+    /// `members`); entries may be aliases, and may not name the owning
+    /// method itself (no nested portfolios).
+    MethodList,
+    /// Object mapping member method names to *their* options objects
+    /// (the portfolio's `member_opts`); each value is validated against
+    /// that member's own tunable schema, recursively.
+    OptsByMethod,
+}
+
+/// One schema'd hyper-parameter of a method.
+#[derive(Clone, Copy, Debug)]
+pub struct Tunable {
+    /// JSON key inside `method_opts`.
+    pub key: &'static str,
+    pub kind: TunableKind,
+    /// Human-readable default, shown by `sparsemap methods`.
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+/// Registry metadata + constructor for one method.
+pub struct MethodSpec {
+    /// Canonical name (what `Outcome::method` reports).
+    pub name: &'static str,
+    /// Accepted spellings beside the canonical name.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `sparsemap methods`.
+    pub summary: &'static str,
+    /// Schema of the method's `method_opts` keys.
+    pub tunables: &'static [Tunable],
+    /// Turn a *validated* options object into a runnable optimizer.
+    pub(crate) builder: fn(&Json) -> Result<Box<dyn Optimizer>>,
+}
+
+impl MethodSpec {
+    /// Check an options object against this method's tunable schema:
+    /// must be a JSON object, every key a known tunable (unknown keys
+    /// get a nearest-match suggestion), every value in type and range.
+    pub fn validate_opts(&self, opts: &Json) -> Result<()> {
+        let obj = opts
+            .as_obj()
+            .ok_or_else(|| anyhow!("method_opts for '{}' must be a JSON object", self.name))?;
+        for (key, val) in obj {
+            let Some(t) = self.tunables.iter().find(|t| t.key == key.as_str()) else {
+                let hint = nearest(key, self.tunables.iter().map(|t| t.key))
+                    .map(|k| format!(" (did you mean '{k}'?)"))
+                    .unwrap_or_default();
+                bail!(
+                    "method '{}' has no tunable '{key}'{hint}; \
+                     run `sparsemap methods` for the schema",
+                    self.name
+                );
+            };
+            match t.kind {
+                TunableKind::Int { min, max } => {
+                    let v = val.as_u64().ok_or_else(|| {
+                        anyhow!("tunable '{key}' of '{}' must be an integer", self.name)
+                    })?;
+                    ensure!(
+                        v >= min && v <= max,
+                        "tunable '{key}' of '{}' must be in [{min}, {max}], got {v}",
+                        self.name
+                    );
+                }
+                TunableKind::Float { min, max } => {
+                    let v = val.as_f64().ok_or_else(|| {
+                        anyhow!("tunable '{key}' of '{}' must be a number", self.name)
+                    })?;
+                    ensure!(
+                        v.is_finite() && v >= min && v <= max,
+                        "tunable '{key}' of '{}' must be in [{min}, {max}], got {v}",
+                        self.name
+                    );
+                }
+                TunableKind::MethodList => {
+                    let arr = val.as_arr().ok_or_else(|| {
+                        anyhow!(
+                            "tunable '{key}' of '{}' must be an array of method names",
+                            self.name
+                        )
+                    })?;
+                    ensure!(
+                        !arr.is_empty(),
+                        "'{key}' of '{}' needs at least one method",
+                        self.name
+                    );
+                    for entry in arr {
+                        let name = entry.as_str().ok_or_else(|| {
+                            anyhow!(
+                                "'{key}' of '{}' entries must be method-name strings",
+                                self.name
+                            )
+                        })?;
+                        let member = resolve(name)?;
+                        ensure!(
+                            member.name != self.name,
+                            "'{}' cannot race itself as a member",
+                            self.name
+                        );
+                    }
+                }
+                TunableKind::OptsByMethod => {
+                    let map = val.as_obj().ok_or_else(|| {
+                        anyhow!(
+                            "tunable '{key}' of '{}' must map method names to options objects",
+                            self.name
+                        )
+                    })?;
+                    for (mname, mopts) in map {
+                        let member = resolve(mname)?;
+                        ensure!(
+                            member.name != self.name,
+                            "'{}' cannot carry options for itself as a member",
+                            self.name
+                        );
+                        member
+                            .validate_opts(mopts)
+                            .map_err(|e| e.context(format!("in '{key}' for member '{mname}'")))?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate `opts` and construct the runnable optimizer.
+    pub fn build(&self, opts: &Json) -> Result<Box<dyn Optimizer>> {
+        self.validate_opts(opts)?;
+        (self.builder)(opts)
+    }
+}
+
+/// Look a method up by canonical name or alias. Unknown names fail with
+/// the full method list and a nearest-match suggestion (the same
+/// levenshtein the CLI's `reject_unknown` uses for flags) — this is the
+/// one validation path shared by [`run_method`], the API session and the
+/// CLI.
+pub fn resolve(name: &str) -> Result<&'static MethodSpec> {
+    registry()
+        .iter()
+        .find(|m| m.name == name || m.aliases.contains(&name))
+        .ok_or_else(|| {
+            let all = registry()
+                .iter()
+                .flat_map(|m| std::iter::once(m.name).chain(m.aliases.iter().copied()));
+            let hint = nearest(name, all)
+                .map(|k| format!(" (did you mean '{k}'?)"))
+                .unwrap_or_default();
+            anyhow!("unknown method '{name}' (one of {ALL_METHODS:?}){hint}")
+        })
+}
+
+/// Run a method by name with default (paper) hyper-parameters — the
+/// internal engine behind [`crate::api::SearchSession::run`]. Downstream
+/// users should go through [`crate::api::SearchRequest`]; this stays
+/// public for drivers that assemble their own [`EvalContext`].
+///
+/// Every method evaluates through the [`EvalContext`] it is handed, so
+/// all arms inherit the context's worker pool, evaluation cache and
+/// observer equally — attach a pool with `EvalContext::with_pool` (or
+/// via a request's `threads`) and the comparison stays fair.
+pub fn run_method(name: &str, ctx: EvalContext, seed: u64) -> Result<Outcome> {
+    run_method_with(name, &Json::Obj(Default::default()), ctx, seed)
+}
+
+/// [`run_method`] with a `method_opts` object (validated against the
+/// method's tunable schema — see [`MethodSpec::validate_opts`]).
+pub fn run_method_with(
+    name: &str,
+    opts: &Json,
+    mut ctx: EvalContext,
+    seed: u64,
+) -> Result<Outcome> {
+    let spec = resolve(name)?;
+    let mut opt = spec.build(opts)?;
+    opt.run(&mut ctx, seed);
+    let label = opt.label().to_string();
+    let mut outcome = ctx.outcome(&label);
+    opt.annotate(&mut outcome);
+    Ok(outcome)
+}
+
+/// Typed getter for a validated options object (absent key = default).
+pub(crate) fn opt_usize(opts: &Json, key: &str, default: usize) -> usize {
+    opts.get(key).and_then(Json::as_u64).map(|v| v as usize).unwrap_or(default)
+}
+
+/// Typed getter for a validated options object (absent key = default).
+pub(crate) fn opt_f64(opts: &Json, key: &str, default: f64) -> f64 {
+    opts.get(key).and_then(Json::as_f64).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::search::Backend;
+    use crate::workload::Workload;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("t", 16, 16, 16, 0.5, 0.5);
+        EvalContext::new(Backend::native(w, Platform::mobile()), budget)
+    }
+
+    #[test]
+    fn all_registry_methods_dispatch_and_respect_budget() {
+        for m in ALL_METHODS {
+            let o = run_method(m, ctx(60), 1).unwrap();
+            assert!(o.evals <= 60, "{m} overspent");
+        }
+    }
+
+    #[test]
+    fn all_methods_is_exactly_the_registry() {
+        let names: Vec<&str> = registry().iter().map(|m| m.name).collect();
+        assert_eq!(ALL_METHODS, names.as_slice());
+    }
+
+    #[test]
+    fn aliases_resolve_to_their_method_and_never_collide() {
+        for m in registry() {
+            for a in m.aliases {
+                assert_eq!(resolve(a).unwrap().name, m.name, "alias {a}");
+                assert!(!ALL_METHODS.contains(a), "alias {a} shadows a canonical name");
+            }
+        }
+        // Aliases are unique across the registry.
+        let mut seen = std::collections::BTreeSet::new();
+        for m in registry() {
+            for key in std::iter::once(&m.name).chain(m.aliases) {
+                assert!(seen.insert(*key), "duplicate method key '{key}'");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_method_rejected_with_suggestion() {
+        let err = resolve("spasemap").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'sparsemap'"), "{err}");
+        assert!(resolve("gradient-descent").is_err());
+    }
+
+    #[test]
+    fn alias_runs_under_canonical_label() {
+        let spec = resolve("sm").unwrap();
+        assert_eq!(spec.name, "sparsemap");
+        let o = run_method("sm", ctx(60), 1).unwrap();
+        assert_eq!(o.method, "sparsemap");
+    }
+
+    #[test]
+    fn unknown_tunable_rejected_with_suggestion() {
+        let spec = resolve("sparsemap").unwrap();
+        let opts = Json::parse(r#"{"populaton": 40}"#).unwrap();
+        let err = spec.validate_opts(&opts).unwrap_err().to_string();
+        assert!(err.contains("no tunable 'populaton'"), "{err}");
+        assert!(err.contains("did you mean 'population'"), "{err}");
+    }
+
+    #[test]
+    fn tunable_type_and_range_checked() {
+        let spec = resolve("pso").unwrap();
+        assert!(spec.validate_opts(&Json::parse(r#"{"swarm": "big"}"#).unwrap()).is_err());
+        assert!(spec.validate_opts(&Json::parse(r#"{"swarm": 0}"#).unwrap()).is_err());
+        assert!(spec.validate_opts(&Json::parse(r#"{"inertia": 1e9}"#).unwrap()).is_err());
+        assert!(spec
+            .validate_opts(&Json::parse(r#"{"swarm": 16, "inertia": 0.5}"#).unwrap())
+            .is_ok());
+        // method_opts must be an object.
+        assert!(spec.validate_opts(&Json::parse("[1,2]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn method_opts_change_the_search() {
+        // A 4-particle vs 40-particle swarm at the same tiny budget
+        // produces different trajectories — the knob demonstrably
+        // reaches the algorithm.
+        let small = run_method_with("pso", &Json::parse(r#"{"swarm": 4}"#).unwrap(), ctx(120), 5)
+            .unwrap();
+        let default = run_method("pso", ctx(120), 5).unwrap();
+        assert_eq!(small.method, "pso");
+        assert!(small.evals <= 120 && default.evals <= 120);
+        assert_ne!(
+            (small.valid_evals, small.curve.clone()),
+            (default.valid_evals, default.curve.clone()),
+            "swarm size must alter the trajectory"
+        );
+    }
+
+    #[test]
+    fn every_tunable_documents_itself() {
+        for m in registry() {
+            assert!(!m.summary.is_empty(), "{} has no summary", m.name);
+            for t in m.tunables {
+                assert!(!t.help.is_empty(), "{}/{} has no help", m.name, t.key);
+                assert!(!t.default.is_empty(), "{}/{} has no default", m.name, t.key);
+                if let TunableKind::Int { min, max } = t.kind {
+                    assert!(min <= max, "{}/{} empty range", m.name, t.key);
+                }
+                if let TunableKind::Float { min, max } = t.kind {
+                    assert!(min <= max, "{}/{} empty range", m.name, t.key);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! The `portfolio` meta-optimizer: round-based successive-halving racing
+//! of member methods over one **shared** budget, evaluation cache and
+//! worker pool — the first method only expressible because every search
+//! arm now runs behind the [`Optimizer`] trait against a borrowed
+//! [`EvalContext`].
+//!
+//! ## How the race works
+//!
+//! The portfolio never evaluates a genome itself. Each round it divides
+//! an equal share of the remaining shared budget among the surviving
+//! members and runs each member *to that fence*
+//! ([`EvalContext::set_fence`]): the member sees an ordinary
+//! budget-exhausted context and winds down through its normal exit path.
+//! After every round but the last, the worst `1 - 1/eta` of survivors
+//! (by their own per-slice best EDP) are eliminated. Rounding leftovers
+//! go to the best survivor at the end.
+//!
+//! Members are deterministic and re-run **with the same seed** each
+//! round. For methods whose trajectory does not depend on the remaining
+//! budget (pso, random, sparseloop, sage-like, es-direct, mcts, tbpsa,
+//! ppo, dqn), the round-`r+1` run therefore repeats its round-`r`
+//! trajectory as a prefix, and the shared evaluation cache serves that
+//! prefix without model calls (still debiting the budget, like every
+//! cache hit: the paper counts submissions) — classic restart-based
+//! successive halving. The ES family (sparsemap / es-pfce / es-std) is
+//! deliberately different: it sizes its population, calibration and
+//! annealing schedule to the budget it can actually spend
+//! (`ctx.remaining()` at entry), so each round it launches a *fresh,
+//! better-proportioned* search over the larger share instead of
+//! replaying an undersized one. Either way the shared telemetry
+//! accumulates in the one context, so the portfolio's [`Outcome`]
+//! carries the global best across all members, and [`Outcome::members`]
+//! breaks the spend down per member — their `evals` sum to the
+//! outcome's `evals` exactly.
+
+use super::{opt_usize, resolve, MethodSpec, Optimizer};
+use crate::search::{EvalContext, MemberStats, Outcome};
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Default member set: the flagship ES, its encoding-only ablation, and
+/// the two strongest non-ES baselines at small budgets.
+pub const DEFAULT_MEMBERS: &[&str] = &["sparsemap", "es-pfce", "pso", "random"];
+
+struct Member {
+    spec: &'static MethodSpec,
+    opts: Json,
+    evals: usize,
+    best_edp: f64,
+    rounds: usize,
+    eliminated_round: Option<usize>,
+}
+
+/// The meta-optimizer. Construct through the registry:
+/// `resolve("portfolio")?.build(&opts)`.
+pub struct Portfolio {
+    members: Vec<Member>,
+    rounds: usize,
+    eta: usize,
+}
+
+/// Registry builder (opts pre-validated against the portfolio tunables).
+pub(crate) fn build(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let names: Vec<String> = match opts.get("members") {
+        Some(Json::Arr(a)) => {
+            a.iter().map(|m| m.as_str().unwrap_or_default().to_string()).collect()
+        }
+        _ => DEFAULT_MEMBERS.iter().map(|s| s.to_string()).collect(),
+    };
+    let mut members = Vec::with_capacity(names.len());
+    for name in &names {
+        let spec = resolve(name)?;
+        if members.iter().any(|m: &Member| std::ptr::eq(m.spec, spec)) {
+            bail!("portfolio member '{}' listed twice", spec.name);
+        }
+        members.push(Member {
+            spec,
+            opts: Json::Obj(Default::default()),
+            evals: 0,
+            best_edp: f64::INFINITY,
+            rounds: 0,
+            eliminated_round: None,
+        });
+    }
+    // `member_opts` keys resolve through the registry like any method
+    // name (aliases welcome), and each must name an actual member —
+    // silently dropping a user's tuning would be the worst failure mode.
+    if let Some(map) = opts.get("member_opts").and_then(Json::as_obj) {
+        let mut assigned = vec![false; members.len()];
+        for (key, val) in map {
+            let kspec = resolve(key)?;
+            let Some(i) = members.iter().position(|m| std::ptr::eq(m.spec, kspec)) else {
+                bail!(
+                    "member_opts entry '{key}' does not match any portfolio member \
+                     (members: {names:?})"
+                );
+            };
+            if assigned[i] {
+                bail!("member_opts sets '{}' twice (via different spellings)", kspec.name);
+            }
+            assigned[i] = true;
+            members[i].opts = val.clone();
+        }
+    }
+    Ok(Box::new(Portfolio {
+        members,
+        rounds: opt_usize(opts, "rounds", 3).max(1),
+        eta: opt_usize(opts, "eta", 2).max(2),
+    }))
+}
+
+impl Portfolio {
+    /// Run `member` until `fence` (an absolute submission count), folding
+    /// the slice's spend and per-slice best into its stats. `round` is
+    /// the portfolio-level round index (the same number the halving path
+    /// records in `eliminated_round`).
+    fn run_slice(
+        member: &mut Member,
+        ctx: &mut EvalContext,
+        fence: Option<usize>,
+        seed: u64,
+        round: usize,
+    ) {
+        let before = ctx.used();
+        ctx.begin_slice();
+        ctx.set_fence(fence);
+        // Validated at build time, so this only fails if a member's
+        // semantic invariants break — eliminate it (loudly) rather than
+        // poison the whole race.
+        match member.spec.build(&member.opts) {
+            Ok(mut opt) => opt.run(ctx, seed),
+            Err(e) => {
+                eprintln!("warning: portfolio member '{}' failed to build: {e}", member.spec.name);
+                member.eliminated_round = Some(round);
+            }
+        }
+        ctx.set_fence(None);
+        member.evals += ctx.used() - before;
+        member.best_edp = member.best_edp.min(ctx.slice_best());
+        member.rounds += 1;
+    }
+
+    fn alive(&self) -> Vec<usize> {
+        (0..self.members.len())
+            .filter(|&i| self.members[i].eliminated_round.is_none())
+            .collect()
+    }
+}
+
+impl Optimizer for Portfolio {
+    fn label(&self) -> &str {
+        "portfolio"
+    }
+
+    fn run(&mut self, ctx: &mut EvalContext, seed: u64) {
+        for round in 0..self.rounds {
+            let alive = self.alive();
+            if alive.is_empty() || ctx.exhausted() {
+                break;
+            }
+            // This round's pot: an equal share of what's left for each
+            // remaining round, split evenly across survivors.
+            let pot = ctx.remaining() / (self.rounds - round);
+            let share = (pot / alive.len()).max(1);
+            for &i in &alive {
+                if ctx.exhausted() {
+                    break;
+                }
+                let alloc = share.min(ctx.remaining());
+                let fence = ctx.used() + alloc;
+                // Same member seed every round: budget-independent
+                // methods resume by cache-served replay, the ES family
+                // restarts proportioned to the new share (module docs).
+                Self::run_slice(&mut self.members[i], ctx, Some(fence), seed, round);
+            }
+            // Successive halving after every round but the last: rank
+            // survivors by their own best and keep ceil(alive/eta),
+            // stable on ties (registry order).
+            if round + 1 < self.rounds {
+                let mut ranked = self.alive();
+                ranked.sort_by(|&a, &b| {
+                    self.members[a].best_edp.total_cmp(&self.members[b].best_edp)
+                });
+                let keep = ranked.len().div_ceil(self.eta).max(1);
+                for &i in &ranked[keep..] {
+                    self.members[i].eliminated_round = Some(round);
+                }
+            }
+        }
+        // Rounding leftovers go to the best survivor, unfenced.
+        if !ctx.exhausted() {
+            let best = self
+                .alive()
+                .into_iter()
+                .min_by(|&a, &b| self.members[a].best_edp.total_cmp(&self.members[b].best_edp));
+            if let Some(i) = best {
+                let last_round = self.rounds.saturating_sub(1);
+                Self::run_slice(&mut self.members[i], ctx, None, seed, last_round);
+            }
+        }
+    }
+
+    fn annotate(&self, outcome: &mut Outcome) {
+        outcome.members = self
+            .members
+            .iter()
+            .map(|m| MemberStats {
+                method: m.spec.name.to_string(),
+                evals: m.evals,
+                best_edp: m.best_edp,
+                rounds: m.rounds,
+                eliminated_round: m.eliminated_round,
+            })
+            .collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_method, run_method_with, ALL_METHODS};
+    use crate::arch::Platform;
+    use crate::search::{Backend, EvalContext};
+    use crate::util::json::Json;
+    use crate::workload::Workload;
+
+    fn ctx(budget: usize) -> EvalContext {
+        let w = Workload::spmm("t", 16, 32, 16, 0.4, 0.3);
+        EvalContext::new(Backend::native(w, Platform::mobile()), budget)
+    }
+
+    #[test]
+    fn portfolio_spends_exactly_its_budget_across_members() {
+        let o = run_method("portfolio", ctx(900), 11).unwrap();
+        assert_eq!(o.method, "portfolio");
+        assert!(o.evals <= 900, "overspent: {}", o.evals);
+        assert_eq!(o.members.len(), super::DEFAULT_MEMBERS.len());
+        let member_sum: usize = o.members.iter().map(|m| m.evals).sum();
+        assert_eq!(member_sum, o.evals, "member evals must sum to the outcome's");
+        // The global best is at least as good as every member's own best.
+        for m in &o.members {
+            assert!(o.best_edp <= m.best_edp, "{} beat the portfolio best", m.method);
+        }
+        // With rounds=3 over 4 members someone must have been eliminated.
+        assert!(o.members.iter().any(|m| m.eliminated_round.is_some()));
+        assert!(o.members.iter().any(|m| m.eliminated_round.is_none()));
+    }
+
+    #[test]
+    fn portfolio_is_deterministic_per_seed() {
+        let a = run_method("portfolio", ctx(600), 4).unwrap();
+        let b = run_method("portfolio", ctx(600), 4).unwrap();
+        assert_eq!(a.best_edp.to_bits(), b.best_edp.to_bits());
+        assert_eq!(a.curve, b.curve);
+        assert_eq!(a.members, b.members);
+    }
+
+    #[test]
+    fn custom_members_and_member_opts() {
+        let opts = Json::parse(
+            r#"{"members": ["pso", "random"], "rounds": 2,
+                "member_opts": {"pso": {"swarm": 12}}}"#,
+        )
+        .unwrap();
+        let o = run_method_with("portfolio", &opts, ctx(400), 3).unwrap();
+        assert_eq!(o.members.len(), 2);
+        assert_eq!(o.members[0].method, "pso");
+        assert_eq!(o.members[1].method, "random");
+        assert_eq!(o.members.iter().map(|m| m.evals).sum::<usize>(), o.evals);
+    }
+
+    #[test]
+    fn member_opts_resolve_aliases_and_reject_non_members() {
+        // Opts keyed by an alias must reach the member named canonically
+        // in `members`: if the alias failed to resolve onto the member,
+        // build would reject it as a non-member entry and this unwrap
+        // would fail.
+        let aliased = Json::parse(
+            r#"{"members": ["random"], "rounds": 1,
+                "member_opts": {"rand": {"batch": 1}}}"#,
+        )
+        .unwrap();
+        let o = run_method_with("portfolio", &aliased, ctx(40), 5).unwrap();
+        assert_eq!(o.members[0].method, "random");
+        assert_eq!(o.evals, 40);
+
+        // Opts for a method that is not a member must fail loudly, not
+        // be silently dropped.
+        let stray = Json::parse(
+            r#"{"members": ["pso"], "member_opts": {"random": {"batch": 8}}}"#,
+        )
+        .unwrap();
+        let err = run_method_with("portfolio", &stray, ctx(40), 5).unwrap_err().to_string();
+        assert!(err.contains("does not match any portfolio member"), "{err}");
+
+        // Two spellings of the same member cannot both carry opts.
+        let twice = Json::parse(
+            r#"{"members": ["random"],
+                "member_opts": {"random": {"batch": 8}, "rand": {"batch": 9}}}"#,
+        )
+        .unwrap();
+        assert!(run_method_with("portfolio", &twice, ctx(40), 5).is_err());
+    }
+
+    #[test]
+    fn nested_portfolio_and_duplicates_rejected() {
+        let nested = Json::parse(r#"{"members": ["portfolio"]}"#).unwrap();
+        assert!(run_method_with("portfolio", &nested, ctx(50), 1).is_err());
+        // An alias duplicating a canonical member is caught too.
+        let dup = Json::parse(r#"{"members": ["pso", "pso"]}"#).unwrap();
+        assert!(run_method_with("portfolio", &dup, ctx(50), 1).is_err());
+        let alias_dup = Json::parse(r#"{"members": ["random", "rand"]}"#).unwrap();
+        assert!(run_method_with("portfolio", &alias_dup, ctx(50), 1).is_err());
+    }
+
+    #[test]
+    fn tiny_budget_degrades_gracefully() {
+        // Far fewer samples than members x rounds: must terminate, never
+        // overspend, and still account every eval to a member.
+        for budget in [1usize, 3, 7, 11] {
+            let o = run_method("portfolio", ctx(budget), 2).unwrap();
+            assert!(o.evals <= budget, "budget {budget} overspent: {}", o.evals);
+            assert_eq!(o.members.iter().map(|m| m.evals).sum::<usize>(), o.evals);
+        }
+    }
+
+    #[test]
+    fn portfolio_listed_in_registry() {
+        assert!(ALL_METHODS.contains(&"portfolio"));
+    }
+}

@@ -1,0 +1,465 @@
+//! The static method registry — one [`MethodSpec`] per search arm, plus
+//! the generic adapter that lifts the config-parameterized cores in
+//! [`crate::es`] / [`crate::baselines`] into [`Optimizer`]s.
+//!
+//! Default tunable values here ARE the paper constants the free
+//! functions used to hard-wire; `rust/tests/golden_trajectories.rs` pins
+//! that an empty options object reproduces every pre-registry trajectory
+//! bit-for-bit.
+
+use super::portfolio;
+use super::{opt_f64, opt_usize, MethodSpec, Optimizer, Tunable, TunableKind};
+use crate::baselines::es_direct::{es_direct_with, EsDirectConfig};
+use crate::baselines::mcts::{mcts_with, MctsConfig};
+use crate::baselines::pso::{pso_with, PsoConfig};
+use crate::baselines::rl::{dqn_with, ppo_with, DqnConfig, PpoConfig};
+use crate::baselines::samplers::{
+    pure_random_with, sage_like_with, sparseloop_mapper_with, RandomConfig, SageConfig,
+    SparseloopConfig,
+};
+use crate::baselines::tbpsa::{tbpsa_with, TbpsaConfig};
+use crate::es::{run_sparsemap_with, EsConfig, EsVariant};
+use crate::search::EvalContext;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Adapter: a typed config + the matching `*_with` core = an Optimizer.
+struct ConfiguredOpt<C: 'static> {
+    label: &'static str,
+    cfg: C,
+    run_fn: fn(&mut EvalContext, &C, u64),
+}
+
+impl<C> Optimizer for ConfiguredOpt<C> {
+    fn label(&self) -> &str {
+        self.label
+    }
+
+    fn run(&mut self, ctx: &mut EvalContext, seed: u64) {
+        (self.run_fn)(ctx, &self.cfg, seed)
+    }
+}
+
+// --- builders (opts are pre-validated against the tunable tables) ----------
+
+fn build_es(variant: EsVariant, opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = EsConfig::default();
+    let cfg = EsConfig {
+        population: opt_usize(opts, "population", d.population),
+        parent_frac: opt_f64(opts, "parent_frac", d.parent_frac),
+        mutation_prob: opt_f64(opts, "mutation_prob", d.mutation_prob),
+        variant,
+        ..d
+    };
+    Ok(Box::new(ConfiguredOpt { label: variant.name(), cfg, run_fn: run_sparsemap_with }))
+}
+
+fn build_sparsemap(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    build_es(EsVariant::Full, opts)
+}
+
+fn build_es_pfce(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    build_es(EsVariant::Pfce, opts)
+}
+
+fn build_es_std(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    build_es(EsVariant::Standard, opts)
+}
+
+fn build_es_direct(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = EsDirectConfig::default();
+    let cfg = EsDirectConfig {
+        population: opt_usize(opts, "population", d.population),
+        parent_frac: opt_f64(opts, "parent_frac", d.parent_frac),
+        mutation_prob: opt_f64(opts, "mutation_prob", d.mutation_prob),
+    };
+    Ok(Box::new(ConfiguredOpt { label: "es-direct", cfg, run_fn: es_direct_with }))
+}
+
+fn build_random(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = RandomConfig::default();
+    let cfg = RandomConfig { batch: opt_usize(opts, "batch", d.batch) };
+    Ok(Box::new(ConfiguredOpt { label: "random", cfg, run_fn: pure_random_with }))
+}
+
+fn build_sparseloop(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = SparseloopConfig::default();
+    let cfg = SparseloopConfig {
+        batch: opt_usize(opts, "batch", d.batch),
+        manual_prob: opt_f64(opts, "manual_prob", d.manual_prob),
+    };
+    Ok(Box::new(ConfiguredOpt { label: "sparseloop", cfg, run_fn: sparseloop_mapper_with }))
+}
+
+fn build_sage(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = SageConfig::default();
+    let cfg = SageConfig {
+        population: opt_usize(opts, "population", d.population),
+        mutations: opt_usize(opts, "mutations", d.mutations),
+    };
+    Ok(Box::new(ConfiguredOpt { label: "sage-like", cfg, run_fn: sage_like_with }))
+}
+
+fn build_pso(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = PsoConfig::default();
+    let cfg = PsoConfig {
+        swarm: opt_usize(opts, "swarm", d.swarm),
+        inertia: opt_f64(opts, "inertia", d.inertia),
+        c1: opt_f64(opts, "c1", d.c1),
+        c2: opt_f64(opts, "c2", d.c2),
+    };
+    Ok(Box::new(ConfiguredOpt { label: "pso", cfg, run_fn: pso_with }))
+}
+
+fn build_mcts(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = MctsConfig::default();
+    let cfg = MctsConfig { c_uct: opt_f64(opts, "c_uct", d.c_uct) };
+    Ok(Box::new(ConfiguredOpt { label: "mcts", cfg, run_fn: mcts_with }))
+}
+
+fn build_tbpsa(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = TbpsaConfig::default();
+    let cfg = TbpsaConfig {
+        lambda: opt_usize(opts, "lambda", d.lambda),
+        mu: opt_usize(opts, "mu", d.mu),
+    };
+    Ok(Box::new(ConfiguredOpt { label: "tbpsa", cfg, run_fn: tbpsa_with }))
+}
+
+fn build_ppo(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = PpoConfig::default();
+    let cfg = PpoConfig {
+        clip: opt_f64(opts, "clip", d.clip),
+        lr: opt_f64(opts, "lr", d.lr),
+        batch: opt_usize(opts, "batch", d.batch),
+    };
+    Ok(Box::new(ConfiguredOpt { label: "ppo", cfg, run_fn: ppo_with }))
+}
+
+fn build_dqn(opts: &Json) -> Result<Box<dyn Optimizer>> {
+    let d = DqnConfig::default();
+    let cfg = DqnConfig {
+        gamma: opt_f64(opts, "gamma", d.gamma),
+        lr: opt_f64(opts, "lr", d.lr),
+        hidden: opt_usize(opts, "hidden", d.hidden),
+    };
+    Ok(Box::new(ConfiguredOpt { label: "dqn", cfg, run_fn: dqn_with }))
+}
+
+// --- tunable tables --------------------------------------------------------
+
+const PARENT_FRAC_TUNABLE: Tunable = Tunable {
+    key: "parent_frac",
+    kind: TunableKind::Float { min: 0.01, max: 1.0 },
+    default: "0.25",
+    help: "fraction of the population selected as parents",
+};
+
+const MUTATION_PROB_TUNABLE: Tunable = Tunable {
+    key: "mutation_prob",
+    kind: TunableKind::Float { min: 0.0, max: 1.0 },
+    default: "0.6",
+    help: "probability an offspring is mutated",
+};
+
+const ES_TUNABLES: &[Tunable] = &[
+    Tunable {
+        key: "population",
+        kind: TunableKind::Int { min: 2, max: 10_000 },
+        default: "100",
+        help: "population size (capped at budget/8 at runtime)",
+    },
+    PARENT_FRAC_TUNABLE,
+    MUTATION_PROB_TUNABLE,
+];
+
+// es-direct shares the ES knobs but NOT the budget/8 runtime cap, so it
+// documents its population honestly.
+const ES_DIRECT_TUNABLES: &[Tunable] = &[
+    Tunable {
+        key: "population",
+        kind: TunableKind::Int { min: 2, max: 10_000 },
+        default: "100",
+        help: "population size (uncapped; offspring are clipped to the remaining budget)",
+    },
+    PARENT_FRAC_TUNABLE,
+    MUTATION_PROB_TUNABLE,
+];
+
+const BATCH_TUNABLE: Tunable = Tunable {
+    key: "batch",
+    kind: TunableKind::Int { min: 1, max: 1_000_000 },
+    default: "256",
+    help: "genomes submitted per evaluation batch",
+};
+
+const RANDOM_TUNABLES: &[Tunable] = &[BATCH_TUNABLE];
+
+const SPARSELOOP_TUNABLES: &[Tunable] = &[
+    BATCH_TUNABLE,
+    Tunable {
+        key: "manual_prob",
+        kind: TunableKind::Float { min: 0.0, max: 1.0 },
+        default: "0.8",
+        help: "probability a sample pins the manual sparse strategy",
+    },
+];
+
+const SAGE_TUNABLES: &[Tunable] = &[
+    Tunable {
+        key: "population",
+        kind: TunableKind::Int { min: 2, max: 10_000 },
+        default: "40",
+        help: "population of the format/strategy evolutionary loop",
+    },
+    Tunable {
+        key: "mutations",
+        kind: TunableKind::Int { min: 0, max: 64 },
+        default: "2",
+        help: "strategy genes re-sampled per child",
+    },
+];
+
+const PSO_TUNABLES: &[Tunable] = &[
+    Tunable {
+        key: "swarm",
+        kind: TunableKind::Int { min: 1, max: 10_000 },
+        default: "40",
+        help: "number of particles",
+    },
+    Tunable {
+        key: "inertia",
+        kind: TunableKind::Float { min: 0.0, max: 2.0 },
+        default: "0.729",
+        help: "velocity inertia (Clerc constriction)",
+    },
+    Tunable {
+        key: "c1",
+        kind: TunableKind::Float { min: 0.0, max: 8.0 },
+        default: "1.494",
+        help: "cognitive (personal-best) acceleration",
+    },
+    Tunable {
+        key: "c2",
+        kind: TunableKind::Float { min: 0.0, max: 8.0 },
+        default: "1.494",
+        help: "social (global-best) acceleration",
+    },
+];
+
+const MCTS_TUNABLES: &[Tunable] = &[Tunable {
+    key: "c_uct",
+    kind: TunableKind::Float { min: 0.0, max: 16.0 },
+    default: "1.4",
+    help: "UCB1 exploration constant",
+}];
+
+const TBPSA_TUNABLES: &[Tunable] = &[
+    Tunable {
+        key: "lambda",
+        kind: TunableKind::Int { min: 1, max: 10_000 },
+        default: "30",
+        help: "samples drawn per iteration",
+    },
+    Tunable {
+        key: "mu",
+        kind: TunableKind::Int { min: 1, max: 10_000 },
+        default: "8",
+        help: "elites the distribution recenters on (capped at lambda)",
+    },
+];
+
+const PPO_TUNABLES: &[Tunable] = &[
+    Tunable {
+        key: "clip",
+        kind: TunableKind::Float { min: 0.0, max: 1.0 },
+        default: "0.2",
+        help: "trust-region clip for the surrogate ratio",
+    },
+    Tunable {
+        key: "lr",
+        kind: TunableKind::Float { min: 1e-6, max: 10.0 },
+        default: "0.15",
+        help: "policy learning rate",
+    },
+    Tunable {
+        key: "batch",
+        kind: TunableKind::Int { min: 1, max: 10_000 },
+        default: "24",
+        help: "episodes sampled per update",
+    },
+];
+
+const DQN_TUNABLES: &[Tunable] = &[
+    Tunable {
+        key: "gamma",
+        kind: TunableKind::Float { min: 0.0, max: 1.0 },
+        default: "0.98",
+        help: "per-step discount inside the backward TD sweep",
+    },
+    Tunable {
+        key: "lr",
+        kind: TunableKind::Float { min: 1e-6, max: 10.0 },
+        default: "0.01",
+        help: "Q-network learning rate",
+    },
+    Tunable {
+        key: "hidden",
+        kind: TunableKind::Int { min: 1, max: 4_096 },
+        default: "32",
+        help: "hidden width of the in-tree MLP",
+    },
+];
+
+const PORTFOLIO_TUNABLES: &[Tunable] = &[
+    Tunable {
+        key: "members",
+        kind: TunableKind::MethodList,
+        default: "[\"sparsemap\", \"es-pfce\", \"pso\", \"random\"]",
+        help: "registry methods racing for the shared budget",
+    },
+    Tunable {
+        key: "member_opts",
+        kind: TunableKind::OptsByMethod,
+        default: "{}",
+        help: "per-member method_opts, validated against each member's schema",
+    },
+    Tunable {
+        key: "rounds",
+        kind: TunableKind::Int { min: 1, max: 64 },
+        default: "3",
+        help: "successive-halving rounds over the shared budget",
+    },
+    Tunable {
+        key: "eta",
+        kind: TunableKind::Int { min: 2, max: 16 },
+        default: "2",
+        help: "elimination factor: each round keeps ceil(alive/eta) members",
+    },
+];
+
+// --- the registry ----------------------------------------------------------
+
+const METHOD_COUNT: usize = 13;
+
+/// The canonical method table. Order is user-facing (`sparsemap
+/// methods`, error messages): the paper's eleven arms first (in their
+/// historical `ALL_METHODS` order), then the post-paper additions.
+const METHODS: [MethodSpec; METHOD_COUNT] = [
+    MethodSpec {
+        name: "sparsemap",
+        aliases: &["sm", "es-full"],
+        summary: "full SparseMap ES: PFCE encoding + sensitivity calibration + HSHI + \
+                  annealing/sensitivity-aware operators",
+        tunables: ES_TUNABLES,
+        builder: build_sparsemap,
+    },
+    MethodSpec {
+        name: "es-pfce",
+        aliases: &["pfce"],
+        summary: "ablation: plain ES over the PFCE encoding (LHS init, uniform operators)",
+        tunables: ES_TUNABLES,
+        builder: build_es_pfce,
+    },
+    MethodSpec {
+        name: "es-direct",
+        aliases: &["direct-es"],
+        summary: "ablation: standard ES over the direct-value encoding (dead-offspring-ridden)",
+        tunables: ES_DIRECT_TUNABLES,
+        builder: build_es_direct,
+    },
+    MethodSpec {
+        name: "random",
+        aliases: &["rand", "pure-random"],
+        summary: "uniform random search over the full joint genome",
+        tunables: RANDOM_TUNABLES,
+        builder: build_random,
+    },
+    MethodSpec {
+        name: "sparseloop",
+        aliases: &["sparseloop-mapper"],
+        summary: "Sparseloop-Mapper-like: random mapping search under the manual sparse strategy",
+        tunables: SPARSELOOP_TUNABLES,
+        builder: build_sparseloop,
+    },
+    MethodSpec {
+        name: "sage-like",
+        aliases: &["sage"],
+        summary: "SAGE-like: format/strategy evolution under a fixed heuristic mapping",
+        tunables: SAGE_TUNABLES,
+        builder: build_sage,
+    },
+    MethodSpec {
+        name: "pso",
+        aliases: &[],
+        summary: "global-best particle swarm over the raw direct-encoded space",
+        tunables: PSO_TUNABLES,
+        builder: build_pso,
+    },
+    MethodSpec {
+        name: "mcts",
+        aliases: &[],
+        summary: "Monte Carlo tree search, gene-by-gene, over the raw space",
+        tunables: MCTS_TUNABLES,
+        builder: build_mcts,
+    },
+    MethodSpec {
+        name: "tbpsa",
+        aliases: &[],
+        summary: "test-based population-size-adaptation ES (Nevergrad) over the raw space",
+        tunables: TBPSA_TUNABLES,
+        builder: build_tbpsa,
+    },
+    MethodSpec {
+        name: "ppo",
+        aliases: &[],
+        summary: "PPO: factored categorical policy with clipped-surrogate updates",
+        tunables: PPO_TUNABLES,
+        builder: build_ppo,
+    },
+    MethodSpec {
+        name: "dqn",
+        aliases: &[],
+        summary: "DQN: MLP Q-function over sequential gene assignment",
+        tunables: DQN_TUNABLES,
+        builder: build_dqn,
+    },
+    MethodSpec {
+        name: "es-std",
+        aliases: &[],
+        summary: "ablation: plain ES over the PFCE genome (alias arm of the Fig. 18 study)",
+        tunables: ES_TUNABLES,
+        builder: build_es_std,
+    },
+    MethodSpec {
+        name: "portfolio",
+        aliases: &["race"],
+        summary: "meta-optimizer: successive-halving race of member methods over one \
+                  shared budget/cache/pool",
+        tunables: PORTFOLIO_TUNABLES,
+        builder: portfolio::build,
+    },
+];
+
+/// One shared instance of the table (the `const` above exists so
+/// [`ALL_METHODS`] can be derived at compile time; const reads of
+/// `static`s are not allowed).
+static METHODS_STATIC: [MethodSpec; METHOD_COUNT] = METHODS;
+
+/// Every registered method, in registry order.
+pub fn registry() -> &'static [MethodSpec] {
+    &METHODS_STATIC
+}
+
+/// All canonical method names, derived from the registry at compile time
+/// (the registry is the single source of truth — see the consistency
+/// test in `super::tests`).
+pub static ALL_METHODS: &[&str] = &{
+    let mut names = [""; METHOD_COUNT];
+    let mut i = 0;
+    while i < METHOD_COUNT {
+        names[i] = METHODS[i].name;
+        i += 1;
+    }
+    names
+};

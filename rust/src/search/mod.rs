@@ -42,7 +42,7 @@ pub mod engine;
 pub mod telemetry;
 
 pub use engine::{Interner, StageEngine};
-pub use telemetry::{Outcome, Telemetry};
+pub use telemetry::{MemberStats, Outcome, Telemetry};
 
 use crate::arch::Platform;
 use crate::genome::Design;
@@ -364,6 +364,10 @@ pub struct EvalContext {
     stop_flag: Option<Arc<AtomicBool>>,
     stopped: bool,
     batches: usize,
+    /// Temporary absolute submission ceiling below `budget` (see
+    /// [`EvalContext::set_fence`]). The portfolio meta-optimizer uses it
+    /// to hand each member a bounded slice of the shared budget.
+    fence: Option<usize>,
 }
 
 impl EvalContext {
@@ -392,6 +396,7 @@ impl EvalContext {
             stop_flag: None,
             stopped: false,
             batches: 0,
+            fence: None,
         }
     }
 
@@ -520,11 +525,34 @@ impl EvalContext {
         self.telemetry.evals
     }
 
+    /// Cap the context at an *absolute* submission count below the
+    /// budget: while a fence is set, [`EvalContext::remaining`] reports
+    /// `min(budget, fence) - used`, so any algorithm handed this context
+    /// winds down through its normal budget-exhausted path at the fence.
+    /// `None` lifts the cap. This is how the portfolio meta-optimizer
+    /// runs whole member searches against one shared budget/cache/pool.
+    pub fn set_fence(&mut self, fence: Option<usize>) {
+        self.fence = fence;
+    }
+
+    /// Reset the per-slice best-EDP window (read back with
+    /// [`EvalContext::slice_best`]). Purely observational.
+    pub fn begin_slice(&mut self) {
+        self.telemetry.begin_slice();
+    }
+
+    /// Best valid EDP recorded since the last [`EvalContext::begin_slice`]
+    /// (`f64::INFINITY` if none).
+    pub fn slice_best(&self) -> f64 {
+        self.telemetry.slice_best_edp
+    }
+
     pub fn remaining(&self) -> usize {
         if self.stopped_early() {
             return 0;
         }
-        self.budget.saturating_sub(self.used())
+        let cap = self.fence.map_or(self.budget, |f| f.min(self.budget));
+        cap.saturating_sub(self.used())
     }
 
     pub fn exhausted(&self) -> bool {
@@ -662,6 +690,23 @@ mod tests {
         assert_eq!(r.len(), 10);
         assert!(c.exhausted());
         assert!(c.eval_batch(&genomes).is_empty());
+    }
+
+    #[test]
+    fn fence_caps_and_lifts() {
+        let mut c = ctx(100);
+        let mut rng = Pcg64::seeded(21);
+        let genomes: Vec<_> = (0..30).map(|_| c.spec.random(&mut rng)).collect();
+        c.set_fence(Some(10));
+        assert_eq!(c.remaining(), 10);
+        assert_eq!(c.eval_batch(&genomes).len(), 10);
+        assert!(c.exhausted(), "fenced context reports exhaustion at the fence");
+        c.set_fence(None);
+        assert_eq!(c.remaining(), 90);
+        assert_eq!(c.eval_batch(&genomes).len(), 30);
+        // A fence above the budget never extends it.
+        c.set_fence(Some(1_000));
+        assert_eq!(c.remaining(), 60);
     }
 
     #[test]

@@ -26,17 +26,35 @@ pub struct Telemetry {
     /// Sum of per-generation mean-EDP snapshots pushed by algorithms that
     /// track population averages (optional).
     pub population_mean_curve: Vec<(usize, f64)>,
+    /// Best valid EDP since the last `begin_slice` — a resettable window
+    /// the portfolio meta-optimizer uses to score each member's own
+    /// progress (the global `best_edp` only moves on *global* improvement,
+    /// so a member re-finding another member's design would look idle).
+    pub slice_best_edp: f64,
 }
 
 impl Telemetry {
     pub fn new() -> Telemetry {
-        Telemetry { best_edp: f64::INFINITY, ..Default::default() }
+        Telemetry {
+            best_edp: f64::INFINITY,
+            slice_best_edp: f64::INFINITY,
+            ..Default::default()
+        }
+    }
+
+    /// Reset the per-slice best (see `slice_best_edp`). Purely
+    /// observational: never feeds back into any trajectory.
+    pub fn begin_slice(&mut self) {
+        self.slice_best_edp = f64::INFINITY;
     }
 
     pub fn record(&mut self, genome: &[u32], r: &EvalResult) {
         self.evals += 1;
         if r.valid {
             self.valid_evals += 1;
+            if r.edp < self.slice_best_edp {
+                self.slice_best_edp = r.edp;
+            }
             if r.edp < self.best_edp {
                 self.best_edp = r.edp;
                 self.best_genome = Some(genome.to_vec());
@@ -72,7 +90,68 @@ impl Telemetry {
             best_genome: self.best_genome,
             curve: self.curve,
             population_mean_curve: self.population_mean_curve,
+            members: Vec::new(),
         }
+    }
+}
+
+/// Per-member accounting attached to a `portfolio` outcome (see
+/// `crate::optimizer::portfolio`): how the shared budget was split across
+/// the racing member methods and how far each one got on its own.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemberStats {
+    /// Canonical registry name of the member method.
+    pub method: String,
+    /// Budget submissions spent inside this member's slices. Summed over
+    /// all members this equals the portfolio outcome's `evals` exactly —
+    /// the meta-level performs no evaluations of its own.
+    pub evals: usize,
+    /// Best valid EDP the member found *itself* (min over its slices'
+    /// windows; `f64::INFINITY` if it never found a valid design).
+    pub best_edp: f64,
+    /// Rounds the member participated in.
+    pub rounds: usize,
+    /// Round after which successive halving dropped the member
+    /// (`None` = survived to the end).
+    pub eliminated_round: Option<usize>,
+}
+
+impl MemberStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("evals", Json::num(self.evals as f64)),
+            (
+                "best_edp",
+                if self.best_edp.is_finite() { Json::num(self.best_edp) } else { Json::Null },
+            ),
+            ("rounds", Json::num(self.rounds as f64)),
+            (
+                "eliminated_round",
+                match self.eliminated_round {
+                    Some(r) => Json::num(r as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<MemberStats> {
+        use anyhow::anyhow;
+        Ok(MemberStats {
+            method: j
+                .get("method")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("member stats JSON is missing 'method'"))?
+                .to_string(),
+            evals: j.get("evals").and_then(Json::as_u64).unwrap_or(0) as usize,
+            best_edp: j.get("best_edp").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
+            rounds: j.get("rounds").and_then(Json::as_u64).unwrap_or(0) as usize,
+            eliminated_round: j
+                .get("eliminated_round")
+                .and_then(Json::as_u64)
+                .map(|r| r as usize),
+        })
     }
 }
 
@@ -96,6 +175,9 @@ pub struct Outcome {
     pub best_genome: Option<Vec<u32>>,
     pub curve: Vec<(usize, f64)>,
     pub population_mean_curve: Vec<(usize, f64)>,
+    /// Per-member telemetry, only populated by the `portfolio`
+    /// meta-optimizer (empty for every plain method).
+    pub members: Vec<MemberStats>,
 }
 
 impl Outcome {
@@ -164,6 +246,15 @@ impl Outcome {
                         .collect(),
                 ),
             );
+            // Only the portfolio meta-optimizer populates members; plain
+            // methods keep their serialized form byte-identical to the
+            // pre-portfolio schema.
+            if !self.members.is_empty() {
+                o.insert(
+                    "members".to_string(),
+                    Json::Arr(self.members.iter().map(MemberStats::to_json).collect()),
+                );
+            }
         }
         j
     }
@@ -230,6 +321,15 @@ impl Outcome {
             best_genome,
             curve: curve_of("curve")?,
             population_mean_curve: curve_of("population_mean_curve")?,
+            // Absent everywhere except portfolio outcomes (and in reports
+            // serialized before the optimizer-registry revision).
+            members: j
+                .get("members")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(MemberStats::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
         })
     }
 }
@@ -302,6 +402,51 @@ mod tests {
         assert_eq!(o.interned, 0);
         assert_eq!(o.stage_hits, 0);
         assert_eq!(o.cache_hits, 1);
+    }
+
+    #[test]
+    fn slice_best_resets_independently_of_global_best() {
+        let mut t = Telemetry::new();
+        t.record(&[1], &ok(10.0));
+        assert_eq!(t.slice_best_edp, 10.0);
+        t.begin_slice();
+        assert!(t.slice_best_edp.is_infinite());
+        // A worse-than-global result still registers in the fresh slice.
+        t.record(&[2], &ok(40.0));
+        assert_eq!(t.slice_best_edp, 40.0);
+        assert_eq!(t.best_edp, 10.0);
+        assert_eq!(t.curve, vec![(1, 10.0)]);
+    }
+
+    #[test]
+    fn member_stats_round_trip_through_full_json() {
+        let mut t = Telemetry::new();
+        t.record(&[1], &ok(3.0));
+        let mut o = t.into_outcome("portfolio", "mm3", "cloud");
+        o.members = vec![
+            MemberStats {
+                method: "sparsemap".into(),
+                evals: 1,
+                best_edp: 3.0,
+                rounds: 2,
+                eliminated_round: None,
+            },
+            MemberStats {
+                method: "pso".into(),
+                evals: 0,
+                best_edp: f64::INFINITY,
+                rounds: 1,
+                eliminated_round: Some(0),
+            },
+        ];
+        let o2 = Outcome::from_json(&Json::parse(&o.to_json_full().dumps()).unwrap()).unwrap();
+        assert_eq!(o2.members, o.members);
+        assert_eq!(o2.to_json_full(), o.to_json_full());
+        // Plain methods serialize without the field entirely.
+        let mut t2 = Telemetry::new();
+        t2.record(&[1], &ok(3.0));
+        let plain = t2.into_outcome("random", "mm3", "cloud");
+        assert!(!plain.to_json_full().dumps().contains("members"));
     }
 
     #[test]

@@ -106,18 +106,24 @@ impl Args {
 /// A " (did you mean ...)" hint naming the known option closest to
 /// `given` by edit distance, if any is within a plausible typo radius.
 fn suggest(given: &str, known_opts: &[&str], known_flags: &[&str]) -> String {
-    known_opts
-        .iter()
-        .chain(known_flags)
-        .map(|&k| (levenshtein(given, k), k))
-        .filter(|&(d, _)| d <= 3)
-        .min_by_key(|&(d, _)| d)
-        .map(|(_, k)| format!(" (did you mean '--{k}'?)"))
+    nearest(given, known_opts.iter().chain(known_flags).copied())
+        .map(|k| format!(" (did you mean '--{k}'?)"))
         .unwrap_or_default()
 }
 
+/// The candidate closest to `given` by edit distance, if any is within a
+/// plausible typo radius (≤ 3 edits). Shared by the option parser above
+/// and the optimizer registry's unknown-method/unknown-tunable errors.
+pub fn nearest<'a>(given: &str, candidates: impl Iterator<Item = &'a str>) -> Option<&'a str> {
+    candidates
+        .map(|k| (levenshtein(given, k), k))
+        .filter(|&(d, _)| d <= 3)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, k)| k)
+}
+
 /// Classic two-row Levenshtein edit distance.
-fn levenshtein(a: &str, b: &str) -> usize {
+pub fn levenshtein(a: &str, b: &str) -> usize {
     let a: Vec<char> = a.chars().collect();
     let b: Vec<char> = b.chars().collect();
     let mut prev: Vec<usize> = (0..=b.len()).collect();
@@ -230,6 +236,12 @@ mod tests {
         let a = parse(&["search", "--zzzzzzzzzz"]);
         let msg = a.reject_unknown(&["budget"], &[]).unwrap_err().to_string();
         assert!(!msg.contains("did you mean"), "{msg}");
+    }
+
+    #[test]
+    fn nearest_candidate_within_radius() {
+        assert_eq!(nearest("spasemap", ["sparsemap", "pso"].into_iter()), Some("sparsemap"));
+        assert_eq!(nearest("zzzzzzzz", ["sparsemap", "pso"].into_iter()), None);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use sparsemap::api::{SearchReport, SearchRequest};
 use sparsemap::arch::Platform;
-use sparsemap::baselines::run_method;
+use sparsemap::optimizer::run_method;
 use sparsemap::search::{Backend, EvalContext};
 use sparsemap::util::json::Json;
 use sparsemap::workload::spec::workload_from_spec;
@@ -152,6 +152,64 @@ fn structured_density_spec_runs_end_to_end() {
     assert!(report.outcome.evals <= 300);
     let parsed =
         SearchReport::from_json(&Json::parse(&report.to_json().pretty()).unwrap()).unwrap();
+    assert_eq!(parsed.to_json(), report.to_json());
+}
+
+#[test]
+fn method_opts_spec_runs_end_to_end_and_round_trips() {
+    // The exact shape a tuned `run-spec` file has: method_opts riding
+    // next to the method, surviving request -> report -> JSON -> request.
+    let src = r#"{
+        "workload": "mm1",
+        "platform": "mobile",
+        "method": "pso",
+        "method_opts": {"swarm": 16, "inertia": 0.6},
+        "budget": 150,
+        "seed": 4
+    }"#;
+    let req = SearchRequest::from_json(&Json::parse(src).unwrap()).unwrap();
+    let reparsed = Json::parse(&req.to_json().dumps()).unwrap();
+    assert_eq!(SearchRequest::from_json(&reparsed).unwrap(), req);
+    let report = req.build().unwrap().run().unwrap();
+    assert_eq!(report.outcome.method, "pso");
+    assert_eq!(report.outcome.evals, 150);
+    let rt = SearchReport::from_json(&Json::parse(&report.to_json().dumps()).unwrap()).unwrap();
+    assert_eq!(rt.request.method_opts, report.request.method_opts);
+    assert_eq!(rt.to_json(), report.to_json());
+
+    // Unknown tunables in a spec fail at build with a suggestion.
+    let bad = src.replace("swarm", "swarn");
+    let req = SearchRequest::from_json(&Json::parse(&bad).unwrap()).unwrap();
+    let err = req.build().unwrap_err().to_string();
+    assert!(err.contains("swarn"), "{err}");
+    assert!(err.contains("did you mean 'swarm'"), "{err}");
+}
+
+#[test]
+fn portfolio_runs_through_the_api_on_a_custom_scenario() {
+    let (w, p) = custom_pair();
+    let report = SearchRequest::new()
+        .workload(w)
+        .platform(p)
+        .method("portfolio")
+        .method_opts(
+            Json::parse(r#"{"members": ["sparsemap", "random"], "rounds": 2}"#).unwrap(),
+        )
+        .budget(500)
+        .seed(6)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(report.outcome.method, "portfolio");
+    assert!(report.outcome.evals <= 500);
+    let members = report.members();
+    assert_eq!(members.len(), 2);
+    assert_eq!(members.iter().map(|m| m.evals).sum::<usize>(), report.outcome.evals);
+    // Full JSON round trip keeps the member breakdown.
+    let parsed =
+        SearchReport::from_json(&Json::parse(&report.to_json().pretty()).unwrap()).unwrap();
+    assert_eq!(parsed.outcome.members, report.outcome.members);
     assert_eq!(parsed.to_json(), report.to_json());
 }
 

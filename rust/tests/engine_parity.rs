@@ -6,7 +6,7 @@
 //! monolithic decode → extract → cost chain.
 
 use sparsemap::arch::Platform;
-use sparsemap::baselines::run_method;
+use sparsemap::optimizer::run_method;
 use sparsemap::search::{Backend, EvalContext, Outcome, StageEngine};
 use sparsemap::util::rng::Pcg64;
 use sparsemap::util::threadpool::ThreadPool;

@@ -3,7 +3,8 @@
 //! crossovers fall) rather than absolute numbers.
 
 use sparsemap::arch::Platform;
-use sparsemap::baselines::{run_method, DirectSpec};
+use sparsemap::baselines::DirectSpec;
+use sparsemap::optimizer::run_method;
 use sparsemap::report::{fig10, fig17, fig18, fig2, fig7, table4, ExpConfig};
 use sparsemap::search::{Backend, EvalContext};
 use sparsemap::util::rng::Pcg64;

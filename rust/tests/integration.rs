@@ -1,7 +1,7 @@
 //! Cross-module integration tests: genome → model → search → report.
 
 use sparsemap::arch::Platform;
-use sparsemap::baselines::{run_method, ALL_METHODS};
+use sparsemap::optimizer::{run_method, ALL_METHODS};
 use sparsemap::genome::{decode, describe, GenomeSpec};
 use sparsemap::model::NativeEvaluator;
 use sparsemap::report::{fig2, fig7, ExpConfig};

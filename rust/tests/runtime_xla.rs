@@ -124,7 +124,7 @@ fn effectual_count_matches_cost_model_gate_fraction() {
 
 #[test]
 fn pjrt_backend_runs_a_search() {
-    use sparsemap::baselines::run_method;
+    use sparsemap::optimizer::run_method;
     use sparsemap::search::{Backend, EvalContext};
     let rt = runtime();
     let w = table3::by_id("conv11").unwrap();
