@@ -13,13 +13,18 @@
 //!   scenarios built with [`crate::workload::Workload::custom`] /
 //!   [`crate::arch::Platform::custom`] or parsed from JSON specs — any
 //!   einsum-shaped contraction on any PE-array geometry is searchable.
-//! * [`SearchSession`] — the validated, runnable form. Streams progress
-//!   through [`crate::search::SearchObserver`] (generation, best-so-far
-//!   EDP, evals, cache hits), supports early stop from the observer and
-//!   cancellation from other threads, and lowers to a raw
-//!   [`crate::search::EvalContext`] for drivers with bespoke loops.
+//! * [`SearchSession`] — the validated, runnable form. One entry point,
+//!   [`SearchSession::run_opts`], covers progress streaming through
+//!   [`crate::search::SearchObserver`], early stop from the observer,
+//!   cancellation from other threads, **cooperative suspension** into a
+//!   [`crate::optimizer::Checkpoint`] and bit-identical **resume** from
+//!   one; it also lowers to a raw [`crate::search::EvalContext`] for
+//!   drivers with bespoke loops.
 //! * [`SearchReport`] — the typed result, `to_json`/`from_json`
-//!   round-trippable for storage and services.
+//!   round-trippable for storage and services (schema
+//!   [`REPORT_SCHEMA`]; the v1 form still parses).
+//! * [`methods`] / [`methods_json`] — the optimizer registry listing,
+//!   including each method's `resumable` flag.
 //! * [`run_batch`] — many arms over a shared worker pool.
 //!
 //! ```no_run
@@ -52,12 +57,30 @@ mod report;
 mod request;
 mod session;
 
-pub use report::{SearchReport, REPORT_SCHEMA};
+pub use report::{SearchReport, REPORT_SCHEMA, REPORT_SCHEMA_V1};
 pub use request::{PlatformSel, SearchRequest, WorkloadSel};
-pub use session::SearchSession;
+pub use session::{RunOpts, SearchSession};
 
+use crate::optimizer::MethodSpec;
+use crate::util::json::Json;
 use crate::util::threadpool::{parallel_map, ThreadPool};
 use anyhow::Result;
+
+/// Every registered search method, in registry order — the same table
+/// [`crate::optimizer::registry`] serves, re-exported here so API
+/// consumers never need the optimizer module directly.
+pub fn methods() -> &'static [MethodSpec] {
+    crate::optimizer::registry()
+}
+
+/// The method listing as JSON: per method its canonical name, aliases,
+/// one-line summary, whether it supports suspend/resume
+/// ([`MethodSpec::resumable`]), and the full tunable schema with
+/// defaults. This is what the `sparsemap methods --json` CLI and the
+/// search service's `GET /methods` endpoint serve.
+pub fn methods_json() -> Json {
+    Json::Arr(methods().iter().map(MethodSpec::to_json).collect())
+}
 
 /// Run a batch of arms, fanned out `threads` at a time over a shared
 /// worker pool. Every request is validated up front (an invalid one
@@ -109,6 +132,29 @@ mod tests {
             SearchRequest::new().workload_named("not-a-workload"),
         ];
         assert!(run_batch(requests, 2).is_err());
+    }
+
+    #[test]
+    fn methods_json_lists_every_method_with_resumable_flag() {
+        use crate::util::json::Json;
+        let listing = methods_json();
+        let arr = listing.as_arr().unwrap();
+        assert_eq!(arr.len(), crate::optimizer::ALL_METHODS.len());
+        for (entry, spec) in arr.iter().zip(methods()) {
+            assert_eq!(entry.get("name").and_then(Json::as_str), Some(spec.name));
+            assert_eq!(
+                entry.get("resumable").and_then(Json::as_bool),
+                Some(spec.resumable),
+                "method '{}' must advertise its resumable flag",
+                spec.name
+            );
+            assert!(entry.get("tunables").and_then(Json::as_arr).is_some());
+        }
+        // The checkpointable family is exactly the one the optimizer
+        // overhaul made suspendable.
+        let resumable: Vec<&str> =
+            methods().iter().filter(|m| m.resumable).map(|m| m.name).collect();
+        assert_eq!(resumable, ["sparsemap", "es-pfce", "random", "pso", "es-std", "portfolio"]);
     }
 
     #[test]

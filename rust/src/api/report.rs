@@ -7,7 +7,13 @@ use crate::util::json::Json;
 use anyhow::{anyhow, ensure, Result};
 
 /// Schema tag stamped into every serialized report.
-pub const REPORT_SCHEMA: &str = "sparsemap.search_report.v1";
+pub const REPORT_SCHEMA: &str = "sparsemap.report.v2";
+
+/// The previous schema tag. [`SearchReport::from_json`] still accepts
+/// reports stamped with it, byte-identical to how they were written
+/// (pinned by the committed `rust/tests/golden/report_v1.json` fixture);
+/// the v1 form simply never carries `checkpoint` / `resumed_from`.
+pub const REPORT_SCHEMA_V1: &str = "sparsemap.search_report.v1";
 
 /// The result of one search arm: the validated request it answered, the
 /// full search outcome (best EDP/genome, convergence curve, budget
@@ -20,9 +26,16 @@ pub struct SearchReport {
     pub outcome: Outcome,
     /// Wall-clock seconds the run took.
     pub wall_s: f64,
-    /// Whether an observer or cancel token ended the run before the
-    /// budget was spent.
+    /// Whether an observer, cancel token or suspend flag ended the run
+    /// before the budget was spent.
     pub stopped_early: bool,
+    /// When the run was suspended mid-search: a serialized
+    /// [`crate::optimizer::Checkpoint`] that resumes it (pass back
+    /// through `RunOpts::resume`). `None` for completed runs.
+    pub checkpoint: Option<Json>,
+    /// When this run resumed from a checkpoint: the number of
+    /// evaluations that were already spent at the resume point.
+    pub resumed_from: Option<usize>,
 }
 
 impl SearchReport {
@@ -62,18 +75,33 @@ impl SearchReport {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("schema", Json::str(REPORT_SCHEMA)),
             ("request", self.request.to_json()),
             ("outcome", self.outcome.to_json_full()),
             ("wall_s", Json::num(self.wall_s)),
             ("stopped_early", Json::Bool(self.stopped_early)),
-        ])
+        ]);
+        // Completed, non-resumed reports keep the exact v1 key set (only
+        // the schema tag moved), so diffs against archived reports stay
+        // readable.
+        if let Json::Obj(o) = &mut j {
+            if let Some(cp) = &self.checkpoint {
+                o.insert("checkpoint".to_string(), cp.clone());
+            }
+            if let Some(evals) = self.resumed_from {
+                o.insert("resumed_from".to_string(), Json::num(evals as f64));
+            }
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Result<SearchReport> {
         if let Some(schema) = j.get("schema").and_then(Json::as_str) {
-            ensure!(schema == REPORT_SCHEMA, "unsupported report schema '{schema}'");
+            ensure!(
+                schema == REPORT_SCHEMA || schema == REPORT_SCHEMA_V1,
+                "unsupported report schema '{schema}'"
+            );
         }
         Ok(SearchReport {
             request: SearchRequest::from_json(
@@ -84,6 +112,14 @@ impl SearchReport {
             )?,
             wall_s: j.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0),
             stopped_early: j.get("stopped_early").and_then(Json::as_bool).unwrap_or(false),
+            checkpoint: match j.get("checkpoint") {
+                None | Some(Json::Null) => None,
+                Some(cp) => Some(cp.clone()),
+            },
+            resumed_from: j
+                .get("resumed_from")
+                .and_then(Json::as_u64)
+                .map(|e| e as usize),
         })
     }
 }
@@ -143,5 +179,49 @@ mod tests {
     fn wrong_schema_rejected() {
         let j = Json::obj(vec![("schema", Json::str("bogus.v9"))]);
         assert!(SearchReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn v1_legacy_report_fixture_still_parses() {
+        // A byte-identical report as written by the v1 schema, committed
+        // as a golden fixture: upgrading the schema tag must never strand
+        // archived reports.
+        let text = include_str!("../../tests/golden/report_v1.json");
+        let report = SearchReport::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(report.outcome.method, "random");
+        assert_eq!(report.outcome.workload, "mm1");
+        assert_eq!(report.outcome.evals, 80);
+        assert_eq!(report.outcome.best_genome.as_deref(), Some(&[1, 2, 3, 0, 4][..]));
+        assert!(!report.stopped_early);
+        assert!(report.checkpoint.is_none(), "v1 reports never carry a checkpoint");
+        assert!(report.resumed_from.is_none());
+        // Re-serialized it carries the current tag, and still round-trips.
+        let j = report.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(REPORT_SCHEMA));
+        let again = SearchReport::from_json(&Json::parse(&j.dumps()).unwrap()).unwrap();
+        assert_eq!(again.to_json(), j);
+    }
+
+    #[test]
+    fn checkpoint_fields_round_trip() {
+        let mut report = SearchRequest::new()
+            .workload_named("mm1")
+            .platform_named("edge")
+            .method("random")
+            .budget(40)
+            .seed(2)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        report.checkpoint =
+            Some(Json::obj(vec![("schema", Json::str("sparsemap.checkpoint.v1"))]));
+        report.resumed_from = Some(17);
+        let dumped = report.to_json().dumps();
+        assert!(dumped.contains("checkpoint"));
+        let parsed = SearchReport::from_json(&Json::parse(&dumped).unwrap()).unwrap();
+        assert_eq!(parsed.checkpoint, report.checkpoint);
+        assert_eq!(parsed.resumed_from, Some(17));
+        assert_eq!(parsed.to_json(), report.to_json());
     }
 }

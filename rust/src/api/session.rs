@@ -3,7 +3,7 @@
 use super::report::SearchReport;
 use super::request::SearchRequest;
 use crate::arch::Platform;
-use crate::optimizer;
+use crate::optimizer::{self, Checkpoint};
 use crate::search::{Backend, EvalContext, SearchObserver};
 use crate::util::threadpool::ThreadPool;
 use crate::workload::Workload;
@@ -11,10 +11,32 @@ use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+/// Options for [`SearchSession::run_opts`] — the one run entry point.
+/// Every field defaults to off, so `RunOpts::default()` is a plain
+/// uninterrupted run.
+#[derive(Default)]
+pub struct RunOpts {
+    /// Streaming observer: called after every evaluated batch with
+    /// evals, cache hits and best-so-far EDP; returning
+    /// [`crate::search::SearchControl::Stop`] ends the run early.
+    pub observer: Option<Box<dyn SearchObserver>>,
+    /// Cooperative suspend flag: store `true` (from any thread) and the
+    /// optimizer pauses at its next safe point; the report then carries
+    /// a [`SearchReport::checkpoint`] to resume from. Unlike the cancel
+    /// token, suspension preserves the exact search trajectory — a
+    /// resumed run finishes bit-identical to an uninterrupted one.
+    pub suspend: Option<Arc<AtomicBool>>,
+    /// Resume from a checkpoint captured by a previous suspended run
+    /// (same method and budget; the evaluation ledger and the
+    /// optimizer's own state are both restored).
+    pub resume: Option<Checkpoint>,
+}
+
 /// A validated search arm. Created by [`SearchRequest::build`]; run with
-/// [`SearchSession::run`] (or [`SearchSession::run_observed`] to stream
-/// progress and stop early). The session owns a cancel token so a run
-/// can be aborted from another thread ([`SearchSession::cancel_token`]).
+/// [`SearchSession::run_opts`] (or the [`SearchSession::run`] /
+/// [`SearchSession::run_observed`] conveniences). The session owns a
+/// cancel token so a run can be aborted from another thread
+/// ([`SearchSession::cancel_token`]).
 pub struct SearchSession {
     request: SearchRequest,
     workload: Workload,
@@ -107,31 +129,83 @@ impl SearchSession {
     }
 
     /// Run the arm to completion (budget exhausted or cancelled).
+    ///
+    /// Convenience over [`SearchSession::run_opts`] with everything off
+    /// — prefer `run_opts` in new code; it additionally covers progress
+    /// streaming, cooperative suspension and checkpoint resume.
     pub fn run(self) -> Result<SearchReport> {
-        self.run_with(None)
+        self.run_opts(RunOpts::default())
     }
 
-    /// Run with a streaming observer: called after every evaluated batch
-    /// with generation, evals, cache hits and best-so-far EDP; returning
-    /// [`crate::search::SearchControl::Stop`] ends the run early.
+    /// Run with a streaming observer.
+    ///
+    /// Convenience over [`SearchSession::run_opts`] with only the
+    /// observer set — prefer `run_opts` in new code.
     pub fn run_observed(self, observer: Box<dyn SearchObserver>) -> Result<SearchReport> {
-        self.run_with(Some(observer))
+        self.run_opts(RunOpts { observer: Some(observer), ..Default::default() })
     }
 
-    fn run_with(self, observer: Option<Box<dyn SearchObserver>>) -> Result<SearchReport> {
-        let ctx = self.make_context(observer);
+    /// The one run entry point: observer streaming, cooperative
+    /// suspension and checkpoint resume in any combination (see
+    /// [`RunOpts`]).
+    ///
+    /// When the suspend flag is raised mid-run, the optimizer pauses at
+    /// its next safe point and the report comes back with
+    /// `stopped_early` set and [`SearchReport::checkpoint`] holding a
+    /// serialized [`Checkpoint`] (optimizer state + evaluation ledger).
+    /// Feeding that checkpoint back through [`RunOpts::resume`] on a
+    /// fresh session with the same request finishes the search
+    /// bit-identical to one that was never interrupted.
+    pub fn run_opts(self, opts: RunOpts) -> Result<SearchReport> {
+        let spec = optimizer::resolve(&self.request.method)?;
+        let mut opt = spec.build(&self.request.method_opts)?;
+        let mut ctx = self.make_context(opts.observer);
+        ctx.set_suspend_flag(opts.suspend.clone());
+        let mut resumed_from = None;
+        if let Some(cp) = &opts.resume {
+            ensure!(
+                cp.method == spec.name,
+                "checkpoint was captured by method '{}', request asks for '{}'",
+                cp.method,
+                spec.name
+            );
+            ctx.restore_eval_state(&cp.eval)?;
+            opt.resume(&cp.state)?;
+            resumed_from = Some(ctx.used());
+        }
         let t0 = std::time::Instant::now();
-        let outcome = optimizer::run_method_with(
-            &self.request.method,
-            &self.request.method_opts,
-            ctx,
-            self.request.seed,
-        )?;
+        opt.run(&mut ctx, self.request.seed);
+        // A raised suspend flag with budget left means the optimizer
+        // paused mid-search: capture both halves of the checkpoint
+        // before `outcome()` consumes the context.
+        let suspended = ctx.suspend_requested() && ctx.remaining() > 0;
+        let checkpoint = if suspended {
+            match opt.suspend() {
+                Some(state) => Some(
+                    Checkpoint {
+                        method: spec.name.to_string(),
+                        state,
+                        eval: ctx.capture_eval_state()?,
+                    }
+                    .to_json(),
+                ),
+                // The method cannot checkpoint its state (registry
+                // `resumable: false`); the partial report stands alone.
+                None => None,
+            }
+        } else {
+            None
+        };
+        let stopped_early = self.stop.load(Ordering::SeqCst) || suspended;
+        let mut outcome = ctx.outcome(spec.name);
+        opt.annotate(&mut outcome);
         Ok(SearchReport {
             request: self.request,
             outcome,
             wall_s: t0.elapsed().as_secs_f64(),
-            stopped_early: self.stop.load(Ordering::SeqCst),
+            stopped_early,
+            checkpoint,
+            resumed_from,
         })
     }
 }
@@ -216,5 +290,71 @@ mod tests {
         let ctx = tiny().threads(3).build().unwrap().into_context();
         assert_eq!(ctx.budget, 120);
         assert_eq!(ctx.threads(), 3);
+    }
+
+    #[test]
+    fn run_opts_suspends_and_resumes_to_identical_outcome() {
+        use crate::util::json::Json;
+
+        let mk = || tiny().method("sparsemap").budget(800).seed(17);
+        let full = mk().build().unwrap().run().unwrap();
+
+        // Same arm, but an observer raises the suspend flag halfway in.
+        let flag = Arc::new(AtomicBool::new(false));
+        let obs_flag = Arc::clone(&flag);
+        let half = mk()
+            .build()
+            .unwrap()
+            .run_opts(RunOpts {
+                observer: Some(Box::new(move |p: &Progress| {
+                    if p.evals >= 400 {
+                        obs_flag.store(true, Ordering::SeqCst);
+                    }
+                    SearchControl::Continue
+                })),
+                suspend: Some(Arc::clone(&flag)),
+                resume: None,
+            })
+            .unwrap();
+        assert!(half.stopped_early, "a suspended run is an early stop");
+        assert!(half.outcome.evals < 800, "paused before the budget");
+        assert!(half.resumed_from.is_none());
+        let cp_json = half.checkpoint.expect("suspended run must carry a checkpoint");
+
+        // Round-trip the checkpoint through text (as the service does)
+        // and finish the search in a fresh session.
+        let cp =
+            crate::optimizer::Checkpoint::from_json(&Json::parse(&cp_json.dumps()).unwrap())
+                .unwrap();
+        let resumed = mk()
+            .build()
+            .unwrap()
+            .run_opts(RunOpts { resume: Some(cp), ..Default::default() })
+            .unwrap();
+        assert_eq!(resumed.resumed_from, Some(half.outcome.evals));
+        assert!(resumed.checkpoint.is_none(), "the resumed run completed");
+        assert!(!resumed.stopped_early);
+        assert_eq!(resumed.outcome.evals, full.outcome.evals);
+        assert_eq!(resumed.outcome.best_edp.to_bits(), full.outcome.best_edp.to_bits());
+        assert_eq!(resumed.outcome.best_genome, full.outcome.best_genome);
+        assert_eq!(resumed.outcome.curve, full.outcome.curve);
+    }
+
+    #[test]
+    fn resume_rejects_method_mismatch() {
+        use crate::util::json::Json;
+        let cp = crate::optimizer::Checkpoint {
+            method: "pso".to_string(),
+            state: Json::Null,
+            eval: Json::Null,
+        };
+        let err = tiny()
+            .method("random")
+            .build()
+            .unwrap()
+            .run_opts(RunOpts { resume: Some(cp), ..Default::default() })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("captured by method 'pso'"), "{err}");
     }
 }

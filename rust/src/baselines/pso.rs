@@ -7,8 +7,12 @@
 //! constants follow Clerc's constriction values.
 
 use super::space::DirectSpace;
+use crate::optimizer::checkpoint::{f64s_from_json, f64s_to_json, rng_from_json, rng_to_json};
+use crate::optimizer::Optimizer;
 use crate::search::{EvalContext, Outcome};
+use crate::util::json::{f64_bits, f64_from_bits, Json};
 use crate::util::rng::Pcg64;
+use anyhow::anyhow;
 
 #[derive(Clone, Copy, Debug)]
 pub struct PsoConfig {
@@ -28,62 +32,173 @@ fn decode(pos: &[f64], space: &DirectSpace) -> Vec<u32> {
     (0..space.len()).map(|i| space.snap(i, pos[i])).collect()
 }
 
-/// Config-parameterized core against a borrowed context (the registry /
-/// portfolio entry point; telemetry accumulates in `ctx`).
-pub fn pso_with(ctx: &mut EvalContext, cfg: &PsoConfig, seed: u64) {
-    // The registry schema enforces swarm >= 1; floor it here too so a
-    // direct caller can't hit the empty-swarm indexing below.
-    let cfg = PsoConfig { swarm: cfg.swarm.max(1), ..*cfg };
-    let space = DirectSpace::new(ctx, seed);
-    let mut rng = Pcg64::seeded(seed);
-    let n = space.len();
-    let lo: Vec<f64> = (0..n).map(|i| space.bounds(i).0 as f64).collect();
-    let hi: Vec<f64> = (0..n).map(|i| space.bounds(i).1 as f64).collect();
+/// Live swarm state between iterations — everything [`PsoOpt::suspend`]
+/// must carry to continue bit-identically.
+struct PsoState {
+    rng: Pcg64,
+    pos: Vec<Vec<f64>>,
+    vel: Vec<Vec<f64>>,
+    pbest: Vec<Vec<f64>>,
+    pbest_cost: Vec<f64>,
+    gbest: Vec<f64>,
+    gbest_cost: f64,
+}
 
-    // Positions start at feasible-looking points (small-divisor-biased
-    // samples): per-level tile factors multiply up to the dimension, so a
-    // uniform start overshoots and the whole swarm would begin dead.
-    let mut pos: Vec<Vec<f64>> = (0..cfg.swarm)
-        .map(|_| (0..n).map(|i| space.sample_action(i, &mut rng) as f64).collect())
-        .collect();
-    let mut vel: Vec<Vec<f64>> = (0..cfg.swarm)
-        .map(|_| (0..n).map(|i| (hi[i] - lo[i]) * (rng.f64() - 0.5) * 0.05).collect())
-        .collect();
-    let mut pbest = pos.clone();
-    let mut pbest_cost = vec![f64::INFINITY; cfg.swarm];
-    let mut gbest = pos[0].clone();
-    let mut gbest_cost = f64::INFINITY;
+/// PSO as a resumable [`Optimizer`]. The [`DirectSpace`] is rebuilt
+/// deterministically from the context + seed on every entry (it consumes
+/// no RNG), so only the swarm itself is checkpointed. The legacy
+/// [`pso_with`] free function delegates here.
+pub struct PsoOpt {
+    cfg: PsoConfig,
+    st: Option<PsoState>,
+}
 
-    while !ctx.exhausted() {
-        let genomes: Vec<Vec<u32>> = pos.iter().map(|p| decode(p, &space)).collect();
-        let results = space.eval(ctx, &genomes);
-        for (i, r) in results.iter().enumerate() {
-            let cost = if r.valid { r.edp } else { f64::INFINITY };
-            if cost < pbest_cost[i] {
-                pbest_cost[i] = cost;
-                pbest[i] = pos[i].clone();
+impl PsoOpt {
+    pub fn new(cfg: PsoConfig) -> PsoOpt {
+        PsoOpt { cfg, st: None }
+    }
+}
+
+impl Optimizer for PsoOpt {
+    fn label(&self) -> &str {
+        "pso"
+    }
+
+    fn run(&mut self, ctx: &mut EvalContext, seed: u64) {
+        // The registry schema enforces swarm >= 1; floor it here too so a
+        // direct caller can't hit the empty-swarm indexing below.
+        let cfg = PsoConfig { swarm: self.cfg.swarm.max(1), ..self.cfg };
+        let space = DirectSpace::new(ctx, seed);
+        let n = space.len();
+        let lo: Vec<f64> = (0..n).map(|i| space.bounds(i).0 as f64).collect();
+        let hi: Vec<f64> = (0..n).map(|i| space.bounds(i).1 as f64).collect();
+
+        let st = self.st.get_or_insert_with(|| {
+            let mut rng = Pcg64::seeded(seed);
+            // Positions start at feasible-looking points (small-divisor-
+            // biased samples): per-level tile factors multiply up to the
+            // dimension, so a uniform start overshoots and the whole swarm
+            // would begin dead.
+            let pos: Vec<Vec<f64>> = (0..cfg.swarm)
+                .map(|_| (0..n).map(|i| space.sample_action(i, &mut rng) as f64).collect())
+                .collect();
+            let vel: Vec<Vec<f64>> = (0..cfg.swarm)
+                .map(|_| (0..n).map(|i| (hi[i] - lo[i]) * (rng.f64() - 0.5) * 0.05).collect())
+                .collect();
+            let pbest = pos.clone();
+            let gbest = pos[0].clone();
+            PsoState {
+                rng,
+                pos,
+                vel,
+                pbest,
+                pbest_cost: vec![f64::INFINITY; cfg.swarm],
+                gbest,
+                gbest_cost: f64::INFINITY,
             }
-            if cost < gbest_cost {
-                gbest_cost = cost;
-                gbest = pos[i].clone();
+        });
+
+        while !ctx.should_pause() {
+            let genomes: Vec<Vec<u32>> = st.pos.iter().map(|p| decode(p, &space)).collect();
+            let results = space.eval(ctx, &genomes);
+            for (i, r) in results.iter().enumerate() {
+                let cost = if r.valid { r.edp } else { f64::INFINITY };
+                if cost < st.pbest_cost[i] {
+                    st.pbest_cost[i] = cost;
+                    st.pbest[i] = st.pos[i].clone();
+                }
+                if cost < st.gbest_cost {
+                    st.gbest_cost = cost;
+                    st.gbest = st.pos[i].clone();
+                }
             }
-        }
-        if results.len() < cfg.swarm {
-            break;
-        }
-        for i in 0..cfg.swarm {
-            for d in 0..n {
-                let r1 = rng.f64();
-                let r2 = rng.f64();
-                vel[i][d] = cfg.inertia * vel[i][d]
-                    + cfg.c1 * r1 * (pbest[i][d] - pos[i][d])
-                    + cfg.c2 * r2 * (gbest[d] - pos[i][d]);
-                let vmax = (hi[d] - lo[d]) * 0.5;
-                vel[i][d] = vel[i][d].clamp(-vmax, vmax);
-                pos[i][d] = (pos[i][d] + vel[i][d]).clamp(lo[d], hi[d]);
+            if results.len() < cfg.swarm {
+                // Budget (or fence) ran out mid-iteration: stop before the
+                // velocity update. State is preserved — if this was a
+                // fence, a later unfenced re-entry resubmits the same
+                // positions (cache-served) and continues.
+                break;
+            }
+            for i in 0..cfg.swarm {
+                for d in 0..n {
+                    let r1 = st.rng.f64();
+                    let r2 = st.rng.f64();
+                    st.vel[i][d] = cfg.inertia * st.vel[i][d]
+                        + cfg.c1 * r1 * (st.pbest[i][d] - st.pos[i][d])
+                        + cfg.c2 * r2 * (st.gbest[d] - st.pos[i][d]);
+                    let vmax = (hi[d] - lo[d]) * 0.5;
+                    st.vel[i][d] = st.vel[i][d].clamp(-vmax, vmax);
+                    st.pos[i][d] = (st.pos[i][d] + st.vel[i][d]).clamp(lo[d], hi[d]);
+                }
             }
         }
     }
+
+    fn suspend(&self) -> Option<Json> {
+        let vecs = |vv: &[Vec<f64>]| Json::Arr(vv.iter().map(|v| f64s_to_json(v)).collect());
+        Some(match &self.st {
+            None => Json::obj(vec![("swarm", Json::Null)]),
+            Some(st) => Json::obj(vec![(
+                "swarm",
+                Json::obj(vec![
+                    ("rng", rng_to_json(&st.rng)),
+                    ("pos", vecs(&st.pos)),
+                    ("vel", vecs(&st.vel)),
+                    ("pbest", vecs(&st.pbest)),
+                    ("pbest_cost", f64s_to_json(&st.pbest_cost)),
+                    ("gbest", f64s_to_json(&st.gbest)),
+                    ("gbest_cost", f64_bits(st.gbest_cost)),
+                ]),
+            )]),
+        })
+    }
+
+    fn resume(&mut self, state: &Json) -> anyhow::Result<()> {
+        let swarm = match state.get("swarm") {
+            None | Some(Json::Null) => {
+                self.st = None;
+                return Ok(());
+            }
+            Some(j) => j,
+        };
+        let vecs = |key: &str| -> anyhow::Result<Vec<Vec<f64>>> {
+            swarm
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("pso state is missing '{key}'"))?
+                .iter()
+                .map(f64s_from_json)
+                .collect()
+        };
+        self.st = Some(PsoState {
+            rng: rng_from_json(
+                swarm.get("rng").ok_or_else(|| anyhow!("pso state is missing 'rng'"))?,
+            )?,
+            pos: vecs("pos")?,
+            vel: vecs("vel")?,
+            pbest: vecs("pbest")?,
+            pbest_cost: f64s_from_json(
+                swarm
+                    .get("pbest_cost")
+                    .ok_or_else(|| anyhow!("pso state is missing 'pbest_cost'"))?,
+            )?,
+            gbest: f64s_from_json(
+                swarm.get("gbest").ok_or_else(|| anyhow!("pso state is missing 'gbest'"))?,
+            )?,
+            gbest_cost: swarm
+                .get("gbest_cost")
+                .and_then(f64_from_bits)
+                .ok_or_else(|| anyhow!("pso state is missing 'gbest_cost'"))?,
+        });
+        Ok(())
+    }
+}
+
+/// Config-parameterized core against a borrowed context (the legacy
+/// free-function entry point; telemetry accumulates in `ctx`). One fresh
+/// [`PsoOpt`] per call — bit-identical to the pre-trait loop.
+pub fn pso_with(ctx: &mut EvalContext, cfg: &PsoConfig, seed: u64) {
+    PsoOpt::new(*cfg).run(ctx, seed);
 }
 
 pub fn pso(mut ctx: EvalContext, seed: u64) -> Outcome {

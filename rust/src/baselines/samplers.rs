@@ -5,7 +5,10 @@
 
 use super::common;
 use crate::genome::ops;
+use crate::optimizer::checkpoint::{rng_from_json, rng_to_json};
+use crate::optimizer::Optimizer;
 use crate::search::{EvalContext, Outcome};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 /// Random-search batch size (shared by the three sampling arms).
@@ -52,17 +55,62 @@ impl Default for SageConfig {
 }
 
 /// Uniform random search over the full joint genome (also the Fig. 7
-/// design-space sampler). Config-parameterized core (the registry /
-/// portfolio entry point; telemetry accumulates in `ctx`).
-pub fn pure_random_with(ctx: &mut EvalContext, cfg: &RandomConfig, seed: u64) {
-    let mut rng = Pcg64::seeded(seed);
-    let spec = ctx.spec.clone();
-    let batch = cfg.batch.max(1);
-    while !ctx.exhausted() {
-        let n = ctx.remaining().min(batch);
-        let genomes: Vec<_> = (0..n).map(|_| spec.random(&mut rng)).collect();
-        ctx.eval_batch(&genomes);
+/// design-space sampler), as a resumable [`Optimizer`]: the only live
+/// state between batches is the RNG, captured by `suspend` and restored
+/// by `resume`. The registry builds this directly; the legacy
+/// [`pure_random_with`] free function delegates here, so both paths share
+/// one implementation and stay bit-identical.
+pub struct RandomOpt {
+    cfg: RandomConfig,
+    rng: Option<Pcg64>,
+}
+
+impl RandomOpt {
+    pub fn new(cfg: RandomConfig) -> RandomOpt {
+        RandomOpt { cfg, rng: None }
     }
+}
+
+impl Optimizer for RandomOpt {
+    fn label(&self) -> &str {
+        "random"
+    }
+
+    fn run(&mut self, ctx: &mut EvalContext, seed: u64) {
+        let rng = self.rng.get_or_insert_with(|| Pcg64::seeded(seed));
+        let spec = ctx.spec.clone();
+        let batch = self.cfg.batch.max(1);
+        while !ctx.should_pause() {
+            let n = ctx.remaining().min(batch);
+            let genomes: Vec<_> = (0..n).map(|_| spec.random(rng)).collect();
+            ctx.eval_batch(&genomes);
+        }
+    }
+
+    fn suspend(&self) -> Option<Json> {
+        Some(Json::obj(vec![(
+            "rng",
+            match &self.rng {
+                Some(rng) => rng_to_json(rng),
+                None => Json::Null,
+            },
+        )]))
+    }
+
+    fn resume(&mut self, state: &Json) -> anyhow::Result<()> {
+        self.rng = match state.get("rng") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(rng_from_json(j)?),
+        };
+        Ok(())
+    }
+}
+
+/// Config-parameterized core (the legacy free-function entry point;
+/// telemetry accumulates in `ctx`). One fresh [`RandomOpt`] per call —
+/// bit-identical to the pre-trait loop.
+pub fn pure_random_with(ctx: &mut EvalContext, cfg: &RandomConfig, seed: u64) {
+    RandomOpt::new(*cfg).run(ctx, seed);
 }
 
 pub fn pure_random(mut ctx: EvalContext, seed: u64) -> Outcome {

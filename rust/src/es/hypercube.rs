@@ -71,88 +71,146 @@ pub struct HshiResult {
     pub evals_spent: usize,
 }
 
-/// Run HSHI. Falls back to plain random sampling when there are no
-/// high-sensitivity genes (degenerate calibration).
+/// What one [`HshiMachine::step`] call ended with.
+pub enum HshiStep {
+    /// Every requested hypercube has been visited.
+    Done(HshiResult),
+    /// The context asked to pause (budget/fence exhausted or suspension
+    /// requested). Call `step` again later to continue, or
+    /// [`HshiMachine::force_finish`] to settle for the cubes visited.
+    Paused,
+}
+
+/// Resumable HSHI state machine.
+///
+/// [`initialize`] drives it to completion in one call; the ES optimizer
+/// keeps one alive across suspend/resume cycles. Pausing happens only at
+/// the top of the per-cube loop, before the cube index draw, so a
+/// paused-and-resumed initialization replays bit-identically.
+pub struct HshiMachine {
+    pub(crate) cfg: HshiConfig,
+    pub(crate) strata: Vec<u32>,
+    pub(crate) total_cubes: u64,
+    pub(crate) n_cubes: usize,
+    /// Next cube to visit.
+    pub(crate) cube: usize,
+    /// Absolute `ctx.used()` at machine creation (for `evals_spent`).
+    pub(crate) start: usize,
+    pub(crate) population: Vec<Genome>,
+}
+
+impl HshiMachine {
+    pub fn new(ctx: &EvalContext, sens: &Sensitivity, cfg: HshiConfig) -> HshiMachine {
+        let spec = ctx.spec.clone();
+        let strata = strata_counts(&spec, &sens.high, cfg.hypercubes);
+        let total_cubes: u64 = strata.iter().map(|&k| k as u64).product::<u64>().max(1);
+        let n_cubes = cfg.hypercubes.min(total_cubes as usize).max(1);
+        HshiMachine {
+            cfg,
+            strata,
+            total_cubes,
+            n_cubes,
+            cube: 0,
+            start: ctx.used(),
+            population: Vec::with_capacity(n_cubes),
+        }
+    }
+
+    /// Advance until done or the context wants to pause.
+    pub fn step(
+        &mut self,
+        ctx: &mut EvalContext,
+        sens: &Sensitivity,
+        rng: &mut Pcg64,
+    ) -> HshiStep {
+        let spec = ctx.spec.clone();
+        while self.cube < self.n_cubes {
+            if ctx.should_pause() {
+                return HshiStep::Paused;
+            }
+            // Pick a distinct cube (when more cubes exist than requested,
+            // sample them uniformly without replacement semantics not
+            // needed).
+            let cube_idx = if self.total_cubes as usize == self.n_cubes {
+                self.cube
+            } else {
+                rng.below(self.total_cubes) as usize
+            };
+            let bounds = cube_coordinates(&spec, &sens.high, cube_idx, &self.strata);
+
+            let mut best: Option<Genome> = None;
+            for _ in 0..self.cfg.tries_per_cube {
+                if ctx.exhausted() {
+                    break;
+                }
+                // Low-sensitivity genes: reuse a valid combination from
+                // the calibration pool when available, else random.
+                let mut g = if !sens.valid_pool.is_empty() && rng.chance(0.7) {
+                    rng.choose(&sens.valid_pool).clone()
+                } else {
+                    spec.random(rng)
+                };
+                // High-sensitivity genes: uniform within this cube's
+                // stratum.
+                for &(gene, lo, hi) in &bounds {
+                    g[gene] = rng.range_u32(lo, hi);
+                }
+                let r = ctx.eval_one(&g);
+                match r {
+                    Some(r) if r.valid => {
+                        best = Some(g);
+                        break;
+                    }
+                    Some(_) => {
+                        // Keep the last invalid candidate as a fallback
+                        // seed (better than an empty slot; it still
+                        // carries cube diversity).
+                        if best.is_none() {
+                            best = Some(g);
+                        }
+                    }
+                    None => break,
+                }
+            }
+            if let Some(g) = best {
+                self.population.push(g);
+            }
+            self.cube += 1;
+            // Exhaustion is caught at the loop top on the next pass, so a
+            // fenced (portfolio) run can re-enter and finish later cubes.
+        }
+        HshiStep::Done(self.force_finish(ctx))
+    }
+
+    /// Settle with the cubes visited so far — what a plain
+    /// budget-exhausted run gets.
+    pub fn force_finish(&self, ctx: &EvalContext) -> HshiResult {
+        HshiResult {
+            population: self.population.clone(),
+            // The per-cube break above only fires on a valid hit, so the
+            // population length counts the cubes that landed one (invalid
+            // fallback seeds included — they still carry cube diversity).
+            cubes_hit: self.population.len(),
+            cubes_total: self.n_cubes,
+            evals_spent: ctx.used() - self.start,
+        }
+    }
+}
+
+/// Run HSHI to completion. Falls back to plain random sampling when
+/// there are no high-sensitivity genes (degenerate calibration).
 pub fn initialize(
     ctx: &mut EvalContext,
     sens: &Sensitivity,
     cfg: HshiConfig,
     rng: &mut Pcg64,
 ) -> HshiResult {
-    let spec = ctx.spec.clone();
-    let start = ctx.used();
-    let strata = strata_counts(&spec, &sens.high, cfg.hypercubes);
-    let total_cubes: u64 = strata.iter().map(|&k| k as u64).product::<u64>().max(1);
-    let n_cubes = cfg.hypercubes.min(total_cubes as usize).max(1);
-
-    let mut population = Vec::with_capacity(n_cubes);
-    let mut cubes_hit = 0;
-
-    for c in 0..n_cubes {
-        // Pick a distinct cube (when more cubes exist than requested,
-        // sample them uniformly without replacement semantics not needed).
-        let cube_idx = if total_cubes as usize == n_cubes {
-            c
-        } else {
-            rng.below(total_cubes) as usize
-        };
-        let bounds = cube_coordinates(&spec, &sens.high, cube_idx, &strata);
-
-        let mut best: Option<Genome> = None;
-        for _ in 0..cfg.tries_per_cube {
-            if ctx.exhausted() {
-                break;
-            }
-            // Low-sensitivity genes: reuse a valid combination from the
-            // calibration pool when available, else random.
-            let mut g = if !sens.valid_pool.is_empty() && rng.chance(0.7) {
-                rng.choose(&sens.valid_pool).clone()
-            } else {
-                spec.random(rng)
-            };
-            // High-sensitivity genes: uniform within this cube's stratum.
-            for &(gene, lo, hi) in &bounds {
-                g[gene] = rng.range_u32(lo, hi);
-            }
-            let r = ctx.eval_one(&g);
-            match r {
-                Some(r) if r.valid => {
-                    best = Some(g);
-                    break;
-                }
-                Some(_) => {
-                    // Keep the last invalid candidate as a fallback seed
-                    // (better than an empty slot; it still carries cube
-                    // diversity).
-                    if best.is_none() {
-                        best = Some(g);
-                    }
-                }
-                None => break,
-            }
-        }
-        if let Some(g) = best {
-            // Count hits by re-checking validity cheaply via telemetry:
-            // the break above only fires on valid.
-            population.push(g);
-        }
-        if ctx.exhausted() {
-            break;
-        }
-        let _ = &mut cubes_hit;
-    }
-
-    // cubes_hit: count members that are valid according to a final pass
-    // over telemetry — approximate by re-evaluating nothing; instead we
-    // track during the loop:
-    // (Recomputed here for clarity and test access.)
-    cubes_hit = population.len();
-
-    HshiResult {
-        population,
-        cubes_hit,
-        cubes_total: n_cubes,
-        evals_spent: ctx.used() - start,
+    let mut m = HshiMachine::new(ctx, sens, cfg);
+    match m.step(ctx, sens, rng) {
+        HshiStep::Done(r) => r,
+        // Only reachable when the budget ran out mid-initialization; the
+        // remaining cubes would have been skipped as no-ops anyway.
+        HshiStep::Paused => m.force_finish(ctx),
     }
 }
 

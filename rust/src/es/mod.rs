@@ -11,4 +11,6 @@ pub mod sparsemap;
 pub use hypercube::{HshiConfig, HshiResult};
 pub use population::{Individual, lhs_init};
 pub use sensitivity::{CalibConfig, Sensitivity};
-pub use sparsemap::{run_sparsemap, run_sparsemap_with, EsConfig, EsVariant, SparseMapSearch};
+pub use sparsemap::{
+    run_sparsemap, run_sparsemap_with, EsConfig, EsOpt, EsVariant, SparseMapSearch,
+};

@@ -46,95 +46,164 @@ impl Default for CalibConfig {
     }
 }
 
-/// Run the calibration. Consumes budget from `ctx`.
-pub fn calibrate(ctx: &mut EvalContext, cfg: CalibConfig, rng: &mut Pcg64) -> Sensitivity {
-    let spec = ctx.spec.clone();
-    let n = spec.len();
-    let mut scores = vec![0.0f64; n];
-    let mut valid_pool: Vec<Genome> = Vec::new();
-    let start_evals = ctx.used();
+/// What one [`CalibMachine::step`] call ended with.
+pub enum CalibStep {
+    /// Every gene has been visited (or capped): calibration is complete.
+    Done(Sensitivity),
+    /// The context asked to pause (budget/fence exhausted or suspension
+    /// requested). Call `step` again on a refreshed context to continue,
+    /// or [`CalibMachine::force_finish`] to settle for the genes visited
+    /// so far.
+    Paused,
+}
 
-    let over_cap =
-        |ctx: &EvalContext| cfg.max_evals > 0 && ctx.used() - start_evals >= cfg.max_evals;
+/// Resumable calibration state machine.
+///
+/// [`calibrate`] drives it to completion in one call; the ES optimizer
+/// keeps one alive across suspend/resume cycles. The machine pauses only
+/// at the top of the per-gene loop, where nothing of the pending gene has
+/// consumed RNG or budget yet, so a paused-and-resumed calibration
+/// replays bit-identically to an uninterrupted one.
+pub struct CalibMachine {
+    pub(crate) cfg: CalibConfig,
+    /// Absolute `ctx.used()` at machine creation (for the eval cap and
+    /// `evals_spent`); still valid after a restore because the eval state
+    /// snapshot restores the same counter.
+    pub(crate) start_evals: usize,
+    /// Random gene visiting order (so a budget cap doesn't systematically
+    /// starve the trailing strategy genes).
+    pub(crate) gene_order: Vec<usize>,
+    /// Next index into `gene_order`.
+    pub(crate) pos: usize,
+    pub(crate) scores: Vec<f64>,
+    pub(crate) valid_pool: Vec<Genome>,
+}
 
-    // Visit genes in random order so a budget cap doesn't systematically
-    // starve the trailing (strategy) genes.
-    let mut gene_order: Vec<usize> = (0..n).collect();
-    rng.shuffle(&mut gene_order);
-    for gene in gene_order {
-        let range = spec.ranges[gene];
-        if range.width() <= 1 {
-            continue; // constant gene: no sensitivity
-        }
-        let mut trial_scores = Vec::with_capacity(cfg.trials);
-        for _ in 0..cfg.trials {
-            if ctx.exhausted() || over_cap(ctx) {
-                break;
-            }
-            // Fix the other genes to one random context.
-            let context_genome = spec.random(rng);
-            // Monte-Carlo sample of this gene's values (dedup).
-            let k = (cfg.samples_per_gene as u32).min(range.width()) as usize;
-            let mut values: Vec<u32> = if (range.width() as usize) <= cfg.samples_per_gene {
-                (range.lo..=range.hi).collect()
-            } else {
-                let mut vs: Vec<u32> = (0..k).map(|_| range.sample(rng)).collect();
-                vs.sort_unstable();
-                vs.dedup();
-                vs
-            };
-            if values.len() < 2 {
-                continue;
-            }
-            let genomes: Vec<Genome> = values
-                .iter()
-                .map(|&v| {
-                    let mut g = context_genome.clone();
-                    g[gene] = v;
-                    g
-                })
-                .collect();
-            let results = ctx.eval_batch(&genomes);
-            // Valid (value, EDP) pairs — dead points are excluded (V_d).
-            let mut vd: Vec<(f64, f64)> = Vec::new();
-            for ((v, g), r) in values.iter().zip(&genomes).zip(&results) {
-                if r.valid {
-                    vd.push((*v as f64, r.edp));
-                    valid_pool.push(g.clone());
-                }
-            }
-            values.clear();
-            if vd.len() < 2 {
-                continue;
-            }
-            // Average normalized EDP variation ratio over random pairs.
-            let mut acc = 0.0;
-            let mut cnt = 0;
-            for _ in 0..cfg.pairs {
-                let i = rng.index(vd.len());
-                let mut j = rng.index(vd.len());
-                if i == j {
-                    j = (j + 1) % vd.len();
-                }
-                let (v1, e1) = vd[i];
-                let (v2, e2) = vd[j];
-                if (v1 - v2).abs() < 1e-12 {
-                    continue;
-                }
-                acc += (e1 - e2).abs() / ((v1 - v2).abs() * e1.min(e2));
-                cnt += 1;
-            }
-            if cnt > 0 {
-                trial_scores.push(acc / cnt as f64);
-            }
-        }
-        if !trial_scores.is_empty() {
-            scores[gene] = trial_scores.iter().sum::<f64>() / trial_scores.len() as f64;
+impl CalibMachine {
+    pub fn new(ctx: &EvalContext, cfg: CalibConfig, rng: &mut Pcg64) -> CalibMachine {
+        let n = ctx.spec.len();
+        let mut gene_order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut gene_order);
+        CalibMachine {
+            cfg,
+            start_evals: ctx.used(),
+            gene_order,
+            pos: 0,
+            scores: vec![0.0f64; n],
+            valid_pool: Vec::new(),
         }
     }
 
-    let (high, low) = split_by_threshold(&scores);
-    Sensitivity { scores, high, low, valid_pool, evals_spent: ctx.used() - start_evals }
+    /// Advance until done or the context wants to pause.
+    pub fn step(&mut self, ctx: &mut EvalContext, rng: &mut Pcg64) -> CalibStep {
+        let spec = ctx.spec.clone();
+        while self.pos < self.gene_order.len() {
+            if ctx.should_pause() {
+                return CalibStep::Paused;
+            }
+            let gene = self.gene_order[self.pos];
+            self.pos += 1;
+            let range = spec.ranges[gene];
+            if range.width() <= 1 {
+                continue; // constant gene: no sensitivity
+            }
+            let mut trial_scores = Vec::with_capacity(self.cfg.trials);
+            for _ in 0..self.cfg.trials {
+                let over_cap = self.cfg.max_evals > 0
+                    && ctx.used() - self.start_evals >= self.cfg.max_evals;
+                if ctx.exhausted() || over_cap {
+                    break;
+                }
+                // Fix the other genes to one random context.
+                let context_genome = spec.random(rng);
+                // Monte-Carlo sample of this gene's values (dedup).
+                let k = (self.cfg.samples_per_gene as u32).min(range.width()) as usize;
+                let mut values: Vec<u32> =
+                    if (range.width() as usize) <= self.cfg.samples_per_gene {
+                        (range.lo..=range.hi).collect()
+                    } else {
+                        let mut vs: Vec<u32> = (0..k).map(|_| range.sample(rng)).collect();
+                        vs.sort_unstable();
+                        vs.dedup();
+                        vs
+                    };
+                if values.len() < 2 {
+                    continue;
+                }
+                let genomes: Vec<Genome> = values
+                    .iter()
+                    .map(|&v| {
+                        let mut g = context_genome.clone();
+                        g[gene] = v;
+                        g
+                    })
+                    .collect();
+                let results = ctx.eval_batch(&genomes);
+                // Valid (value, EDP) pairs — dead points are excluded (V_d).
+                let mut vd: Vec<(f64, f64)> = Vec::new();
+                for ((v, g), r) in values.iter().zip(&genomes).zip(&results) {
+                    if r.valid {
+                        vd.push((*v as f64, r.edp));
+                        self.valid_pool.push(g.clone());
+                    }
+                }
+                values.clear();
+                if vd.len() < 2 {
+                    continue;
+                }
+                // Average normalized EDP variation ratio over random pairs.
+                let mut acc = 0.0;
+                let mut cnt = 0;
+                for _ in 0..self.cfg.pairs {
+                    let i = rng.index(vd.len());
+                    let mut j = rng.index(vd.len());
+                    if i == j {
+                        j = (j + 1) % vd.len();
+                    }
+                    let (v1, e1) = vd[i];
+                    let (v2, e2) = vd[j];
+                    if (v1 - v2).abs() < 1e-12 {
+                        continue;
+                    }
+                    acc += (e1 - e2).abs() / ((v1 - v2).abs() * e1.min(e2));
+                    cnt += 1;
+                }
+                if cnt > 0 {
+                    trial_scores.push(acc / cnt as f64);
+                }
+            }
+            if !trial_scores.is_empty() {
+                self.scores[gene] =
+                    trial_scores.iter().sum::<f64>() / trial_scores.len() as f64;
+            }
+        }
+        CalibStep::Done(self.force_finish(ctx))
+    }
+
+    /// Settle with the genes visited so far (unvisited genes keep score
+    /// 0) — what a plain budget-exhausted run gets, since exhausted
+    /// trials are skipped anyway.
+    pub fn force_finish(&self, ctx: &EvalContext) -> Sensitivity {
+        let (high, low) = split_by_threshold(&self.scores);
+        Sensitivity {
+            scores: self.scores.clone(),
+            high,
+            low,
+            valid_pool: self.valid_pool.clone(),
+            evals_spent: ctx.used() - self.start_evals,
+        }
+    }
+}
+
+/// Run the calibration to completion. Consumes budget from `ctx`.
+pub fn calibrate(ctx: &mut EvalContext, cfg: CalibConfig, rng: &mut Pcg64) -> Sensitivity {
+    let mut m = CalibMachine::new(ctx, cfg, rng);
+    match m.step(ctx, rng) {
+        CalibStep::Done(s) => s,
+        // Only reachable when the budget ran out mid-calibration; the
+        // remaining genes would have been skipped as no-ops anyway.
+        CalibStep::Paused => m.force_finish(ctx),
+    }
 }
 
 /// Eq. 4/5: high = { v : S(v) > 3/4·(Smax − Smin) + Smin }.

@@ -1,14 +1,22 @@
 //! The SparseMap search loop (§IV.H, Fig. 16) and its ablation variants.
 
-use super::hypercube::{initialize, HshiConfig};
+use super::hypercube::{HshiConfig, HshiMachine, HshiStep};
 use super::operators::{annealing_mutation, sensitivity_aware_crossover};
 use super::population::{
     evaluate_all, lhs_init, mean_valid_edp, select_top, top_indices, Individual,
 };
-use super::sensitivity::{calibrate, CalibConfig, Sensitivity};
-use crate::genome::ops;
+use super::sensitivity::{CalibConfig, CalibMachine, CalibStep, Sensitivity};
+use crate::genome::{ops, Genome};
+use crate::model::EvalResult;
+use crate::optimizer::checkpoint::{
+    f64s_from_json, f64s_to_json, genomes_from_json, genomes_to_json, indices_from_json,
+    indices_to_json, rng_from_json, rng_to_json,
+};
+use crate::optimizer::Optimizer;
 use crate::search::{EvalContext, Outcome};
+use crate::util::json::{f64_bits, f64_from_bits, Json};
 use crate::util::rng::Pcg64;
+use anyhow::{anyhow, ensure, Result};
 
 /// Which feature set to run — the Fig. 18 ablation arms.
 ///
@@ -69,158 +77,490 @@ impl Default for EsConfig {
     }
 }
 
+/// Live generational-loop state (the post-initialization phase).
+struct GensState {
+    high: Vec<usize>,
+    low: Vec<usize>,
+    pop: Vec<Individual>,
+    gen: usize,
+    total_gens: usize,
+}
+
+/// Where a suspended ES run is in its pipeline. Each phase pauses only
+/// at points where nothing of the pending unit of work has consumed RNG
+/// or budget, so resuming replays bit-identically.
+enum EsPhase {
+    Calib(CalibMachine),
+    Hshi(Sensitivity, HshiMachine),
+    /// Initial population assembled but not yet evaluated.
+    InitEval { high: Vec<usize>, low: Vec<usize>, genomes: Vec<Genome> },
+    Gens(GensState),
+}
+
+/// Everything an entered ES run carries between [`EsOpt::run`] calls.
+struct EsState {
+    rng: Pcg64,
+    /// `ctx.remaining()` at first entry — the basis for population and
+    /// initialization-overhead sizing.
+    budget: usize,
+    /// Resolved population size (`cfg.population` capped to budget/8,
+    /// floor 8).
+    population: usize,
+    phase: EsPhase,
+}
+
+/// The ES family (`sparsemap`, `es-pfce`, `es-std`) as a resumable
+/// [`Optimizer`]: the whole §IV pipeline — calibration → HSHI → initial
+/// evaluation → generations — runs as a state machine that pauses at
+/// safe points when the context requests suspension (or hits a portfolio
+/// fence) and continues bit-identically on the next `run` call.
+/// [`SparseMapSearch`] and [`run_sparsemap_with`] delegate here, so every
+/// entry point shares one implementation.
+pub struct EsOpt {
+    cfg: EsConfig,
+    st: Option<EsState>,
+}
+
+impl EsOpt {
+    pub fn new(cfg: EsConfig) -> EsOpt {
+        EsOpt { cfg, st: None }
+    }
+}
+
+impl Optimizer for EsOpt {
+    fn label(&self) -> &str {
+        self.cfg.variant.name()
+    }
+
+    fn run(&mut self, ctx: &mut EvalContext, seed: u64) {
+        if self.cfg.threads > 1 && ctx.pool().is_none() {
+            let pool = crate::util::threadpool::ThreadPool::new(self.cfg.threads);
+            ctx.set_pool(Some(std::sync::Arc::new(pool)));
+        }
+        let spec = ctx.spec.clone();
+        let full = self.cfg.variant == EsVariant::Full;
+
+        if self.st.is_none() {
+            // First entry: scale to what this run may actually spend —
+            // identical to `ctx.budget` on a fresh context (every
+            // standalone path), and to the slice allocation when a
+            // portfolio fence is set. Calibration stays ≤ ~10% of it
+            // (E8), HSHI ≤ ~20%.
+            let mut rng = Pcg64::seeded(seed);
+            let budget = ctx.remaining();
+            let population = self.cfg.population.min((budget / 8).max(8));
+            let phase = if full {
+                let mut calib = self.cfg.calib;
+                if calib.max_evals == 0 {
+                    calib.max_evals = (budget / 10).max(40);
+                }
+                EsPhase::Calib(CalibMachine::new(ctx, calib, &mut rng))
+            } else {
+                EsPhase::InitEval {
+                    high: Vec::new(),
+                    low: (0..spec.len()).collect(),
+                    genomes: lhs_init(&spec, population, &mut rng),
+                }
+            };
+            self.st = Some(EsState { rng, budget, population, phase });
+        }
+
+        // What a phase dispatch decided: move to the next phase, or stop
+        // running (paused, exhausted, or generation cap) with all state
+        // kept for a later re-entry.
+        enum Next {
+            To(EsPhase),
+            Stop,
+        }
+
+        let st = self.st.as_mut().expect("state initialized above");
+        loop {
+            let next = match &mut st.phase {
+                EsPhase::Calib(m) => match m.step(ctx, &mut st.rng) {
+                    CalibStep::Paused => Next::Stop,
+                    CalibStep::Done(sens) => {
+                        let mut h = self.cfg.hshi;
+                        h.hypercubes = st.population;
+                        h.tries_per_cube = h
+                            .tries_per_cube
+                            .min((st.budget / 5 / st.population.max(1)).max(1));
+                        let m = HshiMachine::new(ctx, &sens, h);
+                        Next::To(EsPhase::Hshi(sens, m))
+                    }
+                },
+                EsPhase::Hshi(sens, m) => match m.step(ctx, sens, &mut st.rng) {
+                    HshiStep::Paused => Next::Stop,
+                    HshiStep::Done(r) => {
+                        let mut genomes = r.population;
+                        // Top up with random genomes if HSHI under-filled.
+                        while genomes.len() < st.population {
+                            genomes.push(spec.random(&mut st.rng));
+                        }
+                        if !genomes.is_empty() {
+                            // Warm-start seeds: when resources are
+                            // extremely tight (edge platform, huge
+                            // workloads) the valid region can be too thin
+                            // for stratified random search — inject the
+                            // deterministic heuristic mapping (with and
+                            // without the manual sparse strategy) so the
+                            // population never starts fully dead.
+                            let workload = ctx.workload().clone();
+                            let mapping = crate::baselines::common::heuristic_mapping_genes(
+                                &spec, &workload,
+                            );
+                            let manual = crate::baselines::common::manual_strategy_genes(
+                                &spec, &workload,
+                            );
+                            let mut seed1 = vec![0u32; spec.len()];
+                            for i in 0..spec.len() {
+                                seed1[i] = spec.ranges[i].lo;
+                            }
+                            crate::baselines::common::apply(&mut seed1, &mapping);
+                            let mut seed2 = seed1.clone();
+                            crate::baselines::common::apply(&mut seed2, &manual);
+                            let k = genomes.len();
+                            genomes[k - 1] = seed1;
+                            if k >= 2 {
+                                genomes[k - 2] = seed2;
+                            }
+                        }
+                        Next::To(EsPhase::InitEval {
+                            high: sens.high.clone(),
+                            low: sens.low.clone(),
+                            genomes,
+                        })
+                    }
+                },
+                EsPhase::InitEval { high, low, genomes } => {
+                    if ctx.should_pause() {
+                        Next::Stop
+                    } else {
+                        let pop = evaluate_all(ctx, std::mem::take(genomes));
+                        if let Some(m) = mean_valid_edp(&pop) {
+                            ctx.telemetry.push_population_mean(m);
+                        }
+                        // Estimate total generations from the remaining
+                        // budget so the annealing schedule spans the
+                        // whole run.
+                        let total_gens = (ctx.remaining() / st.population.max(1)).max(1);
+                        Next::To(EsPhase::Gens(GensState {
+                            high: std::mem::take(high),
+                            low: std::mem::take(low),
+                            pop,
+                            gen: 0,
+                            total_gens,
+                        }))
+                    }
+                }
+                EsPhase::Gens(g) => {
+                    while !ctx.should_pause() && g.gen < g.total_gens * 4 {
+                        let n_parents =
+                            ((g.pop.len() as f64 * self.cfg.parent_frac) as usize).max(2);
+                        // Parents are only read: select by index instead
+                        // of cloning every genome per generation (same
+                        // stable order as `select_top`, so the rng stream
+                        // and trajectory are untouched — see
+                        // `top_indices`).
+                        let parents = top_indices(&g.pop, n_parents);
+
+                        // Crossover: fill a fresh offspring pool.
+                        let mut offspring = Vec::with_capacity(st.population);
+                        while offspring.len() < st.population {
+                            let pa = &g.pop[parents[st.rng.index(parents.len())]].genome;
+                            let pb = &g.pop[parents[st.rng.index(parents.len())]].genome;
+                            let (mut c1, mut c2) = if full {
+                                sensitivity_aware_crossover(pa, pb, &g.high, &mut st.rng)
+                            } else {
+                                ops::onepoint_crossover(pa, pb, &mut st.rng)
+                            };
+                            // Mutation.
+                            for c in [&mut c1, &mut c2] {
+                                if st.rng.chance(self.cfg.mutation_prob) {
+                                    if full {
+                                        annealing_mutation(
+                                            &spec,
+                                            c,
+                                            &g.high,
+                                            &g.low,
+                                            g.gen,
+                                            g.total_gens,
+                                            &mut st.rng,
+                                        );
+                                    } else {
+                                        ops::point_mutation(&spec, c, 0.05, &mut st.rng);
+                                    }
+                                }
+                            }
+                            offspring.push(c1);
+                            if offspring.len() < st.population {
+                                offspring.push(c2);
+                            }
+                        }
+
+                        let children = evaluate_all(ctx, offspring);
+                        if children.is_empty() {
+                            break; // budget exhausted mid-generation
+                        }
+                        // (μ+λ) survival: parents compete with offspring.
+                        g.pop.extend(children);
+                        g.pop = select_top(std::mem::take(&mut g.pop), st.population);
+                        if let Some(m) = mean_valid_edp(&g.pop) {
+                            ctx.telemetry.push_population_mean(m);
+                        }
+                        g.gen += 1;
+                    }
+                    Next::Stop
+                }
+            };
+            match next {
+                Next::To(p) => st.phase = p,
+                Next::Stop => return,
+            }
+        }
+    }
+
+    fn suspend(&self) -> Option<Json> {
+        Some(Json::obj(vec![(
+            "es",
+            match &self.st {
+                None => Json::Null,
+                Some(st) => Json::obj(vec![
+                    ("rng", rng_to_json(&st.rng)),
+                    ("budget", Json::num(st.budget as f64)),
+                    ("population", Json::num(st.population as f64)),
+                    ("phase", phase_to_json(&st.phase)),
+                ]),
+            },
+        )]))
+    }
+
+    fn resume(&mut self, state: &Json) -> Result<()> {
+        let es = match state.get("es") {
+            None | Some(Json::Null) => {
+                self.st = None;
+                return Ok(());
+            }
+            Some(j) => j,
+        };
+        self.st = Some(EsState {
+            rng: rng_from_json(
+                es.get("rng").ok_or_else(|| anyhow!("es state is missing 'rng'"))?,
+            )?,
+            budget: usize_field(es, "budget")?,
+            population: usize_field(es, "population")?,
+            phase: phase_from_json(
+                es.get("phase").ok_or_else(|| anyhow!("es state is missing 'phase'"))?,
+            )?,
+        });
+        Ok(())
+    }
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .map(|v| v as usize)
+        .ok_or_else(|| anyhow!("es state is missing integer '{key}'"))
+}
+
+fn sens_to_json(s: &Sensitivity) -> Json {
+    Json::obj(vec![
+        ("scores", f64s_to_json(&s.scores)),
+        ("high", indices_to_json(&s.high)),
+        ("low", indices_to_json(&s.low)),
+        ("valid_pool", genomes_to_json(&s.valid_pool)),
+        ("evals_spent", Json::num(s.evals_spent as f64)),
+    ])
+}
+
+fn sens_from_json(j: &Json) -> Result<Sensitivity> {
+    let field = |key: &str| j.get(key).ok_or_else(|| anyhow!("sensitivity is missing '{key}'"));
+    Ok(Sensitivity {
+        scores: f64s_from_json(field("scores")?)?,
+        high: indices_from_json(field("high")?)?,
+        low: indices_from_json(field("low")?)?,
+        valid_pool: genomes_from_json(field("valid_pool")?)?,
+        evals_spent: usize_field(j, "evals_spent")?,
+    })
+}
+
+fn individual_to_json(ind: &Individual) -> Json {
+    Json::obj(vec![
+        ("g", Json::Arr(ind.genome.iter().map(|&x| Json::num(x as f64)).collect())),
+        (
+            "r",
+            Json::Arr(vec![
+                f64_bits(ind.result.energy_pj),
+                f64_bits(ind.result.cycles),
+                f64_bits(ind.result.edp),
+                Json::Bool(ind.result.valid),
+            ]),
+        ),
+    ])
+}
+
+fn individual_from_json(j: &Json) -> Result<Individual> {
+    let genome: Genome = j
+        .get("g")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("individual is missing 'g'"))?
+        .iter()
+        .map(|x| {
+            x.as_u64().map(|v| v as u32).ok_or_else(|| anyhow!("genes must be integers"))
+        })
+        .collect::<Result<_>>()?;
+    let r = j
+        .get("r")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("individual is missing 'r'"))?;
+    ensure!(r.len() == 4, "individual result must have 4 entries");
+    let bits = |i: usize| {
+        f64_from_bits(&r[i]).ok_or_else(|| anyhow!("individual result entry {i} is not f64 bits"))
+    };
+    Ok(Individual {
+        genome,
+        result: EvalResult {
+            energy_pj: bits(0)?,
+            cycles: bits(1)?,
+            edp: bits(2)?,
+            valid: r[3].as_bool().ok_or_else(|| anyhow!("individual validity must be a bool"))?,
+        },
+    })
+}
+
+fn phase_to_json(p: &EsPhase) -> Json {
+    match p {
+        EsPhase::Calib(m) => Json::obj(vec![
+            ("kind", Json::str("calib")),
+            ("samples_per_gene", Json::num(m.cfg.samples_per_gene as f64)),
+            ("trials", Json::num(m.cfg.trials as f64)),
+            ("pairs", Json::num(m.cfg.pairs as f64)),
+            ("max_evals", Json::num(m.cfg.max_evals as f64)),
+            ("start_evals", Json::num(m.start_evals as f64)),
+            ("gene_order", indices_to_json(&m.gene_order)),
+            ("pos", Json::num(m.pos as f64)),
+            ("scores", f64s_to_json(&m.scores)),
+            ("valid_pool", genomes_to_json(&m.valid_pool)),
+        ]),
+        EsPhase::Hshi(sens, m) => Json::obj(vec![
+            ("kind", Json::str("hshi")),
+            ("sens", sens_to_json(sens)),
+            ("hypercubes", Json::num(m.cfg.hypercubes as f64)),
+            ("tries_per_cube", Json::num(m.cfg.tries_per_cube as f64)),
+            (
+                "strata",
+                indices_to_json(&m.strata.iter().map(|&k| k as usize).collect::<Vec<_>>()),
+            ),
+            ("total_cubes", Json::num(m.total_cubes as f64)),
+            ("n_cubes", Json::num(m.n_cubes as f64)),
+            ("cube", Json::num(m.cube as f64)),
+            ("start", Json::num(m.start as f64)),
+            ("population", genomes_to_json(&m.population)),
+        ]),
+        EsPhase::InitEval { high, low, genomes } => Json::obj(vec![
+            ("kind", Json::str("init")),
+            ("high", indices_to_json(high)),
+            ("low", indices_to_json(low)),
+            ("genomes", genomes_to_json(genomes)),
+        ]),
+        EsPhase::Gens(g) => Json::obj(vec![
+            ("kind", Json::str("gens")),
+            ("high", indices_to_json(&g.high)),
+            ("low", indices_to_json(&g.low)),
+            ("gen", Json::num(g.gen as f64)),
+            ("total_gens", Json::num(g.total_gens as f64)),
+            ("pop", Json::Arr(g.pop.iter().map(individual_to_json).collect())),
+        ]),
+    }
+}
+
+fn phase_from_json(j: &Json) -> Result<EsPhase> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("es phase is missing 'kind'"))?;
+    let field = |key: &str| j.get(key).ok_or_else(|| anyhow!("es phase is missing '{key}'"));
+    match kind {
+        "calib" => Ok(EsPhase::Calib(CalibMachine {
+            cfg: CalibConfig {
+                samples_per_gene: usize_field(j, "samples_per_gene")?,
+                trials: usize_field(j, "trials")?,
+                pairs: usize_field(j, "pairs")?,
+                max_evals: usize_field(j, "max_evals")?,
+            },
+            start_evals: usize_field(j, "start_evals")?,
+            gene_order: indices_from_json(field("gene_order")?)?,
+            pos: usize_field(j, "pos")?,
+            scores: f64s_from_json(field("scores")?)?,
+            valid_pool: genomes_from_json(field("valid_pool")?)?,
+        })),
+        "hshi" => Ok(EsPhase::Hshi(
+            sens_from_json(field("sens")?)?,
+            HshiMachine {
+                cfg: HshiConfig {
+                    hypercubes: usize_field(j, "hypercubes")?,
+                    tries_per_cube: usize_field(j, "tries_per_cube")?,
+                },
+                strata: indices_from_json(field("strata")?)?
+                    .into_iter()
+                    .map(|k| k as u32)
+                    .collect(),
+                total_cubes: field("total_cubes")?
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("es phase is missing integer 'total_cubes'"))?,
+                n_cubes: usize_field(j, "n_cubes")?,
+                cube: usize_field(j, "cube")?,
+                start: usize_field(j, "start")?,
+                population: genomes_from_json(field("population")?)?,
+            },
+        )),
+        "init" => Ok(EsPhase::InitEval {
+            high: indices_from_json(field("high")?)?,
+            low: indices_from_json(field("low")?)?,
+            genomes: genomes_from_json(field("genomes")?)?,
+        }),
+        "gens" => Ok(EsPhase::Gens(GensState {
+            high: indices_from_json(field("high")?)?,
+            low: indices_from_json(field("low")?)?,
+            gen: usize_field(j, "gen")?,
+            total_gens: usize_field(j, "total_gens")?,
+            pop: field("pop")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("es phase 'pop' must be an array"))?
+                .iter()
+                .map(individual_from_json)
+                .collect::<Result<_>>()?,
+        })),
+        other => Err(anyhow!("unknown es phase kind '{other}'")),
+    }
+}
+
 /// The SparseMap searcher. Borrows its [`EvalContext`] so a caller (the
 /// `portfolio` meta-optimizer, bespoke drivers) can run it over a slice
 /// of a shared budget; [`run_sparsemap`] is the owning convenience form.
+/// Thin wrapper over [`EsOpt`] (kept for source compatibility).
 pub struct SparseMapSearch<'a> {
     pub ctx: &'a mut EvalContext,
     pub cfg: EsConfig,
-    rng: Pcg64,
+    seed: u64,
 }
 
 impl<'a> SparseMapSearch<'a> {
     pub fn new(ctx: &'a mut EvalContext, cfg: EsConfig, seed: u64) -> SparseMapSearch<'a> {
-        if cfg.threads > 1 && ctx.pool().is_none() {
-            let pool = crate::util::threadpool::ThreadPool::new(cfg.threads);
-            ctx.set_pool(Some(std::sync::Arc::new(pool)));
-        }
-        SparseMapSearch { ctx, cfg, rng: Pcg64::seeded(seed) }
+        SparseMapSearch { ctx, cfg, seed }
     }
 
     /// Run until the context budget (or fence) is exhausted.
-    pub fn run(mut self) {
-        let spec = self.ctx.spec.clone();
-        let full = self.cfg.variant == EsVariant::Full;
-        // Scale to what this run may actually spend: identical to
-        // `ctx.budget` on a fresh context (every standalone path), and to
-        // the slice allocation when a portfolio fence is set.
-        let budget = self.ctx.remaining();
-        // Scale the population and initialization overhead to the budget:
-        // calibration ≤ ~10% (E8), HSHI ≤ ~20%.
-        let population = self.cfg.population.min((budget / 8).max(8));
-        self.cfg.population = population;
-
-        // --- initialization -------------------------------------------------
-        let sens: Option<Sensitivity> = if full {
-            let mut calib = self.cfg.calib;
-            if calib.max_evals == 0 {
-                calib.max_evals = (budget / 10).max(40);
-            }
-            Some(calibrate(self.ctx, calib, &mut self.rng))
-        } else {
-            None
-        };
-        let mut init_genomes = if let Some(s) = &sens {
-            let mut h = self.cfg.hshi;
-            h.hypercubes = population;
-            h.tries_per_cube =
-                h.tries_per_cube.min((budget / 5 / population.max(1)).max(1));
-            let r = initialize(self.ctx, s, h, &mut self.rng);
-            let mut pop = r.population;
-            // Top up with random genomes if HSHI under-filled.
-            while pop.len() < population {
-                pop.push(spec.random(&mut self.rng));
-            }
-            pop
-        } else {
-            lhs_init(&spec, population, &mut self.rng)
-        };
-        if full && !init_genomes.is_empty() {
-            // Warm-start seeds: when resources are extremely tight (edge
-            // platform, huge workloads) the valid region can be too thin
-            // for stratified random search — inject the deterministic
-            // heuristic mapping (with and without the manual sparse
-            // strategy) so the population never starts fully dead.
-            let workload = self.ctx.workload().clone();
-            let mapping = crate::baselines::common::heuristic_mapping_genes(&spec, &workload);
-            let manual = crate::baselines::common::manual_strategy_genes(&spec, &workload);
-            let mut seed1 = vec![0u32; spec.len()];
-            for i in 0..spec.len() {
-                seed1[i] = spec.ranges[i].lo;
-            }
-            crate::baselines::common::apply(&mut seed1, &mapping);
-            let mut seed2 = seed1.clone();
-            crate::baselines::common::apply(&mut seed2, &manual);
-            let k = init_genomes.len();
-            init_genomes[k - 1] = seed1;
-            if k >= 2 {
-                init_genomes[k - 2] = seed2;
-            }
-        }
-        let init_genomes = init_genomes;
-        let mut pop: Vec<Individual> = evaluate_all(self.ctx, init_genomes);
-        if let Some(m) = mean_valid_edp(&pop) {
-            self.ctx.telemetry.push_population_mean(m);
-        }
-
-        let (high, low) = match &sens {
-            Some(s) => (s.high.clone(), s.low.clone()),
-            None => (Vec::new(), (0..spec.len()).collect()),
-        };
-
-        // --- generations -----------------------------------------------------
-        // Estimate total generations from the remaining budget so the
-        // annealing schedule spans the whole run.
-        let per_gen = self.cfg.population.max(1);
-        let total_gens = (self.ctx.remaining() / per_gen).max(1);
-        let mut gen = 0;
-        while !self.ctx.exhausted() && gen < total_gens * 4 {
-            let n_parents =
-                ((pop.len() as f64 * self.cfg.parent_frac) as usize).max(2);
-            // Parents are only read: select by index instead of cloning
-            // every genome per generation (same stable order as
-            // `select_top`, so the rng stream and trajectory are
-            // untouched — see `top_indices`).
-            let parents = top_indices(&pop, n_parents);
-
-            // Crossover: fill a fresh offspring pool.
-            let mut offspring = Vec::with_capacity(self.cfg.population);
-            while offspring.len() < self.cfg.population {
-                let pa = &pop[parents[self.rng.index(parents.len())]].genome;
-                let pb = &pop[parents[self.rng.index(parents.len())]].genome;
-                let (mut c1, mut c2) = if full {
-                    sensitivity_aware_crossover(pa, pb, &high, &mut self.rng)
-                } else {
-                    ops::onepoint_crossover(pa, pb, &mut self.rng)
-                };
-                // Mutation.
-                for c in [&mut c1, &mut c2] {
-                    if self.rng.chance(self.cfg.mutation_prob) {
-                        if full {
-                            annealing_mutation(
-                                &spec, c, &high, &low, gen, total_gens, &mut self.rng,
-                            );
-                        } else {
-                            ops::point_mutation(&spec, c, 0.05, &mut self.rng);
-                        }
-                    }
-                }
-                offspring.push(c1);
-                if offspring.len() < self.cfg.population {
-                    offspring.push(c2);
-                }
-            }
-
-            let children = evaluate_all(self.ctx, offspring);
-            if children.is_empty() {
-                break; // budget exhausted mid-generation
-            }
-            // (μ+λ) survival: parents compete with offspring.
-            pop.extend(children);
-            pop = select_top(pop, self.cfg.population);
-            if let Some(m) = mean_valid_edp(&pop) {
-                self.ctx.telemetry.push_population_mean(m);
-            }
-            gen += 1;
-        }
+    pub fn run(self) {
+        EsOpt::new(self.cfg).run(self.ctx, self.seed);
     }
 }
 
 /// Run one ES search against a borrowed context (telemetry accumulates
-/// in the context; the caller finalizes the outcome). This is the form
-/// the optimizer registry and the portfolio meta-optimizer drive.
+/// in the context; the caller finalizes the outcome). One fresh
+/// [`EsOpt`] per call — bit-identical to the registry-built optimizer.
 pub fn run_sparsemap_with(ctx: &mut EvalContext, cfg: &EsConfig, seed: u64) {
-    SparseMapSearch::new(ctx, *cfg, seed).run();
+    EsOpt::new(*cfg).run(ctx, seed);
 }
 
 /// Convenience one-call API.
@@ -310,5 +650,56 @@ mod tests {
     fn population_mean_curve_recorded() {
         let o = run_sparsemap(ctx(2_000), small_cfg(EsVariant::Full), 3);
         assert!(o.population_mean_curve.len() >= 2);
+    }
+
+    #[test]
+    fn suspend_and_resume_reproduce_uninterrupted_run() {
+        use crate::search::{Progress, SearchControl};
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        let cfg = small_cfg(EsVariant::Full);
+        let a = run_sparsemap(ctx(1_200), cfg, 21);
+
+        // Same search, but an observer raises the suspend flag halfway
+        // through; the run pauses at the next safe point.
+        let flag = Arc::new(AtomicBool::new(false));
+        let obs_flag = flag.clone();
+        let mut c = ctx(1_200).with_observer(Some(Box::new(move |p: &Progress| {
+            if p.evals >= 600 {
+                obs_flag.store(true, Ordering::SeqCst);
+            }
+            SearchControl::Continue
+        })));
+        c.set_suspend_flag(Some(flag.clone()));
+        let mut opt = EsOpt::new(cfg);
+        opt.run(&mut c, 21);
+        assert!(c.used() < 1_200, "run should have paused before the budget");
+
+        // Serialize the optimizer state through actual JSON text and
+        // restore it into a fresh instance.
+        let state = Json::parse(&opt.suspend().unwrap().dumps()).unwrap();
+        let mut resumed = EsOpt::new(cfg);
+        resumed.resume(&state).unwrap();
+
+        flag.store(false, Ordering::SeqCst);
+        c.set_observer(None);
+        resumed.run(&mut c, 21);
+        let b = c.outcome("sparsemap");
+
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.best_edp.to_bits(), b.best_edp.to_bits());
+        assert_eq!(a.best_genome, b.best_genome);
+        assert_eq!(a.curve, b.curve);
+        assert_eq!(a.population_mean_curve, b.population_mean_curve);
+    }
+
+    #[test]
+    fn fresh_optimizer_suspends_to_null_state() {
+        let opt = EsOpt::new(small_cfg(EsVariant::Full));
+        let state = opt.suspend().unwrap();
+        let mut back = EsOpt::new(small_cfg(EsVariant::Full));
+        back.resume(&state).unwrap();
+        assert!(back.st.is_none());
     }
 }

@@ -73,9 +73,11 @@
 //! (named *or fully custom* workloads and platforms, budget, seed,
 //! threads, backend, cache policy), validate it into a
 //! [`api::SearchSession`], stream progress through a
-//! [`search::SearchObserver`], cancel from another thread, and get a
+//! [`search::SearchObserver`], cancel from another thread, suspend into
+//! a resumable [`optimizer::Checkpoint`] ([`api::RunOpts`]), and get a
 //! JSON-round-trippable [`api::SearchReport`] back. The CLI
-//! (`search`, `run-spec`), the experiment drivers ([`report`]) and the
+//! (`search`, `run-spec`), the experiment drivers ([`report`]), the
+//! long-running search daemon ([`service`], CLI `serve`) and the
 //! examples are all thin layers over it.
 
 pub mod api;
@@ -90,6 +92,7 @@ pub mod report;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod search;
+pub mod service;
 pub mod sparse;
 pub mod sparsity;
 pub mod util;
@@ -97,7 +100,7 @@ pub mod workload;
 
 /// Common imports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::api::{run_batch, SearchReport, SearchRequest, SearchSession};
+    pub use crate::api::{methods, run_batch, RunOpts, SearchReport, SearchRequest, SearchSession};
     pub use crate::arch::{Boundary, Platform, StorageLevel};
     pub use crate::genome::{decode, Design, Genome, GenomeSpec};
     pub use crate::mapping::{MapLevel, Mapping};

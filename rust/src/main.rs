@@ -48,10 +48,18 @@ Utility commands:
                          report to stdout, [--show-design] renders the
                          winner
   methods              list every search method in the optimizer registry:
-                         name, aliases, description, and the tunables
-                         accepted in method_opts (with defaults). --method
-                         accepts aliases; `portfolio` races members over
-                         one shared budget
+                         name, aliases, description, whether it supports
+                         checkpoint/resume, and the tunables accepted in
+                         method_opts (with defaults); [--json] emits the
+                         machine-readable listing. --method accepts
+                         aliases; `portfolio` races members over one
+                         shared budget
+  serve                run the HTTP search service: submit jobs with
+                         POST /jobs, stream NDJSON progress, cancel into
+                         a checkpoint and resume later (checkpoints
+                         survive restarts with --checkpoint-dir)
+                         --addr 127.0.0.1:7878 [--quota EVALS]
+                         [--checkpoint-dir DIR] [--threads N-workers]
   calibrate            run high-sensitivity gene calibration and print S(v)
                          --workload mm3 --platform cloud
   inspect-tensor FILE  parse a sparse tensor file (COO/MatrixMarket or
@@ -93,6 +101,8 @@ fn check_args(args: &Args) -> anyhow::Result<()> {
             (&["workload", "platform", "method", "method-opts"], &["show-design", "json"])
         }
         "calibrate" => (&["workload", "platform"], &[]),
+        "methods" => (&[], &["json"]),
+        "serve" => (&["addr", "quota", "checkpoint-dir"], &[]),
         "table4" => (&["workloads"], &["summary"]),
         _ => (&[], &[]),
     };
@@ -255,16 +265,21 @@ fn cmd_inspect_tensor(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_methods() {
+fn cmd_methods(args: &Args) {
     use sparsemap::optimizer::TunableKind;
+    if args.flag("json") {
+        println!("{}", sparsemap::api::methods_json().pretty());
+        return;
+    }
     println!("search methods (pass to --method by name or alias; tune via method_opts):\n");
-    for m in sparsemap::optimizer::registry() {
+    for m in sparsemap::api::methods() {
         let aliases = if m.aliases.is_empty() {
             String::new()
         } else {
             format!("  (aliases: {})", m.aliases.join(", "))
         };
-        println!("{}{}", m.name, aliases);
+        let resumable = if m.resumable { "  [resumable]" } else { "" };
+        println!("{}{}{}", m.name, aliases, resumable);
         println!("    {}", m.summary);
         if m.tunables.is_empty() {
             println!("    tunables: none");
@@ -282,6 +297,24 @@ fn cmd_methods() {
         println!();
     }
     println!("example: sparsemap search --method pso --method-opts '{{\"swarm\": 24}}'");
+    println!("[resumable] methods suspend into a checkpoint and resume bit-identically");
+}
+
+/// `sparsemap serve` — the long-running HTTP search service. `--threads`
+/// here means concurrent search jobs (each job's own thread count comes
+/// from its request); default is one job at a time.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let workers = match args.opt("threads") {
+        Some(t) => t.parse().map_err(|_| anyhow::anyhow!("--threads expects a number"))?,
+        None => 1,
+    };
+    let cfg = sparsemap::service::ServerConfig {
+        addr: args.opt_or("addr", "127.0.0.1:7878"),
+        workers,
+        quota: args.opt_u64("quota", 0)? as usize,
+        checkpoint_dir: args.opt("checkpoint-dir").map(PathBuf::from),
+    };
+    sparsemap::service::serve(cfg)
 }
 
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
@@ -363,7 +396,8 @@ fn main() -> anyhow::Result<()> {
         "patterns" => println!("{}", patterns::run(&cfg)?),
         "search" => cmd_search(&args)?,
         "run-spec" => cmd_run_spec(&args)?,
-        "methods" => cmd_methods(),
+        "methods" => cmd_methods(&args),
+        "serve" => cmd_serve(&args)?,
         "calibrate" => cmd_calibrate(&args)?,
         "inspect-tensor" => cmd_inspect_tensor(&args)?,
         "demo" => cmd_demo()?,

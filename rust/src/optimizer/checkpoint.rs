@@ -1,0 +1,219 @@
+//! Versioned search checkpoints — a suspended optimizer plus the
+//! evaluation state it was running against, serialized without `serde`
+//! through the in-tree [`Json`] writer.
+//!
+//! A checkpoint pairs two snapshots taken at a safe point (between
+//! batches/generations):
+//!
+//! * the optimizer's own state from [`crate::optimizer::Optimizer::suspend`]
+//!   (RNG, population, phase cursor — whatever the method needs), and
+//! * the context state from `EvalContext::capture_eval_state` (telemetry,
+//!   interned genomes, result caches, counters).
+//!
+//! Restoring both into a freshly built optimizer/context of the same
+//! request continues the search **bit-identically**: the resumed run's
+//! final `Outcome` equals an uninterrupted run's, which
+//! `rust/tests/checkpoints.rs` pins for every method advertising
+//! `resumable`. Floats inside the snapshots travel as IEEE-754 bit
+//! patterns ([`crate::util::json::f64_bits`]) and 128-bit RNG state as hex
+//! strings ([`rng_to_json`]), so nothing is lost to decimal formatting.
+
+use crate::util::json::{f64_bits, f64_from_bits, Json};
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, ensure, Result};
+
+/// Schema tag stamped into every serialized checkpoint.
+pub const CHECKPOINT_SCHEMA: &str = "sparsemap.checkpoint.v1";
+
+/// A suspended search: which method was running, its internal state, and
+/// the evaluation state of the context it ran against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Canonical registry name of the suspended method.
+    pub method: String,
+    /// Opaque optimizer state from [`crate::optimizer::Optimizer::suspend`].
+    pub state: Json,
+    /// Context snapshot from `EvalContext::capture_eval_state`.
+    pub eval: Json,
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(CHECKPOINT_SCHEMA)),
+            ("method", Json::str(&self.method)),
+            ("state", self.state.clone()),
+            ("eval", self.eval.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Checkpoint> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("checkpoint JSON is missing 'schema'"))?;
+        ensure!(
+            schema == CHECKPOINT_SCHEMA,
+            "unsupported checkpoint schema '{schema}' (expected '{CHECKPOINT_SCHEMA}')"
+        );
+        Ok(Checkpoint {
+            method: j
+                .get("method")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("checkpoint JSON is missing 'method'"))?
+                .to_string(),
+            state: j.get("state").cloned().unwrap_or(Json::Null),
+            eval: j.get("eval").cloned().ok_or_else(|| anyhow!("checkpoint JSON is missing 'eval'"))?,
+        })
+    }
+}
+
+/// Serialize a [`Pcg64`] exactly: the 128-bit LCG state and stream as
+/// 32-hex-digit strings (`Json::Num` is an f64 and cannot carry them).
+pub fn rng_to_json(rng: &Pcg64) -> Json {
+    let (state, inc) = rng.to_parts();
+    Json::obj(vec![
+        ("state", Json::Str(format!("{state:032x}"))),
+        ("inc", Json::Str(format!("{inc:032x}"))),
+    ])
+}
+
+/// Inverse of [`rng_to_json`].
+pub fn rng_from_json(j: &Json) -> Result<Pcg64> {
+    let part = |key: &str| -> Result<u128> {
+        let s = j
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("rng state is missing '{key}'"))?;
+        ensure!(s.len() == 32, "rng '{key}' must be 32 hex digits");
+        u128::from_str_radix(s, 16).map_err(|_| anyhow!("rng '{key}' is not hex"))
+    };
+    Ok(Pcg64::from_parts(part("state")?, part("inc")?))
+}
+
+/// Serialize a list of genomes (`Vec<Vec<u32>>`) — shared by every
+/// population-carrying optimizer state.
+pub fn genomes_to_json(genomes: &[Vec<u32>]) -> Json {
+    Json::Arr(
+        genomes
+            .iter()
+            .map(|g| Json::Arr(g.iter().map(|&x| Json::num(x as f64)).collect()))
+            .collect(),
+    )
+}
+
+/// Inverse of [`genomes_to_json`].
+pub fn genomes_from_json(j: &Json) -> Result<Vec<Vec<u32>>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("genome list must be an array"))?
+        .iter()
+        .map(|g| {
+            g.as_arr()
+                .ok_or_else(|| anyhow!("genome must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_u64()
+                        .map(|v| v as u32)
+                        .ok_or_else(|| anyhow!("genes must be integers"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Serialize a float vector bit-exactly (each entry via
+/// [`crate::util::json::f64_bits`]).
+pub fn f64s_to_json(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| f64_bits(x)).collect())
+}
+
+/// Inverse of [`f64s_to_json`].
+pub fn f64s_from_json(j: &Json) -> Result<Vec<f64>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("float list must be an array"))?
+        .iter()
+        .map(|x| f64_from_bits(x).ok_or_else(|| anyhow!("float entries must be f64 bits")))
+        .collect()
+}
+
+/// Serialize an index list (`Vec<usize>`).
+pub fn indices_to_json(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+/// Inverse of [`indices_to_json`].
+pub fn indices_from_json(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("index list must be an array"))?
+        .iter()
+        .map(|x| {
+            x.as_u64().map(|v| v as usize).ok_or_else(|| anyhow!("indices must be integers"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_round_trips() {
+        let cp = Checkpoint {
+            method: "random".into(),
+            state: Json::obj(vec![("k", Json::num(3.0))]),
+            eval: Json::obj(vec![("budget", Json::num(10.0))]),
+        };
+        let j = Json::parse(&cp.to_json().dumps()).unwrap();
+        assert_eq!(Checkpoint::from_json(&j).unwrap(), cp);
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        let mut j = Checkpoint {
+            method: "random".into(),
+            state: Json::Null,
+            eval: Json::Null,
+        }
+        .to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("schema".into(), Json::str("sparsemap.checkpoint.v9"));
+        }
+        assert!(Checkpoint::from_json(&j).is_err());
+        assert!(Checkpoint::from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn rng_state_round_trips_exactly() {
+        let mut rng = Pcg64::seeded(99);
+        for _ in 0..23 {
+            rng.next_u64();
+        }
+        let j = Json::parse(&rng_to_json(&rng).dumps()).unwrap();
+        let mut back = rng_from_json(&j).unwrap();
+        let mut orig = rng;
+        for _ in 0..64 {
+            assert_eq!(orig.next_u64(), back.next_u64());
+        }
+    }
+
+    #[test]
+    fn genome_and_index_lists_round_trip() {
+        let gs = vec![vec![1u32, 2, 3], vec![], vec![7, 0]];
+        let j = Json::parse(&genomes_to_json(&gs).dumps()).unwrap();
+        assert_eq!(genomes_from_json(&j).unwrap(), gs);
+        let xs = vec![0usize, 5, 2];
+        let j = Json::parse(&indices_to_json(&xs).dumps()).unwrap();
+        assert_eq!(indices_from_json(&j).unwrap(), xs);
+    }
+
+    #[test]
+    fn f64_lists_round_trip_bit_exactly() {
+        let xs = vec![0.1, f64::INFINITY, -3.25, 1e300];
+        let j = Json::parse(&f64s_to_json(&xs).dumps()).unwrap();
+        let back = f64s_from_json(&j).unwrap();
+        assert_eq!(xs.len(), back.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

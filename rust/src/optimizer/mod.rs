@@ -28,9 +28,11 @@
 //! method's default-config trajectory is bit-for-bit identical to the
 //! pre-registry dispatch (pinned by `rust/tests/golden_trajectories.rs`).
 
+pub mod checkpoint;
 pub mod portfolio;
 mod registry;
 
+pub use checkpoint::{Checkpoint, CHECKPOINT_SCHEMA};
 pub use registry::{registry, ALL_METHODS};
 
 use crate::search::{EvalContext, Outcome};
@@ -53,6 +55,28 @@ pub trait Optimizer {
     /// Post-process the finalized outcome (the portfolio attaches its
     /// per-member telemetry here; plain methods do nothing).
     fn annotate(&self, _outcome: &mut Outcome) {}
+
+    /// Capture the optimizer's internal state as versioned JSON for a
+    /// later [`Optimizer::resume`]. `None` means the method does not
+    /// support suspension (the registry's [`MethodSpec::resumable`] flag
+    /// advertises which do). Call after [`Optimizer::run`] returned early
+    /// because the context's suspend flag was raised (see
+    /// `EvalContext::suspend_requested`); calling `run` again on the same
+    /// instance also continues in place — `suspend`/`resume` exist to
+    /// carry that continuation across processes.
+    fn suspend(&self) -> Option<Json> {
+        None
+    }
+
+    /// Restore state captured by [`Optimizer::suspend`] into a freshly
+    /// built optimizer of the same method and options. The next
+    /// [`Optimizer::run`] continues exactly where the suspended run left
+    /// off (against a context restored with
+    /// `EvalContext::restore_eval_state`). The default errors: only
+    /// methods advertising [`MethodSpec::resumable`] implement it.
+    fn resume(&mut self, _state: &Json) -> Result<()> {
+        bail!("method '{}' does not support suspend/resume", self.label())
+    }
 }
 
 /// The type and valid range of one tunable.
@@ -93,6 +117,9 @@ pub struct MethodSpec {
     pub summary: &'static str,
     /// Schema of the method's `method_opts` keys.
     pub tunables: &'static [Tunable],
+    /// Whether built instances support [`Optimizer::suspend`] /
+    /// [`Optimizer::resume`] (and therefore service-side checkpointing).
+    pub resumable: bool,
     /// Turn a *validated* options object into a runnable optimizer.
     pub(crate) builder: fn(&Json) -> Result<Box<dyn Optimizer>>,
 }
@@ -192,6 +219,47 @@ impl MethodSpec {
     pub fn build(&self, opts: &Json) -> Result<Box<dyn Optimizer>> {
         self.validate_opts(opts)?;
         (self.builder)(opts)
+    }
+
+    /// Machine-readable form of this spec (name, aliases, summary, the
+    /// `resumable` flag and the full tunable schema) — the per-method
+    /// entry of `api::methods_json()`, so clients introspect the registry
+    /// without shelling out to the `sparsemap methods` CLI.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("aliases", Json::arr_str(self.aliases)),
+            ("summary", Json::str(self.summary)),
+            ("resumable", Json::Bool(self.resumable)),
+            (
+                "tunables",
+                Json::Arr(
+                    self.tunables
+                        .iter()
+                        .map(|t| {
+                            let (kind, range) = match t.kind {
+                                TunableKind::Int { min, max } => (
+                                    "int",
+                                    Some(Json::arr_f64(&[min as f64, max as f64])),
+                                ),
+                                TunableKind::Float { min, max } => {
+                                    ("float", Some(Json::arr_f64(&[min, max])))
+                                }
+                                TunableKind::MethodList => ("method_list", None),
+                                TunableKind::OptsByMethod => ("opts_by_method", None),
+                            };
+                            Json::obj(vec![
+                                ("key", Json::str(t.key)),
+                                ("kind", Json::str(kind)),
+                                ("range", range.unwrap_or(Json::Null)),
+                                ("default", Json::str(t.default)),
+                                ("help", Json::str(t.help)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 

@@ -15,28 +15,30 @@
 //! (by their own per-slice best EDP) are eliminated. Rounding leftovers
 //! go to the best survivor at the end.
 //!
-//! Members are deterministic and re-run **with the same seed** each
-//! round. For methods whose trajectory does not depend on the remaining
-//! budget (pso, random, sparseloop, sage-like, es-direct, mcts, tbpsa,
-//! ppo, dqn), the round-`r+1` run therefore repeats its round-`r`
-//! trajectory as a prefix, and the shared evaluation cache serves that
-//! prefix without model calls (still debiting the budget, like every
-//! cache hit: the paper counts submissions) — classic restart-based
-//! successive halving. The ES family (sparsemap / es-pfce / es-std) is
-//! deliberately different: it sizes its population, calibration and
-//! annealing schedule to the budget it can actually spend
-//! (`ctx.remaining()` at entry), so each round it launches a *fresh,
-//! better-proportioned* search over the larger share instead of
-//! replaying an undersized one. Either way the shared telemetry
-//! accumulates in the one context, so the portfolio's [`Outcome`]
-//! carries the global best across all members, and [`Outcome::members`]
-//! breaks the spend down per member — their `evals` sum to the
-//! outcome's `evals` exactly.
+//! Each member is built **once**, at its first slice, and the same
+//! optimizer instance runs every later slice. Since the [`Optimizer`]
+//! overhaul made the search arms suspendable state machines, a member
+//! whose slice fence runs out simply pauses at its next safe point and
+//! *continues* from there when the next round grants it a larger share —
+//! no budget is re-spent replaying the previous rounds' prefix, and the
+//! ES family keeps one coherent population/annealing schedule across
+//! rounds instead of restarting. (Methods without live state, e.g. mcts
+//! or the RL arms, still effectively restart; their replayed prefix is
+//! served by the shared evaluation cache but does debit the budget,
+//! since the paper counts submissions.) The shared telemetry accumulates
+//! in the one context, so the portfolio's [`Outcome`] carries the global
+//! best across all members, and [`Outcome::members`] breaks the spend
+//! down per member — their `evals` sum to the outcome's `evals` exactly.
+//!
+//! The race itself is suspendable too: a raised suspend flag pauses the
+//! in-flight member mid-slice, and [`Optimizer::suspend`] captures the
+//! round/member/fence cursor plus every live member's own state, so a
+//! restored portfolio picks the race up exactly where it stopped.
 
 use super::{opt_usize, resolve, MethodSpec, Optimizer};
 use crate::search::{EvalContext, MemberStats, Outcome};
-use crate::util::json::Json;
-use anyhow::{bail, Result};
+use crate::util::json::{f64_bits, f64_from_bits, Json};
+use anyhow::{anyhow, bail, ensure, Result};
 
 /// Default member set: the flagship ES, its encoding-only ablation, and
 /// the two strongest non-ES baselines at small budgets.
@@ -45,10 +47,25 @@ pub const DEFAULT_MEMBERS: &[&str] = &["sparsemap", "es-pfce", "pso", "random"];
 struct Member {
     spec: &'static MethodSpec,
     opts: Json,
+    /// Built lazily at the member's first slice and kept across rounds,
+    /// so later slices continue the same search instead of replaying it.
+    /// Dropped on elimination (losers never run again).
+    opt: Option<Box<dyn Optimizer>>,
     evals: usize,
     best_edp: f64,
     rounds: usize,
     eliminated_round: Option<usize>,
+}
+
+/// Where a suspended race stopped: which round, which survivor within
+/// that round's alive order, the share fixed at round start, and — when
+/// a member was paused mid-slice — its absolute fence.
+struct Cursor {
+    round: usize,
+    member_pos: usize,
+    share: usize,
+    fence: Option<usize>,
+    in_leftover: bool,
 }
 
 /// The meta-optimizer. Construct through the registry:
@@ -57,6 +74,7 @@ pub struct Portfolio {
     members: Vec<Member>,
     rounds: usize,
     eta: usize,
+    cursor: Option<Cursor>,
 }
 
 /// Registry builder (opts pre-validated against the portfolio tunables).
@@ -76,6 +94,7 @@ pub(crate) fn build(opts: &Json) -> Result<Box<dyn Optimizer>> {
         members.push(Member {
             spec,
             opts: Json::Obj(Default::default()),
+            opt: None,
             evals: 0,
             best_edp: f64::INFINITY,
             rounds: 0,
@@ -106,6 +125,7 @@ pub(crate) fn build(opts: &Json) -> Result<Box<dyn Optimizer>> {
         members,
         rounds: opt_usize(opts, "rounds", 3).max(1),
         eta: opt_usize(opts, "eta", 2).max(2),
+        cursor: None,
     }))
 }
 
@@ -113,31 +133,45 @@ impl Portfolio {
     /// Run `member` until `fence` (an absolute submission count), folding
     /// the slice's spend and per-slice best into its stats. `round` is
     /// the portfolio-level round index (the same number the halving path
-    /// records in `eliminated_round`).
+    /// records in `eliminated_round`). Returns `false` when the member
+    /// was paused mid-slice by a suspend request (its stats are still
+    /// folded; `rounds` is only counted once the slice completes).
     fn run_slice(
         member: &mut Member,
         ctx: &mut EvalContext,
         fence: Option<usize>,
         seed: u64,
         round: usize,
-    ) {
+    ) -> bool {
         let before = ctx.used();
         ctx.begin_slice();
         ctx.set_fence(fence);
-        // Validated at build time, so this only fails if a member's
-        // semantic invariants break — eliminate it (loudly) rather than
-        // poison the whole race.
-        match member.spec.build(&member.opts) {
-            Ok(mut opt) => opt.run(ctx, seed),
-            Err(e) => {
-                eprintln!("warning: portfolio member '{}' failed to build: {e}", member.spec.name);
-                member.eliminated_round = Some(round);
+        if member.opt.is_none() {
+            // Validated at build time, so this only fails if a member's
+            // semantic invariants break — eliminate it (loudly) rather
+            // than poison the whole race.
+            match member.spec.build(&member.opts) {
+                Ok(opt) => member.opt = Some(opt),
+                Err(e) => {
+                    eprintln!(
+                        "warning: portfolio member '{}' failed to build: {e}",
+                        member.spec.name
+                    );
+                    member.eliminated_round = Some(round);
+                }
             }
+        }
+        if let Some(opt) = member.opt.as_mut() {
+            opt.run(ctx, seed);
         }
         ctx.set_fence(None);
         member.evals += ctx.used() - before;
         member.best_edp = member.best_edp.min(ctx.slice_best());
-        member.rounds += 1;
+        let completed = !ctx.suspend_requested();
+        if completed {
+            member.rounds += 1;
+        }
+        completed
     }
 
     fn alive(&self) -> Vec<usize> {
@@ -153,49 +187,104 @@ impl Optimizer for Portfolio {
     }
 
     fn run(&mut self, ctx: &mut EvalContext, seed: u64) {
-        for round in 0..self.rounds {
-            let alive = self.alive();
-            if alive.is_empty() || ctx.exhausted() {
-                break;
-            }
-            // This round's pot: an equal share of what's left for each
-            // remaining round, split evenly across survivors.
-            let pot = ctx.remaining() / (self.rounds - round);
-            let share = (pot / alive.len()).max(1);
-            for &i in &alive {
-                if ctx.exhausted() {
+        let (mut round, mut pos, mut share, mut pending_fence, resumed_leftover) =
+            match self.cursor.take() {
+                Some(c) => (c.round, c.member_pos, c.share, c.fence, c.in_leftover),
+                None => (0, 0, 0, None, false),
+            };
+        if !resumed_leftover {
+            while round < self.rounds {
+                let alive = self.alive();
+                if alive.is_empty() || ctx.exhausted() {
                     break;
                 }
-                let alloc = share.min(ctx.remaining());
-                let fence = ctx.used() + alloc;
-                // Same member seed every round: budget-independent
-                // methods resume by cache-served replay, the ES family
-                // restarts proportioned to the new share (module docs).
-                Self::run_slice(&mut self.members[i], ctx, Some(fence), seed, round);
-            }
-            // Successive halving after every round but the last: rank
-            // survivors by their own best and keep ceil(alive/eta),
-            // stable on ties (registry order).
-            if round + 1 < self.rounds {
-                let mut ranked = self.alive();
-                ranked.sort_by(|&a, &b| {
-                    self.members[a].best_edp.total_cmp(&self.members[b].best_edp)
-                });
-                let keep = ranked.len().div_ceil(self.eta).max(1);
-                for &i in &ranked[keep..] {
-                    self.members[i].eliminated_round = Some(round);
+                if pos == 0 && pending_fence.is_none() {
+                    // This round's pot: an equal share of what's left for
+                    // each remaining round, split evenly across survivors.
+                    // Fixed at round start (and restored verbatim when
+                    // resuming mid-round, where `remaining()` has moved).
+                    let pot = ctx.remaining() / (self.rounds - round);
+                    share = (pot / alive.len()).max(1);
                 }
+                let mut suspended = false;
+                while pos < alive.len() {
+                    if ctx.exhausted() {
+                        break;
+                    }
+                    if ctx.suspend_requested() {
+                        suspended = true;
+                        break;
+                    }
+                    let fence = match pending_fence.take() {
+                        // A slice interrupted mid-flight keeps its
+                        // original fence so the member finishes exactly
+                        // the allocation it was granted.
+                        Some(f) => f,
+                        None => ctx.used() + share.min(ctx.remaining()),
+                    };
+                    // Same member seed every round; the persistent
+                    // optimizer instance continues from where the last
+                    // fence paused it (module docs).
+                    if !Self::run_slice(&mut self.members[alive[pos]], ctx, Some(fence), seed, round)
+                    {
+                        pending_fence = Some(fence);
+                        suspended = true;
+                        break;
+                    }
+                    pos += 1;
+                }
+                if suspended {
+                    self.cursor = Some(Cursor {
+                        round,
+                        member_pos: pos,
+                        share,
+                        fence: pending_fence,
+                        in_leftover: false,
+                    });
+                    return;
+                }
+                // Successive halving after every round but the last: rank
+                // survivors by their own best and keep ceil(alive/eta),
+                // stable on ties (registry order).
+                if round + 1 < self.rounds {
+                    let mut ranked = self.alive();
+                    ranked.sort_by(|&a, &b| {
+                        self.members[a].best_edp.total_cmp(&self.members[b].best_edp)
+                    });
+                    let keep = ranked.len().div_ceil(self.eta).max(1);
+                    for &i in &ranked[keep..] {
+                        self.members[i].eliminated_round = Some(round);
+                        self.members[i].opt = None;
+                    }
+                }
+                round += 1;
+                pos = 0;
             }
         }
-        // Rounding leftovers go to the best survivor, unfenced.
+        // Rounding leftovers go to the best survivor, unfenced. The best
+        // pick is recomputed on resume from the persisted per-member
+        // stats, so it lands on the same survivor.
         if !ctx.exhausted() {
+            let leftover_cursor = Cursor {
+                round: self.rounds,
+                member_pos: 0,
+                share: 0,
+                fence: None,
+                in_leftover: true,
+            };
+            if ctx.suspend_requested() {
+                self.cursor = Some(leftover_cursor);
+                return;
+            }
             let best = self
                 .alive()
                 .into_iter()
                 .min_by(|&a, &b| self.members[a].best_edp.total_cmp(&self.members[b].best_edp));
             if let Some(i) = best {
                 let last_round = self.rounds.saturating_sub(1);
-                Self::run_slice(&mut self.members[i], ctx, None, seed, last_round);
+                if !Self::run_slice(&mut self.members[i], ctx, None, seed, last_round) {
+                    self.cursor = Some(leftover_cursor);
+                }
             }
         }
     }
@@ -213,6 +302,141 @@ impl Optimizer for Portfolio {
             })
             .collect();
     }
+
+    fn suspend(&self) -> Option<Json> {
+        let mut members = Vec::with_capacity(self.members.len());
+        for m in &self.members {
+            let opt_state = match (&m.opt, m.eliminated_round) {
+                // A live member with built state must checkpoint it; if
+                // its method cannot, the whole race cannot be suspended
+                // faithfully (resuming would silently restart it).
+                (Some(opt), None) => opt.suspend()?,
+                _ => Json::Null,
+            };
+            members.push(Json::obj(vec![
+                ("name", Json::str(m.spec.name)),
+                ("evals", Json::num(m.evals as f64)),
+                ("best_edp", f64_bits(m.best_edp)),
+                ("rounds", Json::num(m.rounds as f64)),
+                (
+                    "eliminated_round",
+                    match m.eliminated_round {
+                        Some(r) => Json::num(r as f64),
+                        None => Json::Null,
+                    },
+                ),
+                ("opt", opt_state),
+            ]));
+        }
+        Some(Json::obj(vec![(
+            "portfolio",
+            Json::obj(vec![
+                (
+                    "cursor",
+                    match &self.cursor {
+                        Some(c) => cursor_to_json(c),
+                        None => Json::Null,
+                    },
+                ),
+                ("members", Json::Arr(members)),
+            ]),
+        )]))
+    }
+
+    fn resume(&mut self, state: &Json) -> Result<()> {
+        let p = state
+            .get("portfolio")
+            .ok_or_else(|| anyhow!("portfolio state is missing 'portfolio'"))?;
+        self.cursor = match p.get("cursor") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(cursor_from_json(c)?),
+        };
+        let members = p
+            .get("members")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("portfolio state is missing 'members'"))?;
+        ensure!(
+            members.len() == self.members.len(),
+            "portfolio member count mismatch: state has {}, configured {}",
+            members.len(),
+            self.members.len()
+        );
+        for (m, mj) in self.members.iter_mut().zip(members) {
+            let name = mj
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("portfolio member state is missing 'name'"))?;
+            ensure!(
+                name == m.spec.name,
+                "portfolio member mismatch: state has '{name}', configured '{}'",
+                m.spec.name
+            );
+            m.evals = usize_field(mj, "evals")?;
+            m.rounds = usize_field(mj, "rounds")?;
+            m.best_edp = mj
+                .get("best_edp")
+                .and_then(f64_from_bits)
+                .ok_or_else(|| anyhow!("portfolio member '{name}' has a bad 'best_edp'"))?;
+            m.eliminated_round = match mj.get("eliminated_round") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(
+                    v.as_u64()
+                        .ok_or_else(|| anyhow!("bad 'eliminated_round' for member '{name}'"))?
+                        as usize,
+                ),
+            };
+            m.opt = match mj.get("opt") {
+                None | Some(Json::Null) => None,
+                Some(s) => {
+                    let mut opt = m.spec.build(&m.opts)?;
+                    opt.resume(s)?;
+                    Some(opt)
+                }
+            };
+        }
+        Ok(())
+    }
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .map(|v| v as usize)
+        .ok_or_else(|| anyhow!("portfolio state is missing '{key}'"))
+}
+
+fn cursor_to_json(c: &Cursor) -> Json {
+    Json::obj(vec![
+        ("round", Json::num(c.round as f64)),
+        ("member_pos", Json::num(c.member_pos as f64)),
+        ("share", Json::num(c.share as f64)),
+        (
+            "fence",
+            match c.fence {
+                Some(f) => Json::num(f as f64),
+                None => Json::Null,
+            },
+        ),
+        ("in_leftover", Json::Bool(c.in_leftover)),
+    ])
+}
+
+fn cursor_from_json(j: &Json) -> Result<Cursor> {
+    Ok(Cursor {
+        round: usize_field(j, "round")?,
+        member_pos: usize_field(j, "member_pos")?,
+        share: usize_field(j, "share")?,
+        fence: match j.get("fence") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_u64().ok_or_else(|| anyhow!("portfolio cursor has a bad 'fence'"))? as usize,
+            ),
+        },
+        in_leftover: j
+            .get("in_leftover")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow!("portfolio cursor is missing 'in_leftover'"))?,
+    })
 }
 
 #[cfg(test)]
@@ -326,5 +550,77 @@ mod tests {
     #[test]
     fn portfolio_listed_in_registry() {
         assert!(ALL_METHODS.contains(&"portfolio"));
+    }
+
+    #[test]
+    fn suspended_portfolio_resumes_to_identical_outcome() {
+        use super::super::resolve;
+        use crate::search::{Progress, SearchControl};
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        let empty = Json::Obj(Default::default());
+        let spec = resolve("portfolio").unwrap();
+
+        let a = {
+            let mut c = ctx(900);
+            let mut opt = spec.build(&empty).unwrap();
+            opt.run(&mut c, 11);
+            let mut o = c.outcome("portfolio");
+            opt.annotate(&mut o);
+            o
+        };
+
+        // Same race, but an observer raises the suspend flag halfway
+        // through; the in-flight member pauses mid-slice.
+        let flag = Arc::new(AtomicBool::new(false));
+        let obs_flag = flag.clone();
+        let mut c = ctx(900).with_observer(Some(Box::new(move |p: &Progress| {
+            if p.evals >= 450 {
+                obs_flag.store(true, Ordering::SeqCst);
+            }
+            SearchControl::Continue
+        })));
+        c.set_suspend_flag(Some(flag.clone()));
+        let mut opt = spec.build(&empty).unwrap();
+        opt.run(&mut c, 11);
+        assert!(c.used() < 900, "race should have paused before the budget");
+
+        // Round-trip the race state (cursor + every live member's own
+        // checkpoint) through actual JSON text, restore into a fresh
+        // portfolio, and finish the run.
+        let state = Json::parse(&opt.suspend().unwrap().dumps()).unwrap();
+        let mut resumed = spec.build(&empty).unwrap();
+        resumed.resume(&state).unwrap();
+
+        flag.store(false, Ordering::SeqCst);
+        c.set_observer(None);
+        resumed.run(&mut c, 11);
+        let mut b = c.outcome("portfolio");
+        resumed.annotate(&mut b);
+
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.best_edp.to_bits(), b.best_edp.to_bits());
+        assert_eq!(a.curve, b.curve);
+        assert_eq!(a.members, b.members, "per-member accounting must survive suspension");
+        let member_sum: usize = b.members.iter().map(|m| m.evals).sum();
+        assert_eq!(member_sum, b.evals, "member evals must still sum to the outcome's");
+    }
+
+    #[test]
+    fn suspend_with_stateless_member_mid_race_is_refused() {
+        use super::super::resolve;
+
+        // `mcts` has no checkpointable state; once it has run a slice the
+        // race cannot be suspended faithfully, so suspend() must refuse
+        // rather than silently restart the member on resume.
+        let opts =
+            Json::parse(r#"{"members": ["mcts", "random"], "rounds": 1}"#).unwrap();
+        let spec = resolve("portfolio").unwrap();
+        let mut opt = spec.build(&opts).unwrap();
+        assert!(opt.suspend().is_some(), "fresh portfolio has nothing mid-state");
+        let mut c = ctx(60);
+        opt.run(&mut c, 9);
+        assert!(opt.suspend().is_none(), "live stateless member must block suspend");
     }
 }

@@ -11,14 +11,13 @@ use super::portfolio;
 use super::{opt_f64, opt_usize, MethodSpec, Optimizer, Tunable, TunableKind};
 use crate::baselines::es_direct::{es_direct_with, EsDirectConfig};
 use crate::baselines::mcts::{mcts_with, MctsConfig};
-use crate::baselines::pso::{pso_with, PsoConfig};
+use crate::baselines::pso::{PsoConfig, PsoOpt};
 use crate::baselines::rl::{dqn_with, ppo_with, DqnConfig, PpoConfig};
 use crate::baselines::samplers::{
-    pure_random_with, sage_like_with, sparseloop_mapper_with, RandomConfig, SageConfig,
-    SparseloopConfig,
+    sage_like_with, sparseloop_mapper_with, RandomConfig, RandomOpt, SageConfig, SparseloopConfig,
 };
 use crate::baselines::tbpsa::{tbpsa_with, TbpsaConfig};
-use crate::es::{run_sparsemap_with, EsConfig, EsVariant};
+use crate::es::{EsConfig, EsOpt, EsVariant};
 use crate::search::EvalContext;
 use crate::util::json::Json;
 use anyhow::Result;
@@ -51,7 +50,7 @@ fn build_es(variant: EsVariant, opts: &Json) -> Result<Box<dyn Optimizer>> {
         variant,
         ..d
     };
-    Ok(Box::new(ConfiguredOpt { label: variant.name(), cfg, run_fn: run_sparsemap_with }))
+    Ok(Box::new(EsOpt::new(cfg)))
 }
 
 fn build_sparsemap(opts: &Json) -> Result<Box<dyn Optimizer>> {
@@ -79,7 +78,7 @@ fn build_es_direct(opts: &Json) -> Result<Box<dyn Optimizer>> {
 fn build_random(opts: &Json) -> Result<Box<dyn Optimizer>> {
     let d = RandomConfig::default();
     let cfg = RandomConfig { batch: opt_usize(opts, "batch", d.batch) };
-    Ok(Box::new(ConfiguredOpt { label: "random", cfg, run_fn: pure_random_with }))
+    Ok(Box::new(RandomOpt::new(cfg)))
 }
 
 fn build_sparseloop(opts: &Json) -> Result<Box<dyn Optimizer>> {
@@ -108,7 +107,7 @@ fn build_pso(opts: &Json) -> Result<Box<dyn Optimizer>> {
         c1: opt_f64(opts, "c1", d.c1),
         c2: opt_f64(opts, "c2", d.c2),
     };
-    Ok(Box::new(ConfiguredOpt { label: "pso", cfg, run_fn: pso_with }))
+    Ok(Box::new(PsoOpt::new(cfg)))
 }
 
 fn build_mcts(opts: &Json) -> Result<Box<dyn Optimizer>> {
@@ -352,6 +351,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         summary: "full SparseMap ES: PFCE encoding + sensitivity calibration + HSHI + \
                   annealing/sensitivity-aware operators",
         tunables: ES_TUNABLES,
+        resumable: true,
         builder: build_sparsemap,
     },
     MethodSpec {
@@ -359,6 +359,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &["pfce"],
         summary: "ablation: plain ES over the PFCE encoding (LHS init, uniform operators)",
         tunables: ES_TUNABLES,
+        resumable: true,
         builder: build_es_pfce,
     },
     MethodSpec {
@@ -366,6 +367,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &["direct-es"],
         summary: "ablation: standard ES over the direct-value encoding (dead-offspring-ridden)",
         tunables: ES_DIRECT_TUNABLES,
+        resumable: false,
         builder: build_es_direct,
     },
     MethodSpec {
@@ -373,6 +375,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &["rand", "pure-random"],
         summary: "uniform random search over the full joint genome",
         tunables: RANDOM_TUNABLES,
+        resumable: true,
         builder: build_random,
     },
     MethodSpec {
@@ -380,6 +383,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &["sparseloop-mapper"],
         summary: "Sparseloop-Mapper-like: random mapping search under the manual sparse strategy",
         tunables: SPARSELOOP_TUNABLES,
+        resumable: false,
         builder: build_sparseloop,
     },
     MethodSpec {
@@ -387,6 +391,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &["sage"],
         summary: "SAGE-like: format/strategy evolution under a fixed heuristic mapping",
         tunables: SAGE_TUNABLES,
+        resumable: false,
         builder: build_sage,
     },
     MethodSpec {
@@ -394,6 +399,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &[],
         summary: "global-best particle swarm over the raw direct-encoded space",
         tunables: PSO_TUNABLES,
+        resumable: true,
         builder: build_pso,
     },
     MethodSpec {
@@ -401,6 +407,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &[],
         summary: "Monte Carlo tree search, gene-by-gene, over the raw space",
         tunables: MCTS_TUNABLES,
+        resumable: false,
         builder: build_mcts,
     },
     MethodSpec {
@@ -408,6 +415,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &[],
         summary: "test-based population-size-adaptation ES (Nevergrad) over the raw space",
         tunables: TBPSA_TUNABLES,
+        resumable: false,
         builder: build_tbpsa,
     },
     MethodSpec {
@@ -415,6 +423,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &[],
         summary: "PPO: factored categorical policy with clipped-surrogate updates",
         tunables: PPO_TUNABLES,
+        resumable: false,
         builder: build_ppo,
     },
     MethodSpec {
@@ -422,6 +431,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &[],
         summary: "DQN: MLP Q-function over sequential gene assignment",
         tunables: DQN_TUNABLES,
+        resumable: false,
         builder: build_dqn,
     },
     MethodSpec {
@@ -429,6 +439,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         aliases: &[],
         summary: "ablation: plain ES over the PFCE genome (alias arm of the Fig. 18 study)",
         tunables: ES_TUNABLES,
+        resumable: true,
         builder: build_es_std,
     },
     MethodSpec {
@@ -437,6 +448,7 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
         summary: "meta-optimizer: successive-halving race of member methods over one \
                   shared budget/cache/pool",
         tunables: PORTFOLIO_TUNABLES,
+        resumable: true,
         builder: portfolio::build,
     },
 ];

@@ -229,6 +229,16 @@ impl StageEngine {
         self.stage_misses
     }
 
+    /// Rebase the hit/miss counters to checkpointed values. Restoring an
+    /// `EvalContext` re-warms the stage caches by replaying the cached
+    /// genomes through [`StageEngine::eval_batch`], which perturbs the
+    /// counters; this resets them to the suspended run's telemetry so
+    /// post-resume counts match an uninterrupted run.
+    pub(crate) fn set_counters(&mut self, hits: usize, misses: usize) {
+        self.stage_hits = hits;
+        self.stage_misses = misses;
+    }
+
     /// Cached (mapping, format) stage counts — observability + cap tests.
     pub fn cache_sizes(&self) -> (usize, usize) {
         (self.map_stages.len(), self.fmt_cache.len())

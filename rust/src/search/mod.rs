@@ -49,6 +49,7 @@ use crate::genome::Design;
 use crate::model::{EvalResult, NativeEvaluator};
 #[cfg(feature = "xla")]
 use crate::runtime::{BatchEvaluator, Runtime};
+use crate::util::json::{f64_bits, f64_from_bits, Json};
 use crate::util::threadpool::{parallel_map, ThreadPool};
 use crate::workload::Workload;
 #[cfg(feature = "xla")]
@@ -362,6 +363,10 @@ pub struct EvalContext {
     /// Shared halt flag: set by an observer's [`SearchControl::Stop`] or
     /// externally (cancellation); once set, `remaining()` reports 0.
     stop_flag: Option<Arc<AtomicBool>>,
+    /// Shared suspend flag: unlike `stop_flag` it does NOT affect the
+    /// budget — resumable optimizers poll [`EvalContext::suspend_requested`]
+    /// at safe points and return early with their state preserved.
+    suspend_flag: Option<Arc<AtomicBool>>,
     stopped: bool,
     batches: usize,
     /// Temporary absolute submission ceiling below `budget` (see
@@ -394,6 +399,7 @@ impl EvalContext {
             model_calls: 0,
             observer: None,
             stop_flag: None,
+            suspend_flag: None,
             stopped: false,
             batches: 0,
             fence: None,
@@ -472,6 +478,35 @@ impl EvalContext {
     /// Did an observer or the halt flag stop this run before the budget?
     pub fn stopped_early(&self) -> bool {
         self.stopped || self.stop_flag.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
+    }
+
+    /// Attach a shared suspend flag (see [`EvalContext::suspend_requested`]).
+    pub fn with_suspend_flag(mut self, flag: Option<Arc<AtomicBool>>) -> EvalContext {
+        self.suspend_flag = flag;
+        self
+    }
+
+    /// In-place variant of [`EvalContext::with_suspend_flag`].
+    pub fn set_suspend_flag(&mut self, flag: Option<Arc<AtomicBool>>) {
+        self.suspend_flag = flag;
+    }
+
+    /// Has a suspension been requested (from any thread)? Unlike the stop
+    /// flag this never alters budget accounting: resumable optimizers poll
+    /// it between batches/generations and return early with their state
+    /// intact, ready for `Optimizer::suspend`. Optimizers that ignore it
+    /// simply run to completion as before.
+    pub fn suspend_requested(&self) -> bool {
+        self.suspend_flag.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
+    }
+
+    /// The loop-top test every resumable optimizer shares: pause when the
+    /// budget (or fence) is exhausted *or* a suspension is requested. Both
+    /// conditions are state-preserving — post-exhaustion control flow
+    /// consumes no budget and no RNG, so pausing here keeps uninterrupted
+    /// trajectories bit-identical.
+    pub fn should_pause(&self) -> bool {
+        self.exhausted() || self.suspend_requested()
     }
 
     /// Batches evaluated so far (the observer's generation proxy).
@@ -659,6 +694,184 @@ impl EvalContext {
         }
         self.finish_batch();
         results
+    }
+
+    /// Snapshot everything a resumed run needs to continue bit-identically:
+    /// telemetry (bit-exact floats), the interned genome store in id order,
+    /// both result-cache tables, model-call/batch counters and the stage
+    /// engine's hit/miss counters. Paired with
+    /// [`EvalContext::restore_eval_state`]; the backend itself (workload,
+    /// platform, budget) is *not* captured — the caller rebuilds the
+    /// context from its original request and restores the state into it.
+    pub fn capture_eval_state(&self) -> anyhow::Result<Json> {
+        anyhow::ensure!(
+            self.cache_enabled,
+            "suspend requires the evaluation cache (cache=false contexts cannot checkpoint)"
+        );
+        let result_json = |r: &Option<EvalResult>| match r {
+            Some(r) => Json::Arr(vec![
+                f64_bits(r.energy_pj),
+                f64_bits(r.cycles),
+                f64_bits(r.edp),
+                Json::Bool(r.valid),
+            ]),
+            None => Json::Null,
+        };
+        let genomes = Json::Arr(
+            (0..self.interner.len() as u32)
+                .map(|id| {
+                    let g = self.interner.genome(id);
+                    Json::Arr(g.iter().map(|&x| Json::num(x as f64)).collect())
+                })
+                .collect(),
+        );
+        Ok(Json::obj(vec![
+            ("budget", Json::num(self.budget as f64)),
+            ("telemetry", self.telemetry.to_state_json()),
+            ("genomes", genomes),
+            (
+                "genome_results",
+                Json::Arr(self.genome_results.iter().map(result_json).collect()),
+            ),
+            (
+                "design_results",
+                Json::Arr(self.design_results.iter().map(result_json).collect()),
+            ),
+            ("model_calls", Json::num(self.model_calls as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            (
+                "stage",
+                match &self.stage {
+                    Some(e) => Json::obj(vec![
+                        ("hits", Json::num(e.stage_hits() as f64)),
+                        ("misses", Json::num(e.stage_misses() as f64)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+        ]))
+    }
+
+    /// Restore a [`EvalContext::capture_eval_state`] snapshot into a fresh
+    /// context built for the *same* request (workload/platform/budget).
+    /// Genomes are re-interned in id order (dense ids are sequential, so
+    /// they come back identical), the result tables are reloaded, and the
+    /// stage engine is re-warmed by replaying the cached genomes through
+    /// it — after which its hit/miss counters are rebased to the
+    /// checkpointed values so post-resume telemetry matches an
+    /// uninterrupted run.
+    pub fn restore_eval_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        use anyhow::{anyhow, ensure};
+        ensure!(self.cache_enabled, "resume requires the evaluation cache");
+        ensure!(
+            self.used() == 0 && self.batches == 0 && self.interner.is_empty(),
+            "eval state must be restored into a fresh context"
+        );
+        let budget = state
+            .get("budget")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("eval state is missing 'budget'"))? as usize;
+        ensure!(
+            budget == self.budget,
+            "checkpoint budget {budget} does not match context budget {}",
+            self.budget
+        );
+        let telemetry = Telemetry::from_state_json(
+            state.get("telemetry").ok_or_else(|| anyhow!("eval state is missing 'telemetry'"))?,
+        )?;
+        for (i, gj) in state
+            .get("genomes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("eval state is missing 'genomes'"))?
+            .iter()
+            .enumerate()
+        {
+            let g: Vec<u32> = gj
+                .as_arr()
+                .ok_or_else(|| anyhow!("eval state genome {i} must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_u64()
+                        .map(|v| v as u32)
+                        .ok_or_else(|| anyhow!("eval state genome {i} has a non-integer gene"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let id = self
+                .interner
+                .intern(&g)
+                .ok_or_else(|| anyhow!("interner capacity exceeded restoring genome {i}"))?;
+            ensure!(id as usize == i, "interner id drift restoring genome {i} (got {id})");
+        }
+        let results_of = |key: &str| -> anyhow::Result<Vec<Option<EvalResult>>> {
+            state
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("eval state is missing '{key}'"))?
+                .iter()
+                .map(|r| match r {
+                    Json::Null => Ok(None),
+                    Json::Arr(a) if a.len() == 4 => {
+                        let f = |i: usize| {
+                            f64_from_bits(&a[i])
+                                .ok_or_else(|| anyhow!("'{key}' entry field {i} must be f64 bits"))
+                        };
+                        Ok(Some(EvalResult {
+                            energy_pj: f(0)?,
+                            cycles: f(1)?,
+                            edp: f(2)?,
+                            valid: a[3]
+                                .as_bool()
+                                .ok_or_else(|| anyhow!("'{key}' entry field 3 must be a bool"))?,
+                        }))
+                    }
+                    _ => Err(anyhow!("'{key}' entries must be null or 4-element arrays")),
+                })
+                .collect()
+        };
+        let genome_results = results_of("genome_results")?;
+        let design_results = results_of("design_results")?;
+        let interned = self.interner.len();
+        ensure!(
+            genome_results.len() <= interned && design_results.len() <= interned,
+            "eval state result tables are longer than the genome store"
+        );
+        self.genome_results = genome_results;
+        self.design_results = design_results;
+        if self.stage.is_some() && self.staging {
+            // Re-warm the stage caches: every cached genome-namespace
+            // result once flowed through the stage engine, so replaying
+            // them (in id order = first-miss order) rebuilds the mapping
+            // and format caches the resumed search will hit.
+            let warm: Vec<Arc<[u32]>> = self
+                .genome_results
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.is_some())
+                .map(|(id, _)| Arc::clone(self.interner.genome(id as u32)))
+                .collect();
+            if !warm.is_empty() {
+                let pool = self.pool.as_ref();
+                self.stage.as_mut().unwrap().eval_batch(&warm, pool);
+            }
+        }
+        if let Some(e) = &mut self.stage {
+            let hits = state
+                .get("stage")
+                .and_then(|s| s.get("hits"))
+                .and_then(Json::as_u64)
+                .unwrap_or(0) as usize;
+            let misses = state
+                .get("stage")
+                .and_then(|s| s.get("misses"))
+                .and_then(Json::as_u64)
+                .unwrap_or(0) as usize;
+            e.set_counters(hits, misses);
+        }
+        self.telemetry = telemetry;
+        self.model_calls =
+            state.get("model_calls").and_then(Json::as_u64).unwrap_or(0) as usize;
+        self.batches = state.get("batches").and_then(Json::as_u64).unwrap_or(0) as usize;
+        Ok(())
     }
 
     /// Finalize into an outcome.
@@ -890,6 +1103,69 @@ mod tests {
         }
         assert!(c.stopped_early());
         assert_eq!(c.used(), 20, "stopped after the second batch");
+    }
+
+    #[test]
+    fn suspend_flag_does_not_affect_budget() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let mut c = ctx(50).with_suspend_flag(Some(Arc::clone(&flag)));
+        assert!(!c.suspend_requested());
+        flag.store(true, Ordering::SeqCst);
+        assert!(c.suspend_requested());
+        assert!(c.should_pause());
+        assert_eq!(c.remaining(), 50, "suspension must not consume budget");
+        let mut rng = Pcg64::seeded(33);
+        let g: Vec<_> = (0..5).map(|_| c.spec.random(&mut rng)).collect();
+        assert_eq!(c.eval_batch(&g).len(), 5, "in-flight batches still evaluate");
+        assert!(!c.stopped_early());
+    }
+
+    #[test]
+    fn eval_state_round_trip_preserves_everything() {
+        let mut a = ctx(100);
+        let mut rng = Pcg64::seeded(31);
+        let genomes: Vec<_> = (0..30).map(|_| a.spec.random(&mut rng)).collect();
+        a.eval_batch(&genomes[..20]);
+        a.eval_batch(&genomes[..5]); // cache hits
+        let state = Json::parse(&a.capture_eval_state().unwrap().dumps()).unwrap();
+        let mut b = ctx(100);
+        b.restore_eval_state(&state).unwrap();
+        assert_eq!(b.used(), a.used());
+        assert_eq!(b.model_calls(), a.model_calls());
+        assert_eq!(b.cache_hits(), a.cache_hits());
+        assert_eq!(b.interned(), a.interned());
+        assert_eq!(b.batches(), a.batches());
+        assert_eq!(b.telemetry.curve, a.telemetry.curve);
+        assert_eq!(b.stage_hits(), a.stage_hits());
+        // Continuing both contexts stays bit-identical: same results,
+        // same cache behavior, same stage-counter evolution.
+        let ra = a.eval_batch(&genomes);
+        let rb = b.eval_batch(&genomes);
+        assert_eq!(ra, rb);
+        assert_eq!(a.telemetry.curve, b.telemetry.curve);
+        assert_eq!(a.model_calls(), b.model_calls());
+        assert_eq!(a.cache_hits(), b.cache_hits());
+        assert_eq!(a.stage_hits(), b.stage_hits());
+    }
+
+    #[test]
+    fn restore_rejects_bad_targets() {
+        let mut a = ctx(50);
+        let mut rng = Pcg64::seeded(32);
+        let genomes: Vec<_> = (0..5).map(|_| a.spec.random(&mut rng)).collect();
+        a.eval_batch(&genomes);
+        let state = a.capture_eval_state().unwrap();
+        // Budget mismatch.
+        assert!(ctx(60).restore_eval_state(&state).is_err());
+        // Dirty context.
+        let mut dirty = ctx(50);
+        dirty.eval_batch(&genomes[..1]);
+        assert!(dirty.restore_eval_state(&state).is_err());
+        // Cache-disabled context cannot checkpoint either way.
+        assert!(ctx(50).with_cache(false).restore_eval_state(&state).is_err());
+        assert!(ctx(50).with_cache(false).capture_eval_state().is_err());
+        // A fresh matching context accepts it.
+        assert!(ctx(50).restore_eval_state(&state).is_ok());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Search telemetry: per-evaluation bookkeeping and final outcomes.
 
 use crate::model::EvalResult;
-use crate::util::json::Json;
+use crate::util::json::{f64_bits, f64_from_bits, Json};
 
 /// Rolling statistics recorded by [`crate::search::EvalContext`].
 #[derive(Clone, Debug, Default)]
@@ -74,6 +74,95 @@ impl Telemetry {
 
     pub fn push_population_mean(&mut self, mean_edp: f64) {
         self.population_mean_curve.push((self.evals, mean_edp));
+    }
+
+    /// Bit-exact snapshot for checkpoints (see
+    /// `EvalContext::capture_eval_state`). Unlike [`Outcome::to_json`],
+    /// floats travel as IEEE-754 bit patterns so non-finite best-EDP
+    /// sentinels and every curve point restore exactly.
+    pub fn to_state_json(&self) -> Json {
+        let curve_json = |curve: &[(usize, f64)]| {
+            Json::Arr(
+                curve
+                    .iter()
+                    .map(|&(e, v)| Json::Arr(vec![Json::num(e as f64), f64_bits(v)]))
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("evals", Json::num(self.evals as f64)),
+            ("valid_evals", Json::num(self.valid_evals as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("interned", Json::num(self.interned as f64)),
+            ("stage_hits", Json::num(self.stage_hits as f64)),
+            ("curve", curve_json(&self.curve)),
+            ("best_edp", f64_bits(self.best_edp)),
+            (
+                "best_genome",
+                match &self.best_genome {
+                    Some(g) => Json::Arr(g.iter().map(|&x| Json::num(x as f64)).collect()),
+                    None => Json::Null,
+                },
+            ),
+            ("population_mean_curve", curve_json(&self.population_mean_curve)),
+            ("slice_best_edp", f64_bits(self.slice_best_edp)),
+        ])
+    }
+
+    /// Inverse of [`Telemetry::to_state_json`].
+    pub fn from_state_json(j: &Json) -> anyhow::Result<Telemetry> {
+        use anyhow::anyhow;
+        let n = |key: &str| -> anyhow::Result<usize> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow!("telemetry state is missing count field '{key}'"))
+        };
+        let f = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(f64_from_bits)
+                .ok_or_else(|| anyhow!("telemetry state field '{key}' must be f64 bits"))
+        };
+        let curve_of = |key: &str| -> anyhow::Result<Vec<(usize, f64)>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("telemetry state is missing curve '{key}'"))?
+                .iter()
+                .map(|pt| {
+                    let pt = pt.as_arr().filter(|a| a.len() == 2);
+                    let e = pt.and_then(|a| a[0].as_u64());
+                    let v = pt.and_then(|a| f64_from_bits(&a[1]));
+                    match (e, v) {
+                        (Some(e), Some(v)) => Ok((e as usize, v)),
+                        _ => Err(anyhow!("telemetry curve '{key}' must hold [evals, bits] pairs")),
+                    }
+                })
+                .collect()
+        };
+        let best_genome = match j.get("best_genome") {
+            Some(Json::Arr(a)) => Some(
+                a.iter()
+                    .map(|g| {
+                        g.as_u64()
+                            .map(|x| x as u32)
+                            .ok_or_else(|| anyhow!("best_genome entries must be integers"))
+                    })
+                    .collect::<anyhow::Result<Vec<u32>>>()?,
+            ),
+            _ => None,
+        };
+        Ok(Telemetry {
+            evals: n("evals")?,
+            valid_evals: n("valid_evals")?,
+            cache_hits: n("cache_hits")?,
+            interned: n("interned")?,
+            stage_hits: n("stage_hits")?,
+            curve: curve_of("curve")?,
+            best_edp: f("best_edp")?,
+            best_genome,
+            population_mean_curve: curve_of("population_mean_curve")?,
+            slice_best_edp: f("slice_best_edp")?,
+        })
     }
 
     pub fn into_outcome(self, method: &str, workload: &str, platform: &str) -> Outcome {
@@ -447,6 +536,33 @@ mod tests {
         t2.record(&[1], &ok(3.0));
         let plain = t2.into_outcome("random", "mm3", "cloud");
         assert!(!plain.to_json_full().dumps().contains("members"));
+    }
+
+    #[test]
+    fn state_json_round_trips_bit_exactly() {
+        let mut t = Telemetry::new();
+        t.record(&[1, 2], &ok(10.0));
+        t.record(&[3, 4], &dead());
+        t.record(&[5, 6], &ok(2.5));
+        t.push_population_mean(6.25);
+        t.interned = 3;
+        t.stage_hits = 7;
+        t.cache_hits = 1;
+        t.begin_slice();
+        let j = Json::parse(&t.to_state_json().dumps()).unwrap();
+        let t2 = Telemetry::from_state_json(&j).unwrap();
+        assert_eq!(t2.evals, t.evals);
+        assert_eq!(t2.valid_evals, t.valid_evals);
+        assert_eq!(t2.cache_hits, t.cache_hits);
+        assert_eq!(t2.interned, t.interned);
+        assert_eq!(t2.stage_hits, t.stage_hits);
+        assert_eq!(t2.curve, t.curve);
+        assert_eq!(t2.best_edp.to_bits(), t.best_edp.to_bits());
+        assert_eq!(t2.best_genome, t.best_genome);
+        assert_eq!(t2.population_mean_curve, t.population_mean_curve);
+        // Both slice bests are the INFINITY sentinel — only bit encoding
+        // can carry it through JSON.
+        assert_eq!(t2.slice_best_edp.to_bits(), f64::INFINITY.to_bits());
     }
 
     #[test]

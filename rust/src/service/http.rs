@@ -1,0 +1,156 @@
+//! A deliberately tiny HTTP/1.1 server core: the request parsing and
+//! response writing the service needs and nothing more. Generic over
+//! `BufRead`/`Write` so it unit-tests without sockets.
+
+use crate::util::json::Json;
+use std::io::{self, BufRead, Read, Write};
+
+/// Largest accepted request body (a search request is a few KB).
+const MAX_BODY: usize = 1 << 20;
+/// Largest accepted request/header line.
+const MAX_LINE: usize = 8 << 10;
+
+/// One parsed request: method, path (query string stripped), raw body.
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+fn malformed(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Parse one request off the wire. Only what the service needs: the
+/// request line, a `Content-Length` header, and the body it promises.
+pub fn read_request<R: BufRead>(reader: &mut R) -> io::Result<HttpRequest> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    if line.len() > MAX_LINE {
+        return Err(malformed("request line too long"));
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || !path.starts_with('/') {
+        return Err(malformed("malformed request line"));
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        let n = reader.read_line(&mut header)?;
+        if n == 0 || header.trim().is_empty() {
+            break;
+        }
+        if header.len() > MAX_LINE {
+            return Err(malformed("header line too long"));
+        }
+        let lower = header.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length =
+                v.trim().parse().map_err(|_| malformed("bad content-length"))?;
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(malformed("request body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let path = path.split('?').next().unwrap_or("/").to_string();
+    Ok(HttpRequest { method, path, body })
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Write a complete response with a known body.
+pub fn respond<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+pub fn respond_json<W: Write>(w: &mut W, status: u16, j: &Json) -> io::Result<()> {
+    respond(w, status, "application/json", format!("{}\n", j.pretty()).as_bytes())
+}
+
+pub fn error_json<W: Write>(w: &mut W, status: u16, msg: &str) -> io::Result<()> {
+    respond_json(w, status, &Json::obj(vec![("error", Json::str(msg))]))
+}
+
+/// Start an NDJSON stream: headers only, no `Content-Length` — the
+/// connection closing marks the end of the stream.
+pub fn start_ndjson<W: Write>(w: &mut W) -> io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_line_headers_and_body() {
+        let raw = "POST /jobs?verbose=1 HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/jobs", "query string is stripped");
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn get_without_body_parses() {
+        let req = read_request(&mut Cursor::new("GET /health HTTP/1.1\r\n\r\n")).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/health");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(read_request(&mut Cursor::new("not-http\r\n\r\n")).is_err());
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(read_request(&mut Cursor::new(huge)).is_err());
+        let bad_len = "POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(bad_len)).is_err());
+    }
+
+    #[test]
+    fn responses_carry_status_and_length() {
+        let mut out = Vec::new();
+        respond_json(&mut out, 202, &Json::obj(vec![("id", Json::str("job-1"))])).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 202 Accepted\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json"));
+        assert!(text.contains("job-1"));
+        let mut err = Vec::new();
+        error_json(&mut err, 429, "quota exceeded").unwrap();
+        let text = String::from_utf8(err).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("quota exceeded"));
+    }
+}

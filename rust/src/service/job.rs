@@ -1,0 +1,146 @@
+//! One tracked search job: its request, lifecycle state, buffered
+//! progress events and (when suspended) its checkpoint.
+
+use crate::api::SearchRequest;
+use crate::util::json::Json;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+/// Job lifecycle. `Suspended` is the only non-terminal resting state: a
+/// suspended job holds a checkpoint and goes back to `Queued` through
+/// `POST /jobs/<id>/resume`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Suspended,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Suspended => "suspended",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Terminal states never change again (a suspended job can).
+    pub fn terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// A tracked job. Lives in the server's state map for the life of the
+/// process (and, while suspended, as a file in the checkpoint
+/// directory).
+pub struct Job {
+    pub id: String,
+    pub tenant: String,
+    pub priority: i64,
+    pub request: SearchRequest,
+    pub state: JobState,
+    pub error: Option<String>,
+    /// The full serialized [`crate::api::SearchReport`] once the run
+    /// finished (done, or the partial report of a suspension).
+    pub report: Option<Json>,
+    /// Buffered NDJSON event lines — every `/events` reader replays the
+    /// buffer from the start, so late subscribers miss nothing.
+    pub events: Vec<String>,
+    /// No further events will arrive (the run reached a resting state).
+    pub events_done: bool,
+    /// Live run controls, present only while `Running`.
+    pub cancel: Option<Arc<AtomicBool>>,
+    pub suspend: Option<Arc<AtomicBool>>,
+    /// Serialized [`crate::optimizer::Checkpoint`] of a suspended job.
+    pub checkpoint: Option<Json>,
+}
+
+impl Job {
+    pub fn new(id: String, tenant: String, priority: i64, request: SearchRequest) -> Job {
+        Job {
+            id,
+            tenant,
+            priority,
+            request,
+            state: JobState::Queued,
+            error: None,
+            report: None,
+            events: Vec::new(),
+            events_done: false,
+            cancel: None,
+            suspend: None,
+            checkpoint: None,
+        }
+    }
+
+    /// The `GET /jobs` row.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("tenant", Json::str(&self.tenant)),
+            ("priority", Json::num(self.priority as f64)),
+            ("method", Json::str(&self.request.method)),
+            ("budget", Json::num(self.request.budget as f64)),
+            ("state", Json::str(self.state.as_str())),
+            ("has_checkpoint", Json::Bool(self.checkpoint.is_some())),
+        ])
+    }
+
+    /// The `GET /jobs/<id>` document: summary + echoed request + the
+    /// report or error once there is one.
+    pub fn detail_json(&self) -> Json {
+        let mut j = self.summary_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("request".to_string(), self.request.to_json());
+            if let Some(r) = &self.report {
+                o.insert("report".to_string(), r.clone());
+            }
+            if let Some(e) = &self.error {
+                o.insert("error".to_string(), Json::str(e));
+            }
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_strings_and_terminality() {
+        assert_eq!(JobState::Queued.as_str(), "queued");
+        assert!(!JobState::Queued.terminal());
+        assert!(!JobState::Running.terminal());
+        assert!(!JobState::Suspended.terminal(), "suspended jobs can resume");
+        assert!(JobState::Done.terminal());
+        assert!(JobState::Failed.terminal());
+        assert!(JobState::Cancelled.terminal());
+    }
+
+    #[test]
+    fn summary_and_detail_json_shape() {
+        let mut job = Job::new(
+            "job-000007".to_string(),
+            "acme".to_string(),
+            3,
+            SearchRequest::new().workload_named("mm1").budget(500),
+        );
+        job.state = JobState::Suspended;
+        job.checkpoint = Some(Json::Null);
+        let s = job.summary_json();
+        assert_eq!(s.get("id").and_then(Json::as_str), Some("job-000007"));
+        assert_eq!(s.get("state").and_then(Json::as_str), Some("suspended"));
+        assert_eq!(s.get("has_checkpoint").and_then(Json::as_bool), Some(true));
+        let d = job.detail_json();
+        assert!(d.get("request").is_some());
+        assert!(d.get("report").is_none());
+    }
+}

@@ -1,0 +1,38 @@
+//! The search service: a dependency-free HTTP front end over
+//! [`crate::api`].
+//!
+//! `sparsemap serve` turns the library into a long-running daemon that
+//! accepts search jobs over plain HTTP/1.1 (std [`std::net::TcpListener`]
+//! only — no framework, no TLS, loopback-oriented):
+//!
+//! | endpoint                  | meaning                                    |
+//! |---------------------------|--------------------------------------------|
+//! | `GET  /health`            | liveness probe                             |
+//! | `GET  /methods`           | [`crate::api::methods_json`] — the registry|
+//! | `POST /jobs`              | submit a [`crate::api::SearchRequest`] JSON (plus optional `tenant`, `priority`) |
+//! | `GET  /jobs`              | list all jobs (summaries)                  |
+//! | `GET  /jobs/<id>`         | one job, with the full report when done    |
+//! | `GET  /jobs/<id>/events`  | NDJSON progress stream until terminal      |
+//! | `POST /jobs/<id>/cancel`  | cancel: resumable methods suspend into a checkpoint, the rest hard-stop |
+//! | `POST /jobs/<id>/resume`  | re-queue a suspended job from its checkpoint |
+//!
+//! Jobs wait in a **priority queue** (higher `priority` first, FIFO
+//! within a priority) and run on a fixed pool of worker threads; each
+//! tenant's total submitted eval budget is capped by a **quota**
+//! (`--quota`, 429 past it). Cancelling a job whose method advertises
+//! [`crate::optimizer::MethodSpec::resumable`] suspends it through the
+//! optimizer checkpoint machinery and persists the checkpoint to
+//! `--checkpoint-dir`, so suspended jobs survive a server restart: on
+//! startup the directory is rescanned and every recorded job comes back
+//! in the `suspended` state, ready for `POST /jobs/<id>/resume`. A
+//! resumed run finishes bit-identical to one that was never interrupted
+//! (the same guarantee [`crate::api::SearchSession::run_opts`] makes).
+
+mod http;
+mod job;
+mod queue;
+mod server;
+
+pub use job::{Job, JobState};
+pub use queue::{JobQueue, QueueEntry, QuotaBook};
+pub use server::{serve, start, ServerConfig, ServiceHandle};

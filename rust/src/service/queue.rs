@@ -1,0 +1,130 @@
+//! The job queue (priority + submission order) and per-tenant budget
+//! quota accounting.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Heap entry: higher `priority` first; FIFO (lower `seq`) within a
+/// priority, so equal-priority jobs run in submission order.
+#[derive(Debug, PartialEq, Eq)]
+pub struct QueueEntry {
+    pub priority: i64,
+    pub seq: u64,
+    pub job_id: String,
+}
+
+impl Ord for QueueEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.priority.cmp(&other.priority).then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for QueueEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A max-heap of [`QueueEntry`] — the pending-job order.
+#[derive(Default)]
+pub struct JobQueue {
+    heap: BinaryHeap<QueueEntry>,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    pub fn push(&mut self, entry: QueueEntry) {
+        self.heap.push(entry);
+    }
+
+    pub fn pop(&mut self) -> Option<QueueEntry> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Per-tenant eval-budget accounting. Every accepted submission charges
+/// its full sample budget against the tenant; once a tenant's total
+/// would exceed the limit, further submissions are rejected (HTTP 429).
+/// `limit == 0` disables quotas.
+pub struct QuotaBook {
+    limit: usize,
+    spent: HashMap<String, usize>,
+}
+
+impl QuotaBook {
+    pub fn new(limit: usize) -> QuotaBook {
+        QuotaBook { limit, spent: HashMap::new() }
+    }
+
+    /// Charge `budget` evals to `tenant`, or explain why not.
+    pub fn try_charge(&mut self, tenant: &str, budget: usize) -> Result<(), String> {
+        if self.limit == 0 {
+            return Ok(());
+        }
+        let used = self.spent.entry(tenant.to_string()).or_insert(0);
+        if *used + budget > self.limit {
+            return Err(format!(
+                "tenant '{tenant}' over quota: {} of {} evals already granted, \
+                 {budget} more requested",
+                *used, self.limit
+            ));
+        }
+        *used += budget;
+        Ok(())
+    }
+
+    pub fn spent(&self, tenant: &str) -> usize {
+        self.spent.get(tenant).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(priority: i64, seq: u64) -> QueueEntry {
+        QueueEntry { priority, seq, job_id: format!("job-{seq}") }
+    }
+
+    #[test]
+    fn higher_priority_first_fifo_within() {
+        let mut q = JobQueue::new();
+        q.push(entry(0, 1));
+        q.push(entry(5, 2));
+        q.push(entry(0, 3));
+        q.push(entry(5, 4));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.seq).collect();
+        assert_eq!(order, [2, 4, 1, 3], "priority 5 first, each tier in submission order");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn quota_charges_per_tenant_and_rejects_past_limit() {
+        let mut book = QuotaBook::new(100);
+        assert!(book.try_charge("a", 60).is_ok());
+        assert!(book.try_charge("b", 90).is_ok(), "tenants are independent");
+        let err = book.try_charge("a", 60).unwrap_err();
+        assert!(err.contains("over quota"), "{err}");
+        assert_eq!(book.spent("a"), 60, "rejected charges are not booked");
+        assert!(book.try_charge("a", 40).is_ok(), "up to the limit exactly is fine");
+        assert_eq!(book.spent("a"), 100);
+    }
+
+    #[test]
+    fn zero_limit_disables_quota() {
+        let mut book = QuotaBook::new(0);
+        assert!(book.try_charge("a", usize::MAX / 2).is_ok());
+        assert_eq!(book.spent("a"), 0, "disabled quotas book nothing");
+    }
+}

@@ -1,0 +1,752 @@
+//! The service runtime: TCP listener, request routing, the worker pool
+//! that drains the job queue, and checkpoint persistence across
+//! restarts.
+//!
+//! Concurrency model: one accept thread spawns a short-lived thread per
+//! connection; a fixed pool of worker threads pops jobs off the
+//! priority queue. All state lives in one `Mutex<State>` guarded map —
+//! searches themselves run outside the lock, touching it only from the
+//! progress observer and at state transitions.
+
+use super::http;
+use super::job::{Job, JobState};
+use super::queue::{JobQueue, QueueEntry, QuotaBook};
+use crate::api::{RunOpts, SearchReport, SearchRequest};
+use crate::optimizer::{self, Checkpoint};
+use crate::search::{Progress, SearchControl};
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
+use std::io::{self, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// How the daemon runs: where to listen, how many concurrent searches,
+/// the per-tenant quota (0 = unlimited) and where suspended jobs
+/// persist (None = in-memory only, checkpoints do not survive
+/// restarts).
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub quota: usize,
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 1,
+            quota: 0,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// Everything behind the mutex: the job map, the pending queue and the
+/// quota ledger.
+struct State {
+    jobs: BTreeMap<String, Job>,
+    queue: JobQueue,
+    quotas: QuotaBook,
+    next_seq: u64,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+    checkpoint_dir: Option<PathBuf>,
+}
+
+/// A started service: the bound address plus a handle into its state,
+/// for embedding callers and tests. Threads are detached — dropping the
+/// handle does not stop the server.
+pub struct ServiceHandle {
+    pub addr: SocketAddr,
+    shared: Arc<Shared>,
+}
+
+impl ServiceHandle {
+    /// Snapshot of every tracked job's `(id, state)`, in id order.
+    pub fn job_states(&self) -> Vec<(String, JobState)> {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.iter().map(|(id, j)| (id.clone(), j.state)).collect()
+    }
+}
+
+/// Bind, rescan the checkpoint directory, spawn workers and the accept
+/// loop, and return immediately. Use `addr: "127.0.0.1:0"` to let the
+/// OS pick a free port (the handle reports the real one).
+pub fn start(cfg: ServerConfig) -> Result<ServiceHandle> {
+    let listener =
+        TcpListener::bind(&cfg.addr).map_err(|e| anyhow!("cannot bind {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    if let Some(dir) = &cfg.checkpoint_dir {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("cannot create checkpoint dir {}: {e}", dir.display()))?;
+    }
+    let mut state = State {
+        jobs: BTreeMap::new(),
+        queue: JobQueue::new(),
+        quotas: QuotaBook::new(cfg.quota),
+        next_seq: 0,
+    };
+    if let Some(dir) = &cfg.checkpoint_dir {
+        let n = rescan_checkpoints(&mut state, dir);
+        if n > 0 {
+            eprintln!("restored {n} suspended job(s) from {}", dir.display());
+        }
+    }
+    let shared = Arc::new(Shared {
+        state: Mutex::new(state),
+        cv: Condvar::new(),
+        checkpoint_dir: cfg.checkpoint_dir,
+    });
+    for _ in 0..cfg.workers.max(1) {
+        let s = Arc::clone(&shared);
+        std::thread::spawn(move || worker_loop(&s));
+    }
+    let accept_shared = Arc::clone(&shared);
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            match stream {
+                Ok(stream) => {
+                    let s = Arc::clone(&accept_shared);
+                    std::thread::spawn(move || handle_connection(&s, stream));
+                }
+                Err(e) => eprintln!("warning: accept failed: {e}"),
+            }
+        }
+    });
+    Ok(ServiceHandle { addr, shared })
+}
+
+/// [`start`], then block this thread forever. The `sparsemap serve`
+/// entry point.
+pub fn serve(cfg: ServerConfig) -> Result<()> {
+    let handle = start(cfg)?;
+    println!("sparsemap service listening on http://{}", handle.addr);
+    loop {
+        std::thread::park();
+    }
+}
+
+fn handle_connection(shared: &Arc<Shared>, stream: TcpStream) {
+    let reader_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_half);
+    let mut w = stream;
+    let req = match http::read_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = http::error_json(&mut w, 400, &format!("bad request: {e}"));
+            return;
+        }
+    };
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let result = match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["health"]) => {
+            http::respond_json(&mut w, 200, &Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        ("GET", ["methods"]) => http::respond_json(&mut w, 200, &crate::api::methods_json()),
+        ("POST", ["jobs"]) => submit_job(shared, &req.body, &mut w),
+        ("GET", ["jobs"]) => list_jobs(shared, &mut w),
+        ("GET", ["jobs", id]) => job_detail(shared, id, &mut w),
+        ("GET", ["jobs", id, "events"]) => stream_events(shared, id, &mut w),
+        ("POST", ["jobs", id, "cancel"]) => cancel_job(shared, id, &mut w),
+        ("POST", ["jobs", id, "resume"]) => resume_job(shared, id, &mut w),
+        _ => http::error_json(&mut w, 404, "no such endpoint"),
+    };
+    // A failed write means the client went away; nothing left to do.
+    let _ = result;
+}
+
+fn submit_job<W: Write>(shared: &Arc<Shared>, body: &[u8], w: &mut W) -> io::Result<()> {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return http::error_json(w, 400, "body is not UTF-8"),
+    };
+    let parsed = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return http::error_json(w, 400, &format!("bad JSON: {e}")),
+    };
+    let request = match SearchRequest::from_json(&parsed) {
+        Ok(r) => r,
+        Err(e) => return http::error_json(w, 400, &format!("bad request: {e}")),
+    };
+    // Validate eagerly so a bad workload/platform/method rejects at
+    // submission, not inside a worker thread.
+    if let Err(e) = request.clone().build() {
+        return http::error_json(w, 400, &format!("invalid request: {e}"));
+    }
+    let tenant = parsed.get("tenant").and_then(Json::as_str).unwrap_or("default").to_string();
+    let priority = parsed.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i64;
+    let summary = {
+        let mut st = shared.state.lock().unwrap();
+        if let Err(e) = st.quotas.try_charge(&tenant, request.budget) {
+            drop(st);
+            return http::error_json(w, 429, &e);
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        let id = format!("job-{seq:06}");
+        let job = Job::new(id.clone(), tenant, priority, request);
+        let summary = job.summary_json();
+        st.jobs.insert(id.clone(), job);
+        st.queue.push(QueueEntry { priority, seq, job_id: id });
+        summary
+    };
+    shared.cv.notify_all();
+    http::respond_json(w, 202, &summary)
+}
+
+fn list_jobs<W: Write>(shared: &Arc<Shared>, w: &mut W) -> io::Result<()> {
+    let rows = {
+        let st = shared.state.lock().unwrap();
+        Json::Arr(st.jobs.values().map(Job::summary_json).collect())
+    };
+    http::respond_json(w, 200, &rows)
+}
+
+fn job_detail<W: Write>(shared: &Arc<Shared>, id: &str, w: &mut W) -> io::Result<()> {
+    let detail = {
+        let st = shared.state.lock().unwrap();
+        st.jobs.get(id).map(Job::detail_json)
+    };
+    match detail {
+        Some(d) => http::respond_json(w, 200, &d),
+        None => http::error_json(w, 404, "no such job"),
+    }
+}
+
+fn cancel_job<W: Write>(shared: &Arc<Shared>, id: &str, w: &mut W) -> io::Result<()> {
+    let mut st = shared.state.lock().unwrap();
+    let Some(job) = st.jobs.get_mut(id) else {
+        drop(st);
+        return http::error_json(w, 404, "no such job");
+    };
+    match job.state {
+        JobState::Queued => {
+            job.state = JobState::Cancelled;
+            job.events.push(event("cancelled", vec![]));
+            job.events_done = true;
+            let summary = job.summary_json();
+            drop(st);
+            shared.cv.notify_all();
+            http::respond_json(w, 202, &summary)
+        }
+        JobState::Running => {
+            // Resumable methods suspend into a checkpoint; the rest
+            // hard-stop through the session's cancel token.
+            let resumable =
+                optimizer::resolve(&job.request.method).map(|s| s.resumable).unwrap_or(false);
+            if resumable {
+                if let Some(f) = &job.suspend {
+                    f.store(true, Ordering::SeqCst);
+                }
+            } else if let Some(f) = &job.cancel {
+                f.store(true, Ordering::SeqCst);
+            }
+            let summary = job.summary_json();
+            drop(st);
+            http::respond_json(w, 202, &summary)
+        }
+        s => {
+            let msg = format!("job is {}, cannot cancel", s.as_str());
+            drop(st);
+            http::error_json(w, 409, &msg)
+        }
+    }
+}
+
+fn resume_job<W: Write>(shared: &Arc<Shared>, id: &str, w: &mut W) -> io::Result<()> {
+    let mut st = shared.state.lock().unwrap();
+    let Some(job) = st.jobs.get_mut(id) else {
+        drop(st);
+        return http::error_json(w, 404, "no such job");
+    };
+    if job.state != JobState::Suspended {
+        let msg = format!("job is {}, only suspended jobs resume", job.state.as_str());
+        drop(st);
+        return http::error_json(w, 409, &msg);
+    }
+    if job.checkpoint.is_none() {
+        drop(st);
+        return http::error_json(w, 409, "suspended job has no checkpoint");
+    }
+    job.state = JobState::Queued;
+    job.events_done = false;
+    job.events.push(event("resubmitted", vec![]));
+    let priority = job.priority;
+    let summary = job.summary_json();
+    let seq = st.next_seq;
+    st.next_seq += 1;
+    st.queue.push(QueueEntry { priority, seq, job_id: id.to_string() });
+    drop(st);
+    shared.cv.notify_all();
+    http::respond_json(w, 202, &summary)
+}
+
+fn stream_events<W: Write>(shared: &Arc<Shared>, id: &str, w: &mut W) -> io::Result<()> {
+    {
+        let st = shared.state.lock().unwrap();
+        if !st.jobs.contains_key(id) {
+            drop(st);
+            return http::error_json(w, 404, "no such job");
+        }
+    }
+    http::start_ndjson(w)?;
+    let mut cursor = 0usize;
+    loop {
+        let (lines, done) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                let (len, done) = match st.jobs.get(id) {
+                    Some(j) => (j.events.len(), j.events_done),
+                    None => return Ok(()),
+                };
+                if len > cursor || done {
+                    break (st.jobs[id].events[cursor..].to_vec(), done);
+                }
+                let (guard, _) = shared.cv.wait_timeout(st, Duration::from_secs(30)).unwrap();
+                st = guard;
+            }
+        };
+        for line in &lines {
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        w.flush()?;
+        cursor += lines.len();
+        if done {
+            return Ok(());
+        }
+    }
+}
+
+/// Worker: pop the highest-priority queued job, skipping stale entries
+/// (jobs cancelled while still queued), and run it.
+fn worker_loop(shared: &Arc<Shared>) {
+    loop {
+        let job_id = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                match st.queue.pop() {
+                    Some(e) => {
+                        let runnable = st
+                            .jobs
+                            .get(&e.job_id)
+                            .is_some_and(|j| j.state == JobState::Queued);
+                        if runnable {
+                            break e.job_id;
+                        }
+                    }
+                    None => st = shared.cv.wait(st).unwrap(),
+                }
+            }
+        };
+        run_job(shared, &job_id);
+    }
+}
+
+enum DiskAction {
+    Write(Json),
+    Remove,
+}
+
+fn run_job(shared: &Arc<Shared>, id: &str) {
+    // The suspend flag is installed under the same lock that marks the
+    // job Running, so a cancel can never observe Running without it.
+    let suspend = Arc::new(AtomicBool::new(false));
+    let (request, resume_json) = {
+        let mut st = shared.state.lock().unwrap();
+        let Some(job) = st.jobs.get_mut(id) else { return };
+        if job.state != JobState::Queued {
+            return;
+        }
+        job.state = JobState::Running;
+        job.suspend = Some(suspend.clone());
+        job.events.push(event("started", vec![("method", Json::str(&job.request.method))]));
+        (job.request.clone(), job.checkpoint.take())
+    };
+    shared.cv.notify_all();
+    let result = execute(shared, id, request, resume_json, suspend);
+    let mut st = shared.state.lock().unwrap();
+    let Some(job) = st.jobs.get_mut(id) else { return };
+    let was_cancelled = job.cancel.as_ref().is_some_and(|f| f.load(Ordering::SeqCst));
+    let disk;
+    match result {
+        Ok(report) => {
+            if let Some(cp) = &report.checkpoint {
+                job.checkpoint = Some(cp.clone());
+                job.state = JobState::Suspended;
+                job.events.push(event(
+                    "suspended",
+                    vec![("evals", Json::num(report.outcome.evals as f64))],
+                ));
+                disk = Some(DiskAction::Write(job_file_json(job)));
+            } else if was_cancelled {
+                job.state = JobState::Cancelled;
+                job.events.push(event("cancelled", vec![]));
+                disk = Some(DiskAction::Remove);
+            } else {
+                job.state = JobState::Done;
+                job.events.push(event(
+                    "done",
+                    vec![("best_edp", finite_num(report.outcome.best_edp))],
+                ));
+                disk = Some(DiskAction::Remove);
+            }
+            job.report = Some(report.to_json());
+        }
+        Err(e) => {
+            job.state = JobState::Failed;
+            job.error = Some(e.to_string());
+            job.events.push(event("failed", vec![("error", Json::str(&e.to_string()))]));
+            disk = Some(DiskAction::Remove);
+        }
+    }
+    job.cancel = None;
+    job.suspend = None;
+    job.events_done = true;
+    drop(st);
+    shared.cv.notify_all();
+    apply_disk(shared, id, disk);
+}
+
+/// Build the session, wire its cancel token and the suspend flag into
+/// the job, attach a progress observer that buffers NDJSON events, and
+/// run — resuming from the taken checkpoint when there is one.
+fn execute(
+    shared: &Arc<Shared>,
+    id: &str,
+    request: SearchRequest,
+    resume_json: Option<Json>,
+    suspend: Arc<AtomicBool>,
+) -> Result<SearchReport> {
+    let session = request.build()?;
+    let cancel = session.cancel_token();
+    {
+        let mut st = shared.state.lock().unwrap();
+        if let Some(job) = st.jobs.get_mut(id) {
+            job.cancel = Some(cancel);
+        }
+    }
+    let resume = match &resume_json {
+        Some(j) => Some(Checkpoint::from_json(j)?),
+        None => None,
+    };
+    let observer_shared = Arc::clone(shared);
+    let observer_id = id.to_string();
+    let observer = Box::new(move |p: &Progress| {
+        let line = progress_event(p);
+        {
+            let mut st = observer_shared.state.lock().unwrap();
+            if let Some(job) = st.jobs.get_mut(&observer_id) {
+                job.events.push(line);
+            }
+        }
+        observer_shared.cv.notify_all();
+        SearchControl::Continue
+    });
+    session.run_opts(RunOpts { observer: Some(observer), suspend: Some(suspend), resume })
+}
+
+fn event(kind: &str, fields: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("type", Json::str(kind))];
+    all.extend(fields);
+    Json::obj(all).dumps()
+}
+
+fn finite_num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn progress_event(p: &Progress) -> String {
+    event(
+        "progress",
+        vec![
+            ("evals", Json::num(p.evals as f64)),
+            ("valid_evals", Json::num(p.valid_evals as f64)),
+            ("cache_hits", Json::num(p.cache_hits as f64)),
+            ("best_edp", finite_num(p.best_edp)),
+            ("budget", Json::num(p.budget as f64)),
+        ],
+    )
+}
+
+const JOB_FILE_SCHEMA: &str = "sparsemap.service_job.v1";
+
+fn job_file_json(job: &Job) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(JOB_FILE_SCHEMA)),
+        ("id", Json::str(&job.id)),
+        ("tenant", Json::str(&job.tenant)),
+        ("priority", Json::num(job.priority as f64)),
+        ("request", job.request.to_json()),
+        ("checkpoint", job.checkpoint.clone().unwrap_or(Json::Null)),
+    ])
+}
+
+fn apply_disk(shared: &Shared, id: &str, action: Option<DiskAction>) {
+    let (Some(dir), Some(action)) = (&shared.checkpoint_dir, action) else {
+        return;
+    };
+    let path = dir.join(format!("{id}.json"));
+    match action {
+        DiskAction::Write(j) => {
+            if let Err(e) = std::fs::write(&path, format!("{}\n", j.pretty())) {
+                eprintln!("warning: could not persist checkpoint for {id}: {e}");
+            }
+        }
+        DiskAction::Remove => {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+/// Reload every suspended job recorded in `dir`. Unreadable or
+/// unrecognized files are skipped with a warning, never fatal.
+fn rescan_checkpoints(state: &mut State, dir: &Path) -> usize {
+    let mut paths: Vec<PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("json"))
+            .collect(),
+        Err(e) => {
+            eprintln!("warning: cannot read checkpoint dir {}: {e}", dir.display());
+            return 0;
+        }
+    };
+    paths.sort();
+    let mut loaded = 0;
+    for path in paths {
+        match parse_job_file(&path) {
+            Ok(job) => {
+                if let Some(n) = job.id.strip_prefix("job-").and_then(|s| s.parse::<u64>().ok()) {
+                    state.next_seq = state.next_seq.max(n + 1);
+                }
+                // Re-book the quota the job was granted originally; a
+                // shrunken limit must not strand a restored job.
+                let _ = state.quotas.try_charge(&job.tenant, job.request.budget);
+                state.jobs.insert(job.id.clone(), job);
+                loaded += 1;
+            }
+            Err(e) => eprintln!("warning: skipping checkpoint file {}: {e}", path.display()),
+        }
+    }
+    loaded
+}
+
+fn parse_job_file(path: &Path) -> Result<Job> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("bad JSON: {e}"))?;
+    ensure!(
+        j.get("schema").and_then(Json::as_str) == Some(JOB_FILE_SCHEMA),
+        "not a {JOB_FILE_SCHEMA} file"
+    );
+    let id = j
+        .get("id")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing id"))?
+        .to_string();
+    let tenant = j.get("tenant").and_then(Json::as_str).unwrap_or("default").to_string();
+    let priority = j.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i64;
+    let request =
+        SearchRequest::from_json(j.get("request").ok_or_else(|| anyhow!("missing request"))?)?;
+    let checkpoint = j.get("checkpoint").cloned().ok_or_else(|| anyhow!("missing checkpoint"))?;
+    ensure!(!matches!(checkpoint, Json::Null), "null checkpoint");
+    let mut job = Job::new(id, tenant, priority, request);
+    job.state = JobState::Suspended;
+    job.events.push(event("restored", vec![]));
+    job.events_done = true;
+    job.checkpoint = Some(checkpoint);
+    Ok(job)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn start_on_loopback(workers: usize, quota: usize, dir: Option<PathBuf>) -> ServiceHandle {
+        start(ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers,
+            quota,
+            checkpoint_dir: dir,
+        })
+        .unwrap()
+    }
+
+    /// Raw one-shot HTTP exchange: returns (status, body).
+    fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let msg = format!(
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(msg.as_bytes()).unwrap();
+        let mut text = String::new();
+        stream.read_to_string(&mut text).unwrap();
+        let status: u16 = text.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let body = match text.find("\r\n\r\n") {
+            Some(i) => text[i + 4..].to_string(),
+            None => String::new(),
+        };
+        (status, body)
+    }
+
+    fn submit_body(method: &str, budget: usize, tenant: &str, priority: i64) -> String {
+        let req = SearchRequest::new()
+            .workload_named("mm1")
+            .platform_named("mobile")
+            .method(method)
+            .budget(budget)
+            .seed(7);
+        let mut j = req.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("tenant".to_string(), Json::str(tenant));
+            o.insert("priority".to_string(), Json::num(priority as f64));
+        }
+        j.dumps()
+    }
+
+    fn poll_state(addr: SocketAddr, id: &str, want: &str, tries: usize) -> Json {
+        for _ in 0..tries {
+            let (s, b) = request(addr, "GET", &format!("/jobs/{id}"), "");
+            assert_eq!(s, 200, "{b}");
+            let j = Json::parse(&b).unwrap();
+            let state = j.get("state").and_then(Json::as_str).unwrap().to_string();
+            if state == want {
+                return j;
+            }
+            assert_ne!(state, "failed", "job failed: {b}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        panic!("job {id} never reached state '{want}'");
+    }
+
+    #[test]
+    fn submit_runs_to_done_and_streams_events() {
+        let handle = start_on_loopback(1, 0, None);
+        let addr = handle.addr;
+        let (s, b) = request(addr, "GET", "/health", "");
+        assert_eq!(s, 200);
+        assert!(b.contains("true"), "{b}");
+        let (s, b) = request(addr, "GET", "/methods", "");
+        assert_eq!(s, 200);
+        assert!(b.contains("resumable"), "{b}");
+        let (s, b) = request(addr, "POST", "/jobs", &submit_body("random", 60, "acme", 2));
+        assert_eq!(s, 202, "{b}");
+        let id = Json::parse(&b).unwrap().get("id").and_then(Json::as_str).unwrap().to_string();
+        let detail = poll_state(addr, &id, "done", 500);
+        let report = detail.get("report").expect("done job carries its report");
+        let evals = report.get("outcome").and_then(|o| o.get("evals")).and_then(Json::as_u64);
+        assert_eq!(evals, Some(60));
+        // The events stream replays the whole buffer and terminates;
+        // every line is standalone JSON.
+        let (s, b) = request(addr, "GET", &format!("/jobs/{id}/events"), "");
+        assert_eq!(s, 200);
+        let kinds: Vec<String> = b
+            .lines()
+            .map(|l| {
+                Json::parse(l).unwrap().get("type").and_then(Json::as_str).unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(kinds.first().map(String::as_str), Some("started"), "{kinds:?}");
+        assert_eq!(kinds.last().map(String::as_str), Some("done"), "{kinds:?}");
+        assert!(kinds.iter().any(|k| k == "progress"), "{kinds:?}");
+        assert_eq!(handle.job_states(), vec![(id, JobState::Done)]);
+    }
+
+    #[test]
+    fn quota_rejects_over_limit_and_bad_requests_400() {
+        let handle = start_on_loopback(1, 100, None);
+        let addr = handle.addr;
+        let (s, _) = request(addr, "POST", "/jobs", &submit_body("random", 80, "acme", 0));
+        assert_eq!(s, 202);
+        let (s, b) = request(addr, "POST", "/jobs", &submit_body("random", 80, "acme", 0));
+        assert_eq!(s, 429, "{b}");
+        assert!(b.contains("over quota"), "{b}");
+        // Other tenants have their own ledger.
+        let (s, _) = request(addr, "POST", "/jobs", &submit_body("random", 80, "other", 0));
+        assert_eq!(s, 202);
+        let (s, b) = request(addr, "POST", "/jobs", "{not json");
+        assert_eq!(s, 400, "{b}");
+        let (s, b) = request(addr, "POST", "/jobs", &submit_body("no-such-method", 10, "t", 0));
+        assert_eq!(s, 400, "{b}");
+        let (s, b) = request(addr, "GET", "/jobs", "");
+        assert_eq!(s, 200);
+        assert_eq!(Json::parse(&b).unwrap().as_arr().unwrap().len(), 2);
+        let (s, _) = request(addr, "GET", "/nope", "");
+        assert_eq!(s, 404);
+        let (s, _) = request(addr, "GET", "/jobs/job-999999", "");
+        assert_eq!(s, 404);
+        let (s, _) = request(addr, "POST", "/jobs/job-999999/cancel", "");
+        assert_eq!(s, 404);
+    }
+
+    #[test]
+    fn cancel_suspends_resume_completes_across_restart() {
+        let dir = std::env::temp_dir()
+            .join(format!("sparsemap-service-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let handle = start_on_loopback(1, 0, Some(dir.clone()));
+        let addr = handle.addr;
+        // A budget this size takes long enough that the cancel below
+        // lands mid-run with huge margin.
+        let budget = 12_000;
+        let (s, b) = request(addr, "POST", "/jobs", &submit_body("sparsemap", budget, "t", 0));
+        assert_eq!(s, 202, "{b}");
+        let id = Json::parse(&b).unwrap().get("id").and_then(Json::as_str).unwrap().to_string();
+        poll_state(addr, &id, "running", 500);
+        let (s, _) = request(addr, "POST", &format!("/jobs/{id}/cancel"), "");
+        assert_eq!(s, 202);
+        let detail = poll_state(addr, &id, "suspended", 1500);
+        assert_eq!(detail.get("has_checkpoint").and_then(Json::as_bool), Some(true));
+        let partial = detail.get("report").expect("suspension stores the partial report");
+        let partial_evals =
+            partial.get("outcome").and_then(|o| o.get("evals")).and_then(Json::as_u64).unwrap();
+        assert!(partial_evals < budget as u64, "suspended before exhausting the budget");
+        let file = dir.join(format!("{id}.json"));
+        assert!(file.exists(), "suspension persisted to {}", file.display());
+        // Cancelling a suspended job is a conflict, resuming it is not.
+        let (s, _) = request(addr, "POST", &format!("/jobs/{id}/cancel"), "");
+        assert_eq!(s, 409);
+
+        // A second server on the same checkpoint dir — a restart — sees
+        // the suspended job and finishes it from the checkpoint.
+        let restarted = start_on_loopback(1, 0, Some(dir.clone()));
+        assert_eq!(restarted.job_states(), vec![(id.clone(), JobState::Suspended)]);
+        let (s, b) = request(restarted.addr, "POST", &format!("/jobs/{id}/resume"), "");
+        assert_eq!(s, 202, "{b}");
+        let detail = poll_state(restarted.addr, &id, "done", 3000);
+        let report = detail.get("report").unwrap();
+        let evals =
+            report.get("outcome").and_then(|o| o.get("evals")).and_then(Json::as_u64).unwrap();
+        assert_eq!(evals, budget as u64, "resumed run finishes the full budget");
+        assert!(
+            report.get("resumed_from").and_then(Json::as_u64).is_some(),
+            "final report records the resume point"
+        );
+        for _ in 0..100 {
+            if !file.exists() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(!file.exists(), "finished job's checkpoint file is removed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -158,6 +158,25 @@ impl Json {
     }
 }
 
+/// Bit-exact f64 encoding for checkpoints: the IEEE-754 bit pattern as a
+/// 16-hex-digit string. `Json::Num` cannot represent INFINITY/NaN (best-EDP
+/// fields start at `f64::INFINITY`) and a decimal round-trip through the
+/// writer is not guaranteed bit-identical, so checkpoint floats travel as
+/// bits and decode with [`f64_from_bits`].
+pub fn f64_bits(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+/// Decode a float written by [`f64_bits`]. `None` for anything that is not
+/// a 16-hex-digit string.
+pub fn f64_from_bits(j: &Json) -> Option<f64> {
+    let s = j.as_str()?;
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
 fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(n) = indent {
         out.push('\n');
@@ -428,6 +447,20 @@ mod tests {
             ("name", Json::str("t")),
         ]);
         assert_eq!(Json::parse(&v.pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn f64_bits_round_trip() {
+        for x in [0.0, -0.0, 1.5, f64::INFINITY, f64::NEG_INFINITY, 1e-308, 3.7e42] {
+            let j = f64_bits(x);
+            let back = f64_from_bits(&j).unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "x={x}");
+        }
+        // NaN round-trips by bit pattern even though NaN != NaN.
+        let j = f64_bits(f64::NAN);
+        assert_eq!(f64_from_bits(&j).unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(f64_from_bits(&Json::str("zz")), None);
+        assert_eq!(f64_from_bits(&Json::num(1.0)), None);
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Suspend/resume parity across every resumable method.
+//!
+//! For each method whose [`sparsemap::optimizer::MethodSpec`] advertises
+//! `resumable`, this suite suspends a run at roughly half its budget,
+//! round-trips the checkpoint through its JSON wire format, resumes in a
+//! completely fresh session, and requires the final [`Outcome`] to be
+//! **bit-identical** to an uninterrupted run — at 1 and at 4 threads.
+
+use sparsemap::api::{RunOpts, SearchReport, SearchRequest};
+use sparsemap::optimizer::Checkpoint;
+use sparsemap::search::{Outcome, Progress, SearchControl};
+use sparsemap::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const BUDGET: usize = 400;
+
+fn req(method: &str, threads: usize) -> SearchRequest {
+    SearchRequest::new()
+        .workload_named("mm1")
+        .platform_named("mobile")
+        .method(method)
+        .budget(BUDGET)
+        .seed(23)
+        .threads(threads)
+}
+
+fn run_full(method: &str, threads: usize) -> SearchReport {
+    req(method, threads).build().unwrap().run_opts(RunOpts::default()).unwrap()
+}
+
+/// Suspend at ~half budget, round-trip the checkpoint, resume fresh.
+fn run_interrupted(method: &str, threads: usize) -> SearchReport {
+    let flag = Arc::new(AtomicBool::new(false));
+    let observer_flag = Arc::clone(&flag);
+    let observer = Box::new(move |p: &Progress| {
+        if p.evals >= BUDGET / 2 {
+            observer_flag.store(true, Ordering::SeqCst);
+        }
+        SearchControl::Continue
+    });
+    let half = req(method, threads)
+        .build()
+        .unwrap()
+        .run_opts(RunOpts {
+            observer: Some(observer),
+            suspend: Some(flag),
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(half.stopped_early, "{method}: a raised suspend flag marks the report");
+    assert!(
+        half.outcome.evals < BUDGET,
+        "{method}: suspended run must stop short of the budget, spent {}",
+        half.outcome.evals
+    );
+    let cp_json = half
+        .checkpoint
+        .as_ref()
+        .unwrap_or_else(|| panic!("{method}: resumable method must emit a checkpoint"));
+    let wire = Json::parse(&cp_json.dumps()).unwrap();
+    let cp = Checkpoint::from_json(&wire).unwrap();
+    let resumed = req(method, threads)
+        .build()
+        .unwrap()
+        .run_opts(RunOpts { resume: Some(cp), ..Default::default() })
+        .unwrap();
+    assert!(!resumed.stopped_early, "{method}: resumed run finishes normally");
+    assert!(resumed.checkpoint.is_none(), "{method}: finished run carries no checkpoint");
+    assert_eq!(
+        resumed.resumed_from,
+        Some(half.outcome.evals),
+        "{method}: report records where the resume picked up"
+    );
+    resumed
+}
+
+fn assert_outcomes_identical(method: &str, threads: usize, full: &Outcome, resumed: &Outcome) {
+    let tag = format!("{method} @ {threads} thread(s)");
+    assert_eq!(full.evals, resumed.evals, "{tag}: evals");
+    assert_eq!(full.valid_evals, resumed.valid_evals, "{tag}: valid_evals");
+    assert_eq!(
+        full.best_edp.to_bits(),
+        resumed.best_edp.to_bits(),
+        "{tag}: best EDP must match bit for bit ({} vs {})",
+        full.best_edp,
+        resumed.best_edp
+    );
+    assert_eq!(full.best_genome, resumed.best_genome, "{tag}: best genome");
+    assert_eq!(full.curve.len(), resumed.curve.len(), "{tag}: curve length");
+    for ((xe, ye), (xr, yr)) in full.curve.iter().zip(&resumed.curve) {
+        assert_eq!(xe, xr, "{tag}: curve x");
+        assert_eq!(ye.to_bits(), yr.to_bits(), "{tag}: curve y bits");
+    }
+}
+
+/// The method list comes from the registry itself, so a new resumable
+/// method is covered here automatically.
+fn check_all(threads: usize) {
+    let resumable: Vec<&str> =
+        sparsemap::api::methods().iter().filter(|m| m.resumable).map(|m| m.name).collect();
+    assert!(!resumable.is_empty());
+    for method in resumable {
+        let full = run_full(method, threads);
+        let resumed = run_interrupted(method, threads);
+        assert_outcomes_identical(method, threads, &full.outcome, &resumed.outcome);
+    }
+}
+
+#[test]
+fn every_resumable_method_resumes_bit_identically_at_1_thread() {
+    check_all(1);
+}
+
+#[test]
+fn every_resumable_method_resumes_bit_identically_at_4_threads() {
+    check_all(4);
+}
+
+/// The portfolio's per-member ledgers stay exact across suspend/resume:
+/// no budget is re-debited for replayed prefixes, and member evals still
+/// sum to the outcome's total.
+#[test]
+fn resumed_portfolio_member_evals_sum_exactly() {
+    let full = run_full("portfolio", 1);
+    let full_sum: usize = full.outcome.members.iter().map(|m| m.evals).sum();
+    assert_eq!(full_sum, full.outcome.evals, "uninterrupted: members sum to the total");
+    let resumed = run_interrupted("portfolio", 1);
+    let resumed_sum: usize = resumed.outcome.members.iter().map(|m| m.evals).sum();
+    assert_eq!(resumed_sum, resumed.outcome.evals, "resumed: members sum to the total");
+    assert_eq!(resumed.outcome.evals, BUDGET, "the full budget was spent exactly once");
+}
