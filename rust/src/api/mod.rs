@@ -58,7 +58,7 @@ mod request;
 mod session;
 
 pub use report::{SearchReport, REPORT_SCHEMA, REPORT_SCHEMA_V1};
-pub use request::{PlatformSel, SearchRequest, WorkloadSel};
+pub use request::{PlatformSel, SearchRequest, WarmStart, WorkloadSel};
 pub use session::{RunOpts, SearchSession};
 
 use crate::optimizer::MethodSpec;

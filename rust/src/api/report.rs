@@ -70,6 +70,19 @@ impl SearchReport {
         &self.outcome.members
     }
 
+    /// How many design-memory genomes seeded this run's initial
+    /// population (0 unless the request carried a `warm_start` block and
+    /// the store held usable neighbours — see [`crate::memory`]).
+    pub fn memory_hits(&self) -> usize {
+        self.outcome.memory_hits
+    }
+
+    /// Scenario tags the warm-start seeds came from, nearest first
+    /// (empty when warm-start is off).
+    pub fn seeded_from(&self) -> &[String] {
+        &self.outcome.seeded_from
+    }
+
     pub fn into_outcome(self) -> Outcome {
         self.outcome
     }

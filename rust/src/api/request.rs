@@ -46,6 +46,76 @@ pub enum PlatformSel {
     Custom(Platform),
 }
 
+/// Warm-start configuration: seed part of the initial population from a
+/// [`crate::memory::MemoryStore`] of prior elite designs. Off by default
+/// (`SearchRequest::warm_start` is `None`), and **omitted from the wire
+/// when unset** so legacy request JSON stays byte-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WarmStart {
+    /// Path to the memory store file. `None` means "use the store the
+    /// host supplies" — the service injects its shared store through
+    /// [`super::RunOpts::memory`]; a standalone run without either is a
+    /// build-time error.
+    pub store: Option<String>,
+    /// Fraction of the initial population eligible for memory seeds,
+    /// in `(0, 1]`.
+    pub fraction: f64,
+    /// How many nearest prior scenarios to consult.
+    pub k: usize,
+}
+
+impl Default for WarmStart {
+    fn default() -> Self {
+        WarmStart { store: None, fraction: 0.25, k: 8 }
+    }
+}
+
+impl WarmStart {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.fraction.is_finite() && self.fraction > 0.0 && self.fraction <= 1.0,
+            "warm_start fraction must be in (0, 1], got {}",
+            self.fraction
+        );
+        anyhow::ensure!(self.k >= 1, "warm_start k must be >= 1");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("fraction", Json::num(self.fraction)),
+            ("k", Json::num(self.k as f64)),
+        ];
+        if let Some(path) = &self.store {
+            fields.insert(0, ("store", Json::str(path)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<WarmStart> {
+        anyhow::ensure!(j.as_obj().is_some(), "request field 'warm_start' must be a JSON object");
+        let mut ws = WarmStart::default();
+        if let Some(s) = j.get("store") {
+            ws.store = Some(
+                s.as_str()
+                    .ok_or_else(|| anyhow!("warm_start field 'store' must be a string path"))?
+                    .to_string(),
+            );
+        }
+        if let Some(f) = j.get("fraction") {
+            ws.fraction = f
+                .as_f64()
+                .ok_or_else(|| anyhow!("warm_start field 'fraction' must be a number"))?;
+        }
+        if let Some(k) = j.get("k") {
+            ws.k = k.as_u64().ok_or_else(|| anyhow!("warm_start field 'k' must be an integer"))?
+                as usize;
+        }
+        ws.validate()?;
+        Ok(ws)
+    }
+}
+
 /// One search arm: what to search (workload × platform), how (method),
 /// and with which resources (budget, seed, threads, backend, cache).
 ///
@@ -90,6 +160,11 @@ pub struct SearchRequest {
     pub use_pjrt: bool,
     /// Memoize repeated genomes (on by default; results never change).
     pub cache: bool,
+    /// Seed the initial population from a design-memory store of prior
+    /// elite designs ([`crate::memory`]). `None` (the default) reads and
+    /// writes nothing and keeps trajectories bit-identical to a build
+    /// without the memory subsystem.
+    pub warm_start: Option<WarmStart>,
 }
 
 impl Default for SearchRequest {
@@ -104,6 +179,7 @@ impl Default for SearchRequest {
             threads: 1,
             use_pjrt: false,
             cache: true,
+            warm_start: None,
         }
     }
 }
@@ -175,6 +251,13 @@ impl SearchRequest {
         self
     }
 
+    /// Enable design-memory warm-starting (validated at
+    /// [`SearchRequest::build`]).
+    pub fn warm_start(mut self, ws: WarmStart) -> Self {
+        self.warm_start = Some(ws);
+        self
+    }
+
     /// Resolve the selectors into concrete, validated values.
     pub fn resolve(&self) -> Result<(Workload, Platform)> {
         let workload = match &self.workload {
@@ -231,6 +314,12 @@ impl SearchRequest {
                 map.insert("method_opts".to_string(), self.method_opts.clone());
             }
         }
+        // Same discipline for warm_start: unset stays off the wire.
+        if let Some(ws) = &self.warm_start {
+            if let Json::Obj(map) = &mut j {
+                map.insert("warm_start".to_string(), ws.to_json());
+            }
+        }
         j
     }
 
@@ -283,6 +372,9 @@ impl SearchRequest {
         if let Some(c) = j.get("cache") {
             req.cache =
                 c.as_bool().ok_or_else(|| anyhow!("request field 'cache' must be a bool"))?;
+        }
+        if let Some(ws) = j.get("warm_start") {
+            req.warm_start = Some(WarmStart::from_json(ws)?);
         }
         Ok(req)
     }
@@ -371,6 +463,33 @@ mod tests {
         // Non-object method_opts is a parse-time error.
         let bad = Json::parse(r#"{"workload": "mm1", "method_opts": [1]}"#).unwrap();
         assert!(SearchRequest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn warm_start_round_trips_and_unset_stays_off_the_wire() {
+        let ws = WarmStart { store: Some("/tmp/mem.bin".into()), fraction: 0.5, k: 4 };
+        let r = SearchRequest::new().workload_named("mm1").warm_start(ws.clone());
+        let j = Json::parse(&r.to_json().dumps()).unwrap();
+        let r2 = SearchRequest::from_json(&j).unwrap();
+        assert_eq!(r2.warm_start, Some(ws));
+        assert_eq!(r2, r);
+        // Unset warm-start is not serialized at all (legacy JSON
+        // byte-compatibility, same rule as method_opts).
+        let plain = SearchRequest::new().workload_named("mm1");
+        assert!(!plain.to_json().dumps().contains("warm_start"));
+        // Defaults fill absent sub-fields.
+        let min = Json::parse(r#"{"workload": "mm1", "warm_start": {}}"#).unwrap();
+        let parsed = SearchRequest::from_json(&min).unwrap().warm_start.unwrap();
+        assert_eq!(parsed, WarmStart::default());
+        // Out-of-range knobs are parse-time errors.
+        for bad in [
+            r#"{"warm_start": {"fraction": 0.0}}"#,
+            r#"{"warm_start": {"fraction": 1.5}}"#,
+            r#"{"warm_start": {"k": 0}}"#,
+            r#"{"warm_start": [1]}"#,
+        ] {
+            assert!(SearchRequest::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -3,13 +3,14 @@
 use super::report::SearchReport;
 use super::request::SearchRequest;
 use crate::arch::Platform;
+use crate::memory::MemoryStore;
 use crate::optimizer::{self, Checkpoint};
 use crate::search::{Backend, EvalContext, SearchObserver};
 use crate::util::threadpool::ThreadPool;
 use crate::workload::Workload;
 use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Options for [`SearchSession::run_opts`] — the one run entry point.
 /// Every field defaults to off, so `RunOpts::default()` is a plain
@@ -30,6 +31,11 @@ pub struct RunOpts {
     /// (same method and budget; the evaluation ledger and the
     /// optimizer's own state are both restored).
     pub resume: Option<Checkpoint>,
+    /// A host-supplied design-memory store for warm-starting (the
+    /// service shares one across jobs this way). Only consulted when the
+    /// request carries a `warm_start` block; takes precedence over the
+    /// block's own `store` path.
+    pub memory: Option<Arc<Mutex<MemoryStore>>>,
 }
 
 /// A validated search arm. Created by [`SearchRequest::build`]; run with
@@ -54,6 +60,9 @@ impl SearchSession {
         // member_opts entries that match none of its members — so every
         // bad request fails here, not mid-run.
         optimizer::resolve(&request.method)?.build(&request.method_opts)?;
+        if let Some(ws) = &request.warm_start {
+            ws.validate()?;
+        }
         let (workload, platform) = request.resolve()?;
         Ok(SearchSession {
             request,
@@ -159,6 +168,47 @@ impl SearchSession {
     pub fn run_opts(self, opts: RunOpts) -> Result<SearchReport> {
         let spec = optimizer::resolve(&self.request.method)?;
         let mut opt = spec.build(&self.request.method_opts)?;
+
+        // Warm-start: pull the k nearest prior scenarios out of the
+        // design memory, re-validate their genomes against *this*
+        // scenario's genome spec, and offer them to the optimizer before
+        // it runs. A missing store file is an empty store (zero hits, run
+        // proceeds cold) — only having no store *configured at all* is an
+        // error, since the caller explicitly asked to warm-start.
+        let mut memory_hits = 0usize;
+        let mut seeded_from: Vec<String> = Vec::new();
+        if let Some(ws) = &self.request.warm_start {
+            ws.validate()?;
+            let gspec = crate::genome::GenomeSpec::for_workload(&self.workload);
+            let pull = |store: &MemoryStore| {
+                let hits = store.seed(&self.workload, &self.platform, ws.k);
+                let genomes = MemoryStore::validated_seed_genomes(&hits, &gspec);
+                let mut tags: Vec<String> = Vec::new();
+                for h in &hits {
+                    if h.genome.len() == gspec.len() && !tags.contains(&h.tag) {
+                        tags.push(h.tag.clone());
+                    }
+                }
+                (genomes, tags)
+            };
+            let (genomes, tags) = if let Some(shared) = &opts.memory {
+                let store = shared.lock().unwrap_or_else(|e| e.into_inner());
+                pull(&store)
+            } else if let Some(path) = &ws.store {
+                pull(&MemoryStore::open(path)?)
+            } else {
+                anyhow::bail!(
+                    "warm_start has no store: set warm_start.store, or run through a host \
+                     that supplies one (the service's --memory-store, or the CLI's --memory)"
+                );
+            };
+            memory_hits = genomes.len();
+            seeded_from = tags;
+            if !genomes.is_empty() {
+                opt.warm_start(&genomes, ws.fraction);
+            }
+        }
+
         let mut ctx = self.make_context(opts.observer);
         ctx.set_suspend_flag(opts.suspend.clone());
         let mut resumed_from = None;
@@ -199,6 +249,8 @@ impl SearchSession {
         let stopped_early = self.stop.load(Ordering::SeqCst) || suspended;
         let mut outcome = ctx.outcome(spec.name);
         opt.annotate(&mut outcome);
+        outcome.memory_hits = memory_hits;
+        outcome.seeded_from = seeded_from;
         Ok(SearchReport {
             request: self.request,
             outcome,
@@ -313,7 +365,7 @@ mod tests {
                     SearchControl::Continue
                 })),
                 suspend: Some(Arc::clone(&flag)),
-                resume: None,
+                ..Default::default()
             })
             .unwrap();
         assert!(half.stopped_early, "a suspended run is an early stop");

@@ -119,17 +119,45 @@ struct EsState {
 pub struct EsOpt {
     cfg: EsConfig,
     st: Option<EsState>,
+    /// Design-memory seed genomes (see [`Optimizer::warm_start`]),
+    /// consumed when the initial population is assembled. Empty unless a
+    /// warm-start was requested, in which case trajectories are — by
+    /// design — allowed to differ from the cold-start golden ones.
+    seeds: Vec<Genome>,
+    seed_frac: f64,
 }
 
 impl EsOpt {
     pub fn new(cfg: EsConfig) -> EsOpt {
-        EsOpt { cfg, st: None }
+        EsOpt { cfg, st: None, seeds: Vec::new(), seed_frac: 0.0 }
+    }
+}
+
+/// Overwrite the front of a freshly assembled initial population with the
+/// memory seeds (nearest scenario first), up to `frac` of the population.
+/// Replacement — never insertion or generation-skip — so the RNG stream
+/// is untouched and an empty seed list leaves the population (and every
+/// downstream trajectory) bit-identical. Free function so it can run
+/// while `EsOpt::st` is mutably borrowed.
+fn inject_seeds(seeds: &mut Vec<Genome>, frac: f64, genomes: &mut [Genome]) {
+    if seeds.is_empty() || genomes.is_empty() {
+        return;
+    }
+    let cap = ((genomes.len() as f64 * frac).ceil() as usize).clamp(1, genomes.len());
+    let m = seeds.len().min(cap);
+    for (slot, seed) in genomes.iter_mut().zip(seeds.drain(..m)) {
+        *slot = seed;
     }
 }
 
 impl Optimizer for EsOpt {
     fn label(&self) -> &str {
         self.cfg.variant.name()
+    }
+
+    fn warm_start(&mut self, seeds: &[Genome], fraction: f64) {
+        self.seeds = seeds.to_vec();
+        self.seed_frac = fraction.clamp(0.0, 1.0);
     }
 
     fn run(&mut self, ctx: &mut EvalContext, seed: u64) {
@@ -156,10 +184,12 @@ impl Optimizer for EsOpt {
                 }
                 EsPhase::Calib(CalibMachine::new(ctx, calib, &mut rng))
             } else {
+                let mut genomes = lhs_init(&spec, population, &mut rng);
+                inject_seeds(&mut self.seeds, self.seed_frac, &mut genomes);
                 EsPhase::InitEval {
                     high: Vec::new(),
                     low: (0..spec.len()).collect(),
-                    genomes: lhs_init(&spec, population, &mut rng),
+                    genomes,
                 }
             };
             self.st = Some(EsState { rng, budget, population, phase });
@@ -224,6 +254,9 @@ impl Optimizer for EsOpt {
                                 genomes[k - 2] = seed2;
                             }
                         }
+                        // Design-memory seeds take the *front* slots, so
+                        // they coexist with the heuristic seeds above.
+                        inject_seeds(&mut self.seeds, self.seed_frac, &mut genomes);
                         Next::To(EsPhase::InitEval {
                             high: sens.high.clone(),
                             low: sens.low.clone(),
@@ -692,6 +725,45 @@ mod tests {
         assert_eq!(a.best_genome, b.best_genome);
         assert_eq!(a.curve, b.curve);
         assert_eq!(a.population_mean_curve, b.population_mean_curve);
+    }
+
+    #[test]
+    fn warm_start_with_no_seeds_is_bit_identical() {
+        // The warm-start hook replaces genomes rather than skipping
+        // generation, so an empty seed list must leave the trajectory
+        // bit-for-bit unchanged — the invariant the golden tests rely on.
+        let a = run_sparsemap(ctx(1_200), small_cfg(EsVariant::Full), 42);
+        let mut c = ctx(1_200);
+        let mut opt = EsOpt::new(small_cfg(EsVariant::Full));
+        opt.warm_start(&[], 0.25);
+        opt.run(&mut c, 42);
+        let b = c.outcome("sparsemap");
+        assert_eq!(a.best_edp.to_bits(), b.best_edp.to_bits());
+        assert_eq!(a.best_genome, b.best_genome);
+        assert_eq!(a.curve, b.curve);
+    }
+
+    #[test]
+    fn warm_start_seeds_enter_the_initial_population() {
+        // Cold run buys an elite; the warm-started rerun must surface
+        // that elite's cost within the very first population.
+        let a = run_sparsemap(ctx(1_500), small_cfg(EsVariant::Standard), 9);
+        assert!(a.found_valid());
+        let elite = a.best_genome.clone().unwrap();
+        let mut c = ctx(1_500);
+        let mut opt = EsOpt::new(small_cfg(EsVariant::Standard));
+        opt.warm_start(&[elite], 0.25);
+        opt.run(&mut c, 9);
+        let b = c.outcome("es-std");
+        assert!(b.best_edp <= a.best_edp);
+        let pop = 24usize.min((1_500 / 8).max(8));
+        let reach = b
+            .curve
+            .iter()
+            .find(|&&(_, v)| v <= a.best_edp)
+            .map(|&(e, _)| e)
+            .expect("warm-started run never reached the cold best");
+        assert!(reach <= pop, "seed not evaluated in the initial population: {reach} > {pop}");
     }
 
     #[test]

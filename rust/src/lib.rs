@@ -86,6 +86,7 @@ pub mod baselines;
 pub mod es;
 pub mod genome;
 pub mod mapping;
+pub mod memory;
 pub mod model;
 pub mod optimizer;
 pub mod report;
@@ -104,6 +105,7 @@ pub mod prelude {
     pub use crate::arch::{Boundary, Platform, StorageLevel};
     pub use crate::genome::{decode, Design, Genome, GenomeSpec};
     pub use crate::mapping::{MapLevel, Mapping};
+    pub use crate::memory::MemoryStore;
     pub use crate::model::{EvalResult, NativeEvaluator};
     pub use crate::optimizer::{registry, run_method, MethodSpec, Optimizer, ALL_METHODS};
     pub use crate::search::{Progress, SearchControl, SearchObserver};

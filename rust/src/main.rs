@@ -41,6 +41,11 @@ Utility commands:
                          --workload mm3 --platform cloud --method sparsemap
                          --budget 20000 --seed 42 [--pjrt] [--show-design]
                          [--json] [--method-opts '{"population": 200}']
+                         [--memory FILE] records the winning design in a
+                         design-memory store; add [--warm-start] (with
+                         [--warm-start-frac F] [--warm-start-k K]) to seed
+                         the initial population from the store's nearest
+                         prior scenarios
   run-spec FILE        run a search request from a JSON spec file: custom
                          workloads (any einsum contraction) and platforms
                          (any PE-array geometry) welcome; CLI options
@@ -60,6 +65,17 @@ Utility commands:
                          survive restarts with --checkpoint-dir)
                          --addr 127.0.0.1:7878 [--quota EVALS]
                          [--checkpoint-dir DIR] [--threads N-workers]
+                         [--auth-token SECRET] requires Authorization:
+                         Bearer on every endpoint but /health;
+                         [--memory-store FILE] shares one design memory
+                         across jobs (completed jobs deposit elites,
+                         warm_start requests seed from it), compacted to
+                         [--memory-cap N] records at startup
+  memory ACTION        inspect or maintain a design-memory store
+                         (--store FILE): `stats` prints per-scenario
+                         record counts, `compact --cap N` evicts
+                         worst-cost records down to the cap, `export`
+                         dumps every record as JSON
   calibrate            run high-sensitivity gene calibration and print S(v)
                          --workload mm3 --platform cloud
   inspect-tensor FILE  parse a sparse tensor file (COO/MatrixMarket or
@@ -93,16 +109,26 @@ paid for.
 fn check_args(args: &Args) -> anyhow::Result<()> {
     const COMMON_OPTS: &[&str] = &["budget", "seed", "out", "threads"];
     const COMMON_FLAGS: &[&str] = &["pjrt"];
+    const SEARCH_OPTS: &[&str] = &[
+        "workload",
+        "platform",
+        "method",
+        "method-opts",
+        "memory",
+        "warm-start-frac",
+        "warm-start-k",
+    ];
+    const SEARCH_FLAGS: &[&str] = &["show-design", "json", "warm-start"];
     let (opts, flags): (&[&str], &[&str]) = match args.subcommand.as_str() {
-        "search" => {
-            (&["workload", "platform", "method", "method-opts"], &["show-design", "json"])
-        }
-        "run-spec" => {
-            (&["workload", "platform", "method", "method-opts"], &["show-design", "json"])
-        }
+        "search" => (SEARCH_OPTS, SEARCH_FLAGS),
+        "run-spec" => (SEARCH_OPTS, SEARCH_FLAGS),
         "calibrate" => (&["workload", "platform"], &[]),
         "methods" => (&[], &["json"]),
-        "serve" => (&["addr", "quota", "checkpoint-dir"], &[]),
+        "serve" => (
+            &["addr", "quota", "checkpoint-dir", "auth-token", "memory-store", "memory-cap"],
+            &[],
+        ),
+        "memory" => (&["store", "cap"], &[]),
         "table4" => (&["workloads"], &["summary"]),
         _ => (&[], &[]),
     };
@@ -156,6 +182,26 @@ fn apply_overrides(mut req: SearchRequest, args: &Args) -> anyhow::Result<Search
     }
     if args.flag("pjrt") {
         req = req.pjrt(true);
+    }
+    // Warm-start: `--warm-start` (or either tuning knob) opts in, layered
+    // over any warm_start block a spec file already carries; `--memory`
+    // supplies the store path.
+    let tuned = args.opt("warm-start-frac").is_some() || args.opt("warm-start-k").is_some();
+    if args.flag("warm-start") || tuned {
+        let mut ws = req.warm_start.take().unwrap_or_default();
+        if let Some(f) = args.opt("warm-start-frac") {
+            ws.fraction =
+                f.parse().map_err(|_| anyhow::anyhow!("--warm-start-frac expects a number"))?;
+        }
+        if let Some(k) = args.opt("warm-start-k") {
+            ws.k = k.parse().map_err(|_| anyhow::anyhow!("--warm-start-k expects a number"))?;
+        }
+        req.warm_start = Some(ws);
+    }
+    if let Some(path) = args.opt("memory") {
+        if let Some(ws) = &mut req.warm_start {
+            ws.store = Some(path.to_string());
+        }
     }
     Ok(req)
 }
@@ -223,6 +269,24 @@ fn run_and_report(req: SearchRequest, args: &Args) -> anyhow::Result<()> {
     std::fs::write(&path, report.to_json().pretty())?;
     if !args.flag("json") {
         println!("report written to {}", path.display());
+    }
+    // `--memory` records the winning design so later runs on similar
+    // scenarios can warm-start from it.
+    if let Some(store_path) = args.opt("memory") {
+        let mut store = sparsemap::memory::MemoryStore::open(store_path)?;
+        let recorded =
+            store.remember(&workload, &platform, &outcome.method, outcome, report.request.seed)?;
+        if !args.flag("json") {
+            if recorded {
+                println!(
+                    "best design recorded in {} ({} record(s))",
+                    store.path().display(),
+                    store.len()
+                );
+            } else {
+                println!("no valid design to record in the memory store");
+            }
+        }
     }
     Ok(())
 }
@@ -308,13 +372,39 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Some(t) => t.parse().map_err(|_| anyhow::anyhow!("--threads expects a number"))?,
         None => 1,
     };
+    let memory_cap = args.opt_u64("memory-cap", sparsemap::memory::DEFAULT_CAP as u64)? as usize;
+    anyhow::ensure!(memory_cap >= 1, "--memory-cap must be at least 1");
     let cfg = sparsemap::service::ServerConfig {
         addr: args.opt_or("addr", "127.0.0.1:7878"),
         workers,
         quota: args.opt_u64("quota", 0)? as usize,
         checkpoint_dir: args.opt("checkpoint-dir").map(PathBuf::from),
+        auth_token: args.opt("auth-token").map(str::to_string),
+        memory_store: args.opt("memory-store").map(PathBuf::from),
+        memory_cap,
     };
     sparsemap::service::serve(cfg)
+}
+
+/// `sparsemap memory <stats|compact|export> --store FILE [--cap N]` —
+/// inspect or bound a design-memory store outside any search.
+fn cmd_memory(args: &Args) -> anyhow::Result<()> {
+    let usage = "usage: sparsemap memory <stats|compact|export> --store <file> [--cap N]";
+    let action = args.positional.first().ok_or_else(|| anyhow::anyhow!(usage))?.as_str();
+    let store_path = args.opt("store").ok_or_else(|| anyhow::anyhow!(usage))?;
+    let mut store = sparsemap::memory::MemoryStore::open(store_path)?;
+    match action {
+        "stats" => println!("{}", store.stats_json().pretty()),
+        "export" => println!("{}", store.export_json().pretty()),
+        "compact" => {
+            let cap = args.opt_u64("cap", sparsemap::memory::DEFAULT_CAP as u64)? as usize;
+            anyhow::ensure!(cap >= 1, "--cap must be at least 1");
+            let evicted = store.compact(cap)?;
+            println!("evicted {evicted} record(s); {} remain", store.len());
+        }
+        other => anyhow::bail!("unknown memory action '{other}'\n{usage}"),
+    }
+    Ok(())
 }
 
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
@@ -398,6 +488,7 @@ fn main() -> anyhow::Result<()> {
         "run-spec" => cmd_run_spec(&args)?,
         "methods" => cmd_methods(&args),
         "serve" => cmd_serve(&args)?,
+        "memory" => cmd_memory(&args)?,
         "calibrate" => cmd_calibrate(&args)?,
         "inspect-tensor" => cmd_inspect_tensor(&args)?,
         "demo" => cmd_demo()?,

@@ -1,0 +1,157 @@
+//! Scenario embeddings: a fixed-length numeric fingerprint of one
+//! (workload, platform) pair, comparable across searches.
+//!
+//! The embedding is what the design memory indexes: two scenarios whose
+//! embeddings are close should find each other's elite designs useful as
+//! warm-start seeds. The vector is **fixed-length** ([`EMBED_DIM`]) by
+//! construction — the record store persists it as a fixed-layout segment
+//! and rejects any file whose header advertises a different dimension,
+//! so an embedding-layout change is a store format change, never a
+//! silent misread.
+//!
+//! Layout (all entries finite, final vector L2-normalized):
+//!
+//! | slots  | content                                                  |
+//! |--------|----------------------------------------------------------|
+//! | 0..3   | workload kind one-hot (SpMM, SpConv, SpBMM)              |
+//! | 3      | rank / MAX_RANK                                          |
+//! | 4      | log2(total dense MACs)                                   |
+//! | 5..17  | per-dimension log2(padded size), zero-padded to MAX_RANK |
+//! | 17..26 | per-tensor density stats (P, Q, Z): mean density, P95    |
+//! |        | tile occupancy ratio, tile sizing ratio                  |
+//! | 26..35 | platform constants (log-scaled geometry and bandwidths)  |
+
+use crate::arch::Platform;
+use crate::workload::{Workload, WorkloadKind, MAX_RANK, NUM_TENSORS};
+
+/// Length of every scenario embedding. Changing this (or the slot
+/// layout above) requires bumping [`super::record::MEMORY_VERSION`].
+pub const EMBED_DIM: usize = 35;
+
+/// Tile size (elements) at which the per-tensor occupancy statistics are
+/// probed — one inner PE-buffer-ish tile, the scale at which sparsity
+/// *shape* (block/banded/skew) differentiates models with equal mean.
+const PROBE_TILE_ELEMS: f64 = 256.0;
+
+/// Compute the scenario embedding for one (workload, platform) pair.
+/// Deterministic, allocation-free and total: every workload/platform
+/// that passes validation embeds to a finite, L2-normalized vector.
+pub fn scenario_embedding(w: &Workload, p: &Platform) -> [f64; EMBED_DIM] {
+    let mut e = [0.0f64; EMBED_DIM];
+    let kind_slot = match w.kind {
+        WorkloadKind::SpMM => 0,
+        WorkloadKind::SpConv => 1,
+        WorkloadKind::SpBMM => 2,
+    };
+    e[kind_slot] = 1.0;
+    e[3] = w.rank() as f64 / MAX_RANK as f64;
+    e[4] = w.total_ops().max(1.0).log2();
+    for (i, d) in w.dims.iter().take(MAX_RANK).enumerate() {
+        e[5 + i] = (d.padded.max(1) as f64).log2();
+    }
+    for t in 0..NUM_TENSORS {
+        let dm = &w.tensors[t].density;
+        let base = 17 + 3 * t;
+        e[base] = dm.avg();
+        // Tail occupancy and provisioning ratio at a fixed probe tile:
+        // these separate block/banded/skewed patterns from uniform ones
+        // with the same mean density.
+        let expected = (dm.avg() * PROBE_TILE_ELEMS).max(1e-12);
+        e[base + 1] = dm.occupancy_quantile(PROBE_TILE_ELEMS, 0.95) / expected;
+        e[base + 2] = dm.sizing_ratio(PROBE_TILE_ELEMS);
+    }
+    e[26] = (p.pe_rows.max(1) as f64).log2();
+    e[27] = (p.pe_cols.max(1) as f64).log2();
+    e[28] = (p.macs_per_pe.max(1) as f64).log2();
+    e[29] = (p.pe_buf_bytes.max(1) as f64).log2();
+    e[30] = (p.glb_bytes.max(1) as f64).log2();
+    e[31] = p.dram_bw_bytes_per_s.max(1.0).log10();
+    e[32] = p.clock_hz.max(1.0).log10();
+    e[33] = p.glb_bw_words_per_cycle.max(1.0).log2();
+    e[34] = p.pe_bw_words_per_cycle.max(1.0).log2();
+    for x in e.iter_mut() {
+        if !x.is_finite() {
+            *x = 0.0;
+        }
+    }
+    normalize(&mut e);
+    e
+}
+
+/// Human-readable scenario tag persisted alongside the embedding (the
+/// `seeded_from` provenance string): `workload@platform#method`.
+pub fn scenario_tag(w: &Workload, p: &Platform, method: &str) -> String {
+    format!("{}@{}#{}", w.id, p.name, method)
+}
+
+fn normalize(e: &mut [f64; EMBED_DIM]) {
+    let norm = e.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in e.iter_mut() {
+            *x /= norm;
+        }
+    }
+}
+
+/// Squared Euclidean distance between two embeddings (both normalized,
+/// so this orders identically to cosine distance).
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::DensityModel;
+    use crate::workload::table3;
+
+    #[test]
+    fn embedding_is_normalized_and_deterministic() {
+        let w = table3::by_id("mm3").unwrap();
+        let p = Platform::cloud();
+        let a = scenario_embedding(&w, &p);
+        let b = scenario_embedding(&w, &p);
+        assert_eq!(a, b);
+        let norm: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-12, "norm = {norm}");
+        assert!(a.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn near_identical_scenarios_embed_closer_than_distant_ones() {
+        let p = Platform::mobile();
+        let base = table3::by_id("mm1").unwrap();
+        // Same shape, slightly different densities — the warm-start
+        // traffic pattern.
+        let near = Workload::spmm("mm1b", 124, 124, 124, 0.75, 0.80);
+        let far = table3::by_id("mm10").unwrap();
+        let e0 = scenario_embedding(&base, &p);
+        let d_near = dist2(&e0, &scenario_embedding(&near, &p));
+        let d_far = dist2(&e0, &scenario_embedding(&far, &p));
+        assert!(d_near < d_far, "near {d_near} vs far {d_far}");
+        // A platform change also moves the embedding.
+        let d_platform = dist2(&e0, &scenario_embedding(&base, &Platform::cloud()));
+        assert!(d_platform > 0.0);
+    }
+
+    #[test]
+    fn sparsity_shape_separates_equal_mean_densities() {
+        let p = Platform::mobile();
+        let uniform = Workload::spmm("u", 64, 256, 64, 0.2, 0.2);
+        let blocky = Workload::custom_models(
+            "b",
+            WorkloadKind::SpMM,
+            vec![("M".into(), 64), ("K".into(), 256), ("N".into(), 64)],
+            vec![
+                ("P".into(), vec![0, 1], Some(DensityModel::block(16, 0.2))),
+                ("Q".into(), vec![1, 2], Some(DensityModel::uniform(0.2))),
+                ("Z".into(), vec![0, 2], None),
+            ],
+            vec![1],
+        )
+        .unwrap();
+        let du = scenario_embedding(&uniform, &p);
+        let db = scenario_embedding(&blocky, &p);
+        assert!(dist2(&du, &db) > 1e-9, "block pattern must shift the embedding");
+    }
+}

@@ -1,0 +1,218 @@
+//! Deterministic ANN index over scenario embeddings.
+//!
+//! Random-hyperplane LSH with a brute-force fallback, split the
+//! classic way: **build** (derive the pinned hyperplane set), **storage**
+//! (bucket table + id-indexed embedding list) and **incremental insert**
+//! (one signature + one bucket push per record, no rebuild). The
+//! hyperplanes are drawn once from a pinned-seed generator, so the same
+//! corpus always produces the same index and the same query results —
+//! warm-started searches stay reproducible.
+//!
+//! Small corpora (≤ [`BRUTE_FORCE_LIMIT`]) are answered by exact scan:
+//! below that size the LSH machinery saves nothing, and exactness there
+//! keeps seeding behaviour easy to reason about. Above it, buckets are
+//! probed in growing Hamming radius around the query signature and the
+//! candidate set is re-ranked exactly; if probing comes up short the
+//! query degrades to the exact scan rather than returning a thin answer.
+
+use super::embed::{dist2, EMBED_DIM};
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+/// Number of LSH hyperplanes (signature bits).
+pub const NUM_PLANES: usize = 16;
+/// Corpus size up to which queries are answered by exact scan.
+pub const BRUTE_FORCE_LIMIT: usize = 512;
+/// Pinned seed for the hyperplane set; part of query determinism.
+const PLANES_SEED: u64 = 0x5bab_5e3d_0a11_4c3e;
+
+/// ANN index: hyperplanes are fixed at construction, contents grow by
+/// [`AnnIndex::insert`].
+pub struct AnnIndex {
+    planes: Vec<[f64; EMBED_DIM]>,
+    /// Embeddings by record id (insert order).
+    embeds: Vec<[f64; EMBED_DIM]>,
+    /// LSH signature -> record ids, in increasing id order (ids are
+    /// pushed as they are inserted, so incremental insertion and batch
+    /// build produce identical tables).
+    buckets: BTreeMap<u16, Vec<u32>>,
+}
+
+impl AnnIndex {
+    /// Build an empty index with the pinned hyperplane set.
+    pub fn new() -> AnnIndex {
+        let mut rng = Pcg64::seeded(PLANES_SEED);
+        let mut planes = Vec::with_capacity(NUM_PLANES);
+        for _ in 0..NUM_PLANES {
+            let mut p = [0.0f64; EMBED_DIM];
+            for x in p.iter_mut() {
+                *x = rng.normal();
+            }
+            planes.push(p);
+        }
+        AnnIndex { planes, embeds: Vec::new(), buckets: BTreeMap::new() }
+    }
+
+    /// Build from a batch of embeddings (equivalent to `new` + inserts).
+    pub fn build(embeds: &[[f64; EMBED_DIM]]) -> AnnIndex {
+        let mut ix = AnnIndex::new();
+        for e in embeds {
+            ix.insert(*e);
+        }
+        ix
+    }
+
+    pub fn len(&self) -> usize {
+        self.embeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.embeds.is_empty()
+    }
+
+    /// Sign-bit signature of an embedding under the pinned planes.
+    pub fn signature(&self, e: &[f64; EMBED_DIM]) -> u16 {
+        let mut sig = 0u16;
+        for (bit, p) in self.planes.iter().enumerate() {
+            let dot: f64 = p.iter().zip(e).map(|(a, b)| a * b).sum();
+            if dot >= 0.0 {
+                sig |= 1 << bit;
+            }
+        }
+        sig
+    }
+
+    /// Insert one embedding; returns its id. O(planes) — no rebuild.
+    pub fn insert(&mut self, e: [f64; EMBED_DIM]) -> u32 {
+        let id = self.embeds.len() as u32;
+        let sig = self.signature(&e);
+        self.embeds.push(e);
+        self.buckets.entry(sig).or_default().push(id);
+        id
+    }
+
+    /// Ids of the `k` nearest stored embeddings, closest first; ties
+    /// broken by id so results are fully deterministic.
+    pub fn query(&self, e: &[f64; EMBED_DIM], k: usize) -> Vec<u32> {
+        if k == 0 || self.embeds.is_empty() {
+            return Vec::new();
+        }
+        if self.embeds.len() <= BRUTE_FORCE_LIMIT {
+            return self.rank(e, (0..self.embeds.len() as u32).collect(), k);
+        }
+        // Multi-probe: expand Hamming radius until enough candidates.
+        let want = (4 * k).max(32);
+        let sig = self.signature(e);
+        let mut cands: Vec<u32> = Vec::new();
+        for radius in 0..=2u32 {
+            for (&bucket_sig, ids) in &self.buckets {
+                if (bucket_sig ^ sig).count_ones() == radius {
+                    cands.extend_from_slice(ids);
+                }
+            }
+            if cands.len() >= want {
+                break;
+            }
+        }
+        if cands.len() < k {
+            // Sparse neighbourhood: degrade to exact rather than thin.
+            return self.rank(e, (0..self.embeds.len() as u32).collect(), k);
+        }
+        self.rank(e, cands, k)
+    }
+
+    fn rank(&self, e: &[f64; EMBED_DIM], mut ids: Vec<u32>, k: usize) -> Vec<u32> {
+        ids.sort_unstable();
+        ids.dedup();
+        ids.sort_by(|&a, &b| {
+            let da = dist2(e, &self.embeds[a as usize]);
+            let db = dist2(e, &self.embeds[b as usize]);
+            da.total_cmp(&db).then(a.cmp(&b))
+        });
+        ids.truncate(k);
+        ids
+    }
+
+    /// Exact k-nearest by full scan — the reference answer the ANN path
+    /// is tested against.
+    pub fn brute_force(&self, e: &[f64; EMBED_DIM], k: usize) -> Vec<u32> {
+        self.rank(e, (0..self.embeds.len() as u32).collect(), k.min(self.embeds.len()))
+    }
+}
+
+impl Default for AnnIndex {
+    fn default() -> AnnIndex {
+        AnnIndex::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_embed(rng: &mut Pcg64) -> [f64; EMBED_DIM] {
+        let mut e = [0.0f64; EMBED_DIM];
+        for x in e.iter_mut() {
+            *x = rng.normal();
+        }
+        let n = e.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in e.iter_mut() {
+            *x /= n;
+        }
+        e
+    }
+
+    #[test]
+    fn query_matches_brute_force_on_small_corpus() {
+        let mut rng = Pcg64::seeded(42);
+        let pts: Vec<_> = (0..64).map(|_| rand_embed(&mut rng)).collect();
+        let ix = AnnIndex::build(&pts);
+        for _ in 0..16 {
+            let q = rand_embed(&mut rng);
+            assert_eq!(ix.query(&q, 5), ix.brute_force(&q, 5));
+        }
+    }
+
+    #[test]
+    fn incremental_insert_matches_batch_build() {
+        let mut rng = Pcg64::seeded(7);
+        let pts: Vec<_> = (0..100).map(|_| rand_embed(&mut rng)).collect();
+        let batch = AnnIndex::build(&pts);
+        let mut inc = AnnIndex::new();
+        for p in &pts {
+            inc.insert(*p);
+        }
+        assert_eq!(batch.len(), inc.len());
+        let q = rand_embed(&mut rng);
+        assert_eq!(batch.query(&q, 9), inc.query(&q, 9));
+        assert_eq!(batch.buckets, inc.buckets);
+    }
+
+    #[test]
+    fn query_is_deterministic_and_ordered() {
+        let mut rng = Pcg64::seeded(3);
+        let pts: Vec<_> = (0..32).map(|_| rand_embed(&mut rng)).collect();
+        let ix = AnnIndex::build(&pts);
+        let q = rand_embed(&mut rng);
+        let a = ix.query(&q, 8);
+        assert_eq!(a, ix.query(&q, 8));
+        let dists: Vec<f64> = a.iter().map(|&i| dist2(&q, &pts[i as usize])).collect();
+        assert!(dists.windows(2).all(|w| w[0] <= w[1]), "not sorted: {dists:?}");
+        // k larger than the corpus returns everything.
+        assert_eq!(ix.query(&q, 1000).len(), 32);
+        assert!(AnnIndex::new().query(&q, 5).is_empty());
+    }
+
+    #[test]
+    fn signatures_are_stable_across_instances() {
+        // The hyperplane set is pinned: two fresh indices agree on every
+        // signature, which is what makes stored files replayable.
+        let mut rng = Pcg64::seeded(11);
+        let a = AnnIndex::new();
+        let b = AnnIndex::new();
+        for _ in 0..20 {
+            let e = rand_embed(&mut rng);
+            assert_eq!(a.signature(&e), b.signature(&e));
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Design memory: a persisted, ANN-indexed store of elite designs that
+//! warm-starts new searches from the nearest prior scenarios.
+//!
+//! Every completed search that found a valid design can deposit one
+//! record — scenario embedding, elite genome, outcome summary — into an
+//! append-only `sparsemap.memory.v1` file ([`record`]). New searches on
+//! near-duplicate scenarios then pull the `k` nearest records back out
+//! through a deterministic LSH index ([`index`]) and seed a configurable
+//! fraction of their initial ES population with the re-validated genomes
+//! ([`store`]), so repeated traffic gets monotonically cheaper instead
+//! of re-paying for knowledge a prior search already bought.
+//!
+//! The subsystem is **off by default**: nothing is read or written
+//! unless a store path is supplied (`--memory` on the CLI,
+//! `--memory-store` on the service, or a `warm_start` block on a
+//! [`crate::api::SearchRequest`]), and with it unset every request,
+//! report and trajectory stays byte-identical to a build without this
+//! module.
+
+pub mod embed;
+pub mod index;
+pub mod record;
+pub mod store;
+
+pub use embed::{dist2, scenario_embedding, scenario_tag, EMBED_DIM};
+pub use index::AnnIndex;
+pub use record::{decode_file, header_bytes, MemRecord, MEMORY_SCHEMA, MEMORY_VERSION};
+pub use store::{MemoryStore, DEFAULT_CAP};

@@ -1,0 +1,318 @@
+//! The `sparsemap.memory.v1` on-disk format: a versioned, fixed-layout,
+//! append-only record file.
+//!
+//! ## File layout
+//!
+//! ```text
+//! header (16 bytes):
+//!   magic        8  b"SPMEMV1\n"
+//!   version      4  u32 LE  (== MEMORY_VERSION)
+//!   embed_dim    4  u32 LE  (== EMBED_DIM)
+//! record (repeated, one per persisted elite design):
+//!   payload_len  4  u32 LE  — bytes that follow, checksum included
+//!   tag         48  scenario tag, UTF-8, zero-padded
+//!   best_edp     8  f64 LE bit pattern (bit-exact through disk)
+//!   evals        4  u32 LE
+//!   valid_evals  4  u32 LE
+//!   seed         8  u64 LE
+//!   embed      280  EMBED_DIM × f64 LE bit patterns
+//!   genome_len   4  u32 LE
+//!   genome       4 × genome_len  u32 LE genes
+//!   checksum     4  FNV-1a over every preceding payload byte
+//! ```
+//!
+//! Every scalar is little-endian and every field has a fixed offset
+//! within its record (only the genome segment varies, behind an explicit
+//! length), following the fixed-length feature-vector discipline: a
+//! reader either understands the exact layout or refuses the file.
+//! Decoding **rejects** rather than misreads — bad magic, a future
+//! version, a foreign embedding width, a truncated record, an oversized
+//! length field or a checksum mismatch are all hard errors.
+
+use super::embed::EMBED_DIM;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Schema tag of the store format (reported by `memory stats`/`export`).
+pub const MEMORY_SCHEMA: &str = "sparsemap.memory.v1";
+/// On-disk version number; bump on any layout change.
+pub const MEMORY_VERSION: u32 = 1;
+/// File magic.
+pub const MAGIC: [u8; 8] = *b"SPMEMV1\n";
+/// Bytes reserved for the scenario tag.
+pub const TAG_LEN: usize = 48;
+/// Upper bound on persisted genome length (a sanity cap far above any
+/// real [`crate::genome::GenomeSpec`]; a larger length field means the
+/// record is corrupt).
+pub const MAX_GENOME_LEN: usize = 4096;
+/// Header size in bytes.
+pub const HEADER_LEN: usize = 16;
+
+/// Fixed payload bytes before the genome segment.
+const FIXED_LEN: usize = TAG_LEN + 8 + 4 + 4 + 8 + EMBED_DIM * 8 + 4;
+/// Checksum trailer size.
+const SUM_LEN: usize = 4;
+
+/// One persisted elite design: where it was found (scenario embedding +
+/// tag), what it is (the genome) and how good it was (outcome summary).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemRecord {
+    /// Scenario tag `workload@platform#method` (truncated to
+    /// [`TAG_LEN`] bytes on a UTF-8 boundary).
+    pub tag: String,
+    /// Best valid EDP of the run that produced this genome.
+    pub best_edp: f64,
+    /// Budget submissions the run spent.
+    pub evals: u32,
+    pub valid_evals: u32,
+    /// RNG seed of the producing run (provenance).
+    pub seed: u64,
+    /// Scenario embedding ([`super::embed::scenario_embedding`]).
+    pub embed: [f64; EMBED_DIM],
+    /// The elite genome itself.
+    pub genome: Vec<u32>,
+}
+
+/// The 16-byte file header.
+pub fn header_bytes() -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(&MAGIC);
+    h[8..12].copy_from_slice(&MEMORY_VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&(EMBED_DIM as u32).to_le_bytes());
+    h
+}
+
+/// Validate a file header, rejecting foreign, future or corrupt files.
+pub fn check_header(bytes: &[u8]) -> Result<()> {
+    ensure!(bytes.len() >= HEADER_LEN, "memory store file is shorter than its header");
+    ensure!(bytes[..8] == MAGIC, "not a {MEMORY_SCHEMA} file (bad magic)");
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    ensure!(
+        version == MEMORY_VERSION,
+        "memory store version {version} is not supported (this build reads v{MEMORY_VERSION})"
+    );
+    let dim = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    ensure!(
+        dim == EMBED_DIM,
+        "memory store embeds {dim}-dim scenarios, this build uses {EMBED_DIM}"
+    );
+    Ok(())
+}
+
+/// FNV-1a 32-bit checksum.
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+impl MemRecord {
+    /// Serialize to the wire form (length prefix through checksum).
+    pub fn encode(&self) -> Vec<u8> {
+        let payload_len = FIXED_LEN + self.genome.len() * 4 + SUM_LEN;
+        let mut out = Vec::with_capacity(4 + payload_len);
+        out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+        let mut tag = [0u8; TAG_LEN];
+        let mut cut = self.tag.len().min(TAG_LEN);
+        while !self.tag.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        tag[..cut].copy_from_slice(&self.tag.as_bytes()[..cut]);
+        out.extend_from_slice(&tag);
+        out.extend_from_slice(&self.best_edp.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.evals.to_le_bytes());
+        out.extend_from_slice(&self.valid_evals.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        for x in &self.embed {
+            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        out.extend_from_slice(&(self.genome.len() as u32).to_le_bytes());
+        for &g in &self.genome {
+            out.extend_from_slice(&g.to_le_bytes());
+        }
+        let sum = fnv1a(&out[4..]);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Decode one record from the head of `bytes`; returns the record
+    /// and the total bytes consumed. Any structural problem is an error
+    /// — a truncated tail must never silently yield a partial record.
+    pub fn decode(bytes: &[u8]) -> Result<(MemRecord, usize)> {
+        ensure!(bytes.len() >= 4, "truncated record (missing length prefix)");
+        let payload_len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        let max_payload = FIXED_LEN + MAX_GENOME_LEN * 4 + SUM_LEN;
+        ensure!(
+            (FIXED_LEN + SUM_LEN..=max_payload).contains(&payload_len),
+            "record length {payload_len} is outside the valid range (corrupt file)"
+        );
+        ensure!(bytes.len() >= 4 + payload_len, "truncated record (file ends mid-record)");
+        let payload = &bytes[4..4 + payload_len];
+        let stored_sum = u32::from_le_bytes(payload[payload_len - SUM_LEN..].try_into().unwrap());
+        let computed = fnv1a(&payload[..payload_len - SUM_LEN]);
+        ensure!(
+            stored_sum == computed,
+            "record checksum mismatch ({stored_sum:08x} != {computed:08x}): corrupt file"
+        );
+
+        let mut off = 0usize;
+        let tag_raw = &payload[off..off + TAG_LEN];
+        off += TAG_LEN;
+        let end = tag_raw.iter().position(|&b| b == 0).unwrap_or(TAG_LEN);
+        let tag = std::str::from_utf8(&tag_raw[..end])
+            .map_err(|_| anyhow!("record tag is not UTF-8 (corrupt file)"))?
+            .to_string();
+        let f64_at =
+            |o: usize| f64::from_bits(u64::from_le_bytes(payload[o..o + 8].try_into().unwrap()));
+        let u32_at = |o: usize| u32::from_le_bytes(payload[o..o + 4].try_into().unwrap());
+        let best_edp = f64_at(off);
+        off += 8;
+        let evals = u32_at(off);
+        off += 4;
+        let valid_evals = u32_at(off);
+        off += 4;
+        let seed = u64::from_le_bytes(payload[off..off + 8].try_into().unwrap());
+        off += 8;
+        let mut embed = [0.0f64; EMBED_DIM];
+        for e in embed.iter_mut() {
+            *e = f64_at(off);
+            off += 8;
+        }
+        let genome_len = u32_at(off) as usize;
+        off += 4;
+        if genome_len > MAX_GENOME_LEN {
+            bail!("record genome length {genome_len} exceeds the cap (corrupt file)");
+        }
+        ensure!(
+            payload_len == FIXED_LEN + genome_len * 4 + SUM_LEN,
+            "record length {payload_len} disagrees with its genome length {genome_len}"
+        );
+        let mut genome = Vec::with_capacity(genome_len);
+        for _ in 0..genome_len {
+            genome.push(u32_at(off));
+            off += 4;
+        }
+        Ok((
+            MemRecord { tag, best_edp, evals, valid_evals, seed, embed, genome },
+            4 + payload_len,
+        ))
+    }
+}
+
+/// Decode a whole store file (header + records). Empty record section is
+/// fine; anything structurally wrong rejects the file.
+pub fn decode_file(bytes: &[u8]) -> Result<Vec<MemRecord>> {
+    check_header(bytes)?;
+    let mut records = Vec::new();
+    let mut off = HEADER_LEN;
+    while off < bytes.len() {
+        let (rec, used) = MemRecord::decode(&bytes[off..])
+            .map_err(|e| anyhow!("record {} (at byte {off}): {e}", records.len()))?;
+        records.push(rec);
+        off += used;
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample(tag: &str, edp: f64, genome: Vec<u32>) -> MemRecord {
+        let mut embed = [0.0f64; EMBED_DIM];
+        for (i, e) in embed.iter_mut().enumerate() {
+            *e = (i as f64 + 0.5) / EMBED_DIM as f64;
+        }
+        MemRecord {
+            tag: tag.to_string(),
+            best_edp: edp,
+            evals: 600,
+            valid_evals: 432,
+            seed: 0xdead_beef_cafe_f00d,
+            embed,
+            genome,
+        }
+    }
+
+    #[test]
+    fn record_round_trips_bit_exactly() {
+        let rec = sample("mm1@mobile#es-std", 1.25e9, vec![1, 2, 3, 4, 5, 0, 4, 6]);
+        let bytes = rec.encode();
+        let (back, used) = MemRecord::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, rec);
+        assert_eq!(back.best_edp.to_bits(), rec.best_edp.to_bits());
+        // Non-finite EDP sentinels survive too (bit-pattern encoding).
+        let inf = sample("x@y#z", f64::INFINITY, vec![7]);
+        let (back, _) = MemRecord::decode(&inf.encode()).unwrap();
+        assert_eq!(back.best_edp.to_bits(), f64::INFINITY.to_bits());
+    }
+
+    #[test]
+    fn file_round_trips() {
+        let mut bytes = header_bytes().to_vec();
+        let recs = vec![sample("a@p#m", 1.0, vec![1, 2]), sample("b@p#m", 2.0, (0..40).collect())];
+        for r in &recs {
+            bytes.extend_from_slice(&r.encode());
+        }
+        assert_eq!(decode_file(&bytes).unwrap(), recs);
+        assert_eq!(decode_file(&header_bytes()).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn bad_magic_and_versions_rejected() {
+        let mut bytes = header_bytes().to_vec();
+        bytes[0] = b'X';
+        assert!(decode_file(&bytes).unwrap_err().to_string().contains("bad magic"));
+        // A future version must be refused, not misread.
+        let mut future = header_bytes().to_vec();
+        future[8..12].copy_from_slice(&2u32.to_le_bytes());
+        assert!(decode_file(&future).unwrap_err().to_string().contains("not supported"));
+        // A foreign embedding width likewise.
+        let mut wide = header_bytes().to_vec();
+        wide[12..16].copy_from_slice(&99u32.to_le_bytes());
+        assert!(decode_file(&wide).unwrap_err().to_string().contains("99-dim"));
+        // And a header-less stub.
+        assert!(decode_file(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn truncation_and_corruption_rejected() {
+        let rec = sample("mm1@mobile#es-std", 3.5, vec![9, 8, 7]);
+        let mut bytes = header_bytes().to_vec();
+        bytes.extend_from_slice(&rec.encode());
+        // Every proper prefix that cuts into the record must fail.
+        for cut in HEADER_LEN + 1..bytes.len() {
+            assert!(decode_file(&bytes[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+        // A flipped byte anywhere in the payload fails the checksum (or
+        // a structural check) — never yields a different record.
+        for i in HEADER_LEN..bytes.len() {
+            let mut evil = bytes.clone();
+            evil[i] ^= 0x40;
+            if let Ok(recs) = decode_file(&evil) {
+                assert_eq!(recs, vec![rec.clone()], "flip at byte {i} changed data");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_genome_length_rejected() {
+        let rec = sample("t@p#m", 1.0, vec![1]);
+        let mut bytes = rec.encode();
+        // Claim a huge payload length.
+        bytes[..4].copy_from_slice(&(u32::MAX / 2).to_le_bytes());
+        assert!(MemRecord::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn long_tags_truncate_on_char_boundaries() {
+        let long = "w".repeat(100) + "é";
+        let rec = sample(&long, 1.0, vec![1]);
+        let (back, _) = MemRecord::decode(&rec.encode()).unwrap();
+        assert_eq!(back.tag.len(), TAG_LEN);
+        assert!(long.starts_with(&back.tag));
+    }
+}

@@ -1,0 +1,444 @@
+//! The design-memory store: append-only persistence + ANN lookup +
+//! warm-start seed extraction, glued together behind one handle.
+//!
+//! A `MemoryStore` owns the on-disk record file (see [`super::record`])
+//! and an in-RAM [`AnnIndex`] over the scenario embeddings of every
+//! record. Appends go straight to disk (one length-framed record, no
+//! rewrite) and into the index incrementally; `compact` is the only
+//! operation that rewrites the file, and it does so atomically
+//! (tmp + rename).
+
+use super::embed::{scenario_embedding, scenario_tag, EMBED_DIM};
+use super::index::AnnIndex;
+use super::record::{decode_file, header_bytes, MemRecord, MEMORY_SCHEMA};
+use crate::arch::Platform;
+use crate::genome::{Genome, GenomeSpec};
+use crate::search::Outcome;
+use crate::util::json::Json;
+use crate::workload::Workload;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Default record cap enforced by `memory compact` and the service's
+/// startup rescan.
+pub const DEFAULT_CAP: usize = 10_000;
+
+/// A persisted, ANN-indexed store of elite designs keyed by scenario.
+pub struct MemoryStore {
+    path: PathBuf,
+    records: Vec<MemRecord>,
+    index: AnnIndex,
+}
+
+impl MemoryStore {
+    /// Open (or lazily create) the store at `path`. A missing file is an
+    /// empty store — the file itself is created on first append. A
+    /// present-but-invalid file is an error: corrupt or future-version
+    /// stores are rejected, never silently truncated.
+    pub fn open(path: impl Into<PathBuf>) -> Result<MemoryStore> {
+        let path = path.into();
+        let records = match fs::read(&path) {
+            Ok(bytes) => decode_file(&bytes)
+                .with_context(|| format!("reading memory store {}", path.display()))?,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => {
+                return Err(anyhow::anyhow!("reading memory store {}: {e}", path.display()))
+            }
+        };
+        let index = AnnIndex::build(&records.iter().map(|r| r.embed).collect::<Vec<_>>());
+        Ok(MemoryStore { path, records, index })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[MemRecord] {
+        &self.records
+    }
+
+    /// Append one record: to disk first (header created if the file is
+    /// new), then to RAM + index. Disk errors leave the in-RAM state
+    /// untouched.
+    pub fn append(&mut self, rec: MemRecord) -> Result<()> {
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let fresh = !self.path.exists();
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening memory store {}", self.path.display()))?;
+        if fresh {
+            f.write_all(&header_bytes())?;
+        }
+        f.write_all(&rec.encode())?;
+        self.index.insert(rec.embed);
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// Persist the elite design of a finished search, if it found one.
+    /// Returns whether a record was written.
+    pub fn remember(
+        &mut self,
+        w: &Workload,
+        p: &Platform,
+        method: &str,
+        outcome: &Outcome,
+        seed: u64,
+    ) -> Result<bool> {
+        let genome = match &outcome.best_genome {
+            Some(g) if outcome.best_edp.is_finite() && !g.is_empty() => g.clone(),
+            _ => return Ok(false),
+        };
+        self.append(MemRecord {
+            tag: scenario_tag(w, p, method),
+            best_edp: outcome.best_edp,
+            evals: outcome.evals.min(u32::MAX as usize) as u32,
+            valid_evals: outcome.valid_evals.min(u32::MAX as usize) as u32,
+            seed,
+            embed: scenario_embedding(w, p),
+            genome,
+        })?;
+        Ok(true)
+    }
+
+    /// The `k` records nearest to `(w, p)` in scenario-embedding space,
+    /// closest first. Deterministic for a fixed store.
+    pub fn seed(&self, w: &Workload, p: &Platform, k: usize) -> Vec<&MemRecord> {
+        let e = scenario_embedding(w, p);
+        self.index.query(&e, k).into_iter().map(|id| &self.records[id as usize]).collect()
+    }
+
+    /// Turn nearest-neighbour records into genomes valid for `spec`:
+    /// wrong-length genomes are dropped, out-of-range genes repaired
+    /// in place, and duplicates (after repair) removed. Order follows
+    /// the input (nearest first).
+    pub fn validated_seed_genomes(records: &[&MemRecord], spec: &GenomeSpec) -> Vec<Genome> {
+        let mut out: Vec<Genome> = Vec::new();
+        for rec in records {
+            if rec.genome.len() != spec.len() {
+                continue;
+            }
+            let mut g = rec.genome.clone();
+            if !spec.in_range(&g) {
+                spec.repair(&mut g);
+            }
+            if !out.contains(&g) {
+                out.push(g);
+            }
+        }
+        out
+    }
+
+    /// Enforce `cap` via worst-cost eviction per scenario cluster:
+    /// records sharing a tag form a cluster, and eviction repeatedly
+    /// removes the worst-EDP record from the largest cluster (ties by
+    /// tag order), so one hot scenario cannot crowd out the long tail.
+    /// Rewrites the file atomically; returns the number evicted.
+    pub fn compact(&mut self, cap: usize) -> Result<usize> {
+        if self.records.len() <= cap {
+            return Ok(0);
+        }
+        let evict_target = self.records.len() - cap;
+        let mut dead = vec![false; self.records.len()];
+        let mut clusters: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, r) in self.records.iter().enumerate() {
+            clusters.entry(r.tag.as_str()).or_default().push(i);
+        }
+        // Within each cluster, order members worst (highest EDP) first
+        // so eviction pops from the front.
+        for members in clusters.values_mut() {
+            members.sort_by(|&a, &b| {
+                self.records[b]
+                    .best_edp
+                    .total_cmp(&self.records[a].best_edp)
+                    .then(b.cmp(&a))
+            });
+        }
+        let mut clusters: Vec<(&str, Vec<usize>)> = clusters.into_iter().collect();
+        for _ in 0..evict_target {
+            // Largest surviving cluster; ties broken by tag order.
+            let (ci, _) = clusters
+                .iter()
+                .enumerate()
+                .max_by_key(|(i, (_, m))| (m.len(), usize::MAX - i))
+                .expect("non-empty cluster set while evicting");
+            let victim = clusters[ci].1.remove(0);
+            dead[victim] = true;
+            if clusters[ci].1.is_empty() {
+                clusters.remove(ci);
+            }
+        }
+        let survivors: Vec<MemRecord> = self
+            .records
+            .iter()
+            .zip(&dead)
+            .filter(|(_, &d)| !d)
+            .map(|(r, _)| r.clone())
+            .collect();
+        let evicted = self.records.len() - survivors.len();
+        self.rewrite(&survivors)?;
+        Ok(evicted)
+    }
+
+    /// Atomically replace the file contents with `records`.
+    fn rewrite(&mut self, records: &[MemRecord]) -> Result<()> {
+        let mut bytes = header_bytes().to_vec();
+        for r in records {
+            bytes.extend_from_slice(&r.encode());
+        }
+        let tmp = self.path.with_extension("tmp");
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)?;
+            }
+        }
+        fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &self.path)
+            .with_context(|| format!("replacing {}", self.path.display()))?;
+        self.records = records.to_vec();
+        self.index = AnnIndex::build(&self.records.iter().map(|r| r.embed).collect::<Vec<_>>());
+        Ok(())
+    }
+
+    /// Store statistics as JSON (for `sparsemap memory stats`).
+    pub fn stats_json(&self) -> Json {
+        let mut clusters: BTreeMap<&str, (usize, f64)> = BTreeMap::new();
+        for r in &self.records {
+            let e = clusters.entry(r.tag.as_str()).or_insert((0, f64::INFINITY));
+            e.0 += 1;
+            if r.best_edp < e.1 {
+                e.1 = r.best_edp;
+            }
+        }
+        Json::obj(vec![
+            ("schema", Json::str(MEMORY_SCHEMA)),
+            ("path", Json::str(&self.path.display().to_string())),
+            ("records", Json::num(self.records.len() as f64)),
+            ("scenarios", Json::num(clusters.len() as f64)),
+            ("embed_dim", Json::num(EMBED_DIM as f64)),
+            (
+                "clusters",
+                Json::Arr(
+                    clusters
+                        .into_iter()
+                        .map(|(tag, (n, best))| {
+                            Json::obj(vec![
+                                ("tag", Json::str(tag)),
+                                ("records", Json::num(n as f64)),
+                                (
+                                    "best_edp",
+                                    if best.is_finite() { Json::num(best) } else { Json::Null },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Full record dump as JSON (for `sparsemap memory export`).
+    pub fn export_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(MEMORY_SCHEMA)),
+            ("records", Json::num(self.records.len() as f64)),
+            (
+                "entries",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("tag", Json::str(&r.tag)),
+                                (
+                                    "best_edp",
+                                    if r.best_edp.is_finite() {
+                                        Json::num(r.best_edp)
+                                    } else {
+                                        Json::Null
+                                    },
+                                ),
+                                ("evals", Json::num(r.evals as f64)),
+                                ("valid_evals", Json::num(r.valid_evals as f64)),
+                                ("seed", Json::str(&r.seed.to_string())),
+                                (
+                                    "genome",
+                                    Json::Arr(
+                                        r.genome.iter().map(|&g| Json::num(g as f64)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::table3;
+
+    fn tmp_store(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("sparsemap_memstore_tests");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}_{}.bin", std::process::id()));
+        let _ = fs::remove_file(&path);
+        path
+    }
+
+    fn outcome_with(best: f64, genome: Vec<u32>) -> Outcome {
+        Outcome {
+            method: "es-std".into(),
+            workload: "mm1".into(),
+            platform: "mobile".into(),
+            evals: 100,
+            valid_evals: 90,
+            cache_hits: 0,
+            interned: 0,
+            stage_hits: 0,
+            best_edp: best,
+            best_genome: Some(genome),
+            curve: vec![],
+            population_mean_curve: vec![],
+            members: vec![],
+            memory_hits: 0,
+            seeded_from: vec![],
+        }
+    }
+
+    #[test]
+    fn open_append_reopen_round_trips() {
+        let path = tmp_store("roundtrip");
+        let w = table3::by_id("mm1").unwrap();
+        let p = Platform::mobile();
+        let spec = GenomeSpec::for_workload(&w);
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        let genome = spec.random(&mut rng);
+        {
+            let mut st = MemoryStore::open(&path).unwrap();
+            assert!(st.is_empty());
+            assert!(st
+                .remember(&w, &p, "es-std", &outcome_with(123.0, genome.clone()), 9)
+                .unwrap());
+            // An outcome with no valid best is a no-op.
+            let mut none = outcome_with(f64::INFINITY, vec![]);
+            none.best_genome = None;
+            assert!(!st.remember(&w, &p, "es-std", &none, 9).unwrap());
+            assert_eq!(st.len(), 1);
+        }
+        let st = MemoryStore::open(&path).unwrap();
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.records()[0].genome, genome);
+        assert_eq!(st.records()[0].tag, "mm1@mobile#es-std");
+        assert_eq!(st.records()[0].best_edp.to_bits(), 123.0f64.to_bits());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn seed_returns_nearest_scenarios_and_validates() {
+        let path = tmp_store("seed");
+        let mut st = MemoryStore::open(&path).unwrap();
+        let p = Platform::mobile();
+        let near = table3::by_id("mm1").unwrap();
+        let far = table3::by_id("mm10").unwrap();
+        let spec_near = GenomeSpec::for_workload(&near);
+        let mut rng = crate::util::rng::Pcg64::seeded(1);
+        let g_near = spec_near.random(&mut rng);
+        st.remember(&near, &p, "es-std", &outcome_with(10.0, g_near.clone()), 1).unwrap();
+        let spec_far = GenomeSpec::for_workload(&far);
+        let g_far = spec_far.random(&mut rng);
+        st.remember(&far, &p, "es-std", &outcome_with(20.0, g_far.clone()), 1).unwrap();
+
+        // Query with a slightly perturbed mm1: the mm1 record ranks first.
+        let query = Workload::spmm("mm1b", 124, 124, 124, 0.75, 0.80);
+        let hits = st.seed(&query, &p, 2);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].tag, "mm1@mobile#es-std");
+
+        // Validation drops genomes whose length doesn't fit the spec and
+        // repairs out-of-range genes.
+        let spec_q = GenomeSpec::for_workload(&query);
+        assert_eq!(spec_q.len(), spec_near.len(), "same dims, same genome layout");
+        let genomes = MemoryStore::validated_seed_genomes(&hits, &spec_q);
+        assert!(!genomes.is_empty());
+        assert!(genomes.iter().all(|g| spec_q.in_range(g)));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compact_evicts_worst_per_largest_cluster() {
+        let path = tmp_store("compact");
+        let mut st = MemoryStore::open(&path).unwrap();
+        let p = Platform::mobile();
+        let hot = table3::by_id("mm1").unwrap();
+        let cold = table3::by_id("mm10").unwrap();
+        let spec = GenomeSpec::for_workload(&hot);
+        let spec_cold = GenomeSpec::for_workload(&cold);
+        let mut rng = crate::util::rng::Pcg64::seeded(2);
+        for i in 0..5 {
+            let g = spec.random(&mut rng);
+            st.remember(&hot, &p, "es-std", &outcome_with(100.0 + i as f64, g), i).unwrap();
+        }
+        let g = spec_cold.random(&mut rng);
+        st.remember(&cold, &p, "es-std", &outcome_with(999.0, g), 7).unwrap();
+        assert_eq!(st.len(), 6);
+
+        let evicted = st.compact(3).unwrap();
+        assert_eq!(evicted, 3);
+        assert_eq!(st.len(), 3);
+        // The cold scenario survives (evictions hit the largest cluster),
+        // and within the hot cluster the best records survive.
+        assert!(st.records().iter().any(|r| r.tag == "mm10@mobile#es-std"));
+        let hot_best: Vec<f64> = st
+            .records()
+            .iter()
+            .filter(|r| r.tag == "mm1@mobile#es-std")
+            .map(|r| r.best_edp)
+            .collect();
+        assert_eq!(hot_best.len(), 2);
+        assert!(hot_best.iter().all(|&e| e <= 101.0), "kept {hot_best:?}");
+        // No-op below the cap; store still loads after the rewrite.
+        assert_eq!(st.compact(10).unwrap(), 0);
+        assert_eq!(MemoryStore::open(&path).unwrap().len(), 3);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stats_and_export_shapes() {
+        let path = tmp_store("stats");
+        let mut st = MemoryStore::open(&path).unwrap();
+        let w = table3::by_id("mm1").unwrap();
+        let p = Platform::mobile();
+        let spec = GenomeSpec::for_workload(&w);
+        let mut rng = crate::util::rng::Pcg64::seeded(3);
+        st.remember(&w, &p, "es-std", &outcome_with(5.0, spec.random(&mut rng)), 4).unwrap();
+        let stats = st.stats_json().dumps();
+        assert!(stats.contains("\"sparsemap.memory.v1\""));
+        assert!(stats.contains("\"scenarios\":1") || stats.contains("\"scenarios\": 1"));
+        let export = st.export_json();
+        assert_eq!(export.get("entries").and_then(Json::as_arr).unwrap().len(), 1);
+        let _ = fs::remove_file(&path);
+    }
+}

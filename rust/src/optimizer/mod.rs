@@ -56,6 +56,14 @@ pub trait Optimizer {
     /// per-member telemetry here; plain methods do nothing).
     fn annotate(&self, _outcome: &mut Outcome) {}
 
+    /// Offer design-memory seed genomes (already validated against the
+    /// scenario's [`crate::genome::GenomeSpec`], nearest scenario first)
+    /// to occupy up to `fraction` of the initial population. Called
+    /// before [`Optimizer::run`]; methods without a seedable population
+    /// ignore the offer (the default), so warm-start degrades to a no-op
+    /// rather than an error on non-ES methods.
+    fn warm_start(&mut self, _seeds: &[crate::genome::Genome], _fraction: f64) {}
+
     /// Capture the optimizer's internal state as versioned JSON for a
     /// later [`Optimizer::resume`]. `None` means the method does not
     /// support suspension (the registry's [`MethodSpec::resumable`] flag

@@ -180,6 +180,8 @@ impl Telemetry {
             curve: self.curve,
             population_mean_curve: self.population_mean_curve,
             members: Vec::new(),
+            memory_hits: 0,
+            seeded_from: Vec::new(),
         }
     }
 }
@@ -267,6 +269,12 @@ pub struct Outcome {
     /// Per-member telemetry, only populated by the `portfolio`
     /// meta-optimizer (empty for every plain method).
     pub members: Vec<MemberStats>,
+    /// Warm-start provenance: how many validated design-memory genomes
+    /// seeded the initial population (0 when warm-start is off).
+    pub memory_hits: usize,
+    /// Scenario tags of the memory records those seeds came from
+    /// (deduplicated, nearest first; empty when warm-start is off).
+    pub seeded_from: Vec<String>,
 }
 
 impl Outcome {
@@ -344,6 +352,16 @@ impl Outcome {
                     Json::Arr(self.members.iter().map(MemberStats::to_json).collect()),
                 );
             }
+            // Same discipline for warm-start provenance: absent unless a
+            // design-memory seed actually landed, so non-warm-started
+            // reports stay byte-identical to the pre-memory schema.
+            if self.memory_hits > 0 || !self.seeded_from.is_empty() {
+                o.insert("memory_hits".to_string(), Json::num(self.memory_hits as f64));
+                o.insert(
+                    "seeded_from".to_string(),
+                    Json::Arr(self.seeded_from.iter().map(|t| Json::str(t)).collect()),
+                );
+            }
         }
         j
     }
@@ -419,6 +437,17 @@ impl Outcome {
                 .iter()
                 .map(MemberStats::from_json)
                 .collect::<anyhow::Result<Vec<_>>>()?,
+            // Warm-start provenance (design-memory revision); absent in
+            // older reports and in any run without `warm_start` set.
+            memory_hits: j.get("memory_hits").and_then(Json::as_u64).unwrap_or(0) as usize,
+            seeded_from: j
+                .get("seeded_from")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_str)
+                .map(str::to_string)
+                .collect(),
         })
     }
 }

@@ -10,11 +10,14 @@ const MAX_BODY: usize = 1 << 20;
 /// Largest accepted request/header line.
 const MAX_LINE: usize = 8 << 10;
 
-/// One parsed request: method, path (query string stripped), raw body.
+/// One parsed request: method, path (query string stripped), raw body,
+/// and the `Authorization` header value when present (case-preserved —
+/// bearer tokens are case-sensitive even though header names are not).
 pub struct HttpRequest {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    pub authorization: Option<String>,
 }
 
 fn malformed(msg: &str) -> io::Error {
@@ -36,6 +39,7 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> io::Result<HttpRequest> {
         return Err(malformed("malformed request line"));
     }
     let mut content_length = 0usize;
+    let mut authorization = None;
     loop {
         let mut header = String::new();
         let n = reader.read_line(&mut header)?;
@@ -49,6 +53,10 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> io::Result<HttpRequest> {
         if let Some(v) = lower.strip_prefix("content-length:") {
             content_length =
                 v.trim().parse().map_err(|_| malformed("bad content-length"))?;
+        } else if lower.starts_with("authorization:") {
+            // Take the value from the *original* line: the scheme is
+            // case-insensitive but the credential itself is not.
+            authorization = Some(header["authorization:".len()..].trim().to_string());
         }
     }
     if content_length > MAX_BODY {
@@ -57,7 +65,7 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> io::Result<HttpRequest> {
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
     let path = path.split('?').next().unwrap_or("/").to_string();
-    Ok(HttpRequest { method, path, body })
+    Ok(HttpRequest { method, path, body, authorization })
 }
 
 fn reason(status: u16) -> &'static str {
@@ -65,6 +73,7 @@ fn reason(status: u16) -> &'static str {
         200 => "OK",
         202 => "Accepted",
         400 => "Bad Request",
+        401 => "Unauthorized",
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
@@ -128,6 +137,20 @@ mod tests {
         assert_eq!(req.method, "GET");
         assert_eq!(req.path, "/health");
         assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn authorization_header_captured_case_preserving() {
+        let raw = "GET /jobs HTTP/1.1\r\nAuthorization: Bearer SeCrEt42\r\n\r\n";
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.authorization.as_deref(), Some("Bearer SeCrEt42"));
+        // Header name matching is case-insensitive; the value is not
+        // normalized.
+        let raw = "GET / HTTP/1.1\r\nAUTHORIZATION:   bearer abc  \r\n\r\n";
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.authorization.as_deref(), Some("bearer abc"));
+        let none = read_request(&mut Cursor::new("GET / HTTP/1.1\r\n\r\n")).unwrap();
+        assert!(none.authorization.is_none());
     }
 
     #[test]

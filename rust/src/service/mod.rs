@@ -27,6 +27,19 @@
 //! in the `suspended` state, ready for `POST /jobs/<id>/resume`. A
 //! resumed run finishes bit-identical to one that was never interrupted
 //! (the same guarantee [`crate::api::SearchSession::run_opts`] makes).
+//!
+//! With `--auth-token <secret>` every endpoint except `GET /health`
+//! requires a matching `Authorization: Bearer <secret>` header (401
+//! otherwise) — the actual trust boundary in front of the honor-system
+//! `tenant` field.
+//!
+//! With `--memory-store <path>` the service opens one shared
+//! [`crate::memory::MemoryStore`]: every *completed* job deposits its
+//! elite design, and any job whose request carries a `warm_start` block
+//! seeds its initial population from the store's nearest prior
+//! scenarios (no `store` path needed in the request — the service's
+//! store takes precedence). The store is compacted to `--memory-cap`
+//! records on every startup.
 
 mod http;
 mod job;

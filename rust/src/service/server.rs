@@ -33,6 +33,18 @@ pub struct ServerConfig {
     pub workers: usize,
     pub quota: usize,
     pub checkpoint_dir: Option<PathBuf>,
+    /// When set, every request (except `GET /health`) must carry a
+    /// matching `Authorization: Bearer <token>` header or it is refused
+    /// with 401 — the actual trust boundary, replacing the honor-system
+    /// `tenant` field.
+    pub auth_token: Option<String>,
+    /// Shared design-memory store file: completed jobs deposit their
+    /// elite designs, and jobs whose request carries a `warm_start`
+    /// block seed from it (None = no memory).
+    pub memory_store: Option<PathBuf>,
+    /// Record cap enforced on the memory store at startup (see
+    /// `MemoryStore::compact`).
+    pub memory_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -42,6 +54,9 @@ impl Default for ServerConfig {
             workers: 1,
             quota: 0,
             checkpoint_dir: None,
+            auth_token: None,
+            memory_store: None,
+            memory_cap: crate::memory::DEFAULT_CAP,
         }
     }
 }
@@ -59,6 +74,11 @@ struct Shared {
     state: Mutex<State>,
     cv: Condvar,
     checkpoint_dir: Option<PathBuf>,
+    auth_token: Option<String>,
+    /// The one store every worker shares: sequenced by its own mutex so
+    /// appends from concurrent jobs serialize (it is only touched
+    /// outside the state lock — never hold both).
+    memory: Option<Arc<Mutex<crate::memory::MemoryStore>>>,
 }
 
 /// A started service: the bound address plus a handle into its state,
@@ -100,10 +120,29 @@ pub fn start(cfg: ServerConfig) -> Result<ServiceHandle> {
             eprintln!("restored {n} suspended job(s) from {}", dir.display());
         }
     }
+    // Open the shared design memory and enforce the record cap up front,
+    // mirroring the checkpoint rescan: the store is bounded on every
+    // startup, so it cannot grow without limit across service restarts.
+    let memory = match &cfg.memory_store {
+        Some(path) => {
+            let mut store = crate::memory::MemoryStore::open(path)
+                .map_err(|e| anyhow!("cannot open memory store: {e}"))?;
+            let evicted = store
+                .compact(cfg.memory_cap.max(1))
+                .map_err(|e| anyhow!("cannot compact memory store: {e}"))?;
+            if evicted > 0 {
+                eprintln!("memory store compacted: evicted {evicted} record(s)");
+            }
+            Some(Arc::new(Mutex::new(store)))
+        }
+        None => None,
+    };
     let shared = Arc::new(Shared {
         state: Mutex::new(state),
         cv: Condvar::new(),
         checkpoint_dir: cfg.checkpoint_dir,
+        auth_token: cfg.auth_token,
+        memory,
     });
     for _ in 0..cfg.workers.max(1) {
         let s = Arc::clone(&shared);
@@ -149,6 +188,17 @@ fn handle_connection(shared: &Arc<Shared>, stream: TcpStream) {
         }
     };
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    // Bearer auth when configured. `GET /health` stays open so load
+    // balancers and liveness probes never need the secret.
+    let health = req.method == "GET" && segs.as_slice() == ["health"];
+    let authorized = match &shared.auth_token {
+        Some(token) if !health => bearer_matches(req.authorization.as_deref(), token),
+        _ => true,
+    };
+    if !authorized {
+        let _ = http::error_json(&mut w, 401, "missing or invalid bearer token");
+        return;
+    }
     let result = match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["health"]) => {
             http::respond_json(&mut w, 200, &Json::obj(vec![("ok", Json::Bool(true))]))
@@ -164,6 +214,16 @@ fn handle_connection(shared: &Arc<Shared>, stream: TcpStream) {
     };
     // A failed write means the client went away; nothing left to do.
     let _ = result;
+}
+
+/// `Authorization: Bearer <token>` check: scheme case-insensitive (RFC
+/// 7235), credential compared exactly.
+fn bearer_matches(header: Option<&str>, token: &str) -> bool {
+    let Some(value) = header else { return false };
+    let mut parts = value.splitn(2, char::is_whitespace);
+    let scheme = parts.next().unwrap_or_default();
+    let credential = parts.next().unwrap_or_default().trim();
+    scheme.eq_ignore_ascii_case("bearer") && credential == token
 }
 
 fn submit_job<W: Write>(shared: &Arc<Shared>, body: &[u8], w: &mut W) -> io::Result<()> {
@@ -380,6 +440,7 @@ fn run_job(shared: &Arc<Shared>, id: &str) {
     let Some(job) = st.jobs.get_mut(id) else { return };
     let was_cancelled = job.cancel.as_ref().is_some_and(|f| f.load(Ordering::SeqCst));
     let disk;
+    let mut remember = None;
     match result {
         Ok(report) => {
             if let Some(cp) = &report.checkpoint {
@@ -401,6 +462,11 @@ fn run_job(shared: &Arc<Shared>, id: &str) {
                     vec![("best_edp", finite_num(report.outcome.best_edp))],
                 ));
                 disk = Some(DiskAction::Remove);
+                // Only completed runs feed the design memory — a
+                // suspended or cancelled search's best is provisional.
+                if shared.memory.is_some() {
+                    remember = Some((report.request.clone(), report.outcome.clone()));
+                }
             }
             job.report = Some(report.to_json());
         }
@@ -417,6 +483,17 @@ fn run_job(shared: &Arc<Shared>, id: &str) {
     drop(st);
     shared.cv.notify_all();
     apply_disk(shared, id, disk);
+    // Deposit the elite outside the state lock; memory failures never
+    // fail the job itself.
+    if let (Some(store), Some((request, outcome))) = (&shared.memory, remember) {
+        let recorded = request.resolve().and_then(|(w, p)| {
+            let mut s = store.lock().unwrap_or_else(|e| e.into_inner());
+            s.remember(&w, &p, &request.method, &outcome, request.seed)
+        });
+        if let Err(e) = recorded {
+            eprintln!("warning: could not record job {id} in design memory: {e}");
+        }
+    }
 }
 
 /// Build the session, wire its cancel token and the suspend flag into
@@ -454,7 +531,12 @@ fn execute(
         observer_shared.cv.notify_all();
         SearchControl::Continue
     });
-    session.run_opts(RunOpts { observer: Some(observer), suspend: Some(suspend), resume })
+    session.run_opts(RunOpts {
+        observer: Some(observer),
+        suspend: Some(suspend),
+        resume,
+        memory: shared.memory.clone(),
+    })
 }
 
 fn event(kind: &str, fields: Vec<(&str, Json)>) -> String {
@@ -585,15 +667,30 @@ mod tests {
             workers,
             quota,
             checkpoint_dir: dir,
+            ..Default::default()
         })
         .unwrap()
     }
 
     /// Raw one-shot HTTP exchange: returns (status, body).
     fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+        request_with(addr, method, path, body, None)
+    }
+
+    fn request_with(
+        addr: SocketAddr,
+        method: &str,
+        path: &str,
+        body: &str,
+        auth: Option<&str>,
+    ) -> (u16, String) {
         let mut stream = TcpStream::connect(addr).unwrap();
+        let auth_line = match auth {
+            Some(v) => format!("Authorization: {v}\r\n"),
+            None => String::new(),
+        };
         let msg = format!(
-            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+            "{method} {path} HTTP/1.1\r\nHost: test\r\n{auth_line}Content-Length: {}\r\n\r\n{body}",
             body.len()
         );
         stream.write_all(msg.as_bytes()).unwrap();
@@ -747,6 +844,90 @@ mod tests {
             std::thread::sleep(Duration::from_millis(20));
         }
         assert!(!file.exists(), "finished job's checkpoint file is removed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auth_token_guards_every_endpoint_but_health() {
+        let handle = start(ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            auth_token: Some("s3cret".to_string()),
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = handle.addr;
+        // Health stays open so probes never need the secret.
+        let (s, _) = request(addr, "GET", "/health", "");
+        assert_eq!(s, 200);
+        // Missing header, wrong token, wrong scheme: all 401.
+        let (s, b) = request(addr, "GET", "/jobs", "");
+        assert_eq!(s, 401, "{b}");
+        assert!(b.contains("bearer token"), "{b}");
+        let (s, _) = request_with(addr, "GET", "/jobs", "", Some("Bearer wrong"));
+        assert_eq!(s, 401);
+        let (s, _) = request_with(addr, "GET", "/jobs", "", Some("Basic s3cret"));
+        assert_eq!(s, 401);
+        let body = submit_body("random", 20, "t", 0);
+        let (s, _) = request(addr, "POST", "/jobs", &body);
+        assert_eq!(s, 401);
+        // The matching token gets through; the scheme word is
+        // case-insensitive even though the credential is not.
+        let (s, b) = request_with(addr, "GET", "/jobs", "", Some("bearer s3cret"));
+        assert_eq!(s, 200, "{b}");
+        let (s, b) = request_with(addr, "POST", "/jobs", &body, Some("Bearer s3cret"));
+        assert_eq!(s, 202, "{b}");
+    }
+
+    #[test]
+    fn completed_jobs_feed_memory_and_warm_start_seeds_from_it() {
+        let dir =
+            std::env::temp_dir().join(format!("sparsemap-service-mem-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = dir.join("memory.bin");
+        let handle = start(ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            memory_store: Some(store.clone()),
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = handle.addr;
+        // First job runs cold; on completion its elite is deposited in
+        // the shared store.
+        let (s, b) = request(addr, "POST", "/jobs", &submit_body("es-std", 400, "t", 0));
+        assert_eq!(s, 202, "{b}");
+        let id = Json::parse(&b).unwrap().get("id").and_then(Json::as_str).unwrap().to_string();
+        poll_state(addr, &id, "done", 1500);
+        for _ in 0..200 {
+            if store.exists() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(store.exists(), "completed job persisted to the memory store");
+
+        // Second job opts into warm-start with no store path of its own:
+        // the service's shared store supplies the seeds, and the report
+        // records the provenance.
+        let req = SearchRequest::new()
+            .workload_named("mm1")
+            .platform_named("mobile")
+            .method("es-std")
+            .budget(400)
+            .seed(8)
+            .warm_start(crate::api::WarmStart::default());
+        let (s, b) = request(addr, "POST", "/jobs", &req.to_json().dumps());
+        assert_eq!(s, 202, "{b}");
+        let id2 = Json::parse(&b).unwrap().get("id").and_then(Json::as_str).unwrap().to_string();
+        let detail = poll_state(addr, &id2, "done", 1500);
+        let outcome = detail.get("report").and_then(|r| r.get("outcome")).unwrap();
+        let hits = outcome.get("memory_hits").and_then(Json::as_u64).unwrap_or(0);
+        assert!(hits > 0, "warm-started job found no seeds: {}", outcome.pretty());
+        let tags = outcome.get("seeded_from").and_then(Json::as_arr).unwrap();
+        assert!(
+            tags.iter().any(|t| t.as_str().is_some_and(|s| s.starts_with("mm1@mobile"))),
+            "{}",
+            outcome.pretty()
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

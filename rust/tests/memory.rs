@@ -1,0 +1,157 @@
+//! End-to-end design-memory acceptance: a warm-started search must reach
+//! the cold run's final best cost in at most half the evals, stay
+//! deterministic for a fixed (store, seed, thread count), and degrade to
+//! an exactly-cold run when the store is empty.
+
+use sparsemap::api::{RunOpts, SearchReport, SearchRequest, WarmStart};
+use sparsemap::memory::MemoryStore;
+use sparsemap::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+fn store_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("sparsemap_memory_accept");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(format!("{}_{}.bin", name, std::process::id()))
+}
+
+fn arm(seed: u64, threads: usize) -> SearchRequest {
+    SearchRequest::new()
+        .workload_named("mm1")
+        .platform_named("mobile")
+        .method("es-std")
+        .method_opts(Json::parse(r#"{"population": 16}"#).unwrap())
+        .budget(600)
+        .seed(seed)
+        .threads(threads)
+}
+
+/// Deposit a finished run's elite into a fresh store at `path`.
+fn deposit(path: &Path, report: &SearchReport) {
+    let session = report.request.clone().build().unwrap();
+    let mut store = MemoryStore::open(path).unwrap();
+    let recorded = store
+        .remember(
+            session.workload(),
+            session.platform(),
+            &report.outcome.method,
+            &report.outcome,
+            report.request.seed,
+        )
+        .unwrap();
+    assert!(recorded, "a finite-best run must deposit a record");
+}
+
+fn file_store(path: &Path) -> WarmStart {
+    WarmStart { store: Some(path.display().to_string()), ..Default::default() }
+}
+
+/// First curve point at or below `target`, by submission count.
+fn evals_to_reach(report: &SearchReport, target: f64) -> Option<usize> {
+    report.outcome.curve.iter().find(|&&(_, v)| v <= target).map(|&(e, _)| e)
+}
+
+#[test]
+fn warm_started_run_reaches_cold_best_in_half_the_evals() {
+    let path = store_path("half_evals");
+    let _ = std::fs::remove_file(&path);
+
+    let cold = arm(5, 1).build().unwrap().run().unwrap();
+    assert!(cold.outcome.best_edp.is_finite(), "cold run found a valid design");
+    assert_eq!(cold.memory_hits(), 0, "no warm-start requested");
+    deposit(&path, &cold);
+
+    // Same scenario, different seed, seeded from the store.
+    let warm = arm(9, 1).warm_start(file_store(&path)).build().unwrap().run().unwrap();
+    assert!(warm.memory_hits() > 0, "the store held a usable neighbour");
+    assert!(
+        warm.seeded_from().iter().any(|t| t.starts_with("mm1@mobile")),
+        "provenance names the source scenario: {:?}",
+        warm.seeded_from()
+    );
+    assert!(
+        warm.outcome.best_edp <= cold.outcome.best_edp,
+        "a seeded population can only improve on its seed"
+    );
+
+    // The acceptance bound: the warm run touches the cold run's final
+    // best within half the evals the cold run spent (in practice within
+    // the first population, since the seed *is* the cold elite).
+    let reach =
+        evals_to_reach(&warm, cold.outcome.best_edp).expect("warm run reaches the cold best");
+    assert!(
+        reach * 2 <= cold.outcome.evals,
+        "cold best reached only at eval {reach} of {}",
+        cold.outcome.evals
+    );
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn warm_start_is_deterministic_for_fixed_store_seed_and_threads() {
+    let path = store_path("determinism");
+    let _ = std::fs::remove_file(&path);
+    let cold = arm(3, 1).build().unwrap().run().unwrap();
+    deposit(&path, &cold);
+
+    let run = |threads| {
+        arm(11, threads).warm_start(file_store(&path)).build().unwrap().run().unwrap()
+    };
+    let a = run(1);
+    let b = run(2);
+    let c = run(1);
+    // Bit-identical across repeats AND across thread counts (parallel
+    // evaluation preserves trajectories; seeding must not break that).
+    for other in [&b, &c] {
+        assert_eq!(a.outcome.best_edp.to_bits(), other.outcome.best_edp.to_bits());
+        assert_eq!(a.outcome.best_genome, other.outcome.best_genome);
+        assert_eq!(a.outcome.curve, other.outcome.curve);
+        assert_eq!(a.memory_hits(), other.memory_hits());
+        assert_eq!(a.seeded_from(), other.seeded_from());
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn host_store_supplies_seeds_and_missing_file_runs_cold() {
+    let path = store_path("host");
+    let _ = std::fs::remove_file(&path);
+    let cold = arm(7, 1).build().unwrap().run().unwrap();
+    deposit(&path, &cold);
+
+    // A `warm_start` block with no store path seeds from the
+    // host-supplied shared store (the service's arrangement).
+    let shared = Arc::new(Mutex::new(MemoryStore::open(&path).unwrap()));
+    let warm = arm(13, 1)
+        .warm_start(WarmStart::default())
+        .build()
+        .unwrap()
+        .run_opts(RunOpts { memory: Some(shared), ..Default::default() })
+        .unwrap();
+    assert!(warm.memory_hits() > 0, "host store supplied the seeds");
+
+    // A configured-but-missing store file is an *empty* store: zero
+    // hits, and the trajectory is bit-identical to a plain cold run.
+    let missing = store_path("does_not_exist");
+    let _ = std::fs::remove_file(&missing);
+    let empty = arm(13, 1).warm_start(file_store(&missing)).build().unwrap().run().unwrap();
+    assert_eq!(empty.memory_hits(), 0);
+    assert!(empty.seeded_from().is_empty());
+    let plain = arm(13, 1).build().unwrap().run().unwrap();
+    assert_eq!(empty.outcome.best_edp.to_bits(), plain.outcome.best_edp.to_bits());
+    assert_eq!(empty.outcome.curve, plain.outcome.curve);
+
+    // With no store configured anywhere, an explicit warm-start request
+    // has nothing to honor and errors instead of silently running cold.
+    let err = arm(13, 1)
+        .warm_start(WarmStart::default())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("warm_start has no store"), "{err}");
+
+    let _ = std::fs::remove_file(&path);
+}

@@ -4,6 +4,7 @@
 use sparsemap::arch::{Boundary, Platform};
 use sparsemap::genome::{decode, ops, tensor_ranks, GenomeSpec};
 use sparsemap::mapping::{loopnest, permutation, MapLevel};
+use sparsemap::memory::{decode_file, dist2, header_bytes, AnnIndex, MemRecord, EMBED_DIM};
 use sparsemap::model::{evaluate_features, extract, platform_vector, NativeEvaluator};
 use sparsemap::sparse::{stack_storage, stack_storage_model, RankFormat};
 use sparsemap::sparsity::DensityModel;
@@ -332,6 +333,152 @@ fn prop_uniform_reproduces_legacy_scalar_path() {
             ev.eval_genome(&g).edp.to_bits(),
             em.eval_genome(&g).edp.to_bits()
         );
+    }
+}
+
+fn random_mem_record(rng: &mut Pcg64) -> MemRecord {
+    let mut embed = [0.0f64; EMBED_DIM];
+    for v in embed.iter_mut() {
+        *v = rng.normal();
+    }
+    MemRecord {
+        tag: format!("w{}@p{}#m{}", rng.below(50), rng.below(8), rng.below(4)),
+        best_edp: if rng.chance(0.05) { f64::INFINITY } else { rng.f64() * 1e12 },
+        evals: rng.below(1 << 20) as u32,
+        valid_evals: rng.below(1 << 20) as u32,
+        seed: rng.next_u64(),
+        embed,
+        genome: (0..1 + rng.index(48)).map(|_| rng.range_u32(0, 5000)).collect(),
+    }
+}
+
+fn random_embed(rng: &mut Pcg64) -> [f64; EMBED_DIM] {
+    let mut e = [0.0f64; EMBED_DIM];
+    for v in e.iter_mut() {
+        *v = rng.normal();
+    }
+    e
+}
+
+/// Exact top-k by squared distance, the reference the index must match:
+/// rank by `(dist2, id)` exactly as `AnnIndex::query` documents.
+fn exact_top_k(corpus: &[[f64; EMBED_DIM]], q: &[f64; EMBED_DIM], k: usize) -> Vec<u32> {
+    let mut ranked: Vec<(f64, u32)> =
+        corpus.iter().enumerate().map(|(i, e)| (dist2(e, q), i as u32)).collect();
+    ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    ranked.truncate(k);
+    ranked.into_iter().map(|(_, id)| id).collect()
+}
+
+/// Invariant: any memory record round-trips through the on-disk encoding
+/// bit-exactly, alone and inside a multi-record file.
+#[test]
+fn prop_memory_record_round_trips_bit_exactly() {
+    let mut rng = Pcg64::seeded(201);
+    let mut file = header_bytes().to_vec();
+    let mut recs = Vec::new();
+    for _ in 0..200 {
+        let rec = random_mem_record(&mut rng);
+        let bytes = rec.encode();
+        let (back, used) = MemRecord::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, rec);
+        assert_eq!(back.best_edp.to_bits(), rec.best_edp.to_bits());
+        for (a, b) in back.embed.iter().zip(&rec.embed) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        if recs.len() < 40 {
+            file.extend_from_slice(&bytes);
+            recs.push(rec);
+        }
+    }
+    assert_eq!(decode_file(&file).unwrap(), recs);
+}
+
+/// Invariant: a truncated or corrupted store never silently yields
+/// different data — every cut mid-record rejects, and every single-byte
+/// flip either rejects or decodes to the identical records.
+#[test]
+fn prop_memory_store_rejects_truncation_and_corruption() {
+    let mut rng = Pcg64::seeded(202);
+    for _ in 0..8 {
+        let recs: Vec<MemRecord> =
+            (0..1 + rng.index(4)).map(|_| random_mem_record(&mut rng)).collect();
+        let mut file = header_bytes().to_vec();
+        for r in &recs {
+            file.extend_from_slice(&r.encode());
+        }
+        assert_eq!(decode_file(&file).unwrap(), recs);
+        // Cuts at exact record boundaries legitimately parse as a
+        // shorter file; every other proper prefix must reject.
+        let mut boundaries = vec![16usize];
+        for r in &recs {
+            boundaries.push(boundaries.last().unwrap() + r.encode().len());
+        }
+        for _ in 0..30 {
+            let cut = 17 + rng.index(file.len() - 17);
+            if boundaries.contains(&cut) {
+                continue;
+            }
+            assert!(decode_file(&file[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+        // 60 random byte flips.
+        for _ in 0..60 {
+            let i = rng.index(file.len());
+            let bit = 1u8 << rng.index(8);
+            let mut evil = file.clone();
+            evil[i] ^= bit;
+            if let Ok(back) = decode_file(&evil) {
+                assert_eq!(back, recs, "flip of bit {bit:#x} at byte {i} changed the data");
+            }
+        }
+    }
+}
+
+/// Invariant: the ANN index returns exactly the brute-force top-k (same
+/// ids, same order) for arbitrary corpora and queries at pinned seeds.
+#[test]
+fn prop_ann_top_k_matches_brute_force() {
+    let mut rng = Pcg64::seeded(203);
+    for _ in 0..10 {
+        let n = 1 + rng.index(512);
+        let corpus: Vec<[f64; EMBED_DIM]> = (0..n).map(|_| random_embed(&mut rng)).collect();
+        let index = AnnIndex::build(&corpus);
+        for _ in 0..10 {
+            let q = random_embed(&mut rng);
+            let k = 1 + rng.index(12);
+            assert_eq!(index.query(&q, k), exact_top_k(&corpus, &q, k), "n={n} k={k}");
+        }
+    }
+}
+
+/// Invariant: inserting records one at a time is indistinguishable from
+/// building the index over the full corpus — including past the
+/// brute-force cutoff where the LSH buckets take over — and queries are
+/// deterministic across identically-built instances.
+#[test]
+fn prop_ann_incremental_insert_consistent_with_batch_build() {
+    let mut rng = Pcg64::seeded(204);
+    for round in 0..4 {
+        // Cover both sides of the exact-scan cutoff (512).
+        let n = if round % 2 == 0 { 40 + rng.index(200) } else { 530 + rng.index(200) };
+        let corpus: Vec<[f64; EMBED_DIM]> = (0..n).map(|_| random_embed(&mut rng)).collect();
+        let batch = AnnIndex::build(&corpus);
+        let mut incremental = AnnIndex::new();
+        for (i, e) in corpus.iter().enumerate() {
+            assert_eq!(incremental.insert(*e), i as u32);
+        }
+        assert_eq!(incremental.len(), batch.len());
+        for _ in 0..10 {
+            let q = random_embed(&mut rng);
+            let k = 1 + rng.index(10);
+            let got = incremental.query(&q, k);
+            assert_eq!(got, batch.query(&q, k), "n={n} k={k}");
+            assert_eq!(got, AnnIndex::build(&corpus).query(&q, k), "rebuild differs");
+            // Results come back nearest-first.
+            let d: Vec<f64> = got.iter().map(|&i| dist2(&corpus[i as usize], &q)).collect();
+            assert!(d.windows(2).all(|w| w[0] <= w[1]), "not sorted by distance");
+        }
     }
 }
 
