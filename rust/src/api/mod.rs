@@ -19,7 +19,10 @@
 //!   cancellation from other threads, **cooperative suspension** into a
 //!   [`crate::optimizer::Checkpoint`] and bit-identical **resume** from
 //!   one; it also lowers to a raw [`crate::search::EvalContext`] for
-//!   drivers with bespoke loops.
+//!   drivers with bespoke loops. [`RunOpts`] additionally attaches the
+//!   observability layer: `trace` streams a `sparsemap.trace.v1` NDJSON
+//!   trace of the run and `metrics` scopes the run into a
+//!   [`crate::obs::Metrics`] registry (see [`crate::obs`]).
 //! * [`SearchReport`] — the typed result, `to_json`/`from_json`
 //!   round-trippable for storage and services (schema
 //!   [`REPORT_SCHEMA`]; the v1 form still parses).

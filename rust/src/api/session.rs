@@ -4,11 +4,14 @@ use super::report::SearchReport;
 use super::request::SearchRequest;
 use crate::arch::Platform;
 use crate::memory::MemoryStore;
+use crate::obs::{Metrics, TraceObserver, TraceWriter};
 use crate::optimizer::{self, Checkpoint};
 use crate::search::{Backend, EvalContext, SearchObserver};
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use crate::workload::Workload;
 use anyhow::{ensure, Result};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -36,6 +39,23 @@ pub struct RunOpts {
     /// request carries a `warm_start` block; takes precedence over the
     /// block's own `store` path.
     pub memory: Option<Arc<Mutex<MemoryStore>>>,
+    /// Stream a `sparsemap.trace.v1` NDJSON trace of the run to this
+    /// path (CLI: `--trace run.ndjson`; render with `sparsemap trace
+    /// summarize`): a `start` header, one `generation` record per
+    /// evaluated batch, checkpoint/resume markers, a final per-stage
+    /// latency snapshot and a `finish` summary. Composes with
+    /// [`RunOpts::observer`] — the trace tees each batch before
+    /// delegating. Deterministic modulo the `ms` timestamps; trace IO
+    /// errors after file creation never abort the search.
+    pub trace: Option<PathBuf>,
+    /// Metrics scope to record into (see [`crate::obs`]): per-stage
+    /// latency histograms, eval/cache/stage-memo counters and the
+    /// best-EDP gauge. The service passes [`crate::obs::global`] so
+    /// `GET /metrics` sees every job; `None` (the library default)
+    /// records nothing and keeps the evaluation hot path zero-alloc. A
+    /// traced run without an explicit scope gets a private one so its
+    /// `stages` snapshot carries data.
+    pub metrics: Option<Arc<Metrics>>,
 }
 
 /// A validated search arm. Created by [`SearchRequest::build`]; run with
@@ -209,7 +229,41 @@ impl SearchSession {
             }
         }
 
-        let mut ctx = self.make_context(opts.observer);
+        // Observability plumbing: a traced run always has a metrics
+        // scope (the caller's, or a private one) so its final `stages`
+        // snapshot carries real timings; a metrics scope without a
+        // trace just records. File *creation* errors fail the run (the
+        // caller asked for a trace it would never get); IO errors on an
+        // open trace are swallowed — tracing must never abort a search.
+        let metrics = match (&opts.metrics, &opts.trace) {
+            (Some(m), _) => Some(Arc::clone(m)),
+            (None, Some(_)) => Some(Arc::new(Metrics::new())),
+            (None, None) => None,
+        };
+        let trace = match &opts.trace {
+            None => None,
+            Some(path) => {
+                let mut w = TraceWriter::create(path).map_err(|e| {
+                    anyhow::anyhow!("cannot create trace file '{}': {e}", path.display())
+                })?;
+                let _ = w.start(
+                    &self.workload.id,
+                    &self.platform.name,
+                    spec.name,
+                    self.request.budget,
+                    self.request.seed,
+                );
+                Some(Arc::new(Mutex::new(w)))
+            }
+        };
+        let observer = match &trace {
+            Some(t) => Some(Box::new(TraceObserver::new(Arc::clone(t), opts.observer))
+                as Box<dyn SearchObserver>),
+            None => opts.observer,
+        };
+
+        let mut ctx = self.make_context(observer);
+        ctx.set_metrics(metrics.clone());
         ctx.set_suspend_flag(opts.suspend.clone());
         let mut resumed_from = None;
         if let Some(cp) = &opts.resume {
@@ -222,6 +276,11 @@ impl SearchSession {
             ctx.restore_eval_state(&cp.eval)?;
             opt.resume(&cp.state)?;
             resumed_from = Some(ctx.used());
+            if let Some(t) = &trace {
+                if let Ok(mut w) = t.lock() {
+                    let _ = w.marker("resume", vec![("evals", Json::num(ctx.used() as f64))]);
+                }
+            }
         }
         let t0 = std::time::Instant::now();
         opt.run(&mut ctx, self.request.seed);
@@ -247,14 +306,28 @@ impl SearchSession {
             None
         };
         let stopped_early = self.stop.load(Ordering::SeqCst) || suspended;
+        let evals_used = ctx.used();
         let mut outcome = ctx.outcome(spec.name);
         opt.annotate(&mut outcome);
         outcome.memory_hits = memory_hits;
         outcome.seeded_from = seeded_from;
+        let wall_s = t0.elapsed().as_secs_f64();
+        if let Some(t) = &trace {
+            if let Ok(mut w) = t.lock() {
+                if checkpoint.is_some() {
+                    let _ =
+                        w.marker("checkpoint", vec![("evals", Json::num(evals_used as f64))]);
+                }
+                if let Some(m) = &metrics {
+                    let _ = w.stages(m);
+                }
+                let _ = w.finish(outcome.best_edp, outcome.evals, wall_s, stopped_early);
+            }
+        }
         Ok(SearchReport {
             request: self.request,
             outcome,
-            wall_s: t0.elapsed().as_secs_f64(),
+            wall_s,
             stopped_early,
             checkpoint,
             resumed_from,
@@ -390,6 +463,94 @@ mod tests {
         assert_eq!(resumed.outcome.best_edp.to_bits(), full.outcome.best_edp.to_bits());
         assert_eq!(resumed.outcome.best_genome, full.outcome.best_genome);
         assert_eq!(resumed.outcome.curve, full.outcome.curve);
+    }
+
+    #[test]
+    fn run_opts_trace_streams_valid_ndjson_and_fills_metrics_scope() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir()
+            .join(format!("sparsemap-session-trace-{}.ndjson", std::process::id()));
+        let metrics = Arc::new(crate::obs::Metrics::new());
+        let report = tiny()
+            .build()
+            .unwrap()
+            .run_opts(RunOpts {
+                trace: Some(path.clone()),
+                metrics: Some(Arc::clone(&metrics)),
+                ..Default::default()
+            })
+            .unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let records = crate::obs::read_trace(&text).unwrap();
+        let ev = |r: &Json| r.get("ev").and_then(Json::as_str).unwrap_or("");
+        assert_eq!(records[0].get("ev").and_then(Json::as_str), Some("start"));
+        assert_eq!(records[0].get("workload").and_then(Json::as_str), Some("mm1"));
+        assert!(records.iter().filter(|r| ev(r) == "generation").count() >= 1);
+        assert!(records.iter().any(|r| ev(r) == "stages"));
+        let fin = records.iter().rev().find(|r| ev(r) == "finish").expect("finish record");
+        assert_eq!(
+            fin.get("evals").and_then(Json::as_u64),
+            Some(report.outcome.evals as u64)
+        );
+
+        // The caller's metrics scope saw the whole run, and the trace
+        // renders back into the human summary.
+        assert_eq!(metrics.evals.get(), report.outcome.evals as u64);
+        assert!(metrics.stage_ns[0].snapshot().count >= 1, "decode timings recorded");
+        let summary = crate::obs::summarize(&text).unwrap();
+        assert!(summary.contains("convergence"), "{summary}");
+        assert!(summary.contains("finished: best_edp="), "{summary}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn traced_suspend_resume_leaves_lifecycle_markers() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir();
+        let p1 = dir.join(format!("sparsemap-trace-half-{}.ndjson", std::process::id()));
+        let p2 = dir.join(format!("sparsemap-trace-rest-{}.ndjson", std::process::id()));
+        let mk = || tiny().method("sparsemap").budget(800).seed(17);
+
+        let flag = Arc::new(AtomicBool::new(false));
+        let obs_flag = Arc::clone(&flag);
+        let half = mk()
+            .build()
+            .unwrap()
+            .run_opts(RunOpts {
+                observer: Some(Box::new(move |p: &Progress| {
+                    if p.evals >= 400 {
+                        obs_flag.store(true, Ordering::SeqCst);
+                    }
+                    SearchControl::Continue
+                })),
+                suspend: Some(Arc::clone(&flag)),
+                trace: Some(p1.clone()),
+                ..Default::default()
+            })
+            .unwrap();
+        let cp_json = half.checkpoint.expect("suspended run must carry a checkpoint");
+        let cp = crate::optimizer::Checkpoint::from_json(&cp_json).unwrap();
+        let resumed = mk()
+            .build()
+            .unwrap()
+            .run_opts(RunOpts { resume: Some(cp), trace: Some(p2.clone()), ..Default::default() })
+            .unwrap();
+        assert!(!resumed.stopped_early);
+
+        let marker_kinds = |path: &std::path::Path| -> Vec<String> {
+            let records =
+                crate::obs::read_trace(&std::fs::read_to_string(path).unwrap()).unwrap();
+            records
+                .iter()
+                .filter(|r| r.get("ev").and_then(Json::as_str) == Some("marker"))
+                .map(|r| r.get("kind").and_then(Json::as_str).unwrap_or("?").to_string())
+                .collect()
+        };
+        assert_eq!(marker_kinds(&p1), vec!["checkpoint"]);
+        assert_eq!(marker_kinds(&p2), vec!["resume"]);
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
     }
 
     #[test]

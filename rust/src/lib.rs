@@ -88,6 +88,7 @@ pub mod genome;
 pub mod mapping;
 pub mod memory;
 pub mod model;
+pub mod obs;
 pub mod optimizer;
 pub mod report;
 #[cfg(feature = "xla")]

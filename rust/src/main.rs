@@ -6,7 +6,7 @@
 //! argument-parsing layer over `SearchRequest`/`SearchSession`. Run with
 //! no arguments for usage.
 
-use sparsemap::api::SearchRequest;
+use sparsemap::api::{RunOpts, SearchRequest};
 use sparsemap::arch::Platform;
 use sparsemap::es::sensitivity::calibrate;
 use sparsemap::es::CalibConfig;
@@ -45,7 +45,8 @@ Utility commands:
                          design-memory store; add [--warm-start] (with
                          [--warm-start-frac F] [--warm-start-k K]) to seed
                          the initial population from the store's nearest
-                         prior scenarios
+                         prior scenarios; [--trace FILE] streams a
+                         sparsemap.trace.v1 NDJSON trace of the run
   run-spec FILE        run a search request from a JSON spec file: custom
                          workloads (any einsum contraction) and platforms
                          (any PE-array geometry) welcome; CLI options
@@ -73,9 +74,13 @@ Utility commands:
                          [--memory-cap N] records at startup
   memory ACTION        inspect or maintain a design-memory store
                          (--store FILE): `stats` prints per-scenario
-                         record counts, `compact --cap N` evicts
-                         worst-cost records down to the cap, `export`
-                         dumps every record as JSON
+                         record counts and a nearest-neighbour distance
+                         histogram over the stored embeddings, `compact
+                         --cap N` evicts worst-cost records down to the
+                         cap, `export` dumps every record as JSON
+  trace summarize FILE render an NDJSON trace written by --trace back
+                         into a per-stage latency table and a
+                         generation-by-generation convergence curve
   calibrate            run high-sensitivity gene calibration and print S(v)
                          --workload mm3 --platform cloud
   inspect-tensor FILE  parse a sparse tensor file (COO/MatrixMarket or
@@ -117,6 +122,7 @@ fn check_args(args: &Args) -> anyhow::Result<()> {
         "memory",
         "warm-start-frac",
         "warm-start-k",
+        "trace",
     ];
     const SEARCH_FLAGS: &[&str] = &["show-design", "json", "warm-start"];
     let (opts, flags): (&[&str], &[&str]) = match args.subcommand.as_str() {
@@ -129,6 +135,7 @@ fn check_args(args: &Args) -> anyhow::Result<()> {
             &[],
         ),
         "memory" => (&["store", "cap"], &[]),
+        "trace" => (&[], &[]),
         "table4" => (&["workloads"], &["summary"]),
         _ => (&[], &[]),
     };
@@ -213,7 +220,9 @@ fn run_and_report(req: SearchRequest, args: &Args) -> anyhow::Result<()> {
     let out_dir = PathBuf::from(args.opt_or("out", "results"));
     let session = req.build()?;
     let (workload, platform) = (session.workload().clone(), session.platform().clone());
-    let report = session.run()?;
+    let trace = args.opt("trace").map(PathBuf::from);
+    let report =
+        session.run_opts(RunOpts { trace: trace.clone(), ..Default::default() })?;
     let outcome = &report.outcome;
 
     if args.flag("json") {
@@ -269,6 +278,12 @@ fn run_and_report(req: SearchRequest, args: &Args) -> anyhow::Result<()> {
     std::fs::write(&path, report.to_json().pretty())?;
     if !args.flag("json") {
         println!("report written to {}", path.display());
+        if let Some(t) = &trace {
+            println!(
+                "trace written to {} (render with `sparsemap trace summarize`)",
+                t.display()
+            );
+        }
     }
     // `--memory` records the winning design so later runs on similar
     // scenarios can warm-start from it.
@@ -407,6 +422,21 @@ fn cmd_memory(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `sparsemap trace summarize <file.ndjson>` — render a trace written by
+/// `--trace` back into per-stage latency and convergence tables.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let usage = "usage: sparsemap trace summarize <file.ndjson>";
+    let action = args.positional.first().ok_or_else(|| anyhow::anyhow!(usage))?.as_str();
+    anyhow::ensure!(action == "summarize", "unknown trace action '{action}'\n{usage}");
+    let path = args.positional.get(1).ok_or_else(|| anyhow::anyhow!(usage))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read trace file '{path}': {e}"))?;
+    let summary =
+        sparsemap::obs::summarize(&text).map_err(|e| anyhow::anyhow!("'{path}': {e}"))?;
+    print!("{summary}");
+    Ok(())
+}
+
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     let cfg = exp_config(args)?;
     let session = SearchRequest::new()
@@ -489,6 +519,7 @@ fn main() -> anyhow::Result<()> {
         "methods" => cmd_methods(&args),
         "serve" => cmd_serve(&args)?,
         "memory" => cmd_memory(&args)?,
+        "trace" => cmd_trace(&args)?,
         "calibrate" => cmd_calibrate(&args)?,
         "inspect-tensor" => cmd_inspect_tensor(&args)?,
         "demo" => cmd_demo()?,

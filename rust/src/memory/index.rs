@@ -97,7 +97,12 @@ impl AnnIndex {
         if k == 0 || self.embeds.is_empty() {
             return Vec::new();
         }
+        // The process-global metrics split answered queries into ANN
+        // bucket probes vs exact scans — the ratio shows when a store
+        // has outgrown `BRUTE_FORCE_LIMIT` and the LSH path earns keep.
+        let m = crate::obs::global();
         if self.embeds.len() <= BRUTE_FORCE_LIMIT {
+            m.memory_exact_scans.inc();
             return self.rank(e, (0..self.embeds.len() as u32).collect(), k);
         }
         // Multi-probe: expand Hamming radius until enough candidates.
@@ -116,8 +121,10 @@ impl AnnIndex {
         }
         if cands.len() < k {
             // Sparse neighbourhood: degrade to exact rather than thin.
+            m.memory_exact_scans.inc();
             return self.rank(e, (0..self.embeds.len() as u32).collect(), k);
         }
+        m.memory_ann_probes.inc();
         self.rank(e, cands, k)
     }
 

@@ -16,6 +16,14 @@
 //! [`crate::api::SearchRequest`]), and with it unset every request,
 //! report and trajectory stays byte-identical to a build without this
 //! module.
+//!
+//! The layer is observable through the process-global [`crate::obs`]
+//! registry: queries count ANN bucket probes vs exact-scan answers
+//! (the ratio shows when a store outgrows the brute-force regime),
+//! warm-start seed injections and store size are tracked, and
+//! `sparsemap memory stats` reports a nearest-neighbour distance
+//! histogram over the stored embeddings (`nn_dist`) so scenario
+//! clustering — and therefore seed quality — is visible at a glance.
 
 pub mod embed;
 pub mod index;

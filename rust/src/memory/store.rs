@@ -8,7 +8,7 @@
 //! operation that rewrites the file, and it does so atomically
 //! (tmp + rename).
 
-use super::embed::{scenario_embedding, scenario_tag, EMBED_DIM};
+use super::embed::{dist2, scenario_embedding, scenario_tag, EMBED_DIM};
 use super::index::AnnIndex;
 use super::record::{decode_file, header_bytes, MemRecord, MEMORY_SCHEMA};
 use crate::arch::Platform;
@@ -123,7 +123,10 @@ impl MemoryStore {
     /// closest first. Deterministic for a fixed store.
     pub fn seed(&self, w: &Workload, p: &Platform, k: usize) -> Vec<&MemRecord> {
         let e = scenario_embedding(w, p);
-        self.index.query(&e, k).into_iter().map(|id| &self.records[id as usize]).collect()
+        let hits: Vec<&MemRecord> =
+            self.index.query(&e, k).into_iter().map(|id| &self.records[id as usize]).collect();
+        crate::obs::global().memory_seeds.add(hits.len() as u64);
+        hits
     }
 
     /// Turn nearest-neighbour records into genomes valid for `spec`:
@@ -229,12 +232,31 @@ impl MemoryStore {
                 e.1 = r.best_edp;
             }
         }
+        // Nearest-neighbour distance histogram over the stored
+        // embeddings: how tightly the memory clusters in scenario space
+        // (a spread-out store warm-starts poorly because every query
+        // lands far from its seeds). Squared-L2 distances recorded at
+        // 1e-9 resolution into the power-of-two-bucket histogram, so
+        // the rendered quantiles come back in distance units.
+        let nn = crate::obs::Histogram::new();
+        for (i, r) in self.records.iter().enumerate() {
+            let nearest = self
+                .index
+                .query(&r.embed, 2)
+                .into_iter()
+                .find(|&id| id as usize != i)
+                .map(|id| dist2(&r.embed, &self.records[id as usize].embed));
+            if let Some(d2) = nearest {
+                nn.record((d2 * 1e9).round() as u64);
+            }
+        }
         Json::obj(vec![
             ("schema", Json::str(MEMORY_SCHEMA)),
             ("path", Json::str(&self.path.display().to_string())),
             ("records", Json::num(self.records.len() as f64)),
             ("scenarios", Json::num(clusters.len() as f64)),
             ("embed_dim", Json::num(EMBED_DIM as f64)),
+            ("nn_dist", nn.snapshot().to_json(1e-9)),
             (
                 "clusters",
                 Json::Arr(
@@ -325,6 +347,8 @@ mod tests {
             members: vec![],
             memory_hits: 0,
             seeded_from: vec![],
+            model_calls: 0,
+            batches: 0,
         }
     }
 
@@ -439,6 +463,25 @@ mod tests {
         assert!(stats.contains("\"scenarios\":1") || stats.contains("\"scenarios\": 1"));
         let export = st.export_json();
         assert_eq!(export.get("entries").and_then(Json::as_arr).unwrap().len(), 1);
+        // A single record has no neighbour: the NN histogram is empty.
+        let nn = st.stats_json().get("nn_dist").cloned().unwrap();
+        assert_eq!(nn.get("count").and_then(Json::as_u64), Some(0), "{}", nn.pretty());
+
+        // With more records each one has a nearest neighbour, and the
+        // two mm1 records sit closer to each other than to mm10.
+        let w2 = table3::by_id("mm10").unwrap();
+        let spec2 = GenomeSpec::for_workload(&w2);
+        st.remember(&w, &p, "es-std", &outcome_with(6.0, spec.random(&mut rng)), 5).unwrap();
+        st.remember(&w2, &p, "es-std", &outcome_with(7.0, spec2.random(&mut rng)), 6).unwrap();
+        let nn = st.stats_json().get("nn_dist").cloned().unwrap();
+        assert_eq!(nn.get("count").and_then(Json::as_u64), Some(3), "{}", nn.pretty());
+        // The two identical-scenario records are distance 0 apart, so
+        // the median bucket bound sits at the histogram floor while the
+        // odd-one-out pushes the max up.
+        let p50 = nn.get("p50").and_then(Json::as_f64).unwrap();
+        let max = nn.get("max").and_then(Json::as_f64).unwrap();
+        assert!(p50 <= 1e-8, "identical scenarios are zero distance apart: {p50}");
+        assert!(max > p50, "mm10 is far from the mm1 pair: {max}");
         let _ = fs::remove_file(&path);
     }
 }

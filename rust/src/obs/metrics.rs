@@ -1,0 +1,675 @@
+//! Lock-free metrics primitives and the fixed-series registry.
+//!
+//! [`Counter`], [`Gauge`] and the power-of-two-bucket [`Histogram`] are
+//! plain atomics: recording is wait-free, allocation-free and `&self`
+//! (share them behind an `Arc` or the process-global [`global`] handle).
+//! A [`Metrics`] registry is a *fixed struct* of named series rather
+//! than a dynamic name → series map: registration cannot fail, lookups
+//! are field accesses, and the disabled path (no registry attached) is a
+//! single `Option` branch — the eval hot path stays zero-alloc with
+//! metrics compiled in (`rust/tests/alloc_steady_state.rs`).
+//!
+//! Two scopes exist: [`global`] (one process-wide registry — the
+//! service records here and serves it at `GET /metrics` in Prometheus
+//! text exposition via [`Metrics::render_prometheus`]) and per-run
+//! instances (`Arc<Metrics>` attached to one
+//! [`EvalContext`](crate::search::EvalContext) through
+//! [`RunOpts::metrics`](crate::api::RunOpts), so a traced CLI run
+//! snapshots its own stage timings without cross-talk from concurrent
+//! searches). The only locked series is [`Labeled`] (per-tenant
+//! counters): labels are dynamic strings, so it lives off the hot path
+//! (the service bumps it once per finished job).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotone counter (wait-free increments, `Relaxed` ordering — series
+/// are statistics, not synchronization).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge for non-negative integral values (queue depth,
+/// cache sizes).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins `f64` gauge (stored as bits; starts at `+∞`, the
+/// "no valid design yet" sentinel the search layer already uses).
+pub struct GaugeF64(AtomicU64);
+
+impl GaugeF64 {
+    pub fn new() -> GaugeF64 {
+        GaugeF64(AtomicU64::new(f64::INFINITY.to_bits()))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for GaugeF64 {
+    fn default() -> GaugeF64 {
+        GaugeF64::new()
+    }
+}
+
+/// Bucket count of the fixed power-of-two histogram: upper bounds
+/// `1, 2, 4, …, 2^30`, plus a final overflow bucket (`+∞`). With
+/// nanosecond samples that spans 1 ns to ~1 s before overflow — wide
+/// enough for every stage/request latency this crate produces.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Fixed-bucket histogram with power-of-two upper bounds. Recording is
+/// two wait-free atomic adds and one increment; no locks, no allocation,
+/// `&self`. Values are raw `u64` sample units (nanoseconds for latency
+/// series; any integer unit works — `memory stats` feeds it scaled
+/// embedding distances).
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Bucket index for a sample: the smallest `i` with `v ≤ 2^i`, clamped
+/// into the overflow bucket.
+fn bucket_index(v: u64) -> usize {
+    ((64 - v.saturating_sub(1).leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Upper bound of bucket `i` (`u64::MAX` marks the overflow bucket).
+pub fn bucket_bound(i: usize) -> u64 {
+    if i >= HIST_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        1u64 << i
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough point-in-time copy (buckets are read
+    /// independently; a concurrent recorder can skew count vs buckets by
+    /// at most the in-flight samples).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Plain-data snapshot of a [`Histogram`] — `Copy`, comparable,
+/// serializable; everything downstream (trace records, `memory stats`,
+/// the Prometheus renderer) consumes this, never the live atomics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile sample
+    /// (0 when empty). Resolution is the bucket width — a factor of two.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return bucket_bound(i);
+            }
+        }
+        bucket_bound(HIST_BUCKETS - 1)
+    }
+
+    /// Upper bound of the highest non-empty bucket (0 when empty).
+    pub fn max_bound(&self) -> u64 {
+        self.buckets
+            .iter()
+            .rposition(|&n| n > 0)
+            .map_or(0, bucket_bound)
+    }
+
+    /// JSON summary with only the non-empty buckets, bounds scaled by
+    /// `scale` (e.g. `1e-9` to render nanosecond samples in seconds).
+    /// Deterministic for deterministic inputs.
+    pub fn to_json(&self, scale: f64) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| {
+                let le = if i >= HIST_BUCKETS - 1 {
+                    Json::str("+Inf")
+                } else {
+                    Json::num(bucket_bound(i) as f64 * scale)
+                };
+                Json::obj(vec![("le", le), ("n", Json::num(n as f64))])
+            })
+            .collect();
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum as f64 * scale)),
+            ("mean", Json::num(self.mean() * scale)),
+            ("p50", Json::num(self.quantile(0.50) as f64 * scale)),
+            ("p95", Json::num(self.quantile(0.95) as f64 * scale)),
+            ("max", Json::num(self.max_bound() as f64 * scale)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Dynamically-labeled counter family (the one locked series — see the
+/// module docs). Labels are sorted on export, so rendering is
+/// deterministic for a given state.
+#[derive(Default)]
+pub struct Labeled(Mutex<BTreeMap<String, u64>>);
+
+impl Labeled {
+    pub fn new() -> Labeled {
+        Labeled(Mutex::new(BTreeMap::new()))
+    }
+
+    pub fn add(&self, label: &str, n: u64) {
+        let mut m = self.0.lock().unwrap();
+        *m.entry(label.to_string()).or_insert(0) += n;
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.0.lock().unwrap().iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+}
+
+/// Names of the staged engine's four timed phases, in pipeline order
+/// (indexes into [`Metrics::stage_ns`]).
+pub const STAGE_NAMES: [&str; 4] = ["decode", "mapping", "format", "assemble"];
+pub const STAGE_DECODE: usize = 0;
+pub const STAGE_MAPPING: usize = 1;
+pub const STAGE_FORMAT: usize = 2;
+pub const STAGE_ASSEMBLE: usize = 3;
+
+/// Route labels for the service's per-endpoint latency histograms
+/// (indexes into [`Metrics::http_ns`]).
+pub const HTTP_ROUTES: [&str; 10] = [
+    "health",
+    "metrics",
+    "methods",
+    "jobs_submit",
+    "jobs_list",
+    "jobs_get",
+    "jobs_events",
+    "jobs_cancel",
+    "jobs_resume",
+    "other",
+];
+
+/// Job lifecycle transitions counted by the service (indexes into
+/// [`Metrics::job_events`]).
+pub const JOB_EVENTS: [&str; 7] =
+    ["submitted", "started", "done", "failed", "cancelled", "suspended", "resumed"];
+pub const JOB_SUBMITTED: usize = 0;
+pub const JOB_STARTED: usize = 1;
+pub const JOB_DONE: usize = 2;
+pub const JOB_FAILED: usize = 3;
+pub const JOB_CANCELLED: usize = 4;
+pub const JOB_SUSPENDED: usize = 5;
+pub const JOB_RESUMED: usize = 6;
+
+/// The registry: every series this crate emits, as a fixed struct.
+/// All series are independent atomics — `Metrics` is `Sync` and shared
+/// by plain reference or `Arc`.
+pub struct Metrics {
+    // --- staged engine / eval pipeline ----------------------------------
+    /// Per-batch wall time of each engine phase, nanoseconds
+    /// (one sample per [`StageEngine::eval_batch`](crate::search::StageEngine)
+    /// call, indexed by `STAGE_*`).
+    pub stage_ns: [Histogram; STAGE_NAMES.len()],
+    /// Budget submissions evaluated.
+    pub evals: Counter,
+    /// Submissions that produced a valid design.
+    pub valid_evals: Counter,
+    /// Submissions served from the per-genome result cache.
+    pub eval_cache_hits: Counter,
+    /// Stage-level cache hits / computed stages (see [`crate::search::engine`]).
+    pub stage_hits: Counter,
+    pub stage_misses: Counter,
+    /// Batches (≈ generations) evaluated.
+    pub batches: Counter,
+    /// Distinct genomes interned (hash-cons store size).
+    pub interned: Gauge,
+    /// Best valid EDP seen so far (`+∞` until one exists).
+    pub best_edp: GaugeF64,
+    // --- design memory ---------------------------------------------------
+    /// Warm-start lookups answered by the LSH index vs the exact scan.
+    pub memory_ann_probes: Counter,
+    pub memory_exact_scans: Counter,
+    /// Seeds handed to optimizers from memory.
+    pub memory_seeds: Counter,
+    /// Records in the attached store.
+    pub memory_records: Gauge,
+    // --- service ----------------------------------------------------------
+    /// Per-endpoint request latency, nanoseconds (indexed like
+    /// [`HTTP_ROUTES`]).
+    pub http_ns: [Histogram; HTTP_ROUTES.len()],
+    /// Jobs waiting in the priority queue.
+    pub queue_depth: Gauge,
+    /// Jobs currently in the running / suspended states.
+    pub jobs_running: Gauge,
+    pub jobs_suspended: Gauge,
+    /// Lifecycle transition counts (indexed like [`JOB_EVENTS`]).
+    pub job_events: [Counter; JOB_EVENTS.len()],
+    /// Budget submissions evaluated per tenant (finished jobs).
+    pub tenant_evals: Labeled,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            stage_ns: std::array::from_fn(|_| Histogram::new()),
+            evals: Counter::new(),
+            valid_evals: Counter::new(),
+            eval_cache_hits: Counter::new(),
+            stage_hits: Counter::new(),
+            stage_misses: Counter::new(),
+            batches: Counter::new(),
+            interned: Gauge::new(),
+            best_edp: GaugeF64::new(),
+            memory_ann_probes: Counter::new(),
+            memory_exact_scans: Counter::new(),
+            memory_seeds: Counter::new(),
+            memory_records: Gauge::new(),
+            http_ns: std::array::from_fn(|_| Histogram::new()),
+            queue_depth: Gauge::new(),
+            jobs_running: Gauge::new(),
+            jobs_suspended: Gauge::new(),
+            job_events: std::array::from_fn(|_| Counter::new()),
+            tenant_evals: Labeled::new(),
+        }
+    }
+
+    /// Render every series as Prometheus text exposition
+    /// (`text/plain; version=0.0.4`). Latency histograms are exported in
+    /// seconds per Prometheus convention; all series carry the
+    /// `sparsemap_` prefix.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(8192);
+        counter_line(
+            &mut out,
+            "sparsemap_evals_total",
+            "Budget submissions evaluated.",
+            self.evals.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_valid_evals_total",
+            "Submissions that produced a valid design.",
+            self.valid_evals.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_eval_cache_hits_total",
+            "Submissions served from the per-genome result cache.",
+            self.eval_cache_hits.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_stage_hits_total",
+            "Stage-level cache hits in the staged engine.",
+            self.stage_hits.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_stage_misses_total",
+            "Stages computed by the staged engine.",
+            self.stage_misses.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_batches_total",
+            "Batches (generations) evaluated.",
+            self.batches.get(),
+        );
+        gauge_line(
+            &mut out,
+            "sparsemap_interned_genomes",
+            "Distinct genomes in the hash-cons store.",
+            self.interned.get() as f64,
+        );
+        gauge_line(&mut out, "sparsemap_best_edp", "Best valid EDP seen so far.", self.best_edp.get());
+        hist_family(
+            &mut out,
+            "sparsemap_stage_seconds",
+            "Staged-engine phase wall time per batch.",
+            "stage",
+            &STAGE_NAMES,
+            &self.stage_ns,
+        );
+
+        counter_line(
+            &mut out,
+            "sparsemap_memory_ann_probes_total",
+            "Design-memory lookups answered by the LSH index.",
+            self.memory_ann_probes.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_memory_exact_scans_total",
+            "Design-memory lookups answered by the exact-scan fallback.",
+            self.memory_exact_scans.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_memory_seeds_total",
+            "Warm-start seeds handed to optimizers from memory.",
+            self.memory_seeds.get(),
+        );
+        gauge_line(
+            &mut out,
+            "sparsemap_memory_records",
+            "Records in the attached design-memory store.",
+            self.memory_records.get() as f64,
+        );
+
+        hist_family(
+            &mut out,
+            "sparsemap_http_request_seconds",
+            "Service request latency by route.",
+            "route",
+            &HTTP_ROUTES,
+            &self.http_ns,
+        );
+        gauge_line(
+            &mut out,
+            "sparsemap_queue_depth",
+            "Jobs waiting in the priority queue.",
+            self.queue_depth.get() as f64,
+        );
+        gauge_line(
+            &mut out,
+            "sparsemap_jobs_running",
+            "Jobs currently running.",
+            self.jobs_running.get() as f64,
+        );
+        gauge_line(
+            &mut out,
+            "sparsemap_jobs_suspended",
+            "Jobs currently suspended.",
+            self.jobs_suspended.get() as f64,
+        );
+        out.push_str("# HELP sparsemap_jobs_total Job lifecycle transitions.\n");
+        out.push_str("# TYPE sparsemap_jobs_total counter\n");
+        for (i, ev) in JOB_EVENTS.iter().enumerate() {
+            out.push_str(&format!(
+                "sparsemap_jobs_total{{event=\"{ev}\"}} {}\n",
+                self.job_events[i].get()
+            ));
+        }
+        let tenants = self.tenant_evals.snapshot();
+        if !tenants.is_empty() {
+            out.push_str(
+                "# HELP sparsemap_tenant_evals_total Budget submissions evaluated per tenant.\n",
+            );
+            out.push_str("# TYPE sparsemap_tenant_evals_total counter\n");
+            for (tenant, n) in tenants {
+                out.push_str(&format!("sparsemap_tenant_evals_total{{tenant=\"{tenant}\"}} {n}\n"));
+            }
+        }
+        out
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+/// The process-global registry. The service records and serves this one;
+/// library callers get no global recording unless they attach it
+/// themselves ([`RunOpts::metrics`](crate::api::RunOpts)).
+pub fn global() -> Arc<Metrics> {
+    static GLOBAL: OnceLock<Arc<Metrics>> = OnceLock::new();
+    Arc::clone(GLOBAL.get_or_init(|| Arc::new(Metrics::new())))
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else {
+        format!("{v}")
+    }
+}
+
+fn counter_line(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+}
+
+fn gauge_line(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {}\n",
+        fmt_value(v)
+    ));
+}
+
+/// One `# TYPE … histogram` family with a label per member histogram.
+/// Sample units are nanoseconds; bounds and sums are exported in seconds.
+fn hist_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    label: &str,
+    labels: &[&str],
+    hists: &[Histogram],
+) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    for (lv, h) in labels.iter().zip(hists) {
+        let s = h.snapshot();
+        let mut cum = 0u64;
+        for (i, &n) in s.buckets.iter().enumerate() {
+            cum += n;
+            // Skip interior empty prefixes? Prometheus wants the full
+            // cumulative series, but 32 buckets × routes is noisy; emit
+            // every bucket that changes the cumulative count plus +Inf.
+            if n == 0 && i < HIST_BUCKETS - 1 {
+                continue;
+            }
+            let le = if i >= HIST_BUCKETS - 1 {
+                "+Inf".to_string()
+            } else {
+                fmt_value(bucket_bound(i) as f64 * 1e-9)
+            };
+            out.push_str(&format!("{name}_bucket{{{label}=\"{lv}\",le=\"{le}\"}} {cum}\n"));
+        }
+        out.push_str(&format!(
+            "{name}_sum{{{label}=\"{lv}\"}} {}\n{name}_count{{{label}=\"{lv}\"}} {}\n",
+            fmt_value(s.sum as f64 * 1e-9),
+            s.count
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        let f = GaugeF64::new();
+        assert!(f.get().is_infinite(), "f64 gauge starts at the +inf sentinel");
+        f.set(1.5);
+        assert_eq!(f.get(), 1.5);
+    }
+
+    #[test]
+    fn histogram_bucket_math() {
+        // v ≤ 1 lands in bucket 0 (le=1); powers of two land exactly.
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1 << 20), 20);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_bound(0), 1);
+        assert_eq!(bucket_bound(3), 8);
+        assert_eq!(bucket_bound(HIST_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_snapshot_quantiles() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 2, 4, 100] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 109);
+        assert_eq!(s.mean(), 21.8);
+        assert_eq!(s.quantile(0.5), 2, "median sample is 2, bucket bound 2");
+        assert_eq!(s.quantile(1.0), 128, "max sample 100 rounds up to 128");
+        assert_eq!(s.max_bound(), 128);
+        let empty = Histogram::new().snapshot();
+        assert_eq!(empty.quantile(0.5), 0);
+        assert_eq!(empty.max_bound(), 0);
+        assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_snapshot_json_is_compact() {
+        let h = Histogram::new();
+        h.record(3);
+        h.record(1000);
+        let j = h.snapshot().to_json(1.0);
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(2));
+        let buckets = j.get("buckets").and_then(Json::as_arr).unwrap();
+        assert_eq!(buckets.len(), 2, "only non-empty buckets serialize");
+        assert_eq!(buckets[0].get("le").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(buckets[0].get("n").and_then(Json::as_u64), Some(1));
+    }
+
+    #[test]
+    fn labeled_counters_sorted_and_summed() {
+        let l = Labeled::new();
+        l.add("b", 2);
+        l.add("a", 1);
+        l.add("b", 3);
+        assert_eq!(
+            l.snapshot(),
+            vec![("a".to_string(), 1), ("b".to_string(), 5)]
+        );
+    }
+
+    #[test]
+    fn prometheus_rendering_covers_all_families() {
+        let m = Metrics::new();
+        m.evals.add(10);
+        m.valid_evals.add(8);
+        m.stage_ns[STAGE_MAPPING].record(1_000);
+        m.http_ns[1].record(50_000);
+        m.job_events[JOB_SUBMITTED].inc();
+        m.tenant_evals.add("ci", 10);
+        m.best_edp.set(2.5);
+        let text = m.render_prometheus();
+        for series in [
+            "sparsemap_evals_total 10",
+            "sparsemap_valid_evals_total 8",
+            "sparsemap_stage_seconds_bucket{stage=\"mapping\",le=\"0.000001024\"} 1",
+            "sparsemap_stage_seconds_count{stage=\"mapping\"} 1",
+            "sparsemap_http_request_seconds_count{route=\"metrics\"} 1",
+            "sparsemap_jobs_total{event=\"submitted\"} 1",
+            "sparsemap_tenant_evals_total{tenant=\"ci\"} 10",
+            "sparsemap_best_edp 2.5",
+            "sparsemap_queue_depth 0",
+        ] {
+            assert!(text.contains(series), "missing series line: {series}\n---\n{text}");
+        }
+        // The untouched f64 gauge renders as a Prometheus-legal +Inf.
+        assert!(Metrics::new().render_prometheus().contains("sparsemap_best_edp +Inf"));
+    }
+
+    #[test]
+    fn global_registry_is_one_instance() {
+        let a = global();
+        let b = global();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

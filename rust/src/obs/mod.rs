@@ -1,0 +1,31 @@
+//! Observability: lock-free metrics, streaming search traces, and the
+//! Prometheus exposition behind the service's `GET /metrics`.
+//!
+//! Three pillars (see the ROADMAP's "make the speed claims real" item —
+//! this module is how every future perf PR carries honest numbers):
+//!
+//! 1. **Metrics** ([`metrics`]) — atomic counters/gauges and
+//!    power-of-two-bucket latency histograms in a fixed-struct registry
+//!    ([`Metrics`]): one process-global instance ([`global`], what the
+//!    service records and serves) plus per-run `Arc<Metrics>` scopes
+//!    attached through [`RunOpts::metrics`](crate::api::RunOpts). With
+//!    no registry attached (the library default) the instrumented hot
+//!    path is a single branch and stays zero-alloc
+//!    (`rust/tests/alloc_steady_state.rs`).
+//! 2. **Traces** ([`trace`]) — `sparsemap.trace.v1` NDJSON records
+//!    streamed per generation through the
+//!    [`SearchObserver`](crate::search::SearchObserver) machinery (`--trace run.ndjson` on `search`/`run-spec`,
+//!    [`RunOpts::trace`](crate::api::RunOpts)), deterministic modulo
+//!    timestamps, rendered back by `sparsemap trace summarize`.
+//! 3. **Exposition** — [`Metrics::render_prometheus`] serves every
+//!    series as Prometheus text at the service's auth-exempt
+//!    `GET /metrics`.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    bucket_bound, global, Counter, Gauge, GaugeF64, HistSnapshot, Histogram, Labeled, Metrics,
+    HIST_BUCKETS, HTTP_ROUTES, JOB_EVENTS, STAGE_NAMES,
+};
+pub use trace::{read_trace, summarize, TraceObserver, TraceWriter, TRACE_SCHEMA};

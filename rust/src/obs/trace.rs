@@ -1,0 +1,402 @@
+//! `sparsemap.trace.v1` — streaming NDJSON search traces.
+//!
+//! A trace is one JSON record per line, every record carrying the
+//! schema tag (`"v": "sparsemap.trace.v1"`), an event kind (`"ev"`) and
+//! a wall-clock offset in milliseconds (`"ms"`). Event kinds:
+//!
+//! * `start` — run header: workload, platform, method, budget, seed.
+//! * `generation` — one per evaluated batch, mirrored off the
+//!   [`SearchObserver`] stream: evals, valid evals, cache/stage hits,
+//!   interned count, best EDP. **Deterministic modulo the `ms` field** —
+//!   two runs of the same seeded request produce identical generation
+//!   records.
+//! * `stages` — a snapshot of the per-phase latency histograms from the
+//!   run's [`Metrics`] scope (decode/mapping/format/assemble).
+//! * `marker` — checkpoint/resume lifecycle markers.
+//! * `finish` — final outcome summary.
+//!
+//! [`TraceWriter`] streams records through a buffered file;
+//! [`TraceObserver`] tees an [`EvalContext`](crate::search::EvalContext)
+//! observer slot into it, so tracing composes with any caller-supplied
+//! observer. `summarize` renders a written trace back into a per-stage
+//! latency table and a generation convergence curve
+//! (`sparsemap trace summarize <file>`).
+
+use super::metrics::{Metrics, STAGE_NAMES};
+use crate::search::{Progress, SearchControl, SearchObserver};
+use crate::util::json::Json;
+use crate::util::table::{sci, Table};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Schema tag carried by every trace record.
+pub const TRACE_SCHEMA: &str = "sparsemap.trace.v1";
+
+/// Streaming NDJSON trace writer. Each emit is one line, flushed with
+/// the underlying `BufWriter`'s policy; [`TraceWriter::finish`] flushes
+/// explicitly. IO errors after creation are deliberately swallowed by
+/// the callers (a failing trace must never abort a search).
+pub struct TraceWriter {
+    w: BufWriter<File>,
+    t0: Instant,
+}
+
+impl TraceWriter {
+    pub fn create(path: &Path) -> std::io::Result<TraceWriter> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(TraceWriter { w: BufWriter::new(File::create(path)?), t0: Instant::now() })
+    }
+
+    /// Emit one record: `{"v", "ev", "ms", ...fields}`.
+    pub fn event(&mut self, ev: &str, fields: Vec<(&str, Json)>) -> std::io::Result<()> {
+        let ms = self.t0.elapsed().as_millis() as f64;
+        let mut pairs =
+            vec![("v", Json::str(TRACE_SCHEMA)), ("ev", Json::str(ev)), ("ms", Json::num(ms))];
+        pairs.extend(fields);
+        writeln!(self.w, "{}", Json::obj(pairs).dumps())
+    }
+
+    /// Run header.
+    pub fn start(
+        &mut self,
+        workload: &str,
+        platform: &str,
+        method: &str,
+        budget: usize,
+        seed: u64,
+    ) -> std::io::Result<()> {
+        self.event(
+            "start",
+            vec![
+                ("workload", Json::str(workload)),
+                ("platform", Json::str(platform)),
+                ("method", Json::str(method)),
+                ("budget", Json::num(budget as f64)),
+                ("seed", Json::num(seed as f64)),
+            ],
+        )
+    }
+
+    /// One generation summary off the observer stream.
+    pub fn generation(&mut self, p: &Progress) -> std::io::Result<()> {
+        let best = if p.best_edp.is_finite() { Json::num(p.best_edp) } else { Json::Null };
+        self.event(
+            "generation",
+            vec![
+                ("batch", Json::num(p.batches as f64)),
+                ("evals", Json::num(p.evals as f64)),
+                ("valid_evals", Json::num(p.valid_evals as f64)),
+                ("cache_hits", Json::num(p.cache_hits as f64)),
+                ("interned", Json::num(p.interned as f64)),
+                ("stage_hits", Json::num(p.stage_hits as f64)),
+                ("budget", Json::num(p.budget as f64)),
+                ("best_edp", best),
+            ],
+        )
+    }
+
+    /// Snapshot the per-stage latency histograms of this run's metrics
+    /// scope (sample units are nanoseconds; serialized in seconds).
+    pub fn stages(&mut self, m: &Metrics) -> std::io::Result<()> {
+        let stages: Vec<(&str, Json)> = STAGE_NAMES
+            .iter()
+            .zip(&m.stage_ns)
+            .map(|(name, h)| (*name, h.snapshot().to_json(1e-9)))
+            .collect();
+        self.event("stages", vec![("stages", Json::obj(stages))])
+    }
+
+    /// Checkpoint/resume lifecycle marker.
+    pub fn marker(&mut self, kind: &str, fields: Vec<(&str, Json)>) -> std::io::Result<()> {
+        let mut all = vec![("kind", Json::str(kind))];
+        all.extend(fields);
+        self.event("marker", all)
+    }
+
+    /// Final outcome summary; flushes the stream.
+    pub fn finish(
+        &mut self,
+        best_edp: f64,
+        evals: usize,
+        wall_s: f64,
+        stopped_early: bool,
+    ) -> std::io::Result<()> {
+        let best = if best_edp.is_finite() { Json::num(best_edp) } else { Json::Null };
+        self.event(
+            "finish",
+            vec![
+                ("best_edp", best),
+                ("evals", Json::num(evals as f64)),
+                ("wall_s", Json::num(wall_s)),
+                ("stopped_early", Json::Bool(stopped_early)),
+            ],
+        )?;
+        self.w.flush()
+    }
+}
+
+/// Observer tee: writes a `generation` record per batch, then delegates
+/// to the wrapped observer (if any) for flow control. Attached by
+/// [`SearchSession::run_opts`](crate::api::SearchSession) when
+/// [`RunOpts::trace`](crate::api::RunOpts) is set.
+pub struct TraceObserver {
+    writer: Arc<Mutex<TraceWriter>>,
+    inner: Option<Box<dyn SearchObserver>>,
+}
+
+impl TraceObserver {
+    pub fn new(
+        writer: Arc<Mutex<TraceWriter>>,
+        inner: Option<Box<dyn SearchObserver>>,
+    ) -> TraceObserver {
+        TraceObserver { writer, inner }
+    }
+}
+
+impl SearchObserver for TraceObserver {
+    fn on_batch(&mut self, progress: &Progress) -> SearchControl {
+        if let Ok(mut w) = self.writer.lock() {
+            let _ = w.generation(progress);
+        }
+        match self.inner.as_mut() {
+            Some(obs) => obs.on_batch(progress),
+            None => SearchControl::Continue,
+        }
+    }
+}
+
+/// Parse NDJSON trace text into records, validating the schema tag on
+/// every line. Blank lines are tolerated (trailing newline).
+pub fn read_trace(text: &str) -> Result<Vec<Json>, String> {
+    let mut records = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = Json::parse(line).map_err(|e| format!("trace line {}: {e}", i + 1))?;
+        match rec.get("v").and_then(Json::as_str) {
+            Some(TRACE_SCHEMA) => {}
+            Some(other) => {
+                return Err(format!(
+                    "trace line {}: unsupported schema '{other}' (expected {TRACE_SCHEMA})",
+                    i + 1
+                ))
+            }
+            None => return Err(format!("trace line {}: missing schema tag 'v'", i + 1)),
+        }
+        if rec.get("ev").and_then(Json::as_str).is_none() {
+            return Err(format!("trace line {}: missing event kind 'ev'", i + 1));
+        }
+        records.push(rec);
+    }
+    if records.is_empty() {
+        return Err("trace is empty".to_string());
+    }
+    Ok(records)
+}
+
+/// Generation rows rendered by the convergence table before
+/// downsampling kicks in.
+const MAX_CURVE_ROWS: usize = 20;
+
+/// Render a trace into the human summary behind
+/// `sparsemap trace summarize`: run header, per-stage latency table,
+/// downsampled generation convergence curve, markers and final outcome.
+pub fn summarize(text: &str) -> Result<String, String> {
+    let records = read_trace(text)?;
+    let mut out = String::new();
+
+    let ev = |r: &Json| r.get("ev").and_then(Json::as_str).unwrap_or("").to_string();
+    if let Some(s) = records.iter().find(|r| ev(r) == "start") {
+        let f = |k: &str| s.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+        let n = |k: &str| s.get(k).and_then(Json::as_u64).unwrap_or(0);
+        out.push_str(&format!(
+            "trace: {}@{} method={} budget={} seed={}\n",
+            f("workload"),
+            f("platform"),
+            f("method"),
+            n("budget"),
+            n("seed")
+        ));
+    }
+
+    // Per-stage latency: the LAST stages record is the cumulative one.
+    if let Some(s) = records.iter().rev().find(|r| ev(r) == "stages") {
+        let mut t = Table::new(&["stage", "batches", "mean", "p50", "p95", "max", "total"]);
+        if let Some(stages) = s.get("stages").and_then(Json::as_obj) {
+            for name in STAGE_NAMES {
+                let Some(h) = stages.get(name) else { continue };
+                let g = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                t.row(vec![
+                    name.to_string(),
+                    format!("{}", g("count") as u64),
+                    format!("{}s", sci(g("mean"))),
+                    format!("{}s", sci(g("p50"))),
+                    format!("{}s", sci(g("p95"))),
+                    format!("{}s", sci(g("max"))),
+                    format!("{}s", sci(g("sum"))),
+                ]);
+            }
+        }
+        if !t.is_empty() {
+            out.push_str("\nstage latency (per batch):\n");
+            out.push_str(&t.render());
+        }
+    }
+
+    let gens: Vec<&Json> = records.iter().filter(|r| ev(r) == "generation").collect();
+    if !gens.is_empty() {
+        let stride = gens.len().div_ceil(MAX_CURVE_ROWS).max(1);
+        let mut t = Table::new(&["gen", "evals", "best EDP", "cache hits", "stage hits"]);
+        for (i, g) in gens.iter().enumerate() {
+            if i % stride != 0 && i + 1 != gens.len() {
+                continue;
+            }
+            let n = |k: &str| g.get(k).and_then(Json::as_u64).unwrap_or(0);
+            let best = g
+                .get("best_edp")
+                .and_then(Json::as_f64)
+                .map_or("-".to_string(), sci);
+            t.row(vec![
+                format!("{}", n("batch")),
+                format!("{}", n("evals")),
+                best,
+                format!("{}", n("cache_hits")),
+                format!("{}", n("stage_hits")),
+            ]);
+        }
+        out.push_str(&format!("\nconvergence ({} generations):\n", gens.len()));
+        out.push_str(&t.render());
+    }
+
+    let markers: Vec<String> = records
+        .iter()
+        .filter(|r| ev(r) == "marker")
+        .map(|r| r.get("kind").and_then(Json::as_str).unwrap_or("?").to_string())
+        .collect();
+    if !markers.is_empty() {
+        out.push_str(&format!("\nmarkers: {}\n", markers.join(", ")));
+    }
+
+    match records.iter().rev().find(|r| ev(r) == "finish") {
+        Some(f) => {
+            let best = f
+                .get("best_edp")
+                .and_then(Json::as_f64)
+                .map_or("-".to_string(), sci);
+            out.push_str(&format!(
+                "\nfinished: best_edp={} evals={} wall={:.3}s{}\n",
+                best,
+                f.get("evals").and_then(Json::as_u64).unwrap_or(0),
+                f.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0),
+                if f.get("stopped_early").and_then(Json::as_bool) == Some(true) {
+                    " (stopped early)"
+                } else {
+                    ""
+                },
+            ));
+        }
+        None => out.push_str("\n(no finish record — truncated trace?)\n"),
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::STAGE_MAPPING;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sparsemap-trace-{}-{tag}.ndjson", std::process::id()))
+    }
+
+    fn progress(batch: usize, evals: usize, best: f64) -> Progress {
+        Progress {
+            batches: batch,
+            evals,
+            valid_evals: evals - 1,
+            cache_hits: 2,
+            interned: evals,
+            stage_hits: 4,
+            best_edp: best,
+            budget: 100,
+        }
+    }
+
+    #[test]
+    fn write_read_summarize_round_trip() {
+        let path = tmp_path("roundtrip");
+        let m = Metrics::new();
+        m.stage_ns[STAGE_MAPPING].record(10_000);
+        {
+            let mut w = TraceWriter::create(&path).unwrap();
+            w.start("mm1", "mobile", "es-std", 100, 7).unwrap();
+            w.generation(&progress(1, 10, f64::INFINITY)).unwrap();
+            w.generation(&progress(2, 20, 3.5)).unwrap();
+            w.marker("checkpoint", vec![("evals", Json::num(20.0))]).unwrap();
+            w.stages(&m).unwrap();
+            w.finish(3.5, 20, 0.01, false).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let records = read_trace(&text).unwrap();
+        assert_eq!(records.len(), 6);
+        assert!(records.iter().all(|r| r.get("v").and_then(Json::as_str) == Some(TRACE_SCHEMA)));
+        // Infinite best EDP serializes as null (JSON has no Inf).
+        let g1 = &records[1];
+        assert_eq!(g1.get("ev").and_then(Json::as_str), Some("generation"));
+        assert_eq!(g1.get("best_edp"), Some(&Json::Null));
+        assert_eq!(records[2].get("best_edp").and_then(Json::as_f64), Some(3.5));
+
+        let summary = summarize(&text).unwrap();
+        assert!(summary.contains("mm1@mobile"), "{summary}");
+        assert!(summary.contains("mapping"), "{summary}");
+        assert!(summary.contains("convergence (2 generations)"), "{summary}");
+        assert!(summary.contains("markers: checkpoint"), "{summary}");
+        assert!(summary.contains("finished: best_edp="), "{summary}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn observer_tee_writes_and_delegates() {
+        let path = tmp_path("tee");
+        let w = Arc::new(Mutex::new(TraceWriter::create(&path).unwrap()));
+        let mut obs = TraceObserver::new(
+            Arc::clone(&w),
+            Some(Box::new(|p: &Progress| {
+                if p.evals >= 20 { SearchControl::Stop } else { SearchControl::Continue }
+            })),
+        );
+        assert_eq!(obs.on_batch(&progress(1, 10, 5.0)), SearchControl::Continue);
+        assert_eq!(obs.on_batch(&progress(2, 20, 4.0)), SearchControl::Stop);
+        w.lock().unwrap().finish(4.0, 20, 0.0, true).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let records = read_trace(&text).unwrap();
+        let gens = records
+            .iter()
+            .filter(|r| r.get("ev").and_then(Json::as_str) == Some("generation"))
+            .count();
+        assert_eq!(gens, 2);
+        // No inner observer: tracing alone never stops a run.
+        let mut bare = TraceObserver::new(Arc::clone(&w), None);
+        assert_eq!(bare.on_batch(&progress(3, 30, 4.0)), SearchControl::Continue);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn read_trace_rejects_bad_input() {
+        assert!(read_trace("").is_err(), "empty trace");
+        assert!(read_trace("{\"ev\": \"start\"}\n").unwrap_err().contains("missing schema"));
+        assert!(read_trace("{\"v\": \"other.v9\", \"ev\": \"x\"}\n")
+            .unwrap_err()
+            .contains("unsupported schema"));
+        let ok = format!("{{\"v\": \"{TRACE_SCHEMA}\", \"ev\": \"start\"}}\n");
+        assert_eq!(read_trace(&ok).unwrap().len(), 1);
+        let noev = format!("{{\"v\": \"{TRACE_SCHEMA}\"}}\n");
+        assert!(read_trace(&noev).unwrap_err().contains("missing event kind"));
+    }
+}

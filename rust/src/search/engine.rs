@@ -45,12 +45,29 @@ use crate::model::{
     assemble, format_stage, mapping_stage, EvalResult, MappingStage, NativeEvaluator,
     TensorCompression, WorkloadConsts,
 };
+use crate::obs::metrics::{STAGE_ASSEMBLE, STAGE_DECODE, STAGE_FORMAT, STAGE_MAPPING};
+use crate::obs::Metrics;
 use crate::sparse::SgMechanism;
 use crate::util::hash::FxHashMap;
 use crate::util::threadpool::ThreadPool;
 use crate::workload::NUM_TENSORS;
 use std::sync::Arc;
+use std::time::Instant;
 use super::fan_out;
+
+/// Advance a phase clock (present only when metrics are attached) and
+/// return the finished phase's elapsed nanoseconds. With no clock this
+/// is a dead branch — the uninstrumented hot path does no timing work.
+fn lap_ns(clock: &mut Option<Instant>) -> u64 {
+    match clock {
+        Some(t) => {
+            let ns = t.elapsed().as_nanos() as u64;
+            *t = Instant::now();
+            ns
+        }
+        None => 0,
+    }
+}
 
 /// Hash-consed genome store: each distinct gene vector gets a dense
 /// `u32` id; lookups by slice never clone, inserts clone exactly once
@@ -167,6 +184,13 @@ pub struct StageEngine {
     fmt_cap: usize,
     stage_hits: usize,
     stage_misses: usize,
+    /// Metrics scope (see [`crate::obs`]): per-phase batch timings land
+    /// in `stage_ns` (decode = phase-1 resolution, mapping = phase-2
+    /// stage compute, format = phases 3/3b, assemble = phase 4 + the
+    /// cap-degraded scratch path) and hit/miss deltas in
+    /// `stage_hits`/`stage_misses`. `None` (the default) records
+    /// nothing and costs one branch per batch.
+    metrics: Option<Arc<Metrics>>,
     // --- reusable per-batch scratch (layer 3) ---------------------------
     map_refs: Vec<MapRef>,
     pending_segs: Vec<Arc<[u32]>>,
@@ -195,6 +219,7 @@ impl StageEngine {
             fmt_cap: budget.max(1) * NUM_TENSORS,
             stage_hits: 0,
             stage_misses: 0,
+            metrics: None,
             map_refs: Vec::new(),
             pending_segs: Vec::new(),
             pending_map: FxHashMap::default(),
@@ -244,6 +269,13 @@ impl StageEngine {
         (self.map_stages.len(), self.fmt_cache.len())
     }
 
+    /// Attach (or detach) a metrics scope — see the field docs. Owned by
+    /// [`EvalContext::set_metrics`](crate::search::EvalContext) for
+    /// engine instances embedded in a context.
+    pub fn set_metrics(&mut self, metrics: Option<Arc<Metrics>>) {
+        self.metrics = metrics;
+    }
+
     fn compute_mapping_stage(ev: &NativeEvaluator, seg: &[u32]) -> MappingStage {
         let m = decode_mapping(&ev.spec, &ev.workload, seg);
         mapping_stage(&m, &ev.workload, &ev.platform)
@@ -276,6 +308,9 @@ impl StageEngine {
         }
         let spec = &self.eval.spec;
         let (fs, sg_start) = (spec.format_start, spec.sg_start);
+        let obs = self.metrics.clone();
+        let mut clock = obs.as_ref().map(|_| Instant::now());
+        let (hits0, misses0) = (self.stage_hits, self.stage_misses);
 
         // --- phase 1: resolve mapping segments --------------------------
         self.map_refs.clear();
@@ -303,6 +338,10 @@ impl StageEngine {
             }
         }
 
+        if let Some(m) = &obs {
+            m.stage_ns[STAGE_DECODE].record(lap_ns(&mut clock));
+        }
+
         // --- phase 2: compute missing mapping stages --------------------
         let map_base = self.map_stages.len() as u32;
         if !self.pending_segs.is_empty() {
@@ -315,6 +354,10 @@ impl StageEngine {
                 self.map_stages.push(Arc::new(st));
                 self.map_ids.insert(seg, id);
             }
+        }
+
+        if let Some(m) = &obs {
+            m.stage_ns[STAGE_MAPPING].record(lap_ns(&mut clock));
         }
 
         // --- phase 3: resolve per-tensor format stages ------------------
@@ -377,6 +420,10 @@ impl StageEngine {
             }
         }
 
+        if let Some(m) = &obs {
+            m.stage_ns[STAGE_FORMAT].record(lap_ns(&mut clock));
+        }
+
         // --- phase 4: assembly + cost ------------------------------------
         let mut out = vec![EvalResult::dead(); n];
         self.asm_idx.clear();
@@ -429,6 +476,11 @@ impl StageEngine {
             // Drop the Arc refs promptly (these are the rare over-cap
             // genomes; no point pinning them between batches).
             self.scratch_genomes.clear();
+        }
+        if let Some(m) = &obs {
+            m.stage_ns[STAGE_ASSEMBLE].record(lap_ns(&mut clock));
+            m.stage_hits.add((self.stage_hits - hits0) as u64);
+            m.stage_misses.add((self.stage_misses - misses0) as u64);
         }
         out
     }
@@ -521,6 +573,28 @@ mod tests {
         let b = par.eval_batch(&arcs(&genomes), Some(&pool));
         assert_eq!(a, b);
         assert_eq!(serial.stage_misses(), par.stage_misses());
+    }
+
+    #[test]
+    fn metrics_scope_records_stage_timings_and_counters() {
+        let mut e = engine(10_000);
+        let m = Arc::new(crate::obs::Metrics::new());
+        e.set_metrics(Some(Arc::clone(&m)));
+        let mut rng = Pcg64::seeded(9);
+        let genomes: Vec<Vec<u32>> = (0..20).map(|_| e.eval.spec.random(&mut rng)).collect();
+        e.eval_batch(&arcs(&genomes), None);
+        for (h, name) in m.stage_ns.iter().zip(crate::obs::STAGE_NAMES) {
+            assert_eq!(h.snapshot().count, 1, "one {name} sample per batch");
+        }
+        assert_eq!(m.stage_hits.get() as usize, e.stage_hits());
+        assert_eq!(m.stage_misses.get() as usize, e.stage_misses());
+        // Detaching freezes the scope; results are unaffected either way.
+        e.set_metrics(None);
+        let r = e.eval_batch(&arcs(&genomes), None);
+        assert_eq!(m.stage_ns[0].snapshot().count, 1);
+        for (g, r) in genomes.iter().zip(&r) {
+            assert_eq!(*r, e.eval.eval_genome(g));
+        }
     }
 
     #[test]

@@ -47,6 +47,7 @@ pub use telemetry::{MemberStats, Outcome, Telemetry};
 use crate::arch::Platform;
 use crate::genome::Design;
 use crate::model::{EvalResult, NativeEvaluator};
+use crate::obs::Metrics;
 #[cfg(feature = "xla")]
 use crate::runtime::{BatchEvaluator, Runtime};
 use crate::util::json::{f64_bits, f64_from_bits, Json};
@@ -373,6 +374,16 @@ pub struct EvalContext {
     /// [`EvalContext::set_fence`]). The portfolio meta-optimizer uses it
     /// to hand each member a bounded slice of the shared budget.
     fence: Option<usize>,
+    /// Metrics scope (see [`crate::obs`]): per-batch eval/validity/cache
+    /// deltas, generation count, interner size and best-EDP gauge are
+    /// published after every batch; the embedded stage engine shares the
+    /// same scope for phase timings. `None` (the library default) makes
+    /// publication a single branch — the hot path stays zero-alloc
+    /// either way (`rust/tests/alloc_steady_state.rs`).
+    metrics: Option<Arc<Metrics>>,
+    /// Cumulative telemetry values already published to `metrics`
+    /// (counters are monotone, so publication adds deltas).
+    published: (usize, usize, usize),
 }
 
 impl EvalContext {
@@ -403,6 +414,8 @@ impl EvalContext {
             stopped: false,
             batches: 0,
             fence: None,
+            metrics: None,
+            published: (0, 0, 0),
         }
     }
 
@@ -452,6 +465,25 @@ impl EvalContext {
     /// Distinct genomes interned so far.
     pub fn interned(&self) -> usize {
         self.interner.len()
+    }
+
+    /// Attach a metrics scope ([`crate::obs`]): the context publishes
+    /// eval/cache/validity counters, the generation count and the
+    /// best-EDP gauge after every batch, and the embedded stage engine
+    /// records its per-phase timings into the same scope. `None`
+    /// detaches (the default — library callers opt in; the service
+    /// attaches [`crate::obs::global`]).
+    pub fn with_metrics(mut self, metrics: Option<Arc<Metrics>>) -> EvalContext {
+        self.set_metrics(metrics);
+        self
+    }
+
+    /// In-place variant of [`EvalContext::with_metrics`].
+    pub fn set_metrics(&mut self, metrics: Option<Arc<Metrics>>) {
+        if let Some(e) = &mut self.stage {
+            e.set_metrics(metrics.clone());
+        }
+        self.metrics = metrics;
     }
 
     /// Attach a streaming [`SearchObserver`], called after every batch.
@@ -514,9 +546,29 @@ impl EvalContext {
         self.batches
     }
 
+    /// Publish the telemetry accumulated since the last batch into the
+    /// attached metrics scope (no-op without one). Counters receive
+    /// deltas — they stay monotone across however many contexts share
+    /// a scope (e.g. every job in the service feeding [`crate::obs::global`]).
+    fn publish_metrics(&mut self) {
+        let Some(m) = &self.metrics else { return };
+        let (evals0, valid0, hits0) = self.published;
+        m.evals.add((self.telemetry.evals - evals0) as u64);
+        m.valid_evals.add((self.telemetry.valid_evals - valid0) as u64);
+        m.eval_cache_hits.add((self.telemetry.cache_hits - hits0) as u64);
+        self.published =
+            (self.telemetry.evals, self.telemetry.valid_evals, self.telemetry.cache_hits);
+        m.batches.inc();
+        m.interned.set(self.interner.len() as u64);
+        if self.telemetry.best_edp.is_finite() {
+            m.best_edp.set(self.telemetry.best_edp);
+        }
+    }
+
     /// Bump batch count and notify the observer, honoring its verdict.
     fn finish_batch(&mut self) {
         self.batches += 1;
+        self.publish_metrics();
         if let Some(obs) = self.observer.as_mut() {
             let progress = Progress {
                 batches: self.batches,
@@ -876,11 +928,15 @@ impl EvalContext {
 
     /// Finalize into an outcome.
     pub fn outcome(self, method: &str) -> Outcome {
-        self.telemetry.into_outcome(
+        let (model_calls, batches) = (self.model_calls, self.batches);
+        let mut o = self.telemetry.into_outcome(
             method,
             &self.backend.workload().id,
             &self.backend.platform().name,
-        )
+        );
+        o.model_calls = model_calls;
+        o.batches = batches;
+        o
     }
 }
 
@@ -1063,6 +1119,34 @@ mod tests {
         let o = c.outcome("probe");
         assert_eq!(o.interned, 7);
         assert_eq!(o.stage_hits, 24);
+    }
+
+    #[test]
+    fn metrics_scope_publishes_per_batch_deltas() {
+        let m = Arc::new(Metrics::new());
+        let mut c = ctx(100).with_metrics(Some(Arc::clone(&m)));
+        let mut rng = Pcg64::seeded(41);
+        let g = c.spec.random(&mut rng);
+        let batch = vec![g.clone(); 6];
+        c.eval_batch(&batch);
+        c.eval_batch(&batch);
+        assert_eq!(m.evals.get(), 12, "counters accumulate deltas, not totals");
+        assert_eq!(m.eval_cache_hits.get() as usize, c.cache_hits());
+        assert_eq!(m.batches.get(), 2);
+        assert_eq!(m.interned.get() as usize, c.interned());
+        assert_eq!(m.valid_evals.get() as usize, c.telemetry.valid_evals);
+        assert!(
+            m.best_edp.get() == c.telemetry.best_edp || !c.telemetry.best_edp.is_finite(),
+            "gauge mirrors best EDP once a valid design exists"
+        );
+        // Stage engine shares the scope: phase timings were sampled for
+        // the one non-empty miss batch (the all-hit batch never reaches
+        // the engine).
+        assert_eq!(m.stage_ns[0].snapshot().count, 1);
+        // Contexts without a scope touch nothing (the default path).
+        let before = m.evals.get();
+        ctx(50).eval_batch(&batch);
+        assert_eq!(m.evals.get(), before);
     }
 
     #[test]

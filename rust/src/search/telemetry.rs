@@ -182,6 +182,8 @@ impl Telemetry {
             members: Vec::new(),
             memory_hits: 0,
             seeded_from: Vec::new(),
+            model_calls: 0,
+            batches: 0,
         }
     }
 }
@@ -275,6 +277,13 @@ pub struct Outcome {
     /// Scenario tags of the memory records those seeds came from
     /// (deduplicated, nearest first; empty when warm-start is off).
     pub seeded_from: Vec<String>,
+    /// Genomes actually sent to the cost model (submissions minus cache
+    /// hits minus dead-on-arrival designs) — observability revision;
+    /// 0 in reports serialized before it.
+    pub model_calls: usize,
+    /// Batches (≈ generations) evaluated — observability revision; 0 in
+    /// reports serialized before it.
+    pub batches: usize,
 }
 
 impl Outcome {
@@ -362,6 +371,15 @@ impl Outcome {
                     Json::Arr(self.seeded_from.iter().map(|t| Json::str(t)).collect()),
                 );
             }
+            // Observability-revision metric fields: absent when zero, so
+            // pre-revision byte streams (and synthetic outcomes) are
+            // reproduced exactly.
+            if self.model_calls > 0 {
+                o.insert("model_calls".to_string(), Json::num(self.model_calls as f64));
+            }
+            if self.batches > 0 {
+                o.insert("batches".to_string(), Json::num(self.batches as f64));
+            }
         }
         j
     }
@@ -448,6 +466,10 @@ impl Outcome {
                 .filter_map(Json::as_str)
                 .map(str::to_string)
                 .collect(),
+            // Observability-revision metric fields; absent (and zero) in
+            // every report serialized before it.
+            model_calls: j.get("model_calls").and_then(Json::as_u64).unwrap_or(0) as usize,
+            batches: j.get("batches").and_then(Json::as_u64).unwrap_or(0) as usize,
         })
     }
 }
@@ -512,7 +534,9 @@ mod tests {
     #[test]
     fn legacy_json_without_counters_still_parses() {
         // Reports serialized before the staged-engine revision lack the
-        // interned/stage_hits fields; they must default to 0.
+        // interned/stage_hits fields, and everything before the
+        // observability revision lacks model_calls/batches; all must
+        // default to 0.
         let legacy = r#"{"method":"x","workload":"w","platform":"p",
             "evals":3,"valid_evals":2,"cache_hits":1,"best_edp":5.0,
             "curve":[[1,5.0]]}"#;
@@ -520,6 +544,29 @@ mod tests {
         assert_eq!(o.interned, 0);
         assert_eq!(o.stage_hits, 0);
         assert_eq!(o.cache_hits, 1);
+        assert_eq!(o.model_calls, 0);
+        assert_eq!(o.batches, 0);
+        // And zeroed metric fields stay *off* the wire on re-serialize:
+        // a legacy report round-trips to its legacy shape.
+        let dumped = o.to_json_full().dumps();
+        assert!(!dumped.contains("model_calls"));
+        assert!(!dumped.contains("batches"));
+    }
+
+    #[test]
+    fn observability_metric_fields_round_trip_when_set() {
+        let mut t = Telemetry::new();
+        t.record(&[1, 2], &ok(10.0));
+        let mut o = t.into_outcome("sparsemap", "mm3", "cloud");
+        o.model_calls = 9;
+        o.batches = 4;
+        let parsed = Json::parse(&o.to_json_full().dumps()).unwrap();
+        assert_eq!(parsed.get("model_calls").and_then(Json::as_u64), Some(9));
+        assert_eq!(parsed.get("batches").and_then(Json::as_u64), Some(4));
+        let o2 = Outcome::from_json(&parsed).unwrap();
+        assert_eq!(o2.model_calls, 9);
+        assert_eq!(o2.batches, 4);
+        assert_eq!(o2.to_json_full(), o.to_json_full());
     }
 
     #[test]

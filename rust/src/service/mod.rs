@@ -7,12 +7,13 @@
 //!
 //! | endpoint                  | meaning                                    |
 //! |---------------------------|--------------------------------------------|
-//! | `GET  /health`            | liveness probe                             |
+//! | `GET  /health`            | liveness + load: queue depth, running/suspended job counts, memory-store size |
+//! | `GET  /metrics`           | Prometheus text exposition of the [`crate::obs`] registry |
 //! | `GET  /methods`           | [`crate::api::methods_json`] — the registry|
 //! | `POST /jobs`              | submit a [`crate::api::SearchRequest`] JSON (plus optional `tenant`, `priority`) |
 //! | `GET  /jobs`              | list all jobs (summaries)                  |
 //! | `GET  /jobs/<id>`         | one job, with the full report when done    |
-//! | `GET  /jobs/<id>/events`  | NDJSON progress stream until terminal      |
+//! | `GET  /jobs/<id>/events`  | NDJSON progress stream until terminal; every line carries a monotone `seq` for reconnect dedup |
 //! | `POST /jobs/<id>/cancel`  | cancel: resumable methods suspend into a checkpoint, the rest hard-stop |
 //! | `POST /jobs/<id>/resume`  | re-queue a suspended job from its checkpoint |
 //!
@@ -28,10 +29,16 @@
 //! resumed run finishes bit-identical to one that was never interrupted
 //! (the same guarantee [`crate::api::SearchSession::run_opts`] makes).
 //!
-//! With `--auth-token <secret>` every endpoint except `GET /health`
-//! requires a matching `Authorization: Bearer <secret>` header (401
-//! otherwise) — the actual trust boundary in front of the honor-system
-//! `tenant` field.
+//! With `--auth-token <secret>` every endpoint except `GET /health` and
+//! `GET /metrics` requires a matching `Authorization: Bearer <secret>`
+//! header (401 otherwise) — the actual trust boundary in front of the
+//! honor-system `tenant` field. Health probes and Prometheus scrapers
+//! stay secret-free; neither endpoint exposes request contents.
+//!
+//! Every job records into the process-global [`crate::obs`] metrics
+//! registry (evals, per-stage latency, per-tenant spend, job lifecycle
+//! counters, per-endpoint request latency), which is exactly what
+//! `GET /metrics` serves.
 //!
 //! With `--memory-store <path>` the service opens one shared
 //! [`crate::memory::MemoryStore`]: every *completed* job deposits its

@@ -12,6 +12,7 @@ use super::http;
 use super::job::{Job, JobState};
 use super::queue::{JobQueue, QueueEntry, QuotaBook};
 use crate::api::{RunOpts, SearchReport, SearchRequest};
+use crate::obs::{self, metrics};
 use crate::optimizer::{self, Checkpoint};
 use crate::search::{Progress, SearchControl};
 use crate::util::json::Json;
@@ -22,7 +23,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How the daemon runs: where to listen, how many concurrent searches,
 /// the per-tenant quota (0 = unlimited) and where suspended jobs
@@ -188,20 +189,31 @@ fn handle_connection(shared: &Arc<Shared>, stream: TcpStream) {
         }
     };
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
-    // Bearer auth when configured. `GET /health` stays open so load
-    // balancers and liveness probes never need the secret.
-    let health = req.method == "GET" && segs.as_slice() == ["health"];
+    // Bearer auth when configured. `GET /health` and `GET /metrics`
+    // stay open so load balancers and Prometheus scrapers never need
+    // the secret (neither endpoint leaks request contents).
+    let public =
+        req.method == "GET" && matches!(segs.as_slice(), ["health"] | ["metrics"]);
     let authorized = match &shared.auth_token {
-        Some(token) if !health => bearer_matches(req.authorization.as_deref(), token),
+        Some(token) if !public => bearer_matches(req.authorization.as_deref(), token),
         _ => true,
     };
     if !authorized {
         let _ = http::error_json(&mut w, 401, "missing or invalid bearer token");
         return;
     }
+    let t0 = Instant::now();
+    let route = route_index(req.method.as_str(), &segs);
     let result = match (req.method.as_str(), segs.as_slice()) {
-        ("GET", ["health"]) => {
-            http::respond_json(&mut w, 200, &Json::obj(vec![("ok", Json::Bool(true))]))
+        ("GET", ["health"]) => http::respond_json(&mut w, 200, &health_json(shared)),
+        ("GET", ["metrics"]) => {
+            refresh_service_gauges(shared);
+            http::respond(
+                &mut w,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                obs::global().render_prometheus().as_bytes(),
+            )
         }
         ("GET", ["methods"]) => http::respond_json(&mut w, 200, &crate::api::methods_json()),
         ("POST", ["jobs"]) => submit_job(shared, &req.body, &mut w),
@@ -212,8 +224,78 @@ fn handle_connection(shared: &Arc<Shared>, stream: TcpStream) {
         ("POST", ["jobs", id, "resume"]) => resume_job(shared, id, &mut w),
         _ => http::error_json(&mut w, 404, "no such endpoint"),
     };
+    // Response latency per route. For `/jobs/<id>/events` this is the
+    // whole stream lifetime (the handler holds the connection open),
+    // which is the honest number for a streaming endpoint.
+    obs::global().http_ns[route].record(t0.elapsed().as_nanos() as u64);
     // A failed write means the client went away; nothing left to do.
     let _ = result;
+}
+
+/// Classify a request into one of [`metrics::HTTP_ROUTES`] for the
+/// per-endpoint latency histograms — ids collapse into their route so
+/// label cardinality stays fixed.
+fn route_index(method: &str, segs: &[&str]) -> usize {
+    let name = match (method, segs) {
+        ("GET", ["health"]) => "health",
+        ("GET", ["metrics"]) => "metrics",
+        ("GET", ["methods"]) => "methods",
+        ("POST", ["jobs"]) => "jobs_submit",
+        ("GET", ["jobs"]) => "jobs_list",
+        ("GET", ["jobs", _]) => "jobs_get",
+        ("GET", ["jobs", _, "events"]) => "jobs_events",
+        ("POST", ["jobs", _, "cancel"]) => "jobs_cancel",
+        ("POST", ["jobs", _, "resume"]) => "jobs_resume",
+        _ => "other",
+    };
+    metrics::HTTP_ROUTES.iter().position(|r| *r == name).unwrap_or(metrics::HTTP_ROUTES.len() - 1)
+}
+
+/// Snapshot the queue/job/memory state, push it into the service gauges
+/// (so a `/metrics` scrape and `/health` always agree) and return the
+/// counts as `(queue_depth, running, suspended, jobs_total, memory)`.
+fn refresh_service_gauges(shared: &Arc<Shared>) -> (usize, usize, usize, usize, Option<usize>) {
+    let (depth, running, suspended, total) = {
+        let st = shared.state.lock().unwrap();
+        let mut running = 0;
+        let mut suspended = 0;
+        for j in st.jobs.values() {
+            match j.state {
+                JobState::Running => running += 1,
+                JobState::Suspended => suspended += 1,
+                _ => {}
+            }
+        }
+        (st.queue.len(), running, suspended, st.jobs.len())
+    };
+    let memory_records = shared
+        .memory
+        .as_ref()
+        .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).len());
+    let m = obs::global();
+    m.queue_depth.set(depth as u64);
+    m.jobs_running.set(running as u64);
+    m.jobs_suspended.set(suspended as u64);
+    m.memory_records.set(memory_records.unwrap_or(0) as u64);
+    (depth, running, suspended, total, memory_records)
+}
+
+/// The enriched `/health` body: liveness plus the load picture an
+/// operator wants first — queue depth, running/suspended job counts and
+/// the design-memory size (`null` when no store is configured).
+fn health_json(shared: &Arc<Shared>) -> Json {
+    let (depth, running, suspended, total, memory_records) = refresh_service_gauges(shared);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("queue_depth", Json::num(depth as f64)),
+        ("jobs_running", Json::num(running as f64)),
+        ("jobs_suspended", Json::num(suspended as f64)),
+        ("jobs_total", Json::num(total as f64)),
+        (
+            "memory_records",
+            memory_records.map_or(Json::Null, |n| Json::num(n as f64)),
+        ),
+    ])
 }
 
 /// `Authorization: Bearer <token>` check: scheme case-insensitive (RFC
@@ -261,6 +343,7 @@ fn submit_job<W: Write>(shared: &Arc<Shared>, body: &[u8], w: &mut W) -> io::Res
         st.queue.push(QueueEntry { priority, seq, job_id: id });
         summary
     };
+    obs::global().job_events[metrics::JOB_SUBMITTED].inc();
     shared.cv.notify_all();
     http::respond_json(w, 202, &summary)
 }
@@ -293,10 +376,11 @@ fn cancel_job<W: Write>(shared: &Arc<Shared>, id: &str, w: &mut W) -> io::Result
     match job.state {
         JobState::Queued => {
             job.state = JobState::Cancelled;
-            job.events.push(event("cancelled", vec![]));
+            push_event(job, "cancelled", vec![]);
             job.events_done = true;
             let summary = job.summary_json();
             drop(st);
+            obs::global().job_events[metrics::JOB_CANCELLED].inc();
             shared.cv.notify_all();
             http::respond_json(w, 202, &summary)
         }
@@ -341,13 +425,14 @@ fn resume_job<W: Write>(shared: &Arc<Shared>, id: &str, w: &mut W) -> io::Result
     }
     job.state = JobState::Queued;
     job.events_done = false;
-    job.events.push(event("resubmitted", vec![]));
+    push_event(job, "resubmitted", vec![]);
     let priority = job.priority;
     let summary = job.summary_json();
     let seq = st.next_seq;
     st.next_seq += 1;
     st.queue.push(QueueEntry { priority, seq, job_id: id.to_string() });
     drop(st);
+    obs::global().job_events[metrics::JOB_RESUMED].inc();
     shared.cv.notify_all();
     http::respond_json(w, 202, &summary)
 }
@@ -431,9 +516,10 @@ fn run_job(shared: &Arc<Shared>, id: &str) {
         }
         job.state = JobState::Running;
         job.suspend = Some(suspend.clone());
-        job.events.push(event("started", vec![("method", Json::str(&job.request.method))]));
+        push_event(job, "started", vec![("method", Json::str(&job.request.method))]);
         (job.request.clone(), job.checkpoint.take())
     };
+    obs::global().job_events[metrics::JOB_STARTED].inc();
     shared.cv.notify_all();
     let result = execute(shared, id, request, resume_json, suspend);
     let mut st = shared.state.lock().unwrap();
@@ -441,26 +527,28 @@ fn run_job(shared: &Arc<Shared>, id: &str) {
     let was_cancelled = job.cancel.as_ref().is_some_and(|f| f.load(Ordering::SeqCst));
     let disk;
     let mut remember = None;
+    let m = obs::global();
     match result {
         Ok(report) => {
             if let Some(cp) = &report.checkpoint {
                 job.checkpoint = Some(cp.clone());
                 job.state = JobState::Suspended;
-                job.events.push(event(
+                push_event(
+                    job,
                     "suspended",
                     vec![("evals", Json::num(report.outcome.evals as f64))],
-                ));
+                );
+                m.job_events[metrics::JOB_SUSPENDED].inc();
                 disk = Some(DiskAction::Write(job_file_json(job)));
             } else if was_cancelled {
                 job.state = JobState::Cancelled;
-                job.events.push(event("cancelled", vec![]));
+                push_event(job, "cancelled", vec![]);
+                m.job_events[metrics::JOB_CANCELLED].inc();
                 disk = Some(DiskAction::Remove);
             } else {
                 job.state = JobState::Done;
-                job.events.push(event(
-                    "done",
-                    vec![("best_edp", finite_num(report.outcome.best_edp))],
-                ));
+                push_event(job, "done", vec![("best_edp", finite_num(report.outcome.best_edp))]);
+                m.job_events[metrics::JOB_DONE].inc();
                 disk = Some(DiskAction::Remove);
                 // Only completed runs feed the design memory — a
                 // suspended or cancelled search's best is provisional.
@@ -468,12 +556,16 @@ fn run_job(shared: &Arc<Shared>, id: &str) {
                     remember = Some((report.request.clone(), report.outcome.clone()));
                 }
             }
+            // Per-tenant accounting of evaluations actually spent —
+            // partial (suspended/cancelled) spend counts too.
+            m.tenant_evals.add(&job.tenant, report.outcome.evals as u64);
             job.report = Some(report.to_json());
         }
         Err(e) => {
             job.state = JobState::Failed;
             job.error = Some(e.to_string());
-            job.events.push(event("failed", vec![("error", Json::str(&e.to_string()))]));
+            push_event(job, "failed", vec![("error", Json::str(&e.to_string()))]);
+            m.job_events[metrics::JOB_FAILED].inc();
             disk = Some(DiskAction::Remove);
         }
     }
@@ -521,11 +613,10 @@ fn execute(
     let observer_shared = Arc::clone(shared);
     let observer_id = id.to_string();
     let observer = Box::new(move |p: &Progress| {
-        let line = progress_event(p);
         {
             let mut st = observer_shared.state.lock().unwrap();
             if let Some(job) = st.jobs.get_mut(&observer_id) {
-                job.events.push(line);
+                push_event(job, "progress", progress_fields(p));
             }
         }
         observer_shared.cv.notify_all();
@@ -536,13 +627,22 @@ fn execute(
         suspend: Some(suspend),
         resume,
         memory: shared.memory.clone(),
+        trace: None,
+        // Every job records into the process-global registry; that is
+        // what `GET /metrics` serves.
+        metrics: Some(obs::global()),
     })
 }
 
-fn event(kind: &str, fields: Vec<(&str, Json)>) -> String {
-    let mut all = vec![("type", Json::str(kind))];
+/// Append one NDJSON event to a job's buffer, stamped with a monotone
+/// per-job sequence number (`seq` = buffer index): consumers of
+/// `/jobs/<id>/events` can order lines and drop duplicates after a
+/// reconnect, since a replay carries the same seqs it did the first
+/// time.
+fn push_event(job: &mut Job, kind: &str, fields: Vec<(&str, Json)>) {
+    let mut all = vec![("seq", Json::num(job.events.len() as f64)), ("type", Json::str(kind))];
     all.extend(fields);
-    Json::obj(all).dumps()
+    job.events.push(Json::obj(all).dumps());
 }
 
 fn finite_num(x: f64) -> Json {
@@ -553,17 +653,14 @@ fn finite_num(x: f64) -> Json {
     }
 }
 
-fn progress_event(p: &Progress) -> String {
-    event(
-        "progress",
-        vec![
-            ("evals", Json::num(p.evals as f64)),
-            ("valid_evals", Json::num(p.valid_evals as f64)),
-            ("cache_hits", Json::num(p.cache_hits as f64)),
-            ("best_edp", finite_num(p.best_edp)),
-            ("budget", Json::num(p.budget as f64)),
-        ],
-    )
+fn progress_fields(p: &Progress) -> Vec<(&'static str, Json)> {
+    vec![
+        ("evals", Json::num(p.evals as f64)),
+        ("valid_evals", Json::num(p.valid_evals as f64)),
+        ("cache_hits", Json::num(p.cache_hits as f64)),
+        ("best_edp", finite_num(p.best_edp)),
+        ("budget", Json::num(p.budget as f64)),
+    ]
 }
 
 const JOB_FILE_SCHEMA: &str = "sparsemap.service_job.v1";
@@ -650,7 +747,7 @@ fn parse_job_file(path: &Path) -> Result<Job> {
     ensure!(!matches!(checkpoint, Json::Null), "null checkpoint");
     let mut job = Job::new(id, tenant, priority, request);
     job.state = JobState::Suspended;
-    job.events.push(event("restored", vec![]));
+    push_event(&mut job, "restored", vec![]);
     job.events_done = true;
     job.checkpoint = Some(checkpoint);
     Ok(job)
@@ -856,9 +953,13 @@ mod tests {
         })
         .unwrap();
         let addr = handle.addr;
-        // Health stays open so probes never need the secret.
+        // Health stays open so probes never need the secret, and
+        // metrics stays open for Prometheus scrapers.
         let (s, _) = request(addr, "GET", "/health", "");
         assert_eq!(s, 200);
+        let (s, b) = request(addr, "GET", "/metrics", "");
+        assert_eq!(s, 200, "{b}");
+        assert!(b.contains("sparsemap_"), "{b}");
         // Missing header, wrong token, wrong scheme: all 401.
         let (s, b) = request(addr, "GET", "/jobs", "");
         assert_eq!(s, 401, "{b}");
@@ -876,6 +977,113 @@ mod tests {
         assert_eq!(s, 200, "{b}");
         let (s, b) = request_with(addr, "POST", "/jobs", &body, Some("Bearer s3cret"));
         assert_eq!(s, 202, "{b}");
+    }
+
+    /// Open an events stream, read until `n` body lines arrived, then
+    /// drop the connection — a consumer that goes away mid-stream.
+    fn read_body_lines(addr: SocketAddr, path: &str, n: usize) -> Vec<String> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let msg = format!("GET {path} HTTP/1.1\r\nHost: test\r\nContent-Length: 0\r\n\r\n");
+        stream.write_all(msg.as_bytes()).unwrap();
+        let mut buf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 1024];
+        loop {
+            if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let body = &buf[i + 4..];
+                if body.iter().filter(|&&c| c == b'\n').count() >= n {
+                    return String::from_utf8_lossy(body)
+                        .lines()
+                        .take(n)
+                        .map(str::to_string)
+                        .collect();
+                }
+            }
+            let k = stream.read(&mut chunk).unwrap();
+            assert!(k > 0, "stream ended before {n} event lines arrived");
+            buf.extend_from_slice(&chunk[..k]);
+        }
+    }
+
+    #[test]
+    fn event_stream_has_monotone_seqs_and_replays_identically_on_reconnect() {
+        let handle = start_on_loopback(1, 0, None);
+        let addr = handle.addr;
+        let (s, b) = request(addr, "POST", "/jobs", &submit_body("sparsemap", 2_000, "t", 0));
+        assert_eq!(s, 202, "{b}");
+        let id = Json::parse(&b).unwrap().get("id").and_then(Json::as_str).unwrap().to_string();
+        // First consumer reads two lines, then drops the connection.
+        let early = read_body_lines(addr, &format!("/jobs/{id}/events"), 2);
+        poll_state(addr, &id, "done", 1500);
+        let (s, full1) = request(addr, "GET", &format!("/jobs/{id}/events"), "");
+        assert_eq!(s, 200);
+        let (_, full2) = request(addr, "GET", &format!("/jobs/{id}/events"), "");
+
+        // Every line carries a seq; the seqs are exactly 0..n — ordered,
+        // gap-free and duplicate-free.
+        let seqs: Vec<u64> = full1
+            .lines()
+            .map(|l| {
+                Json::parse(l)
+                    .unwrap()
+                    .get("seq")
+                    .and_then(Json::as_u64)
+                    .expect("every event line carries a seq")
+            })
+            .collect();
+        assert!(seqs.len() >= 3, "started + progress + done at minimum: {full1}");
+        assert_eq!(seqs, (0..seqs.len() as u64).collect::<Vec<_>>(), "{full1}");
+        assert_eq!(full1, full2, "a replay is byte-identical");
+        // The dropped consumer's prefix matches the replay line for
+        // line, so deduplicating by seq after a reconnect loses nothing.
+        let replayed: Vec<&str> = full1.lines().collect();
+        for (i, line) in early.iter().enumerate() {
+            assert_eq!(line, replayed[i], "reconnect prefix diverged at line {i}");
+        }
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_prometheus_and_health_is_enriched() {
+        let handle = start_on_loopback(1, 0, None);
+        let addr = handle.addr;
+        let (s, b) =
+            request(addr, "POST", "/jobs", &submit_body("random", 50, "metrics-tenant", 0));
+        assert_eq!(s, 202, "{b}");
+        let id = Json::parse(&b).unwrap().get("id").and_then(Json::as_str).unwrap().to_string();
+        poll_state(addr, &id, "done", 500);
+
+        let (s, b) = request(addr, "GET", "/health", "");
+        assert_eq!(s, 200);
+        let h = Json::parse(&b).unwrap();
+        assert_eq!(h.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(h.get("jobs_total").and_then(Json::as_u64).unwrap() >= 1, "{b}");
+        for k in ["queue_depth", "jobs_running", "jobs_suspended"] {
+            assert!(h.get(k).and_then(Json::as_u64).is_some(), "missing {k}: {b}");
+        }
+        // No memory store configured: the count is null, not zero.
+        assert_eq!(h.get("memory_records"), Some(&Json::Null), "{b}");
+
+        let (s, text) = request(addr, "GET", "/metrics", "");
+        assert_eq!(s, 200);
+        // Engine, service and memory families are all present, and the
+        // job above drove the engine counters through the global scope.
+        for series in [
+            "sparsemap_evals_total",
+            "sparsemap_stage_seconds_bucket",
+            "sparsemap_http_request_seconds_bucket{route=\"jobs_submit\"",
+            "sparsemap_queue_depth",
+            "sparsemap_jobs_total{event=\"done\"}",
+            "sparsemap_memory_records",
+            "sparsemap_tenant_evals_total{tenant=\"metrics-tenant\"} 50",
+        ] {
+            assert!(text.contains(series), "missing `{series}` in:\n{text}");
+        }
+        let evals: f64 = text
+            .lines()
+            .find_map(|l| l.strip_prefix("sparsemap_evals_total "))
+            .expect("evals_total series")
+            .parse()
+            .unwrap();
+        assert!(evals >= 50.0, "the finished job's evals are visible: {evals}");
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! End-to-end observability acceptance: tracing must not perturb search
+//! trajectories, traces must be deterministic once wall-clock fields are
+//! stripped, a metrics scope must account for exactly the run it was
+//! attached to, and plain library runs must leave the process-global
+//! registry untouched.
+
+use sparsemap::api::{RunOpts, SearchRequest};
+use sparsemap::obs::{self, read_trace, Metrics, TRACE_SCHEMA};
+use sparsemap::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn trace_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("sparsemap_obs_accept");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(format!("{}_{}.ndjson", name, std::process::id()))
+}
+
+fn arm(seed: u64) -> SearchRequest {
+    SearchRequest::new()
+        .workload_named("mm1")
+        .platform_named("mobile")
+        .method("random")
+        .budget(300)
+        .seed(seed)
+}
+
+/// Trace lines with every wall-clock field stripped (`ms` on all
+/// records, `wall_s` on `finish`) and `stages` records reduced to their
+/// per-stage sample counts (the latency values are wall time).
+fn normalized_lines(path: &Path) -> Vec<String> {
+    let text = std::fs::read_to_string(path).unwrap();
+    read_trace(&text)
+        .unwrap()
+        .into_iter()
+        .map(|mut rec| {
+            if let Json::Obj(o) = &mut rec {
+                o.remove("ms");
+                o.remove("wall_s");
+                if let Some(Json::Obj(stages)) = o.get_mut("stages") {
+                    for snap in stages.values_mut() {
+                        let count = snap.get("count").cloned().unwrap_or(Json::Null);
+                        *snap = count;
+                    }
+                }
+            }
+            rec.dumps()
+        })
+        .collect()
+}
+
+#[test]
+fn tracing_is_trajectory_neutral_and_deterministic_modulo_timing() {
+    let plain = arm(21).build().unwrap().run().unwrap();
+
+    let run_traced = |path: &Path| {
+        let _ = std::fs::remove_file(path);
+        arm(21)
+            .build()
+            .unwrap()
+            .run_opts(RunOpts { trace: Some(path.to_path_buf()), ..Default::default() })
+            .unwrap()
+    };
+    let p1 = trace_path("det_a");
+    let p2 = trace_path("det_b");
+    let a = run_traced(&p1);
+    let b = run_traced(&p2);
+
+    // Tracing is a pure observer: the report is bit-identical to an
+    // untraced run of the same request.
+    for traced in [&a, &b] {
+        assert_eq!(traced.outcome.best_edp.to_bits(), plain.outcome.best_edp.to_bits());
+        assert_eq!(traced.outcome.curve, plain.outcome.curve);
+        assert_eq!(traced.outcome.evals, plain.outcome.evals);
+    }
+
+    // And the trace itself is deterministic once wall-clock fields are
+    // stripped: two runs of the same seeded request agree line for line.
+    let la = normalized_lines(&p1);
+    let lb = normalized_lines(&p2);
+    assert!(la.len() > 3, "start + generations + stages + finish: {la:?}");
+    assert_eq!(la, lb);
+
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p2);
+}
+
+#[test]
+fn metrics_scope_accounts_for_exactly_its_run() {
+    let m = Arc::new(Metrics::new());
+    let report = arm(5)
+        .build()
+        .unwrap()
+        .run_opts(RunOpts { metrics: Some(Arc::clone(&m)), ..Default::default() })
+        .unwrap();
+
+    // The scope's counters mirror the report's outcome exactly.
+    assert_eq!(m.evals.get(), report.outcome.evals as u64);
+    assert_eq!(m.valid_evals.get(), report.outcome.valid_evals as u64);
+    assert_eq!(m.eval_cache_hits.get(), report.outcome.cache_hits as u64);
+    assert_eq!(m.batches.get(), report.outcome.batches as u64);
+    assert!(m.batches.get() > 0, "a 300-eval run evaluates batches");
+    assert!(m.stage_ns[0].snapshot().count > 0, "decode latency was sampled");
+    assert_eq!(m.best_edp.get(), report.outcome.best_edp);
+
+    // The same numbers round-trip through the Prometheus renderer.
+    let text = m.render_prometheus();
+    assert!(text.contains(&format!("sparsemap_evals_total {}", report.outcome.evals)), "{text}");
+    assert!(text.contains("sparsemap_stage_seconds_bucket{stage=\"decode\""), "{text}");
+}
+
+#[test]
+fn plain_library_runs_leave_the_global_registry_untouched() {
+    // Library calls are unobserved unless a scope is attached: no test
+    // in this binary touches `obs::global()`, including the traced and
+    // scoped runs above (tracing gets a *private* scope).
+    arm(9).build().unwrap().run().unwrap();
+    let g = obs::global();
+    assert_eq!(g.evals.get(), 0);
+    assert_eq!(g.batches.get(), 0);
+    assert_eq!(g.stage_ns[0].snapshot().count, 0);
+}
+
+#[test]
+fn trace_records_carry_schema_and_outcome() {
+    let path = trace_path("schema");
+    let _ = std::fs::remove_file(&path);
+    let report = arm(13)
+        .build()
+        .unwrap()
+        .run_opts(RunOpts { trace: Some(path.clone()), ..Default::default() })
+        .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let records = read_trace(&text).unwrap();
+    assert!(records.iter().all(|r| r.get("v").and_then(Json::as_str) == Some(TRACE_SCHEMA)));
+    let finish = records.last().unwrap();
+    assert_eq!(finish.get("ev").and_then(Json::as_str), Some("finish"));
+    assert_eq!(
+        finish.get("evals").and_then(Json::as_u64),
+        Some(report.outcome.evals as u64)
+    );
+    let summary = obs::summarize(&text).unwrap();
+    assert!(summary.contains("mm1@mobile"), "{summary}");
+    assert!(summary.contains("stage latency"), "{summary}");
+    assert!(summary.contains("convergence"), "{summary}");
+    let _ = std::fs::remove_file(&path);
+}
