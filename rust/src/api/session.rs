@@ -56,6 +56,12 @@ pub struct RunOpts {
     /// traced run without an explicit scope gets a private one so its
     /// `stages` snapshot carries data.
     pub metrics: Option<Arc<Metrics>>,
+    /// Run-local fault plan for deterministic chaos tests (see
+    /// [`crate::util::faults`]): arms the `eval` fault point for this
+    /// run only, without touching the process-global plan. `None` (the
+    /// default) leaves behavior — and the zero-alloc hot path —
+    /// unchanged.
+    pub faults: Option<Arc<crate::util::faults::FaultPlan>>,
 }
 
 /// A validated search arm. Created by [`SearchRequest::build`]; run with
@@ -265,6 +271,7 @@ impl SearchSession {
         let mut ctx = self.make_context(observer);
         ctx.set_metrics(metrics.clone());
         ctx.set_suspend_flag(opts.suspend.clone());
+        ctx.set_faults(opts.faults.clone());
         let mut resumed_from = None;
         if let Some(cp) = &opts.resume {
             ensure!(

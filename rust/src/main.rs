@@ -71,7 +71,11 @@ Utility commands:
                          [--memory-store FILE] shares one design memory
                          across jobs (completed jobs deposit elites,
                          warm_start requests seed from it), compacted to
-                         [--memory-cap N] records at startup
+                         [--memory-cap N] records at startup;
+                         [--max-conns N] sheds connections above N with
+                         503 + Retry-After (default 64); SIGTERM/SIGINT
+                         drain gracefully (suspend running resumable
+                         jobs to checkpoints, flush, exit)
   memory ACTION        inspect or maintain a design-memory store
                          (--store FILE): `stats` prints per-scenario
                          record counts and a nearest-neighbour distance
@@ -100,6 +104,10 @@ Common options:
                        any N); matrix experiments also run N arms at once
   --pjrt               evaluate through the AOT PJRT artifact
   --workloads a,b,c    restrict table4 to a workload subset
+  --fault-plan SPEC    arm deterministic fault injection (chaos testing):
+                       e.g. 'store-append:torn:25@1', 'eval:panic@3',
+                       'seed=7;checkpoint-write:error'; also readable
+                       from the SPARSEMAP_FAULTS environment variable
 
 Unknown options are rejected (with a nearest-match suggestion), so typos
 fail loudly instead of silently running defaults.
@@ -112,7 +120,7 @@ paid for.
 
 /// Per-subcommand argument whitelists (on top of the common set).
 fn check_args(args: &Args) -> anyhow::Result<()> {
-    const COMMON_OPTS: &[&str] = &["budget", "seed", "out", "threads"];
+    const COMMON_OPTS: &[&str] = &["budget", "seed", "out", "threads", "fault-plan"];
     const COMMON_FLAGS: &[&str] = &["pjrt"];
     const SEARCH_OPTS: &[&str] = &[
         "workload",
@@ -131,7 +139,15 @@ fn check_args(args: &Args) -> anyhow::Result<()> {
         "calibrate" => (&["workload", "platform"], &[]),
         "methods" => (&[], &["json"]),
         "serve" => (
-            &["addr", "quota", "checkpoint-dir", "auth-token", "memory-store", "memory-cap"],
+            &[
+                "addr",
+                "quota",
+                "checkpoint-dir",
+                "auth-token",
+                "memory-store",
+                "memory-cap",
+                "max-conns",
+            ],
             &[],
         ),
         "memory" => (&["store", "cap"], &[]),
@@ -389,6 +405,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let memory_cap = args.opt_u64("memory-cap", sparsemap::memory::DEFAULT_CAP as u64)? as usize;
     anyhow::ensure!(memory_cap >= 1, "--memory-cap must be at least 1");
+    let defaults = sparsemap::service::ServerConfig::default();
+    let max_conns = args.opt_u64("max-conns", defaults.max_conns as u64)? as usize;
+    anyhow::ensure!(max_conns >= 1, "--max-conns must be at least 1");
     let cfg = sparsemap::service::ServerConfig {
         addr: args.opt_or("addr", "127.0.0.1:7878"),
         workers,
@@ -397,6 +416,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         auth_token: args.opt("auth-token").map(str::to_string),
         memory_store: args.opt("memory-store").map(PathBuf::from),
         memory_cap,
+        max_conns,
+        ..defaults
     };
     sparsemap::service::serve(cfg)
 }
@@ -498,6 +519,14 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     check_args(&args)?;
+    // Chaos testing: arm the process-global fault plan before anything
+    // touches disk or sockets. CLI flag wins over the environment.
+    sparsemap::util::faults::init_from_env()?;
+    if let Some(spec) = args.opt("fault-plan") {
+        let plan = sparsemap::util::faults::FaultPlan::parse(spec)?;
+        eprintln!("fault plan armed from --fault-plan: {}", plan.describe());
+        sparsemap::util::faults::arm(plan);
+    }
     let cfg = exp_config(&args)?;
 
     match args.subcommand.as_str() {

@@ -32,5 +32,7 @@ pub mod store;
 
 pub use embed::{dist2, scenario_embedding, scenario_tag, EMBED_DIM};
 pub use index::AnnIndex;
-pub use record::{decode_file, header_bytes, MemRecord, MEMORY_SCHEMA, MEMORY_VERSION};
+pub use record::{
+    decode_file, header_bytes, salvage_file, MemRecord, Salvage, MEMORY_SCHEMA, MEMORY_VERSION,
+};
 pub use store::{MemoryStore, DEFAULT_CAP};

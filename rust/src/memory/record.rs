@@ -216,6 +216,53 @@ pub fn decode_file(bytes: &[u8]) -> Result<Vec<MemRecord>> {
     Ok(records)
 }
 
+/// Result of a salvage pass over a store file: every record decodable
+/// from the head, the byte length of that valid prefix, and — when the
+/// file does not decode cleanly to its end — what was wrong with the
+/// damaged tail.
+pub struct Salvage {
+    /// The intact record prefix (whole records only, in file order).
+    pub records: Vec<MemRecord>,
+    /// Bytes of header + intact records; the damaged tail starts here.
+    pub valid_len: usize,
+    /// `None` when the whole file decoded; otherwise why decoding
+    /// stopped (torn tail, flipped bytes, …).
+    pub damage: Option<String>,
+}
+
+/// Salvage a store file: recover the longest decodable record prefix
+/// instead of rejecting the whole file. This is the crash-recovery read
+/// path — a `kill -9` mid-append leaves a torn final record, and the
+/// elites before it are perfectly good. Guarantees:
+///
+/// - a damaged or missing **header** is still a hard error (there is
+///   nothing trustworthy to salvage under a wrong magic/version/dim);
+/// - a returned record always decoded with its checksum intact — salvage
+///   never yields a partial or bit-flipped record (pinned by proptests
+///   over every cut point in `tests/proptests.rs`).
+pub fn salvage_file(bytes: &[u8]) -> Result<Salvage> {
+    check_header(bytes)?;
+    let mut records = Vec::new();
+    let mut off = HEADER_LEN;
+    while off < bytes.len() {
+        match MemRecord::decode(&bytes[off..]) {
+            Ok((rec, used)) => {
+                records.push(rec);
+                off += used;
+            }
+            Err(e) => {
+                let damage = format!(
+                    "record {} (at byte {off}, {} tail bytes): {e}",
+                    records.len(),
+                    bytes.len() - off
+                );
+                return Ok(Salvage { records, valid_len: off, damage: Some(damage) });
+            }
+        }
+    }
+    Ok(Salvage { records, valid_len: off, damage: None })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +343,43 @@ mod tests {
                 assert_eq!(recs, vec![rec.clone()], "flip at byte {i} changed data");
             }
         }
+    }
+
+    #[test]
+    fn salvage_recovers_the_intact_prefix() {
+        let r1 = sample("a@p#m", 1.0, vec![1, 2, 3]);
+        let r2 = sample("b@p#m", 2.0, vec![4, 5]);
+        let mut bytes = header_bytes().to_vec();
+        bytes.extend_from_slice(&r1.encode());
+        let r2_start = bytes.len();
+        bytes.extend_from_slice(&r2.encode());
+
+        // A cut inside the second record keeps exactly the first.
+        let torn = &bytes[..r2_start + 10];
+        let s = salvage_file(torn).unwrap();
+        assert_eq!(s.records, vec![r1.clone()]);
+        assert_eq!(s.valid_len, r2_start);
+        assert!(s.damage.as_deref().unwrap().contains("record 1"), "{:?}", s.damage);
+
+        // A clean file salvages whole with no damage.
+        let s = salvage_file(&bytes).unwrap();
+        assert_eq!(s.records, vec![r1.clone(), r2.clone()]);
+        assert_eq!(s.valid_len, bytes.len());
+        assert!(s.damage.is_none());
+
+        // A bit flip in the tail record drops it but keeps the prefix.
+        let mut evil = bytes.clone();
+        evil[r2_start + 60] ^= 0xff;
+        let s = salvage_file(&evil).unwrap();
+        assert_eq!(s.records, vec![r1]);
+        assert_eq!(s.valid_len, r2_start);
+        assert!(s.damage.is_some());
+
+        // Header damage is still a hard error, never a salvage.
+        let mut bad = bytes;
+        bad[0] = b'X';
+        assert!(salvage_file(&bad).is_err());
+        assert!(salvage_file(&[1, 2]).is_err());
     }
 
     #[test]

@@ -10,10 +10,11 @@
 
 use super::embed::{dist2, scenario_embedding, scenario_tag, EMBED_DIM};
 use super::index::AnnIndex;
-use super::record::{decode_file, header_bytes, MemRecord, MEMORY_SCHEMA};
+use super::record::{header_bytes, salvage_file, MemRecord, MEMORY_SCHEMA};
 use crate::arch::Platform;
 use crate::genome::{Genome, GenomeSpec};
 use crate::search::Outcome;
+use crate::util::faults::{self, points};
 use crate::util::json::Json;
 use crate::workload::Workload;
 use anyhow::{Context, Result};
@@ -35,14 +36,27 @@ pub struct MemoryStore {
 
 impl MemoryStore {
     /// Open (or lazily create) the store at `path`. A missing file is an
-    /// empty store — the file itself is created on first append. A
-    /// present-but-invalid file is an error: corrupt or future-version
-    /// stores are rejected, never silently truncated.
+    /// empty store — the file itself is created on first append.
+    ///
+    /// A file with a **torn tail** (crash mid-append) is *salvaged*, not
+    /// rejected: the intact record prefix is recovered, the damaged tail
+    /// is quarantined verbatim into a `<path>.corrupt` sidecar, the main
+    /// file is truncated back to its valid prefix, and the event is
+    /// logged and counted (`sparsemap_memory_salvage_total`). Salvage
+    /// never yields a partial record. Header-level corruption (bad
+    /// magic, future version, foreign embed width) remains a hard error
+    /// — under a wrong header nothing in the file can be trusted.
     pub fn open(path: impl Into<PathBuf>) -> Result<MemoryStore> {
         let path = path.into();
         let records = match fs::read(&path) {
-            Ok(bytes) => decode_file(&bytes)
-                .with_context(|| format!("reading memory store {}", path.display()))?,
+            Ok(bytes) => {
+                let salvage = salvage_file(&bytes)
+                    .with_context(|| format!("reading memory store {}", path.display()))?;
+                if let Some(damage) = &salvage.damage {
+                    Self::quarantine_tail(&path, &bytes, salvage.valid_len, damage)?;
+                }
+                salvage.records
+            }
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
             Err(e) => {
                 return Err(anyhow::anyhow!("reading memory store {}: {e}", path.display()))
@@ -50,6 +64,36 @@ impl MemoryStore {
         };
         let index = AnnIndex::build(&records.iter().map(|r| r.embed).collect::<Vec<_>>());
         Ok(MemoryStore { path, records, index })
+    }
+
+    /// Move the damaged tail of a salvaged store into its `.corrupt`
+    /// sidecar and truncate the main file back to the valid prefix, so
+    /// subsequent appends land after intact records only. The sidecar
+    /// appends (a store damaged twice keeps both tails for forensics).
+    fn quarantine_tail(path: &Path, bytes: &[u8], valid_len: usize, damage: &str) -> Result<()> {
+        let tail = &bytes[valid_len..];
+        let sidecar = PathBuf::from(format!("{}.corrupt", path.display()));
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&sidecar)
+            .with_context(|| format!("opening quarantine sidecar {}", sidecar.display()))?;
+        f.write_all(tail)?;
+        f.sync_all()?;
+        let main = fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("truncating salvaged store {}", path.display()))?;
+        main.set_len(valid_len as u64)?;
+        main.sync_all()?;
+        crate::obs::global().memory_salvages.inc();
+        eprintln!(
+            "warning: memory store {} salvaged — {damage}; {} damaged byte(s) quarantined to {}",
+            path.display(),
+            tail.len(),
+            sidecar.display()
+        );
+        Ok(())
     }
 
     pub fn path(&self) -> &Path {
@@ -69,8 +113,14 @@ impl MemoryStore {
     }
 
     /// Append one record: to disk first (header created if the file is
-    /// new), then to RAM + index. Disk errors leave the in-RAM state
-    /// untouched.
+    /// new), fsynced before the in-RAM state sees it — an acknowledged
+    /// append survives power loss. Disk errors leave the in-RAM state
+    /// untouched. The record write passes through the `store-append`
+    /// fault point; on a non-crash write error the file is truncated
+    /// back to its pre-append length (best-effort) so a later retry
+    /// appends after intact records. An injected *simulated-crash* torn
+    /// write skips that cleanup — a real crash would too — leaving the
+    /// torn tail for the next open to salvage.
     pub fn append(&mut self, rec: MemRecord) -> Result<()> {
         if let Some(dir) = self.path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -87,7 +137,18 @@ impl MemoryStore {
         if fresh {
             f.write_all(&header_bytes())?;
         }
-        f.write_all(&rec.encode())?;
+        let len_before = f.metadata()?.len();
+        if let Err(e) = faults::write_all_at(points::STORE_APPEND, &mut f, &rec.encode()) {
+            if !faults::simulates_crash(&e) {
+                let _ = f.set_len(len_before);
+                let _ = f.sync_all();
+            }
+            return Err(e).with_context(|| {
+                format!("appending to memory store {}", self.path.display())
+            });
+        }
+        f.sync_all()
+            .with_context(|| format!("syncing memory store {}", self.path.display()))?;
         self.index.insert(rec.embed);
         self.records.push(rec);
         Ok(())
@@ -201,21 +262,15 @@ impl MemoryStore {
         Ok(evicted)
     }
 
-    /// Atomically replace the file contents with `records`.
+    /// Atomically and durably replace the file contents with `records`
+    /// (tmp + fsync + rename + parent-dir fsync via
+    /// [`crate::util::atomic_write`]).
     fn rewrite(&mut self, records: &[MemRecord]) -> Result<()> {
         let mut bytes = header_bytes().to_vec();
         for r in records {
             bytes.extend_from_slice(&r.encode());
         }
-        let tmp = self.path.with_extension("tmp");
-        if let Some(dir) = self.path.parent() {
-            if !dir.as_os_str().is_empty() {
-                fs::create_dir_all(dir)?;
-            }
-        }
-        fs::write(&tmp, &bytes)
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        fs::rename(&tmp, &self.path)
+        crate::util::atomic_write(&self.path, &bytes)
             .with_context(|| format!("replacing {}", self.path.display()))?;
         self.records = records.to_vec();
         self.index = AnnIndex::build(&self.records.iter().map(|r| r.embed).collect::<Vec<_>>());
@@ -409,6 +464,58 @@ mod tests {
         assert!(!genomes.is_empty());
         assert!(genomes.iter().all(|g| spec_q.in_range(g)));
         let _ = fs::remove_file(&path);
+    }
+
+    // Crafts the torn file with direct byte surgery rather than the
+    // `store-append` fault point: unit tests share the process-global
+    // fault plan with parallel siblings, so only the serialized
+    // integration suite (`tests/faults.rs`) arms it.
+    #[test]
+    fn open_salvages_a_torn_tail_and_quarantines_it() {
+        let path = tmp_store("salvage");
+        let w = table3::by_id("mm1").unwrap();
+        let p = Platform::mobile();
+        let spec = GenomeSpec::for_workload(&w);
+        let mut rng = crate::util::rng::Pcg64::seeded(11);
+        let g1 = spec.random(&mut rng);
+        {
+            let mut st = MemoryStore::open(&path).unwrap();
+            st.remember(&w, &p, "es-std", &outcome_with(1.0, g1.clone()), 1).unwrap();
+            st.remember(&w, &p, "es-std", &outcome_with(2.0, spec.random(&mut rng)), 2).unwrap();
+        }
+        // Tear the file mid-way through the second record.
+        let full = fs::read(&path).unwrap();
+        let first_end = {
+            let s = crate::memory::salvage_file(&full).unwrap();
+            assert!(s.damage.is_none());
+            let mut bytes = crate::memory::header_bytes().to_vec();
+            bytes.extend_from_slice(&s.records[0].encode());
+            bytes.len()
+        };
+        let cut = first_end + 20;
+        fs::write(&path, &full[..cut]).unwrap();
+
+        let mut st = MemoryStore::open(&path).unwrap();
+        assert_eq!(st.len(), 1, "intact prefix recovered");
+        assert_eq!(st.records()[0].genome, g1);
+        let sidecar = PathBuf::from(format!("{}.corrupt", path.display()));
+        assert_eq!(
+            fs::read(&sidecar).unwrap(),
+            &full[first_end..cut],
+            "damaged tail quarantined verbatim"
+        );
+        assert_eq!(
+            fs::metadata(&path).unwrap().len() as usize,
+            first_end,
+            "main file truncated to the valid prefix"
+        );
+        // The store keeps working: append + clean reopen, no sidecar growth.
+        st.remember(&w, &p, "es-std", &outcome_with(3.0, spec.random(&mut rng)), 3).unwrap();
+        let st = MemoryStore::open(&path).unwrap();
+        assert_eq!(st.len(), 2);
+        assert_eq!(fs::read(&sidecar).unwrap().len(), cut - first_end);
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(&sidecar);
     }
 
     #[test]

@@ -331,6 +331,19 @@ pub struct Metrics {
     pub job_events: [Counter; JOB_EVENTS.len()],
     /// Budget submissions evaluated per tenant (finished jobs).
     pub tenant_evals: Labeled,
+    // --- fault tolerance --------------------------------------------------
+    /// Armed fault-plan injections that fired ([`crate::util::faults`]).
+    pub faults_injected: Counter,
+    /// Transient-I/O retry attempts ([`crate::util::retry`]).
+    pub io_retries: Counter,
+    /// Worker panics contained by the job harness (job landed `failed`).
+    pub panics_caught: Counter,
+    /// Store opens that salvaged a torn tail into a `.corrupt` sidecar.
+    pub memory_salvages: Counter,
+    /// Connections refused with 503 at the connection cap.
+    pub conns_shed: Counter,
+    /// Currently open service connections.
+    pub live_connections: Gauge,
 }
 
 impl Metrics {
@@ -355,6 +368,12 @@ impl Metrics {
             jobs_suspended: Gauge::new(),
             job_events: std::array::from_fn(|_| Counter::new()),
             tenant_evals: Labeled::new(),
+            faults_injected: Counter::new(),
+            io_retries: Counter::new(),
+            panics_caught: Counter::new(),
+            memory_salvages: Counter::new(),
+            conns_shed: Counter::new(),
+            live_connections: Gauge::new(),
         }
     }
 
@@ -475,6 +494,42 @@ impl Metrics {
                 self.job_events[i].get()
             ));
         }
+        counter_line(
+            &mut out,
+            "sparsemap_faults_injected_total",
+            "Armed fault-plan injections that fired.",
+            self.faults_injected.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_io_retries_total",
+            "Transient-I/O retry attempts.",
+            self.io_retries.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_panics_caught_total",
+            "Worker panics contained by the job harness.",
+            self.panics_caught.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_memory_salvage_total",
+            "Store opens that salvaged a torn tail into a .corrupt sidecar.",
+            self.memory_salvages.get(),
+        );
+        counter_line(
+            &mut out,
+            "sparsemap_conns_shed_total",
+            "Connections refused with 503 at the connection cap.",
+            self.conns_shed.get(),
+        );
+        gauge_line(
+            &mut out,
+            "sparsemap_live_connections",
+            "Currently open service connections.",
+            self.live_connections.get() as f64,
+        );
         let tenants = self.tenant_evals.snapshot();
         if !tenants.is_empty() {
             out.push_str(
@@ -659,6 +714,12 @@ mod tests {
             "sparsemap_tenant_evals_total{tenant=\"ci\"} 10",
             "sparsemap_best_edp 2.5",
             "sparsemap_queue_depth 0",
+            "sparsemap_faults_injected_total 0",
+            "sparsemap_io_retries_total 0",
+            "sparsemap_panics_caught_total 0",
+            "sparsemap_memory_salvage_total 0",
+            "sparsemap_conns_shed_total 0",
+            "sparsemap_live_connections 0",
         ] {
             assert!(text.contains(series), "missing series line: {series}\n---\n{text}");
         }

@@ -384,6 +384,12 @@ pub struct EvalContext {
     /// Cumulative telemetry values already published to `metrics`
     /// (counters are monotone, so publication adds deltas).
     published: (usize, usize, usize),
+    /// Local fault plan for this run (chaos tests via
+    /// [`RunOpts::faults`](crate::api::RunOpts)); `None` falls through
+    /// to the process-global plan. Disarmed cost at the top of
+    /// [`EvalContext::eval_batch`]: one `None` branch plus one relaxed
+    /// atomic load — the hot path stays zero-alloc.
+    faults: Option<Arc<crate::util::faults::FaultPlan>>,
 }
 
 impl EvalContext {
@@ -416,6 +422,7 @@ impl EvalContext {
             fence: None,
             metrics: None,
             published: (0, 0, 0),
+            faults: None,
         }
     }
 
@@ -521,6 +528,14 @@ impl EvalContext {
     /// In-place variant of [`EvalContext::with_suspend_flag`].
     pub fn set_suspend_flag(&mut self, flag: Option<Arc<AtomicBool>>) {
         self.suspend_flag = flag;
+    }
+
+    /// Attach a run-local fault plan (chaos tests). The `eval` fault
+    /// point fires at the top of every [`EvalContext::eval_batch`] call;
+    /// only `panic` and `delay` arms are meaningful there (the batch
+    /// path has no error return).
+    pub fn set_faults(&mut self, faults: Option<Arc<crate::util::faults::FaultPlan>>) {
+        self.faults = faults;
     }
 
     /// Has a suspension been requested (from any thread)? Unlike the stop
@@ -654,6 +669,14 @@ impl EvalContext {
     /// the cache without a model call. Unique genomes are evaluated in
     /// first-occurrence order, in parallel when a pool is attached.
     pub fn eval_batch(&mut self, genomes: &[Vec<u32>]) -> Vec<EvalResult> {
+        // Chaos hook: an armed `eval` fault can panic or stall here,
+        // simulating a poisoned cost model; disarmed this is one branch
+        // + one relaxed load (`tests/alloc_steady_state.rs` stands).
+        if let Some(crate::util::faults::FaultAction::Panic) =
+            crate::util::faults::check(self.faults.as_ref(), crate::util::faults::points::EVAL)
+        {
+            panic!("injected panic at fault point 'eval'");
+        }
         let n = genomes.len().min(self.remaining());
         if n == 0 {
             return Vec::new();

@@ -78,6 +78,7 @@ fn reason(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         409 => "Conflict",
         429 => "Too Many Requests",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
 }
@@ -89,15 +90,44 @@ pub fn respond<W: Write>(
     content_type: &str,
     body: &[u8],
 ) -> io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n",
+    respond_with(w, status, content_type, &[], body)
+}
+
+/// [`respond`] with extra headers, each a complete `Name: value` pair.
+pub fn respond_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[String],
+    body: &[u8],
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
         reason(status),
         body.len()
     );
+    for h in extra_headers {
+        head.push_str(h);
+        head.push_str("\r\n");
+    }
+    head.push_str("Connection: close\r\n\r\n");
     w.write_all(head.as_bytes())?;
     w.write_all(body)?;
     w.flush()
+}
+
+/// Load-shedding refusal: `503` with a `Retry-After` hint so well-
+/// behaved clients back off instead of hammering a saturated or
+/// draining service.
+pub fn unavailable<W: Write>(w: &mut W, msg: &str, retry_after_secs: u64) -> io::Result<()> {
+    let body = format!("{}\n", Json::obj(vec![("error", Json::str(msg))]).pretty());
+    respond_with(
+        w,
+        503,
+        "application/json",
+        &[format!("Retry-After: {retry_after_secs}")],
+        body.as_bytes(),
+    )
 }
 
 pub fn respond_json<W: Write>(w: &mut W, status: u16, j: &Json) -> io::Result<()> {
@@ -175,5 +205,19 @@ mod tests {
         let text = String::from_utf8(err).unwrap();
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
         assert!(text.contains("quota exceeded"));
+    }
+
+    #[test]
+    fn unavailable_carries_retry_after() {
+        let mut out = Vec::new();
+        unavailable(&mut out, "server at connection capacity", 3).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 3\r\n"), "{text}");
+        assert!(text.contains("connection capacity"), "{text}");
+        // Headers stay well-formed: the extra header lands before the
+        // blank line separating headers from body.
+        let head_end = text.find("\r\n\r\n").unwrap();
+        assert!(text[..head_end].contains("Retry-After"), "{text}");
     }
 }

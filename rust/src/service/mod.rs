@@ -47,6 +47,21 @@
 //! scenarios (no `store` path needed in the request — the service's
 //! store takes precedence). The store is compacted to `--memory-cap`
 //! records on every startup.
+//!
+//! **Fault tolerance.** The daemon is built to survive misbehaving
+//! clients, its own bugs, and `kill -9`: connections above `--max-conns`
+//! are shed with `503` + `Retry-After` instead of spawning unbounded
+//! threads; every socket carries read/write timeouts so a stalled peer
+//! cannot pin a thread; a panic inside a search lands that job in
+//! `failed` (error message in the job detail) while the service keeps
+//! serving; checkpoint and memory writes are atomic, fsynced and retried
+//! with jittered backoff; a torn memory-store tail left by a crash is
+//! salvaged on the next open (damaged bytes quarantined to a `.corrupt`
+//! sidecar). SIGTERM/SIGINT trigger a graceful drain — stop accepting
+//! (`/health` reports `"state":"draining"`), suspend running resumable
+//! jobs into their checkpoints, flush, exit — so an orchestrator's
+//! ordinary stop loses nothing. Chaos tests drive all of this
+//! deterministically through [`crate::util::faults`].
 
 mod http;
 mod job;

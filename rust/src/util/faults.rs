@@ -1,0 +1,426 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] arms a set of *named fault points* — well-known
+//! crash-prone seams in the codebase (see the `points` constants) — with
+//! injected failures: I/O errors, torn writes (only the first `k` bytes
+//! land before the "crash"), delays, and panics. Production code checks
+//! its fault point via [`check`]/[`write_all_at`]/[`fail_io`]; the checks
+//! are compiled in always, but when nothing is armed they cost a single
+//! relaxed atomic load, so the zero-allocation eval hot path (pinned by
+//! `tests/alloc_steady_state.rs`) is untouched.
+//!
+//! ## Plan grammar
+//!
+//! A plan is a `;`-separated list of entries:
+//!
+//! ```text
+//! plan  := entry (';' entry)*
+//! entry := 'seed=' N                    — seeds derived values (torn cut points)
+//!        | point ':' kind
+//! kind  := 'error'            ['@' N]   — injected io::Error
+//!        | 'torn' [':' K]     ['@' N]   — write first K bytes then fail
+//!        | 'delay' ':' MS     ['@' N]   — sleep MS milliseconds, then proceed
+//!        | 'panic'            ['@' N]   — panic at the fault point
+//! ```
+//!
+//! `@N` fires the arm on the N-th *hit* of its point (1-based, default 1);
+//! each arm fires exactly once. `torn` without an explicit `K` derives a
+//! cut point deterministically from the plan seed. Examples:
+//!
+//! ```text
+//! store-append:torn:25@1            tear the first store append after 25 bytes
+//! checkpoint-write:error@1          fail the first checkpoint write
+//! eval:panic@3                      panic in the third eval batch
+//! socket-read:delay:200             stall the first socket read 200 ms
+//! seed=7;store-append:torn@1        seeded pseudo-random cut point
+//! ```
+//!
+//! Plans activate process-globally via the `SPARSEMAP_FAULTS` environment
+//! variable ([`init_from_env`], called from `main`) or `--fault-plan` on
+//! the CLI, and per-run via `api::RunOpts::faults` (tests). Torn writes
+//! simulate a crash mid-`write_all`: the injected error message carries a
+//! `simulated crash` marker so recovery code that could not possibly run
+//! after a real crash (in-process truncate-back, retry loops) can decline
+//! to mask the injection — see [`simulates_crash`].
+
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::io::{self, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Named fault points. Production seams check exactly one of these.
+pub mod points {
+    /// `MemoryStore::append` record write (torn tail on disk).
+    pub const STORE_APPEND: &str = "store-append";
+    /// Any [`crate::util::fsio::atomic_write`] — service job checkpoints
+    /// and `memory compact` rewrites both funnel through it.
+    pub const CHECKPOINT_WRITE: &str = "checkpoint-write";
+    /// Service connection handler, before reading the request.
+    pub const SOCKET_READ: &str = "socket-read";
+    /// Service connection handler, before writing the response.
+    pub const SOCKET_WRITE: &str = "socket-write";
+    /// `EvalContext::eval_batch` entry (panic/delay only — the hot path
+    /// has no error return).
+    pub const EVAL: &str = "eval";
+}
+
+/// All valid point names (for parse-time validation and docs).
+pub const ALL_POINTS: [&str; 5] = [
+    points::STORE_APPEND,
+    points::CHECKPOINT_WRITE,
+    points::SOCKET_READ,
+    points::SOCKET_WRITE,
+    points::EVAL,
+];
+
+/// What an armed fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return an injected `io::Error`.
+    Error,
+    /// Write only the first `k` bytes, then fail with a simulated-crash
+    /// error (the torn prefix stays on disk, as after `kill -9`).
+    Torn(usize),
+    /// Sleep for the given milliseconds, then proceed normally.
+    Delay(u64),
+    /// Panic at the fault point.
+    Panic,
+}
+
+/// The action a caller must take when its fault point fires. Delays are
+/// handled inside [`FaultPlan::check`] (the sleep happens there) and are
+/// never surfaced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    Error,
+    Torn(usize),
+    Panic,
+}
+
+struct FaultArm {
+    point: String,
+    kind: FaultKind,
+    /// 1-based hit ordinal at which this arm fires (each arm once).
+    at: u64,
+    hits: AtomicU64,
+}
+
+/// A parsed, seeded set of fault arms. Hit counting is interior-mutable
+/// so a plan can be shared (`Arc`) across threads.
+pub struct FaultPlan {
+    seed: u64,
+    arms: Vec<FaultArm>,
+}
+
+impl FaultPlan {
+    /// Parse the plan grammar (module docs). Unknown points, malformed
+    /// kinds and zero ordinals are errors — a typo must not silently arm
+    /// nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut raw: Vec<(String, String)> = Vec::new();
+        for entry in spec.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            if let Some(v) = entry.strip_prefix("seed=") {
+                seed = v.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("fault plan: bad seed {v:?} (expected an unsigned integer)")
+                })?;
+                continue;
+            }
+            let Some((point, kind)) = entry.split_once(':') else {
+                bail!("fault plan entry {entry:?}: expected 'point:kind' (or 'seed=N')");
+            };
+            let point = point.trim();
+            if !ALL_POINTS.contains(&point) {
+                bail!(
+                    "fault plan: unknown point {point:?} (valid: {})",
+                    ALL_POINTS.join(", ")
+                );
+            }
+            raw.push((point.to_string(), kind.trim().to_string()));
+        }
+        // Derived values (torn cut points without an explicit K) come
+        // from the plan seed, so a pinned seed pins the whole plan.
+        let mut rng = Pcg64::seeded(seed ^ 0xfa17_fa17_fa17_fa17);
+        let mut arms = Vec::with_capacity(raw.len());
+        for (point, kindspec) in raw {
+            let (kindspec, at) = match kindspec.rsplit_once('@') {
+                Some((k, n)) => {
+                    let at: u64 = n.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("fault plan: bad hit ordinal {n:?} in {point}:{kindspec}")
+                    })?;
+                    if at == 0 {
+                        bail!("fault plan: hit ordinals are 1-based ({point}:{kindspec})");
+                    }
+                    (k.trim().to_string(), at)
+                }
+                None => (kindspec, 1),
+            };
+            let (name, arg) = match kindspec.split_once(':') {
+                Some((n, a)) => (n.trim(), Some(a.trim())),
+                None => (kindspec.as_str(), None),
+            };
+            let parse_arg = |what: &str| -> Result<u64> {
+                match arg {
+                    Some(a) => a.parse().map_err(|_| {
+                        anyhow::anyhow!("fault plan: bad {what} {a:?} for point {point}")
+                    }),
+                    None => bail!("fault plan: kind {name:?} at {point} requires :{what}"),
+                }
+            };
+            let kind = match name {
+                "error" => FaultKind::Error,
+                "panic" => FaultKind::Panic,
+                "delay" => FaultKind::Delay(parse_arg("millis")?),
+                "torn" => FaultKind::Torn(match arg {
+                    Some(_) => parse_arg("cut offset")? as usize,
+                    None => 1 + rng.below(255) as usize,
+                }),
+                other => bail!(
+                    "fault plan: unknown kind {other:?} (valid: error, torn, delay, panic)"
+                ),
+            };
+            arms.push(FaultArm { point, kind, at, hits: AtomicU64::new(0) });
+        }
+        Ok(FaultPlan { seed, arms })
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arms.is_empty()
+    }
+
+    /// One-line description for startup logging.
+    pub fn describe(&self) -> String {
+        let arms: Vec<String> = self
+            .arms
+            .iter()
+            .map(|a| format!("{}:{:?}@{}", a.point, a.kind, a.at))
+            .collect();
+        format!("seed={} [{}]", self.seed, arms.join(", "))
+    }
+
+    /// Register one hit of `point` against this plan. Returns the action
+    /// to take if an arm fired; delays sleep here and return `None`.
+    pub fn check(&self, point: &str) -> Option<FaultAction> {
+        let mut fired = None;
+        for arm in &self.arms {
+            if arm.point != point {
+                continue;
+            }
+            let hit = arm.hits.fetch_add(1, Ordering::Relaxed) + 1;
+            if hit != arm.at {
+                continue;
+            }
+            crate::obs::global().faults_injected.inc();
+            match arm.kind {
+                FaultKind::Delay(ms) => std::thread::sleep(Duration::from_millis(ms)),
+                FaultKind::Error => fired = Some(FaultAction::Error),
+                FaultKind::Torn(k) => fired = Some(FaultAction::Torn(k)),
+                FaultKind::Panic => fired = Some(FaultAction::Panic),
+            }
+        }
+        fired
+    }
+}
+
+// Process-global armed plan. `ARMED` is the fast-path gate: disarmed,
+// every fault-point check is this one relaxed load and nothing else.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+/// Arm `plan` process-globally (replacing any previous plan).
+pub fn arm(plan: FaultPlan) {
+    let mut slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    *slot = Some(Arc::new(plan));
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm: all fault points return to their single-load fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+    let mut slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    *slot = None;
+}
+
+/// The currently armed global plan, if any.
+pub fn armed_plan() -> Option<Arc<FaultPlan>> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    PLAN.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Arm from `SPARSEMAP_FAULTS` if set and non-empty (called once from
+/// `main`). A malformed plan is a startup error, never a silent no-op.
+pub fn init_from_env() -> Result<()> {
+    if let Ok(spec) = std::env::var("SPARSEMAP_FAULTS") {
+        if !spec.trim().is_empty() {
+            let plan = FaultPlan::parse(&spec)?;
+            eprintln!("fault plan armed from SPARSEMAP_FAULTS: {}", plan.describe());
+            arm(plan);
+        }
+    }
+    Ok(())
+}
+
+/// Register a hit of `point` against the global plan. Disarmed cost: one
+/// relaxed atomic load.
+pub fn hit(point: &str) -> Option<FaultAction> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    armed_plan().and_then(|p| p.check(point))
+}
+
+/// Register a hit against a caller-held plan if one is attached, else the
+/// global plan. This is the hot-path entry: with no local plan and
+/// nothing armed it is a `None` branch plus one relaxed load.
+pub fn check(local: Option<&Arc<FaultPlan>>, point: &str) -> Option<FaultAction> {
+    match local {
+        Some(plan) => plan.check(point),
+        None => hit(point),
+    }
+}
+
+fn injected_error(point: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::Other, format!("injected fault at point '{point}'"))
+}
+
+fn torn_error(point: &str, k: usize) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::Other,
+        format!("injected torn write at point '{point}' ({k} bytes landed; simulated crash)"),
+    )
+}
+
+/// True when `e` is an injected simulated-crash error (torn write). Such
+/// an error models the process dying mid-write: cleanup or retry code
+/// that could not run after a real crash checks this to avoid masking
+/// the injection.
+pub fn simulates_crash(e: &dyn std::fmt::Display) -> bool {
+    e.to_string().contains("simulated crash")
+}
+
+/// Fail (or panic) at a non-write fault point. `Torn` arms degrade to
+/// plain errors here since there is nothing to tear.
+pub fn fail_io(point: &str) -> io::Result<()> {
+    match hit(point) {
+        None => Ok(()),
+        Some(FaultAction::Panic) => panic!("injected panic at fault point '{point}'"),
+        Some(FaultAction::Error) | Some(FaultAction::Torn(_)) => Err(injected_error(point)),
+    }
+}
+
+/// `write_all` through the fault point `point`: a `Torn(k)` arm writes
+/// (and flushes) only the first `k` bytes before failing with a
+/// simulated-crash error, an `Error` arm writes nothing.
+pub fn write_all_at<W: Write>(point: &str, w: &mut W, bytes: &[u8]) -> io::Result<()> {
+    write_with_action(hit(point), point, w, bytes)
+}
+
+fn write_with_action<W: Write>(
+    action: Option<FaultAction>,
+    point: &str,
+    w: &mut W,
+    bytes: &[u8],
+) -> io::Result<()> {
+    match action {
+        None => w.write_all(bytes),
+        Some(FaultAction::Error) => Err(injected_error(point)),
+        Some(FaultAction::Panic) => panic!("injected panic at fault point '{point}'"),
+        Some(FaultAction::Torn(k)) => {
+            let k = k.min(bytes.len().saturating_sub(1));
+            w.write_all(&bytes[..k])?;
+            w.flush()?;
+            Err(torn_error(point, k))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=9; store-append:torn:25@2; checkpoint-write:error; eval:panic@3; \
+             socket-read:delay:5",
+        )
+        .unwrap();
+        assert_eq!(p.seed(), 9);
+        assert_eq!(p.arms.len(), 4);
+        assert_eq!(p.arms[0].kind, FaultKind::Torn(25));
+        assert_eq!(p.arms[0].at, 2);
+        assert_eq!(p.arms[1].kind, FaultKind::Error);
+        assert_eq!(p.arms[1].at, 1);
+        assert_eq!(p.arms[2].kind, FaultKind::Panic);
+        assert_eq!(p.arms[3].kind, FaultKind::Delay(5));
+        // Seeded torn cut points are deterministic.
+        let a = FaultPlan::parse("seed=7;store-append:torn").unwrap();
+        let b = FaultPlan::parse("seed=7;store-append:torn").unwrap();
+        assert_eq!(a.arms[0].kind, b.arms[0].kind);
+        assert!(matches!(a.arms[0].kind, FaultKind::Torn(k) if k >= 1));
+    }
+
+    #[test]
+    fn rejects_typos_loudly() {
+        assert!(FaultPlan::parse("store-apend:error").is_err(), "unknown point");
+        assert!(FaultPlan::parse("eval:explode").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("eval:panic@0").is_err(), "zero ordinal");
+        assert!(FaultPlan::parse("eval").is_err(), "missing kind");
+        assert!(FaultPlan::parse("socket-read:delay").is_err(), "delay needs millis");
+        assert!(FaultPlan::parse("seed=x").is_err(), "bad seed");
+        assert!(FaultPlan::parse(" ; ; ").unwrap().is_empty(), "blank entries ignored");
+    }
+
+    #[test]
+    fn arms_fire_on_their_ordinal_exactly_once() {
+        let p = FaultPlan::parse("eval:panic@3").unwrap();
+        assert_eq!(p.check(points::EVAL), None);
+        assert_eq!(p.check(points::EVAL), None);
+        assert_eq!(p.check(points::EVAL), Some(FaultAction::Panic));
+        assert_eq!(p.check(points::EVAL), None, "arms fire once");
+        assert_eq!(p.check(points::STORE_APPEND), None, "other points untouched");
+    }
+
+    // These exercise plan-local checks only: unit tests in this binary
+    // run in parallel, and arming the *global* plan here would leak
+    // injected faults into unrelated memory/service tests. Global
+    // arm/disarm semantics are covered by `tests/faults.rs`, which
+    // serializes itself.
+    #[test]
+    fn torn_write_lands_a_prefix_then_fails() {
+        let p = FaultPlan::parse("store-append:torn:3").unwrap();
+        let mut buf = Vec::new();
+        let action = p.check(points::STORE_APPEND);
+        let err =
+            write_with_action(action, points::STORE_APPEND, &mut buf, b"abcdef").unwrap_err();
+        assert_eq!(buf, b"abc");
+        assert!(simulates_crash(&err), "{err}");
+        // The arm fired; subsequent writes pass through.
+        write_with_action(p.check(points::STORE_APPEND), points::STORE_APPEND, &mut buf, b"gh")
+            .unwrap();
+        assert_eq!(buf, b"abcgh");
+    }
+
+    #[test]
+    fn torn_cut_is_clamped_below_the_payload_length() {
+        let p = FaultPlan::parse("store-append:torn:9999").unwrap();
+        let mut buf = Vec::new();
+        let err =
+            write_with_action(p.check(points::STORE_APPEND), points::STORE_APPEND, &mut buf, b"xy")
+                .unwrap_err();
+        assert_eq!(buf, b"x", "cut clamps to len-1 so the tear is real");
+        assert!(simulates_crash(&err));
+    }
+}

@@ -1,0 +1,87 @@
+//! Durable filesystem primitives: the one tmp+fsync+rename implementation.
+//!
+//! Both the service's job checkpoints and `memory compact`'s store
+//! rewrite previously hand-rolled tmp+rename — without ever syncing the
+//! file *or* the parent directory, so a power loss could leave an empty
+//! tmp, a half-written target, or a rename that never reached the
+//! journal. [`atomic_write`] is the single shared implementation: write
+//! the tmp, `sync_all` the file, rename over the target, `sync_all` the
+//! parent directory handle. It also carries the `checkpoint-write` fault
+//! point, so every durability write in the tree is chaos-testable from
+//! one seam.
+
+use crate::util::faults::{self, points};
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// fsync a directory handle so a rename inside it survives power loss.
+/// Directories cannot be opened for reading on some platforms
+/// (e.g. Windows); there this is a no-op, matching the weaker guarantees
+/// those filesystems give anyway.
+pub fn sync_dir(dir: &Path) -> io::Result<()> {
+    if dir.as_os_str().is_empty() {
+        return sync_dir(Path::new("."));
+    }
+    #[cfg(unix)]
+    {
+        File::open(dir)?.sync_all()
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+        Ok(())
+    }
+}
+
+/// Atomically and durably replace `path` with `bytes`:
+/// tmp write → file fsync → rename → parent-dir fsync. On any failure
+/// the original file is untouched (the tmp is removed best-effort).
+/// Honors the `checkpoint-write` fault point (errors and torn writes
+/// surface as `io::Error`; a torn tmp never reaches the target name).
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    let write_tmp = || -> io::Result<()> {
+        let mut f = File::create(&tmp)?;
+        faults::write_all_at(points::CHECKPOINT_WRITE, &mut f, bytes)?;
+        f.sync_all()
+    };
+    if let Err(e) = write_tmp() {
+        let _ = fs::remove_file(&tmp);
+        return Err(e);
+    }
+    fs::rename(&tmp, path)?;
+    sync_dir(path.parent().unwrap_or_else(|| Path::new(".")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("sparsemap_fsio_tests");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}_{}.bin", std::process::id()))
+    }
+
+    // Fault-injected atomic_write behavior (failed/torn tmp never reaches
+    // the target) is covered by `tests/faults.rs`, which owns the
+    // process-global fault plan; unit tests here must not arm it because
+    // sibling tests run in parallel against the same seam.
+    #[test]
+    fn replaces_contents_atomically() {
+        let path = tmp_path("replace");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer contents").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second, longer contents");
+        assert!(!path.with_extension("tmp").exists(), "tmp cleaned up");
+        let _ = fs::remove_file(&path);
+    }
+}

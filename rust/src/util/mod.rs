@@ -4,14 +4,24 @@
 //! provides `xla` + `anyhow`, so the conveniences a project would normally
 //! pull from crates.io are implemented here: a PCG64 RNG ([`rng`]), a JSON
 //! codec ([`json`]), a CLI parser ([`cli`]), a thread pool ([`threadpool`]),
-//! descriptive statistics ([`stats`]), power-iteration PCA ([`pca`]) and
-//! ASCII/CSV table rendering ([`table`]).
+//! descriptive statistics ([`stats`]), power-iteration PCA ([`pca`]),
+//! ASCII/CSV table rendering ([`table`]), plus the fault-tolerance
+//! substrate: deterministic fault injection ([`faults`]), durable
+//! atomic file replacement ([`fsio`]), bounded jittered retry
+//! ([`retry`]) and poison-recovering locks ([`sync`]).
 
 pub mod cli;
+pub mod faults;
+pub mod fsio;
 pub mod hash;
 pub mod json;
 pub mod pca;
+pub mod retry;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod threadpool;
+
+pub use fsio::{atomic_write, sync_dir};
+pub use sync::relock;

@@ -1,0 +1,154 @@
+//! Jittered-exponential-backoff retry for transient I/O.
+//!
+//! The service's durability writes (job checkpoints, memory deposits)
+//! must survive transient filesystem hiccups — a momentarily-full disk,
+//! an NFS blip, an injected `checkpoint-write:error` fault — without
+//! wedging a worker or dropping the write. [`retry`] re-runs the
+//! operation a bounded number of times with exponentially growing,
+//! deterministically jittered sleeps in between. Jitter comes from a
+//! seeded [`Pcg64`] keyed on the operation label, so test runs are
+//! reproducible wall-clock included.
+//!
+//! A *simulated-crash* error (an injected torn write — see
+//! [`crate::util::faults::simulates_crash`]) is never retried: it models
+//! the process dying mid-write, and a dead process does not retry.
+
+use crate::util::faults;
+use crate::util::rng::Pcg64;
+use std::time::Duration;
+
+/// FNV-1a over the label so each call site gets its own jitter stream.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Retry policy: attempt count and backoff shape.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    /// Total attempts (first try included). 1 means no retries.
+    pub attempts: u32,
+    /// Sleep before the first retry; doubles each subsequent retry.
+    pub base: Duration,
+    /// Upper bound on any single sleep.
+    pub cap: Duration,
+    /// Jitter seed (mixed with the operation label).
+    pub seed: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Backoff {
+        Backoff {
+            attempts: 4,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(250),
+            seed: 0x5eed_ba0f,
+        }
+    }
+}
+
+impl Backoff {
+    /// The sleep before retry number `retry` (0-based): `base * 2^retry`
+    /// capped at `cap`, scaled by a deterministic jitter in [0.5, 1.5).
+    fn sleep_for(&self, rng: &mut Pcg64, retry: u32) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << retry.min(16)).min(self.cap);
+        exp.mul_f64(0.5 + rng.f64())
+    }
+}
+
+/// Run `op` up to `b.attempts` times, sleeping between failures. Returns
+/// the first success or the last error. Each retry attempt bumps the
+/// `io_retries` obs counter and logs a one-line warning. Simulated-crash
+/// errors short-circuit (see module docs).
+pub fn retry<T, E: std::fmt::Display>(
+    label: &str,
+    b: &Backoff,
+    mut op: impl FnMut() -> Result<T, E>,
+) -> Result<T, E> {
+    let mut rng = Pcg64::seeded(b.seed ^ fnv1a64(label.as_bytes()));
+    let mut attempt = 0u32;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                attempt += 1;
+                if attempt >= b.attempts.max(1) || faults::simulates_crash(&e) {
+                    return Err(e);
+                }
+                crate::obs::global().io_retries.inc();
+                let sleep = b.sleep_for(&mut rng, attempt - 1);
+                eprintln!(
+                    "warning: {label} failed (attempt {attempt}/{}): {e}; retrying in {:?}",
+                    b.attempts, sleep
+                );
+                std::thread::sleep(sleep);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Backoff {
+        Backoff {
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(2),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn succeeds_after_transient_failures() {
+        let mut calls = 0;
+        let out: Result<u32, String> = retry("t", &fast(), || {
+            calls += 1;
+            if calls < 3 {
+                Err("transient".to_string())
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(out.unwrap(), 42);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn gives_up_after_the_attempt_budget() {
+        let mut calls = 0;
+        let out: Result<(), String> = retry("t", &fast(), || {
+            calls += 1;
+            Err("still broken".to_string())
+        });
+        assert_eq!(out.unwrap_err(), "still broken");
+        assert_eq!(calls, 4, "default budget is 4 attempts");
+    }
+
+    #[test]
+    fn simulated_crash_is_not_retried() {
+        let mut calls = 0;
+        let out: Result<(), String> = retry("t", &fast(), || {
+            calls += 1;
+            Err("injected torn write (simulated crash)".to_string())
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1, "a dead process does not retry");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_label() {
+        let b = Backoff::default();
+        let mut r1 = Pcg64::seeded(b.seed ^ fnv1a64(b"x"));
+        let mut r2 = Pcg64::seeded(b.seed ^ fnv1a64(b"x"));
+        for i in 0..4 {
+            assert_eq!(b.sleep_for(&mut r1, i), b.sleep_for(&mut r2, i));
+        }
+        let capped = b.sleep_for(&mut r1, 30);
+        assert!(capped <= b.cap.mul_f64(1.5), "cap bounds the exponent: {capped:?}");
+    }
+}

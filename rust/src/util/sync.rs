@@ -1,0 +1,55 @@
+//! Poison-recovering lock acquisition.
+//!
+//! A mutex poisons when a holder panics. In a long-running service a
+//! single panicked worker (e.g. an injected eval panic, or a cost-model
+//! bug on one pathological request) must not cascade `PoisonError` into
+//! every subsequent request until restart. All state guarded by the
+//! service's locks is kept *transition-consistent*: writers complete a
+//! state transition before calling anything panic-prone, so the data
+//! behind a poisoned lock is still valid and [`relock`] simply takes the
+//! guard back.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait` with the same poison recovery as [`relock`].
+pub fn rewait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait_timeout` with the same poison recovery as [`relock`].
+/// The timed-out flag is dropped — callers re-check their predicate and
+/// deadline anyway.
+pub fn rewait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> MutexGuard<'a, T> {
+    cv.wait_timeout(guard, dur).map(|(g, _)| g).unwrap_or_else(|e| e.into_inner().0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn relock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*relock(&m), 7, "state survives the panic");
+        *relock(&m) = 8;
+        assert_eq!(*relock(&m), 8);
+    }
+}

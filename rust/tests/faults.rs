@@ -1,0 +1,350 @@
+//! Chaos acceptance suite: deterministic fault injection end to end.
+//!
+//! This is the **only** place the process-global fault plan is armed
+//! (`sparsemap::util::faults::arm`); library unit tests use plan-local
+//! checks so they can run in parallel. Tests here serialize through one
+//! mutex and disarm on every exit path, so each scenario owns the global
+//! seams (store-append, checkpoint-write, eval, socket-*) for its whole
+//! lifetime.
+
+use sparsemap::api::SearchRequest;
+use sparsemap::memory::MemoryStore;
+use sparsemap::service::{start, ServerConfig};
+use sparsemap::util::faults::{self, FaultPlan};
+use sparsemap::util::json::Json;
+use sparsemap::util::retry::{retry, Backoff};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Serializes every test in this binary: the fault plan is process
+/// state. `unwrap_or_else` keeps later tests running (unpoisoned) even
+/// if an earlier one panicked while holding the guard.
+static GLOBAL_PLAN: Mutex<()> = Mutex::new(());
+
+fn lock_plan() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_PLAN.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarms the global plan when a test exits, panic included.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparsemap_faults_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One raw HTTP exchange; returns (status, body).
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let msg = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(msg.as_bytes()).unwrap();
+    let mut text = String::new();
+    stream.read_to_string(&mut text).unwrap();
+    let status: u16 = text.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = match text.find("\r\n\r\n") {
+        Some(i) => text[i + 4..].to_string(),
+        None => String::new(),
+    };
+    (status, body)
+}
+
+fn submit_body(method: &str, budget: usize) -> String {
+    SearchRequest::new()
+        .workload_named("mm1")
+        .platform_named("mobile")
+        .method(method)
+        .budget(budget)
+        .seed(7)
+        .to_json()
+        .dumps()
+}
+
+fn poll_terminal(addr: SocketAddr, id: &str, tries: usize) -> Json {
+    for _ in 0..tries {
+        let (s, b) = request(addr, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(s, 200, "{b}");
+        let j = Json::parse(&b).unwrap();
+        let state = j.get("state").and_then(Json::as_str).unwrap();
+        if matches!(state, "done" | "failed" | "cancelled" | "suspended") {
+            return j;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("job {id} never reached a terminal state");
+}
+
+/// A torn store append (crash mid-write) leaves a damaged tail; the next
+/// open salvages the intact prefix, quarantines the tail to a `.corrupt`
+/// sidecar, and the store keeps working.
+#[test]
+fn torn_store_append_salvages_on_reopen() {
+    let _g = lock_plan();
+    let _d = Disarm;
+    let dir = tmp_dir("torn_append");
+    let store_path = dir.join("memory.bin");
+
+    // A finished search supplies a real elite to deposit.
+    let report = SearchRequest::new()
+        .workload_named("mm1")
+        .platform_named("mobile")
+        .method("random")
+        .budget(60)
+        .seed(7)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(report.outcome.best_edp.is_finite());
+    let session = report.request.clone().build().unwrap();
+
+    // Arm AFTER the search: only the store append sees the fault.
+    faults::arm(FaultPlan::parse("seed=3;store-append:torn:40@1").unwrap());
+    let mut store = MemoryStore::open(&store_path).unwrap();
+    let err = store
+        .remember(
+            session.workload(),
+            session.platform(),
+            &report.outcome.method,
+            &report.outcome,
+            report.request.seed,
+        )
+        .unwrap_err();
+    assert!(
+        faults::simulates_crash(&err),
+        "torn append surfaces as a simulated crash: {err}"
+    );
+    drop(store);
+    faults::disarm();
+
+    // The file on disk has a torn tail (header + 40 partial bytes).
+    let torn_len = std::fs::metadata(&store_path).unwrap().len();
+    assert!(torn_len > 16, "the torn prefix landed on disk: {torn_len}");
+
+    // Reopen: salvage. No intact record existed, so the store is empty;
+    // the damaged bytes are quarantined verbatim, not silently deleted.
+    let mut store = MemoryStore::open(&store_path).unwrap();
+    assert_eq!(store.len(), 0, "no whole record survived the tear");
+    let sidecar = PathBuf::from(format!("{}.corrupt", store_path.display()));
+    assert_eq!(
+        std::fs::metadata(&sidecar).unwrap().len(),
+        torn_len - 16,
+        "quarantined tail is exactly the damaged bytes"
+    );
+
+    // The salvaged store accepts new appends and round-trips them.
+    let recorded = store
+        .remember(
+            session.workload(),
+            session.platform(),
+            &report.outcome.method,
+            &report.outcome,
+            report.request.seed,
+        )
+        .unwrap();
+    assert!(recorded);
+    drop(store);
+    let reopened = MemoryStore::open(&store_path).unwrap();
+    assert_eq!(reopened.len(), 1, "post-salvage appends survive reopen");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A transient checkpoint-write failure is retried with backoff and the
+/// write lands; a *torn* write (simulated crash) is not retried and
+/// never corrupts the destination file.
+#[test]
+fn checkpoint_write_faults_retry_or_fail_atomically() {
+    let _g = lock_plan();
+    let _d = Disarm;
+    let dir = tmp_dir("ckpt_write");
+    let path = dir.join("job-000001.json");
+    std::fs::write(&path, b"previous checkpoint").unwrap();
+    let fast = Backoff {
+        base: Duration::from_millis(1),
+        cap: Duration::from_millis(2),
+        ..Default::default()
+    };
+
+    // Transient error on the first attempt: the retry wrapper re-runs
+    // the atomic write and the new contents land.
+    faults::arm(FaultPlan::parse("checkpoint-write:error@1").unwrap());
+    retry("persist checkpoint", &fast, || {
+        sparsemap::util::atomic_write(&path, b"new checkpoint")
+    })
+    .unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), b"new checkpoint");
+    faults::disarm();
+
+    // Torn write: atomic_write fails, the destination keeps its previous
+    // contents bit-for-bit, the torn tmp is gone, and retry declines to
+    // mask a simulated crash (attempted exactly once).
+    faults::arm(FaultPlan::parse("checkpoint-write:torn:5@1").unwrap());
+    let mut attempts = 0;
+    let err = retry("persist checkpoint", &fast, || {
+        attempts += 1;
+        sparsemap::util::atomic_write(&path, b"corrupting write")
+    })
+    .unwrap_err();
+    assert!(faults::simulates_crash(&err), "{err}");
+    assert_eq!(attempts, 1, "a dead process does not retry");
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        b"new checkpoint",
+        "destination untouched by the torn write"
+    );
+    assert!(!path.with_extension("tmp").exists(), "torn tmp removed");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An injected panic inside eval lands the job in `failed` with the
+/// panic message in the detail — and the service keeps serving: health
+/// stays green and the next job runs to done.
+#[test]
+fn eval_panic_fails_the_job_but_not_the_service() {
+    let _g = lock_plan();
+    let _d = Disarm;
+    let handle = start(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr;
+
+    faults::arm(FaultPlan::parse("eval:panic@1").unwrap());
+    let (s, b) = request(addr, "POST", "/jobs", &submit_body("random", 50));
+    assert_eq!(s, 202, "{b}");
+    let id = Json::parse(&b).unwrap().get("id").and_then(Json::as_str).unwrap().to_string();
+    let detail = poll_terminal(addr, &id, 500);
+    assert_eq!(detail.get("state").and_then(Json::as_str), Some("failed"), "{}", detail.pretty());
+    let error = detail.get("error").and_then(Json::as_str).unwrap_or_default();
+    assert!(error.contains("injected panic"), "panic message surfaces in the detail: {error}");
+    faults::disarm();
+
+    // The worker survived the panic: health is green and a second job
+    // runs to completion on the same pool.
+    let (s, b) = request(addr, "GET", "/health", "");
+    assert_eq!(s, 200);
+    assert!(b.contains("\"ok\": true") || b.contains("\"ok\":true"), "{b}");
+    let (s, b) = request(addr, "POST", "/jobs", &submit_body("random", 50));
+    assert_eq!(s, 202, "{b}");
+    let id2 = Json::parse(&b).unwrap().get("id").and_then(Json::as_str).unwrap().to_string();
+    let detail = poll_terminal(addr, &id2, 500);
+    assert_eq!(detail.get("state").and_then(Json::as_str), Some("done"), "{}", detail.pretty());
+
+    // Observability saw both the injection and the caught panic.
+    let (_, metrics) = request(addr, "GET", "/metrics", "");
+    let counter = |name: &str| -> f64 {
+        metrics
+            .lines()
+            .find_map(|l| l.strip_prefix(name).and_then(|v| v.trim().parse().ok()))
+            .unwrap_or(0.0)
+    };
+    assert!(counter("sparsemap_panics_caught_total ") >= 1.0, "{metrics}");
+    assert!(counter("sparsemap_faults_injected_total ") >= 1.0, "{metrics}");
+}
+
+/// A client that stalls mid-request trips the read timeout, its slot is
+/// reclaimed, and the service answers the next request normally.
+#[test]
+fn slow_client_times_out_without_wedging_the_service() {
+    let _g = lock_plan();
+    let _d = Disarm;
+    let handle = start(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        read_timeout: Duration::from_millis(150),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr;
+    // Half a request line, then silence: the server must cut us loose.
+    let mut stall = TcpStream::connect(addr).unwrap();
+    stall.write_all(b"GET /hea").unwrap();
+    let mut text = String::new();
+    let _ = stall.read_to_string(&mut text); // server closes (maybe after a 400)
+    for _ in 0..200 {
+        if handle.live_connections() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(handle.live_connections(), 0, "timed-out client's slot reclaimed");
+    let (s, _) = request(addr, "GET", "/health", "");
+    assert_eq!(s, 200);
+}
+
+/// Kill -9 stand-in for the service checkpoint path: a suspended job's
+/// checkpoint written through `atomic_write` + `drain` survives process
+/// death by construction (fsync before rename); here we pin that a
+/// drained service's checkpoint resumes to the full budget in a brand
+/// new service instance — nothing about resume depends on the memory of
+/// the process that wrote it.
+#[test]
+fn drained_checkpoint_resumes_in_a_fresh_service() {
+    let _g = lock_plan();
+    let _d = Disarm;
+    let dir = tmp_dir("drain_resume");
+    let handle = start(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr;
+    let budget = 12_000;
+    let (s, b) = request(addr, "POST", "/jobs", &submit_body("sparsemap", budget));
+    assert_eq!(s, 202, "{b}");
+    let id = Json::parse(&b).unwrap().get("id").and_then(Json::as_str).unwrap().to_string();
+    for _ in 0..500 {
+        let (_, b) = request(addr, "GET", &format!("/jobs/{id}"), "");
+        if Json::parse(&b).unwrap().get("state").and_then(Json::as_str) == Some("running") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Graceful drain = what SIGTERM does: the running job suspends into
+    // a durable checkpoint. (The old process would now exit; we just
+    // abandon its handle, which is exactly as good — nothing below
+    // touches it.)
+    handle.drain();
+    let file = dir.join(format!("{id}.json"));
+    for _ in 0..200 {
+        if file.exists() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(file.exists(), "drain persisted the suspension");
+
+    // A brand new service instance over the same directory restores the
+    // job and finishes the full budget from the checkpoint.
+    let fresh = start(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    })
+    .unwrap();
+    let (s, _) = request(fresh.addr, "POST", &format!("/jobs/{id}/resume"), "");
+    assert_eq!(s, 202);
+    let detail = poll_terminal(fresh.addr, &id, 3000);
+    assert_eq!(detail.get("state").and_then(Json::as_str), Some("done"), "{}", detail.pretty());
+    let evals = detail
+        .get("report")
+        .and_then(|r| r.get("outcome"))
+        .and_then(|o| o.get("evals"))
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert_eq!(evals, budget as u64, "resume completes the full budget");
+    let _ = std::fs::remove_dir_all(&dir);
+}

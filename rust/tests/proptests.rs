@@ -4,7 +4,9 @@
 use sparsemap::arch::{Boundary, Platform};
 use sparsemap::genome::{decode, ops, tensor_ranks, GenomeSpec};
 use sparsemap::mapping::{loopnest, permutation, MapLevel};
-use sparsemap::memory::{decode_file, dist2, header_bytes, AnnIndex, MemRecord, EMBED_DIM};
+use sparsemap::memory::{
+    decode_file, dist2, header_bytes, salvage_file, AnnIndex, MemRecord, EMBED_DIM,
+};
 use sparsemap::model::{evaluate_features, extract, platform_vector, NativeEvaluator};
 use sparsemap::sparse::{stack_storage, stack_storage_model, RankFormat};
 use sparsemap::sparsity::DensityModel;
@@ -431,6 +433,41 @@ fn prop_memory_store_rejects_truncation_and_corruption() {
             if let Ok(back) = decode_file(&evil) {
                 assert_eq!(back, recs, "flip of bit {bit:#x} at byte {i} changed the data");
             }
+        }
+    }
+}
+
+/// Invariant: salvage never yields a partial record. For *every* cut
+/// point of a multi-record file, `salvage_file` recovers exactly the
+/// wholly-contained records, reports `valid_len` at the last record
+/// boundary at or before the cut, and flags damage iff the cut is not a
+/// boundary — so crash recovery can only lose the record being written,
+/// never corrupt an earlier one.
+#[test]
+fn prop_salvage_recovers_exactly_the_whole_record_prefix() {
+    let mut rng = Pcg64::seeded(204);
+    for _ in 0..4 {
+        let recs: Vec<MemRecord> = (0..5).map(|_| random_mem_record(&mut rng)).collect();
+        let mut file = header_bytes().to_vec();
+        let mut boundaries = vec![file.len()];
+        for r in &recs {
+            file.extend_from_slice(&r.encode());
+            boundaries.push(file.len());
+        }
+        // Any cut inside the header is unrecoverable by design.
+        for cut in 0..boundaries[0] {
+            assert!(salvage_file(&file[..cut]).is_err(), "header cut {cut} salvaged");
+        }
+        for cut in boundaries[0]..=file.len() {
+            let s = salvage_file(&file[..cut]).unwrap();
+            let n_whole = boundaries.iter().filter(|&&b| b <= cut).count() - 1;
+            assert_eq!(s.records, recs[..n_whole], "cut at {cut}");
+            assert_eq!(s.valid_len, boundaries[n_whole], "cut at {cut}");
+            assert_eq!(
+                s.damage.is_some(),
+                !boundaries.contains(&cut),
+                "cut at {cut}: damage flag must mark exactly the non-boundary cuts"
+            );
         }
     }
 }
