@@ -141,12 +141,16 @@ fn main() {
     });
     // Staged-engine effectiveness: a 10k-offspring population over 100
     // parents where only the S/G genes mutate — the common ES shape. The
-    // `staged_*` arm reuses memoized mapping/format stages; the
-    // `scratch_*` arm is the same population through the from-scratch
-    // decode→extract loop (`with_staging(false)`, cache off for both so
-    // every genome is recomputed). The ratio of the two is the engine's
-    // headline speedup (the `#[ignore]`d test in engine_parity.rs
-    // asserts >= 2x on the 100-genome version).
+    // `staged_*` arm reuses memoized mapping/format stages through the
+    // batched SoA assembly (the engine default); `pergenome_*` is the
+    // same staged engine forced onto the per-genome assembly walk
+    // (`with_batched(false)`), isolating what the SoA re-layout buys;
+    // the `scratch_*` arm is the same population through the
+    // from-scratch decode→extract loop (`with_staging(false)`, cache off
+    // for all three so every genome is recomputed). staged/scratch is
+    // the engine's headline speedup (the `#[ignore]`d test in
+    // engine_parity.rs asserts >= 2x on the 100-genome version);
+    // staged/pergenome is the batching speedup on top.
     let offspring_pop: std::rc::Rc<Vec<Vec<u32>>> = {
         let w = table3::by_id("mm3").unwrap();
         let spec = sparsemap::genome::GenomeSpec::for_workload(&w);
@@ -164,9 +168,10 @@ fn main() {
                 .collect(),
         )
     };
-    for (name, staging) in [
-        ("staged_offspring_eval_10k_mm3", true),
-        ("scratch_offspring_eval_10k_mm3", false),
+    for (name, staging, batched) in [
+        ("staged_offspring_eval_10k_mm3", true, true),
+        ("pergenome_offspring_eval_10k_mm3", true, false),
+        ("scratch_offspring_eval_10k_mm3", false, true),
     ] {
         let genomes = offspring_pop.clone();
         benches.push(Bench {
@@ -179,7 +184,8 @@ fn main() {
                     20_000,
                 )
                 .with_cache(false)
-                .with_staging(staging);
+                .with_staging(staging)
+                .with_batched(batched);
                 std::hint::black_box(ctx.eval_batch(&genomes));
             }),
         });

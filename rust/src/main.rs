@@ -263,10 +263,11 @@ fn run_and_report(req: SearchRequest, args: &Args) -> anyhow::Result<()> {
         // The portfolio meta-method carries a per-member breakdown.
         for m in report.members() {
             println!(
-                "  member {:12} {:6} evals over {} round(s), own best {}{}",
+                "  member {:12} {:6} evals over {} {}, own best {}{}",
                 m.method,
                 m.evals,
                 m.rounds,
+                if m.pulls > 0 { "pull(s)" } else { "round(s)" },
                 if m.best_edp.is_finite() { format!("{:.4e}", m.best_edp) } else { "-".into() },
                 match m.eliminated_round {
                     Some(r) => format!("  (eliminated after round {r})"),
@@ -383,6 +384,7 @@ fn cmd_methods(args: &Args) {
                 let range = match t.kind {
                     TunableKind::Int { min, max } => format!("int in [{min}, {max}]"),
                     TunableKind::Float { min, max } => format!("float in [{min}, {max}]"),
+                    TunableKind::Choice { options } => format!("one of {options:?}"),
                     TunableKind::MethodList => "array of method names".to_string(),
                     TunableKind::OptsByMethod => "object: method -> its opts".to_string(),
                 };

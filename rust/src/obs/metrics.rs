@@ -295,6 +295,14 @@ pub struct Metrics {
     /// (one sample per [`StageEngine::eval_batch`](crate::search::StageEngine)
     /// call, indexed by `STAGE_*`).
     pub stage_ns: [Histogram; STAGE_NAMES.len()],
+    /// Submissions per [`StageEngine::eval_batch`](crate::search::StageEngine)
+    /// call (one sample per batch — the brood size the batched SoA path
+    /// amortizes over).
+    pub brood_size: Histogram,
+    /// Wall time of the batched SoA cost-model sweep (phase 4's
+    /// contiguous-slice evaluation), nanoseconds; one sample per batch
+    /// that staged at least one genome in batched mode.
+    pub soa_slice_ns: Histogram,
     /// Budget submissions evaluated.
     pub evals: Counter,
     /// Submissions that produced a valid design.
@@ -350,6 +358,8 @@ impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
             stage_ns: std::array::from_fn(|_| Histogram::new()),
+            brood_size: Histogram::new(),
+            soa_slice_ns: Histogram::new(),
             evals: Counter::new(),
             valid_evals: Counter::new(),
             eval_cache_hits: Counter::new(),
@@ -433,6 +443,20 @@ impl Metrics {
             "stage",
             &STAGE_NAMES,
             &self.stage_ns,
+        );
+        hist_single(
+            &mut out,
+            "sparsemap_brood_size",
+            "Submissions per staged-engine batch (brood size).",
+            1.0,
+            &self.brood_size,
+        );
+        hist_single(
+            &mut out,
+            "sparsemap_soa_slice_seconds",
+            "Batched SoA cost-model sweep wall time per batch.",
+            1e-9,
+            &self.soa_slice_ns,
         );
 
         counter_line(
@@ -577,6 +601,32 @@ fn gauge_line(out: &mut String, name: &str, help: &str, v: f64) {
     ));
 }
 
+/// One unlabeled `# TYPE … histogram` family. `scale` converts raw
+/// sample units for export (`1e-9` for nanosecond series rendered in
+/// seconds, `1.0` for dimensionless counts like brood size).
+fn hist_single(out: &mut String, name: &str, help: &str, scale: f64, h: &Histogram) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let s = h.snapshot();
+    let mut cum = 0u64;
+    for (i, &n) in s.buckets.iter().enumerate() {
+        cum += n;
+        if n == 0 && i < HIST_BUCKETS - 1 {
+            continue;
+        }
+        let le = if i >= HIST_BUCKETS - 1 {
+            "+Inf".to_string()
+        } else {
+            fmt_value(bucket_bound(i) as f64 * scale)
+        };
+        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!(
+        "{name}_sum {}\n{name}_count {}\n",
+        fmt_value(s.sum as f64 * scale),
+        s.count
+    ));
+}
+
 /// One `# TYPE … histogram` family with a label per member histogram.
 /// Sample units are nanoseconds; bounds and sums are exported in seconds.
 fn hist_family(
@@ -699,6 +749,8 @@ mod tests {
         m.evals.add(10);
         m.valid_evals.add(8);
         m.stage_ns[STAGE_MAPPING].record(1_000);
+        m.brood_size.record(48);
+        m.soa_slice_ns.record(2_000);
         m.http_ns[1].record(50_000);
         m.job_events[JOB_SUBMITTED].inc();
         m.tenant_evals.add("ci", 10);
@@ -709,6 +761,11 @@ mod tests {
             "sparsemap_valid_evals_total 8",
             "sparsemap_stage_seconds_bucket{stage=\"mapping\",le=\"0.000001024\"} 1",
             "sparsemap_stage_seconds_count{stage=\"mapping\"} 1",
+            "sparsemap_brood_size_bucket{le=\"64\"} 1",
+            "sparsemap_brood_size_sum 48",
+            "sparsemap_brood_size_count 1",
+            "sparsemap_soa_slice_seconds_bucket{le=\"0.000002048\"} 1",
+            "sparsemap_soa_slice_seconds_count 1",
             "sparsemap_http_request_seconds_count{route=\"metrics\"} 1",
             "sparsemap_jobs_total{event=\"submitted\"} 1",
             "sparsemap_tenant_evals_total{tenant=\"ci\"} 10",

@@ -101,13 +101,18 @@ impl TraceWriter {
     }
 
     /// Snapshot the per-stage latency histograms of this run's metrics
-    /// scope (sample units are nanoseconds; serialized in seconds).
+    /// scope (sample units are nanoseconds; serialized in seconds),
+    /// plus the batched-pipeline histograms: `brood_size` (dimensionless
+    /// submissions per batch) and `soa_slice` (SoA cost-model sweep wall
+    /// time, seconds). One `stages` record carries all of them.
     pub fn stages(&mut self, m: &Metrics) -> std::io::Result<()> {
-        let stages: Vec<(&str, Json)> = STAGE_NAMES
+        let mut stages: Vec<(&str, Json)> = STAGE_NAMES
             .iter()
             .zip(&m.stage_ns)
             .map(|(name, h)| (*name, h.snapshot().to_json(1e-9)))
             .collect();
+        stages.push(("brood_size", m.brood_size.snapshot().to_json(1.0)));
+        stages.push(("soa_slice", m.soa_slice_ns.snapshot().to_json(1e-9)));
         self.event("stages", vec![("stages", Json::obj(stages))])
     }
 
@@ -247,6 +252,34 @@ pub fn summarize(text: &str) -> Result<String, String> {
             out.push_str("\nstage latency (per batch):\n");
             out.push_str(&t.render());
         }
+        // Batched-pipeline extras ride in the same stages record.
+        if let Some(stages) = s.get("stages").and_then(Json::as_obj) {
+            if let Some(b) = stages.get("brood_size") {
+                let g = |k: &str| b.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                if g("count") > 0.0 {
+                    out.push_str(&format!(
+                        "brood size: mean {:.1} p50 {} p95 {} max {} ({} batches)\n",
+                        g("mean"),
+                        g("p50") as u64,
+                        g("p95") as u64,
+                        g("max") as u64,
+                        g("count") as u64
+                    ));
+                }
+            }
+            if let Some(h) = stages.get("soa_slice") {
+                let g = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                if g("count") > 0.0 {
+                    out.push_str(&format!(
+                        "soa slice: mean {}s p95 {}s total {}s ({} batches)\n",
+                        sci(g("mean")),
+                        sci(g("p95")),
+                        sci(g("sum")),
+                        g("count") as u64
+                    ));
+                }
+            }
+        }
     }
 
     let gens: Vec<&Json> = records.iter().filter(|r| ev(r) == "generation").collect();
@@ -333,6 +366,8 @@ mod tests {
         let path = tmp_path("roundtrip");
         let m = Metrics::new();
         m.stage_ns[STAGE_MAPPING].record(10_000);
+        m.brood_size.record(48);
+        m.soa_slice_ns.record(2_000);
         {
             let mut w = TraceWriter::create(&path).unwrap();
             w.start("mm1", "mobile", "es-std", 100, 7).unwrap();
@@ -355,6 +390,8 @@ mod tests {
         let summary = summarize(&text).unwrap();
         assert!(summary.contains("mm1@mobile"), "{summary}");
         assert!(summary.contains("mapping"), "{summary}");
+        assert!(summary.contains("brood size: mean 48.0"), "{summary}");
+        assert!(summary.contains("soa slice: mean"), "{summary}");
         assert!(summary.contains("convergence (2 generations)"), "{summary}");
         assert!(summary.contains("markers: checkpoint"), "{summary}");
         assert!(summary.contains("finished: best_edp="), "{summary}");

@@ -94,6 +94,9 @@ pub enum TunableKind {
     Int { min: u64, max: u64 },
     /// Finite float in `[min, max]`.
     Float { min: f64, max: f64 },
+    /// One string out of a fixed option set (e.g. the portfolio's
+    /// budget-allocation policy).
+    Choice { options: &'static [&'static str] },
     /// Non-empty array of registry method names (the portfolio's
     /// `members`); entries may be aliases, and may not name the owning
     /// method itself (no nested portfolios).
@@ -169,6 +172,16 @@ impl MethodSpec {
                     ensure!(
                         v.is_finite() && v >= min && v <= max,
                         "tunable '{key}' of '{}' must be in [{min}, {max}], got {v}",
+                        self.name
+                    );
+                }
+                TunableKind::Choice { options } => {
+                    let v = val.as_str().ok_or_else(|| {
+                        anyhow!("tunable '{key}' of '{}' must be a string", self.name)
+                    })?;
+                    ensure!(
+                        options.contains(&v),
+                        "tunable '{key}' of '{}' must be one of {options:?}, got '{v}'",
                         self.name
                     );
                 }
@@ -252,6 +265,9 @@ impl MethodSpec {
                                 ),
                                 TunableKind::Float { min, max } => {
                                     ("float", Some(Json::arr_f64(&[min, max])))
+                                }
+                                TunableKind::Choice { options } => {
+                                    ("choice", Some(Json::arr_str(options)))
                                 }
                                 TunableKind::MethodList => ("method_list", None),
                                 TunableKind::OptsByMethod => ("opts_by_method", None),
@@ -440,6 +456,16 @@ mod tests {
                 }
                 if let TunableKind::Float { min, max } = t.kind {
                     assert!(min <= max, "{}/{} empty range", m.name, t.key);
+                }
+                if let TunableKind::Choice { options } = t.kind {
+                    assert!(!options.is_empty(), "{}/{} empty option set", m.name, t.key);
+                    assert!(
+                        options.contains(&t.default),
+                        "{}/{} default '{}' not in {options:?}",
+                        m.name,
+                        t.key,
+                        t.default
+                    );
                 }
             }
         }

@@ -1,41 +1,54 @@
-//! The `portfolio` meta-optimizer: round-based successive-halving racing
-//! of member methods over one **shared** budget, evaluation cache and
-//! worker pool — the first method only expressible because every search
-//! arm now runs behind the [`Optimizer`] trait against a borrowed
-//! [`EvalContext`].
+//! The `portfolio` meta-optimizer: a bandit race of member methods over
+//! one **shared** budget, evaluation cache and worker pool — the first
+//! method only expressible because every search arm now runs behind the
+//! [`Optimizer`] trait against a borrowed [`EvalContext`].
 //!
 //! ## How the race works
 //!
-//! The portfolio never evaluates a genome itself. Each round it divides
-//! an equal share of the remaining shared budget among the surviving
-//! members and runs each member *to that fence*
-//! ([`EvalContext::set_fence`]): the member sees an ordinary
+//! The portfolio never evaluates a genome itself. It repeatedly grants
+//! one member a slice of the remaining shared budget and runs it *to
+//! that fence* ([`EvalContext::set_fence`]): the member sees an ordinary
 //! budget-exhausted context and winds down through its normal exit path.
-//! After every round but the last, the worst `1 - 1/eta` of survivors
-//! (by their own per-slice best EDP) are eliminated. Rounding leftovers
-//! go to the best survivor at the end.
+//! Two allocation policies pick who runs next (`alloc` tunable):
+//!
+//! * **`ucb` (default)** — UCB1 bandit pulls. The budget is split across
+//!   `pulls` slices; each pull goes to the member maximizing
+//!   `mean_reward + ucb_c * sqrt(ln(total_pulls) / member_pulls)`
+//!   (unpulled members first, in list order; ties break to the first
+//!   index). A pull's reward is 1.0 if its slice improved the *global*
+//!   best EDP, 0.5 if it improved only the member's own best, else 0.0.
+//!   Nobody is eliminated: a member that stops paying simply stops
+//!   getting pulls, which is the right behaviour now that members
+//!   pause/continue for free.
+//! * **`halving`** — the original fixed successive-halving schedule:
+//!   `rounds` rounds of equal shares, the worst `1 - 1/eta` of survivors
+//!   eliminated after every round but the last, rounding leftovers to
+//!   the best survivor.
 //!
 //! Each member is built **once**, at its first slice, and the same
 //! optimizer instance runs every later slice. Since the [`Optimizer`]
 //! overhaul made the search arms suspendable state machines, a member
 //! whose slice fence runs out simply pauses at its next safe point and
-//! *continues* from there when the next round grants it a larger share —
-//! no budget is re-spent replaying the previous rounds' prefix, and the
-//! ES family keeps one coherent population/annealing schedule across
-//! rounds instead of restarting. (Methods without live state, e.g. mcts
-//! or the RL arms, still effectively restart; their replayed prefix is
-//! served by the shared evaluation cache but does debit the budget,
-//! since the paper counts submissions.) The shared telemetry accumulates
-//! in the one context, so the portfolio's [`Outcome`] carries the global
-//! best across all members, and [`Outcome::members`] breaks the spend
-//! down per member — their `evals` sum to the outcome's `evals` exactly.
+//! *continues* from there when a later pull grants it more budget — no
+//! budget is re-spent replaying earlier slices, and the ES family keeps
+//! one coherent population/annealing schedule across pulls instead of
+//! restarting. (Methods without live state, e.g. mcts or the RL arms,
+//! still effectively restart; their replayed prefix is served by the
+//! shared evaluation cache but does debit the budget, since the paper
+//! counts submissions.) The shared telemetry accumulates in the one
+//! context, so the portfolio's [`Outcome`] carries the global best
+//! across all members, and [`Outcome::members`] breaks the spend down
+//! per member — their `evals` sum to the outcome's `evals` exactly,
+//! down to budget 1.
 //!
 //! The race itself is suspendable too: a raised suspend flag pauses the
 //! in-flight member mid-slice, and [`Optimizer::suspend`] captures the
-//! round/member/fence cursor plus every live member's own state, so a
-//! restored portfolio picks the race up exactly where it stopped.
+//! pull/member/fence cursor (plus the slice-start reward references, so
+//! bandit bookkeeping resumes bit-identically) and every live member's
+//! own state; a restored portfolio picks the race up exactly where it
+//! stopped.
 
-use super::{opt_usize, resolve, MethodSpec, Optimizer};
+use super::{opt_f64, opt_usize, resolve, MethodSpec, Optimizer};
 use crate::search::{EvalContext, MemberStats, Outcome};
 use crate::util::json::{f64_bits, f64_from_bits, Json};
 use anyhow::{anyhow, bail, ensure, Result};
@@ -43,6 +56,15 @@ use anyhow::{anyhow, bail, ensure, Result};
 /// Default member set: the flagship ES, its encoding-only ablation, and
 /// the two strongest non-ES baselines at small budgets.
 pub const DEFAULT_MEMBERS: &[&str] = &["sparsemap", "es-pfce", "pso", "random"];
+
+/// Budget-allocation policy (the `alloc` tunable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Alloc {
+    /// UCB1 bandit pulls (the default).
+    Ucb,
+    /// Fixed successive halving (the pre-bandit schedule).
+    Halving,
+}
 
 struct Member {
     spec: &'static MethodSpec,
@@ -54,24 +76,37 @@ struct Member {
     evals: usize,
     best_edp: f64,
     rounds: usize,
+    /// Completed bandit pulls (equals `rounds` in ucb mode; stays 0
+    /// under halving).
+    pulls: usize,
+    /// Accumulated bandit reward across completed pulls.
+    reward: f64,
     eliminated_round: Option<usize>,
 }
 
-/// Where a suspended race stopped: which round, which survivor within
-/// that round's alive order, the share fixed at round start, and — when
-/// a member was paused mid-slice — its absolute fence.
+/// Where a suspended race stopped. Halving: which round, which survivor
+/// within that round's alive order, the share fixed at round start, and
+/// — when a member was paused mid-slice — its absolute fence. Ucb:
+/// `round` is the pull index, `member_pos` the in-flight member (or the
+/// `members.len()` sentinel for a between-pulls boundary), `share`
+/// smuggles the stall counter, and `ucb_ref` holds the slice-start
+/// (global best, member best) pair the pull's reward is judged against.
 struct Cursor {
     round: usize,
     member_pos: usize,
     share: usize,
     fence: Option<usize>,
     in_leftover: bool,
+    ucb_ref: Option<(f64, f64)>,
 }
 
 /// The meta-optimizer. Construct through the registry:
 /// `resolve("portfolio")?.build(&opts)`.
 pub struct Portfolio {
     members: Vec<Member>,
+    alloc: Alloc,
+    ucb_c: f64,
+    pulls: usize,
     rounds: usize,
     eta: usize,
     cursor: Option<Cursor>,
@@ -98,6 +133,8 @@ pub(crate) fn build(opts: &Json) -> Result<Box<dyn Optimizer>> {
             evals: 0,
             best_edp: f64::INFINITY,
             rounds: 0,
+            pulls: 0,
+            reward: 0.0,
             eliminated_round: None,
         });
     }
@@ -121,8 +158,15 @@ pub(crate) fn build(opts: &Json) -> Result<Box<dyn Optimizer>> {
             members[i].opts = val.clone();
         }
     }
+    let alloc = match opts.get("alloc").and_then(Json::as_str) {
+        Some("halving") => Alloc::Halving,
+        _ => Alloc::Ucb,
+    };
     Ok(Box::new(Portfolio {
         members,
+        alloc,
+        ucb_c: opt_f64(opts, "ucb_c", 1.4),
+        pulls: opt_usize(opts, "pulls", 16).max(1),
         rounds: opt_usize(opts, "rounds", 3).max(1),
         eta: opt_usize(opts, "eta", 2).max(2),
         cursor: None,
@@ -132,10 +176,11 @@ pub(crate) fn build(opts: &Json) -> Result<Box<dyn Optimizer>> {
 impl Portfolio {
     /// Run `member` until `fence` (an absolute submission count), folding
     /// the slice's spend and per-slice best into its stats. `round` is
-    /// the portfolio-level round index (the same number the halving path
-    /// records in `eliminated_round`). Returns `false` when the member
-    /// was paused mid-slice by a suspend request (its stats are still
-    /// folded; `rounds` is only counted once the slice completes).
+    /// the portfolio-level round (halving) or pull (ucb) index — the
+    /// number recorded in `eliminated_round` on a build failure. Returns
+    /// `false` when the member was paused mid-slice by a suspend request
+    /// (its stats are still folded; `rounds` is only counted once the
+    /// slice completes).
     fn run_slice(
         member: &mut Member,
         ctx: &mut EvalContext,
@@ -179,14 +224,131 @@ impl Portfolio {
             .filter(|&i| self.members[i].eliminated_round.is_none())
             .collect()
     }
-}
 
-impl Optimizer for Portfolio {
-    fn label(&self) -> &str {
-        "portfolio"
+    /// UCB1 arm selection: unpulled members first (list order), then the
+    /// highest `mean_reward + c * sqrt(ln(t) / pulls)` with strict-`>`
+    /// comparison, so ties break to the first index — deterministic.
+    fn pick_ucb(&self, alive: &[usize]) -> usize {
+        if let Some(&i) = alive.iter().find(|&&i| self.members[i].pulls == 0) {
+            return i;
+        }
+        let total: usize = alive.iter().map(|&i| self.members[i].pulls).sum();
+        let ln_t = (total as f64).ln();
+        let mut best = alive[0];
+        let mut best_score = f64::NEG_INFINITY;
+        for &i in alive {
+            let m = &self.members[i];
+            let n = m.pulls as f64;
+            let score = m.reward / n + self.ucb_c * (ln_t / n).sqrt();
+            if score > best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
     }
 
-    fn run(&mut self, ctx: &mut EvalContext, seed: u64) {
+    /// The bandit loop: split the remaining budget over the remaining
+    /// pulls (`remaining.div_ceil(pulls_left)` per slice, so the last
+    /// pull drains whatever is left) and hand each slice to the UCB1
+    /// pick. Runs until the shared budget is exhausted; a stall guard
+    /// breaks after `members.len() + 1` consecutive zero-progress pulls
+    /// (every member wound down without spending), so a portfolio of
+    /// early-terminating members cannot livelock.
+    fn run_ucb(&mut self, ctx: &mut EvalContext, seed: u64) {
+        let sentinel = self.members.len();
+        let (mut pull, mut stall, mut pending) = match self.cursor.take() {
+            Some(c) => {
+                let pending = match (c.member_pos < sentinel, c.fence, c.ucb_ref) {
+                    (true, Some(f), Some(refs)) => Some((c.member_pos, f, refs)),
+                    _ => None,
+                };
+                (c.round, c.share, pending)
+            }
+            None => (0, 0, None),
+        };
+        loop {
+            if ctx.exhausted() {
+                break;
+            }
+            let alive = self.alive();
+            if alive.is_empty() {
+                break;
+            }
+            if ctx.suspend_requested() {
+                self.cursor = Some(match pending.take() {
+                    Some((i, fence, refs)) => Cursor {
+                        round: pull,
+                        member_pos: i,
+                        share: stall,
+                        fence: Some(fence),
+                        in_leftover: false,
+                        ucb_ref: Some(refs),
+                    },
+                    None => Cursor {
+                        round: pull,
+                        member_pos: sentinel,
+                        share: stall,
+                        fence: None,
+                        in_leftover: false,
+                        ucb_ref: None,
+                    },
+                });
+                return;
+            }
+            let (i, fence, (global_before, own_before)) = match pending.take() {
+                // A pull interrupted mid-flight keeps its original fence
+                // and reward references, so the resumed slice finishes
+                // exactly the allocation it was granted and its reward
+                // is judged against the same baseline.
+                Some(p) => p,
+                None => {
+                    let i = self.pick_ucb(&alive);
+                    let pulls_left = self.pulls.saturating_sub(pull).max(1);
+                    let share = ctx.remaining().div_ceil(pulls_left).max(1);
+                    (
+                        i,
+                        ctx.used() + share,
+                        (ctx.telemetry.best_edp, self.members[i].best_edp),
+                    )
+                }
+            };
+            let before = ctx.used();
+            if !Self::run_slice(&mut self.members[i], ctx, Some(fence), seed, pull) {
+                self.cursor = Some(Cursor {
+                    round: pull,
+                    member_pos: i,
+                    share: stall,
+                    fence: Some(fence),
+                    in_leftover: false,
+                    ucb_ref: Some((global_before, own_before)),
+                });
+                return;
+            }
+            let m = &mut self.members[i];
+            m.pulls += 1;
+            m.reward += if ctx.telemetry.best_edp < global_before {
+                1.0
+            } else if m.best_edp < own_before {
+                0.5
+            } else {
+                0.0
+            };
+            if ctx.used() > before {
+                stall = 0;
+            } else {
+                stall += 1;
+                if stall > self.members.len() {
+                    break;
+                }
+            }
+            pull += 1;
+        }
+    }
+
+    /// The original fixed successive-halving schedule (`alloc:
+    /// "halving"`).
+    fn run_halving(&mut self, ctx: &mut EvalContext, seed: u64) {
         let (mut round, mut pos, mut share, mut pending_fence, resumed_leftover) =
             match self.cursor.take() {
                 Some(c) => (c.round, c.member_pos, c.share, c.fence, c.in_leftover),
@@ -240,6 +402,7 @@ impl Optimizer for Portfolio {
                         share,
                         fence: pending_fence,
                         in_leftover: false,
+                        ucb_ref: None,
                     });
                     return;
                 }
@@ -271,6 +434,7 @@ impl Optimizer for Portfolio {
                 share: 0,
                 fence: None,
                 in_leftover: true,
+                ucb_ref: None,
             };
             if ctx.suspend_requested() {
                 self.cursor = Some(leftover_cursor);
@@ -288,6 +452,19 @@ impl Optimizer for Portfolio {
             }
         }
     }
+}
+
+impl Optimizer for Portfolio {
+    fn label(&self) -> &str {
+        "portfolio"
+    }
+
+    fn run(&mut self, ctx: &mut EvalContext, seed: u64) {
+        match self.alloc {
+            Alloc::Ucb => self.run_ucb(ctx, seed),
+            Alloc::Halving => self.run_halving(ctx, seed),
+        }
+    }
 
     fn annotate(&self, outcome: &mut Outcome) {
         outcome.members = self
@@ -298,6 +475,7 @@ impl Optimizer for Portfolio {
                 evals: m.evals,
                 best_edp: m.best_edp,
                 rounds: m.rounds,
+                pulls: m.pulls,
                 eliminated_round: m.eliminated_round,
             })
             .collect();
@@ -318,6 +496,8 @@ impl Optimizer for Portfolio {
                 ("evals", Json::num(m.evals as f64)),
                 ("best_edp", f64_bits(m.best_edp)),
                 ("rounds", Json::num(m.rounds as f64)),
+                ("pulls", Json::num(m.pulls as f64)),
+                ("reward", f64_bits(m.reward)),
                 (
                     "eliminated_round",
                     match m.eliminated_round {
@@ -373,6 +553,10 @@ impl Optimizer for Portfolio {
             );
             m.evals = usize_field(mj, "evals")?;
             m.rounds = usize_field(mj, "rounds")?;
+            // Absent in pre-bandit checkpoints: default to zero rather
+            // than reject them.
+            m.pulls = mj.get("pulls").and_then(Json::as_u64).unwrap_or(0) as usize;
+            m.reward = mj.get("reward").and_then(f64_from_bits).unwrap_or(0.0);
             m.best_edp = mj
                 .get("best_edp")
                 .and_then(f64_from_bits)
@@ -418,6 +602,13 @@ fn cursor_to_json(c: &Cursor) -> Json {
             },
         ),
         ("in_leftover", Json::Bool(c.in_leftover)),
+        (
+            "ucb_ref",
+            match c.ucb_ref {
+                Some((g, o)) => Json::Arr(vec![f64_bits(g), f64_bits(o)]),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -436,6 +627,15 @@ fn cursor_from_json(j: &Json) -> Result<Cursor> {
             .get("in_leftover")
             .and_then(Json::as_bool)
             .ok_or_else(|| anyhow!("portfolio cursor is missing 'in_leftover'"))?,
+        ucb_ref: match j.get("ucb_ref").and_then(Json::as_arr) {
+            Some(pair) if pair.len() == 2 => Some((
+                f64_from_bits(&pair[0])
+                    .ok_or_else(|| anyhow!("portfolio cursor has a bad 'ucb_ref'"))?,
+                f64_from_bits(&pair[1])
+                    .ok_or_else(|| anyhow!("portfolio cursor has a bad 'ucb_ref'"))?,
+            )),
+            _ => None,
+        },
     })
 }
 
@@ -453,8 +653,9 @@ mod tests {
     }
 
     #[test]
-    fn portfolio_spends_exactly_its_budget_across_members() {
-        let o = run_method("portfolio", ctx(900), 11).unwrap();
+    fn halving_spends_exactly_its_budget_across_members() {
+        let opts = Json::parse(r#"{"alloc": "halving"}"#).unwrap();
+        let o = run_method_with("portfolio", &opts, ctx(900), 11).unwrap();
         assert_eq!(o.method, "portfolio");
         assert!(o.evals <= 900, "overspent: {}", o.evals);
         assert_eq!(o.members.len(), super::DEFAULT_MEMBERS.len());
@@ -467,6 +668,39 @@ mod tests {
         // With rounds=3 over 4 members someone must have been eliminated.
         assert!(o.members.iter().any(|m| m.eliminated_round.is_some()));
         assert!(o.members.iter().any(|m| m.eliminated_round.is_none()));
+    }
+
+    #[test]
+    fn ucb_default_allocates_whole_budget_without_elimination() {
+        let o = run_method("portfolio", ctx(900), 11).unwrap();
+        assert_eq!(o.method, "portfolio");
+        assert!(o.evals <= 900, "overspent: {}", o.evals);
+        let member_sum: usize = o.members.iter().map(|m| m.evals).sum();
+        assert_eq!(member_sum, o.evals, "member evals must sum to the outcome's");
+        // The bandit never eliminates; every member got its warm-up pull.
+        assert!(o.members.iter().all(|m| m.eliminated_round.is_none()));
+        assert!(o.members.iter().all(|m| m.pulls >= 1), "{:?}", o.members);
+        let total_pulls: usize = o.members.iter().map(|m| m.pulls).sum();
+        assert!(total_pulls >= super::DEFAULT_MEMBERS.len(), "{total_pulls}");
+        for m in &o.members {
+            assert!(o.best_edp <= m.best_edp, "{} beat the portfolio best", m.method);
+        }
+    }
+
+    #[test]
+    fn ucb_tunables_reach_the_bandit() {
+        // One pull: the whole budget goes to the first warm-up member;
+        // the others never run.
+        let opts = Json::parse(r#"{"pulls": 1}"#).unwrap();
+        let o = run_method_with("portfolio", &opts, ctx(200), 7).unwrap();
+        assert_eq!(o.members.iter().map(|m| m.evals).sum::<usize>(), o.evals);
+        let ran: Vec<&str> =
+            o.members.iter().filter(|m| m.pulls > 0).map(|m| m.method.as_str()).collect();
+        assert_eq!(ran, vec!["sparsemap"], "single pull goes to the first member");
+        // Bad alloc strings are rejected by schema validation.
+        let bad = Json::parse(r#"{"alloc": "thompson"}"#).unwrap();
+        let err = run_method_with("portfolio", &bad, ctx(40), 1).unwrap_err().to_string();
+        assert!(err.contains("must be one of"), "{err}");
     }
 
     #[test]
@@ -538,12 +772,24 @@ mod tests {
 
     #[test]
     fn tiny_budget_degrades_gracefully() {
-        // Far fewer samples than members x rounds: must terminate, never
-        // overspend, and still account every eval to a member.
-        for budget in [1usize, 3, 7, 11] {
-            let o = run_method("portfolio", ctx(budget), 2).unwrap();
-            assert!(o.evals <= budget, "budget {budget} overspent: {}", o.evals);
-            assert_eq!(o.members.iter().map(|m| m.evals).sum::<usize>(), o.evals);
+        // Far fewer samples than members x pulls/rounds: must terminate,
+        // never overspend, and still account every eval to a member —
+        // under both allocation policies.
+        for alloc in ["ucb", "halving"] {
+            let opts = Json::parse(&format!(r#"{{"alloc": "{alloc}"}}"#)).unwrap();
+            for budget in [1usize, 3, 7, 11] {
+                let o = run_method_with("portfolio", &opts, ctx(budget), 2).unwrap();
+                assert!(
+                    o.evals <= budget,
+                    "{alloc} budget {budget} overspent: {}",
+                    o.evals
+                );
+                assert_eq!(
+                    o.members.iter().map(|m| m.evals).sum::<usize>(),
+                    o.evals,
+                    "{alloc} budget {budget}: member evals must sum exactly"
+                );
+            }
         }
     }
 
@@ -559,52 +805,60 @@ mod tests {
         use std::sync::atomic::{AtomicBool, Ordering};
         use std::sync::Arc;
 
-        let empty = Json::Obj(Default::default());
-        let spec = resolve("portfolio").unwrap();
+        // Both allocation policies must survive a mid-slice suspension
+        // bit-identically (the bandit additionally round-trips its
+        // pull/reward bookkeeping).
+        for alloc in ["ucb", "halving"] {
+            let opts = Json::parse(&format!(r#"{{"alloc": "{alloc}"}}"#)).unwrap();
+            let spec = resolve("portfolio").unwrap();
 
-        let a = {
-            let mut c = ctx(900);
-            let mut opt = spec.build(&empty).unwrap();
+            let a = {
+                let mut c = ctx(900);
+                let mut opt = spec.build(&opts).unwrap();
+                opt.run(&mut c, 11);
+                let mut o = c.outcome("portfolio");
+                opt.annotate(&mut o);
+                o
+            };
+
+            // Same race, but an observer raises the suspend flag halfway
+            // through; the in-flight member pauses mid-slice.
+            let flag = Arc::new(AtomicBool::new(false));
+            let obs_flag = flag.clone();
+            let mut c = ctx(900).with_observer(Some(Box::new(move |p: &Progress| {
+                if p.evals >= 450 {
+                    obs_flag.store(true, Ordering::SeqCst);
+                }
+                SearchControl::Continue
+            })));
+            c.set_suspend_flag(Some(flag.clone()));
+            let mut opt = spec.build(&opts).unwrap();
             opt.run(&mut c, 11);
-            let mut o = c.outcome("portfolio");
-            opt.annotate(&mut o);
-            o
-        };
+            assert!(c.used() < 900, "{alloc}: race should have paused before the budget");
 
-        // Same race, but an observer raises the suspend flag halfway
-        // through; the in-flight member pauses mid-slice.
-        let flag = Arc::new(AtomicBool::new(false));
-        let obs_flag = flag.clone();
-        let mut c = ctx(900).with_observer(Some(Box::new(move |p: &Progress| {
-            if p.evals >= 450 {
-                obs_flag.store(true, Ordering::SeqCst);
-            }
-            SearchControl::Continue
-        })));
-        c.set_suspend_flag(Some(flag.clone()));
-        let mut opt = spec.build(&empty).unwrap();
-        opt.run(&mut c, 11);
-        assert!(c.used() < 900, "race should have paused before the budget");
+            // Round-trip the race state (cursor + every live member's own
+            // checkpoint) through actual JSON text, restore into a fresh
+            // portfolio, and finish the run.
+            let state = Json::parse(&opt.suspend().unwrap().dumps()).unwrap();
+            let mut resumed = spec.build(&opts).unwrap();
+            resumed.resume(&state).unwrap();
 
-        // Round-trip the race state (cursor + every live member's own
-        // checkpoint) through actual JSON text, restore into a fresh
-        // portfolio, and finish the run.
-        let state = Json::parse(&opt.suspend().unwrap().dumps()).unwrap();
-        let mut resumed = spec.build(&empty).unwrap();
-        resumed.resume(&state).unwrap();
+            flag.store(false, Ordering::SeqCst);
+            c.set_observer(None);
+            resumed.run(&mut c, 11);
+            let mut b = c.outcome("portfolio");
+            resumed.annotate(&mut b);
 
-        flag.store(false, Ordering::SeqCst);
-        c.set_observer(None);
-        resumed.run(&mut c, 11);
-        let mut b = c.outcome("portfolio");
-        resumed.annotate(&mut b);
-
-        assert_eq!(a.evals, b.evals);
-        assert_eq!(a.best_edp.to_bits(), b.best_edp.to_bits());
-        assert_eq!(a.curve, b.curve);
-        assert_eq!(a.members, b.members, "per-member accounting must survive suspension");
-        let member_sum: usize = b.members.iter().map(|m| m.evals).sum();
-        assert_eq!(member_sum, b.evals, "member evals must still sum to the outcome's");
+            assert_eq!(a.evals, b.evals, "{alloc}");
+            assert_eq!(a.best_edp.to_bits(), b.best_edp.to_bits(), "{alloc}");
+            assert_eq!(a.curve, b.curve, "{alloc}");
+            assert_eq!(
+                a.members, b.members,
+                "{alloc}: per-member accounting must survive suspension"
+            );
+            let member_sum: usize = b.members.iter().map(|m| m.evals).sum();
+            assert_eq!(member_sum, b.evals, "{alloc}: member evals must still sum");
+        }
     }
 
     #[test]

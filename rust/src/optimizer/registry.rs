@@ -324,16 +324,34 @@ const PORTFOLIO_TUNABLES: &[Tunable] = &[
         help: "per-member method_opts, validated against each member's schema",
     },
     Tunable {
+        key: "alloc",
+        kind: TunableKind::Choice { options: &["ucb", "halving"] },
+        default: "ucb",
+        help: "budget allocation policy: UCB1 bandit pulls or fixed successive halving",
+    },
+    Tunable {
+        key: "ucb_c",
+        kind: TunableKind::Float { min: 0.0, max: 16.0 },
+        default: "1.4",
+        help: "UCB1 exploration constant (alloc=ucb)",
+    },
+    Tunable {
+        key: "pulls",
+        kind: TunableKind::Int { min: 1, max: 4_096 },
+        default: "16",
+        help: "bandit pulls the budget is split across (alloc=ucb)",
+    },
+    Tunable {
         key: "rounds",
         kind: TunableKind::Int { min: 1, max: 64 },
         default: "3",
-        help: "successive-halving rounds over the shared budget",
+        help: "successive-halving rounds over the shared budget (alloc=halving)",
     },
     Tunable {
         key: "eta",
         kind: TunableKind::Int { min: 2, max: 16 },
         default: "2",
-        help: "elimination factor: each round keeps ceil(alive/eta) members",
+        help: "elimination factor: each round keeps ceil(alive/eta) members (alloc=halving)",
     },
 ];
 
@@ -445,8 +463,8 @@ const METHODS: [MethodSpec; METHOD_COUNT] = [
     MethodSpec {
         name: "portfolio",
         aliases: &["race"],
-        summary: "meta-optimizer: successive-halving race of member methods over one \
-                  shared budget/cache/pool",
+        summary: "meta-optimizer: UCB1-bandit (or successive-halving) race of member \
+                  methods over one shared budget/cache/pool",
         tunables: PORTFOLIO_TUNABLES,
         resumable: true,
         builder: portfolio::build,

@@ -7,10 +7,13 @@
 //!
 //! 1. **Genome interning** ([`Interner`]) — genomes are hash-consed to
 //!    dense `u32` ids with the in-tree Fx hasher
-//!    ([`crate::util::hash`]). The result caches are plain
-//!    `Vec<Option<EvalResult>>` tables indexed by id: a cache hit costs
-//!    one slice hash + one array read, and *nothing is cloned on a hit*
-//!    (the old pipeline keyed a `HashMap` on cloned `Vec<u32>` genomes).
+//!    ([`crate::util::hash`]). Keys are stored word-packed
+//!    ([`PackedWords`]: two `u32` genes per `u64` word), so hashing and
+//!    equality run half the Fx rounds of the element-wise `[u32]`
+//!    layout, and lookups probe by a reusable `&[u64]` scratch buffer —
+//!    *nothing is cloned or allocated on a hit* (the old pipeline keyed
+//!    a `HashMap` on cloned `Vec<u32>` genomes). The result caches are
+//!    plain `Vec<Option<EvalResult>>` tables indexed by id.
 //!
 //! 2. **Stage-level memoization** ([`StageEngine`]) — the genome's
 //!    natural segments (mapping genes | per-tensor format genes | S/G
@@ -20,7 +23,12 @@
 //!    compression stats per `(mapping, format-gene)` pair. An offspring
 //!    that mutated only its S/G genes reuses the parent's decoded loop
 //!    nest and tile features wholesale and pays only the allocation-free
-//!    [`crate::model::assemble`] + cost arithmetic.
+//!    [`crate::model::assemble`] + cost arithmetic. The assembly phase
+//!    itself runs batched by default: staged genomes are grouped by
+//!    mapping id into structure-of-arrays tables over the `Copy` stage
+//!    outputs and the cost model runs over contiguous `(lo, hi)` index
+//!    ranges (`set_batched(false)` keeps the per-genome walk as the
+//!    parity reference).
 //!
 //! 3. **Scratch reuse** — all per-batch work lists live in reusable
 //!    buffers owned by the engine/context, so steady-state evaluation of
@@ -42,18 +50,18 @@
 
 use crate::genome::{assign_formats, decode_mapping, FORMAT_GENES_PER_TENSOR};
 use crate::model::{
-    assemble, format_stage, mapping_stage, EvalResult, MappingStage, NativeEvaluator,
+    assemble, format_stage, mapping_stage, EvalResult, MapFeats, MappingStage, NativeEvaluator,
     TensorCompression, WorkloadConsts,
 };
 use crate::obs::metrics::{STAGE_ASSEMBLE, STAGE_DECODE, STAGE_FORMAT, STAGE_MAPPING};
 use crate::obs::Metrics;
 use crate::sparse::SgMechanism;
-use crate::util::hash::FxHashMap;
+use crate::util::hash::{pack_genes_into, FxHashMap, PackedWords};
 use crate::util::threadpool::ThreadPool;
 use crate::workload::NUM_TENSORS;
 use std::sync::Arc;
 use std::time::Instant;
-use super::fan_out;
+use super::{fan_out_indexed, fan_out_shared};
 
 /// Advance a phase clock (present only when metrics are attached) and
 /// return the finished phase's elapsed nanoseconds. With no clock this
@@ -70,12 +78,16 @@ fn lap_ns(clock: &mut Option<Instant>) -> u64 {
 }
 
 /// Hash-consed genome store: each distinct gene vector gets a dense
-/// `u32` id; lookups by slice never clone, inserts clone exactly once
-/// (into a shared `Arc<[u32]>` the parallel pipeline reuses by
-/// refcount).
+/// `u32` id. Keys live word-packed ([`PackedWords`]) so hashing and
+/// equality run over `u64` words; lookups pack into a reusable scratch
+/// buffer and probe by `&[u64]` — no clone, no allocation on a hit.
+/// Inserts allocate exactly twice (the packed key and the raw-gene
+/// `Arc<[u32]>` the parallel pipeline shares by refcount).
 pub struct Interner {
-    ids: FxHashMap<Arc<[u32]>, u32>,
+    ids: FxHashMap<PackedWords, u32>,
     genomes: Vec<Arc<[u32]>>,
+    /// Reusable word-packing buffer for allocation-free probes.
+    pack_scratch: Vec<u64>,
     cap: usize,
 }
 
@@ -83,7 +95,12 @@ impl Interner {
     /// `cap` bounds the number of distinct keys (budget-derived; see
     /// module docs).
     pub fn new(cap: usize) -> Interner {
-        Interner { ids: FxHashMap::default(), genomes: Vec::new(), cap }
+        Interner {
+            ids: FxHashMap::default(),
+            genomes: Vec::new(),
+            pack_scratch: Vec::new(),
+            cap,
+        }
     }
 
     /// Distinct genomes interned so far.
@@ -99,22 +116,25 @@ impl Interner {
     /// new but the interner is at capacity (caller falls back to an
     /// uncached evaluation).
     pub fn intern(&mut self, g: &[u32]) -> Option<u32> {
-        if let Some(&id) = self.ids.get(g) {
+        pack_genes_into(g, &mut self.pack_scratch);
+        if let Some(&id) = self.ids.get(self.pack_scratch.as_slice()) {
             return Some(id);
         }
         if self.genomes.len() >= self.cap {
             return None;
         }
-        let arc: Arc<[u32]> = Arc::from(g);
+        let key = PackedWords(Arc::from(self.pack_scratch.as_slice()));
         let id = self.genomes.len() as u32;
-        self.ids.insert(Arc::clone(&arc), id);
-        self.genomes.push(arc);
+        self.ids.insert(key, id);
+        self.genomes.push(Arc::from(g));
         Some(id)
     }
 
-    /// Look up without inserting.
+    /// Look up without inserting (cold path: packs into a local buffer).
     pub fn get(&self, g: &[u32]) -> Option<u32> {
-        self.ids.get(g).copied()
+        let mut buf = Vec::with_capacity(g.len().div_ceil(2));
+        pack_genes_into(g, &mut buf);
+        self.ids.get(buf.as_slice()).copied()
     }
 
     /// The genome behind an id.
@@ -158,14 +178,33 @@ enum AsmSlot {
     Scratch,
 }
 
-/// `Copy` payload for the (optionally parallel) assembly phase: the
-/// mapping features, the three tensors' compression stats and the S/G
-/// mechanisms — everything [`assemble`] needs, nothing on the heap.
+/// `Copy` payload for the per-genome assembly walk (the batched path's
+/// parity reference): the mapping features, the three tensors'
+/// compression stats and the S/G mechanisms — everything [`assemble`]
+/// needs, nothing on the heap.
 #[derive(Clone, Copy)]
 struct AsmItem {
-    mf: crate::model::MapFeats,
+    mf: MapFeats,
     comp: [TensorCompression; NUM_TENSORS],
     sg: [SgMechanism; 3],
+}
+
+/// Structure-of-arrays tables for the batched assembly phase: one row
+/// per staged genome, grouped by mapping id so strategy-only siblings
+/// index one shared [`MapFeats`] entry instead of carrying a copy each.
+/// Everything is `Copy` data in flat vectors — the cost model walks
+/// contiguous memory, and the buffers are reused across batches.
+#[derive(Default)]
+struct SoaTables {
+    /// One entry per distinct mapping id in the batch (group order).
+    feats: Vec<MapFeats>,
+    /// Per staged genome: index into `feats`.
+    group: Vec<u32>,
+    comp: Vec<[TensorCompression; NUM_TENSORS]>,
+    sg: Vec<[SgMechanism; 3]>,
+    /// Per staged genome: original submission index (write-back target,
+    /// which is what keeps batched results in submission order).
+    src: Vec<u32>,
 }
 
 /// Stage-memoizing evaluator for one `(workload, platform)` pair.
@@ -188,19 +227,34 @@ pub struct StageEngine {
     /// in `stage_ns` (decode = phase-1 resolution, mapping = phase-2
     /// stage compute, format = phases 3/3b, assemble = phase 4 + the
     /// cap-degraded scratch path) and hit/miss deltas in
-    /// `stage_hits`/`stage_misses`. `None` (the default) records
-    /// nothing and costs one branch per batch.
+    /// `stage_hits`/`stage_misses`; the batched pipeline additionally
+    /// samples `brood_size` (submissions per engine batch) and
+    /// `soa_slice_ns` (the SoA cost-model sweep) once per batch. `None`
+    /// (the default) records nothing and costs one branch per batch.
     metrics: Option<Arc<Metrics>>,
+    /// Batched SoA assembly (default). Off = the per-genome assembly
+    /// walk, kept as the parity suite's reference path.
+    batched: bool,
     // --- reusable per-batch scratch (layer 3) ---------------------------
     map_refs: Vec<MapRef>,
     pending_segs: Vec<Arc<[u32]>>,
-    pending_map: FxHashMap<Arc<[u32]>, u32>,
+    /// Packed keys of `pending_segs`, in the same order (inserted into
+    /// `map_ids` once phase 2 computes the stages).
+    pending_packed: Vec<PackedWords>,
+    pending_map: FxHashMap<PackedWords, u32>,
+    /// Reusable word-packing buffer for mapping-segment probes.
+    seg_scratch: Vec<u64>,
     asm: Vec<AsmSlot>,
     pending_fmt: Vec<FmtKey>,
     pending_fmt_map: FxHashMap<FmtKey, u32>,
     fmt_computed: Vec<TensorCompression>,
+    /// Phase-3b work list (key + its mapping stage), reused per batch.
+    fmt_jobs: Vec<(FmtKey, Arc<MappingStage>)>,
     asm_idx: Vec<u32>,
     asm_items: Vec<AsmItem>,
+    soa: SoaTables,
+    /// `(mapping id, submission index)` pairs, sorted to group siblings.
+    soa_order: Vec<(u32, u32)>,
     scratch_idx: Vec<u32>,
     scratch_genomes: Vec<Arc<[u32]>>,
 }
@@ -220,18 +274,37 @@ impl StageEngine {
             stage_hits: 0,
             stage_misses: 0,
             metrics: None,
+            batched: true,
             map_refs: Vec::new(),
             pending_segs: Vec::new(),
+            pending_packed: Vec::new(),
             pending_map: FxHashMap::default(),
+            seg_scratch: Vec::new(),
             asm: Vec::new(),
             pending_fmt: Vec::new(),
             pending_fmt_map: FxHashMap::default(),
             fmt_computed: Vec::new(),
+            fmt_jobs: Vec::new(),
             asm_idx: Vec::new(),
             asm_items: Vec::new(),
+            soa: SoaTables::default(),
+            soa_order: Vec::new(),
             scratch_idx: Vec::new(),
             scratch_genomes: Vec::new(),
         }
+    }
+
+    /// Toggle the batched SoA assembly phase (on by default). Off forces
+    /// the per-genome assembly walk — the reference the batched-parity
+    /// tests compare against. Results are bit-identical either way.
+    pub fn set_batched(&mut self, batched: bool) {
+        self.batched = batched;
+    }
+
+    /// Builder form of [`StageEngine::set_batched`].
+    pub fn with_batched(mut self, batched: bool) -> StageEngine {
+        self.set_batched(batched);
+        self
     }
 
     /// Override the budget-derived cache caps (tests of the degraded
@@ -311,17 +384,22 @@ impl StageEngine {
         let obs = self.metrics.clone();
         let mut clock = obs.as_ref().map(|_| Instant::now());
         let (hits0, misses0) = (self.stage_hits, self.stage_misses);
+        if let Some(m) = &obs {
+            m.brood_size.record(n as u64);
+        }
 
         // --- phase 1: resolve mapping segments --------------------------
         self.map_refs.clear();
         self.pending_segs.clear();
+        self.pending_packed.clear();
         self.pending_map.clear();
         for g in genomes {
             let seg = &g[..fs];
-            if let Some(&id) = self.map_ids.get(seg) {
+            pack_genes_into(seg, &mut self.seg_scratch);
+            if let Some(&id) = self.map_ids.get(self.seg_scratch.as_slice()) {
                 self.map_refs.push(MapRef::Cached(id));
                 self.stage_hits += 1;
-            } else if let Some(&pi) = self.pending_map.get(seg) {
+            } else if let Some(&pi) = self.pending_map.get(self.seg_scratch.as_slice()) {
                 // Another miss in this batch already introduces it:
                 // batch-local sharing is a hit too.
                 self.map_refs.push(MapRef::Pending(pi));
@@ -330,9 +408,10 @@ impl StageEngine {
                 self.map_refs.push(MapRef::Scratch);
             } else {
                 let pi = self.pending_segs.len() as u32;
-                let seg_arc: Arc<[u32]> = Arc::from(seg);
-                self.pending_map.insert(Arc::clone(&seg_arc), pi);
-                self.pending_segs.push(seg_arc);
+                let packed = PackedWords(Arc::from(self.seg_scratch.as_slice()));
+                self.pending_map.insert(packed.clone(), pi);
+                self.pending_packed.push(packed);
+                self.pending_segs.push(Arc::from(seg));
                 self.map_refs.push(MapRef::Pending(pi));
                 self.stage_misses += 1;
             }
@@ -346,13 +425,16 @@ impl StageEngine {
         let map_base = self.map_stages.len() as u32;
         if !self.pending_segs.is_empty() {
             let ev = Arc::clone(&self.eval);
-            let computed: Vec<MappingStage> = fan_out(pool, &self.pending_segs, move |seg| {
-                Self::compute_mapping_stage(&ev, seg)
-            });
-            for (seg, st) in self.pending_segs.drain(..).zip(computed) {
+            let (segs, computed) =
+                fan_out_shared(pool, std::mem::take(&mut self.pending_segs), move |seg| {
+                    Self::compute_mapping_stage(&ev, seg)
+                });
+            self.pending_segs = segs;
+            self.pending_segs.clear();
+            for (packed, st) in self.pending_packed.drain(..).zip(computed) {
                 let id = self.map_stages.len() as u32;
                 self.map_stages.push(Arc::new(st));
-                self.map_ids.insert(seg, id);
+                self.map_ids.insert(packed, id);
             }
         }
 
@@ -405,15 +487,20 @@ impl StageEngine {
         // --- phase 3b: compute missing format stages --------------------
         self.fmt_computed.clear();
         if !self.pending_fmt.is_empty() {
-            let items: Vec<(FmtKey, Arc<MappingStage>)> = self
-                .pending_fmt
-                .iter()
-                .map(|&k| (k, Arc::clone(&self.map_stages[k.map as usize])))
-                .collect();
+            self.fmt_jobs.clear();
+            self.fmt_jobs.extend(
+                self.pending_fmt
+                    .iter()
+                    .map(|&k| (k, Arc::clone(&self.map_stages[k.map as usize]))),
+            );
             let ev = Arc::clone(&self.eval);
-            let computed = fan_out(pool, &items, move |(k, stage)| {
-                Self::compute_format_stage(&ev, stage, k.tensor as usize, &k.genes)
-            });
+            let (jobs, computed) =
+                fan_out_shared(pool, std::mem::take(&mut self.fmt_jobs), move |(k, stage)| {
+                    Self::compute_format_stage(&ev, stage, k.tensor as usize, &k.genes)
+                });
+            self.fmt_jobs = jobs;
+            // Drop the stage Arc refs promptly; keep the capacity.
+            self.fmt_jobs.clear();
             self.fmt_computed.extend(computed);
             for (k, tc) in self.pending_fmt.iter().zip(&self.fmt_computed) {
                 self.fmt_cache.insert(*k, *tc);
@@ -426,52 +513,134 @@ impl StageEngine {
 
         // --- phase 4: assembly + cost ------------------------------------
         let mut out = vec![EvalResult::dead(); n];
-        self.asm_idx.clear();
-        self.asm_items.clear();
         self.scratch_idx.clear();
         self.scratch_genomes.clear();
-        for (i, (g, slot)) in genomes.iter().zip(&self.asm).enumerate() {
-            match *slot {
-                AsmSlot::Scratch => {
-                    self.scratch_idx.push(i as u32);
-                    self.scratch_genomes.push(Arc::clone(g));
+        if self.batched {
+            // Batched SoA path: group staged genomes by mapping id so
+            // strategy-only siblings index one shared MapFeats row, then
+            // run the cost model over the contiguous tables as (lo, hi)
+            // index ranges. Results write back through `src`, so output
+            // stays in submission order and every downstream trajectory
+            // is bit-identical to the per-genome walk.
+            self.soa_order.clear();
+            for (i, slot) in self.asm.iter().enumerate() {
+                match *slot {
+                    AsmSlot::Scratch => {
+                        self.scratch_idx.push(i as u32);
+                        self.scratch_genomes.push(Arc::clone(&genomes[i]));
+                    }
+                    AsmSlot::Staged { map, .. } => self.soa_order.push((map, i as u32)),
                 }
-                AsmSlot::Staged { map, fmt } => {
+            }
+            // sort_unstable is deterministic here — (map, index) pairs
+            // are distinct — and allocation-free.
+            self.soa_order.sort_unstable();
+            {
+                let t = &mut self.soa;
+                t.feats.clear();
+                t.group.clear();
+                t.comp.clear();
+                t.sg.clear();
+                t.src.clear();
+                let mut last_map = None;
+                for &(map, i) in &self.soa_order {
+                    if last_map != Some(map) {
+                        t.feats.push(self.map_stages[map as usize].feats);
+                        last_map = Some(map);
+                    }
+                    let AsmSlot::Staged { fmt, .. } = self.asm[i as usize] else {
+                        unreachable!("soa_order only holds staged slots")
+                    };
                     let resolve = |r: FmtRef| match r {
                         FmtRef::Ready(tc) => tc,
                         FmtRef::Pending(pi) => self.fmt_computed[pi as usize],
                     };
-                    let item = AsmItem {
-                        mf: self.map_stages[map as usize].feats,
-                        comp: [resolve(fmt[0]), resolve(fmt[1]), resolve(fmt[2])],
-                        sg: [
-                            SgMechanism::from_gene(g[sg_start]),
-                            SgMechanism::from_gene(g[sg_start + 1]),
-                            SgMechanism::from_gene(g[sg_start + 2]),
-                        ],
-                    };
-                    self.asm_idx.push(i as u32);
-                    self.asm_items.push(item);
+                    let g = &genomes[i as usize];
+                    t.group.push(t.feats.len() as u32 - 1);
+                    t.comp.push([resolve(fmt[0]), resolve(fmt[1]), resolve(fmt[2])]);
+                    t.sg.push([
+                        SgMechanism::from_gene(g[sg_start]),
+                        SgMechanism::from_gene(g[sg_start + 1]),
+                        SgMechanism::from_gene(g[sg_start + 2]),
+                    ]);
+                    t.src.push(i);
                 }
             }
-        }
-        if !self.asm_items.is_empty() {
-            let ev = Arc::clone(&self.eval);
-            let consts = self.consts;
-            let results = fan_out(pool, &self.asm_items, move |it| {
-                ev.eval_features(&assemble(&consts, &it.mf, &it.comp, it.sg))
-            });
-            for (&i, r) in self.asm_idx.iter().zip(results) {
-                out[i as usize] = r;
+            let staged_n = self.soa.src.len();
+            if staged_n > 0 {
+                let ev = Arc::clone(&self.eval);
+                let consts = self.consts;
+                let slice_clock = obs.as_ref().map(|_| Instant::now());
+                let (tables, results) =
+                    fan_out_indexed(pool, std::mem::take(&mut self.soa), staged_n, move |t, j| {
+                        ev.eval_features(&assemble(
+                            &consts,
+                            &t.feats[t.group[j] as usize],
+                            &t.comp[j],
+                            t.sg[j],
+                        ))
+                    });
+                for (&i, r) in tables.src.iter().zip(&results) {
+                    out[i as usize] = *r;
+                }
+                self.soa = tables;
+                if let (Some(m), Some(t0)) = (&obs, slice_clock) {
+                    m.soa_slice_ns.record(t0.elapsed().as_nanos() as u64);
+                }
+            }
+        } else {
+            // Per-genome reference walk (parity suite; `set_batched(false)`).
+            self.asm_idx.clear();
+            self.asm_items.clear();
+            for (i, (g, slot)) in genomes.iter().zip(&self.asm).enumerate() {
+                match *slot {
+                    AsmSlot::Scratch => {
+                        self.scratch_idx.push(i as u32);
+                        self.scratch_genomes.push(Arc::clone(g));
+                    }
+                    AsmSlot::Staged { map, fmt } => {
+                        let resolve = |r: FmtRef| match r {
+                            FmtRef::Ready(tc) => tc,
+                            FmtRef::Pending(pi) => self.fmt_computed[pi as usize],
+                        };
+                        let item = AsmItem {
+                            mf: self.map_stages[map as usize].feats,
+                            comp: [resolve(fmt[0]), resolve(fmt[1]), resolve(fmt[2])],
+                            sg: [
+                                SgMechanism::from_gene(g[sg_start]),
+                                SgMechanism::from_gene(g[sg_start + 1]),
+                                SgMechanism::from_gene(g[sg_start + 2]),
+                            ],
+                        };
+                        self.asm_idx.push(i as u32);
+                        self.asm_items.push(item);
+                    }
+                }
+            }
+            if !self.asm_items.is_empty() {
+                let ev = Arc::clone(&self.eval);
+                let consts = self.consts;
+                let (items, results) =
+                    fan_out_shared(pool, std::mem::take(&mut self.asm_items), move |it| {
+                        ev.eval_features(&assemble(&consts, &it.mf, &it.comp, it.sg))
+                    });
+                self.asm_items = items;
+                for (&i, r) in self.asm_idx.iter().zip(&results) {
+                    out[i as usize] = *r;
+                }
             }
         }
         // Cap-degraded genomes evaluate from scratch — still fanned out
         // over the pool so the degraded mode keeps its parallelism.
         if !self.scratch_genomes.is_empty() {
             let ev = Arc::clone(&self.eval);
-            let results = fan_out(pool, &self.scratch_genomes, move |g| ev.eval_genome(g));
-            for (&i, r) in self.scratch_idx.iter().zip(results) {
-                out[i as usize] = r;
+            let (bufs, results) =
+                fan_out_shared(pool, std::mem::take(&mut self.scratch_genomes), move |g| {
+                    ev.eval_genome(g)
+                });
+            self.scratch_genomes = bufs;
+            for (&i, r) in self.scratch_idx.iter().zip(&results) {
+                out[i as usize] = *r;
             }
             // Drop the Arc refs promptly (these are the rare over-cap
             // genomes; no point pinning them between batches).
@@ -586,15 +755,56 @@ mod tests {
         for (h, name) in m.stage_ns.iter().zip(crate::obs::STAGE_NAMES) {
             assert_eq!(h.snapshot().count, 1, "one {name} sample per batch");
         }
+        // The batched pipeline's own histograms: one brood-size sample
+        // (the submission count) and one SoA slice timing per batch.
+        let brood = m.brood_size.snapshot();
+        assert_eq!(brood.count, 1);
+        assert_eq!(brood.sum, genomes.len() as u64);
+        assert_eq!(m.soa_slice_ns.snapshot().count, 1);
         assert_eq!(m.stage_hits.get() as usize, e.stage_hits());
         assert_eq!(m.stage_misses.get() as usize, e.stage_misses());
         // Detaching freezes the scope; results are unaffected either way.
         e.set_metrics(None);
         let r = e.eval_batch(&arcs(&genomes), None);
         assert_eq!(m.stage_ns[0].snapshot().count, 1);
+        assert_eq!(m.brood_size.snapshot().count, 1);
         for (g, r) in genomes.iter().zip(&r) {
             assert_eq!(*r, e.eval.eval_genome(g));
         }
+    }
+
+    #[test]
+    fn batched_and_per_genome_assembly_agree_bitwise() {
+        let mut batched = engine(10_000);
+        let mut pergenome = engine(10_000).with_batched(false);
+        let mut rng = Pcg64::seeded(13);
+        let base = batched.eval.spec.random(&mut rng);
+        let sg = batched.eval.spec.sg_start;
+        // A mixed brood: random genomes plus strategy-only siblings of
+        // one parent (the grouping the SoA tables exist for).
+        let mut pop: Vec<Vec<u32>> =
+            (0..40).map(|_| batched.eval.spec.random(&mut rng)).collect();
+        for i in 0..10u32 {
+            let mut g = base.clone();
+            g[sg] = i % 7;
+            pop.push(g);
+        }
+        let a = batched.eval_batch(&arcs(&pop), None);
+        let b = pergenome.eval_batch(&arcs(&pop), None);
+        assert_eq!(a, b, "batched SoA assembly diverged from the per-genome walk");
+        assert_eq!(batched.stage_hits(), pergenome.stage_hits());
+        assert_eq!(batched.stage_misses(), pergenome.stage_misses());
+        assert_eq!(batched.cache_sizes(), pergenome.cache_sizes());
+        for (g, r) in pop.iter().zip(&a) {
+            assert_eq!(*r, batched.eval.eval_genome(g), "batched diverged on {g:?}");
+        }
+        // Pooled batched dispatch (range chunks over the shared tables)
+        // is bit-identical too, warm or cold.
+        let mut pooled = engine(10_000);
+        let pool = Arc::new(ThreadPool::new(4));
+        assert_eq!(pooled.eval_batch(&arcs(&pop), Some(&pool)), a);
+        assert_eq!(pooled.eval_batch(&arcs(&pop), Some(&pool)), a);
+        assert_eq!(batched.eval_batch(&arcs(&pop), None), a);
     }
 
     #[test]

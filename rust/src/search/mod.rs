@@ -6,10 +6,11 @@
 //!
 //! An [`EvalContext`] optionally carries a shared
 //! [`ThreadPool`](crate::util::threadpool::ThreadPool). Native-model
-//! batches are chunked across the pool with the order-preserving
-//! `parallel_map`; because the cost model is pure and results are
-//! re-assembled in submission order, search trajectories are bit-identical
-//! between 1 and N threads. The PJRT backend keeps its own internal
+//! batches fan out as `(lo, hi)` index ranges over refcount-shared
+//! buffers (`fan_out_shared`/`fan_out_indexed`, floored chunking via
+//! `range_chunks`) through the order-preserving `parallel_map`; because
+//! the cost model is pure and results are re-assembled in submission
+//! order, search trajectories are bit-identical between 1 and N threads. The PJRT backend keeps its own internal
 //! batching and ignores the pool.
 //!
 //! ## Evaluation cache and budget semantics
@@ -130,32 +131,87 @@ pub(crate) fn chunk_size(n: usize, workers: usize) -> usize {
     (n / (workers * 4)).max(MIN_CHUNK).min(n.max(1))
 }
 
-/// The one pool-dispatch idiom shared by the backend and every engine
-/// phase: map `f` over `items` in [`chunk_size`]-sized chunks across
-/// `pool` (order-preserving), or serially when the pool is absent,
-/// single-threaded, or the batch is trivial. Centralized so chunking and
-/// ordering fixes land in one place.
-pub(crate) fn fan_out<T, R, F>(pool: Option<&Arc<ThreadPool>>, items: &[T], f: F) -> Vec<R>
+/// Split `0..n` into contiguous `(lo, hi)` index ranges of
+/// [`chunk_size`] items each (the last may be shorter). Range-based
+/// dispatch shares the exact same [`MIN_CHUNK`] floor as per-item
+/// chunking did, so tiny broods on many-core hosts never regress to
+/// range-of-1 jobs (one dispatch round-trip per item).
+pub(crate) fn range_chunks(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let c = chunk_size(n, workers);
+    (0..n).step_by(c).map(|lo| (lo, (lo + c).min(n))).collect()
+}
+
+/// Generalized shared-state fan-out: calls `f(&state, i)` for
+/// `i in 0..n` and returns `(state, results)` with results in index
+/// order. With a real pool attached, `state` is shared with the workers
+/// by refcount and jobs carry [`range_chunks`] `(lo, hi)` ranges —
+/// nothing per-item is cloned or boxed. Serially (no pool, one worker,
+/// or a trivial batch) the state never touches an `Arc`, so serial
+/// steady-state evaluation stays allocation-free apart from the results
+/// vector itself.
+pub(crate) fn fan_out_indexed<S, R, F>(
+    pool: Option<&Arc<ThreadPool>>,
+    state: S,
+    n: usize,
+    f: F,
+) -> (S, Vec<R>)
 where
-    T: Clone + Send + 'static,
+    S: Send + Sync + 'static,
     R: Send + 'static,
-    F: Fn(&T) -> R + Send + Sync + 'static,
+    F: Fn(&S, usize) -> R + Send + Sync + 'static,
 {
     match pool {
-        Some(pool) if pool.size() > 1 && items.len() > 1 => {
-            let jobs: Vec<Vec<T>> = items
-                .chunks(chunk_size(items.len(), pool.size()))
-                .map(|c| c.to_vec())
-                .collect();
-            parallel_map(pool, jobs, move |chunk| {
-                chunk.iter().map(|t| f(t)).collect::<Vec<R>>()
+        Some(pool) if pool.size() > 1 && n > 1 => {
+            let shared = Arc::new(state);
+            let worker_state = Arc::clone(&shared);
+            let results: Vec<R> = parallel_map(pool, range_chunks(n, pool.size()), move |(lo, hi)| {
+                (lo..hi).map(|i| f(&worker_state, i)).collect::<Vec<R>>()
             })
             .into_iter()
             .flatten()
-            .collect()
+            .collect();
+            // Every job has completed (parallel_map joined all results),
+            // but the worker that ran the last one may not have dropped
+            // its boxed closure — and with it the state refcount — the
+            // instant the result arrived. Spin the handful of cycles
+            // until it does so the caller gets its scratch buffer back.
+            let mut shared = shared;
+            let state = loop {
+                match Arc::try_unwrap(shared) {
+                    Ok(s) => break s,
+                    Err(again) => {
+                        shared = again;
+                        std::thread::yield_now();
+                    }
+                }
+            };
+            (state, results)
         }
-        _ => items.iter().map(|t| f(t)).collect(),
+        _ => {
+            let results = (0..n).map(|i| f(&state, i)).collect();
+            (state, results)
+        }
     }
+}
+
+/// The one pool-dispatch idiom shared by the backend and every engine
+/// phase: map `f` over `items` (order-preserving) and hand the buffer
+/// back alongside the results. Callers lend a reusable scratch vector
+/// via `mem::take` and restore it afterwards; the pooled path shares it
+/// with workers by refcount instead of cloning `Arc` lists into per-job
+/// chunks. Centralized so chunking and ordering fixes land in one place.
+pub(crate) fn fan_out_shared<T, R, F>(
+    pool: Option<&Arc<ThreadPool>>,
+    items: Vec<T>,
+    f: F,
+) -> (Vec<T>, Vec<R>)
+where
+    T: Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(&T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    fan_out_indexed(pool, items, n, move |items, i| f(&items[i]))
 }
 
 /// A submission slot: either a cached result or an index into the
@@ -286,13 +342,22 @@ impl Backend {
     /// Evaluate genomes from scratch (no stage memoization), fanning the
     /// native model out over `pool` when one is attached. Results are
     /// always in submission order. This is the reference path the staged
-    /// engine is parity-tested against. Genomes arrive as `Arc` slices so
-    /// chunking shares them by refcount instead of cloning gene vectors.
-    fn eval(&self, pool: Option<&Arc<ThreadPool>>, genomes: &[Arc<[u32]>]) -> Vec<EvalResult> {
+    /// engine is parity-tested against. The genome buffer is lent by the
+    /// caller and handed back untouched: the pooled path shares it with
+    /// workers by refcount instead of cloning the `Arc` list into
+    /// per-job chunks.
+    fn eval(
+        &self,
+        pool: Option<&Arc<ThreadPool>>,
+        genomes: &mut Vec<Arc<[u32]>>,
+    ) -> Vec<EvalResult> {
         match self {
             Backend::Native(e) => {
                 let ev = Arc::clone(e);
-                fan_out(pool, genomes, move |g| ev.eval_genome(g))
+                let (buf, results) =
+                    fan_out_shared(pool, std::mem::take(genomes), move |g| ev.eval_genome(g));
+                *genomes = buf;
+                results
             }
             #[cfg(feature = "xla")]
             Backend::Pjrt(e) => {
@@ -308,15 +373,16 @@ impl Backend {
     fn eval_designs_batch(
         &self,
         pool: Option<&Arc<ThreadPool>>,
-        designs: &[Option<Design>],
+        designs: Vec<Option<Design>>,
     ) -> Vec<EvalResult> {
         match self {
             Backend::Native(e) => {
                 let ev = Arc::clone(e);
-                fan_out(pool, designs, move |d| match d {
+                fan_out_shared(pool, designs, move |d| match d {
                     Some(d) => ev.eval_design(d),
                     None => EvalResult::dead(),
                 })
+                .1
             }
             #[cfg(feature = "xla")]
             Backend::Pjrt(e) => designs
@@ -460,6 +526,17 @@ impl EvalContext {
     /// trajectories never change, only wall-clock cost.
     pub fn with_staging(mut self, enabled: bool) -> EvalContext {
         self.staging = enabled;
+        self
+    }
+
+    /// Toggle the staged engine's batched SoA assembly phase (on by
+    /// default for native backends). Off forces the per-genome assembly
+    /// walk — the reference path the batched-parity suite compares
+    /// against. Results and trajectories never change, only dispatch.
+    pub fn with_batched(mut self, enabled: bool) -> EvalContext {
+        if let Some(e) = &mut self.stage {
+            e.set_batched(enabled);
+        }
         self
     }
 
@@ -695,7 +772,7 @@ impl EvalContext {
             Some(engine) if self.staging => {
                 engine.eval_batch(&self.scratch.miss_genomes, self.pool.as_ref())
             }
-            _ => self.backend.eval(self.pool.as_ref(), &self.scratch.miss_genomes),
+            _ => self.backend.eval(self.pool.as_ref(), &mut self.scratch.miss_genomes),
         };
         if self.cache_enabled {
             for (mid, r) in self.scratch.miss_ids.iter().zip(&miss_results) {
@@ -752,7 +829,7 @@ impl EvalContext {
         let miss_designs: Vec<Option<Design>> =
             self.scratch.miss_src.iter().map(|&i| designs[i].clone()).collect();
         self.model_calls += miss_designs.iter().filter(|d| d.is_some()).count();
-        let miss_results = self.backend.eval_designs_batch(self.pool.as_ref(), &miss_designs);
+        let miss_results = self.backend.eval_designs_batch(self.pool.as_ref(), miss_designs);
         if self.cache_enabled {
             for (mid, r) in self.scratch.miss_ids.iter().zip(&miss_results) {
                 if let Some(id) = mid {
@@ -1094,6 +1171,53 @@ mod tests {
         // to dispatch chunk-of-1 jobs (100 channel round-trips).
         assert_eq!(chunk_size(100, 32), MIN_CHUNK);
         assert_eq!(chunk_size(20_000, 8), 625); // big batches unchanged
+    }
+
+    #[test]
+    fn range_chunks_share_the_min_chunk_floor() {
+        for n in [0usize, 1, 2, 5, 7, 8, 9, 31, 100, 129, 1000, 20_000] {
+            for workers in [1usize, 2, 4, 8, 16, 32, 64] {
+                let ranges = range_chunks(n, workers);
+                // Ordered, disjoint, covering exactly [0, n).
+                let mut next = 0usize;
+                for &(lo, hi) in &ranges {
+                    assert_eq!(lo, next, "gap or overlap: n={n} w={workers}");
+                    assert!(hi > lo, "empty range: n={n} w={workers}");
+                    // Every range obeys the same floor as chunk_size
+                    // (only the tail may fall short of it): tiny broods
+                    // on many-core hosts must not turn into range-of-1
+                    // dispatch.
+                    assert!(
+                        hi - lo >= MIN_CHUNK.min(n) || hi == n,
+                        "floor violated: n={n} w={workers} range={lo}..{hi}"
+                    );
+                    assert_eq!(hi - lo, chunk_size(n, workers).min(n - lo));
+                    next = hi;
+                }
+                assert_eq!(next, n, "ranges must cover the batch: n={n} w={workers}");
+            }
+        }
+        // The same shape the chunk_size pins above encode: 100 items on
+        // 32 workers → 12 full ranges of MIN_CHUNK + one 4-item tail.
+        assert_eq!(range_chunks(100, 32).len(), 13);
+        assert!(range_chunks(0, 8).is_empty());
+    }
+
+    #[test]
+    fn fan_out_shared_returns_buffer_and_ordered_results() {
+        let items: Vec<u32> = (0..1000).collect();
+        let doubled: Vec<u32> = items.iter().map(|x| x * 2).collect();
+        let pool = Arc::new(ThreadPool::new(4));
+        let (back, pooled) = fan_out_shared(Some(&pool), items.clone(), |x| *x * 2);
+        assert_eq!(back, items, "the lent buffer must come back intact");
+        assert_eq!(pooled, doubled, "results must stay in submission order");
+        let (back, serial) = fan_out_shared(None, items.clone(), |x| *x * 2);
+        assert_eq!(back, items);
+        assert_eq!(serial, doubled, "serial and pooled paths agree");
+        let (state, indexed) =
+            fan_out_indexed(Some(&pool), items.clone(), 1000, |items, i| items[i] * 2);
+        assert_eq!(state, items);
+        assert_eq!(indexed, doubled);
     }
 
     #[test]

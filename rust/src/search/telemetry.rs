@@ -204,6 +204,10 @@ pub struct MemberStats {
     pub best_edp: f64,
     /// Rounds the member participated in.
     pub rounds: usize,
+    /// Completed bandit pulls granted to the member (0 under the
+    /// successive-halving allocator, and absent from the wire when 0 —
+    /// pre-bandit reports parse unchanged).
+    pub pulls: usize,
     /// Round after which successive halving dropped the member
     /// (`None` = survived to the end).
     pub eliminated_round: Option<usize>,
@@ -211,7 +215,7 @@ pub struct MemberStats {
 
 impl MemberStats {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("method", Json::str(&self.method)),
             ("evals", Json::num(self.evals as f64)),
             (
@@ -219,14 +223,18 @@ impl MemberStats {
                 if self.best_edp.is_finite() { Json::num(self.best_edp) } else { Json::Null },
             ),
             ("rounds", Json::num(self.rounds as f64)),
-            (
-                "eliminated_round",
-                match self.eliminated_round {
-                    Some(r) => Json::num(r as f64),
-                    None => Json::Null,
-                },
-            ),
-        ])
+        ];
+        if self.pulls > 0 {
+            fields.push(("pulls", Json::num(self.pulls as f64)));
+        }
+        fields.push((
+            "eliminated_round",
+            match self.eliminated_round {
+                Some(r) => Json::num(r as f64),
+                None => Json::Null,
+            },
+        ));
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<MemberStats> {
@@ -240,6 +248,7 @@ impl MemberStats {
             evals: j.get("evals").and_then(Json::as_u64).unwrap_or(0) as usize,
             best_edp: j.get("best_edp").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
             rounds: j.get("rounds").and_then(Json::as_u64).unwrap_or(0) as usize,
+            pulls: j.get("pulls").and_then(Json::as_u64).unwrap_or(0) as usize,
             eliminated_round: j
                 .get("eliminated_round")
                 .and_then(Json::as_u64)
@@ -594,6 +603,7 @@ mod tests {
                 evals: 1,
                 best_edp: 3.0,
                 rounds: 2,
+                pulls: 2,
                 eliminated_round: None,
             },
             MemberStats {
@@ -601,6 +611,7 @@ mod tests {
                 evals: 0,
                 best_edp: f64::INFINITY,
                 rounds: 1,
+                pulls: 0,
                 eliminated_round: Some(0),
             },
         ];

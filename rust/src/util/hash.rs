@@ -7,9 +7,73 @@
 //! non-cryptographic Fx construction (the rustc interner's hasher) is the
 //! right trade: one rotate + xor + multiply per word.
 
+use std::borrow::Borrow;
 use std::hash::{BuildHasher, Hasher};
+use std::sync::Arc;
 
 const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Padding value for the high half of an odd-length tail word.
+///
+/// Genes are small enum/index values, so `u32::MAX` can never be a real
+/// gene; packing it into unused tail halves keeps word-level equality and
+/// hashing exact without carrying a separate length (the `[u64]` slice
+/// `Hash` impl already prefixes the word count, which together with the
+/// sentinel distinguishes `[1]` from `[1, PAD]`-shaped inputs).
+pub const PACK_PAD: u32 = u32::MAX;
+
+/// An interned genome (or genome segment) re-laid-out as bit-packed
+/// 64-bit words: two `u32` genes per word, first gene in the low half.
+///
+/// Hashing and equality run over `u64` words — half the `FxHasher::add`
+/// rounds of the byte/element-wise `[u32]` path — and the derived `Hash`
+/// delegates to the `[u64]` slice impl, so `FxHashMap<PackedWords, _>`
+/// can be probed allocation-free by a scratch `&[u64]` via `Borrow`.
+#[repr(C)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PackedWords(pub Arc<[u64]>);
+
+impl Borrow<[u64]> for PackedWords {
+    #[inline]
+    fn borrow(&self) -> &[u64] {
+        &self.0
+    }
+}
+
+impl PackedWords {
+    /// Packs `genes` into a freshly allocated key (one `Arc` allocation).
+    pub fn pack(genes: &[u32]) -> PackedWords {
+        let mut buf = Vec::with_capacity(genes.len().div_ceil(2));
+        pack_genes_into(genes, &mut buf);
+        PackedWords(Arc::from(buf.as_slice()))
+    }
+
+    /// Number of packed words.
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Whether the key packs zero genes.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// Packs `genes` into `out` (cleared first): two per word, low half
+/// first, odd tail padded with [`PACK_PAD`]. Reusing one scratch `Vec`
+/// across calls keeps steady-state map probes allocation-free.
+#[inline]
+pub fn pack_genes_into(genes: &[u32], out: &mut Vec<u64>) {
+    out.clear();
+    out.reserve(genes.len().div_ceil(2));
+    let mut chunks = genes.chunks_exact(2);
+    for c in &mut chunks {
+        out.push((c[0] as u64) | ((c[1] as u64) << 32));
+    }
+    if let [last] = chunks.remainder() {
+        out.push((*last as u64) | ((PACK_PAD as u64) << 32));
+    }
+}
 
 /// Multiply-rotate hasher over 8-byte words.
 #[derive(Clone, Copy, Debug, Default)]
@@ -125,6 +189,61 @@ mod tests {
         for i in 0..1000u32 {
             assert_eq!(m.get(&vec![i, i * 2, i * 3]), Some(&(i as usize)));
         }
+    }
+
+    #[test]
+    fn packed_words_round_trip_and_tail_sentinel() {
+        // Even length: exact pairs, low half first.
+        let even = PackedWords::pack(&[1, 2, 3, 4]);
+        assert_eq!(&*even.0, &[1 | (2u64 << 32), 3 | (4u64 << 32)]);
+        // Odd length: the dangling gene gets the sentinel high half.
+        let odd = PackedWords::pack(&[1, 2, 3]);
+        assert_eq!(&*odd.0, &[1 | (2u64 << 32), 3 | ((PACK_PAD as u64) << 32)]);
+        assert_ne!(even, odd);
+        assert_eq!(odd.len(), 2);
+        assert!(!odd.is_empty());
+        assert!(PackedWords::pack(&[]).is_empty());
+    }
+
+    #[test]
+    fn packed_words_discriminate_lengths_and_orders() {
+        // Word packing must not alias different genomes: neighbouring
+        // lengths (the classic zero-pad collision) and swapped halves.
+        let keys = [
+            PackedWords::pack(&[]),
+            PackedWords::pack(&[0]),
+            PackedWords::pack(&[0, 0]),
+            PackedWords::pack(&[0, 0, 0]),
+            PackedWords::pack(&[1, 2]),
+            PackedWords::pack(&[2, 1]),
+            PackedWords::pack(&[1, 2, 3]),
+            PackedWords::pack(&[1, 2, 3, 4]),
+        ];
+        let mut seen = std::collections::HashSet::new();
+        for k in &keys {
+            assert!(seen.insert(hash_of(k)), "hash collision on {k:?}");
+        }
+    }
+
+    #[test]
+    fn packed_scratch_probe_agrees_with_owned_key() {
+        // FxHashMap<PackedWords, _> is probed by a reusable &[u64]
+        // scratch via Borrow: both sides must hash and compare equal.
+        use std::collections::HashMap;
+        let mut m: HashMap<PackedWords, usize, FxBuildHasher> = HashMap::default();
+        let mut scratch = Vec::new();
+        for i in 0..500u32 {
+            let genes = [i, i * 2, i.wrapping_mul(7) % 11];
+            m.insert(PackedWords::pack(&genes), i as usize);
+        }
+        for i in 0..500u32 {
+            let genes = [i, i * 2, i.wrapping_mul(7) % 11];
+            pack_genes_into(&genes, &mut scratch);
+            assert_eq!(m.get(scratch.as_slice()), Some(&(i as usize)));
+            assert_eq!(hash_of(&PackedWords::pack(&genes)), hash_of(&scratch[..]));
+        }
+        pack_genes_into(&[9_999_999, 1, 2], &mut scratch);
+        assert_eq!(m.get(scratch.as_slice()), None);
     }
 
     #[test]

@@ -77,6 +77,7 @@ fn setup(budget: usize) -> (EvalContext, Pcg64) {
 fn steady_state_evaluation_is_allocation_free_per_genome() {
     warm_batches_allocate_constant_not_per_genome();
     stage_warm_assembly_is_allocation_free_per_genome();
+    batched_soa_path_is_allocation_free_per_genome();
 }
 
 /// Warm result-cache batches: the allocation count is a small constant
@@ -159,4 +160,45 @@ fn stage_warm_assembly_is_allocation_free_per_genome() {
         "stage-warm batch performed {a400} allocations; expected ≲ the \
          single results Vec (per-genome allocation crept back in?)"
     );
+}
+
+/// The batched SoA assembly path specifically (the engine default) vs
+/// the per-genome walk: both stay flat in the number of genomes once
+/// warm — the SoA tables, the group-sort order buffer and the word-pack
+/// probe scratch are all reused across batches.
+fn batched_soa_path_is_allocation_free_per_genome() {
+    let w = Workload::spmm("t", 64, 128, 64, 0.2, 0.2);
+    let eval = Arc::new(NativeEvaluator::new(w, Platform::mobile()));
+    let mut rng = Pcg64::seeded(6);
+    let spec = eval.spec.clone();
+    let parents: Vec<Vec<u32>> = (0..10).map(|_| spec.random(&mut rng)).collect();
+    let pop: Vec<Arc<[u32]>> = (0..300)
+        .map(|i| {
+            let mut g = parents[i % parents.len()].clone();
+            for j in spec.sg_start..spec.len() {
+                g[j] = rng.range_u32(spec.ranges[j].lo, spec.ranges[j].hi);
+            }
+            Arc::from(g.as_slice())
+        })
+        .collect();
+
+    let mut batched = StageEngine::new(Arc::clone(&eval), 1_000_000);
+    let mut pergenome = StageEngine::new(Arc::clone(&eval), 1_000_000).with_batched(false);
+
+    // Warm stage caches and scratch (SoA tables / AsmItem list) in both.
+    let warm_b = batched.eval_batch(&pop, None);
+    let warm_p = pergenome.eval_batch(&pop, None);
+    assert_eq!(warm_b, warm_p, "modes must agree before counting");
+    batched.eval_batch(&pop, None);
+    pergenome.eval_batch(&pop, None);
+
+    let (ab, rb) = count_allocs(|| batched.eval_batch(&pop, None));
+    let (ap, rp) = count_allocs(|| pergenome.eval_batch(&pop, None));
+    assert_eq!(rb, rp);
+    assert!(
+        ab <= 4,
+        "batched SoA warm batch performed {ab} allocations; expected ≲ the \
+         single results Vec (SoA scratch reuse broken?)"
+    );
+    assert!(ap <= 4, "per-genome warm batch performed {ap} allocations");
 }

@@ -1,0 +1,135 @@
+//! Batched-SoA parity: the batched brood pipeline (the staged engine's
+//! default since the SoA rework) must be **bit-identical** to the
+//! per-genome staged walk (`EvalContext::with_batched(false)`) and to
+//! the from-scratch path (`EvalContext::with_staging(false)`) — for
+//! every registry method, at 1 and 4 threads, and on adversarial
+//! populations (segment-sharing siblings, duplicates, cache replays).
+//!
+//! This is the acceptance gate for the SoA rework: grouping offspring by
+//! shared mapping-segment id and sweeping the cost model over contiguous
+//! slices must be a pure layout change, never a semantic one.
+
+use sparsemap::arch::Platform;
+use sparsemap::optimizer::{run_method, ALL_METHODS};
+use sparsemap::search::{Backend, EvalContext, Outcome};
+use sparsemap::util::rng::Pcg64;
+use sparsemap::util::threadpool::ThreadPool;
+use sparsemap::workload::Workload;
+use std::sync::Arc;
+
+fn workload() -> Workload {
+    Workload::spmm("mm", 48, 96, 48, 0.25, 0.2)
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    /// The default: staged engine, batched SoA assembly.
+    Batched,
+    /// Staged engine, per-genome assembly walk (the parity reference).
+    PerGenome,
+    /// No staging at all: monolithic decode → extract → cost per miss.
+    Scratch,
+}
+
+fn ctx(budget: usize, threads: usize, mode: Mode) -> EvalContext {
+    let c = EvalContext::new(Backend::native(workload(), Platform::mobile()), budget);
+    let c = match mode {
+        Mode::Batched => c,
+        Mode::PerGenome => c.with_batched(false),
+        Mode::Scratch => c.with_staging(false),
+    };
+    if threads > 1 {
+        c.with_pool(Some(Arc::new(ThreadPool::new(threads))))
+    } else {
+        c
+    }
+}
+
+fn assert_outcomes_identical(a: &Outcome, b: &Outcome, label: &str) {
+    assert_eq!(a.best_edp.to_bits(), b.best_edp.to_bits(), "{label}: best_edp");
+    assert_eq!(a.best_genome, b.best_genome, "{label}: best_genome");
+    assert_eq!(a.curve, b.curve, "{label}: best-EDP curve");
+    assert_eq!(a.population_mean_curve, b.population_mean_curve, "{label}: mean curve");
+    assert_eq!(a.evals, b.evals, "{label}: evals");
+    assert_eq!(a.valid_evals, b.valid_evals, "{label}: valid_evals");
+    assert_eq!(a.cache_hits, b.cache_hits, "{label}: cache_hits");
+    assert_eq!(a.interned, b.interned, "{label}: interned");
+}
+
+/// Every registry method, both staged modes, 1 and 4 threads, against
+/// one from-scratch reference trajectory per method.
+#[test]
+fn every_registry_method_bit_identical_across_modes_and_threads() {
+    for method in ALL_METHODS {
+        let budget = 240;
+        let reference = run_method(method, ctx(budget, 1, Mode::Scratch), 42).unwrap();
+        for threads in [1usize, 4] {
+            for (mode, tag) in [(Mode::Batched, "batched"), (Mode::PerGenome, "per-genome")] {
+                let run = run_method(method, ctx(budget, threads, mode), 42).unwrap();
+                assert_outcomes_identical(
+                    &reference,
+                    &run,
+                    &format!("{method} {tag} @ {threads} threads"),
+                );
+            }
+        }
+    }
+}
+
+/// Hand-rolled property test (no proptest crate in the vendored set):
+/// randomized populations with segment-sharing siblings, strategy-only
+/// siblings, duplicates and a replay batch, compared across all three
+/// modes plus a pooled batched context. Eight seeded trials; any failure
+/// prints its trial seed for replay.
+#[test]
+fn randomized_populations_bitwise_parity_across_modes() {
+    for trial in 0..8u64 {
+        let seed = 100 + trial;
+        let mut rng = Pcg64::seeded(seed);
+        let mut batched = ctx(50_000, 1, Mode::Batched);
+        let mut pergenome = ctx(50_000, 1, Mode::PerGenome);
+        let mut scratch = ctx(50_000, 1, Mode::Scratch);
+        let mut pooled = ctx(50_000, 4, Mode::Batched);
+        let spec = batched.spec.clone();
+
+        let n_parents = 2 + (trial as usize % 5);
+        let parents: Vec<Vec<u32>> = (0..n_parents).map(|_| spec.random(&mut rng)).collect();
+        let mut pop: Vec<Vec<u32>> = Vec::new();
+        for p in &parents {
+            pop.push(p.clone());
+            for _ in 0..rng.range_u32(0, 7) {
+                let mut g = p.clone();
+                // Half the siblings share the whole mapping segment
+                // (strategy-only mutation: the batched path groups them
+                // onto one decoded loop nest); the rest also re-sample
+                // format genes, exercising group boundaries.
+                let lo = if rng.range_u32(0, 2) == 0 { spec.sg_start } else { spec.format_start };
+                for i in lo..spec.len() {
+                    g[i] = rng.range_u32(spec.ranges[i].lo, spec.ranges[i].hi);
+                }
+                pop.push(g);
+            }
+        }
+        // Duplicates inside one batch exercise pending-stage sharing and
+        // the result cache.
+        let dup = pop[trial as usize % pop.len()].clone();
+        pop.push(dup);
+
+        let a = batched.eval_batch(&pop);
+        let b = pergenome.eval_batch(&pop);
+        let c = scratch.eval_batch(&pop);
+        let d = pooled.eval_batch(&pop);
+        assert_eq!(a, b, "trial {seed}: batched vs per-genome");
+        assert_eq!(a, c, "trial {seed}: batched vs scratch");
+        assert_eq!(a, d, "trial {seed}: serial vs pooled batched");
+        assert_eq!(batched.telemetry.curve, scratch.telemetry.curve, "trial {seed}: curve");
+        assert_eq!(batched.stage_hits(), pergenome.stage_hits(), "trial {seed}: stage hits");
+
+        // Replay the same population: everything comes from the result
+        // cache, identically in all modes.
+        let a2 = batched.eval_batch(&pop);
+        let c2 = scratch.eval_batch(&pop);
+        assert_eq!(a2, c2, "trial {seed}: warm replay");
+        assert_eq!(a, a2, "trial {seed}: warm replay matches cold results");
+    }
+}
